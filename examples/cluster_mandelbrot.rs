@@ -1,0 +1,70 @@
+//! Cluster Mandelbrot (paper §7): the host/worker Client-Server network
+//! over TCP. This example plays all roles itself — it spawns `--nodes`
+//! worker *processes* (separate OS processes, the paper's workstations
+//! on loopback) and hosts the row farm, then cross-checks against the
+//! local sequential render.
+//!
+//! ```sh
+//! cargo run --release --example cluster_mandelbrot -- --nodes 3 --width 1120 --height 640
+//! # or run roles by hand on separate machines:
+//! #   gpp cluster-host --addr 0.0.0.0:7777 --nodes 2 ...
+//! #   gpp cluster-worker --addr host:7777
+//! ```
+
+use gpp::net::cluster::{default_config, run_host, run_worker};
+use gpp::util::cli::Args;
+use gpp::workloads::mandelbrot;
+
+fn main() -> gpp::Result<()> {
+    let args = Args::from_env();
+    // Child-process role: `--role worker --addr ...`.
+    if args.get("role") == Some("worker") {
+        let addr = args.get_or("addr", "127.0.0.1:7787").to_string();
+        let rows = run_worker(&addr)?;
+        println!("worker done: {rows} rows");
+        return Ok(());
+    }
+
+    let nodes = args.usize("nodes", 2);
+    let width = args.u64("width", 1120) as i64;
+    let height = args.u64("height", 640) as i64;
+    let max_iter = args.u64("max-iter", 200) as i64;
+    let cores = args.usize("cores", 1);
+    let port = 17_800 + (std::process::id() % 1000) as u16;
+    let addr = format!("127.0.0.1:{port}");
+    let cfg = default_config(width, height, max_iter, cores);
+
+    // Spawn worker node processes (the paper's workstations).
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::new();
+    for _ in 0..nodes {
+        let addr2 = addr.clone();
+        let exe2 = exe.clone();
+        children.push(std::thread::spawn(move || {
+            // Give the host a moment to bind.
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            std::process::Command::new(exe2)
+                .args(["--role", "worker", "--addr", &addr2])
+                .status()
+        }));
+    }
+
+    let t0 = std::time::Instant::now();
+    let collect = run_host(&addr, nodes, &cfg)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    for c in children {
+        let status = c.join().expect("worker thread")?;
+        assert!(status.success(), "worker process failed");
+    }
+
+    println!(
+        "cluster: {width}x{height} over {nodes} worker processes in {elapsed:.3}s (checksum {})",
+        collect.checksum()
+    );
+
+    // Validate against the local sequential render with the same region.
+    let seq = mandelbrot::sequential(width, height, max_iter, cfg.pixel_delta)?;
+    assert_eq!(collect.checksum(), seq.checksum(), "cluster == sequential");
+    println!("cluster result identical to the local sequential render.");
+    Ok(())
+}

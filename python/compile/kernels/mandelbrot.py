@@ -1,0 +1,52 @@
+"""Layer-1 Pallas kernel: Mandelbrot escape iteration for one image row.
+
+The paper farms image *lines* to workers (§6.6); the kernel therefore
+processes a whole row per invocation — the same work granularity the
+Rust coordinator distributes.
+
+TPU thinking (DESIGN.md §Hardware-Adaptation): a row of W f32 values is
+a VPU-friendly vector; the escape loop is `fori_loop`-ed with masked
+updates (no divergence problem as on GPU warps — the whole vector
+iterates max_iter times and `where` masks settle the escaped lanes).
+VMEM footprint: 3 row-sized f32 buffers + inputs ≈ 5·W·4 B (14 KB at
+W=700) — far under the ~16 MB VMEM budget, so a single block suffices
+and the grid is 1.  Runs under interpret=True on CPU (Mosaic custom
+calls cannot execute on the CPU PJRT plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cr_ref, ci_ref, out_ref, *, max_iter: int):
+    cr = cr_ref[...]
+    ci = ci_ref[0]
+
+    def body(_, state):
+        zr, zi, count = state
+        zr2 = zr * zr
+        zi2 = zi * zi
+        alive = (zr2 + zi2) <= 4.0
+        new_zr = zr2 - zi2 + cr
+        new_zi = 2.0 * zr * zi + ci
+        zr = jnp.where(alive, new_zr, zr)
+        zi = jnp.where(alive, new_zi, zi)
+        return zr, zi, count + alive.astype(jnp.float32)
+
+    zr = jnp.zeros_like(cr)
+    zi = jnp.zeros_like(cr)
+    count = jnp.zeros_like(cr)
+    _, _, count = jax.lax.fori_loop(0, max_iter, body, (zr, zi, count))
+    out_ref[...] = count
+
+
+def mandelbrot_row(cr: jax.Array, ci: jax.Array, max_iter: int) -> jax.Array:
+    """Escape counts for one row. cr: (W,) f32, ci: (1,) f32 → (W,) f32."""
+    return pl.pallas_call(
+        functools.partial(_kernel, max_iter=max_iter),
+        out_shape=jax.ShapeDtypeStruct(cr.shape, jnp.float32),
+        interpret=True,
+    )(cr, ci)

@@ -1,0 +1,46 @@
+"""Layer-1 Pallas kernel: Monte-Carlo within-quadrant count.
+
+TPU thinking: a pure streaming reduction — x²+y² ≤ 1 mask, then a sum.
+The (2, N) uniforms tile into (2, BLOCK) column chunks; each grid step
+reduces its chunk and accumulates into the scalar output (Pallas output
+revisiting across grid steps, the standard reduction idiom). VMEM per
+step: 2·BLOCK·4 B (256 KB at BLOCK=32768). Bound by HBM stream rate
+(arith intensity < 1 f/B) — on the real machine this kernel exists to
+keep the farm's worker granularity identical to the paper's 100k-point
+objects, not to win flops.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 25_000
+
+
+def _kernel(pts_ref, out_ref):
+    i = pl.program_id(0)
+    x = pts_ref[0, :]
+    y = pts_ref[1, :]
+    inside = ((x * x + y * y) <= 1.0).astype(jnp.float32)
+    partial = jnp.sum(inside)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0] = 0.0
+
+    out_ref[0] += partial
+
+
+def montecarlo_count(pts: jax.Array) -> jax.Array:
+    """Count points inside the unit quadrant. pts: (2, N) f32 → (1,) f32."""
+    n = pts.shape[1]
+    assert n % BLOCK == 0, f"N={n} must be a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((2, BLOCK), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(pts)

@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernel: one all-pairs N-body kick-drift step.
+
+TPU thinking: the O(N²) force sum is a batched broadcast-reduce. For the
+artifact sizes (N ≤ 1024) the full pairwise displacement tensor is
+N²·3·4 B (12 MB at N=1024) — at the VMEM edge, so the kernel tiles the
+*i* (target-body) axis into blocks of `BLOCK` rows: each grid step holds
+a (BLOCK, N, 3) slab (1.5 MB at BLOCK=128) plus the full (N, 6) state
+(24 KB). The j-axis reduction is a dense vectorised sum feeding the VPU;
+there is no MXU matmul shape here, so the roofline is VPU/memory-bound —
+matching the GPU literature on direct N-body below the shared-memory
+blocking threshold.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+G = 6.674e-3
+SOFT = 1e-3
+BLOCK = 128
+
+
+def _kernel(state_ref, masses_ref, dt_ref, out_ref):
+    i = pl.program_id(0)
+    full = state_ref[...]  # (N, 6) — every node reads all bodies
+    masses = masses_ref[...]  # (N,)
+    dt = dt_ref[0]
+    blk = out_ref.shape[0]
+    rows = i * blk + jax.lax.iota(jnp.int32, blk)
+    mine = jnp.take(full, rows, axis=0)  # (BLOCK, 6)
+    pos = mine[:, :3]
+    vel = mine[:, 3:]
+    all_pos = full[:, :3]  # (N, 3)
+
+    d = all_pos[None, :, :] - pos[:, None, :]  # (BLOCK, N, 3)
+    r2 = jnp.sum(d * d, axis=-1) + SOFT  # (BLOCK, N)
+    inv_r3 = 1.0 / (r2 * jnp.sqrt(r2))
+    # Zero self-interaction: j == global row index.
+    n = all_pos.shape[0]
+    cols = jax.lax.iota(jnp.int32, n)
+    self_mask = rows[:, None] == cols[None, :]
+    inv_r3 = jnp.where(self_mask, 0.0, inv_r3)
+    f = G * masses[None, :] * inv_r3  # (BLOCK, N)
+    acc = jnp.sum(f[:, :, None] * d, axis=1)  # (BLOCK, 3)
+
+    new_vel = vel + acc * dt
+    new_pos = pos + new_vel * dt
+    out_ref[...] = jnp.concatenate([new_pos, new_vel], axis=-1)
+
+
+def nbody_step(state: jax.Array, masses: jax.Array, dt: jax.Array) -> jax.Array:
+    """One step. state: (N, 6), masses: (N,), dt: (1,) → (N, 6)."""
+    n = state.shape[0]
+    assert n % BLOCK == 0, f"N={n} must be a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 6), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, 6), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 6), jnp.float32),
+        interpret=True,
+    )(state, masses, dt)

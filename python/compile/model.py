@@ -1,0 +1,95 @@
+"""Layer-2: the JAX compute graphs the coordinator executes, each
+calling its Layer-1 Pallas kernel so the kernel lowers into the same
+HLO module. Shapes are fixed here (AOT contract with the Rust side —
+`rust/src/workloads/*` carries the matching constants and falls back to
+the native path on mismatch).
+
+These are the paper's per-object work units: the Rust coordinator owns
+all the between-object parallelism (farm/engine/pipeline), each HLO
+module computes exactly one object's payload.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import jacobi as k_jacobi
+from compile.kernels import mandelbrot as k_mandelbrot
+from compile.kernels import montecarlo as k_montecarlo
+from compile.kernels import nbody as k_nbody
+from compile.kernels import stencil as k_stencil
+
+# AOT shapes — keep in sync with rust/src/workloads (XLA_* constants).
+MANDELBROT_WIDTH = 700
+MANDELBROT_MAX_ITER = 100
+JACOBI_N = 256
+NBODY_N = 256
+STENCIL_H = 256
+STENCIL_W = 256
+MONTECARLO_N = 100_000
+
+
+def mandelbrot_fn(cr, ci):
+    """One image row: escape counts (paper §6.6 work unit)."""
+    return (k_mandelbrot.mandelbrot_row(cr, ci, MANDELBROT_MAX_ITER),)
+
+
+def jacobi_fn(a, b, x):
+    """One Jacobi sweep plus the sweep's max-update (lets the Rust root
+    run its errorMethod without a second pass over the data)."""
+    x_new = k_jacobi.jacobi_sweep(a, b, x)
+    max_delta = jnp.max(jnp.abs(x_new - x))[None]
+    return (x_new, max_delta)
+
+
+def nbody_fn(state, masses, dt):
+    """One kick-drift step over all bodies (paper §6.3 work unit)."""
+    return (k_nbody.nbody_step(state, masses, dt),)
+
+
+def stencil_fn(img):
+    """5×5 edge-detect pass over a greyscale image (paper §6.4)."""
+    out = k_stencil.stencil_5x5(img)
+    return (jnp.clip(out, 0.0, 255.0),)
+
+
+def montecarlo_fn(pts):
+    """Within-quadrant count of a batch of points (paper §3)."""
+    return (k_montecarlo.montecarlo_count(pts),)
+
+
+def specs():
+    """name → (fn, example argument shapes) for the AOT driver."""
+    f32 = jnp.float32
+    return {
+        "mandelbrot": (
+            mandelbrot_fn,
+            [
+                jax.ShapeDtypeStruct((MANDELBROT_WIDTH,), f32),
+                jax.ShapeDtypeStruct((1,), f32),
+            ],
+        ),
+        "jacobi": (
+            jacobi_fn,
+            [
+                jax.ShapeDtypeStruct((JACOBI_N, JACOBI_N), f32),
+                jax.ShapeDtypeStruct((JACOBI_N,), f32),
+                jax.ShapeDtypeStruct((JACOBI_N,), f32),
+            ],
+        ),
+        "nbody": (
+            nbody_fn,
+            [
+                jax.ShapeDtypeStruct((NBODY_N, 6), f32),
+                jax.ShapeDtypeStruct((NBODY_N,), f32),
+                jax.ShapeDtypeStruct((1,), f32),
+            ],
+        ),
+        "stencil": (
+            stencil_fn,
+            [jax.ShapeDtypeStruct((STENCIL_H, STENCIL_W), f32)],
+        ),
+        "montecarlo": (
+            montecarlo_fn,
+            [jax.ShapeDtypeStruct((2, MONTECARLO_N), f32)],
+        ),
+    }

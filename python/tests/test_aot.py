@@ -1,0 +1,64 @@
+"""AOT contract tests: every Layer-2 spec lowers to HLO text that the
+XLA 0.5.1 text parser grammar expects (ENTRY, tuple root), and the
+shapes match the Rust-side constants."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import model
+from compile.aot import to_hlo_text
+
+import jax
+
+
+@pytest.mark.parametrize("name", sorted(model.specs().keys()))
+def test_lowers_to_hlo_text(name):
+    fn, arg_specs = model.specs()[name]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # return_tuple=True → root is a tuple.
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_specs_match_rust_constants():
+    # Keep in sync with rust/src/workloads/*.rs XLA_* constants.
+    assert model.MANDELBROT_WIDTH == 700
+    assert model.MANDELBROT_MAX_ITER == 100
+    assert model.MONTECARLO_N == 100_000
+    assert model.JACOBI_N % 128 == 0
+    assert model.NBODY_N % 128 == 0
+    assert model.STENCIL_H % 64 == 0
+
+
+def test_aot_cli_writes_artifacts(tmp_path):
+    env = dict(os.environ)
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--only", "montecarlo"],
+        cwd=here,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr
+    out = tmp_path / "montecarlo.hlo.txt"
+    assert out.exists()
+    assert "ENTRY" in out.read_text()
+
+
+def test_aot_cli_rejects_unknown_kernel(tmp_path):
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--only", "nope"],
+        cwd=here,
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert r.returncode == 1

@@ -1,0 +1,185 @@
+"""Pallas kernels vs pure-jnp oracles (ref.py): the core correctness
+signal of the Layer-1 code, plus hypothesis sweeps over values and the
+shape grid the BlockSpecs support."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import jacobi as k_jacobi
+from compile.kernels import mandelbrot as k_mandelbrot
+from compile.kernels import montecarlo as k_montecarlo
+from compile.kernels import nbody as k_nbody
+from compile.kernels import ref
+from compile.kernels import stencil as k_stencil
+
+
+def rngs(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- mandelbrot
+class TestMandelbrot:
+    def test_matches_ref(self):
+        r = rngs(0)
+        cr = jnp.asarray(r.uniform(-2.5, 1.0, 128), jnp.float32)
+        ci = jnp.asarray([0.3], jnp.float32)
+        got = k_mandelbrot.mandelbrot_row(cr, ci, 64)
+        want = ref.mandelbrot_row(cr, ci, 64)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_origin_never_escapes(self):
+        cr = jnp.zeros(8, jnp.float32)
+        ci = jnp.zeros(1, jnp.float32)
+        got = k_mandelbrot.mandelbrot_row(cr, ci, 50)
+        np.testing.assert_array_equal(np.asarray(got), 50.0)
+
+    def test_far_points_escape_immediately(self):
+        cr = jnp.full(8, 2.5, jnp.float32)
+        ci = jnp.asarray([2.5], jnp.float32)
+        got = k_mandelbrot.mandelbrot_row(cr, ci, 50)
+        assert np.all(np.asarray(got) <= 2.0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), ci=st.floats(-1.5, 1.5))
+    def test_hypothesis_values(self, seed, ci):
+        r = rngs(seed)
+        cr = jnp.asarray(r.uniform(-2.5, 1.5, 64), jnp.float32)
+        cia = jnp.asarray([ci], jnp.float32)
+        got = k_mandelbrot.mandelbrot_row(cr, cia, 32)
+        want = ref.mandelbrot_row(cr, cia, 32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -------------------------------------------------------------------- jacobi
+def dd_system(n, seed):
+    r = rngs(seed)
+    a = r.uniform(-1, 1, (n, n)).astype(np.float32) / n
+    np.fill_diagonal(a, np.abs(a).sum(axis=1) + 1.0)
+    b = r.uniform(-1, 1, n).astype(np.float32)
+    x = r.uniform(-1, 1, n).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b), jnp.asarray(x)
+
+
+class TestJacobi:
+    @pytest.mark.parametrize("n", [128, 256, 512])
+    def test_matches_ref_across_grid_sizes(self, n):
+        a, b, x = dd_system(n, n)
+        got = k_jacobi.jacobi_sweep(a, b, x)
+        want = ref.jacobi_sweep(a, b, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+    def test_fixed_point_is_solution(self):
+        # If x solves Ax=b then the sweep returns x.
+        n = 128
+        a, _, x = dd_system(n, 3)
+        b = a @ x
+        got = k_jacobi.jacobi_sweep(a, b, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-4, atol=1e-5)
+
+    def test_iterated_sweeps_converge(self):
+        n = 128
+        a, _, sol = dd_system(n, 5)
+        b = a @ sol
+        x = jnp.zeros(n, jnp.float32)
+        for _ in range(60):
+            x = ref.jacobi_sweep(a, b, x)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(sol), atol=1e-3)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_values(self, seed):
+        a, b, x = dd_system(128, seed)
+        got = k_jacobi.jacobi_sweep(a, b, x)
+        want = ref.jacobi_sweep(a, b, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------- nbody
+class TestNBody:
+    @pytest.mark.parametrize("n", [128, 256])
+    def test_matches_ref(self, n):
+        r = rngs(n)
+        state = jnp.asarray(r.uniform(-1, 1, (n, 6)), jnp.float32)
+        masses = jnp.asarray(r.uniform(0.5, 1.5, n), jnp.float32)
+        dt = jnp.asarray([0.01], jnp.float32)
+        got = k_nbody.nbody_step(state, masses, dt)
+        want = ref.nbody_step(state, masses, dt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-6)
+
+    def test_symmetric_pair_attracts(self):
+        # Two equal bodies on the x axis accelerate toward each other.
+        state = np.zeros((128, 6), np.float32)
+        state[0, 0] = -0.5
+        state[1, 0] = 0.5
+        # Park the other bodies far away with negligible influence.
+        state[2:, 0] = 1e3
+        masses = np.ones(128, np.float32)
+        out = np.asarray(
+            k_nbody.nbody_step(
+                jnp.asarray(state), jnp.asarray(masses), jnp.asarray([0.01], jnp.float32)
+            )
+        )
+        assert out[0, 3] > 0  # vx of left body → right
+        assert out[1, 3] < 0  # vx of right body → left
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), dt=st.floats(1e-4, 0.05))
+    def test_hypothesis_values(self, seed, dt):
+        r = rngs(seed)
+        state = jnp.asarray(r.uniform(-1, 1, (128, 6)), jnp.float32)
+        masses = jnp.asarray(r.uniform(0.5, 1.5, 128), jnp.float32)
+        dta = jnp.asarray([dt], jnp.float32)
+        got = k_nbody.nbody_step(state, masses, dta)
+        want = ref.nbody_step(state, masses, dta)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------------------------------------------- stencil
+class TestStencil:
+    @pytest.mark.parametrize("shape", [(64, 64), (128, 96), (256, 256)])
+    def test_matches_ref(self, shape):
+        r = rngs(shape[0])
+        img = jnp.asarray(r.uniform(0, 255, shape), jnp.float32)
+        got = k_stencil.stencil_5x5(img)
+        want = ref.stencil_5x5(img)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-2)
+
+    def test_flat_image_zero_response(self):
+        img = jnp.full((64, 64), 100.0, jnp.float32)
+        got = np.asarray(k_stencil.stencil_5x5(img))
+        np.testing.assert_allclose(got, 0.0, atol=1e-2)
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_values(self, seed):
+        r = rngs(seed)
+        img = jnp.asarray(r.uniform(0, 255, (64, 64)), jnp.float32)
+        got = k_stencil.stencil_5x5(img)
+        want = ref.stencil_5x5(img)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-2)
+
+
+# ---------------------------------------------------------------- montecarlo
+class TestMonteCarlo:
+    def test_matches_ref(self):
+        r = rngs(1)
+        pts = jnp.asarray(r.uniform(0, 1, (2, 100_000)), jnp.float32)
+        got = k_montecarlo.montecarlo_count(pts)
+        want = ref.montecarlo_count(pts)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_all_inside_all_outside(self):
+        inside = jnp.zeros((2, 100_000), jnp.float32)
+        assert float(k_montecarlo.montecarlo_count(inside)[0]) == 100_000.0
+        outside = jnp.ones((2, 100_000), jnp.float32)
+        assert float(k_montecarlo.montecarlo_count(outside)[0]) == 0.0
+
+    def test_estimates_pi(self):
+        r = rngs(7)
+        pts = jnp.asarray(r.uniform(0, 1, (2, 100_000)), jnp.float32)
+        frac = float(k_montecarlo.montecarlo_count(pts)[0]) / 100_000.0
+        assert abs(4 * frac - np.pi) < 0.05

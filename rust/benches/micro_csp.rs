@@ -1,0 +1,95 @@
+//! Microbenchmarks of the CSP substrate hot path — the §Perf targets.
+//!
+//! Every object in a farm crosses ≥4 rendezvous; channel cost bounds
+//! the minimum useful work-item size. Measured here: one2one ping-pong,
+//! any-end contention, Alt select, barrier round, deep-clone cast cost,
+//! and whole-network overhead per item (zero-work farm).
+
+use gpp::csp::barrier::Barrier;
+use gpp::csp::channel::channel;
+use gpp::patterns::DataParallelCollect;
+use gpp::util::bench::{black_box, Bench};
+use gpp::workloads::montecarlo::{PiData, PiResults};
+
+fn main() {
+    gpp::workloads::register_all();
+    let mut b = Bench::new("csp substrate");
+
+    // one2one rendezvous round trip (2 rendezvous per iteration).
+    {
+        let (tx, rx) = channel::<u64>();
+        let (tx2, rx2) = channel::<u64>();
+        let echo = std::thread::spawn(move || {
+            while let Ok(v) = rx.read() {
+                if v == u64::MAX || tx2.write(v).is_err() {
+                    break;
+                }
+            }
+        });
+        b.bench("one2one ping-pong (2 rendezvous)", || {
+            tx.write(1).unwrap();
+            black_box(rx2.read().unwrap());
+        });
+        tx.write(u64::MAX).unwrap();
+        echo.join().unwrap();
+    }
+
+    // Shared any-end with 4 readers.
+    {
+        let (tx, rx) = channel::<u64>();
+        let (done_tx, done_rx) = channel::<u64>();
+        let mut readers = Vec::new();
+        for _ in 0..4 {
+            let rx = rx.clone();
+            let done_tx = done_tx.clone();
+            readers.push(std::thread::spawn(move || {
+                while let Ok(v) = rx.read() {
+                    if v == u64::MAX {
+                        break;
+                    }
+                    done_tx.write(v).unwrap();
+                }
+            }));
+        }
+        b.bench("any-end write+read (4 readers)", || {
+            tx.write(1).unwrap();
+            black_box(done_rx.read().unwrap());
+        });
+        for _ in 0..4 {
+            tx.write(u64::MAX).unwrap();
+        }
+        for r in readers {
+            r.join().unwrap();
+        }
+    }
+
+    // Barrier round with 2 parties.
+    {
+        let bar = Barrier::new(2);
+        let bar2 = bar.clone();
+        // Peer spins on sync until the barrier is poisoned.
+        let peer = std::thread::spawn(move || while bar2.sync().is_ok() {});
+        b.bench("barrier sync (2 parties)", || {
+            bar.sync().unwrap();
+        });
+        bar.poison();
+        peer.join().unwrap();
+    }
+
+    // Whole-farm overhead per item: zero-work objects through the full
+    // Emit→Fan→Workers→Reduce→Collect network.
+    {
+        b.bench_once("farm overhead, 512 items x 2 workers", || {
+            DataParallelCollect::new(
+                PiData::emit_details(512, 0), // 0 iterations: pure plumbing
+                PiResults::result_details(),
+                2,
+                "getWithin",
+            )
+            .run_network()
+            .unwrap();
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,74 @@
+//! Table 1 + Figure 3: Monte-Carlo π speedup/efficiency.
+//!
+//! Paper: instances ∈ {1024, 2048, 4096}, 100k points each, processes
+//! ∈ {1,2,4,8,16,32} on a 4-core+4HT i7. Regenerated two ways:
+//! (a) DES on the simulated testbed with per-item cost calibrated from
+//!     the real Rust workload on this host (the paper-shape result);
+//! (b) real wall-clock on this host for a reduced sweep (recorded for
+//!     honesty — on a 1-core CI box speedup ≈ 1).
+
+use gpp::harness::EffTable;
+use gpp::sim::{calibrate, sim_farm, sim_sequential, MachineConfig};
+use gpp::util::bench::fmt_time;
+
+fn main() {
+    gpp::workloads::register_all();
+    let db = calibrate::calibrate();
+    println!(
+        "calibrated: one 100k-point instance = {}",
+        fmt_time(db.montecarlo_item)
+    );
+
+    let machine = MachineConfig::i7_4790k();
+    let instance_counts = [1024usize, 2048, 4096];
+    let processes = [1usize, 2, 4, 8, 16, 32];
+
+    let columns: Vec<String> = instance_counts.iter().map(|n| n.to_string()).collect();
+    let sequential: Vec<f64> = instance_counts
+        .iter()
+        .map(|&n| sim_sequential(&vec![db.montecarlo_item; n], 2e-6))
+        .collect();
+    let mut table = EffTable::new(
+        "Table 1 — Montecarlo π (simulated i7-4790K, calibrated costs)",
+        columns,
+        sequential,
+    );
+    for &p in &processes {
+        let runtimes: Vec<f64> = instance_counts
+            .iter()
+            .map(|&n| {
+                sim_farm(&machine, p, &vec![db.montecarlo_item; n], 1e-6, 1e-6)
+                    .expect("sim")
+            })
+            .collect();
+        table.push(p, runtimes);
+    }
+    print!("{}", table.render());
+    print!("{}", table.render_runtimes()); // Figure 3's series
+
+    // (b) Real wall-clock sanity sweep on this host.
+    println!("\n-- real wall-clock on this host (reduced: 64 instances) --");
+    use gpp::patterns::DataParallelCollect;
+    use gpp::workloads::montecarlo::{PiData, PiResults};
+    let t0 = std::time::Instant::now();
+    let _ = gpp::workloads::montecarlo::sequential(64, 100_000).unwrap();
+    let seq_t = t0.elapsed().as_secs_f64();
+    println!("sequential: {}", fmt_time(seq_t));
+    for workers in [1usize, 2, 4] {
+        let t0 = std::time::Instant::now();
+        DataParallelCollect::new(
+            PiData::emit_details(64, 100_000),
+            PiResults::result_details(),
+            workers,
+            "getWithin",
+        )
+        .run_network()
+        .unwrap();
+        let t = t0.elapsed().as_secs_f64();
+        println!(
+            "workers={workers}: {} (speedup {:.2})",
+            fmt_time(t),
+            seq_t / t
+        );
+    }
+}

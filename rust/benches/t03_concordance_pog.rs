@@ -1,0 +1,79 @@
+//! Table 3: concordance, Pipeline-of-Groups architecture — the same
+//! sweep as Table 2 through `sim_pog` (and the real
+//! `TaskParallelOfGroupCollects` pattern for the wall-clock check).
+//! Definition 7 proves GoP ≡ PoG in behaviour; the paper measures
+//! near-identical but slightly different performance — as here.
+
+use gpp::harness::EffTable;
+use gpp::sim::{calibrate, sim_pog, sim_sequential, MachineConfig};
+
+fn main() {
+    gpp::workloads::register_all();
+    let db = calibrate::calibrate();
+    let machine = MachineConfig::i7_4790k();
+
+    let configs = [
+        ("bible/8", 802_000usize, 8usize),
+        ("bible/16", 802_000, 16),
+        ("2bibles/8", 1_604_000, 8),
+        ("2bibles/16", 1_604_000, 16),
+    ];
+    let processes = [1usize, 2, 4, 8, 16, 32];
+
+    let item_costs = |words: usize, n_max: usize| -> (Vec<f64>, f64) {
+        let per = db.concordance_per_word * words as f64;
+        let items: Vec<f64> = (1..=n_max).map(|_| per).collect();
+        let emit_total = 0.25 * per * n_max as f64;
+        (items, emit_total / n_max as f64)
+    };
+
+    let columns: Vec<String> = configs.iter().map(|(l, _, _)| l.to_string()).collect();
+    let sequential: Vec<f64> = configs
+        .iter()
+        .map(|&(_, w, n)| {
+            let (items, emit) = item_costs(w, n);
+            sim_sequential(&items, emit)
+        })
+        .collect();
+    let mut table = EffTable::new(
+        "Table 3 — Concordance PoG (simulated i7-4790K)",
+        columns,
+        sequential,
+    );
+    for &p in &processes {
+        let runtimes: Vec<f64> = configs
+            .iter()
+            .map(|&(_, w, n)| {
+                let (items, emit) = item_costs(w, n);
+                sim_pog(&machine, p, &items, &[0.15, 0.15, 0.70], emit).expect("sim")
+            })
+            .collect();
+        table.push(p, runtimes);
+    }
+    print!("{}", table.render());
+
+    println!("\n-- real wall-clock (50k words, N=8) --");
+    use gpp::functionals::pipelines::StageSpec;
+    use gpp::patterns::TaskParallelOfGroupCollects;
+    use gpp::workloads::concordance::{ConcordanceData, ConcordanceResult};
+    let text = gpp::workloads::corpus::generate(50_000, 33);
+    let t0 = std::time::Instant::now();
+    let _ = gpp::workloads::concordance::sequential(&text, 8, 2).unwrap();
+    println!("sequential: {:.3}s", t0.elapsed().as_secs_f64());
+    for workers in [1usize, 2, 4] {
+        let t0 = std::time::Instant::now();
+        TaskParallelOfGroupCollects::new(
+            ConcordanceData::emit_details(&text, 8, 2),
+            vec![ConcordanceResult::result_details(); workers],
+            vec![
+                StageSpec::new("valueList"),
+                StageSpec::new("indicesMap"),
+                StageSpec::new("wordsMap"),
+            ],
+            workers,
+        )
+        .run_network()
+        .unwrap();
+        println!("PoG workers={workers}: {:.3}s", t0.elapsed().as_secs_f64());
+    }
+}

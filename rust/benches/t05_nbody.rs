@@ -1,0 +1,84 @@
+//! Table 5 + Figure 7: N-body on the MultiCoreEngine.
+//!
+//! Paper: 2048/4096/8192 bodies, 100 iterations, nodes ∈ {1..32}. The
+//! sequential update phase is much smaller than Jacobi's (no error
+//! computation) so speedup approaches the core count — as in Table 5.
+
+use gpp::harness::EffTable;
+use gpp::sim::{calibrate, sim_engine, CostDb, MachineConfig};
+use gpp::util::bench::fmt_time;
+
+fn main() {
+    gpp::workloads::register_all();
+    let db = calibrate::calibrate();
+    let machine = MachineConfig::i7_4790k();
+    println!(
+        "calibrated: one n=1024 step = {}",
+        fmt_time(db.nbody_step)
+    );
+
+    let sizes = [2048usize, 4096, 8192];
+    let nodes_sweep = [1usize, 2, 3, 4, 8, 16, 32];
+    let iterations = 100;
+    let root_frac = 0.02; // buffer swap only
+
+    let columns: Vec<String> = sizes.iter().map(|n| n.to_string()).collect();
+    let sequential: Vec<f64> = sizes
+        .iter()
+        .map(|&n| {
+            let step = CostDb::scale_quadratic(db.nbody_step, db.nbody_n, n);
+            iterations as f64 * step * (1.0 + root_frac)
+        })
+        .collect();
+    let mut table = EffTable::new(
+        "Table 5 — N-body (simulated i7-4790K, 100 iterations)",
+        columns,
+        sequential,
+    );
+    for &p in &nodes_sweep {
+        let runtimes: Vec<f64> = sizes
+            .iter()
+            .map(|&n| {
+                let step = CostDb::scale_quadratic(db.nbody_step, db.nbody_n, n);
+                sim_engine(&machine, p, iterations, step, step * root_frac).expect("sim")
+            })
+            .collect();
+        table.push(p, runtimes);
+    }
+    print!("{}", table.render());
+    print!("{}", table.render_runtimes()); // Figure 7 series
+
+    println!("\n-- real engine run (512 bodies, 20 steps) --");
+    use gpp::workloads::nbody;
+    let t0 = std::time::Instant::now();
+    let seq = nbody::sequential(512, 42, 0.01, 20).unwrap();
+    println!("sequential: {:.3}s", t0.elapsed().as_secs_f64());
+    let seq_sum = nbody::state_checksum(&seq.state.current);
+    use gpp::csp::channel::named_channel;
+    use gpp::csp::process::{run_parallel, CSProcess};
+    use gpp::data::message::Message;
+    use gpp::engines::MultiCoreEngine;
+    use gpp::processes::{Collect, Emit};
+    for nodes in [1usize, 2, 4] {
+        let (emit_out, eng_in) = named_channel::<Message>("b.emit");
+        let (eng_out, coll_in) = named_channel::<Message>("b.eng");
+        let (tx, rx) = std::sync::mpsc::channel();
+        let procs: Vec<Box<dyn CSProcess>> = vec![
+            Box::new(Emit::new(nbody::NBodyData::emit_details(42, 0.01, &[512]), emit_out)),
+            Box::new(
+                MultiCoreEngine::new(eng_in, eng_out, nodes, nbody::accessor(), nbody::calculation())
+                    .with_iterations(20),
+            ),
+            Box::new(Collect::new(nbody::NBodyResult::result_details(), coll_in).with_result_out(tx)),
+        ];
+        let t0 = std::time::Instant::now();
+        run_parallel(procs).unwrap();
+        let r = rx.try_iter().next().unwrap();
+        let ok = r.log_prop("checksum") == Some(gpp::Value::Int(seq_sum));
+        println!(
+            "nodes={nodes}: {:.3}s identical={ok}",
+            t0.elapsed().as_secs_f64()
+        );
+        assert!(ok);
+    }
+}

@@ -1,0 +1,54 @@
+//! Table 7 + Figure 10: Goldbach conjecture network.
+//!
+//! Paper: maxPrime ∈ {50k, 100k, 150k, 200k}, gWorkers from 2 to 2048.
+//! The DES farm reproduces the long tail: efficiency collapses as
+//! hundreds of processes oversubscribe 8 hardware threads.
+
+use gpp::harness::EffTable;
+use gpp::sim::{calibrate, sim_farm, sim_sequential, MachineConfig};
+
+fn main() {
+    gpp::workloads::register_all();
+    let db = calibrate::calibrate();
+    let machine = MachineConfig::i7_4790k();
+
+    let max_primes = [50_000usize, 100_000, 150_000, 200_000];
+    let g_workers = [2usize, 3, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
+
+    // Phase 2 dominates: evens in [4, 2·maxPrime) split over gWorkers.
+    let columns: Vec<String> = max_primes.iter().map(|n| n.to_string()).collect();
+    let sequential: Vec<f64> = max_primes
+        .iter()
+        .map(|&mp| sim_sequential(&[db.goldbach_per_even * mp as f64], 0.0))
+        .collect();
+    let mut table = EffTable::new(
+        "Table 7 — Goldbach (simulated i7-4790K)",
+        columns,
+        sequential,
+    );
+    for &g in &g_workers {
+        let runtimes: Vec<f64> = max_primes
+            .iter()
+            .map(|&mp| {
+                let total = db.goldbach_per_even * mp as f64;
+                // One partition item per worker.
+                let items = vec![total / g as f64; g];
+                sim_farm(&machine, g, &items, 1e-6, 1e-6).expect("sim")
+            })
+            .collect();
+        table.push(g, runtimes);
+    }
+    print!("{}", table.render());
+    print!("{}", table.render_runtimes()); // Figure 10 series
+
+    println!("\n-- real two-phase network (maxPrime=20000) --");
+    let t0 = std::time::Instant::now();
+    let seq = gpp::workloads::goldbach::sequential(20_000).unwrap();
+    println!("sequential: {:.3}s (maxContinuous {})", t0.elapsed().as_secs_f64(), seq.max_continuous);
+    for g in [2usize, 4, 8] {
+        let t0 = std::time::Instant::now();
+        let r = gpp::workloads::goldbach::run_network(20_000, 1, g).unwrap();
+        assert_eq!(r.max_continuous, seq.max_continuous);
+        println!("gWorkers={g}: {:.3}s", t0.elapsed().as_secs_f64());
+    }
+}

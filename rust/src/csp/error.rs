@@ -1,0 +1,125 @@
+//! Error model.
+//!
+//! The paper (§4.1): "an error message handler method … is called
+//! whenever an error is detected within and by the user code. This
+//! causes a message to be printed to the console with a user generated
+//! negative error code and the process network is then terminated."
+//!
+//! We reproduce this with typed errors plus channel *poison*: a process
+//! that observes a user error poisons its channels; every neighbour's
+//! pending or future channel operation returns [`GppError::Poisoned`],
+//! unwinding the whole network promptly, after which [`run_parallel`]
+//! surfaces the original error code to the caller instead of killing the
+//! OS process (a library should not `System.exit`).
+
+use std::fmt;
+
+/// Library-wide result type.
+pub type Result<T> = std::result::Result<T, GppError>;
+
+/// Errors produced by the substrate and by user code.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GppError {
+    /// A channel was poisoned (network is being torn down after an error).
+    Poisoned,
+    /// User method returned a negative error code (the paper's protocol).
+    UserCode { code: i64, context: String },
+    /// A user op name was not found in a data object's op table.
+    NoSuchMethod { class: String, method: String },
+    /// A data object could not be downcast to the expected type.
+    BadCast { expected: String, context: String },
+    /// Network specification rejected by the builder.
+    InvalidNetwork(String),
+    /// Wire codec failure (cluster transport, artifact metadata).
+    Codec(String),
+    /// Cluster transport failure.
+    Net(String),
+    /// PJRT / XLA runtime failure.
+    Xla(String),
+    /// Verification (model checker) failure.
+    Verify(String),
+    /// Configuration / CLI error.
+    Config(String),
+    /// I/O error (stringified; io::Error is not Clone).
+    Io(String),
+    /// Simulation error.
+    Sim(String),
+    /// Anything else.
+    Other(String),
+}
+
+impl fmt::Display for GppError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GppError::Poisoned => write!(f, "channel poisoned (network terminating)"),
+            GppError::UserCode { code, context } => {
+                write!(f, "user code error {code} in {context}")
+            }
+            GppError::NoSuchMethod { class, method } => {
+                write!(f, "no method '{method}' registered on class '{class}'")
+            }
+            GppError::BadCast { expected, context } => {
+                write!(f, "bad cast: expected {expected} in {context}")
+            }
+            GppError::InvalidNetwork(s) => write!(f, "invalid network: {s}"),
+            GppError::Codec(s) => write!(f, "codec error: {s}"),
+            GppError::Net(s) => write!(f, "network error: {s}"),
+            GppError::Xla(s) => write!(f, "xla error: {s}"),
+            GppError::Verify(s) => write!(f, "verification error: {s}"),
+            GppError::Config(s) => write!(f, "config error: {s}"),
+            GppError::Io(s) => write!(f, "io error: {s}"),
+            GppError::Sim(s) => write!(f, "simulation error: {s}"),
+            GppError::Other(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for GppError {}
+
+impl From<std::io::Error> for GppError {
+    fn from(e: std::io::Error) -> Self {
+        GppError::Io(e.to_string())
+    }
+}
+
+impl GppError {
+    /// The paper's negative error code, where one applies.
+    pub fn user_code(&self) -> Option<i64> {
+        match self {
+            GppError::UserCode { code, .. } => Some(*code),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = GppError::UserCode {
+            code: -7,
+            context: "Worker[2].getWithin".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("-7"));
+        assert!(s.contains("Worker[2]"));
+    }
+
+    #[test]
+    fn user_code_extraction() {
+        assert_eq!(
+            GppError::UserCode { code: -1, context: String::new() }.user_code(),
+            Some(-1)
+        );
+        assert_eq!(GppError::Poisoned.user_code(), None);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: GppError = io.into();
+        assert!(matches!(e, GppError::Io(_)));
+    }
+}

@@ -1,0 +1,31 @@
+//! The CSP substrate: the JCSP/groovyJCSP analog the GPP process library
+//! is built on.
+//!
+//! Semantics follow Hoare CSP as implemented by occam/JCSP and described
+//! in §2.1 of the paper:
+//!
+//! * channels are **unidirectional, unbuffered and synchronised** — the
+//!   first party to arrive blocks, idle, until its partner arrives;
+//! * processes **share no data**; object references move across channels
+//!   (Rust's ownership system *enforces* the paper's rule that a sender
+//!   never touches a sent object again, which JCSP leaves to discipline);
+//! * `any` channel ends may be shared by several readers/writers; write
+//!   requests queue FIFO;
+//! * [`alt::Alt`] provides fair non-deterministic choice over inputs
+//!   (JCSP `fairSelect`);
+//! * networks shut down either cleanly via the `UniversalTerminator`
+//!   protocol (see [`crate::data`]) or abruptly via channel **poison**
+//!   when user code reports an error — the paper's "print message and
+//!   terminate the network" behaviour.
+
+pub mod error;
+pub mod channel;
+pub mod alt;
+pub mod barrier;
+pub mod process;
+
+pub use alt::Alt;
+pub use barrier::Barrier;
+pub use channel::{channel, In, Out};
+pub use error::{GppError, Result};
+pub use process::{run_parallel, run_parallel_named, CSProcess, ProcessFn};

@@ -1,0 +1,209 @@
+//! The process abstraction and parallel execution (the groovyJCSP `PAR`).
+//!
+//! A GPP network is a set of [`CSProcess`]es run by [`run_parallel`]:
+//! each gets its own OS thread (the JCSP model — "an idle process
+//! consumes no processing resource whatsoever" because blocked threads
+//! are descheduled). `run_parallel` joins all of them and reports the
+//! most informative error: if user code failed somewhere, that error is
+//! returned rather than the cascade of `Poisoned` errors it triggered in
+//! the neighbours.
+
+use super::error::{GppError, Result};
+
+/// A communicating sequential process: the `run()` method defines its
+/// entire behaviour (paper, Listing 9: "The interface CSProcess requires
+/// the creation of a run() method").
+pub trait CSProcess: Send {
+    fn run(&mut self) -> Result<()>;
+
+    /// Diagnostic name used for thread naming and logging.
+    fn name(&self) -> String {
+        "process".to_string()
+    }
+}
+
+/// Adapter: any `FnOnce() -> Result<()>` is a process.
+pub struct ProcessFn {
+    name: String,
+    f: Option<Box<dyn FnOnce() -> Result<()> + Send>>,
+}
+
+impl ProcessFn {
+    pub fn new(name: &str, f: impl FnOnce() -> Result<()> + Send + 'static) -> Self {
+        Self {
+            name: name.to_string(),
+            f: Some(Box::new(f)),
+        }
+    }
+
+    /// Boxed, for inserting into process lists.
+    pub fn boxed(
+        name: &str,
+        f: impl FnOnce() -> Result<()> + Send + 'static,
+    ) -> Box<dyn CSProcess> {
+        Box::new(Self::new(name, f))
+    }
+}
+
+impl CSProcess for ProcessFn {
+    fn run(&mut self) -> Result<()> {
+        match self.f.take() {
+            Some(f) => f(),
+            None => Err(GppError::Other(format!(
+                "process '{}' run twice",
+                self.name
+            ))),
+        }
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Run a set of processes in parallel; wait for all to finish.
+///
+/// Error policy: return the first *root-cause* error (user code, cast,
+/// method lookup, I/O …) if any process produced one; only if every
+/// failure is a `Poisoned` cascade do we return `Poisoned` itself.
+pub fn run_parallel(procs: Vec<Box<dyn CSProcess>>) -> Result<()> {
+    run_parallel_named("par", procs)
+}
+
+pub fn run_parallel_named(label: &str, procs: Vec<Box<dyn CSProcess>>) -> Result<()> {
+    let mut handles = Vec::with_capacity(procs.len());
+    for (i, mut p) in procs.into_iter().enumerate() {
+        let tname = format!("{label}/{}-{i}", p.name());
+        let h = std::thread::Builder::new()
+            .name(tname.clone())
+            // GPP networks are many-process; keep stacks modest so a
+            // 1000-worker farm does not exhaust address space on small
+            // machines. User compute owns no deep recursion.
+            .stack_size(512 * 1024)
+            .spawn(move || p.run())
+            .map_err(|e| GppError::Other(format!("spawn {tname}: {e}")))?;
+        handles.push(h);
+    }
+
+    let mut root_cause: Option<GppError> = None;
+    let mut poisoned = false;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(GppError::Poisoned)) => poisoned = true,
+            Ok(Err(e)) => {
+                if root_cause.is_none() {
+                    root_cause = Some(e);
+                }
+            }
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "process panicked".to_string());
+                if root_cause.is_none() {
+                    root_cause = Some(GppError::Other(format!("panic: {msg}")));
+                }
+            }
+        }
+    }
+    match root_cause {
+        Some(e) => Err(e),
+        None if poisoned => Err(GppError::Poisoned),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::channel::channel;
+
+    #[test]
+    fn all_processes_run() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let count = Arc::new(AtomicUsize::new(0));
+        let procs: Vec<Box<dyn CSProcess>> = (0..8)
+            .map(|_| {
+                let c = count.clone();
+                ProcessFn::boxed("inc", move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                })
+            })
+            .collect();
+        run_parallel(procs).unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn producer_consumer_network() {
+        let (tx, rx) = channel::<u64>();
+        let producer = ProcessFn::boxed("prod", move || {
+            for i in 0..100 {
+                tx.write(i)?;
+            }
+            Ok(())
+        });
+        let (done_tx, done_rx) = channel::<u64>();
+        let consumer = ProcessFn::boxed("cons", move || {
+            let mut sum = 0;
+            for _ in 0..100 {
+                sum += rx.read()?;
+            }
+            done_tx.write(sum)?;
+            Ok(())
+        });
+        let checker = ProcessFn::boxed("check", move || {
+            assert_eq!(done_rx.read()?, 4950);
+            Ok(())
+        });
+        run_parallel(vec![producer, consumer, checker]).unwrap();
+    }
+
+    #[test]
+    fn root_cause_error_preferred_over_poison() {
+        let (tx, rx) = channel::<u64>();
+        let failing = ProcessFn::boxed("fail", move || {
+            // Fail, then poison our channel as library processes do.
+            tx.poison();
+            Err(GppError::UserCode {
+                code: -3,
+                context: "test".into(),
+            })
+        });
+        let victim = ProcessFn::boxed("victim", move || {
+            rx.read()?; // will see Poisoned
+            Ok(())
+        });
+        let err = run_parallel(vec![failing, victim]).unwrap_err();
+        assert_eq!(err.user_code(), Some(-3));
+    }
+
+    #[test]
+    fn pure_poison_cascade_reports_poisoned() {
+        let (tx, rx) = channel::<u64>();
+        let p1 = ProcessFn::boxed("p1", move || {
+            tx.poison();
+            Err(GppError::Poisoned)
+        });
+        let p2 = ProcessFn::boxed("p2", move || rx.read().map(|_| ()));
+        assert_eq!(run_parallel(vec![p1, p2]).unwrap_err(), GppError::Poisoned);
+    }
+
+    #[test]
+    fn panic_in_process_is_captured() {
+        let p = ProcessFn::boxed("boom", || panic!("kaboom {}", 42));
+        let err = run_parallel(vec![p]).unwrap_err();
+        assert!(err.to_string().contains("kaboom"));
+    }
+
+    #[test]
+    fn process_fn_cannot_run_twice() {
+        let mut p = ProcessFn::new("once", || Ok(()));
+        assert!(p.run().is_ok());
+        assert!(p.run().is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! `Details` objects: the declarative descriptions processes receive
+//! (paper §4.2, Listings 7 & 8). They carry class *names* plus exported
+//! method *names* — the user relates their method names to the
+//! place-holder names each library process expects.
+
+use super::object::Params;
+
+/// Describes the objects an `Emit` process creates (paper Listing 7).
+#[derive(Clone, Debug)]
+pub struct DataDetails {
+    /// `dName`: registered class name of the emitted object.
+    pub class: String,
+    /// `dInitMethod` + `dInitData`: class initialisation (static set-up),
+    /// called once on a prototype instance before the emit loop.
+    pub init_method: String,
+    pub init_data: Params,
+    /// `dCreateMethod` + `dCreateData`: per-instance creation, returning
+    /// `normalContinuation` while more objects remain.
+    pub create_method: String,
+    pub create_data: Params,
+}
+
+impl DataDetails {
+    pub fn new(class: &str) -> Self {
+        Self {
+            class: class.to_string(),
+            init_method: "init".to_string(),
+            init_data: Params::empty(),
+            create_method: "create".to_string(),
+            create_data: Params::empty(),
+        }
+    }
+
+    pub fn init(mut self, method: &str, data: Params) -> Self {
+        self.init_method = method.to_string();
+        self.init_data = data;
+        self
+    }
+
+    pub fn create(mut self, method: &str, data: Params) -> Self {
+        self.create_method = method.to_string();
+        self.create_data = data;
+        self
+    }
+}
+
+/// Describes the result object a `Collect` process maintains (Listing 8).
+#[derive(Clone, Debug)]
+pub struct ResultDetails {
+    /// `rName`: registered class name of the result object.
+    pub class: String,
+    /// `rInitMethod` + `rInitData`.
+    pub init_method: String,
+    pub init_data: Params,
+    /// `rCollectMethod`: passed each input object in turn.
+    pub collect_method: String,
+    /// `rFinaliseMethod` + `rFinaliseData`: produces the final output.
+    pub finalise_method: String,
+    pub finalise_data: Params,
+}
+
+impl ResultDetails {
+    pub fn new(class: &str) -> Self {
+        Self {
+            class: class.to_string(),
+            init_method: "init".to_string(),
+            init_data: Params::empty(),
+            collect_method: "collector".to_string(),
+            finalise_method: "finalise".to_string(),
+            finalise_data: Params::empty(),
+        }
+    }
+
+    pub fn init(mut self, method: &str, data: Params) -> Self {
+        self.init_method = method.to_string();
+        self.init_data = data;
+        self
+    }
+
+    pub fn collect(mut self, method: &str) -> Self {
+        self.collect_method = method.to_string();
+        self
+    }
+
+    pub fn finalise(mut self, method: &str, data: Params) -> Self {
+        self.finalise_method = method.to_string();
+        self.finalise_data = data;
+        self
+    }
+}
+
+/// Describes a worker-local class (`EmitWithLocal`, `Worker` local state,
+/// `CombineNto1` accumulators; paper §4.4 "Local Details").
+#[derive(Clone, Debug)]
+pub struct LocalDetails {
+    /// `lName`: registered class name of the local object.
+    pub class: String,
+    /// `lInitMethod` + `lInitData`.
+    pub init_method: String,
+    pub init_data: Params,
+}
+
+impl LocalDetails {
+    pub fn new(class: &str) -> Self {
+        Self {
+            class: class.to_string(),
+            init_method: "init".to_string(),
+            init_data: Params::empty(),
+        }
+    }
+
+    pub fn init(mut self, method: &str, data: Params) -> Self {
+        self.init_method = method.to_string();
+        self.init_data = data;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::object::Value;
+
+    #[test]
+    fn builders_set_fields() {
+        let d = DataDetails::new("piData")
+            .init("initClass", Params::of(vec![Value::Int(1024)]))
+            .create("createInstance", Params::of(vec![Value::Int(100_000)]));
+        assert_eq!(d.class, "piData");
+        assert_eq!(d.init_method, "initClass");
+        assert_eq!(d.create_data.int(0).unwrap(), 100_000);
+
+        let r = ResultDetails::new("piResults").collect("collector");
+        assert_eq!(r.collect_method, "collector");
+        assert_eq!(r.finalise_method, "finalise");
+
+        let l = LocalDetails::new("sieve").init("init", Params::empty());
+        assert_eq!(l.class, "sieve");
+    }
+}

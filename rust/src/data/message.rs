@@ -1,0 +1,125 @@
+//! The unit of channel communication and the termination protocol.
+//!
+//! Networks terminate via the `UniversalTerminator` (paper §4.3.1):
+//! after emitting its last data object, `Emit` writes a terminator; each
+//! process forwards it downstream after finishing its own work, so "the
+//! complete solution process network will … have terminated as all the
+//! preceding processes will also have terminated". The terminator also
+//! carries accumulated log records to the collector (§8: "this
+//! termination object can also be used to collate logging information").
+
+use super::object::DataObject;
+use crate::logging::LogRecord;
+
+/// The `UniversalTerminator`.
+#[derive(Debug, Default, Clone)]
+pub struct Terminator {
+    /// Log records gathered on the way down the network.
+    pub logs: Vec<LogRecord>,
+}
+
+impl Terminator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn absorb(&mut self, mut other: Terminator) {
+        self.logs.append(&mut other.logs);
+    }
+}
+
+/// What flows through every GPP channel.
+pub enum Message {
+    /// An application data object (moved, never shared).
+    Data(Box<dyn DataObject>),
+    /// End-of-stream marker.
+    Terminator(Terminator),
+}
+
+impl Message {
+    pub fn data(obj: impl DataObject + 'static) -> Self {
+        Message::Data(Box::new(obj))
+    }
+
+    pub fn is_terminator(&self) -> bool {
+        matches!(self, Message::Terminator(_))
+    }
+
+    /// Deep copy (for `SeqCast`/`ParCast` spreaders).
+    pub fn deep_clone(&self) -> Message {
+        match self {
+            Message::Data(obj) => Message::Data(obj.deep_clone()),
+            Message::Terminator(t) => Message::Terminator(t.clone()),
+        }
+    }
+
+    /// Class name for diagnostics.
+    pub fn class_name(&self) -> &'static str {
+        match self {
+            Message::Data(obj) => obj.class_name(),
+            Message::Terminator(_) => "UniversalTerminator",
+        }
+    }
+}
+
+impl std::fmt::Debug for Message {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Message::Data(obj) => write!(f, "Data({})", obj.class_name()),
+            Message::Terminator(t) => write!(f, "Terminator({} logs)", t.logs.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::object::{downcast_ref, Aux, Params, ReturnCode, Value};
+    use crate::csp::error::Result;
+
+    #[derive(Clone, Debug, Default)]
+    struct Blob {
+        xs: Vec<i64>,
+    }
+
+    impl Blob {
+        fn push(&mut self, p: &Params, _a: Aux) -> Result<ReturnCode> {
+            self.xs.push(p.int(0)?);
+            Ok(ReturnCode::CompletedOk)
+        }
+    }
+
+    crate::gpp_data_class!(Blob, "blob", { "push" => push });
+
+    #[test]
+    fn deep_clone_of_data_is_independent() {
+        let mut b = Blob::default();
+        b.push(&Params::of(vec![Value::Int(1)]), None).unwrap();
+        let msg = Message::data(b);
+        let copy = msg.deep_clone();
+        if let (Message::Data(a), Message::Data(c)) = (&msg, &copy) {
+            let a: &Blob = downcast_ref(a.as_ref(), "t").unwrap();
+            let c: &Blob = downcast_ref(c.as_ref(), "t").unwrap();
+            assert_eq!(a.xs, c.xs);
+        } else {
+            panic!("expected Data");
+        }
+    }
+
+    #[test]
+    fn terminator_absorbs_logs() {
+        let mut t1 = Terminator::new();
+        let mut t2 = Terminator::new();
+        t2.logs.push(LogRecord::marker("x"));
+        t1.absorb(t2);
+        assert_eq!(t1.logs.len(), 1);
+        assert!(Message::Terminator(t1).is_terminator());
+    }
+
+    #[test]
+    fn debug_formatting() {
+        let msg = Message::data(Blob::default());
+        assert_eq!(format!("{msg:?}"), "Data(blob)");
+        assert!(!msg.is_terminator());
+    }
+}

@@ -1,0 +1,20 @@
+//! The data-object model: the paper's `DataClass` / `DataClassInterface`
+//! / `Details` machinery (§4.1–4.2).
+//!
+//! Every object that flows through a GPP network implements
+//! [`object::DataObject`]. User methods are invoked *by exported name* —
+//! the Groovy `.&` string-dispatch that lets library processes stay
+//! generic while the user supplies extant sequential code — and always
+//! take a `List` of parameters ([`object::Params`]) and return a
+//! [`object::ReturnCode`] (`completedOK`, `normalContinuation`,
+//! `normalTermination`, or a negative error code).
+
+pub mod object;
+pub mod details;
+pub mod message;
+
+pub use details::{DataDetails, LocalDetails, ResultDetails};
+pub use message::{Message, Terminator};
+pub use object::{
+    instantiate, register_class, DataObject, Params, ReturnCode, Value,
+};

@@ -1,0 +1,414 @@
+//! `DataObject`: the paper's `DataClass`, with string-named method
+//! dispatch, list-of-`Value` parameters, deep cloning for cast
+//! spreaders, and a global class registry so the declarative builder can
+//! instantiate user classes by name (Groovy's reflective `dName`).
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::csp::error::{GppError, Result};
+
+/// A dynamically-typed parameter value (Groovy `List` entries).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+    IntList(Vec<i64>),
+    FloatList(Vec<f64>),
+    StrList(Vec<String>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            Value::Float(f) => Ok(*f as i64),
+            _ => Err(GppError::BadCast {
+                expected: "Int".into(),
+                context: format!("{self:?}"),
+            }),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_int()?;
+        if i < 0 {
+            return Err(GppError::BadCast {
+                expected: "non-negative Int".into(),
+                context: format!("{i}"),
+            });
+        }
+        Ok(i as usize)
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => Err(GppError::BadCast {
+                expected: "Float".into(),
+                context: format!("{self:?}"),
+            }),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => Err(GppError::BadCast {
+                expected: "Str".into(),
+                context: format!("{self:?}"),
+            }),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => Err(GppError::BadCast {
+                expected: "Bool".into(),
+                context: format!("{self:?}"),
+            }),
+        }
+    }
+
+    pub fn as_int_list(&self) -> Result<&[i64]> {
+        match self {
+            Value::IntList(v) => Ok(v),
+            _ => Err(GppError::BadCast {
+                expected: "IntList".into(),
+                context: format!("{self:?}"),
+            }),
+        }
+    }
+
+    pub fn as_float_list(&self) -> Result<&[f64]> {
+        match self {
+            Value::FloatList(v) => Ok(v),
+            _ => Err(GppError::BadCast {
+                expected: "FloatList".into(),
+                context: format!("{self:?}"),
+            }),
+        }
+    }
+}
+
+/// Method parameters: "Parameters to methods are always passed in a List
+/// structure so that the number of parameters can be varied both in
+/// number and type as required by the application" (§4.2).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Params(pub Vec<Value>);
+
+impl Params {
+    pub fn empty() -> Self {
+        Params(Vec::new())
+    }
+
+    pub fn of(values: Vec<Value>) -> Self {
+        Params(values)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Positional access with a helpful error (the paper's methods index
+    /// their List parameter: `instances = p[0]`).
+    pub fn get(&self, i: usize) -> Result<&Value> {
+        self.0.get(i).ok_or_else(|| GppError::BadCast {
+            expected: format!("parameter #{i}"),
+            context: format!("params has {} entries", self.0.len()),
+        })
+    }
+
+    pub fn int(&self, i: usize) -> Result<i64> {
+        self.get(i)?.as_int()
+    }
+
+    pub fn usize(&self, i: usize) -> Result<usize> {
+        self.get(i)?.as_usize()
+    }
+
+    pub fn float(&self, i: usize) -> Result<f64> {
+        self.get(i)?.as_float()
+    }
+
+    pub fn str(&self, i: usize) -> Result<&str> {
+        self.get(i)?.as_str()
+    }
+}
+
+/// User method outcome (paper §3.1.1): `completedOK` normally;
+/// `normalTermination` / `normalContinuation` from create-methods; any
+/// negative value is an application error that terminates the network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReturnCode {
+    CompletedOk,
+    NormalTermination,
+    NormalContinuation,
+    Error(i64),
+}
+
+impl ReturnCode {
+    /// Convert an error code into a library error with context.
+    pub fn check(self, context: &str) -> Result<ReturnCode> {
+        match self {
+            ReturnCode::Error(code) => Err(GppError::UserCode {
+                code,
+                context: context.to_string(),
+            }),
+            ok => Ok(ok),
+        }
+    }
+}
+
+/// Auxiliary object handed to a user method: the worker's local class,
+/// or the input object a collector consumes.
+pub type Aux<'a> = Option<&'a mut dyn DataObject>;
+
+/// The paper's `DataClass`. Objects are `Send` (they move between
+/// processes), dynamically castable, deep-cloneable (for the `SeqCast` /
+/// `ParCast` spreaders, which must hand each destination a distinct
+/// object — the paper's `@AutoClone(SERIALISATION)` deep copy), and
+/// dispatch user methods by exported string name.
+pub trait DataObject: Send {
+    /// Class name, used by the registry, logging and error messages.
+    fn class_name(&self) -> &'static str;
+
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+
+    /// Deep copy. Library guarantee: "within a single multi-core
+    /// processor all objects are unique" (§4.5.1).
+    fn deep_clone(&self) -> Box<dyn DataObject>;
+
+    /// Invoke the method exported as `method`.
+    fn call(&mut self, method: &str, params: &Params, aux: Aux) -> Result<ReturnCode>;
+
+    /// Value of a named property, for the logging system ("the user
+    /// [specifies] the object property that is to be logged", §1).
+    fn log_prop(&self, _name: &str) -> Option<Value> {
+        None
+    }
+}
+
+/// Downcast helper with a proper error.
+pub fn downcast_ref<'a, T: 'static>(obj: &'a dyn DataObject, context: &str) -> Result<&'a T> {
+    obj.as_any().downcast_ref::<T>().ok_or_else(|| GppError::BadCast {
+        expected: std::any::type_name::<T>().to_string(),
+        context: format!("{context} (got {})", obj.class_name()),
+    })
+}
+
+pub fn downcast_mut<'a, T: 'static>(
+    obj: &'a mut dyn DataObject,
+    context: &str,
+) -> Result<&'a mut T> {
+    let cls = obj.class_name();
+    obj.as_any_mut()
+        .downcast_mut::<T>()
+        .ok_or_else(|| GppError::BadCast {
+            expected: std::any::type_name::<T>().to_string(),
+            context: format!("{context} (got {cls})"),
+        })
+}
+
+/// Factory for instantiating user classes by name (Groovy reflection).
+pub type Factory = fn() -> Box<dyn DataObject>;
+
+fn registry() -> &'static Mutex<HashMap<String, Factory>> {
+    static REG: OnceLock<Mutex<HashMap<String, Factory>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Register a user class so `DataDetails { class: "piData", .. }` and the
+/// declarative builder can instantiate it by name.
+pub fn register_class(name: &str, factory: Factory) {
+    registry().lock().unwrap().insert(name.to_string(), factory);
+}
+
+/// Instantiate a registered class.
+pub fn instantiate(name: &str) -> Result<Box<dyn DataObject>> {
+    registry()
+        .lock()
+        .unwrap()
+        .get(name)
+        .map(|f| f())
+        .ok_or_else(|| GppError::NoSuchMethod {
+            class: name.to_string(),
+            method: "<constructor>".to_string(),
+        })
+}
+
+/// Register every workload class shipped with the library. Idempotent;
+/// called by examples, the CLI and tests so string-named instantiation
+/// always works.
+pub fn register_builtin_classes() {
+    crate::workloads::register_all();
+}
+
+/// Implement [`DataObject`] for a `Clone` struct with a method table.
+///
+/// ```ignore
+/// gpp_data_class!(PiData, "piData", {
+///     "initClass" => init_class,
+///     "createInstance" => create_instance,
+///     "getWithin" => get_within,
+/// }, props { "instance" => |s| Value::Int(s.instance) });
+/// ```
+///
+/// Each method has signature
+/// `fn(&mut Self, &Params, Aux) -> Result<ReturnCode>`.
+#[macro_export]
+macro_rules! gpp_data_class {
+    ($ty:ty, $name:literal, { $( $m:literal => $f:ident ),* $(,)? }
+     $(, props { $( $p:literal => $pe:expr ),* $(,)? } )? ) => {
+        impl $crate::data::object::DataObject for $ty {
+            fn class_name(&self) -> &'static str {
+                $name
+            }
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
+            fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+                self
+            }
+            fn deep_clone(&self) -> Box<dyn $crate::data::object::DataObject> {
+                Box::new(self.clone())
+            }
+            fn call(
+                &mut self,
+                method: &str,
+                params: &$crate::data::object::Params,
+                aux: $crate::data::object::Aux,
+            ) -> $crate::csp::error::Result<$crate::data::object::ReturnCode> {
+                let _ = &aux;
+                match method {
+                    $( $m => self.$f(params, aux), )*
+                    _ => Err($crate::csp::error::GppError::NoSuchMethod {
+                        class: $name.to_string(),
+                        method: method.to_string(),
+                    }),
+                }
+            }
+            #[allow(unused_variables)]
+            fn log_prop(&self, name: &str) -> Option<$crate::data::object::Value> {
+                $(
+                    match name {
+                        $( $p => {
+                            let f: fn(&$ty) -> $crate::data::object::Value = $pe;
+                            return Some(f(self));
+                        } )*
+                        _ => {}
+                    }
+                )?
+                None
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Debug, Default)]
+    struct Counter {
+        n: i64,
+    }
+
+    impl Counter {
+        fn bump(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+            self.n += p.int(0)?;
+            Ok(ReturnCode::CompletedOk)
+        }
+
+        fn fail(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+            Ok(ReturnCode::Error(-9))
+        }
+    }
+
+    crate::gpp_data_class!(Counter, "counter", {
+        "bump" => bump,
+        "fail" => fail,
+    }, props { "n" => |s| Value::Int(s.n) });
+
+    #[test]
+    fn string_dispatch_calls_method() {
+        let mut c = Counter::default();
+        c.call("bump", &Params::of(vec![Value::Int(5)]), None).unwrap();
+        c.call("bump", &Params::of(vec![Value::Int(2)]), None).unwrap();
+        assert_eq!(c.n, 7);
+    }
+
+    #[test]
+    fn unknown_method_errors() {
+        let mut c = Counter::default();
+        let err = c.call("nope", &Params::empty(), None).unwrap_err();
+        assert!(matches!(err, GppError::NoSuchMethod { .. }));
+    }
+
+    #[test]
+    fn error_return_code_checked() {
+        let mut c = Counter::default();
+        let rc = c.call("fail", &Params::empty(), None).unwrap();
+        let err = rc.check("counter.fail").unwrap_err();
+        assert_eq!(err.user_code(), Some(-9));
+    }
+
+    #[test]
+    fn log_prop_exposes_property() {
+        let mut c = Counter::default();
+        c.call("bump", &Params::of(vec![Value::Int(3)]), None).unwrap();
+        assert_eq!(c.log_prop("n"), Some(Value::Int(3)));
+        assert_eq!(c.log_prop("missing"), None);
+    }
+
+    #[test]
+    fn deep_clone_is_independent() {
+        let mut c = Counter { n: 1 };
+        let mut d = c.deep_clone();
+        c.bump(&Params::of(vec![Value::Int(10)]), None).unwrap();
+        d.call("bump", &Params::of(vec![Value::Int(100)]), None).unwrap();
+        assert_eq!(c.n, 11);
+        let d: &Counter = downcast_ref(d.as_ref(), "test").unwrap();
+        assert_eq!(d.n, 101);
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        register_class("counter-test", || Box::new(Counter::default()));
+        let mut obj = instantiate("counter-test").unwrap();
+        obj.call("bump", &Params::of(vec![Value::Int(4)]), None).unwrap();
+        let c: &Counter = downcast_ref(obj.as_ref(), "test").unwrap();
+        assert_eq!(c.n, 4);
+        assert!(instantiate("not-registered").is_err());
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(Value::Int(3).as_float().unwrap(), 3.0);
+        assert_eq!(Value::Float(2.5).as_int().unwrap(), 2);
+        assert!(Value::Str("x".into()).as_int().is_err());
+        assert_eq!(Value::Bool(true).as_bool().unwrap(), true);
+        assert_eq!(
+            Value::IntList(vec![1, 2]).as_int_list().unwrap(),
+            &[1, 2]
+        );
+    }
+
+    #[test]
+    fn params_positional_errors() {
+        let p = Params::of(vec![Value::Int(1)]);
+        assert_eq!(p.int(0).unwrap(), 1);
+        assert!(p.get(1).is_err());
+        assert!(Params::empty().is_empty());
+    }
+}

@@ -1,0 +1,32 @@
+//! Shared-data process engines (paper §5.4): "two specific matrix-based
+//! architectures, both of which assume that the data in the matrix is
+//! partitioned into distinct subsets which can be processed
+//! independently … a root node together with many worker nodes …
+//! Internally these engines access the data in a shared manner so that
+//! data is not copied but the user has no direct access to the shared
+//! data; they simply specify how the data should be partitioned."
+//!
+//! * [`multicore::MultiCoreEngine`] — iterative engine (Jacobi §6.2,
+//!   N-body §6.3): per iteration the nodes compute their partitions in
+//!   parallel against the shared current state, then the root runs the
+//!   sequential error/update phase.
+//! * [`stencil::StencilEngine`] — image-kernel engine (§6.4): one pass
+//!   per image, double-buffered, designed to chain into pipelines
+//!   (greyscale → edge-detect).
+//!
+//! **Rust adaptation.** The paper hides the shared access discipline
+//! ("the library does not suffer from concurrent access … the methods
+//! adopted in these processes specifically exclude such problems") via
+//! JVM-side convention. Here the same discipline — *nodes read all the
+//! shared state, write only their own partition* — is enforced by
+//! construction: each iteration splits the `next` buffer into disjoint
+//! `&mut` slices (one per node) while the `current` buffer is shared
+//! immutably, so the compiler proves the paper's safety claim.
+
+pub mod state;
+pub mod multicore;
+pub mod stencil;
+
+pub use multicore::MultiCoreEngine;
+pub use state::{CalcCtx, CalcFn, EngineState, ErrorFn, PartitionFn, StateAccessor, UpdateFn};
+pub use stencil::StencilEngine;

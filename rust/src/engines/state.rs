@@ -1,0 +1,162 @@
+//! Shared engine state and the user-supplied method slots.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::csp::error::{GppError, Result};
+use crate::data::object::DataObject;
+
+/// The shared numeric state an engine iterates on.
+///
+/// Layout convention: `current` holds the live values (element count ×
+/// `stride` doubles); `next` is the write target of the ongoing
+/// iteration (same length); `consts` holds read-only data (matrix
+/// coefficients, masses, kernels) shaped by `const_dims`; `meta` carries
+/// workload scalars (dt, error margin, image width …).
+#[derive(Clone, Debug, Default)]
+pub struct EngineState {
+    pub consts: Vec<f64>,
+    pub const_dims: Vec<usize>,
+    pub current: Vec<f64>,
+    pub next: Vec<f64>,
+    pub meta: Vec<f64>,
+    /// Element ranges (unscaled by stride), one per node.
+    pub partitions: Vec<Range<usize>>,
+    pub stride: usize,
+    pub iterations_done: usize,
+}
+
+impl EngineState {
+    pub fn elements(&self) -> usize {
+        if self.stride == 0 {
+            0
+        } else {
+            self.current.len() / self.stride
+        }
+    }
+
+    /// Equal partition of the element space over `nodes` (the default
+    /// `partitionMethod`: "the programmer just has to specify the size of
+    /// the partitions").
+    pub fn equal_partitions(&self, nodes: usize) -> Vec<Range<usize>> {
+        equal_ranges(self.elements(), nodes)
+    }
+
+    /// Swap current/next (the default `updateMethod` — Jacobi's "transfer
+    /// the latest guess from its location into the place for the last
+    /// guess").
+    pub fn swap_buffers(&mut self) {
+        std::mem::swap(&mut self.current, &mut self.next);
+    }
+}
+
+/// Split `n` elements into `k` near-equal contiguous ranges.
+pub fn equal_ranges(n: usize, k: usize) -> Vec<Range<usize>> {
+    assert!(k > 0);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Read-only view handed to the calculation method: everything except
+/// the node's own output slice (which is passed as `&mut [f64]`).
+pub struct CalcCtx<'a> {
+    pub consts: &'a [f64],
+    pub const_dims: &'a [usize],
+    pub current: &'a [f64],
+    pub meta: &'a [f64],
+    pub stride: usize,
+    pub iteration: usize,
+}
+
+/// The node calculation (`calculationMethod`): compute the new values of
+/// the elements in `range` from the shared state, writing into `out`
+/// (the node's disjoint slice of `next`). `Arc<dyn Fn>` so backends with
+/// captured state (the PJRT executor) fit.
+pub type CalcFn = Arc<dyn Fn(&CalcCtx, Range<usize>, &mut [f64]) -> Result<()> + Send + Sync>;
+
+/// Root's convergence test (`errorMethod`): "determines whether each new
+/// guess is within errorMargin of the previous one and if another
+/// iteration is required returns the value true".
+pub type ErrorFn = fn(current: &[f64], next: &[f64], meta: &[f64]) -> bool;
+
+/// Root's update (`updateMethod`); `None` ⇒ buffer swap.
+pub type UpdateFn = fn(&mut EngineState);
+
+/// Custom partitioner (`partitionMethod`); `None` ⇒ equal split.
+pub type PartitionFn = fn(&EngineState, usize) -> Vec<Range<usize>>;
+
+/// Extract the engine state from a flowing data object. An `fn` pointer
+/// with HRTB so the engine stays object-safe over `dyn DataObject`.
+pub type StateAccessor = for<'a> fn(&'a mut dyn DataObject) -> Result<&'a mut EngineState>;
+
+/// Helper for workload impls: downcast + field access in one line.
+pub fn access_state<'a, T: 'static>(
+    obj: &'a mut dyn DataObject,
+    get: fn(&mut T) -> &mut EngineState,
+) -> Result<&'a mut EngineState> {
+    let cls = obj.class_name();
+    let t = obj
+        .as_any_mut()
+        .downcast_mut::<T>()
+        .ok_or_else(|| GppError::BadCast {
+            expected: std::any::type_name::<T>().to_string(),
+            context: format!("engine state accessor (got {cls})"),
+        })?;
+    Ok(get(t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_ranges_cover_everything() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for k in [1usize, 2, 3, 8] {
+                let rs = equal_ranges(n, k);
+                assert_eq!(rs.len(), k);
+                assert_eq!(rs[0].start, 0);
+                assert_eq!(rs.last().unwrap().end, n);
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+                // Balanced within 1.
+                let lens: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+                let min = lens.iter().min().unwrap();
+                let max = lens.iter().max().unwrap();
+                assert!(max - min <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn swap_buffers_swaps() {
+        let mut s = EngineState {
+            current: vec![1.0],
+            next: vec![2.0],
+            stride: 1,
+            ..Default::default()
+        };
+        s.swap_buffers();
+        assert_eq!(s.current, vec![2.0]);
+        assert_eq!(s.next, vec![1.0]);
+    }
+
+    #[test]
+    fn elements_respects_stride() {
+        let s = EngineState {
+            current: vec![0.0; 12],
+            stride: 3,
+            ..Default::default()
+        };
+        assert_eq!(s.elements(), 4);
+    }
+}

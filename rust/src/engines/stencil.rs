@@ -1,0 +1,226 @@
+//! The `StencilEngine` / `ImageEngine` (paper §6.4, Listing 17).
+//!
+//! "The required processing is very similar to the MultiCoreEngine
+//! except that images are often put through a sequence of operations and
+//! there is also a need to double buffer the data objects. Thus,
+//! assuming a stream of input images, we need to create a sequence of
+//! processing stages."
+//!
+//! A `StencilEngine` applies **one** operation (greyscale, convolution …)
+//! per image object and forwards it; several engines chain into a
+//! pipeline. The image object carries a double buffer (`current` /
+//! `next` of its [`EngineState`]); `update_image_index` flips buffers so
+//! the downstream engine reads this engine's output.
+
+use crate::csp::channel::{In, Out};
+use crate::csp::error::Result;
+use crate::csp::process::CSProcess;
+use crate::data::message::Message;
+use crate::logging::{LogKind, LogSink};
+
+use super::state::{CalcCtx, CalcFn, PartitionFn, StateAccessor};
+
+pub struct StencilEngine {
+    pub input: In<Message>,
+    pub output: Out<Message>,
+    pub nodes: usize,
+    pub accessor: StateAccessor,
+    /// The `functionMethod` / `convolutionMethod`: computes the node's
+    /// rows of the output image from the full input image.
+    pub operation: CalcFn,
+    pub partition_method: Option<PartitionFn>,
+    /// Flip the double buffer after the pass (default: swap) — the
+    /// paper's `updateImageIndexMethod`.
+    pub flip_buffers: bool,
+    pub log: LogSink,
+    pub tag: String,
+}
+
+impl StencilEngine {
+    pub fn new(
+        input: In<Message>,
+        output: Out<Message>,
+        nodes: usize,
+        accessor: StateAccessor,
+        operation: CalcFn,
+    ) -> Self {
+        assert!(nodes >= 1);
+        Self {
+            input,
+            output,
+            nodes,
+            accessor,
+            operation,
+            partition_method: None,
+            flip_buffers: true,
+            log: LogSink::off(),
+            tag: "StencilEngine".to_string(),
+        }
+    }
+
+    pub fn with_partition_method(mut self, f: PartitionFn) -> Self {
+        self.partition_method = Some(f);
+        self
+    }
+
+    pub fn with_flip(mut self, flip: bool) -> Self {
+        self.flip_buffers = flip;
+        self
+    }
+
+    pub fn with_tag(mut self, tag: &str) -> Self {
+        self.tag = tag.to_string();
+        self
+    }
+
+    pub fn with_log(mut self, log: LogSink) -> Self {
+        self.log = log;
+        self
+    }
+
+    /// One pass over the image held in `state`.
+    fn pass(&self, state: &mut super::state::EngineState) -> Result<()> {
+        if state.next.len() != state.current.len() {
+            state.next = vec![0.0; state.current.len()];
+        }
+        let parts = match self.partition_method {
+            Some(f) => f(state, self.nodes),
+            None => state.equal_partitions(self.nodes),
+        };
+        let stride = state.stride.max(1);
+        let ctx = CalcCtx {
+            consts: &state.consts,
+            const_dims: &state.const_dims,
+            current: &state.current,
+            meta: &state.meta,
+            stride,
+            iteration: 0,
+        };
+
+        let mut slices: Vec<&mut [f64]> = Vec::with_capacity(parts.len());
+        let mut rest: &mut [f64] = &mut state.next;
+        let mut consumed = 0usize;
+        for r in &parts {
+            let begin = r.start * stride - consumed;
+            let len = (r.end - r.start) * stride;
+            let (_skip, tail) = rest.split_at_mut(begin);
+            let (mine, tail) = tail.split_at_mut(len);
+            slices.push(mine);
+            consumed = r.end * stride;
+            rest = tail;
+        }
+
+        if self.nodes == 1 {
+            (self.operation)(&ctx, parts[0].clone(), slices.pop().unwrap())?;
+        } else {
+            let op = &self.operation;
+            let results: Vec<Result<()>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = parts
+                    .iter()
+                    .cloned()
+                    .zip(slices)
+                    .map(|(range, out)| {
+                        let ctx_ref = &ctx;
+                        scope.spawn(move || op(ctx_ref, range, out))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for r in results {
+                r?;
+            }
+        }
+
+        if self.flip_buffers {
+            state.swap_buffers();
+        }
+        Ok(())
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        self.log.log(&self.tag, "stencil", LogKind::Start, None);
+        loop {
+            match self.input.read()? {
+                Message::Data(mut obj) => {
+                    self.log.log(&self.tag, "stencil", LogKind::Input, Some(obj.as_ref()));
+                    {
+                        let state = (self.accessor)(obj.as_mut())?;
+                        self.pass(state)?;
+                    }
+                    self.log.log(&self.tag, "stencil", LogKind::Output, Some(obj.as_ref()));
+                    self.output.write(Message::Data(obj))?;
+                }
+                Message::Terminator(t) => {
+                    self.log.log(&self.tag, "stencil", LogKind::End, None);
+                    self.output.write(Message::Terminator(t))?;
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+impl CSProcess for StencilEngine {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            self.input.poison();
+            self.output.poison();
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("{}(x{})", self.tag, self.nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engines::state::EngineState;
+    use std::sync::Arc;
+
+    #[test]
+    fn pass_applies_operation_and_flips() {
+        let op: CalcFn = Arc::new(|ctx, range, out| {
+            for (k, i) in range.clone().enumerate() {
+                out[k] = ctx.current[i] * 10.0;
+            }
+            Ok(())
+        });
+        let mut state = EngineState {
+            current: vec![1.0, 2.0, 3.0, 4.0],
+            next: vec![0.0; 4],
+            stride: 1,
+            ..Default::default()
+        };
+        let (_o, i) = crate::csp::channel::channel();
+        let (o2, _i2) = crate::csp::channel::channel();
+        let eng = StencilEngine::new(i, o2, 2, |_o| unreachable!(), op);
+        eng.pass(&mut state).unwrap();
+        assert_eq!(state.current, vec![10.0, 20.0, 30.0, 40.0]);
+    }
+
+    #[test]
+    fn no_flip_leaves_result_in_next() {
+        let op: CalcFn = Arc::new(|ctx, range, out| {
+            for (k, i) in range.clone().enumerate() {
+                out[k] = ctx.current[i] + 1.0;
+            }
+            Ok(())
+        });
+        let mut state = EngineState {
+            current: vec![5.0; 3],
+            next: vec![0.0; 3],
+            stride: 1,
+            ..Default::default()
+        };
+        let (_o, i) = crate::csp::channel::channel();
+        let (o2, _i2) = crate::csp::channel::channel();
+        let eng = StencilEngine::new(i, o2, 1, |_o| unreachable!(), op).with_flip(false);
+        eng.pass(&mut state).unwrap();
+        assert_eq!(state.current, vec![5.0; 3]);
+        assert_eq!(state.next, vec![6.0; 3]);
+    }
+}

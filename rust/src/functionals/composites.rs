@@ -1,0 +1,143 @@
+//! Composites (paper §5.3): "process networks that are either a
+//! pipeline of groups or a group of pipelines … characterized by the
+//! number of workers in each group and the number of pipeline stages."
+//!
+//! §9.2 (and CSPm Definition 7) prove the two shapes equivalent in
+//! behaviour; §6.1.2 measures their differing performance. Both builders
+//! here take a single upstream input end and a single downstream output
+//! end and expand to `stages × workers` Worker processes.
+
+use crate::csp::channel::{named_channel, In, Out};
+use crate::csp::process::CSProcess;
+use crate::data::message::Message;
+use crate::logging::LogSink;
+use crate::processes::spreaders::OneFanAny;
+use crate::processes::reducers::AnyFanOne;
+
+use super::groups::{AnyGroupAny, GroupOptions};
+use super::pipelines::{OnePipelineOne, StageSpec};
+
+/// A group (parallel set) of `pipes` pipelines, each with the given
+/// stages. Input objects are shared on an any-end: the first free
+/// pipeline takes the next object.
+pub struct GroupOfPipelines;
+
+impl GroupOfPipelines {
+    /// `input` must be an any-end shared by `pipes` first-stage workers;
+    /// the caller's upstream spreader must therefore send `pipes`
+    /// terminators (e.g. `OneFanAny { destinations: pipes }`).
+    pub fn build(
+        input: In<Message>,
+        output: Out<Message>,
+        pipes: usize,
+        stages: &[StageSpec],
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
+        let mut procs = Vec::new();
+        for p in 0..pipes {
+            procs.extend(OnePipelineOne::build(
+                input.clone(),
+                output.clone(),
+                stages,
+                p,
+                log.clone(),
+            ));
+        }
+        procs
+    }
+
+    /// Terminators each downstream reducer should expect from this block.
+    pub fn terminators_out(pipes: usize) -> usize {
+        pipes
+    }
+}
+
+/// A pipeline of groups: each stage is a group of `workers` Workers;
+/// stages are connected by internal any-channels via fan connectors so
+/// any free worker of stage *s+1* takes the next object from stage *s*.
+pub struct PipelineOfGroups;
+
+impl PipelineOfGroups {
+    pub fn build(
+        input: In<Message>,
+        output: Out<Message>,
+        workers: usize,
+        stages: &[StageSpec],
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
+        assert!(!stages.is_empty());
+        let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
+        let mut upstream = input;
+        for (s, spec) in stages.iter().enumerate() {
+            let is_last = s + 1 == stages.len();
+            // Stage workers all share `upstream`; they write to a fresh
+            // shared channel (or the final output).
+            let (stage_out, stage_in) = if is_last {
+                (output.clone(), None)
+            } else {
+                let (o, i) = named_channel::<Message>(&format!("pog.stage{s}"));
+                (o, Some(i))
+            };
+            let opts = GroupOptions::new(&spec.function)
+                .modifier(spec.modifier.clone())
+                .log(log.clone(), &spec.function);
+            let opts = match &spec.local {
+                Some(l) => opts.local(l.clone()),
+                None => opts,
+            };
+            // Each worker emits one terminator; the next stage's workers
+            // each consume exactly one, so counts line up stage to stage
+            // as long as every stage has the same worker count.
+            procs.extend(AnyGroupAny::build(upstream, stage_out, workers, &opts));
+            match stage_in {
+                Some(i) => upstream = i,
+                None => break,
+            }
+        }
+        procs
+    }
+
+    /// Terminators the downstream reducer should expect.
+    pub fn terminators_out(workers: usize) -> usize {
+        workers
+    }
+}
+
+/// Convenience: wrap a composite between a `OneFanAny` spreader and an
+/// `AnyFanOne` reducer so it presents one-in/one-out like a plain
+/// functional. Returns the processes.
+pub struct FramedComposite;
+
+impl FramedComposite {
+    pub fn group_of_pipelines(
+        input: In<Message>,
+        output: Out<Message>,
+        pipes: usize,
+        stages: &[StageSpec],
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
+        let (fan_out, fan_in) = named_channel::<Message>("gop.fan");
+        let (red_out, red_in) = named_channel::<Message>("gop.reduce");
+        let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
+        procs.push(Box::new(OneFanAny::new(input, fan_out, pipes)));
+        procs.extend(GroupOfPipelines::build(fan_in, red_out, pipes, stages, log));
+        procs.push(Box::new(AnyFanOne::new(red_in, output, pipes)));
+        procs
+    }
+
+    pub fn pipeline_of_groups(
+        input: In<Message>,
+        output: Out<Message>,
+        workers: usize,
+        stages: &[StageSpec],
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
+        let (fan_out, fan_in) = named_channel::<Message>("pog.fan");
+        let (red_out, red_in) = named_channel::<Message>("pog.reduce");
+        let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
+        procs.push(Box::new(OneFanAny::new(input, fan_out, workers)));
+        procs.extend(PipelineOfGroups::build(fan_in, red_out, workers, stages, log));
+        procs.push(Box::new(AnyFanOne::new(red_in, output, workers)));
+        procs
+    }
+}

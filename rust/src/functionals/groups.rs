@@ -1,0 +1,216 @@
+//! Groups: "the capability associated with a parallel-for statement by
+//! creating a parallel of Worker processes … typically used in data
+//! parallel applications where the same algorithm is applied to many
+//! instances of the same data" (§5.1).
+//!
+//! The type names encode the channel connections: `AnyGroupAny` shares
+//! an any-end on both sides, `ListGroupList` gives each worker its own
+//! indexed channel pair, etc. `ListGroupCollect` is a parallel of
+//! `Collect` processes.
+
+use crate::csp::barrier::Barrier;
+use crate::csp::channel::{In, Out};
+use crate::csp::process::CSProcess;
+use crate::data::details::{LocalDetails, ResultDetails};
+use crate::data::object::Params;
+use crate::logging::LogSink;
+use crate::processes::{Collect, Worker};
+
+/// Options shared by all worker groups.
+#[derive(Clone)]
+pub struct GroupOptions {
+    pub function: String,
+    pub modifier: Params,
+    /// Per-worker modifiers override `modifier` when non-empty (the
+    /// paper's `modifier:[[gWorkers], …]` per-worker parameter lists).
+    pub per_worker_modifier: Vec<Params>,
+    pub local: Option<LocalDetails>,
+    pub out_data: bool,
+    /// Create a group-wide BSP barrier (paper §4.4 / §5.3).
+    pub synchronised: bool,
+    pub log: LogSink,
+    pub log_phase: String,
+}
+
+impl GroupOptions {
+    pub fn new(function: &str) -> Self {
+        Self {
+            function: function.to_string(),
+            modifier: Params::empty(),
+            per_worker_modifier: Vec::new(),
+            local: None,
+            out_data: true,
+            synchronised: false,
+            log: LogSink::off(),
+            log_phase: String::new(),
+        }
+    }
+
+    pub fn modifier(mut self, p: Params) -> Self {
+        self.modifier = p;
+        self
+    }
+
+    pub fn per_worker_modifier(mut self, ps: Vec<Params>) -> Self {
+        self.per_worker_modifier = ps;
+        self
+    }
+
+    pub fn local(mut self, l: LocalDetails) -> Self {
+        self.local = Some(l);
+        self
+    }
+
+    pub fn out_data(mut self, b: bool) -> Self {
+        self.out_data = b;
+        self
+    }
+
+    pub fn synchronised(mut self, b: bool) -> Self {
+        self.synchronised = b;
+        self
+    }
+
+    pub fn log(mut self, sink: LogSink, phase: &str) -> Self {
+        self.log = sink;
+        self.log_phase = phase.to_string();
+        self
+    }
+
+    fn worker(&self, i: usize, input: In<crate::data::Message>, output: Out<crate::data::Message>, barrier: Option<Barrier>) -> Worker {
+        let modifier = self
+            .per_worker_modifier
+            .get(i)
+            .cloned()
+            .unwrap_or_else(|| self.modifier.clone());
+        let mut w = Worker::new(input, output, &self.function)
+            .with_modifier(modifier)
+            .with_out_data(self.out_data)
+            .with_index(i)
+            .with_log(self.log.clone(), &self.log_phase);
+        if let Some(l) = &self.local {
+            w = w.with_local(l.clone());
+        }
+        if let Some(b) = barrier {
+            w = w.with_barrier(b);
+        }
+        w
+    }
+
+    fn barrier(&self, workers: usize) -> Option<Barrier> {
+        if self.synchronised {
+            Some(Barrier::new(workers))
+        } else {
+            None
+        }
+    }
+}
+
+/// `workers` Workers all sharing one any-input and one any-output end.
+pub struct AnyGroupAny;
+
+impl AnyGroupAny {
+    pub fn build(
+        input: In<crate::data::Message>,
+        output: Out<crate::data::Message>,
+        workers: usize,
+        opts: &GroupOptions,
+    ) -> Vec<Box<dyn CSProcess>> {
+        let barrier = opts.barrier(workers);
+        (0..workers)
+            .map(|i| {
+                Box::new(opts.worker(i, input.clone(), output.clone(), barrier.clone()))
+                    as Box<dyn CSProcess>
+            })
+            .collect()
+    }
+}
+
+/// Shared any-input, per-worker output channels.
+pub struct AnyGroupList;
+
+impl AnyGroupList {
+    pub fn build(
+        input: In<crate::data::Message>,
+        outputs: Vec<Out<crate::data::Message>>,
+        opts: &GroupOptions,
+    ) -> Vec<Box<dyn CSProcess>> {
+        let barrier = opts.barrier(outputs.len());
+        outputs
+            .into_iter()
+            .enumerate()
+            .map(|(i, out)| {
+                Box::new(opts.worker(i, input.clone(), out, barrier.clone())) as Box<dyn CSProcess>
+            })
+            .collect()
+    }
+}
+
+/// Per-worker input channels, shared any-output.
+pub struct ListGroupAny;
+
+impl ListGroupAny {
+    pub fn build(
+        inputs: Vec<In<crate::data::Message>>,
+        output: Out<crate::data::Message>,
+        opts: &GroupOptions,
+    ) -> Vec<Box<dyn CSProcess>> {
+        let barrier = opts.barrier(inputs.len());
+        inputs
+            .into_iter()
+            .enumerate()
+            .map(|(i, inp)| {
+                Box::new(opts.worker(i, inp, output.clone(), barrier.clone())) as Box<dyn CSProcess>
+            })
+            .collect()
+    }
+}
+
+/// Per-worker input and output channels (index-aligned).
+pub struct ListGroupList;
+
+impl ListGroupList {
+    pub fn build(
+        inputs: Vec<In<crate::data::Message>>,
+        outputs: Vec<Out<crate::data::Message>>,
+        opts: &GroupOptions,
+    ) -> Vec<Box<dyn CSProcess>> {
+        assert_eq!(inputs.len(), outputs.len(), "ListGroupList arity mismatch");
+        let barrier = opts.barrier(inputs.len());
+        inputs
+            .into_iter()
+            .zip(outputs)
+            .enumerate()
+            .map(|(i, (inp, out))| {
+                Box::new(opts.worker(i, inp, out, barrier.clone())) as Box<dyn CSProcess>
+            })
+            .collect()
+    }
+}
+
+/// A parallel of `Collect` processes, one per input channel, each with
+/// its own `ResultDetails` ("a group ListGroupCollect which contains a
+/// parallel of Collect processes", §5.1).
+pub struct ListGroupCollect;
+
+impl ListGroupCollect {
+    pub fn build(
+        inputs: Vec<In<crate::data::Message>>,
+        details: Vec<ResultDetails>,
+        result_out: Option<std::sync::mpsc::Sender<Box<dyn crate::data::DataObject>>>,
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
+        assert_eq!(inputs.len(), details.len(), "ListGroupCollect arity mismatch");
+        inputs
+            .into_iter()
+            .zip(details)
+            .map(|(inp, d)| {
+                let mut c = Collect::new(d, inp).with_log(log.clone(), "collect");
+                if let Some(tx) = &result_out {
+                    c = c.with_result_out(tx.clone());
+                }
+                Box::new(c) as Box<dyn CSProcess>
+            })
+            .collect()
+    }
+}

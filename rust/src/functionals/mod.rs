@@ -1,0 +1,16 @@
+//! Higher-level functionals (paper §5): **groups** (a parallel-for of
+//! `Worker` processes), **pipelines** (task-parallel stages) and
+//! **composites** (pipelines of groups / groups of pipelines).
+//!
+//! These are process *builders*: each produces the `Vec<Box<dyn
+//! CSProcess>>` for its sub-network, with all internal channels created
+//! automatically ("All the internal communication channels are created
+//! automatically", §5.2) — the user never declares a channel.
+
+pub mod groups;
+pub mod pipelines;
+pub mod composites;
+
+pub use composites::{GroupOfPipelines, PipelineOfGroups};
+pub use groups::{AnyGroupAny, AnyGroupList, ListGroupAny, ListGroupCollect, ListGroupList};
+pub use pipelines::{OnePipelineCollect, OnePipelineOne, StageSpec};

@@ -1,0 +1,113 @@
+//! Pipelines: task-parallel stages (paper §5.2). "Pipelines always
+//! process a single input channel and a single output channel and must
+//! always have at least two stages. All the internal communication
+//! channels are created automatically."
+
+use crate::csp::channel::{named_channel, In, Out};
+use crate::csp::process::CSProcess;
+use crate::data::details::{LocalDetails, ResultDetails};
+use crate::data::message::Message;
+use crate::data::object::Params;
+use crate::logging::LogSink;
+use crate::processes::{Collect, Worker};
+
+/// One pipeline stage: a user function plus its options.
+#[derive(Clone)]
+pub struct StageSpec {
+    pub function: String,
+    pub modifier: Params,
+    pub local: Option<LocalDetails>,
+}
+
+impl StageSpec {
+    pub fn new(function: &str) -> Self {
+        Self {
+            function: function.to_string(),
+            modifier: Params::empty(),
+            local: None,
+        }
+    }
+
+    pub fn modifier(mut self, p: Params) -> Self {
+        self.modifier = p;
+        self
+    }
+
+    pub fn local(mut self, l: LocalDetails) -> Self {
+        self.local = Some(l);
+        self
+    }
+}
+
+/// Pipeline of Workers with one input and one output channel.
+pub struct OnePipelineOne;
+
+impl OnePipelineOne {
+    pub fn build(
+        input: In<Message>,
+        output: Out<Message>,
+        stages: &[StageSpec],
+        pipe_index: usize,
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
+        assert!(
+            stages.len() >= 2,
+            "pipelines must always have at least two stages (paper §5.2)"
+        );
+        let mut procs: Vec<Box<dyn CSProcess>> = Vec::with_capacity(stages.len());
+        let mut upstream = input;
+        for (s, spec) in stages.iter().enumerate() {
+            let is_last = s + 1 == stages.len();
+            let (next_out, next_in) = if is_last {
+                (None, None)
+            } else {
+                let (o, i) = named_channel::<Message>(&format!("pipe{pipe_index}.stage{s}"));
+                (Some(o), Some(i))
+            };
+            let out = match next_out {
+                Some(o) => o,
+                None => output.clone(),
+            };
+            let mut w = Worker::new(upstream, out, &spec.function)
+                .with_modifier(spec.modifier.clone())
+                .with_index(pipe_index * 100 + s)
+                .with_log(log.clone(), &spec.function);
+            if let Some(l) = &spec.local {
+                w = w.with_local(l.clone());
+            }
+            procs.push(Box::new(w));
+            if let Some(i) = next_in {
+                upstream = i;
+            } else {
+                break;
+            }
+        }
+        procs
+    }
+}
+
+/// Pipeline whose final stage is a `Collect` (paper §5.2
+/// `OnePipelineCollect`).
+pub struct OnePipelineCollect;
+
+impl OnePipelineCollect {
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        input: In<Message>,
+        stages: &[StageSpec],
+        result: ResultDetails,
+        result_out: Option<std::sync::mpsc::Sender<Box<dyn crate::data::DataObject>>>,
+        pipe_index: usize,
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
+        assert!(!stages.is_empty(), "OnePipelineCollect needs at least one worker stage");
+        let (tail_out, tail_in) = named_channel::<Message>(&format!("pipe{pipe_index}.tail"));
+        let mut procs = OnePipelineOne::build(input, tail_out, stages, pipe_index, log.clone());
+        let mut c = Collect::new(result, tail_in).with_log(log, "collect");
+        if let Some(tx) = result_out {
+            c = c.with_result_out(tx);
+        }
+        procs.push(Box::new(c));
+        procs
+    }
+}

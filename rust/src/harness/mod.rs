@@ -1,0 +1,26 @@
+//! Experiment harness: wall-clock sweeps, speedup/efficiency tables in
+//! the paper's format, and markdown rendering for EXPERIMENTS.md.
+
+pub mod tables;
+
+pub use tables::{EffTable, Row};
+
+use std::time::Instant;
+
+/// Time a closure (seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Median-of-k timing for noisy environments.
+pub fn time_median<T>(k: usize, mut f: impl FnMut() -> T) -> f64 {
+    let mut times = Vec::with_capacity(k);
+    for _ in 0..k {
+        let t0 = Instant::now();
+        let _ = f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    crate::util::stats::median_of(&times)
+}

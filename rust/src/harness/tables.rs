@@ -1,0 +1,127 @@
+//! Speedup/efficiency tables in the paper's layout (e.g. Table 1:
+//! columns per problem size, rows per process count).
+
+/// One measured cell: runtime for a (processes, problem) pair.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub processes: usize,
+    /// runtime per problem column, seconds.
+    pub runtimes: Vec<f64>,
+}
+
+/// A whole table: sequential baselines plus parallel rows.
+#[derive(Clone, Debug)]
+pub struct EffTable {
+    pub title: String,
+    /// Column labels, e.g. "1024", "2048", "4096".
+    pub columns: Vec<String>,
+    /// Sequential runtime per column (the Listing-4 baseline).
+    pub sequential: Vec<f64>,
+    pub rows: Vec<Row>,
+}
+
+impl EffTable {
+    pub fn new(title: &str, columns: Vec<String>, sequential: Vec<f64>) -> Self {
+        assert_eq!(columns.len(), sequential.len());
+        Self {
+            title: title.to_string(),
+            columns,
+            sequential,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, processes: usize, runtimes: Vec<f64>) {
+        assert_eq!(runtimes.len(), self.columns.len());
+        self.rows.push(Row {
+            processes,
+            runtimes,
+        });
+    }
+
+    pub fn speedup(&self, row: &Row, col: usize) -> f64 {
+        self.sequential[col] / row.runtimes[col].max(1e-12)
+    }
+
+    /// Efficiency in percent, as the paper reports (speedup / processes).
+    pub fn efficiency(&self, row: &Row, col: usize) -> f64 {
+        100.0 * self.speedup(row, col) / row.processes.max(1) as f64
+    }
+
+    /// Render in the paper's SpeedUp/Efficiency layout.
+    pub fn render(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s.push_str("| Processes |");
+        for c in &self.columns {
+            s.push_str(&format!(" {c} SpeedUp | {c} Eff% |"));
+        }
+        s.push('\n');
+        s.push_str("|---|");
+        for _ in &self.columns {
+            s.push_str("---|---|");
+        }
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&format!("| {} |", row.processes));
+            for col in 0..self.columns.len() {
+                s.push_str(&format!(
+                    " {:.2} | {:.2} |",
+                    self.speedup(row, col),
+                    self.efficiency(row, col)
+                ));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Raw-runtime render (the paper's figures plot runtimes).
+    pub fn render_runtimes(&self) -> String {
+        let mut s = format!("### {} — runtimes (s)\n\n| Processes |", self.title);
+        for c in &self.columns {
+            s.push_str(&format!(" {c} |"));
+        }
+        s.push_str("\n|---|");
+        for _ in &self.columns {
+            s.push_str("---|");
+        }
+        s.push_str("\n| seq |");
+        for t in &self.sequential {
+            s.push_str(&format!(" {t:.4} |"));
+        }
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&format!("| {} |", row.processes));
+            for t in &row.runtimes {
+                s.push_str(&format!(" {t:.4} |"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_and_efficiency() {
+        let mut t = EffTable::new("t", vec!["a".into()], vec![10.0]);
+        t.push(2, vec![5.0]);
+        let row = &t.rows[0];
+        assert!((t.speedup(row, 0) - 2.0).abs() < 1e-9);
+        assert!((t.efficiency(row, 0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let mut t = EffTable::new("Monte Carlo", vec!["1024".into()], vec![1.0]);
+        t.push(4, vec![0.5]);
+        let s = t.render();
+        assert!(s.contains("Monte Carlo"));
+        assert!(s.contains("| 4 |"));
+        let r = t.render_runtimes();
+        assert!(r.contains("seq"));
+    }
+}

@@ -1,0 +1,55 @@
+//! # gpp — Groovy Parallel Patterns, reproduced in Rust
+//!
+//! A process-oriented parallelization library after Kerridge & Urquhart,
+//! *"Groovy Parallel Patterns – A Process oriented Parallelization
+//! Library"* (2021). The library provides a collection of CSP-style
+//! processes — **terminals** (`Emit`, `Collect`), **functionals**
+//! (`Worker`, groups, pipelines, composites, shared-data engines) and
+//! **connectors** (spreaders and reducers) — that plug together into
+//! deadlock-free dataflow networks. A declarative [`builder`] infers and
+//! wires every channel (the paper's `gppBuilder` DSL), [`logging`] is
+//! integrated from the outset, [`verify`] embeds a CSP refinement checker
+//! standing in for CSPm/FDR4, [`net`] runs the same process bodies over
+//! TCP for cluster execution, and [`sim`] re-creates the paper's
+//! 4-core/4-hyperthread testbed as a discrete-event simulation so every
+//! table and figure of the evaluation can be regenerated on any host.
+//!
+//! Numeric hot loops (Mandelbrot, Jacobi, N-body, stencil, Monte-Carlo)
+//! are AOT-compiled from JAX/Pallas to HLO at build time and executed
+//! from worker processes through [`runtime`] (PJRT CPU client); pure-Rust
+//! implementations of the same kernels serve as the always-available
+//! baseline backend.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gpp::patterns::DataParallelCollect;
+//! use gpp::workloads::montecarlo::{PiData, PiResults};
+//!
+//! let results = PiResults::default();
+//! let out = DataParallelCollect::new(
+//!     PiData::emit_details(1024, 100_000),
+//!     PiResults::result_details(),
+//!     4,                 // workers
+//!     "getWithin",       // function, by exported name — the paper's DSL
+//! ).run_network().unwrap();
+//! ```
+
+pub mod util;
+pub mod csp;
+pub mod data;
+pub mod processes;
+pub mod functionals;
+pub mod patterns;
+pub mod engines;
+pub mod builder;
+pub mod logging;
+pub mod verify;
+pub mod net;
+pub mod sim;
+pub mod runtime;
+pub mod workloads;
+pub mod harness;
+
+pub use csp::error::{GppError, Result};
+pub use data::object::{DataObject, Params, ReturnCode, Value};

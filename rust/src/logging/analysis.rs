@@ -1,0 +1,137 @@
+//! Log analysis: turn raw records into per-phase timing so bottlenecks
+//! can be identified (paper §8.1 — finds concordance stage 1 consumes
+//! ~20% of total runtime, motivating its parallelisation).
+
+use std::collections::BTreeMap;
+
+use super::record::{LogKind, LogRecord};
+
+/// Per-phase summary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseReport {
+    pub phase: String,
+    /// Number of objects that entered the phase.
+    pub inputs: usize,
+    pub outputs: usize,
+    /// Busy time: sum over tags of (last event − first event).
+    pub span_us: u64,
+    /// Share of the whole run's span.
+    pub share: f64,
+}
+
+/// Analyse records into per-phase reports, ordered by descending span.
+pub fn analyse(records: &[LogRecord]) -> Vec<PhaseReport> {
+    if records.is_empty() {
+        return Vec::new();
+    }
+    let t0 = records.iter().map(|r| r.time_us).min().unwrap();
+    let t1 = records.iter().map(|r| r.time_us).max().unwrap();
+    let total = (t1 - t0).max(1);
+
+    #[derive(Default)]
+    struct Acc {
+        inputs: usize,
+        outputs: usize,
+        first: u64,
+        last: u64,
+        seen: bool,
+    }
+
+    let mut phases: BTreeMap<String, Acc> = BTreeMap::new();
+    for r in records {
+        let a = phases.entry(r.phase.clone()).or_default();
+        match r.kind {
+            LogKind::Input => a.inputs += 1,
+            LogKind::Output => a.outputs += 1,
+            _ => {}
+        }
+        if !a.seen {
+            a.first = r.time_us;
+            a.last = r.time_us;
+            a.seen = true;
+        } else {
+            a.first = a.first.min(r.time_us);
+            a.last = a.last.max(r.time_us);
+        }
+    }
+
+    let mut out: Vec<PhaseReport> = phases
+        .into_iter()
+        .map(|(phase, a)| PhaseReport {
+            phase,
+            inputs: a.inputs,
+            outputs: a.outputs,
+            span_us: a.last - a.first,
+            share: (a.last - a.first) as f64 / total as f64,
+        })
+        .collect();
+    out.sort_by(|a, b| b.span_us.cmp(&a.span_us));
+    out
+}
+
+/// Render reports as an aligned console table.
+pub fn render_report(reports: &[PhaseReport]) -> String {
+    let mut s = String::from(
+        "phase                          inputs  outputs      span(us)   share\n",
+    );
+    for r in reports {
+        s.push_str(&format!(
+            "{:<30} {:>6}  {:>7}  {:>12}  {:>5.1}%\n",
+            r.phase,
+            r.inputs,
+            r.outputs,
+            r.span_us,
+            r.share * 100.0
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(phase: &str, kind: LogKind, t: u64) -> LogRecord {
+        LogRecord {
+            tag: "t".into(),
+            time_us: t,
+            phase: phase.into(),
+            kind,
+            prop: None,
+        }
+    }
+
+    #[test]
+    fn empty_records_empty_report() {
+        assert!(analyse(&[]).is_empty());
+    }
+
+    #[test]
+    fn spans_and_counts() {
+        let records = vec![
+            rec("read", LogKind::Input, 0),
+            rec("read", LogKind::Output, 200),
+            rec("compute", LogKind::Input, 200),
+            rec("compute", LogKind::Input, 300),
+            rec("compute", LogKind::Output, 1000),
+        ];
+        let reports = analyse(&records);
+        assert_eq!(reports[0].phase, "compute");
+        assert_eq!(reports[0].inputs, 2);
+        assert_eq!(reports[0].span_us, 800);
+        assert_eq!(reports[1].phase, "read");
+        assert_eq!(reports[1].span_us, 200);
+        assert!((reports[0].share - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_renders_rows() {
+        let reports = analyse(&[
+            rec("a", LogKind::Input, 0),
+            rec("a", LogKind::Output, 10),
+        ]);
+        let s = render_report(&reports);
+        assert!(s.contains("a"));
+        assert!(s.contains("share"));
+    }
+}

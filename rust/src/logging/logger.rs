@@ -1,0 +1,225 @@
+//! The Logger process and the `LogSink` handle processes log through.
+//!
+//! The paper provides "two versions of each process; first a version
+//! with no logging and secondly, a version into which logging statements
+//! have been inserted" so the unlogged build keeps static-compilation
+//! speed. We get the same property with a cheaper mechanism: `LogSink`
+//! is an `Option`-like handle — when logging is disabled it is `Off` and
+//! every call is a branch on a enum tag that the optimizer hoists; when
+//! enabled, records go down a channel to the Logger process, which
+//! prints them live (the paper's "visual cue") and files them.
+
+use std::sync::{Arc, Mutex};
+
+use super::record::{LogKind, LogRecord};
+use crate::csp::channel::{channel, In, Out};
+use crate::csp::error::Result;
+use crate::csp::process::CSProcess;
+use crate::data::object::{DataObject, Value};
+
+enum SinkInner {
+    Off,
+    On {
+        tx: Out<LogRecord>,
+        /// Property of the input object to log, if any.
+        prop: Option<String>,
+        /// Echo records to stdout as they arrive at the sink (cheap mode
+        /// without a logger process).
+        echo: bool,
+    },
+}
+
+/// Cheap cloneable logging handle held by each process.
+#[derive(Clone)]
+pub struct LogSink {
+    inner: Arc<SinkInner>,
+}
+
+impl LogSink {
+    /// Disabled sink: all calls are no-ops.
+    pub fn off() -> Self {
+        Self {
+            inner: Arc::new(SinkInner::Off),
+        }
+    }
+
+    /// Enabled sink feeding `tx`; optionally logging object property `prop`.
+    pub fn on(tx: Out<LogRecord>, prop: Option<&str>) -> Self {
+        Self {
+            inner: Arc::new(SinkInner::On {
+                tx,
+                prop: prop.map(|s| s.to_string()),
+                echo: false,
+            }),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        matches!(&*self.inner, SinkInner::On { .. })
+    }
+
+    /// Record an event, extracting the configured property from `obj`.
+    pub fn log(&self, tag: &str, phase: &str, kind: LogKind, obj: Option<&dyn DataObject>) {
+        if let SinkInner::On { tx, prop, echo } = &*self.inner {
+            let prop_val: Option<Value> = match (prop, obj) {
+                (Some(p), Some(o)) => o.log_prop(p),
+                _ => None,
+            };
+            let rec = LogRecord::now(tag, phase, kind, prop_val);
+            if *echo {
+                println!("{}", rec.render());
+            }
+            // A full logger never blocks the network for long: the Logger
+            // process reads eagerly. Ignore poison during teardown.
+            let _ = tx.write(rec);
+        }
+    }
+
+    pub fn marker(&self, tag: &str, phase: &str) {
+        self.log(tag, phase, LogKind::Marker, None);
+    }
+}
+
+/// The Logger process: reads records until its channel is poisoned or a
+/// `Close` marker arrives, printing each and retaining all for analysis.
+pub struct Logger {
+    rx: In<LogRecord>,
+    records: Arc<Mutex<Vec<LogRecord>>>,
+    /// Echo to console while running (the paper prints live).
+    pub echo: bool,
+    /// Optional output file path.
+    pub file: Option<String>,
+}
+
+/// Phase name that closes the logger.
+pub const CLOSE_PHASE: &str = "__logger_close__";
+
+impl Logger {
+    /// Create a logger; returns (process, sender, shared record store).
+    pub fn new(echo: bool, file: Option<String>) -> (Self, Out<LogRecord>, Arc<Mutex<Vec<LogRecord>>>) {
+        let (tx, rx) = channel();
+        let records = Arc::new(Mutex::new(Vec::new()));
+        (
+            Self {
+                rx,
+                records: records.clone(),
+                echo,
+                file,
+            },
+            tx,
+            records,
+        )
+    }
+}
+
+impl CSProcess for Logger {
+    fn run(&mut self) -> Result<()> {
+        let mut out_lines = Vec::new();
+        loop {
+            match self.rx.read() {
+                Ok(rec) => {
+                    if rec.phase == CLOSE_PHASE {
+                        break;
+                    }
+                    if self.echo {
+                        println!("{}", rec.render());
+                    }
+                    out_lines.push(rec.render());
+                    self.records.lock().unwrap().push(rec);
+                }
+                // Poison during teardown simply closes the logger.
+                Err(_) => break,
+            }
+        }
+        if let Some(path) = &self.file {
+            std::fs::write(path, out_lines.join("\n") + "\n")?;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        "Logger".to_string()
+    }
+}
+
+/// Send the close marker (after the network has terminated).
+pub fn close_logger(tx: &Out<LogRecord>) {
+    let _ = tx.write(LogRecord::now("logger", CLOSE_PHASE, LogKind::Marker, None));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::process::{run_parallel, ProcessFn};
+
+    #[test]
+    fn off_sink_is_noop() {
+        let sink = LogSink::off();
+        assert!(!sink.enabled());
+        sink.marker("t", "phase"); // must not panic or block
+    }
+
+    #[test]
+    fn logger_collects_records() {
+        let (logger, tx, records) = Logger::new(false, None);
+        let sink = LogSink::on(tx.clone(), None);
+        let writer = ProcessFn::boxed("w", move || {
+            for i in 0..10 {
+                sink.marker("w", &format!("phase{i}"));
+            }
+            close_logger(&tx);
+            Ok(())
+        });
+        run_parallel(vec![Box::new(logger), writer]).unwrap();
+        let recs = records.lock().unwrap();
+        assert_eq!(recs.len(), 10);
+        assert_eq!(recs[3].phase, "phase3");
+    }
+
+    #[test]
+    fn logger_writes_file() {
+        let path = std::env::temp_dir().join(format!("gpp_log_{}.txt", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let (logger, tx, _records) = Logger::new(false, Some(path_s.clone()));
+        let sink = LogSink::on(tx.clone(), None);
+        let writer = ProcessFn::boxed("w", move || {
+            sink.marker("w", "only");
+            close_logger(&tx);
+            Ok(())
+        });
+        run_parallel(vec![Box::new(logger), writer]).unwrap();
+        let contents = std::fs::read_to_string(&path).unwrap();
+        assert!(contents.contains("only"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn sink_extracts_property() {
+        #[derive(Clone, Debug)]
+        struct P {
+            id: i64,
+        }
+        impl P {
+            fn noop(
+                &mut self,
+                _p: &crate::data::object::Params,
+                _a: crate::data::object::Aux,
+            ) -> crate::csp::error::Result<crate::data::object::ReturnCode> {
+                Ok(crate::data::object::ReturnCode::CompletedOk)
+            }
+        }
+        crate::gpp_data_class!(P, "p", { "noop" => noop }, props { "id" => |s| Value::Int(s.id) });
+
+        let (logger, tx, records) = Logger::new(false, None);
+        let sink = LogSink::on(tx.clone(), Some("id"));
+        let writer = ProcessFn::boxed("w", move || {
+            let obj = P { id: 77 };
+            sink.log("w", "ph", LogKind::Input, Some(&obj));
+            close_logger(&tx);
+            Ok(())
+        });
+        run_parallel(vec![Box::new(logger), writer]).unwrap();
+        let recs = records.lock().unwrap();
+        assert_eq!(recs[0].prop, Some(Value::Int(77)));
+    }
+}

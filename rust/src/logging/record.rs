@@ -1,0 +1,91 @@
+//! Log records.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::data::object::Value;
+
+/// What a record marks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogKind {
+    /// Process started its run loop.
+    Start,
+    /// An input object was received by the phase.
+    Input,
+    /// An output object left the phase.
+    Output,
+    /// Phase finished (terminator seen).
+    End,
+    /// Free-form marker.
+    Marker,
+}
+
+/// One log message (paper §8: "an identifying tag together with a time,
+/// the name of the log phase and possibly the value of a property of the
+/// object that is being logged").
+#[derive(Clone, Debug)]
+pub struct LogRecord {
+    /// Identifying tag (process instance, e.g. `Worker[3]`).
+    pub tag: String,
+    /// Wall-clock micros since the epoch.
+    pub time_us: u64,
+    /// User-chosen phase name.
+    pub phase: String,
+    pub kind: LogKind,
+    /// Value of the logged object property, if configured.
+    pub prop: Option<Value>,
+}
+
+impl LogRecord {
+    pub fn now(tag: &str, phase: &str, kind: LogKind, prop: Option<Value>) -> Self {
+        let time_us = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        Self {
+            tag: tag.to_string(),
+            time_us,
+            phase: phase.to_string(),
+            kind,
+            prop,
+        }
+    }
+
+    pub fn marker(phase: &str) -> Self {
+        Self::now("marker", phase, LogKind::Marker, None)
+    }
+
+    /// Console line format, also written to the log file.
+    pub fn render(&self) -> String {
+        let prop = match &self.prop {
+            Some(v) => format!(" prop={v:?}"),
+            None => String::new(),
+        };
+        format!(
+            "[{}] t={}us phase={} kind={:?}{}",
+            self.tag, self.time_us, self.phase, self.kind, prop
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_fields() {
+        let r = LogRecord::now("Worker[2]", "withinOp", LogKind::Input, Some(Value::Int(7)));
+        let s = r.render();
+        assert!(s.contains("Worker[2]"));
+        assert!(s.contains("withinOp"));
+        assert!(s.contains("Input"));
+        assert!(s.contains("Int(7)"));
+    }
+
+    #[test]
+    fn timestamps_monotonic_enough() {
+        let a = LogRecord::marker("a");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = LogRecord::marker("b");
+        assert!(b.time_us >= a.time_us);
+    }
+}

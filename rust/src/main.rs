@@ -1,0 +1,451 @@
+//! `gpp` — the Groovy Parallel Patterns launcher.
+//!
+//! ```text
+//! gpp run <network.gpp>           run a declarative network file
+//! gpp pi [--workers N] …          Monte-Carlo π farm (paper §3)
+//! gpp mandelbrot [--workers N] …  Mandelbrot farm (paper §6.6)
+//! gpp jacobi | nbody | image | goldbach | concordance
+//! gpp cluster-host | cluster-worker  cluster roles (paper §7)
+//! gpp verify [base|gop-pog|all]   run the CSPm/FDR assertions (§4.6, §9)
+//! gpp calibrate                   print this host's workload costs
+//! gpp logdemo                     logged concordance + phase report (§8)
+//! ```
+
+use gpp::builder::parse_network;
+use gpp::data::object::Value;
+use gpp::util::cli::Args;
+use gpp::verify::models::{set_model_n, BaseModel};
+use gpp::verify::laws::GopPogModel;
+
+fn main() {
+    let args = Args::from_env();
+    gpp::workloads::register_all();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "run" => cmd_run(&args),
+        "pi" => cmd_pi(&args),
+        "mandelbrot" => cmd_mandelbrot(&args),
+        "jacobi" => cmd_jacobi(&args),
+        "nbody" => cmd_nbody(&args),
+        "image" => cmd_image(&args),
+        "goldbach" => cmd_goldbach(&args),
+        "concordance" => cmd_concordance(&args),
+        "cluster-host" => cmd_cluster_host(&args),
+        "cluster-worker" => cmd_cluster_worker(&args),
+        "verify" => cmd_verify(&args),
+        "calibrate" => cmd_calibrate(),
+        "logdemo" => cmd_logdemo(&args),
+        _ => {
+            print!("{}", HELP);
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = r#"gpp — Groovy Parallel Patterns (Rust + JAX/Pallas reproduction)
+
+USAGE: gpp <command> [--flags]
+
+COMMANDS
+  run <file>         run a declarative .gpp network file (the DSL)
+  pi                 Monte-Carlo pi farm      [--workers N --instances I --iterations K --backend native|xla]
+  mandelbrot         Mandelbrot farm          [--workers N --width W --height H --max-iter M --out img.ppm]
+  jacobi             Jacobi MultiCoreEngine   [--nodes N --size S --margin E]
+  nbody              N-body MultiCoreEngine   [--nodes N --bodies B --steps T]
+  image              grey+edge StencilEngines [--nodes N --width W --height H]
+  goldbach           Goldbach two-phase net   [--workers G --max-prime P]
+  concordance        GoP concordance          [--groups G --words W --N n]
+  cluster-host       serve Mandelbrot rows    [--addr A --nodes N --width W --height H --max-iter M]
+  cluster-worker     compute rows             [--addr A]
+  verify [which]     run FDR-style assertions: base | gop-pog | all (default all)
+  calibrate          measure per-item workload costs on this host
+  logdemo            logged concordance run + bottleneck report (paper Sec 8)
+"#;
+
+fn fail(e: impl std::fmt::Display) -> i32 {
+    eprintln!("gpp: error: {e}");
+    1
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let Some(path) = args.positional.get(1) else {
+        return fail("run needs a network file");
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => return fail(format!("{path}: {e}")),
+    };
+    match parse_network(&text).and_then(|spec| {
+        spec.validate()?;
+        spec.run()
+    }) {
+        Ok(results) => {
+            println!("network completed with {} collector result(s)", results.len());
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_pi(args: &Args) -> i32 {
+    use gpp::patterns::DataParallelCollect;
+    use gpp::workloads::montecarlo::{PiData, PiResults};
+    let workers = args.usize("workers", 4);
+    let instances = args.u64("instances", 1024) as i64;
+    let iterations = args.u64("iterations", 100_000) as i64;
+    let function = match args.get_or("backend", "native") {
+        "xla" => "getWithinXla",
+        _ => "getWithin",
+    };
+    let t0 = std::time::Instant::now();
+    match DataParallelCollect::new(
+        PiData::emit_details(instances, iterations),
+        PiResults::result_details_verbose(),
+        workers,
+        function,
+    )
+    .run_network()
+    {
+        Ok(_) => {
+            println!("elapsed: {:.3}s ({workers} workers)", t0.elapsed().as_secs_f64());
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_mandelbrot(args: &Args) -> i32 {
+    use gpp::patterns::DataParallelCollect;
+    use gpp::workloads::mandelbrot::{MandelbrotCollect, MandelbrotLine};
+    let workers = args.usize("workers", 4);
+    let width = args.u64("width", 700) as i64;
+    let height = args.u64("height", 400) as i64;
+    let max_iter = args.u64("max-iter", 100) as i64;
+    let delta = args.f64("delta", 3.0 / width as f64);
+    let function = match args.get_or("backend", "native") {
+        "xla" => "computeLineXla",
+        _ => "computeLine",
+    };
+    let mut rd = MandelbrotCollect::result_details(width, height, max_iter);
+    if let Some(out) = args.get("out") {
+        rd.init_data.0.push(Value::Str(out.to_string()));
+    }
+    let t0 = std::time::Instant::now();
+    match DataParallelCollect::new(
+        MandelbrotLine::emit_details(width, height, max_iter, delta),
+        rd,
+        workers,
+        function,
+    )
+    .run_network()
+    {
+        Ok(result) => {
+            println!(
+                "mandelbrot {}x{} checksum {:?} elapsed {:.3}s",
+                width,
+                height,
+                result.log_prop("checksum"),
+                t0.elapsed().as_secs_f64()
+            );
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_jacobi(args: &Args) -> i32 {
+    use gpp::csp::channel::named_channel;
+    use gpp::csp::process::{run_parallel, CSProcess};
+    use gpp::data::message::Message;
+    use gpp::engines::MultiCoreEngine;
+    use gpp::processes::{Collect, Emit};
+    use gpp::workloads::jacobi;
+    let nodes = args.usize("nodes", 4);
+    let size = args.u64("size", 1024) as i64;
+    let margin = args.f64("margin", 1e-10);
+    let (emit_out, eng_in) = named_channel::<Message>("cli.emit");
+    let (eng_out, coll_in) = named_channel::<Message>("cli.eng");
+    let (tx, rx) = std::sync::mpsc::channel();
+    let procs: Vec<Box<dyn CSProcess>> = vec![
+        Box::new(Emit::new(jacobi::JacobiData::emit_details(42, margin, &[size]), emit_out)),
+        Box::new(
+            MultiCoreEngine::new(eng_in, eng_out, nodes, jacobi::accessor(), jacobi::calculation())
+                .with_error_method(jacobi::error_method)
+                .with_iterations(100_000),
+        ),
+        Box::new(Collect::new(jacobi::JacobiResults::result_details(1e-6), coll_in).with_result_out(tx)),
+    ];
+    let t0 = std::time::Instant::now();
+    match run_parallel(procs) {
+        Ok(()) => {
+            let r = rx.try_iter().next().unwrap();
+            println!(
+                "jacobi n={size} nodes={nodes} correct={:?} iterations={:?} elapsed {:.3}s",
+                r.log_prop("allCorrect"),
+                r.log_prop("totalIterations"),
+                t0.elapsed().as_secs_f64()
+            );
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_nbody(args: &Args) -> i32 {
+    use gpp::csp::channel::named_channel;
+    use gpp::csp::process::{run_parallel, CSProcess};
+    use gpp::data::message::Message;
+    use gpp::engines::MultiCoreEngine;
+    use gpp::processes::{Collect, Emit};
+    use gpp::workloads::nbody;
+    let nodes = args.usize("nodes", 4);
+    let bodies = args.u64("bodies", 2048) as i64;
+    let steps = args.usize("steps", 100);
+    let (emit_out, eng_in) = named_channel::<Message>("cli.emit");
+    let (eng_out, coll_in) = named_channel::<Message>("cli.eng");
+    let (tx, rx) = std::sync::mpsc::channel();
+    let procs: Vec<Box<dyn CSProcess>> = vec![
+        Box::new(Emit::new(nbody::NBodyData::emit_details(42, 0.01, &[bodies]), emit_out)),
+        Box::new(
+            MultiCoreEngine::new(eng_in, eng_out, nodes, nbody::accessor(), nbody::calculation())
+                .with_iterations(steps),
+        ),
+        Box::new(Collect::new(nbody::NBodyResult::result_details(), coll_in).with_result_out(tx)),
+    ];
+    let t0 = std::time::Instant::now();
+    match run_parallel(procs) {
+        Ok(()) => {
+            let r = rx.try_iter().next().unwrap();
+            println!(
+                "nbody n={bodies} nodes={nodes} steps={steps} checksum={:?} elapsed {:.3}s",
+                r.log_prop("checksum"),
+                t0.elapsed().as_secs_f64()
+            );
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_image(args: &Args) -> i32 {
+    use gpp::csp::channel::named_channel;
+    use gpp::csp::process::{run_parallel, CSProcess};
+    use gpp::data::message::Message;
+    use gpp::engines::StencilEngine;
+    use gpp::processes::{Collect, Emit};
+    use gpp::workloads::image;
+    let nodes = args.usize("nodes", 4);
+    let width = args.usize("width", 1024) as i64;
+    let height = args.usize("height", 683) as i64;
+    let (emit_out, e1_in) = named_channel::<Message>("cli.emit");
+    let (e1_out, e2_in) = named_channel::<Message>("cli.grey");
+    let (e2_out, coll_in) = named_channel::<Message>("cli.edge");
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (k5, ks) = image::edge_kernel_5x5();
+    let procs: Vec<Box<dyn CSProcess>> = vec![
+        Box::new(Emit::new(image::ImageData::emit_details(7, &[(width, height)]), emit_out)),
+        Box::new(StencilEngine::new(e1_in, e1_out, nodes, image::accessor(), image::greyscale_op()).with_tag("grey")),
+        Box::new(
+            StencilEngine::new(e2_in, e2_out, nodes, image::accessor(), image::convolution_op(k5, ks, 1.0, 0.0))
+                .with_tag("edge"),
+        ),
+        Box::new(Collect::new(image::ImageResult::result_details(), coll_in).with_result_out(tx)),
+    ];
+    let t0 = std::time::Instant::now();
+    match run_parallel(procs) {
+        Ok(()) => {
+            let r = rx.try_iter().next().unwrap();
+            println!(
+                "image {width}x{height} nodes={nodes} checksum={:?} elapsed {:.3}s",
+                r.log_prop("checksum"),
+                t0.elapsed().as_secs_f64()
+            );
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_goldbach(args: &Args) -> i32 {
+    let workers = args.usize("workers", 4);
+    let max_prime = args.u64("max-prime", 50_000) as i64;
+    let t0 = std::time::Instant::now();
+    match gpp::workloads::goldbach::run_network(max_prime, 1, workers) {
+        Ok(r) => {
+            println!(
+                "goldbach maxPrime={max_prime} gWorkers={workers} maxContinuous={} failures={} elapsed {:.3}s",
+                r.max_continuous,
+                r.failures.len(),
+                t0.elapsed().as_secs_f64()
+            );
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_concordance(args: &Args) -> i32 {
+    use gpp::patterns::GroupOfPipelineCollects;
+    use gpp::workloads::concordance::{ConcordanceData, ConcordanceResult};
+    use gpp::workloads::corpus;
+    let groups = args.usize("groups", 2);
+    let words = args.usize("words", 100_000);
+    let n = args.usize("N", 8);
+    let text = match args.get("file") {
+        Some(path) => match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => return fail(format!("{path}: {e}")),
+        },
+        None => corpus::generate(words, 33),
+    };
+    let t0 = std::time::Instant::now();
+    match GroupOfPipelineCollects::new(
+        ConcordanceData::emit_details(&text, n, 2),
+        vec![ConcordanceResult::result_details(); groups],
+        ConcordanceData::stages(),
+        groups,
+    )
+    .run_network()
+    {
+        Ok(results) => {
+            let total: i64 = results
+                .iter()
+                .filter_map(|r| match r.log_prop("totalSequences") {
+                    Some(Value::Int(t)) => Some(t),
+                    _ => None,
+                })
+                .sum();
+            println!(
+                "concordance N={n} groups={groups} sequences={total} elapsed {:.3}s",
+                t0.elapsed().as_secs_f64()
+            );
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_cluster_host(args: &Args) -> i32 {
+    use gpp::net::cluster::{default_config, run_host};
+    let addr = args.get_or("addr", "127.0.0.1:7777").to_string();
+    let nodes = args.usize("nodes", 2);
+    let width = args.u64("width", 5600) as i64;
+    let height = args.u64("height", 3200) as i64;
+    let max_iter = args.u64("max-iter", 1000) as i64;
+    let cores = args.usize("cores", 1);
+    let cfg = default_config(width, height, max_iter, cores);
+    let t0 = std::time::Instant::now();
+    match run_host(&addr, nodes, &cfg) {
+        Ok(c) => {
+            println!(
+                "cluster host: {} rows from {nodes} nodes, checksum {}, elapsed {:.3}s",
+                c.rows_seen,
+                c.checksum(),
+                t0.elapsed().as_secs_f64()
+            );
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_cluster_worker(args: &Args) -> i32 {
+    let addr = args.get_or("addr", "127.0.0.1:7777").to_string();
+    match gpp::net::cluster::run_worker(&addr) {
+        Ok(rows) => {
+            println!("cluster worker: computed {rows} rows");
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_verify(args: &Args) -> i32 {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let mut all_ok = true;
+    if which == "base" || which == "all" {
+        for n in [2i64, 3] {
+            set_model_n(n);
+            let model = BaseModel::new(n);
+            println!("== CSPm Definitions 1–6, N={n} workers ==");
+            match model.check_all() {
+                Ok(results) => {
+                    for (name, r) in results {
+                        let ok = r.holds();
+                        all_ok &= ok;
+                        println!("  {} {}", if ok { "✓" } else { "✗" }, name);
+                        if let gpp::verify::check::CheckResult::Fails { reason, trace } = r {
+                            println!("     {reason}; trace: {trace:?}");
+                        }
+                    }
+                }
+                Err(e) => return fail(e),
+            }
+        }
+    }
+    if which == "gop-pog" || which == "all" {
+        println!("== CSPm Definition 7: GoP ≡ PoG ==");
+        let model = GopPogModel::new();
+        match model.check_equivalence() {
+            Ok(results) => {
+                for (name, r) in results {
+                    let ok = r.holds();
+                    all_ok &= ok;
+                    println!("  {} {}", if ok { "✓" } else { "✗" }, name);
+                }
+            }
+            Err(e) => return fail(e),
+        }
+    }
+    if all_ok {
+        println!("all assertions hold");
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_calibrate() -> i32 {
+    let db = gpp::sim::calibrate::calibrate();
+    println!("{db:#?}");
+    0
+}
+
+fn cmd_logdemo(args: &Args) -> i32 {
+    use gpp::csp::process::CSProcess;
+    use gpp::logging::logger::close_logger;
+    use gpp::logging::{analyse, LogSink, Logger};
+    use gpp::patterns::GroupOfPipelineCollects;
+    use gpp::workloads::concordance::{ConcordanceData, ConcordanceResult};
+    use gpp::workloads::corpus;
+    let words = args.usize("words", 50_000);
+    let text = corpus::generate(words, 5);
+    let (mut logger, tx, records) = Logger::new(false, args.get("log-file").map(String::from));
+    let sink = LogSink::on(tx.clone(), Some("n"));
+    let net = GroupOfPipelineCollects::new(
+        ConcordanceData::emit_details(&text, 6, 2),
+        vec![ConcordanceResult::result_details(); 2],
+        ConcordanceData::stages(),
+        2,
+    )
+    .with_log(sink);
+    let (ctx, rx) = std::sync::mpsc::channel();
+    let procs = net.build(Some(ctx));
+    // The Logger runs beside the network and is closed after it ends.
+    let logger_handle = std::thread::spawn(move || logger.run());
+    let res = gpp::csp::process::run_parallel_named("logdemo", procs);
+    close_logger(&tx);
+    let _ = logger_handle.join();
+    drop(rx);
+    match res {
+        Ok(()) => {
+            let recs = records.lock().unwrap();
+            println!("{} log records", recs.len());
+            let report = analyse(&recs);
+            print!("{}", gpp::logging::analysis::render_report(&report));
+            0
+        }
+        Err(e) => fail(e),
+    }
+}

@@ -1,0 +1,296 @@
+//! Host/worker cluster protocol (paper §7), Client-Server pattern:
+//! a worker (client) requests work; the host (server) responds within
+//! finite time with a work item or a terminator. Loop-free ⇒ deadlock
+//! free (Welch's Client-Server proof). The workload is the paper's
+//! cluster experiment: Mandelbrot at width 5600, escape 1000.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::csp::error::{GppError, Result};
+use crate::util::codec::{from_bytes, to_bytes, Wire};
+use crate::workloads::mandelbrot::{MandelbrotCollect, MandelbrotLine};
+
+use super::frame::{read_frame, write_frame};
+
+/// Host-side experiment configuration, sent to each worker on Hello —
+/// the paper's "definitional object" installed by the node loader.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    pub width: i64,
+    pub height: i64,
+    pub max_iterations: i64,
+    pub pixel_delta: f64,
+    pub x0: f64,
+    pub y0: f64,
+    /// Worker-internal parallelism (cores per workstation).
+    pub cores_per_node: usize,
+}
+
+impl Wire for ClusterConfig {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.width.encode(out);
+        self.height.encode(out);
+        self.max_iterations.encode(out);
+        self.pixel_delta.encode(out);
+        self.x0.encode(out);
+        self.y0.encode(out);
+        self.cores_per_node.encode(out);
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(Self {
+            width: i64::decode(input)?,
+            height: i64::decode(input)?,
+            max_iterations: i64::decode(input)?,
+            pixel_delta: f64::decode(input)?,
+            x0: f64::decode(input)?,
+            y0: f64::decode(input)?,
+            cores_per_node: usize::decode(input)?,
+        })
+    }
+}
+
+const W_HELLO: u8 = 1;
+const W_RESULT: u8 = 2;
+const H_CONFIG: u8 = 10;
+const H_WORK: u8 = 11;
+const H_DONE: u8 = 12;
+
+/// Run the host: serve `height` rows to `nodes` workers, collect the
+/// image, return the collector (with all rows).
+pub fn run_host(addr: &str, nodes: usize, cfg: &ClusterConfig) -> Result<MandelbrotCollect> {
+    let listener = TcpListener::bind(addr)?;
+    let next_row = Arc::new(Mutex::new(0i64));
+    let (tx, rx) = mpsc::channel::<MandelbrotLine>();
+
+    let mut handles = Vec::new();
+    for _ in 0..nodes {
+        let (stream, _) = listener.accept()?;
+        let next_row = next_row.clone();
+        let tx = tx.clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            serve_worker(stream, &cfg, &next_row, &tx)
+        }));
+    }
+    drop(tx);
+
+    let mut collect = MandelbrotCollect {
+        width: cfg.width,
+        height: cfg.height,
+        max_iterations: cfg.max_iterations,
+        rows: vec![Vec::new(); cfg.height as usize],
+        ..Default::default()
+    };
+    for line in rx {
+        collect.rows[line.row as usize] = line.counts;
+        collect.rows_seen += 1;
+    }
+    for h in handles {
+        h.join().map_err(|_| GppError::Net("host thread panicked".into()))??;
+    }
+    if collect.rows_seen != cfg.height {
+        return Err(GppError::Net(format!(
+            "collected {} of {} rows",
+            collect.rows_seen, cfg.height
+        )));
+    }
+    Ok(collect)
+}
+
+fn serve_worker(
+    mut stream: TcpStream,
+    cfg: &ClusterConfig,
+    next_row: &Mutex<i64>,
+    tx: &mpsc::Sender<MandelbrotLine>,
+) -> Result<()> {
+    loop {
+        let frame = read_frame(&mut stream)?;
+        match frame.split_first() {
+            Some((&W_HELLO, _)) => {
+                let mut reply = vec![H_CONFIG];
+                reply.extend(to_bytes(cfg));
+                write_frame(&mut stream, &reply)?;
+            }
+            Some((&W_RESULT, rest)) => {
+                if !rest.is_empty() {
+                    let line: MandelbrotLine = from_bytes(rest)?;
+                    let _ = tx.send(line);
+                }
+                // Server guarantees a response: work or done.
+                let row = {
+                    let mut g = next_row.lock().unwrap();
+                    if *g < cfg.height {
+                        let r = *g;
+                        *g += 1;
+                        Some(r)
+                    } else {
+                        None
+                    }
+                };
+                match row {
+                    Some(r) => {
+                        let mut reply = vec![H_WORK];
+                        r.encode(&mut reply);
+                        write_frame(&mut stream, &reply)?;
+                    }
+                    None => {
+                        write_frame(&mut stream, &[H_DONE])?;
+                        return Ok(());
+                    }
+                }
+            }
+            other => {
+                return Err(GppError::Net(format!(
+                    "host: unexpected worker frame {:?}",
+                    other.map(|(t, _)| t)
+                )))
+            }
+        }
+    }
+}
+
+/// Run one worker node: fetch config, then request/compute/return rows
+/// until the host says done. Rows are computed with `cores_per_node`
+/// threads — "each worker node has a process network that exploits the
+/// maximum number of available cores".
+pub fn run_worker(addr: &str) -> Result<usize> {
+    let mut stream = TcpStream::connect(addr)?;
+    write_frame(&mut stream, &[W_HELLO])?;
+    let frame = read_frame(&mut stream)?;
+    let cfg: ClusterConfig = match frame.split_first() {
+        Some((&H_CONFIG, rest)) => from_bytes(rest)?,
+        other => {
+            return Err(GppError::Net(format!(
+                "worker: expected config, got {:?}",
+                other.map(|(t, _)| t)
+            )))
+        }
+    };
+
+    let mut rows_done = 0usize;
+    // First request carries no result.
+    write_frame(&mut stream, &[W_RESULT])?;
+    loop {
+        let frame = read_frame(&mut stream)?;
+        match frame.split_first() {
+            Some((&H_WORK, mut rest)) => {
+                let row = i64::decode(&mut rest)?;
+                let line = compute_row(&cfg, row);
+                rows_done += 1;
+                let mut reply = vec![W_RESULT];
+                reply.extend(to_bytes(&line));
+                write_frame(&mut stream, &reply)?;
+            }
+            Some((&H_DONE, _)) => return Ok(rows_done),
+            other => {
+                return Err(GppError::Net(format!(
+                    "worker: unexpected host frame {:?}",
+                    other.map(|(t, _)| t)
+                )))
+            }
+        }
+    }
+}
+
+fn compute_row(cfg: &ClusterConfig, row: i64) -> MandelbrotLine {
+    let ci = cfg.y0 + row as f64 * cfg.pixel_delta;
+    let w = cfg.width as usize;
+    let cores = cfg.cores_per_node.max(1);
+    let mut counts = vec![0i32; w];
+    if cores == 1 {
+        for (x, c) in counts.iter_mut().enumerate() {
+            let cr = cfg.x0 + x as f64 * cfg.pixel_delta;
+            *c = MandelbrotLine::escape(cr, ci, cfg.max_iterations);
+        }
+    } else {
+        // Worker-internal farm over the row's pixel chunks.
+        let chunk = w.div_ceil(cores);
+        let chunks: Vec<&mut [i32]> = counts.chunks_mut(chunk).collect();
+        std::thread::scope(|scope| {
+            for (k, slice) in chunks.into_iter().enumerate() {
+                let cfg = cfg.clone();
+                scope.spawn(move || {
+                    for (j, c) in slice.iter_mut().enumerate() {
+                        let x = k * chunk + j;
+                        let cr = cfg.x0 + x as f64 * cfg.pixel_delta;
+                        *c = MandelbrotLine::escape(cr, ci, cfg.max_iterations);
+                    }
+                });
+            }
+        });
+    }
+    MandelbrotLine {
+        row,
+        width: cfg.width,
+        height: cfg.height,
+        max_iterations: cfg.max_iterations,
+        pixel_delta: cfg.pixel_delta,
+        x0: cfg.x0,
+        y0: cfg.y0,
+        counts,
+        ..Default::default()
+    }
+}
+
+/// Default config matching the paper's cluster experiment scaled down;
+/// the full-size run (width 5600, escape 1000) is `--full` in the bench.
+pub fn default_config(width: i64, height: i64, max_iter: i64, cores: usize) -> ClusterConfig {
+    let delta = 3.0 / width as f64;
+    ClusterConfig {
+        width,
+        height,
+        max_iterations: max_iter,
+        pixel_delta: delta,
+        x0: -(width as f64) * delta * 0.7,
+        y0: -(height as f64) * delta * 0.5,
+        cores_per_node: cores,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mandelbrot;
+
+    fn free_addr() -> String {
+        // Bind to :0 to reserve, then reuse.
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = l.local_addr().unwrap();
+        drop(l);
+        format!("127.0.0.1:{}", a.port())
+    }
+
+    #[test]
+    fn cluster_matches_local_sequential() {
+        let addr = free_addr();
+        let cfg = default_config(64, 48, 40, 1);
+        // Align the region with the local sequential generator.
+        let seq = mandelbrot::sequential(64, 48, 40, cfg.pixel_delta).unwrap();
+
+        let addr2 = addr.clone();
+        let host = std::thread::spawn(move || run_host(&addr2, 2, &default_config(64, 48, 40, 1)));
+        // Give the listener a beat, then start two workers.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let a1 = addr.clone();
+        let w1 = std::thread::spawn(move || run_worker(&a1));
+        let a2 = addr.clone();
+        let w2 = std::thread::spawn(move || run_worker(&a2));
+
+        let collect = host.join().unwrap().unwrap();
+        let r1 = w1.join().unwrap().unwrap();
+        let r2 = w2.join().unwrap().unwrap();
+        assert_eq!(r1 + r2, 48, "all rows computed exactly once");
+        assert!(r1 > 0 && r2 > 0, "both workers participated");
+        assert_eq!(collect.checksum(), seq.checksum());
+    }
+
+    #[test]
+    fn config_wire_roundtrip() {
+        let cfg = default_config(100, 80, 10, 4);
+        let d: ClusterConfig = from_bytes(&to_bytes(&cfg)).unwrap();
+        assert_eq!(d, cfg);
+    }
+}

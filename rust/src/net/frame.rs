@@ -1,0 +1,68 @@
+//! Length-prefixed message framing over TCP.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use crate::csp::error::{GppError, Result};
+
+/// Maximum frame size (64 MB) — sanity bound against corruption.
+pub const MAX_FRAME: u32 = 64 << 20;
+
+/// Write one frame: u32 LE length then payload.
+pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    let len = payload.len() as u32;
+    if len > MAX_FRAME {
+        return Err(GppError::Net(format!("frame too large: {len}")));
+    }
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one frame.
+pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(GppError::Net(format!("frame length {len} exceeds bound")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    stream.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn roundtrip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let got = read_frame(&mut s).unwrap();
+            write_frame(&mut s, &got).unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        write_frame(&mut c, b"hello cluster").unwrap();
+        assert_eq!(read_frame(&mut c).unwrap(), b"hello cluster");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn empty_frame_ok() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            read_frame(&mut s).unwrap()
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        write_frame(&mut c, b"").unwrap();
+        assert_eq!(h.join().unwrap(), Vec::<u8>::new());
+    }
+}

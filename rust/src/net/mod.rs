@@ -1,0 +1,24 @@
+//! Cluster runtime (paper §7): host + worker nodes over TCP.
+//!
+//! "One of the workstations is designated as the host node and the
+//! remainder as worker nodes. The host node … executes the emit and
+//! collect processes … A special set of cluster connectors … use the
+//! Client-Server design pattern. … Each worker node initially sends
+//! location information to the host … the complete cluster can be
+//! initialised and run from a single host workstation."
+//!
+//! Here the "workstations" are processes on localhost (the paper's
+//! 1-Gbit Ethernet becomes loopback; the DES models the latency term for
+//! Table 9's shape). The process bodies are unchanged — [`netchan`]
+//! exposes the same `read`/`write` rendezvous interface as
+//! [`crate::csp::channel`], reproducing JCSP's channel-type transparency
+//! (§11.7). The Client-Server pattern (worker requests a line, host
+//! responds with work or a terminator) is loop-free, hence
+//! deadlock-free by Welch's proof [20,21].
+
+pub mod frame;
+pub mod netchan;
+pub mod cluster;
+
+pub use cluster::{run_host, run_worker, ClusterConfig};
+pub use netchan::{NetIn, NetOut};

@@ -1,0 +1,149 @@
+//! Networked channel ends with the same blocking `read`/`write` surface
+//! as in-memory channels — JCSP's "the nature of a channel, be it
+//! internal or network, is transparent to the process definition" (§7).
+//!
+//! A `NetOut<T>`/`NetIn<T>` pair moves `Wire`-codable values as frames;
+//! writes are acknowledged (one in flight), giving the unbuffered
+//! synchronised semantics CSP channels require.
+
+use std::marker::PhantomData;
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+use crate::csp::error::Result;
+use crate::util::codec::{from_bytes, to_bytes, Wire};
+
+use super::frame::{read_frame, write_frame};
+
+/// Tag byte distinguishing payloads from control messages.
+const TAG_DATA: u8 = 1;
+const TAG_TERM: u8 = 2;
+const TAG_ACK: u8 = 3;
+
+/// A value or end-of-stream — network channels carry the same
+/// terminator protocol as in-memory ones.
+#[derive(Debug, PartialEq)]
+pub enum NetMsg<T> {
+    Data(T),
+    Terminator,
+}
+
+/// Writing end over a TCP stream.
+pub struct NetOut<T: Wire> {
+    stream: Mutex<TcpStream>,
+    _marker: PhantomData<T>,
+}
+
+impl<T: Wire> NetOut<T> {
+    pub fn new(stream: TcpStream) -> Self {
+        Self {
+            stream: Mutex::new(stream),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Synchronised write: block until the reader acknowledges.
+    pub fn write(&self, value: &T) -> Result<()> {
+        let mut s = self.stream.lock().unwrap();
+        let mut payload = vec![TAG_DATA];
+        payload.extend(to_bytes(value));
+        write_frame(&mut s, &payload)?;
+        let ack = read_frame(&mut s)?;
+        debug_assert_eq!(ack.first(), Some(&TAG_ACK));
+        Ok(())
+    }
+
+    pub fn write_terminator(&self) -> Result<()> {
+        let mut s = self.stream.lock().unwrap();
+        write_frame(&mut s, &[TAG_TERM])?;
+        let _ack = read_frame(&mut s)?;
+        Ok(())
+    }
+}
+
+/// Reading end over a TCP stream.
+pub struct NetIn<T: Wire> {
+    stream: Mutex<TcpStream>,
+    _marker: PhantomData<T>,
+}
+
+impl<T: Wire> NetIn<T> {
+    pub fn new(stream: TcpStream) -> Self {
+        Self {
+            stream: Mutex::new(stream),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Blocking read of the next message; sends the rendezvous ack.
+    pub fn read(&self) -> Result<NetMsg<T>> {
+        let mut s = self.stream.lock().unwrap();
+        let frame = read_frame(&mut s)?;
+        let msg = match frame.split_first() {
+            Some((&TAG_DATA, rest)) => NetMsg::Data(from_bytes::<T>(rest)?),
+            Some((&TAG_TERM, _)) => NetMsg::Terminator,
+            other => {
+                return Err(crate::csp::error::GppError::Net(format!(
+                    "bad frame tag {:?}",
+                    other.map(|(t, _)| t)
+                )))
+            }
+        };
+        write_frame(&mut s, &[TAG_ACK])?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn values_roundtrip_in_order() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let rx = NetIn::<Vec<u32>>::new(s);
+            let mut got = Vec::new();
+            loop {
+                match rx.read().unwrap() {
+                    NetMsg::Data(v) => got.push(v),
+                    NetMsg::Terminator => break,
+                }
+            }
+            got
+        });
+        let tx = NetOut::<Vec<u32>>::new(TcpStream::connect(addr).unwrap());
+        for i in 0..10u32 {
+            tx.write(&vec![i, i * 2]).unwrap();
+        }
+        tx.write_terminator().unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 10);
+        assert_eq!(got[3], vec![3, 6]);
+    }
+
+    #[test]
+    fn write_blocks_until_ack() {
+        // With a reader that delays, the writer's second write cannot
+        // complete before the first read (synchronised semantics).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let rx = NetIn::<u64>::new(s);
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            let t0 = std::time::Instant::now();
+            let _ = rx.read().unwrap();
+            t0
+        });
+        let tx = NetOut::<u64>::new(TcpStream::connect(addr).unwrap());
+        let t0 = std::time::Instant::now();
+        tx.write(&42).unwrap();
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= std::time::Duration::from_millis(40), "{elapsed:?}");
+        let _ = h.join().unwrap();
+    }
+}

@@ -1,0 +1,116 @@
+//! The data-parallel farm (paper §3, Listings 2 & 3, Figure 2):
+//!
+//! `Emit → OneFanAny → AnyGroupAny(workers) → AnyFanOne → Collect`.
+//!
+//! "The DataParallelCollect pattern simply needs to know the DataDetails
+//! object that defines how data is emitted into the network … and how
+//! the subsequent results are collected. The pattern will invoke workers
+//! parallel processes each of which will undertake the operation named
+//! as function."
+
+use std::sync::mpsc;
+
+use crate::csp::channel::named_channel;
+use crate::csp::error::Result;
+use crate::csp::process::CSProcess;
+use crate::data::details::{DataDetails, LocalDetails, ResultDetails};
+use crate::data::message::Message;
+use crate::data::object::{DataObject, Params};
+use crate::functionals::groups::{AnyGroupAny, GroupOptions};
+use crate::logging::LogSink;
+use crate::processes::{AnyFanOne, Collect, Emit, OneFanAny};
+
+pub struct DataParallelCollect {
+    pub emit_details: DataDetails,
+    pub result_details: ResultDetails,
+    pub workers: usize,
+    pub function: String,
+    pub modifier: Params,
+    pub local: Option<LocalDetails>,
+    pub log: LogSink,
+}
+
+impl DataParallelCollect {
+    pub fn new(
+        emit_details: DataDetails,
+        result_details: ResultDetails,
+        workers: usize,
+        function: &str,
+    ) -> Self {
+        assert!(workers >= 1);
+        Self {
+            emit_details,
+            result_details,
+            workers,
+            function: function.to_string(),
+            modifier: Params::empty(),
+            local: None,
+            log: LogSink::off(),
+        }
+    }
+
+    pub fn with_modifier(mut self, p: Params) -> Self {
+        self.modifier = p;
+        self
+    }
+
+    pub fn with_local(mut self, l: LocalDetails) -> Self {
+        self.local = Some(l);
+        self
+    }
+
+    pub fn with_log(mut self, log: LogSink) -> Self {
+        self.log = log;
+        self
+    }
+
+    /// Build the process vector (the paper's Listing 3 expansion).
+    pub fn build(
+        &self,
+        result_tx: Option<mpsc::Sender<Box<dyn DataObject>>>,
+    ) -> Vec<Box<dyn CSProcess>> {
+        let (emit_out, fan_in) = named_channel::<Message>("dp.emit");
+        let (fan_out, group_in) = named_channel::<Message>("dp.fan");
+        let (group_out, red_in) = named_channel::<Message>("dp.group");
+        let (red_out, collect_in) = named_channel::<Message>("dp.reduce");
+
+        let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
+        procs.push(Box::new(
+            Emit::new(self.emit_details.clone(), emit_out)
+                .with_log(self.log.clone(), "emit"),
+        ));
+        procs.push(Box::new(OneFanAny::new(fan_in, fan_out, self.workers)));
+        let opts = {
+            let o = GroupOptions::new(&self.function)
+                .modifier(self.modifier.clone())
+                .log(self.log.clone(), &self.function);
+            match &self.local {
+                Some(l) => o.local(l.clone()),
+                None => o,
+            }
+        };
+        procs.extend(AnyGroupAny::build(group_in, group_out, self.workers, &opts));
+        procs.push(Box::new(AnyFanOne::new(red_in, red_out, self.workers)));
+        let mut collect = Collect::new(self.result_details.clone(), collect_in)
+            .with_log(self.log.clone(), "collect");
+        if let Some(tx) = result_tx {
+            collect = collect.with_result_out(tx);
+        }
+        procs.push(Box::new(collect));
+        procs
+    }
+
+    /// Build and run; returns the finished result object.
+    pub fn run_network(&self) -> Result<Box<dyn DataObject>> {
+        let (tx, rx) = mpsc::channel();
+        let procs = self.build(Some(tx));
+        let mut results = super::run_and_harvest("DataParallelCollect", procs, rx)?;
+        Ok(results.remove(0))
+    }
+
+    /// Number of processes the pattern expands to (paper §3.2: "a simple
+    /// count of the generated processes in Listing 3 is workers + 4").
+    pub fn process_count(&self) -> usize {
+        self.workers + 4
+    }
+}

@@ -1,0 +1,85 @@
+//! `GroupOfPipelineCollects` (paper §6.1, Listing 13): `groups` parallel
+//! pipelines, each a chain of Worker stages finishing in its own
+//! `Collect` — the "GoP" (group-of-pipelines) concordance architecture.
+
+use std::sync::mpsc;
+
+use crate::csp::channel::named_channel;
+use crate::csp::error::Result;
+use crate::csp::process::CSProcess;
+use crate::data::details::{DataDetails, ResultDetails};
+use crate::data::message::Message;
+use crate::data::object::DataObject;
+use crate::functionals::pipelines::{OnePipelineCollect, StageSpec};
+use crate::logging::LogSink;
+use crate::processes::{Emit, OneFanAny};
+
+pub struct GroupOfPipelineCollects {
+    pub emit_details: DataDetails,
+    /// One `ResultDetails` per pipeline.
+    pub result_details: Vec<ResultDetails>,
+    pub stage_ops: Vec<StageSpec>,
+    pub groups: usize,
+    pub log: LogSink,
+}
+
+impl GroupOfPipelineCollects {
+    pub fn new(
+        emit_details: DataDetails,
+        result_details: Vec<ResultDetails>,
+        stage_ops: Vec<StageSpec>,
+        groups: usize,
+    ) -> Self {
+        assert_eq!(result_details.len(), groups, "one ResultDetails per pipeline");
+        assert!(!stage_ops.is_empty());
+        Self {
+            emit_details,
+            result_details,
+            stage_ops,
+            groups,
+            log: LogSink::off(),
+        }
+    }
+
+    pub fn with_log(mut self, log: LogSink) -> Self {
+        self.log = log;
+        self
+    }
+
+    pub fn build(
+        &self,
+        result_tx: Option<mpsc::Sender<Box<dyn DataObject>>>,
+    ) -> Vec<Box<dyn CSProcess>> {
+        let (emit_out, fan_in) = named_channel::<Message>("gop.emit");
+        let (fan_out, pipes_in) = named_channel::<Message>("gop.fan");
+
+        let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
+        procs.push(Box::new(
+            Emit::new(self.emit_details.clone(), emit_out).with_log(self.log.clone(), "emit"),
+        ));
+        // Any free pipeline's first stage takes the next object.
+        procs.push(Box::new(OneFanAny::new(fan_in, fan_out, self.groups)));
+        for (g, d) in self.result_details.iter().enumerate() {
+            procs.extend(OnePipelineCollect::build(
+                pipes_in.clone(),
+                &self.stage_ops,
+                d.clone(),
+                result_tx.clone(),
+                g,
+                self.log.clone(),
+            ));
+        }
+        procs
+    }
+
+    pub fn run_network(&self) -> Result<Vec<Box<dyn DataObject>>> {
+        let (tx, rx) = mpsc::channel();
+        let procs = self.build(Some(tx));
+        super::run_and_harvest("GroupOfPipelineCollects", procs, rx)
+    }
+
+    pub fn process_count(&self) -> usize {
+        // emit + fan + groups*(stages + collect)
+        2 + self.groups * (self.stage_ops.len() + 1)
+    }
+}

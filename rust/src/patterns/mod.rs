@@ -1,0 +1,32 @@
+//! Complete network patterns (paper §3 & §6): full Emit-to-Collect
+//! architectures invokable in one line, mirroring the library's
+//! `DataParallelCollect`, `TaskParallelOfGroupCollects` and
+//! `GroupOfPipelineCollects`.
+//!
+//! Each pattern builds its process vector (every channel synthesised
+//! internally, as `gppBuilder` does) and `run_network()` executes it,
+//! returning the finished result object(s) so callers can extract values
+//! rather than only reading the finalise-method's console output.
+
+pub mod data_parallel;
+pub mod task_parallel;
+pub mod group_of_pipelines;
+
+pub use data_parallel::DataParallelCollect;
+pub use group_of_pipelines::GroupOfPipelineCollects;
+pub use task_parallel::TaskParallelOfGroupCollects;
+
+use crate::csp::error::Result;
+use crate::csp::process::{run_parallel_named, CSProcess};
+use crate::data::object::DataObject;
+
+/// Run a built network and harvest the result objects its Collect
+/// processes hand back.
+pub fn run_and_harvest(
+    label: &str,
+    procs: Vec<Box<dyn CSProcess>>,
+    rx: std::sync::mpsc::Receiver<Box<dyn DataObject>>,
+) -> Result<Vec<Box<dyn DataObject>>> {
+    run_parallel_named(label, procs)?;
+    Ok(rx.try_iter().collect())
+}

@@ -1,0 +1,102 @@
+//! `TaskParallelOfGroupCollects` (paper §6.1, Listing 14): a pipeline of
+//! `stages` groups, each of `workers` Worker processes, followed by a
+//! final group of `workers` parallel Collect processes — the "PoG"
+//! (pipeline-of-groups) concordance architecture.
+
+use std::sync::mpsc;
+
+use crate::csp::channel::named_channel;
+use crate::csp::error::Result;
+use crate::csp::process::CSProcess;
+use crate::data::details::{DataDetails, ResultDetails};
+use crate::data::message::Message;
+use crate::data::object::DataObject;
+use crate::functionals::composites::PipelineOfGroups;
+use crate::functionals::pipelines::StageSpec;
+use crate::logging::LogSink;
+use crate::processes::{Collect, Emit, OneFanAny};
+
+pub struct TaskParallelOfGroupCollects {
+    pub emit_details: DataDetails,
+    /// One `ResultDetails` per collector ("resultDetails contains a copy
+    /// of the rDetails object for each instance").
+    pub result_details: Vec<ResultDetails>,
+    pub stage_ops: Vec<StageSpec>,
+    pub workers: usize,
+    pub log: LogSink,
+}
+
+impl TaskParallelOfGroupCollects {
+    pub fn new(
+        emit_details: DataDetails,
+        result_details: Vec<ResultDetails>,
+        stage_ops: Vec<StageSpec>,
+        workers: usize,
+    ) -> Self {
+        assert_eq!(
+            result_details.len(),
+            workers,
+            "one ResultDetails per collector"
+        );
+        assert!(!stage_ops.is_empty());
+        Self {
+            emit_details,
+            result_details,
+            stage_ops,
+            workers,
+            log: LogSink::off(),
+        }
+    }
+
+    pub fn with_log(mut self, log: LogSink) -> Self {
+        self.log = log;
+        self
+    }
+
+    pub fn build(
+        &self,
+        result_tx: Option<mpsc::Sender<Box<dyn DataObject>>>,
+    ) -> Vec<Box<dyn CSProcess>> {
+        let (emit_out, fan_in) = named_channel::<Message>("pog.emit");
+        let (fan_out, pipe_in) = named_channel::<Message>("pog.fan");
+        let (pipe_out, coll_in) = named_channel::<Message>("pog.tail");
+
+        let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
+        procs.push(Box::new(
+            Emit::new(self.emit_details.clone(), emit_out).with_log(self.log.clone(), "emit"),
+        ));
+        // The fan issues `workers` terminators: the first stage group has
+        // `workers` members each consuming one.
+        procs.push(Box::new(OneFanAny::new(fan_in, fan_out, self.workers)));
+        procs.extend(PipelineOfGroups::build(
+            pipe_in,
+            pipe_out,
+            self.workers,
+            &self.stage_ops,
+            self.log.clone(),
+        ));
+        // Final stage: `workers` Collects sharing the tail any-end; the
+        // last worker group emitted `workers` terminators, one each.
+        for d in self.result_details.iter() {
+            let mut c = Collect::new(d.clone(), coll_in.clone())
+                .with_log(self.log.clone(), "collect");
+            if let Some(tx) = &result_tx {
+                c = c.with_result_out(tx.clone());
+            }
+            procs.push(Box::new(c));
+        }
+        procs
+    }
+
+    /// Build, run, and return all collector results.
+    pub fn run_network(&self) -> Result<Vec<Box<dyn DataObject>>> {
+        let (tx, rx) = mpsc::channel();
+        let procs = self.build(Some(tx));
+        super::run_and_harvest("TaskParallelOfGroupCollects", procs, rx)
+    }
+
+    pub fn process_count(&self) -> usize {
+        // emit + fan + stages*workers + workers collects
+        2 + self.stage_ops.len() * self.workers + self.workers
+    }
+}

@@ -1,0 +1,105 @@
+//! The `Collect` terminal process (paper §4.3.3–4.3.4).
+//!
+//! CSPm Definition 2:
+//! `Collect() = d?o -> if o == UT then Collect_End() else Collect()`.
+//! Reads objects until the `UniversalTerminator`, feeding each to the
+//! result object's collect-method; then calls the finalise-method.
+
+use std::sync::mpsc::Sender;
+
+use crate::csp::channel::In;
+use crate::csp::error::Result;
+use crate::csp::process::CSProcess;
+use crate::data::details::ResultDetails;
+use crate::data::message::Message;
+use crate::data::object::{instantiate, DataObject};
+use crate::logging::{LogKind, LogSink};
+
+/// Terminal process that accumulates results.
+pub struct Collect {
+    pub details: ResultDetails,
+    pub input: In<Message>,
+    pub log: LogSink,
+    pub log_phase: String,
+    /// If set, the finished result object is handed back to the caller
+    /// (the paper's finalise typically prints; callers of the library
+    /// usually also want the value).
+    pub result_out: Option<Sender<Box<dyn DataObject>>>,
+}
+
+impl Collect {
+    pub fn new(details: ResultDetails, input: In<Message>) -> Self {
+        Self {
+            details,
+            input,
+            log: LogSink::off(),
+            log_phase: "collect".to_string(),
+            result_out: None,
+        }
+    }
+
+    pub fn with_log(mut self, log: LogSink, phase: &str) -> Self {
+        self.log = log;
+        self.log_phase = phase.to_string();
+        self
+    }
+
+    pub fn with_result_out(mut self, tx: Sender<Box<dyn DataObject>>) -> Self {
+        self.result_out = Some(tx);
+        self
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        let d = &self.details;
+        let mut result = instantiate(&d.class)?;
+        result
+            .call(&d.init_method, &d.init_data, None)?
+            .check(&format!("Collect init {}.{}", d.class, d.init_method))?;
+
+        self.log.log("Collect", &self.log_phase, LogKind::Start, None);
+        loop {
+            match self.input.read()? {
+                Message::Data(mut obj) => {
+                    self.log
+                        .log("Collect", &self.log_phase, LogKind::Input, Some(obj.as_ref()));
+                    // "The result object's collectMethod is called with
+                    // the inputObject as a parameter."
+                    result
+                        .call(&d.collect_method, &crate::data::object::Params::empty(), Some(obj.as_mut()))?
+                        .check(&format!("Collect {}.{}", d.class, d.collect_method))?;
+                }
+                Message::Terminator(term) => {
+                    // Terminators may carry log records gathered upstream;
+                    // forward them into our sink's stream by re-rendering.
+                    for rec in term.logs {
+                        self.log.log(&rec.tag, &rec.phase, rec.kind, None);
+                    }
+                    break;
+                }
+            }
+        }
+        result
+            .call(&d.finalise_method, &d.finalise_data, None)?
+            .check(&format!("Collect finalise {}.{}", d.class, d.finalise_method))?;
+        self.log.log("Collect", &self.log_phase, LogKind::End, None);
+
+        if let Some(tx) = &self.result_out {
+            let _ = tx.send(result);
+        }
+        Ok(())
+    }
+}
+
+impl CSProcess for Collect {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            self.input.poison();
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("Collect({})", self.details.class)
+    }
+}

@@ -1,0 +1,186 @@
+//! The `Emit` terminal process (paper §4.3.1–4.3.2) and its
+//! `EmitWithLocal` variant (used by the Goldbach prime phase, §6.5).
+//!
+//! Behaviour (CSPm Definition 1):
+//! `Emit(o) = a!o -> if o == UT then SKIP else Emit(create(o))` — create
+//! instances until the create-method reports `normalTermination`, then
+//! write the `UniversalTerminator` and stop.
+
+use crate::csp::channel::Out;
+use crate::csp::error::{GppError, Result};
+use crate::csp::process::CSProcess;
+use crate::data::details::{DataDetails, LocalDetails};
+use crate::data::message::{Message, Terminator};
+use crate::data::object::{instantiate, DataObject, ReturnCode};
+use crate::logging::{LogKind, LogSink};
+
+/// Terminal process that creates and emits a stream of data objects.
+pub struct Emit {
+    pub details: DataDetails,
+    pub output: Out<Message>,
+    pub log: LogSink,
+    pub log_phase: String,
+}
+
+impl Emit {
+    pub fn new(details: DataDetails, output: Out<Message>) -> Self {
+        Self {
+            details,
+            output,
+            log: LogSink::off(),
+            log_phase: "emit".to_string(),
+        }
+    }
+
+    pub fn with_log(mut self, log: LogSink, phase: &str) -> Self {
+        self.log = log;
+        self.log_phase = phase.to_string();
+        self
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        let d = &self.details;
+        // Class initialisation happens once, on a prototype instance —
+        // the paper's init methods set static state; ours set state that
+        // the class's `create` copies into each instance (see workloads).
+        let mut proto = instantiate(&d.class)?;
+        proto
+            .call(&d.init_method, &d.init_data, None)?
+            .check(&format!("Emit init {}.{}", d.class, d.init_method))?;
+
+        self.log.log("Emit", &self.log_phase, LogKind::Start, None);
+        loop {
+            // "The main loop of the process creates a new instance of the
+            // emitted object and its associated createMethod is called."
+            let mut obj = proto.deep_clone();
+            let rc = obj
+                .call(&d.create_method, &d.create_data, Some(proto.as_mut()))?
+                .check(&format!("Emit create {}.{}", d.class, d.create_method))?;
+            match rc {
+                ReturnCode::NormalContinuation => {
+                    self.log
+                        .log("Emit", &self.log_phase, LogKind::Output, Some(obj.as_ref()));
+                    self.output.write(Message::Data(obj))?;
+                }
+                ReturnCode::NormalTermination => break,
+                ReturnCode::CompletedOk => {
+                    // Tolerated: treat like continuation (some user create
+                    // methods only ever return OK and bound instances via
+                    // termination on a later call).
+                    self.log
+                        .log("Emit", &self.log_phase, LogKind::Output, Some(obj.as_ref()));
+                    self.output.write(Message::Data(obj))?;
+                }
+                ReturnCode::Error(code) => {
+                    self.output.poison();
+                    return Err(GppError::UserCode {
+                        code,
+                        context: format!("Emit {}", d.class),
+                    });
+                }
+            }
+        }
+        self.log.log("Emit", &self.log_phase, LogKind::End, None);
+        // "After normal termination a UniversalTerminator object is
+        // written to the output channel to initiate network termination."
+        self.output.write(Message::Terminator(Terminator::new()))?;
+        Ok(())
+    }
+}
+
+impl CSProcess for Emit {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            self.output.poison();
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("Emit({})", self.details.class)
+    }
+}
+
+/// `Emit` with an additional local class used during data creation —
+/// "like the previously discussed Emit process but with the addition of
+/// an additional local class used during the data creation process"
+/// (§6.5; the prime sieve lives in the local object).
+pub struct EmitWithLocal {
+    pub details: DataDetails,
+    pub local: LocalDetails,
+    pub output: Out<Message>,
+    pub log: LogSink,
+    pub log_phase: String,
+}
+
+impl EmitWithLocal {
+    pub fn new(details: DataDetails, local: LocalDetails, output: Out<Message>) -> Self {
+        Self {
+            details,
+            local,
+            output,
+            log: LogSink::off(),
+            log_phase: "emitWithLocal".to_string(),
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        let d = &self.details;
+        let l = &self.local;
+        let mut local: Box<dyn DataObject> = instantiate(&l.class)?;
+        local
+            .call(&l.init_method, &l.init_data, None)?
+            .check(&format!("EmitWithLocal local init {}.{}", l.class, l.init_method))?;
+
+        let mut proto = instantiate(&d.class)?;
+        proto
+            .call(&d.init_method, &d.init_data, None)?
+            .check(&format!("EmitWithLocal init {}.{}", d.class, d.init_method))?;
+
+        self.log.log("EmitWithLocal", &self.log_phase, LogKind::Start, None);
+        loop {
+            let mut obj = proto.deep_clone();
+            // The create method sees the *local* object as its auxiliary.
+            let rc = obj
+                .call(&d.create_method, &d.create_data, Some(local.as_mut()))?
+                .check(&format!("EmitWithLocal create {}.{}", d.class, d.create_method))?;
+            match rc {
+                ReturnCode::NormalContinuation | ReturnCode::CompletedOk => {
+                    self.log.log(
+                        "EmitWithLocal",
+                        &self.log_phase,
+                        LogKind::Output,
+                        Some(obj.as_ref()),
+                    );
+                    self.output.write(Message::Data(obj))?;
+                }
+                ReturnCode::NormalTermination => break,
+                ReturnCode::Error(code) => {
+                    self.output.poison();
+                    return Err(GppError::UserCode {
+                        code,
+                        context: format!("EmitWithLocal {}", d.class),
+                    });
+                }
+            }
+        }
+        self.log.log("EmitWithLocal", &self.log_phase, LogKind::End, None);
+        self.output.write(Message::Terminator(Terminator::new()))?;
+        Ok(())
+    }
+}
+
+impl CSProcess for EmitWithLocal {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            self.output.poison();
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("EmitWithLocal({})", self.details.class)
+    }
+}

@@ -1,0 +1,23 @@
+//! The GPP process collection (paper §4): **terminals** (`Emit`,
+//! `EmitWithLocal`, `Collect`), the **functional** `Worker`, and the
+//! **connectors** — spreaders (`OneFanAny`, `OneFanList`,
+//! `OneSeqCastList`, `OneParCastList`) and reducers (`AnyFanOne`,
+//! `ListFanOne`, `ListSeqOne`, `ListParOne`, `ListMergeOne`,
+//! `CombineNto1`).
+//!
+//! Every process follows the I/O-SEQ pattern (§9.1): a repeated
+//! *input → compute → output* sequence, which Welch et al. proved
+//! deadlock-free for acyclic dataflow compositions; the [`crate::verify`]
+//! module re-checks the CSPm models mechanically.
+
+pub mod emit;
+pub mod collect;
+pub mod worker;
+pub mod spreaders;
+pub mod reducers;
+
+pub use collect::Collect;
+pub use emit::{Emit, EmitWithLocal};
+pub use reducers::{AnyFanOne, CombineNto1, ListFanOne, ListMergeOne, ListParOne, ListSeqOne};
+pub use spreaders::{OneFanAny, OneFanList, OneParCastList, OneSeqCastList};
+pub use worker::Worker;

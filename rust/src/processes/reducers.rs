@@ -1,0 +1,452 @@
+//! Reducer connector processes (paper §4.5.3–4.5.4).
+//!
+//! CSPm Definition 5 (generalised reducer): a replicated external choice
+//! over the input channels; data objects are forwarded to the single
+//! output until every input has delivered its `UniversalTerminator`,
+//! then one terminator goes downstream.
+
+use crate::csp::alt::Alt;
+use crate::csp::channel::{In, Out};
+use crate::csp::error::{GppError, Result};
+use crate::csp::process::CSProcess;
+use crate::data::details::LocalDetails;
+use crate::data::message::{Message, Terminator};
+use crate::data::object::{instantiate, Params, Value};
+use crate::logging::{LogKind, LogSink};
+
+/// Shared `any` input end reduced onto one output. Terminates after
+/// `sources` terminators have been read (one per writer sharing the end;
+/// writes were FIFO-queued by the channel).
+pub struct AnyFanOne {
+    pub input: In<Message>,
+    pub output: Out<Message>,
+    pub sources: usize,
+    pub log: LogSink,
+}
+
+impl AnyFanOne {
+    pub fn new(input: In<Message>, output: Out<Message>, sources: usize) -> Self {
+        Self {
+            input,
+            output,
+            sources,
+            log: LogSink::off(),
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        let mut terms_seen = 0usize;
+        let mut term = Terminator::new();
+        while terms_seen < self.sources {
+            match self.input.read()? {
+                Message::Data(obj) => {
+                    self.log.log("AnyFanOne", "reduce", LogKind::Input, Some(obj.as_ref()));
+                    self.output.write(Message::Data(obj))?;
+                }
+                Message::Terminator(t) => {
+                    term.absorb(t);
+                    terms_seen += 1;
+                }
+            }
+        }
+        self.output.write(Message::Terminator(term))?;
+        Ok(())
+    }
+}
+
+impl CSProcess for AnyFanOne {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            self.input.poison();
+            self.output.poison();
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("AnyFanOne(x{})", self.sources)
+    }
+}
+
+/// Channel-list input reduced via **fair alternation** (JCSP `ALT` with
+/// `fairSelect`, §4.5.3) onto one output. Each input is disabled once
+/// its terminator arrives; the merged terminator goes out last.
+pub struct ListFanOne {
+    pub inputs: Vec<In<Message>>,
+    pub output: Out<Message>,
+    pub log: LogSink,
+}
+
+impl ListFanOne {
+    pub fn new(inputs: Vec<In<Message>>, output: Out<Message>) -> Self {
+        Self {
+            inputs,
+            output,
+            log: LogSink::off(),
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        let n = self.inputs.len();
+        let mut enabled = vec![true; n];
+        let mut alt = Alt::new(self.inputs.clone());
+        let mut live = n;
+        let mut term = Terminator::new();
+        while live > 0 {
+            let i = alt.fair_select_enabled(&enabled)?;
+            let msg = match alt.input(i).try_read()? {
+                Some(m) => m,
+                None => continue, // raced; reselect
+            };
+            match msg {
+                Message::Data(obj) => {
+                    self.log.log("ListFanOne", "reduce", LogKind::Input, Some(obj.as_ref()));
+                    self.output.write(Message::Data(obj))?;
+                }
+                Message::Terminator(t) => {
+                    term.absorb(t);
+                    enabled[i] = false;
+                    live -= 1;
+                }
+            }
+        }
+        self.output.write(Message::Terminator(term))?;
+        Ok(())
+    }
+}
+
+impl CSProcess for ListFanOne {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            for i in &self.inputs {
+                i.poison();
+            }
+            self.output.poison();
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("ListFanOne(x{})", self.inputs.len())
+    }
+}
+
+/// Channel-list input read **round-robin** ("objects can be input from
+/// the channel input list in a round robin fashion") onto one output.
+/// Exhausted inputs are skipped once their terminator arrives.
+pub struct ListSeqOne {
+    pub inputs: Vec<In<Message>>,
+    pub output: Out<Message>,
+    pub log: LogSink,
+}
+
+impl ListSeqOne {
+    pub fn new(inputs: Vec<In<Message>>, output: Out<Message>) -> Self {
+        Self {
+            inputs,
+            output,
+            log: LogSink::off(),
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        let n = self.inputs.len();
+        let mut done = vec![false; n];
+        let mut live = n;
+        let mut term = Terminator::new();
+        let mut i = 0usize;
+        while live > 0 {
+            if !done[i] {
+                match self.inputs[i].read()? {
+                    Message::Data(obj) => {
+                        self.log.log("ListSeqOne", "reduce", LogKind::Input, Some(obj.as_ref()));
+                        self.output.write(Message::Data(obj))?;
+                    }
+                    Message::Terminator(t) => {
+                        term.absorb(t);
+                        done[i] = true;
+                        live -= 1;
+                    }
+                }
+            }
+            i = (i + 1) % n;
+        }
+        self.output.write(Message::Terminator(term))?;
+        Ok(())
+    }
+}
+
+impl CSProcess for ListSeqOne {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            for i in &self.inputs {
+                i.poison();
+            }
+            self.output.poison();
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("ListSeqOne(x{})", self.inputs.len())
+    }
+}
+
+/// Read one object from **every** input in parallel per round, then
+/// forward them in index order ("it is also possible to input … in
+/// parallel from all the elements of a channel input list").
+pub struct ListParOne {
+    pub inputs: Vec<In<Message>>,
+    pub output: Out<Message>,
+    pub log: LogSink,
+}
+
+impl ListParOne {
+    pub fn new(inputs: Vec<In<Message>>, output: Out<Message>) -> Self {
+        Self {
+            inputs,
+            output,
+            log: LogSink::off(),
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        let n = self.inputs.len();
+        let mut done = vec![false; n];
+        let mut live = n;
+        let mut term = Terminator::new();
+        while live > 0 {
+            // Parallel read round across all still-live inputs.
+            let round: Vec<(usize, Result<Message>)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .inputs
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| !done[*i])
+                    .map(|(i, inp)| scope.spawn(move || (i, inp.read())))
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            // Forward in index order for determinism.
+            let mut msgs: Vec<(usize, Message)> = Vec::with_capacity(round.len());
+            for (i, r) in round {
+                msgs.push((i, r?));
+            }
+            msgs.sort_by_key(|(i, _)| *i);
+            for (i, msg) in msgs {
+                match msg {
+                    Message::Data(obj) => {
+                        self.log.log("ListParOne", "reduce", LogKind::Input, Some(obj.as_ref()));
+                        self.output.write(Message::Data(obj))?;
+                    }
+                    Message::Terminator(t) => {
+                        term.absorb(t);
+                        done[i] = true;
+                        live -= 1;
+                    }
+                }
+            }
+        }
+        self.output.write(Message::Terminator(term))?;
+        Ok(())
+    }
+}
+
+impl CSProcess for ListParOne {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            for i in &self.inputs {
+                i.poison();
+            }
+            self.output.poison();
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("ListParOne(x{})", self.inputs.len())
+    }
+}
+
+/// Sorted merge: assumes each input delivers objects in ascending order
+/// of the integer property `key_prop`; outputs a globally sorted stream
+/// ("reducers are provided that undertake merge operations … to ensure
+/// the output objects are output in a sorted order assuming the data is
+/// presented on each input channel as a partial sorted data set").
+pub struct ListMergeOne {
+    pub inputs: Vec<In<Message>>,
+    pub output: Out<Message>,
+    /// Property (exposed via `DataObject::log_prop`) used as sort key.
+    pub key_prop: String,
+    pub log: LogSink,
+}
+
+impl ListMergeOne {
+    pub fn new(inputs: Vec<In<Message>>, output: Out<Message>, key_prop: &str) -> Self {
+        Self {
+            inputs,
+            output,
+            key_prop: key_prop.to_string(),
+            log: LogSink::off(),
+        }
+    }
+
+    fn key_of(&self, msg: &Message) -> Result<i64> {
+        match msg {
+            Message::Data(obj) => match obj.log_prop(&self.key_prop) {
+                Some(Value::Int(k)) => Ok(k),
+                other => Err(GppError::BadCast {
+                    expected: format!("Int property '{}'", self.key_prop),
+                    context: format!("ListMergeOne got {other:?} from {}", obj.class_name()),
+                }),
+            },
+            Message::Terminator(_) => unreachable!("key_of on terminator"),
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        let n = self.inputs.len();
+        // heads[i] = Some(next message from input i) until its UT.
+        let mut heads: Vec<Option<Message>> = Vec::with_capacity(n);
+        let mut term = Terminator::new();
+        let mut live = 0usize;
+        for inp in &self.inputs {
+            match inp.read()? {
+                Message::Terminator(t) => {
+                    term.absorb(t);
+                    heads.push(None);
+                }
+                m => {
+                    heads.push(Some(m));
+                    live += 1;
+                }
+            }
+        }
+        while live > 0 {
+            // Pick the live head with the smallest key.
+            let mut best: Option<(usize, i64)> = None;
+            for (i, h) in heads.iter().enumerate() {
+                if let Some(m) = h {
+                    let k = self.key_of(m)?;
+                    if best.map_or(true, |(_, bk)| k < bk) {
+                        best = Some((i, k));
+                    }
+                }
+            }
+            let (i, _) = best.unwrap();
+            let msg = heads[i].take().unwrap();
+            self.output.write(msg)?;
+            // Refill head i.
+            match self.inputs[i].read()? {
+                Message::Terminator(t) => {
+                    term.absorb(t);
+                    live -= 1;
+                }
+                m => heads[i] = Some(m),
+            }
+        }
+        self.output.write(Message::Terminator(term))?;
+        Ok(())
+    }
+}
+
+impl CSProcess for ListMergeOne {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            for i in &self.inputs {
+                i.poison();
+            }
+            self.output.poison();
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("ListMergeOne(x{})", self.inputs.len())
+    }
+}
+
+/// Fold N incoming objects into a single output object (paper §6.5:
+/// "The CombineNto1 process inputs objects, until a UniversalTerminator
+/// is read and is used to combine the input objects into a single output
+/// object" — Goldbach uses it to merge per-worker prime partitions).
+pub struct CombineNto1 {
+    pub input: In<Message>,
+    pub output: Out<Message>,
+    /// The accumulator object.
+    pub local: LocalDetails,
+    /// Method *on the local object* called with each input object as aux.
+    pub combine_method: String,
+    /// Optional method on the local object called once at end
+    /// (`outDetails` in the paper — shapes the final output object).
+    pub finalise_method: Option<String>,
+    pub log: LogSink,
+}
+
+impl CombineNto1 {
+    pub fn new(
+        input: In<Message>,
+        output: Out<Message>,
+        local: LocalDetails,
+        combine_method: &str,
+    ) -> Self {
+        Self {
+            input,
+            output,
+            local,
+            combine_method: combine_method.to_string(),
+            finalise_method: None,
+            log: LogSink::off(),
+        }
+    }
+
+    pub fn with_finalise(mut self, method: &str) -> Self {
+        self.finalise_method = Some(method.to_string());
+        self
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        let l = &self.local;
+        let mut acc = instantiate(&l.class)?;
+        acc.call(&l.init_method, &l.init_data, None)?
+            .check(&format!("CombineNto1 init {}.{}", l.class, l.init_method))?;
+        loop {
+            match self.input.read()? {
+                Message::Data(mut obj) => {
+                    self.log.log("CombineNto1", "combine", LogKind::Input, Some(obj.as_ref()));
+                    acc.call(&self.combine_method, &Params::empty(), Some(obj.as_mut()))?
+                        .check(&format!("CombineNto1 {}.{}", l.class, self.combine_method))?;
+                }
+                Message::Terminator(term) => {
+                    if let Some(fin) = &self.finalise_method {
+                        acc.call(fin, &Params::empty(), None)?
+                            .check(&format!("CombineNto1 finalise {}.{fin}", l.class))?;
+                    }
+                    self.output.write(Message::Data(acc))?;
+                    self.output.write(Message::Terminator(term))?;
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+impl CSProcess for CombineNto1 {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            self.input.poison();
+            self.output.poison();
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("CombineNto1({})", self.local.class)
+    }
+}

@@ -1,0 +1,267 @@
+//! Spreader connector processes (paper §4.5.1–4.5.2).
+//!
+//! Naming: the first element is the input connection (`One`), the middle
+//! the distribution strategy (`Fan` = one destination per object,
+//! `SeqCast`/`ParCast` = copy to all destinations), the last the output
+//! connection (`Any` = shared channel end, `List` = channel array).
+//!
+//! CSPm Definition 4 (generalised spreader): objects go to output
+//! channels round-robin; on `UT` the terminator is delivered to *every*
+//! output (`Spread_End`), so all downstream processes shut down.
+//!
+//! Connectors "undertake no data processing … and thus provide a buffer
+//! between functional processes" — their cost is pure communication,
+//! which is what the DES models them as.
+
+use crate::csp::channel::{In, Out};
+use crate::csp::error::Result;
+use crate::csp::process::CSProcess;
+use crate::data::message::{Message, Terminator};
+use crate::logging::{LogKind, LogSink};
+
+/// One input channel fanned onto a shared `any` output channel: the
+/// farm's distribution connector — "as soon as one of the worker
+/// processes … becomes available it can process the next available line"
+/// (§6.6).
+pub struct OneFanAny {
+    pub input: In<Message>,
+    pub output: Out<Message>,
+    /// Number of reader processes sharing the output end; each needs its
+    /// own terminator.
+    pub destinations: usize,
+    pub log: LogSink,
+}
+
+impl OneFanAny {
+    pub fn new(input: In<Message>, output: Out<Message>, destinations: usize) -> Self {
+        Self {
+            input,
+            output,
+            destinations,
+            log: LogSink::off(),
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        loop {
+            match self.input.read()? {
+                Message::Data(obj) => {
+                    self.log.log("OneFanAny", "spread", LogKind::Output, Some(obj.as_ref()));
+                    self.output.write(Message::Data(obj))?;
+                }
+                Message::Terminator(term) => {
+                    // Spread_End: one terminator per sharing reader.
+                    for i in 0..self.destinations {
+                        let t = if i == 0 { term.clone() } else { Terminator::new() };
+                        self.output.write(Message::Terminator(t))?;
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+impl CSProcess for OneFanAny {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            self.input.poison();
+            self.output.poison();
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("OneFanAny(x{})", self.destinations)
+    }
+}
+
+/// One input channel fanned round-robin onto a channel list
+/// ("OneFanList … will write the object to the next list out channel end
+/// in sequence", circularly).
+pub struct OneFanList {
+    pub input: In<Message>,
+    pub outputs: Vec<Out<Message>>,
+    pub log: LogSink,
+}
+
+impl OneFanList {
+    pub fn new(input: In<Message>, outputs: Vec<Out<Message>>) -> Self {
+        Self {
+            input,
+            outputs,
+            log: LogSink::off(),
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        let n = self.outputs.len();
+        let mut next = 0usize;
+        loop {
+            match self.input.read()? {
+                Message::Data(obj) => {
+                    self.log.log("OneFanList", "spread", LogKind::Output, Some(obj.as_ref()));
+                    self.outputs[next].write(Message::Data(obj))?;
+                    next = (next + 1) % n;
+                }
+                Message::Terminator(term) => {
+                    // CSPm Definition 4's Spread_End: UT to the current
+                    // channel, then the remaining ones.
+                    for k in 0..n {
+                        let i = (next + k) % n;
+                        let t = if k == 0 { term.clone() } else { Terminator::new() };
+                        self.outputs[i].write(Message::Terminator(t))?;
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+impl CSProcess for OneFanList {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            self.input.poison();
+            for o in &self.outputs {
+                o.poison();
+            }
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("OneFanList(x{})", self.outputs.len())
+    }
+}
+
+/// Copy each input object to **all** outputs, one at a time in sequence.
+/// "They output a deep copy clone of the object that has been input" —
+/// keeping the all-objects-unique guarantee (§4.5.1).
+pub struct OneSeqCastList {
+    pub input: In<Message>,
+    pub outputs: Vec<Out<Message>>,
+    pub log: LogSink,
+}
+
+impl OneSeqCastList {
+    pub fn new(input: In<Message>, outputs: Vec<Out<Message>>) -> Self {
+        Self {
+            input,
+            outputs,
+            log: LogSink::off(),
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        loop {
+            match self.input.read()? {
+                Message::Data(obj) => {
+                    self.log.log("OneSeqCastList", "cast", LogKind::Output, Some(obj.as_ref()));
+                    // Deep copies for the first n-1, move the original last.
+                    for out in &self.outputs[..self.outputs.len() - 1] {
+                        out.write(Message::Data(obj.deep_clone()))?;
+                    }
+                    self.outputs[self.outputs.len() - 1].write(Message::Data(obj))?;
+                }
+                Message::Terminator(term) => {
+                    for (i, out) in self.outputs.iter().enumerate() {
+                        let t = if i == 0 { term.clone() } else { Terminator::new() };
+                        out.write(Message::Terminator(t))?;
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+impl CSProcess for OneSeqCastList {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            self.input.poison();
+            for o in &self.outputs {
+                o.poison();
+            }
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("OneSeqCastList(x{})", self.outputs.len())
+    }
+}
+
+/// Copy each input object to all outputs **in parallel**: each output
+/// write happens on its own thread so a slow consumer does not delay the
+/// others (paper: "ParCast outputs the input object to all the output
+/// channels in parallel").
+pub struct OneParCastList {
+    pub input: In<Message>,
+    pub outputs: Vec<Out<Message>>,
+    pub log: LogSink,
+}
+
+impl OneParCastList {
+    pub fn new(input: In<Message>, outputs: Vec<Out<Message>>) -> Self {
+        Self {
+            input,
+            outputs,
+            log: LogSink::off(),
+        }
+    }
+
+    fn cast_parallel(&self, msg: Message) -> Result<()> {
+        // Scoped threads: one write per output, all concurrent.
+        let results: Vec<Result<()>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .outputs
+                .iter()
+                .map(|out| {
+                    let m = msg.deep_clone();
+                    scope.spawn(move || out.write(m))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        loop {
+            match self.input.read()? {
+                Message::Data(obj) => {
+                    self.log.log("OneParCastList", "cast", LogKind::Output, Some(obj.as_ref()));
+                    self.cast_parallel(Message::Data(obj))?;
+                }
+                Message::Terminator(term) => {
+                    self.cast_parallel(Message::Terminator(term))?;
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+impl CSProcess for OneParCastList {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            self.input.poison();
+            for o in &self.outputs {
+                o.poison();
+            }
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("OneParCastList(x{})", self.outputs.len())
+    }
+}

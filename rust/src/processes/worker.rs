@@ -1,0 +1,183 @@
+//! The `Worker` functional process (paper §4.4, Listings 11 & 21).
+//!
+//! CSPm Definition 3:
+//! `Worker(i) = b.i?o -> if o == UT then c.i!UT -> SKIP
+//!                       else c.i!f(o) -> Worker(i)`.
+//!
+//! The worker reads an object, applies the user function named
+//! `function` (with `data_modifier` parameters and an optional local
+//! class), and writes the *same object reference* onward — "All objects
+//! are communicated by means of their object reference thereby removing
+//! the need for object copying". If `out_data` is false the local class
+//! is emitted at termination instead of each input object. A group-wide
+//! [`Barrier`] can force BSP-style synchronised output.
+
+use crate::csp::barrier::Barrier;
+use crate::csp::channel::{In, Out};
+use crate::csp::error::{GppError, Result};
+use crate::csp::process::CSProcess;
+use crate::data::details::LocalDetails;
+use crate::data::message::Message;
+use crate::data::object::{instantiate, DataObject, Params, ReturnCode};
+use crate::logging::{LogKind, LogSink};
+
+/// The simplest functional process.
+pub struct Worker {
+    pub input: In<Message>,
+    pub output: Out<Message>,
+    /// Exported name of the user method invoked on each input object.
+    pub function: String,
+    /// Parameters passed to the function on every invocation.
+    pub data_modifier: Params,
+    /// Optional local class (intermediate results).
+    pub local: Option<LocalDetails>,
+    /// If false, output the local object at end instead of each input.
+    pub out_data: bool,
+    /// Optional group barrier (BSP-style synchronised output).
+    pub barrier: Option<Barrier>,
+    /// Worker index within its group (diagnostics + logging tag).
+    pub index: usize,
+    pub log: LogSink,
+    pub log_phase: String,
+}
+
+impl Worker {
+    pub fn new(input: In<Message>, output: Out<Message>, function: &str) -> Self {
+        Self {
+            input,
+            output,
+            function: function.to_string(),
+            data_modifier: Params::empty(),
+            local: None,
+            out_data: true,
+            barrier: None,
+            index: 0,
+            log: LogSink::off(),
+            log_phase: String::new(),
+        }
+    }
+
+    pub fn with_modifier(mut self, p: Params) -> Self {
+        self.data_modifier = p;
+        self
+    }
+
+    pub fn with_local(mut self, l: LocalDetails) -> Self {
+        self.local = Some(l);
+        self
+    }
+
+    pub fn with_out_data(mut self, out_data: bool) -> Self {
+        self.out_data = out_data;
+        self
+    }
+
+    pub fn with_barrier(mut self, b: Barrier) -> Self {
+        self.barrier = Some(b);
+        self
+    }
+
+    pub fn with_index(mut self, i: usize) -> Self {
+        self.index = i;
+        self
+    }
+
+    pub fn with_log(mut self, log: LogSink, phase: &str) -> Self {
+        self.log = log;
+        self.log_phase = phase.to_string();
+        self
+    }
+
+    fn tag(&self) -> String {
+        format!("Worker[{}]", self.index)
+    }
+
+    fn phase(&self) -> String {
+        if self.log_phase.is_empty() {
+            self.function.clone()
+        } else {
+            self.log_phase.clone()
+        }
+    }
+
+    fn run_inner(&mut self) -> Result<()> {
+        // Create + initialise the local class, if any.
+        let mut local: Option<Box<dyn DataObject>> = match &self.local {
+            Some(l) => {
+                let mut obj = instantiate(&l.class)?;
+                obj.call(&l.init_method, &l.init_data, None)?
+                    .check(&format!("Worker local init {}.{}", l.class, l.init_method))?;
+                Some(obj)
+            }
+            None => None,
+        };
+
+        let tag = self.tag();
+        let phase = self.phase();
+        self.log.log(&tag, &phase, LogKind::Start, None);
+
+        // I/O-SEQ main loop (paper Listing 21).
+        loop {
+            match self.input.read()? {
+                Message::Data(mut obj) => {
+                    self.log.log(&tag, &phase, LogKind::Input, Some(obj.as_ref()));
+                    // callUserMethod(inputObject, function, [dataModifier, wc])
+                    let rc = obj.call(
+                        &self.function,
+                        &self.data_modifier,
+                        local.as_mut().map(|b| b.as_mut() as &mut dyn DataObject),
+                    )?;
+                    if let ReturnCode::Error(code) = rc {
+                        self.output.poison();
+                        self.input.poison();
+                        return Err(GppError::UserCode {
+                            code,
+                            context: format!("{}.{}", tag, self.function),
+                        });
+                    }
+                    if self.out_data {
+                        if let Some(b) = &self.barrier {
+                            // BSP: wait for the whole group before output.
+                            b.sync()?;
+                        }
+                        self.log.log(&tag, &phase, LogKind::Output, Some(obj.as_ref()));
+                        self.output.write(Message::Data(obj))?;
+                    }
+                }
+                Message::Terminator(term) => {
+                    // When retaining data (out_data == false), the local
+                    // accumulator is emitted just before the terminator —
+                    // "it may be required to output the local class rather
+                    // than each input object".
+                    if !self.out_data {
+                        if let Some(obj) = local.take() {
+                            self.log.log(&tag, &phase, LogKind::Output, Some(obj.as_ref()));
+                            self.output.write(Message::Data(obj))?;
+                        }
+                    }
+                    self.log.log(&tag, &phase, LogKind::End, None);
+                    self.output.write(Message::Terminator(term))?;
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+impl CSProcess for Worker {
+    fn run(&mut self) -> Result<()> {
+        let r = self.run_inner();
+        if r.is_err() {
+            self.input.poison();
+            self.output.poison();
+            if let Some(b) = &self.barrier {
+                b.poison();
+            }
+        }
+        r
+    }
+
+    fn name(&self) -> String {
+        format!("Worker[{}]({})", self.index, self.function)
+    }
+}

@@ -1,0 +1,63 @@
+//! Artifact discovery.
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$GPP_ARTIFACTS`, else `artifacts/`
+/// relative to the workspace root (walking up from cwd so tests,
+//  examples and benches all find it).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("GPP_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Path of a named artifact.
+pub fn artifact_path(name: &str) -> PathBuf {
+    artifacts_dir().join(format!("{name}.hlo.txt"))
+}
+
+/// True if the named artifacts all exist (used to skip XLA-backed tests
+/// and fall back to the native backend before `make artifacts`).
+pub fn have_artifacts(names: &[&str]) -> bool {
+    names.iter().all(|n| artifact_path(n).is_file())
+}
+
+/// True if `artifacts/` holds at least one compiled module.
+pub fn any_artifacts() -> bool {
+    let d = artifacts_dir();
+    Path::new(&d)
+        .read_dir()
+        .map(|mut it| {
+            it.any(|e| {
+                e.map(|e| e.path().extension().map_or(false, |x| x == "txt"))
+                    .unwrap_or(false)
+            })
+        })
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_path_shape() {
+        let p = artifact_path("mandelbrot");
+        assert!(p.to_string_lossy().ends_with("mandelbrot.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifacts_detected() {
+        assert!(!have_artifacts(&["definitely_not_a_real_artifact_name"]));
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py` → `artifacts/*.hlo.txt`) and execute them
+//! from worker processes. Python never runs here — the HLO text is the
+//! only interchange (jax ≥ 0.5 serialized protos carry 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+pub mod pjrt;
+pub mod artifacts;
+
+pub use artifacts::{artifacts_dir, have_artifacts};
+pub use pjrt::{XlaBackend, XlaExecutable};

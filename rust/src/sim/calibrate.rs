@@ -1,0 +1,209 @@
+//! Cost calibration: measure per-item compute costs of the *real*
+//! workload code on this host, so the DES's virtual times are grounded
+//! in measurements rather than invented constants.
+
+use std::time::Instant;
+
+use crate::data::object::{DataObject, Params};
+use crate::util::stats::median_of;
+
+/// Measured per-unit costs (seconds) for the workload kernels.
+#[derive(Clone, Debug)]
+pub struct CostDb {
+    /// One Monte-Carlo instance of `mc_iterations` points.
+    pub montecarlo_item: f64,
+    pub mc_iterations: i64,
+    /// One Mandelbrot row at width `mandel_width`, escape `mandel_iter`.
+    pub mandelbrot_row: f64,
+    pub mandel_width: i64,
+    pub mandel_iter: i64,
+    /// One Jacobi sweep at n = `jacobi_n`.
+    pub jacobi_sweep: f64,
+    pub jacobi_n: usize,
+    /// One N-body step at n = `nbody_n`.
+    pub nbody_step: f64,
+    pub nbody_n: usize,
+    /// One 5×5 stencil pass per pixel.
+    pub stencil_per_pixel: f64,
+    /// Concordance cost per word per n-value.
+    pub concordance_per_word: f64,
+    /// Goldbach check per even number.
+    pub goldbach_per_even: f64,
+}
+
+fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut ts = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        ts.push(t0.elapsed().as_secs_f64());
+    }
+    median_of(&ts)
+}
+
+/// Measure everything once (a second or two of wall clock).
+pub fn calibrate() -> CostDb {
+    use crate::workloads::*;
+
+    let mc_iterations = 100_000i64;
+    let montecarlo_item = time_median(3, || {
+        let mut d = montecarlo::PiData {
+            iterations: mc_iterations,
+            instance: 1,
+            ..Default::default()
+        };
+        let _ = d.call("getWithin", &Params::empty(), None);
+    });
+
+    let (mandel_width, mandel_iter) = (700i64, 100i64);
+    let mandelbrot_row = time_median(3, || {
+        let mut line = mandelbrot::MandelbrotLine {
+            row: 200,
+            width: mandel_width,
+            height: 400,
+            max_iterations: mandel_iter,
+            pixel_delta: 0.005,
+            x0: -2.45,
+            y0: -1.0,
+            ..Default::default()
+        };
+        let _ = line.call("computeLine", &Params::empty(), None);
+    });
+
+    let jacobi_n = 1024usize;
+    let jd = jacobi::generate_system(jacobi_n, 1, 1e-10);
+    let jacobi_sweep = time_median(3, || {
+        let calc = jacobi::calculation();
+        let st = &jd.state;
+        let ctx = crate::engines::state::CalcCtx {
+            consts: &st.consts,
+            const_dims: &st.const_dims,
+            current: &st.current,
+            meta: &st.meta,
+            stride: 1,
+            iteration: 0,
+        };
+        let mut out = vec![0.0; jacobi_n];
+        calc(&ctx, 0..jacobi_n, &mut out).unwrap();
+        std::hint::black_box(&out);
+    });
+
+    let nbody_n = 1024usize;
+    let nd = nbody::generate_bodies(nbody_n, 1, 0.01);
+    let nbody_step = time_median(3, || {
+        let calc = nbody::calculation();
+        let st = &nd.state;
+        let ctx = crate::engines::state::CalcCtx {
+            consts: &st.consts,
+            const_dims: &st.const_dims,
+            current: &st.current,
+            meta: &st.meta,
+            stride: nbody::STRIDE,
+            iteration: 0,
+        };
+        let mut out = vec![0.0; nbody_n * nbody::STRIDE];
+        calc(&ctx, 0..nbody_n, &mut out).unwrap();
+        std::hint::black_box(&out);
+    });
+
+    let (sw, sh) = (256usize, 256usize);
+    let img = image::generate_image(sw, sh, 1);
+    let stencil_total = time_median(3, || {
+        let (k, ks) = image::edge_kernel_5x5();
+        let conv = image::convolution_op(k, ks, 1.0, 0.0);
+        let st = &img.state;
+        let ctx = crate::engines::state::CalcCtx {
+            consts: &st.consts,
+            const_dims: &st.const_dims,
+            current: &st.current,
+            meta: &st.meta,
+            stride: st.stride,
+            iteration: 0,
+        };
+        let mut out = vec![0.0; st.current.len()];
+        conv(&ctx, 0..sh, &mut out).unwrap();
+        std::hint::black_box(&out);
+    });
+
+    let words = 20_000usize;
+    let text = corpus::generate(words, 3);
+    let conc_total = time_median(3, || {
+        let _ = concordance::sequential(&text, 4, 2).unwrap();
+    });
+
+    let gb_max = 20_000i64;
+    let gb_total = time_median(3, || {
+        let _ = goldbach::sequential(gb_max).unwrap();
+    });
+
+    CostDb {
+        montecarlo_item,
+        mc_iterations,
+        mandelbrot_row,
+        mandel_width,
+        mandel_iter,
+        jacobi_sweep,
+        jacobi_n,
+        nbody_step,
+        nbody_n,
+        stencil_per_pixel: stencil_total / (sw * sh) as f64,
+        concordance_per_word: conc_total / (words * 4) as f64,
+        goldbach_per_even: gb_total / (gb_max as f64),
+    }
+}
+
+impl CostDb {
+    /// Fixed representative costs (a 2015-era 4 GHz core) for tests and
+    /// docs where measuring would add noise; `calibrate()` supersedes
+    /// these in the benches.
+    pub fn nominal() -> Self {
+        Self {
+            montecarlo_item: 1.2e-3,
+            mc_iterations: 100_000,
+            mandelbrot_row: 0.9e-3,
+            mandel_width: 700,
+            mandel_iter: 100,
+            jacobi_sweep: 1.0e-3,
+            jacobi_n: 1024,
+            nbody_step: 9.0e-3,
+            nbody_n: 1024,
+            stencil_per_pixel: 6.0e-8,
+            concordance_per_word: 2.5e-7,
+            goldbach_per_even: 6.0e-7,
+        }
+    }
+
+    /// Scale a measured base cost across problem size (linear for rows /
+    /// items; quadratic for n-body pairs; etc. — callers pick).
+    pub fn scale_linear(base: f64, base_n: usize, n: usize) -> f64 {
+        base * n as f64 / base_n.max(1) as f64
+    }
+
+    pub fn scale_quadratic(base: f64, base_n: usize, n: usize) -> f64 {
+        let r = n as f64 / base_n.max(1) as f64;
+        base * r * r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_produces_positive_costs() {
+        let db = calibrate();
+        assert!(db.montecarlo_item > 0.0);
+        assert!(db.mandelbrot_row > 0.0);
+        assert!(db.jacobi_sweep > 0.0);
+        assert!(db.nbody_step > 0.0);
+        assert!(db.stencil_per_pixel > 0.0);
+        assert!(db.concordance_per_word > 0.0);
+        assert!(db.goldbach_per_even > 0.0);
+    }
+
+    #[test]
+    fn scaling_helpers() {
+        assert_eq!(CostDb::scale_linear(1.0, 100, 200), 2.0);
+        assert_eq!(CostDb::scale_quadratic(1.0, 100, 200), 4.0);
+    }
+}

@@ -1,0 +1,415 @@
+//! The virtual-time engine.
+//!
+//! Simulated processes are coroutines: `FnMut(Option<SimItem>) ->
+//! SimAction` closures that yield their next action — compute for some
+//! virtual time, rendezvous on a channel, hit a barrier, or finish.
+//! Channels have CSP rendezvous semantics (sender and receiver pair up
+//! FIFO; both pay `comm_cost/2`). Compute time advances under the
+//! machine's processor-sharing [`MachineConfig::rate`].
+
+use std::collections::VecDeque;
+
+use super::machine::MachineConfig;
+use crate::csp::error::{GppError, Result};
+
+/// The payload moved through simulated channels: the *downstream compute
+/// cost* the item will demand (plus workload-specific tags).
+pub type SimItem = f64;
+
+/// Terminator sentinel.
+pub const TERM: SimItem = -1.0;
+
+/// What a simulated process asks for next.
+pub enum SimAction {
+    /// Burn `f64` virtual CPU-seconds.
+    Compute(f64),
+    /// Rendezvous-write `SimItem` to channel.
+    Send(usize, SimItem),
+    /// Rendezvous-read from channel; value arrives at the next resume.
+    Recv(usize),
+    /// Synchronise on barrier `usize`.
+    Barrier(usize),
+    Done,
+}
+
+type Coro = Box<dyn FnMut(Option<SimItem>) -> SimAction>;
+
+enum PState {
+    /// Ready to resume with this value.
+    Ready(Option<SimItem>),
+    Computing { remaining: f64 },
+    BlockedSend,
+    BlockedRecv,
+    BlockedBarrier,
+    Done,
+}
+
+struct ChanState {
+    senders: VecDeque<(usize, SimItem)>,
+    receivers: VecDeque<usize>,
+}
+
+struct BarrierState {
+    parties: usize,
+    waiting: Vec<usize>,
+}
+
+/// The simulation.
+pub struct Des {
+    machines: Vec<MachineConfig>,
+    coros: Vec<Coro>,
+    /// Which machine each process runs on.
+    proc_machine: Vec<usize>,
+    states: Vec<PState>,
+    chans: Vec<ChanState>,
+    barriers: Vec<BarrierState>,
+    now: f64,
+}
+
+impl Des {
+    pub fn new(machine: MachineConfig) -> Self {
+        Self {
+            machines: vec![machine],
+            coros: Vec::new(),
+            proc_machine: Vec::new(),
+            states: Vec::new(),
+            chans: Vec::new(),
+            barriers: Vec::new(),
+            now: 0.0,
+        }
+    }
+
+    /// Add another machine (cluster nodes); returns its id.
+    pub fn add_machine(&mut self, m: MachineConfig) -> usize {
+        self.machines.push(m);
+        self.machines.len() - 1
+    }
+
+    pub fn add_channel(&mut self) -> usize {
+        self.chans.push(ChanState {
+            senders: VecDeque::new(),
+            receivers: VecDeque::new(),
+        });
+        self.chans.len() - 1
+    }
+
+    pub fn add_barrier(&mut self, parties: usize) -> usize {
+        self.barriers.push(BarrierState {
+            parties,
+            waiting: Vec::new(),
+        });
+        self.barriers.len() - 1
+    }
+
+    /// Spawn a process on machine 0.
+    pub fn spawn(&mut self, coro: impl FnMut(Option<SimItem>) -> SimAction + 'static) -> usize {
+        self.spawn_on(0, coro)
+    }
+
+    pub fn spawn_on(
+        &mut self,
+        machine: usize,
+        coro: impl FnMut(Option<SimItem>) -> SimAction + 'static,
+    ) -> usize {
+        let setup = self.machines[machine].setup_cost_per_proc;
+        self.coros.push(Box::new(coro));
+        self.proc_machine.push(machine);
+        // Process setup overhead: the paper's parallel-environment cost.
+        self.states.push(PState::Computing { remaining: setup });
+        self.states.len() - 1
+    }
+
+    /// Run to completion; returns total virtual time.
+    pub fn run(&mut self) -> Result<f64> {
+        loop {
+            // Phase 1: drain zero-time actions until quiescent.
+            let mut progressed = true;
+            while progressed {
+                progressed = false;
+                for pid in 0..self.states.len() {
+                    let resume = match &self.states[pid] {
+                        PState::Ready(v) => *v,
+                        _ => continue,
+                    };
+                    progressed = true;
+                    let action = (self.coros[pid])(resume);
+                    self.apply(pid, action);
+                }
+            }
+
+            // Phase 2: advance virtual time for computing processes.
+            let mut runnable_per_machine = vec![0usize; self.machines.len()];
+            let mut any_computing = false;
+            for (pid, st) in self.states.iter().enumerate() {
+                if matches!(st, PState::Computing { .. }) {
+                    runnable_per_machine[self.proc_machine[pid]] += 1;
+                    any_computing = true;
+                }
+            }
+            if !any_computing {
+                // No compute, no ready work: either all done or deadlock.
+                let all_done = self.states.iter().all(|s| matches!(s, PState::Done));
+                if all_done {
+                    return Ok(self.now);
+                }
+                let blocked = self
+                    .states
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| !matches!(s, PState::Done))
+                    .map(|(i, _)| i)
+                    .collect::<Vec<_>>();
+                return Err(GppError::Sim(format!(
+                    "simulation deadlock at t={}: blocked processes {blocked:?}",
+                    self.now
+                )));
+            }
+
+            let rates: Vec<f64> = runnable_per_machine
+                .iter()
+                .enumerate()
+                .map(|(m, &r)| self.machines[m].rate(r))
+                .collect();
+
+            // Next completion.
+            let mut dt = f64::INFINITY;
+            for (pid, st) in self.states.iter().enumerate() {
+                if let PState::Computing { remaining } = st {
+                    let rate = rates[self.proc_machine[pid]];
+                    dt = dt.min(remaining / rate);
+                }
+            }
+            debug_assert!(dt.is_finite());
+            self.now += dt;
+            for pid in 0..self.states.len() {
+                if let PState::Computing { remaining } = &mut self.states[pid] {
+                    let rate = rates[self.proc_machine[pid]];
+                    *remaining -= dt * rate;
+                    if *remaining <= 1e-15 {
+                        self.states[pid] = PState::Ready(None);
+                    }
+                }
+            }
+        }
+    }
+
+    fn apply(&mut self, pid: usize, action: SimAction) {
+        match action {
+            SimAction::Done => self.states[pid] = PState::Done,
+            SimAction::Compute(t) => {
+                if t <= 0.0 {
+                    self.states[pid] = PState::Ready(None);
+                } else {
+                    self.states[pid] = PState::Computing { remaining: t };
+                }
+            }
+            SimAction::Send(ch, item) => {
+                if let Some(rpid) = self.chans[ch].receivers.pop_front() {
+                    // Rendezvous completes: both pay half the comm cost.
+                    let cost = self.machines[self.proc_machine[pid]].comm_cost / 2.0;
+                    self.states[pid] = PState::Computing { remaining: cost.max(1e-12) };
+                    self.states[rpid] = PState::Ready(Some(item));
+                    // Receiver pays its half before resuming: fold into
+                    // the item hand-off by a tiny compute on the sender
+                    // side only (keeps the engine simple; total cost is
+                    // comm_cost per rendezvous as configured).
+                    if let PState::Computing { remaining } = &mut self.states[pid] {
+                        *remaining += cost;
+                    }
+                } else {
+                    self.chans[ch].senders.push_back((pid, item));
+                    self.states[pid] = PState::BlockedSend;
+                }
+            }
+            SimAction::Recv(ch) => {
+                if let Some((spid, item)) = self.chans[ch].senders.pop_front() {
+                    let cost = self.machines[self.proc_machine[pid]].comm_cost;
+                    self.states[spid] = PState::Ready(None);
+                    self.states[pid] = PState::Computing { remaining: cost.max(1e-12) };
+                    // Deliver the item when the comm cost elapses: stash
+                    // it by swapping the coroutine resume path — we model
+                    // this by immediately Ready-ing with the item and
+                    // charging the cost to the sender instead.
+                    self.states[pid] = PState::Ready(Some(item));
+                    if let PState::Ready(_) = self.states[spid] {
+                        self.states[spid] = PState::Computing { remaining: cost };
+                    }
+                } else {
+                    self.chans[ch].receivers.push_back(pid);
+                    self.states[pid] = PState::BlockedRecv;
+                }
+            }
+            SimAction::Barrier(b) => {
+                self.barriers[b].waiting.push(pid);
+                if self.barriers[b].waiting.len() == self.barriers[b].parties {
+                    for &w in &self.barriers[b].waiting {
+                        self.states[w] = PState::Ready(None);
+                    }
+                    self.barriers[b].waiting.clear();
+                } else {
+                    self.states[pid] = PState::BlockedBarrier;
+                }
+            }
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zero_overhead() -> MachineConfig {
+        MachineConfig {
+            comm_cost: 0.0,
+            setup_cost_per_proc: 0.0,
+            ..MachineConfig::i7_4790k()
+        }
+    }
+
+    #[test]
+    fn single_compute_takes_its_time() {
+        let mut des = Des::new(zero_overhead());
+        let mut fired = false;
+        des.spawn(move |_| {
+            if fired {
+                SimAction::Done
+            } else {
+                fired = true;
+                SimAction::Compute(2.5)
+            }
+        });
+        let t = des.run().unwrap();
+        assert!((t - 2.5).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn four_parallel_computes_fit_four_cores() {
+        let mut des = Des::new(zero_overhead());
+        for _ in 0..4 {
+            let mut fired = false;
+            des.spawn(move |_| {
+                if fired {
+                    SimAction::Done
+                } else {
+                    fired = true;
+                    SimAction::Compute(1.0)
+                }
+            });
+        }
+        let t = des.run().unwrap();
+        assert!((t - 1.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn eight_computes_use_ht_capacity() {
+        let mut des = Des::new(zero_overhead());
+        for _ in 0..8 {
+            let mut fired = false;
+            des.spawn(move |_| {
+                if fired {
+                    SimAction::Done
+                } else {
+                    fired = true;
+                    SimAction::Compute(1.0)
+                }
+            });
+        }
+        let t = des.run().unwrap();
+        // Capacity 5.0 → 8 units of work in 8/5 = 1.6 virtual seconds.
+        assert!((t - 1.6).abs() < 1e-6, "t={t}");
+    }
+
+    #[test]
+    fn rendezvous_passes_item() {
+        let mut des = Des::new(zero_overhead());
+        let ch = des.add_channel();
+        let mut step = 0;
+        des.spawn(move |_| {
+            step += 1;
+            match step {
+                1 => SimAction::Send(ch, 7.5),
+                _ => SimAction::Done,
+            }
+        });
+        let mut rstep = 0;
+        let got = std::rc::Rc::new(std::cell::Cell::new(0.0f64));
+        let got2 = got.clone();
+        des.spawn(move |resume| {
+            rstep += 1;
+            match rstep {
+                1 => SimAction::Recv(ch),
+                _ => {
+                    if let Some(v) = resume {
+                        got2.set(v);
+                    }
+                    SimAction::Done
+                }
+            }
+        });
+        des.run().unwrap();
+        assert_eq!(got.get(), 7.5);
+    }
+
+    #[test]
+    fn unmatched_recv_deadlocks_with_diagnostic() {
+        let mut des = Des::new(zero_overhead());
+        let ch = des.add_channel();
+        let mut step = 0;
+        des.spawn(move |_| {
+            step += 1;
+            if step == 1 {
+                SimAction::Recv(ch)
+            } else {
+                SimAction::Done
+            }
+        });
+        let err = des.run().unwrap_err();
+        assert!(err.to_string().contains("deadlock"));
+    }
+
+    #[test]
+    fn barrier_releases_all_parties() {
+        let mut des = Des::new(zero_overhead());
+        let b = des.add_barrier(3);
+        for k in 0..3usize {
+            let mut step = 0;
+            des.spawn(move |_| {
+                step += 1;
+                match step {
+                    1 => SimAction::Compute(0.1 * (k + 1) as f64),
+                    2 => SimAction::Barrier(b),
+                    _ => SimAction::Done,
+                }
+            });
+        }
+        let t = des.run().unwrap();
+        // All wait for the slowest (0.3).
+        assert!((t - 0.3).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn two_machines_do_not_contend() {
+        let mut des = Des::new(zero_overhead());
+        let m2 = des.add_machine(zero_overhead());
+        // 4 heavy jobs on each machine: still 1.0 virtual seconds.
+        for m in [0, m2] {
+            for _ in 0..4 {
+                let mut fired = false;
+                des.spawn_on(m, move |_| {
+                    if fired {
+                        SimAction::Done
+                    } else {
+                        fired = true;
+                        SimAction::Compute(1.0)
+                    }
+                });
+            }
+        }
+        let t = des.run().unwrap();
+        assert!((t - 1.0).abs() < 1e-9, "t={t}");
+    }
+}

@@ -1,0 +1,117 @@
+//! The simulated machine model.
+
+/// One simulated multicore machine (default: the paper's i7-4790K).
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    /// Physical cores.
+    pub cores: usize,
+    /// Hardware threads per core (hyper-threading).
+    pub threads_per_core: usize,
+    /// Extra throughput a core gains from its second thread (the paper
+    /// sees little HT benefit; 0.25 matches its 4→8 process plateau).
+    pub ht_boost: f64,
+    /// Log-factor throughput penalty when runnable > hardware threads
+    /// (scheduling + shared cache/memory contention, §11.6).
+    pub oversub_penalty: f64,
+    /// Virtual seconds per channel rendezvous (both parties pay half).
+    pub comm_cost: f64,
+    /// One-off virtual seconds to set up each process (thread spawn).
+    pub setup_cost_per_proc: f64,
+}
+
+impl MachineConfig {
+    /// The paper's test PC (Appendix C).
+    pub fn i7_4790k() -> Self {
+        Self {
+            cores: 4,
+            threads_per_core: 2,
+            ht_boost: 0.25,
+            oversub_penalty: 0.06,
+            comm_cost: 4e-6,
+            setup_cost_per_proc: 120e-6,
+        }
+    }
+
+    /// A cluster workstation node (same CPU, used by Table 9).
+    pub fn workstation() -> Self {
+        Self::i7_4790k()
+    }
+
+    pub fn hardware_threads(&self) -> usize {
+        self.cores * self.threads_per_core
+    }
+
+    /// Processor-sharing rate for each of `runnable` compute-bound
+    /// processes.
+    pub fn rate(&self, runnable: usize) -> f64 {
+        if runnable == 0 {
+            return 1.0;
+        }
+        let r = runnable as f64;
+        let c = self.cores as f64;
+        if r <= c {
+            return 1.0;
+        }
+        // Total throughput: cores plus fractional HT gain, saturating at
+        // the full boost once every core runs two threads.
+        let extra_threads = (r - c).min(c * (self.threads_per_core as f64 - 1.0));
+        let capacity = c + extra_threads * self.ht_boost;
+        let threads = self.hardware_threads() as f64;
+        let oversub = if r > threads {
+            1.0 + self.oversub_penalty * (r / threads).ln()
+        } else {
+            1.0
+        };
+        (capacity / r / oversub).min(1.0)
+    }
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        Self::i7_4790k()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn underloaded_runs_full_speed() {
+        let m = MachineConfig::i7_4790k();
+        for r in 1..=4 {
+            assert_eq!(m.rate(r), 1.0, "runnable={r}");
+        }
+    }
+
+    #[test]
+    fn ht_region_shares_capacity() {
+        let m = MachineConfig::i7_4790k();
+        // 8 runnable on 4 cores + HT: capacity 4 + 4*0.25 = 5 → rate 0.625.
+        let rate = m.rate(8);
+        assert!((rate - 5.0 / 8.0).abs() < 1e-9, "rate={rate}");
+        // Aggregate throughput grows from 4 to 5.
+        assert!((8.0 * rate - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oversubscription_decays_throughput() {
+        let m = MachineConfig::i7_4790k();
+        let t8 = 8.0 * m.rate(8);
+        let t32 = 32.0 * m.rate(32);
+        let t256 = 256.0 * m.rate(256);
+        assert!(t32 < t8);
+        assert!(t256 < t32);
+    }
+
+    #[test]
+    fn rate_monotone_nonincreasing() {
+        let m = MachineConfig::i7_4790k();
+        let mut last = f64::INFINITY;
+        for r in 1..300 {
+            let rate = m.rate(r);
+            assert!(rate <= last + 1e-12, "rate must not increase at {r}");
+            last = rate;
+        }
+    }
+}

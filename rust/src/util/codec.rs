@@ -1,0 +1,207 @@
+//! A miniature binary wire codec (no `serde`/`bincode` offline).
+//!
+//! Little-endian, length-prefixed; used by [`crate::net`] to move data
+//! objects between cluster nodes and by the artifact cache metadata.
+//! Types implement [`Wire`]; collections and options compose.
+
+use crate::csp::error::{GppError, Result};
+
+/// Serialize into / deserialize from a byte buffer.
+pub trait Wire: Sized {
+    fn encode(&self, out: &mut Vec<u8>);
+    fn decode(input: &mut &[u8]) -> Result<Self>;
+}
+
+fn need(input: &&[u8], n: usize) -> Result<()> {
+    if input.len() < n {
+        Err(GppError::Codec(format!(
+            "truncated input: need {n} bytes, have {}",
+            input.len()
+        )))
+    } else {
+        Ok(())
+    }
+}
+
+macro_rules! wire_num {
+    ($t:ty) => {
+        impl Wire for $t {
+            fn encode(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn decode(input: &mut &[u8]) -> Result<Self> {
+                const N: usize = std::mem::size_of::<$t>();
+                need(input, N)?;
+                let (head, rest) = input.split_at(N);
+                *input = rest;
+                Ok(<$t>::from_le_bytes(head.try_into().unwrap()))
+            }
+        }
+    };
+}
+
+wire_num!(u8);
+wire_num!(u16);
+wire_num!(u32);
+wire_num!(u64);
+wire_num!(i32);
+wire_num!(i64);
+wire_num!(f32);
+wire_num!(f64);
+
+impl Wire for usize {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as u64).encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(u64::decode(input)? as usize)
+    }
+}
+
+impl Wire for bool {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(*self as u8);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(u8::decode(input)? != 0)
+    }
+}
+
+impl Wire for String {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.len().encode(out);
+        out.extend_from_slice(self.as_bytes());
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        let n = usize::decode(input)?;
+        need(input, n)?;
+        let (head, rest) = input.split_at(n);
+        *input = rest;
+        String::from_utf8(head.to_vec())
+            .map_err(|e| GppError::Codec(format!("invalid utf8: {e}")))
+    }
+}
+
+impl<T: Wire> Wire for Vec<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.len().encode(out);
+        for item in self {
+            item.encode(out);
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        let n = usize::decode(input)?;
+        // Guard against hostile/corrupt lengths.
+        if n > 1 << 30 {
+            return Err(GppError::Codec(format!("implausible length {n}")));
+        }
+        let mut v = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            v.push(T::decode(input)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<T: Wire> Wire for Option<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Some(x) => {
+                out.push(1);
+                x.encode(out);
+            }
+            None => out.push(0),
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        match u8::decode(input)? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(input)?)),
+            tag => Err(GppError::Codec(format!("bad Option tag {tag}"))),
+        }
+    }
+}
+
+impl<A: Wire, B: Wire> Wire for (A, B) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok((A::decode(input)?, B::decode(input)?))
+    }
+}
+
+/// Encode a value into a fresh buffer.
+pub fn to_bytes<T: Wire>(x: &T) -> Vec<u8> {
+    let mut out = Vec::new();
+    x.encode(&mut out);
+    out
+}
+
+/// Decode a value, requiring the buffer to be fully consumed.
+pub fn from_bytes<T: Wire>(bytes: &[u8]) -> Result<T> {
+    let mut input = bytes;
+    let v = T::decode(&mut input)?;
+    if !input.is_empty() {
+        return Err(GppError::Codec(format!(
+            "{} trailing bytes after decode",
+            input.len()
+        )));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn roundtrip_primitives() {
+        assert_eq!(from_bytes::<u64>(&to_bytes(&42u64)).unwrap(), 42);
+        assert_eq!(from_bytes::<f64>(&to_bytes(&-1.5f64)).unwrap(), -1.5);
+        assert_eq!(from_bytes::<bool>(&to_bytes(&true)).unwrap(), true);
+        assert_eq!(
+            from_bytes::<String>(&to_bytes(&"héllo".to_string())).unwrap(),
+            "héllo"
+        );
+    }
+
+    #[test]
+    fn roundtrip_compound() {
+        let v: Vec<(u32, String)> = vec![(1, "a".into()), (2, "bb".into())];
+        assert_eq!(from_bytes::<Vec<(u32, String)>>(&to_bytes(&v)).unwrap(), v);
+        let o: Option<Vec<f32>> = Some(vec![1.0, 2.0]);
+        assert_eq!(from_bytes::<Option<Vec<f32>>>(&to_bytes(&o)).unwrap(), o);
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let bytes = to_bytes(&12345u64);
+        assert!(from_bytes::<u64>(&bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_error() {
+        let mut bytes = to_bytes(&1u32);
+        bytes.push(0);
+        assert!(from_bytes::<u32>(&bytes).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_vec_u32() {
+        forall("codec roundtrip Vec<u32>", 100, |g| {
+            let v = g.vec_u32(0, 100, u32::MAX);
+            from_bytes::<Vec<u32>>(&to_bytes(&v)).unwrap() == v
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_vec_f64() {
+        forall("codec roundtrip Vec<f64>", 100, |g| {
+            let v = g.vec_f64(0, 100, -1e9, 1e9);
+            from_bytes::<Vec<f64>>(&to_bytes(&v)).unwrap() == v
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Hand-rolled infrastructure.
+//!
+//! The offline registry for this build carries only `xla` and `anyhow`,
+//! so the small frameworks a crate would normally pull in (a PRNG, a
+//! property-testing loop, a criterion-style bench harness, a CLI parser,
+//! a wire codec) are implemented here. Each is deliberately minimal but
+//! real: they are used throughout the library, its tests and its benches.
+
+pub mod rng;
+pub mod prop;
+pub mod bench;
+pub mod cli;
+pub mod codec;
+pub mod stats;

@@ -1,0 +1,163 @@
+//! A miniature property-based testing framework.
+//!
+//! The vendored registry has no `proptest`, so the coordinator
+//! invariants are exercised with this 200-line stand-in. It provides the
+//! pieces the tests actually need: seeded generators, a configurable
+//! case count, greedy input shrinking for failing cases, and a panic
+//! message carrying the reproducing seed.
+//!
+//! ```no_run
+//! use gpp::util::prop::{forall, Gen};
+//! forall("vec reverse twice is identity", 100, |g| {
+//!     let xs = g.vec_u32(0, 64, 1000);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     xs == ys
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generator handle passed to property closures.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint, grows with the case index so early cases are small.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Rng::new(seed), size }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            return lo;
+        }
+        lo + self.rng.next_bounded((hi - lo) as u64 + 1) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vec of u32 with random length in [min_len, max_len], values < bound.
+    pub fn vec_u32(&mut self, min_len: usize, max_len: usize, bound: u32) -> Vec<u32> {
+        let len = self.usize_in(min_len, max_len.min(min_len + self.size));
+        (0..len).map(|_| self.rng.next_bounded(bound as u64) as u32).collect()
+    }
+
+    pub fn vec_f64(&mut self, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let len = self.usize_in(min_len, max_len.min(min_len + self.size));
+        (0..len).map(|_| self.rng.range_f64(lo, hi)).collect()
+    }
+
+    /// Pick one of the provided items.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with a reproducing seed on
+/// the first failure. The property returns `true` on success.
+pub fn forall<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> bool,
+{
+    let base_seed = match std::env::var("GPP_PROP_SEED") {
+        Ok(s) => s.parse::<u64>().unwrap_or(0x9E3779B97F4A7C15),
+        Err(_) => 0x9E3779B97F4A7C15,
+    };
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let size = 1 + case * 64 / cases.max(1);
+        let mut g = Gen::new(seed, size);
+        if !prop(&mut g) {
+            // Greedy "shrink": retry with progressively smaller sizes on
+            // the same seed and report the smallest size that still fails.
+            let mut min_fail_size = size;
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut g2 = Gen::new(seed, s);
+                if !prop(&mut g2) {
+                    min_fail_size = s;
+                }
+            }
+            panic!(
+                "property '{name}' failed: case {case}, seed {seed}, \
+                 min failing size {min_fail_size} \
+                 (rerun with GPP_PROP_SEED={seed})"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result`, failing with a
+/// message that is included in the panic.
+pub fn forall_res<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = 0xDEADBEEFCAFEF00Du64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64 * 0x9E37);
+        let size = 1 + case * 64 / cases.max(1);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed: case {case}, seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trivially_true_property_passes() {
+        forall("true", 50, |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'false'")]
+    fn trivially_false_property_panics() {
+        forall("false", 5, |_| false);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        forall("usize_in respects bounds", 200, |g| {
+            let lo = g.usize_in(0, 50);
+            let hi = lo + g.usize_in(0, 50);
+            let x = g.usize_in(lo, hi);
+            x >= lo && x <= hi
+        });
+    }
+
+    #[test]
+    fn vec_lengths_respected() {
+        forall("vec_u32 length bounds", 100, |g| {
+            let v = g.vec_u32(2, 40, 10);
+            v.len() >= 2 && v.len() <= 40 && v.iter().all(|&x| x < 10)
+        });
+    }
+
+    #[test]
+    fn forall_res_reports_ok() {
+        forall_res("always ok", 20, |_| Ok(()));
+    }
+}

@@ -1,0 +1,470 @@
+//! The FDR4-style assertions: deadlock freedom, divergence freedom,
+//! determinism, traces refinement and stable-failures refinement.
+
+use std::collections::{BTreeSet, HashMap, VecDeque};
+
+use super::lts::{Label, Lts};
+use super::syntax::Interner;
+use crate::csp::error::Result;
+
+/// Outcome of a check, with a counterexample trace where applicable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CheckResult {
+    Holds,
+    Fails { reason: String, trace: Vec<String> },
+}
+
+impl CheckResult {
+    pub fn holds(&self) -> bool {
+        matches!(self, CheckResult::Holds)
+    }
+}
+
+/// Checker over an explored LTS.
+pub struct Checker<'a> {
+    pub lts: &'a Lts,
+    pub interner: &'a Interner,
+}
+
+impl<'a> Checker<'a> {
+    pub fn new(lts: &'a Lts, interner: &'a Interner) -> Self {
+        Self { lts, interner }
+    }
+
+    fn render_trace(&self, trace: &[Label]) -> Vec<String> {
+        trace
+            .iter()
+            .map(|l| match l {
+                Label::Tau => "τ".to_string(),
+                Label::Tick => "✓".to_string(),
+                Label::Vis(e) => self.interner.name(*e),
+            })
+            .collect()
+    }
+
+    /// `assert P :[deadlock free]` — no reachable state without
+    /// transitions except successful termination (Omega).
+    pub fn deadlock_free(&self) -> CheckResult {
+        for (s, outs) in self.lts.edges.iter().enumerate() {
+            if outs.is_empty() && self.lts.keys[s] != "W" {
+                return CheckResult::Fails {
+                    reason: format!("deadlock in state {s}"),
+                    trace: self.render_trace(&self.lts.trace_to[s]),
+                };
+            }
+        }
+        CheckResult::Holds
+    }
+
+    /// `assert P :[divergence free]` — no reachable tau cycle
+    /// (livelock). Detected by DFS for a cycle in the tau-only graph.
+    pub fn divergence_free(&self) -> CheckResult {
+        #[derive(Clone, Copy, PartialEq)]
+        enum Mark {
+            White,
+            Grey,
+            Black,
+        }
+        let n = self.lts.states();
+        let mut mark = vec![Mark::White; n];
+        for start in 0..n {
+            if mark[start] != Mark::White {
+                continue;
+            }
+            // Iterative DFS with explicit stack of (node, edge cursor).
+            let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+            mark[start] = Mark::Grey;
+            while let Some(&mut (s, ref mut cursor)) = stack.last_mut() {
+                let tau_targets: Vec<usize> = self.lts.edges[s]
+                    .iter()
+                    .filter(|(l, _)| *l == Label::Tau)
+                    .map(|(_, t)| *t)
+                    .collect();
+                if *cursor < tau_targets.len() {
+                    let t = tau_targets[*cursor];
+                    *cursor += 1;
+                    match mark[t] {
+                        Mark::Grey => {
+                            return CheckResult::Fails {
+                                reason: format!("tau cycle through state {t}"),
+                                trace: self.render_trace(&self.lts.trace_to[t]),
+                            };
+                        }
+                        Mark::White => {
+                            mark[t] = Mark::Grey;
+                            stack.push((t, 0));
+                        }
+                        Mark::Black => {}
+                    }
+                } else {
+                    mark[s] = Mark::Black;
+                    stack.pop();
+                }
+            }
+        }
+        CheckResult::Holds
+    }
+
+    /// `assert P :[deterministic]` — FDR's condition: no trace after
+    /// which some event can be both accepted and (stably) refused.
+    pub fn deterministic(&self) -> CheckResult {
+        // Subset construction over tau-closures.
+        let init: BTreeSet<usize> = self.lts.tau_closure(&[self.lts.init].into());
+        let mut seen: HashMap<BTreeSet<usize>, Vec<Label>> = HashMap::new();
+        let mut queue: VecDeque<BTreeSet<usize>> = VecDeque::new();
+        seen.insert(init.clone(), Vec::new());
+        queue.push_back(init);
+
+        while let Some(set) = queue.pop_front() {
+            let trace = seen[&set].clone();
+            // All visible labels enabled anywhere in the closure.
+            let mut enabled: BTreeSet<Label> = BTreeSet::new();
+            for &s in &set {
+                enabled.extend(self.lts.initials(s));
+            }
+            for &l in &enabled {
+                // Nondeterministic if a stable member refuses l.
+                for &s in &set {
+                    if self.lts.is_stable(s) && !self.lts.initials(s).contains(&l) {
+                        let mut tr = self.render_trace(&trace);
+                        tr.push(format!(
+                            "event {} both offered and refused",
+                            match l {
+                                Label::Vis(e) => self.interner.name(e),
+                                Label::Tick => "✓".into(),
+                                Label::Tau => "τ".into(),
+                            }
+                        ));
+                        return CheckResult::Fails {
+                            reason: "nondeterminism".into(),
+                            trace: tr,
+                        };
+                    }
+                }
+                // Successor subset.
+                if let Label::Vis(_) = l {
+                    let mut next: BTreeSet<usize> = BTreeSet::new();
+                    for &s in &set {
+                        for &(el, t) in &self.lts.edges[s] {
+                            if el == l {
+                                next.insert(t);
+                            }
+                        }
+                    }
+                    let next = self.lts.tau_closure(&next);
+                    if !seen.contains_key(&next) {
+                        let mut tr = trace.clone();
+                        tr.push(l);
+                        seen.insert(next.clone(), tr);
+                        queue.push_back(next);
+                    }
+                }
+            }
+        }
+        CheckResult::Holds
+    }
+}
+
+/// Determinised view of a spec LTS: subset states with acceptance sets.
+struct DetSpec {
+    /// subset-state id → (visible-label → next subset-state id)
+    next: Vec<HashMap<Label, usize>>,
+    /// subset-state id → minimal acceptance sets (initials of stable
+    /// members); empty vec ⇒ no stable member (spec can diverge/always
+    /// unstable — treat as accepting anything).
+    acceptances: Vec<Vec<BTreeSet<Label>>>,
+    init: usize,
+}
+
+fn determinise(spec: &Lts) -> DetSpec {
+    let mut ids: HashMap<BTreeSet<usize>, usize> = HashMap::new();
+    let mut next: Vec<HashMap<Label, usize>> = Vec::new();
+    let mut acceptances: Vec<Vec<BTreeSet<Label>>> = Vec::new();
+    let mut queue: VecDeque<BTreeSet<usize>> = VecDeque::new();
+
+    let init_set = spec.tau_closure(&[spec.init].into());
+    ids.insert(init_set.clone(), 0);
+    next.push(HashMap::new());
+    acceptances.push(Vec::new());
+    queue.push_back(init_set);
+
+    while let Some(set) = queue.pop_front() {
+        let id = ids[&set];
+        // Acceptances: initials of stable members, antichain-minimised.
+        let mut accs: Vec<BTreeSet<Label>> = set
+            .iter()
+            .filter(|&&s| spec.is_stable(s))
+            .map(|&s| spec.initials(s))
+            .collect();
+        accs.sort_by_key(|a| a.len());
+        let mut minimal: Vec<BTreeSet<Label>> = Vec::new();
+        for a in accs {
+            if !minimal.iter().any(|m| m.is_subset(&a)) {
+                minimal.push(a);
+            }
+        }
+        acceptances[id] = minimal;
+
+        // Successors per visible label.
+        let mut succ: HashMap<Label, BTreeSet<usize>> = HashMap::new();
+        for &s in &set {
+            for &(l, t) in &spec.edges[s] {
+                if l != Label::Tau {
+                    succ.entry(l).or_default().insert(t);
+                }
+            }
+        }
+        for (l, targets) in succ {
+            let closed = spec.tau_closure(&targets);
+            let nid = match ids.get(&closed) {
+                Some(&nid) => nid,
+                None => {
+                    let nid = next.len();
+                    ids.insert(closed.clone(), nid);
+                    next.push(HashMap::new());
+                    acceptances.push(Vec::new());
+                    queue.push_back(closed);
+                    nid
+                }
+            };
+            next[id].insert(l, nid);
+        }
+    }
+    DetSpec {
+        next,
+        acceptances,
+        init: 0,
+    }
+}
+
+/// `assert Spec [T= Impl` — traces refinement.
+pub fn traces_refines(
+    spec: &Lts,
+    impl_: &Lts,
+    interner: &Interner,
+) -> Result<CheckResult> {
+    let det = determinise(spec);
+    refine_inner(&det, impl_, interner, false)
+}
+
+/// `assert Spec [F= Impl` — stable-failures refinement (traces plus
+/// acceptance containment).
+pub fn failures_refines(
+    spec: &Lts,
+    impl_: &Lts,
+    interner: &Interner,
+) -> Result<CheckResult> {
+    let det = determinise(spec);
+    refine_inner(&det, impl_, interner, true)
+}
+
+fn refine_inner(
+    det: &DetSpec,
+    impl_: &Lts,
+    interner: &Interner,
+    failures: bool,
+) -> Result<CheckResult> {
+    let render = |l: &Label| -> String {
+        match l {
+            Label::Tau => "τ".into(),
+            Label::Tick => "✓".into(),
+            Label::Vis(e) => interner.name(*e),
+        }
+    };
+
+    // Pair exploration (det spec state, impl state).
+    let mut seen: HashMap<(usize, usize), Vec<Label>> = HashMap::new();
+    let mut queue: VecDeque<(usize, usize)> = VecDeque::new();
+    seen.insert((det.init, impl_.init), Vec::new());
+    queue.push_back((det.init, impl_.init));
+
+    while let Some((ds, is)) = queue.pop_front() {
+        let trace = seen[&(ds, is)].clone();
+
+        // Failures: a stable impl state must offer at least one spec
+        // acceptance set in full (its refusal must be allowed).
+        if failures && impl_.is_stable(is) && !det.acceptances[ds].is_empty() {
+            let impl_initials = impl_.initials(is);
+            let ok = det.acceptances[ds]
+                .iter()
+                .any(|acc| acc.is_subset(&impl_initials));
+            if !ok {
+                let mut tr: Vec<String> = trace.iter().map(&render).collect();
+                tr.push(format!(
+                    "impl stably offers only {{{}}}",
+                    impl_initials
+                        .iter()
+                        .map(&render)
+                        .collect::<Vec<_>>()
+                        .join(",")
+                ));
+                return Ok(CheckResult::Fails {
+                    reason: "failures refinement violated (illegal refusal)".into(),
+                    trace: tr,
+                });
+            }
+        }
+
+        for &(l, t) in &impl_.edges[is] {
+            match l {
+                Label::Tau => {
+                    if seen.insert((ds, t), trace.clone()).is_none() {
+                        queue.push_back((ds, t));
+                    }
+                }
+                l => {
+                    match det.next[ds].get(&l) {
+                        Some(&dn) => {
+                            let mut tr = trace.clone();
+                            tr.push(l);
+                            if seen.insert((dn, t), tr).is_none() {
+                                queue.push_back((dn, t));
+                            }
+                        }
+                        None => {
+                            let mut tr: Vec<String> = trace.iter().map(&render).collect();
+                            tr.push(render(&l));
+                            return Ok(CheckResult::Fails {
+                                reason: "trace of impl not allowed by spec".into(),
+                                trace: tr,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(CheckResult::Holds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verify::syntax::{Env, Interner, Proc};
+
+    fn lts(p: &Proc) -> Lts {
+        Lts::explore(p, &Env::new()).unwrap()
+    }
+
+    #[test]
+    fn stop_deadlocks() {
+        let i = Interner::new();
+        let a = i.intern("a");
+        let p = Proc::prefix(a, Proc::Stop);
+        let l = lts(&p);
+        let c = Checker::new(&l, &i);
+        let r = c.deadlock_free();
+        assert!(!r.holds());
+        if let CheckResult::Fails { trace, .. } = r {
+            assert_eq!(trace, vec!["a"]);
+        }
+    }
+
+    #[test]
+    fn skip_is_deadlock_free() {
+        let i = Interner::new();
+        let a = i.intern("a");
+        let p = Proc::prefix(a, Proc::Skip);
+        let l = lts(&p);
+        assert!(Checker::new(&l, &i).deadlock_free().holds());
+    }
+
+    #[test]
+    fn hidden_loop_diverges() {
+        let i = Interner::new();
+        let a = i.intern("a");
+        let mut env = Env::new();
+        env.define("L", move |_| Proc::prefix(a, Proc::call("L", &[])));
+        let p = Proc::hide(Proc::call("L", &[]), [a].into());
+        let l = Lts::explore(&p, &env).unwrap();
+        assert!(!Checker::new(&l, &i).divergence_free().holds());
+    }
+
+    #[test]
+    fn visible_loop_does_not_diverge() {
+        let i = Interner::new();
+        let a = i.intern("a");
+        let mut env = Env::new();
+        env.define("L", move |_| Proc::prefix(a, Proc::call("L", &[])));
+        let l = Lts::explore(&Proc::call("L", &[]), &env).unwrap();
+        assert!(Checker::new(&l, &i).divergence_free().holds());
+    }
+
+    #[test]
+    fn internal_choice_is_nondeterministic() {
+        let i = Interner::new();
+        let a = i.intern("a");
+        let b = i.intern("b");
+        let p = Proc::IntChoice(vec![
+            Proc::prefix(a, Proc::Stop),
+            Proc::prefix(b, Proc::Stop),
+        ]);
+        let l = lts(&p);
+        assert!(!Checker::new(&l, &i).deterministic().holds());
+    }
+
+    #[test]
+    fn external_choice_is_deterministic() {
+        let i = Interner::new();
+        let a = i.intern("a");
+        let b = i.intern("b");
+        let p = Proc::ext_choice(vec![
+            Proc::prefix(a, Proc::Stop),
+            Proc::prefix(b, Proc::Stop),
+        ]);
+        let l = lts(&p);
+        assert!(Checker::new(&l, &i).deterministic().holds());
+    }
+
+    #[test]
+    fn traces_refinement_subset() {
+        let i = Interner::new();
+        let a = i.intern("a");
+        let b = i.intern("b");
+        // Spec allows a then b; impl only does a: refines.
+        let spec = Proc::prefixes(&[a, b], Proc::Stop);
+        let impl_ = Proc::prefix(a, Proc::Stop);
+        let ls = lts(&spec);
+        let li = lts(&impl_);
+        assert!(traces_refines(&ls, &li, &i).unwrap().holds());
+        // Reverse: spec=only-a cannot be refined by a-then-b.
+        let r = traces_refines(&li, &ls, &i).unwrap();
+        assert!(!r.holds());
+    }
+
+    #[test]
+    fn failures_catch_illegal_refusal() {
+        let i = Interner::new();
+        let a = i.intern("a");
+        let b = i.intern("b");
+        // Spec: deterministic a [] b (must offer both).
+        let spec = Proc::ext_choice(vec![
+            Proc::prefix(a, Proc::Stop),
+            Proc::prefix(b, Proc::Stop),
+        ]);
+        // Impl: internal choice — may refuse either.
+        let impl_ = Proc::IntChoice(vec![
+            Proc::prefix(a, Proc::Stop),
+            Proc::prefix(b, Proc::Stop),
+        ]);
+        let ls = lts(&spec);
+        let li = lts(&impl_);
+        // Traces refine (same traces)…
+        assert!(traces_refines(&ls, &li, &i).unwrap().holds());
+        // …but failures do not.
+        assert!(!failures_refines(&ls, &li, &i).unwrap().holds());
+        // And the internal choice is refined BY the external one.
+        assert!(failures_refines(&li, &ls, &i).unwrap().holds());
+    }
+
+    #[test]
+    fn failures_equivalence_of_identical_processes() {
+        let i = Interner::new();
+        let a = i.intern("a");
+        let p = Proc::prefix(a, Proc::Skip);
+        let l1 = lts(&p);
+        let l2 = lts(&p);
+        assert!(failures_refines(&l1, &l2, &i).unwrap().holds());
+        assert!(failures_refines(&l2, &l1, &i).unwrap().holds());
+    }
+}

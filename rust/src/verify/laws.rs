@@ -1,0 +1,432 @@
+//! §9.2 network refinement: the occam PAR laws (Listings 22 & 23,
+//! Figures 13 & 14) and CSPm Definition 7's GoP ≡ PoG equivalence.
+//!
+//! Laws 5.2/5.3 of Roscoe & Hoare's "The laws of occam programming" say
+//! PAR is associative and symmetric, so
+//! `PAR i (PAR (P_i, Q_i, R_i))`  (a group of pipelines) and
+//! `PAR (PAR i P_i, PAR j Q_j, PAR k R_k)` (a pipeline of groups)
+//! both flatten to `PAR(P_0, P_1, Q_0, Q_1, R_0, R_1)`. We check this
+//! two ways: syntactically (flattening nested PAR trees to multisets)
+//! and semantically (mutual failures refinement of the two CSP systems,
+//! exactly the Definition 7 assertions).
+
+use std::collections::BTreeSet;
+use std::rc::Rc;
+
+use super::check::{failures_refines, traces_refines, CheckResult};
+use super::lts::Lts;
+use super::syntax::{Env, Event, Interner, Proc};
+use crate::csp::error::Result;
+
+// ---------------------------------------------------------------- syntactic
+
+/// An occam-style PAR tree over named leaf processes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParTree {
+    Leaf(String),
+    Par(Vec<ParTree>),
+}
+
+impl ParTree {
+    /// Flatten by associativity into a sorted leaf multiset (symmetry).
+    pub fn flatten(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.collect(&mut out);
+        out.sort();
+        out
+    }
+
+    fn collect(&self, out: &mut Vec<String>) {
+        match self {
+            ParTree::Leaf(n) => out.push(n.clone()),
+            ParTree::Par(ts) => {
+                for t in ts {
+                    t.collect(out);
+                }
+            }
+        }
+    }
+
+    /// Listing 22: `PAR i = 0..pipes { PAR { P; Q; R } }`.
+    pub fn group_of_pipelines(pipes: usize, stages: &[&str]) -> ParTree {
+        ParTree::Par(
+            (0..pipes)
+                .map(|i| {
+                    ParTree::Par(
+                        stages
+                            .iter()
+                            .map(|s| ParTree::Leaf(format!("{s}_{i}")))
+                            .collect(),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Listing 23: `PAR { PAR i P_i; PAR j Q_j; PAR k R_k }`.
+    pub fn pipeline_of_groups(groups: usize, stages: &[&str]) -> ParTree {
+        ParTree::Par(
+            stages
+                .iter()
+                .map(|s| {
+                    ParTree::Par(
+                        (0..groups)
+                            .map(|i| ParTree::Leaf(format!("{s}_{i}")))
+                            .collect(),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+// ----------------------------------------------------------------- semantic
+
+/// The Definition 7 model: two pipes × three worker stages, framed by
+/// Emit/Spread/Reducer/Collect, assembled once as GoP (parallel of
+/// pipes) and once as PoG (parallel of stage groups), internals hidden.
+pub struct GopPogModel {
+    pub interner: Rc<Interner>,
+    pub env: Env,
+    pub gop: Proc,
+    pub pog: Proc,
+}
+
+const PIPES: i64 = 2;
+const LETTERS: i64 = 3; // A..C keeps the product state space small
+const UT: i64 = 100;
+
+fn vname(v: i64) -> String {
+    if v == UT {
+        "UT".into()
+    } else {
+        let letter = (v % LETTERS) as u8;
+        let stage = v / LETTERS;
+        let mut s = String::new();
+        s.push((b'A' + letter) as char);
+        for _ in 0..stage {
+            s.push('p');
+        }
+        s
+    }
+}
+
+impl GopPogModel {
+    pub fn new() -> Self {
+        let interner = Rc::new(Interner::new());
+        let mut env = Env::new();
+
+        // Channels: a (emit), b.x, c.x, d.x, e.x (stages), f (reduced),
+        // finished. Stage s worker on pipe x reads chan(s).x, writes
+        // chan(s+1).x where chan = [b, c, d, e].
+        let chans = ["b", "c", "d", "e"];
+        let stage_values = |stage: i64| -> Vec<i64> {
+            (0..LETTERS).map(|l| stage * LETTERS + l).chain([UT]).collect()
+        };
+
+        // Pre-intern all events.
+        for v in stage_values(0) {
+            interner.intern(&format!("a.{}", vname(v)));
+        }
+        for (s, ch) in chans.iter().enumerate() {
+            for x in 0..PIPES {
+                for v in stage_values(s as i64) {
+                    interner.intern(&format!("{ch}.{x}.{}", vname(v)));
+                }
+            }
+        }
+        for v in stage_values(3) {
+            interner.intern(&format!("f.{}", vname(v)));
+        }
+        interner.intern("finished.True");
+
+        // Emit: A, B, C then UT on channel a.
+        {
+            let i2 = interner.clone();
+            env.define("Emit7", move |args| {
+                let o = args[0];
+                let e = i2.intern(&format!("a.{}", vname(o)));
+                if o == UT {
+                    Proc::prefix(e, Proc::Skip)
+                } else {
+                    let next = if o + 1 >= LETTERS { UT } else { o + 1 };
+                    Proc::prefix(e, Proc::call("Emit7", &[next]))
+                }
+            });
+        }
+
+        // Spread over the two b.x channels, round robin; UT to both.
+        {
+            let i2 = interner.clone();
+            env.define("Spread7", move |args| {
+                let x = args[0];
+                let branches: Vec<Proc> = (0..LETTERS)
+                    .chain([UT])
+                    .map(|o| {
+                        let ein = i2.intern(&format!("a.{}", vname(o)));
+                        let eout = i2.intern(&format!("b.{x}.{}", vname(o)));
+                        if o == UT {
+                            let eother =
+                                i2.intern(&format!("b.{}.UT", (x + 1) % PIPES));
+                            Proc::prefix(
+                                ein,
+                                Proc::prefix(eout, Proc::prefix(eother, Proc::Skip)),
+                            )
+                        } else {
+                            Proc::prefix(
+                                ein,
+                                Proc::prefix(eout, Proc::call("Spread7", &[(x + 1) % PIPES])),
+                            )
+                        }
+                    })
+                    .collect();
+                Proc::ext_choice(branches)
+            });
+        }
+
+        // WorkerN(stage, pipe): reads chan[stage].pipe, writes
+        // chan[stage+1].pipe (or f for the last stage), priming values.
+        {
+            let i2 = interner.clone();
+            env.define("Worker7", move |args| {
+                let (stage, x) = (args[0], args[1]);
+                let chans = ["b", "c", "d", "e"];
+                let cin = chans[stage as usize];
+                let is_last = stage == 2;
+                let branches: Vec<Proc> = (0..LETTERS)
+                    .map(|l| stage * LETTERS + l)
+                    .chain([UT])
+                    .map(|o| {
+                        let ein = i2.intern(&format!("{cin}.{x}.{}", vname(o)));
+                        let _ = is_last;
+                        let cout = chans[(stage + 1) as usize];
+                        if o == UT {
+                            let eout = i2.intern(&format!("{cout}.{x}.UT"));
+                            Proc::prefix(ein, Proc::prefix(eout, Proc::Skip))
+                        } else {
+                            let eout =
+                                i2.intern(&format!("{cout}.{x}.{}", vname(o + LETTERS)));
+                            Proc::prefix(
+                                ein,
+                                Proc::prefix(eout, Proc::call("Worker7", &[stage, x])),
+                            )
+                        }
+                    })
+                    .collect();
+                Proc::ext_choice(branches)
+            });
+        }
+
+        // Reducer over e.x → f; mask of finished pipes.
+        {
+            let i2 = interner.clone();
+            env.define("Reducer7", move |args| {
+                let mask = args[0];
+                let mut branches = Vec::new();
+                for x in 0..PIPES {
+                    if mask & (1 << x) != 0 {
+                        continue;
+                    }
+                    for o in (0..LETTERS).map(|l| 3 * LETTERS + l).chain([UT]) {
+                        let ein = i2.intern(&format!("e.{x}.{}", vname(o)));
+                        if o == UT {
+                            let m2 = mask | (1 << x);
+                            if m2 == (1 << PIPES) - 1 {
+                                let eout = i2.intern("f.UT");
+                                branches.push(Proc::prefix(
+                                    ein,
+                                    Proc::prefix(eout, Proc::Skip),
+                                ));
+                            } else {
+                                branches
+                                    .push(Proc::prefix(ein, Proc::call("Reducer7", &[m2])));
+                            }
+                        } else {
+                            let eout = i2.intern(&format!("f.{}", vname(o)));
+                            branches.push(Proc::prefix(
+                                ein,
+                                Proc::prefix(eout, Proc::call("Reducer7", &[mask])),
+                            ));
+                        }
+                    }
+                }
+                Proc::ext_choice(branches)
+            });
+        }
+
+        // Collect on f, then the finished loop.
+        {
+            let i2 = interner.clone();
+            env.define("Collect7", move |_| {
+                let branches: Vec<Proc> = (0..LETTERS)
+                    .map(|l| 3 * LETTERS + l)
+                    .chain([UT])
+                    .map(|o| {
+                        let ein = i2.intern(&format!("f.{}", vname(o)));
+                        if o == UT {
+                            Proc::prefix(ein, Proc::call("Finished7", &[]))
+                        } else {
+                            Proc::prefix(ein, Proc::call("Collect7", &[]))
+                        }
+                    })
+                    .collect();
+                Proc::ext_choice(branches)
+            });
+            let i3 = interner.clone();
+            env.define("Finished7", move |_| {
+                let fin = i3.intern("finished.True");
+                Proc::prefix(fin, Proc::call("Finished7", &[]))
+            });
+        }
+
+        // Alphabets.
+        let alpha_worker = |stage: i64, x: i64| -> BTreeSet<Event> {
+            let chans = ["b", "c", "d", "e"];
+            let mut a = interner.channel_alphabet(&format!("{}.{x}", chans[stage as usize]));
+            a.extend(interner.channel_alphabet(&format!("{}.{x}", chans[(stage + 1) as usize])));
+            a
+        };
+        let a_a = interner.channel_alphabet("a");
+        let a_b: BTreeSet<Event> = interner.channel_alphabet("b");
+        let a_e: BTreeSet<Event> = interner.channel_alphabet("e");
+        let a_f = interner.channel_alphabet("f");
+        let a_fin: BTreeSet<Event> = [interner.intern("finished.True")].into();
+
+        // GoP: parallel of pipes, each pipe a parallel of its 3 workers.
+        let pipe = |x: i64| -> (Proc, BTreeSet<Event>) {
+            let parts: Vec<(Proc, BTreeSet<Event>)> = (0..3)
+                .map(|s| (Proc::call("Worker7", &[s, x]), alpha_worker(s, x)))
+                .collect();
+            let alpha: BTreeSet<Event> =
+                parts.iter().flat_map(|(_, a)| a.iter().copied()).collect();
+            (Proc::par(parts), alpha)
+        };
+        let gop_core = {
+            let parts: Vec<(Proc, BTreeSet<Event>)> = (0..PIPES).map(pipe).collect();
+            Proc::par(parts)
+        };
+
+        // PoG: parallel of stage groups, each group the 2 same-stage workers.
+        let group = |s: i64| -> (Proc, BTreeSet<Event>) {
+            let parts: Vec<(Proc, BTreeSet<Event>)> = (0..PIPES)
+                .map(|x| (Proc::call("Worker7", &[s, x]), alpha_worker(s, x)))
+                .collect();
+            let alpha: BTreeSet<Event> =
+                parts.iter().flat_map(|(_, a)| a.iter().copied()).collect();
+            (Proc::par(parts), alpha)
+        };
+        let pog_core = {
+            let parts: Vec<(Proc, BTreeSet<Event>)> = (0..3).map(group).collect();
+            Proc::par(parts)
+        };
+
+        let mut internal: BTreeSet<Event> = BTreeSet::new();
+        internal.extend(a_a.iter().copied());
+        for ch in ["b", "c", "d", "e", "f"] {
+            internal.extend(interner.channel_alphabet(ch));
+        }
+
+        let frame = |core: Proc| -> Proc {
+            let core_alpha: BTreeSet<Event> = {
+                let mut a = a_b.clone();
+                a.extend(interner.channel_alphabet("c"));
+                a.extend(interner.channel_alphabet("d"));
+                a.extend(a_e.iter().copied());
+                a
+            };
+            let sys = Proc::par(vec![
+                (Proc::call("Emit7", &[0]), a_a.clone()),
+                (Proc::call("Spread7", &[0]), {
+                    let mut a = a_a.clone();
+                    a.extend(a_b.iter().copied());
+                    a
+                }),
+                (core, core_alpha),
+                (Proc::call("Reducer7", &[0]), {
+                    let mut a = a_e.clone();
+                    a.extend(a_f.iter().copied());
+                    a
+                }),
+                (Proc::call("Collect7", &[]), {
+                    let mut a = a_f.clone();
+                    a.extend(a_fin.iter().copied());
+                    a
+                }),
+            ]);
+            Proc::hide(sys, internal.clone())
+        };
+
+        let gop = frame(gop_core);
+        let pog = frame(pog_core);
+
+        Self {
+            interner,
+            env,
+            gop,
+            pog,
+        }
+    }
+
+    /// The Definition 7 assertions: mutual traces and failures refinement.
+    pub fn check_equivalence(&self) -> Result<Vec<(String, CheckResult)>> {
+        let gop = Lts::explore(&self.gop, &self.env)?;
+        let pog = Lts::explore(&self.pog, &self.env)?;
+        Ok(vec![
+            (
+                "PoG [T= GoP".into(),
+                traces_refines(&pog, &gop, &self.interner)?,
+            ),
+            (
+                "GoP [T= PoG".into(),
+                traces_refines(&gop, &pog, &self.interner)?,
+            ),
+            (
+                "PoG [F= GoP".into(),
+                failures_refines(&pog, &gop, &self.interner)?,
+            ),
+            (
+                "GoP [F= PoG".into(),
+                failures_refines(&gop, &pog, &self.interner)?,
+            ),
+        ])
+    }
+}
+
+impl Default for GopPogModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_trees_flatten_equal() {
+        // Listings 22 & 23 expand to the same leaf multiset (Figures 13/14).
+        let gop = ParTree::group_of_pipelines(2, &["P", "Q", "R"]);
+        let pog = ParTree::pipeline_of_groups(2, &["P", "Q", "R"]);
+        assert_ne!(gop, pog, "syntactically different");
+        assert_eq!(gop.flatten(), pog.flatten(), "semantically equal by Laws 5.2/5.3");
+        assert_eq!(
+            gop.flatten(),
+            vec!["P_0", "P_1", "Q_0", "Q_1", "R_0", "R_1"]
+        );
+    }
+
+    #[test]
+    fn par_trees_differ_when_processes_differ() {
+        let a = ParTree::group_of_pipelines(2, &["P", "Q"]);
+        let b = ParTree::group_of_pipelines(2, &["P", "R"]);
+        assert_ne!(a.flatten(), b.flatten());
+    }
+
+    #[test]
+    fn definition7_gop_equals_pog() {
+        let m = GopPogModel::new();
+        for (name, r) in m.check_equivalence().unwrap() {
+            assert!(r.holds(), "{name}: {r:?}");
+        }
+    }
+}

@@ -1,0 +1,374 @@
+//! Operational semantics and LTS exploration.
+//!
+//! Transitions follow Roscoe's presentation of CSP's firing rules; tau
+//! (`Label::Tau`) arises from hiding, internal choice and sequential
+//! composition; tick (`Label::Tick`) from SKIP, with distributed
+//! termination in alphabetised parallel (all components must tick).
+
+use std::collections::{BTreeSet, HashMap};
+use std::rc::Rc;
+
+use super::syntax::{Env, Event, Proc};
+use crate::csp::error::{GppError, Result};
+
+/// Transition label.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Label {
+    Tau,
+    Tick,
+    Vis(Event),
+}
+
+/// Compute the outgoing transitions of a term.
+pub fn transitions(p: &Proc, env: &Env) -> Vec<(Label, Proc)> {
+    match p {
+        Proc::Stop | Proc::Omega => Vec::new(),
+        Proc::Skip => vec![(Label::Tick, Proc::Omega)],
+        Proc::Prefix(e, next) => vec![(Label::Vis(*e), (**next).clone())],
+        Proc::ExtChoice(ps) => {
+            let mut out = Vec::new();
+            for (i, branch) in ps.iter().enumerate() {
+                for (l, next) in transitions(branch, env) {
+                    match l {
+                        // tau does not resolve external choice.
+                        Label::Tau => {
+                            let mut ps2 = ps.clone();
+                            ps2[i] = next;
+                            out.push((Label::Tau, Proc::ExtChoice(ps2)));
+                        }
+                        _ => out.push((l, next)),
+                    }
+                }
+            }
+            out
+        }
+        Proc::IntChoice(ps) => ps
+            .iter()
+            .map(|branch| (Label::Tau, branch.clone()))
+            .collect(),
+        Proc::Seq(a, b) => {
+            let mut out = Vec::new();
+            for (l, next) in transitions(a, env) {
+                match l {
+                    Label::Tick => out.push((Label::Tau, (**b).clone())),
+                    l => out.push((l, Proc::Seq(Rc::new(next), b.clone()))),
+                }
+            }
+            out
+        }
+        Proc::Par(parts) => {
+            let mut out = Vec::new();
+            // Per-component transitions (computed once).
+            let trans: Vec<Vec<(Label, Proc)>> =
+                parts.iter().map(|(q, _)| transitions(q, env)).collect();
+
+            // Independent tau moves.
+            for (i, ts) in trans.iter().enumerate() {
+                for (l, next) in ts {
+                    if *l == Label::Tau {
+                        let mut parts2 = parts.clone();
+                        parts2[i].0 = next.clone();
+                        out.push((Label::Tau, Proc::Par(parts2)));
+                    }
+                }
+            }
+
+            // Visible events: all components whose alphabet contains the
+            // event must make it together; components without it in their
+            // alphabet stay put.
+            let mut all_events: BTreeSet<Event> = BTreeSet::new();
+            for ts in &trans {
+                for (l, _) in ts {
+                    if let Label::Vis(e) = l {
+                        all_events.insert(*e);
+                    }
+                }
+            }
+            'event: for e in all_events {
+                // Collect each participant's options for e.
+                let mut options: Vec<Vec<&Proc>> = Vec::new();
+                let mut participant_idx: Vec<usize> = Vec::new();
+                for (i, (_, alpha)) in parts.iter().enumerate() {
+                    if alpha.contains(&e) {
+                        let opts: Vec<&Proc> = trans[i]
+                            .iter()
+                            .filter(|(l, _)| *l == Label::Vis(e))
+                            .map(|(_, n)| n)
+                            .collect();
+                        if opts.is_empty() {
+                            continue 'event; // some participant refuses
+                        }
+                        options.push(opts);
+                        participant_idx.push(i);
+                    }
+                }
+                if participant_idx.is_empty() {
+                    continue;
+                }
+                // Cartesian product of options (usually singletons).
+                let mut combos: Vec<Vec<&Proc>> = vec![Vec::new()];
+                for opts in &options {
+                    let mut next_combos = Vec::new();
+                    for combo in &combos {
+                        for o in opts {
+                            let mut c2 = combo.clone();
+                            c2.push(o);
+                            next_combos.push(c2);
+                        }
+                    }
+                    combos = next_combos;
+                }
+                for combo in combos {
+                    let mut parts2 = parts.clone();
+                    for (k, &i) in participant_idx.iter().enumerate() {
+                        parts2[i].0 = combo[k].clone();
+                    }
+                    out.push((Label::Vis(e), Proc::Par(parts2)));
+                }
+            }
+
+            // Distributed termination: every component can tick.
+            let all_tick = trans
+                .iter()
+                .all(|ts| ts.iter().any(|(l, _)| *l == Label::Tick));
+            if all_tick && !parts.is_empty() {
+                out.push((Label::Tick, Proc::Omega));
+            }
+            out
+        }
+        Proc::Hide(q, h) => transitions(q, env)
+            .into_iter()
+            .map(|(l, next)| {
+                let l2 = match l {
+                    Label::Vis(e) if h.contains(&e) => Label::Tau,
+                    other => other,
+                };
+                (l2, Proc::Hide(Rc::new(next), h.clone()))
+            })
+            .collect(),
+        Proc::Call(name, args) => match env.expand(name, args) {
+            Some(body) => transitions(&body, env),
+            None => Vec::new(),
+        },
+    }
+}
+
+/// An explored labelled transition system.
+pub struct Lts {
+    /// state id → outgoing (label, target id)
+    pub edges: Vec<Vec<(Label, usize)>>,
+    /// state id → canonical key (diagnostics)
+    pub keys: Vec<String>,
+    /// Initial state id.
+    pub init: usize,
+    /// state id → example trace of visible events reaching it.
+    pub trace_to: Vec<Vec<Label>>,
+}
+
+/// Exploration bound: generous for our models, a guard against blowup.
+pub const MAX_STATES: usize = 2_000_000;
+
+impl Lts {
+    /// Breadth-first exploration from `root`.
+    pub fn explore(root: &Proc, env: &Env) -> Result<Lts> {
+        let mut keys: Vec<String> = Vec::new();
+        let mut edges: Vec<Vec<(Label, usize)>> = Vec::new();
+        let mut trace_to: Vec<Vec<Label>> = Vec::new();
+        let mut index: HashMap<String, usize> = HashMap::new();
+        let mut frontier: Vec<(usize, Proc)> = Vec::new();
+
+        let rk = root.key();
+        index.insert(rk.clone(), 0);
+        keys.push(rk);
+        edges.push(Vec::new());
+        trace_to.push(Vec::new());
+        frontier.push((0, root.clone()));
+
+        while let Some((id, p)) = frontier.pop() {
+            let ts = transitions(&p, env);
+            let mut out = Vec::with_capacity(ts.len());
+            for (l, next) in ts {
+                let k = next.key();
+                let nid = match index.get(&k) {
+                    Some(&nid) => nid,
+                    None => {
+                        let nid = keys.len();
+                        if nid >= MAX_STATES {
+                            return Err(GppError::Verify(format!(
+                                "state space exceeds {MAX_STATES} states"
+                            )));
+                        }
+                        index.insert(k.clone(), nid);
+                        keys.push(k);
+                        edges.push(Vec::new());
+                        let mut tr = trace_to[id].clone();
+                        tr.push(l);
+                        trace_to.push(tr);
+                        frontier.push((nid, next));
+                        nid
+                    }
+                };
+                out.push((l, nid));
+            }
+            edges[id] = out;
+        }
+        Ok(Lts {
+            edges,
+            keys,
+            init: 0,
+            trace_to,
+        })
+    }
+
+    pub fn states(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Tau-closure of a set of states.
+    pub fn tau_closure(&self, set: &BTreeSet<usize>) -> BTreeSet<usize> {
+        let mut out = set.clone();
+        let mut stack: Vec<usize> = set.iter().copied().collect();
+        while let Some(s) = stack.pop() {
+            for &(l, t) in &self.edges[s] {
+                if l == Label::Tau && out.insert(t) {
+                    stack.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// A state is stable if it has no outgoing tau.
+    pub fn is_stable(&self, s: usize) -> bool {
+        self.edges[s].iter().all(|(l, _)| *l != Label::Tau)
+    }
+
+    /// Visible initials of a state (ticks included as None marker via
+    /// Label::Tick).
+    pub fn initials(&self, s: usize) -> BTreeSet<Label> {
+        self.edges[s]
+            .iter()
+            .filter(|(l, _)| *l != Label::Tau)
+            .map(|(l, _)| *l)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verify::syntax::Interner;
+
+    fn ev(i: &Interner, n: &str) -> Event {
+        i.intern(n)
+    }
+
+    #[test]
+    fn prefix_chain_explores_linear() {
+        let i = Interner::new();
+        let p = Proc::prefixes(&[ev(&i, "a"), ev(&i, "b")], Proc::Skip);
+        let lts = Lts::explore(&p, &Env::new()).unwrap();
+        // a -> b -> SKIP -tick-> Omega : 4 states
+        assert_eq!(lts.states(), 4);
+    }
+
+    #[test]
+    fn ext_choice_branches() {
+        let i = Interner::new();
+        let p = Proc::ext_choice(vec![
+            Proc::prefix(ev(&i, "a"), Proc::Stop),
+            Proc::prefix(ev(&i, "b"), Proc::Stop),
+        ]);
+        let lts = Lts::explore(&p, &Env::new()).unwrap();
+        assert_eq!(lts.edges[lts.init].len(), 2);
+    }
+
+    #[test]
+    fn parallel_synchronises_on_shared_alphabet() {
+        let i = Interner::new();
+        let a = ev(&i, "a");
+        let alpha: BTreeSet<Event> = [a].into();
+        // Both must do `a` together: one a-transition total.
+        let p = Proc::par(vec![
+            (Proc::prefix(a, Proc::Skip), alpha.clone()),
+            (Proc::prefix(a, Proc::Skip), alpha),
+        ]);
+        let lts = Lts::explore(&p, &Env::new()).unwrap();
+        let init_edges = &lts.edges[lts.init];
+        assert_eq!(init_edges.len(), 1);
+        assert_eq!(init_edges[0].0, Label::Vis(a));
+    }
+
+    #[test]
+    fn parallel_refusal_blocks_shared_event() {
+        let i = Interner::new();
+        let a = ev(&i, "a");
+        let alpha: BTreeSet<Event> = [a].into();
+        // One side refuses `a` (STOP) → deadlock.
+        let p = Proc::par(vec![
+            (Proc::prefix(a, Proc::Skip), alpha.clone()),
+            (Proc::Stop, alpha),
+        ]);
+        let lts = Lts::explore(&p, &Env::new()).unwrap();
+        assert!(lts.edges[lts.init].is_empty());
+    }
+
+    #[test]
+    fn interleaving_on_disjoint_alphabets() {
+        let i = Interner::new();
+        let a = ev(&i, "a");
+        let b = ev(&i, "b");
+        let p = Proc::par(vec![
+            (Proc::prefix(a, Proc::Skip), [a].into()),
+            (Proc::prefix(b, Proc::Skip), [b].into()),
+        ]);
+        let lts = Lts::explore(&p, &Env::new()).unwrap();
+        assert_eq!(lts.edges[lts.init].len(), 2); // a or b first
+    }
+
+    #[test]
+    fn hiding_creates_tau() {
+        let i = Interner::new();
+        let a = ev(&i, "a");
+        let p = Proc::hide(Proc::prefix(a, Proc::Skip), [a].into());
+        let lts = Lts::explore(&p, &Env::new()).unwrap();
+        assert_eq!(lts.edges[lts.init][0].0, Label::Tau);
+    }
+
+    #[test]
+    fn recursion_via_env_is_finite_state() {
+        let i = Interner::new();
+        let a = ev(&i, "a");
+        let mut env = Env::new();
+        env.define("Loop", move |_| Proc::prefix(a, Proc::call("Loop", &[])));
+        let lts = Lts::explore(&Proc::call("Loop", &[]), &env).unwrap();
+        // Call node + nothing else: a -> Call (same key) = 1 state… the
+        // initial Call expands to prefix whose target is Call again.
+        assert!(lts.states() <= 2);
+        assert_eq!(lts.edges[lts.init][0].0, Label::Vis(a));
+    }
+
+    #[test]
+    fn seq_converts_tick_to_tau() {
+        let i = Interner::new();
+        let a = ev(&i, "a");
+        let p = Proc::Seq(
+            Rc::new(Proc::Skip),
+            Rc::new(Proc::prefix(a, Proc::Stop)),
+        );
+        let lts = Lts::explore(&p, &Env::new()).unwrap();
+        assert_eq!(lts.edges[lts.init][0].0, Label::Tau);
+    }
+
+    #[test]
+    fn distributed_termination() {
+        let i = Interner::new();
+        let a = ev(&i, "a");
+        let p = Proc::par(vec![
+            (Proc::Skip, [a].into()),
+            (Proc::Skip, BTreeSet::new()),
+        ]);
+        let lts = Lts::explore(&p, &Env::new()).unwrap();
+        assert_eq!(lts.edges[lts.init][0].0, Label::Tick);
+    }
+}

@@ -1,0 +1,33 @@
+//! Formal verification substrate: an embedded CSP process algebra with a
+//! refinement checker, standing in for CSPm + FDR4 (paper §2.1, §4.6,
+//! §9).
+//!
+//! The paper proves its library correct by modelling every process in
+//! CSPm and discharging assertions with FDR4: deadlock freedom,
+//! divergence (livelock) freedom, determinism, and traces / failures /
+//! failures-divergences refinement — including the equivalence of the
+//! Pipeline-of-Groups and Group-of-Pipelines architectures (CSPm
+//! Definition 7). FDR is closed-source and absent here, so this module
+//! implements the needed fragment from scratch:
+//!
+//! * [`syntax`] — the process terms: `STOP`, `SKIP`, prefix, external /
+//!   internal choice, alphabetised parallel, hiding, sequential
+//!   composition and parameterised recursion;
+//! * [`lts`] — operational semantics and labelled-transition-system
+//!   exploration with tau;
+//! * [`check`] — deadlock, divergence, determinism (FDR's stable-refusal
+//!   definition), traces refinement and stable-failures refinement by
+//!   subset construction;
+//! * [`models`] — CSPm Definitions 1–6 transcribed, and the Definition 7
+//!   GoP/PoG systems;
+//! * [`laws`] — the occam PAR associativity/symmetry expansions (§9.2).
+
+pub mod syntax;
+pub mod lts;
+pub mod check;
+pub mod models;
+pub mod laws;
+
+pub use check::{CheckResult, Checker};
+pub use lts::Lts;
+pub use syntax::{Env, Event, Interner, Proc};

@@ -1,0 +1,380 @@
+//! The paper's CSPm models, transcribed (Definitions 1–7).
+//!
+//! Datatype `objects = A | B | C | D | E | A' … E' | UT`; `create`
+//! steps A→B→…→E→UT; `f` primes a value. The base system is
+//!
+//! `System = (((Emit(A) [αa] Spread(0)) [αb] Workers()) [αc] Reducer())
+//!           [αd] Collect()`
+//!
+//! and the assertions of Definition 6 (refinement against `TestSystem`,
+//! deadlock/divergence freedom, determinism) are exposed as methods so
+//! both `cargo test` and `gpp verify` can run them. Definition 7 builds
+//! the GoP and PoG concordance systems and checks mutual refinement.
+
+use std::collections::BTreeSet;
+
+use super::check::{failures_refines, traces_refines, CheckResult, Checker};
+use super::lts::Lts;
+use super::syntax::{Env, Event, Interner, Proc};
+use crate::csp::error::Result;
+
+/// Number of letters (A..E) in the datatype.
+pub const LETTERS: i64 = 5;
+/// UT encoding in the value space (stage-tagged values below it).
+pub fn ut() -> i64 {
+    100
+}
+
+/// The base model (Definitions 1–6) with `n` workers.
+pub struct BaseModel {
+    pub interner: std::rc::Rc<Interner>,
+    pub env: Env,
+    pub n: i64,
+    pub system: Proc,
+    /// `System \ {|a,b,c,d|}` — only `finished` remains visible.
+    pub hidden_system: Proc,
+    pub test_system: Proc,
+}
+
+fn value_name(v: i64) -> String {
+    if v == ut() {
+        "UT".to_string()
+    } else {
+        let letter = (v % LETTERS) as u8;
+        let stage = v / LETTERS;
+        let mut s = String::new();
+        s.push((b'A' + letter) as char);
+        for _ in 0..stage {
+            s.push('p'); // prime
+        }
+        s
+    }
+}
+
+impl BaseModel {
+    pub fn new(n: i64) -> Self {
+        let interner = std::rc::Rc::new(Interner::new());
+        let mut env = Env::new();
+
+        // Event tables. emitObj = stage-0 letters + UT; fObj = stage-1 + UT.
+        let ev_a = |i: &Interner, v: i64| i.intern(&format!("a.{}", value_name(v)));
+        let ev_b = |i: &Interner, w: i64, v: i64| i.intern(&format!("b.{w}.{}", value_name(v)));
+        let ev_c = |i: &Interner, w: i64, v: i64| i.intern(&format!("c.{w}.{}", value_name(v)));
+        let ev_d = |i: &Interner, v: i64| i.intern(&format!("d.{}", value_name(v)));
+        let ev_fin = |i: &Interner| i.intern("finished.True");
+
+        // Pre-intern every event so channel alphabets are complete.
+        let emit_obj: Vec<i64> = (0..LETTERS).chain([ut()]).collect();
+        let f_obj: Vec<i64> = (LETTERS..2 * LETTERS).chain([ut()]).collect();
+        for &v in &emit_obj {
+            ev_a(&interner, v);
+            ev_d(&interner, v);
+        }
+        for &v in &f_obj {
+            ev_d(&interner, v);
+        }
+        for w in 0..n {
+            for &v in &emit_obj {
+                ev_b(&interner, w, v);
+            }
+            for &v in &f_obj {
+                ev_c(&interner, w, v);
+            }
+        }
+        ev_fin(&interner);
+
+        // CSPm Definition 1 — Emit(o) = a!o -> if o==UT then SKIP else
+        // Emit(create(o)); create(E)=UT.
+        {
+            let i2 = interner.clone();
+            env.define("Emit", move |args| {
+                let o = args[0];
+                let e = i2.intern(&format!("a.{}", value_name(o)));
+                if o == ut() {
+                    Proc::prefix(e, Proc::Skip)
+                } else {
+                    let next = if o + 1 >= LETTERS { ut() } else { o + 1 };
+                    Proc::prefix(e, Proc::call("Emit", &[next]))
+                }
+            });
+        }
+
+        // CSPm Definition 4 — generalised spreader over n outputs.
+        {
+            let i2 = interner.clone();
+            let emit_obj = emit_obj.clone();
+            env.define("Spread", move |args| {
+                let i = args[0];
+                // a?o -> …
+                let branches: Vec<Proc> = emit_obj
+                    .iter()
+                    .map(|&o| {
+                        let ein = i2.intern(&format!("a.{}", value_name(o)));
+                        let eout = i2.intern(&format!("b.{i}.{}", value_name(o)));
+                        if o == ut() {
+                            // b.i!UT then Spread_End over remaining n-1.
+                            Proc::prefix(
+                                ein,
+                                Proc::prefix(eout, Proc::call("SpreadEnd", &[(i + 1) % N_OF(&i2), N_OF(&i2) - 1])),
+                            )
+                        } else {
+                            Proc::prefix(
+                                ein,
+                                Proc::prefix(eout, Proc::call("Spread", &[(i + 1) % N_OF(&i2)])),
+                            )
+                        }
+                    })
+                    .collect();
+                Proc::ext_choice(branches)
+            });
+        }
+        // Spread_End(i, k): UT to the k remaining channels.
+        {
+            let i2 = interner.clone();
+            env.define("SpreadEnd", move |args| {
+                let (i, k) = (args[0], args[1]);
+                if k == 0 {
+                    Proc::Skip
+                } else {
+                    let e = i2.intern(&format!("b.{i}.UT"));
+                    Proc::prefix(e, Proc::call("SpreadEnd", &[(i + 1) % N_OF(&i2), k - 1]))
+                }
+            });
+        }
+
+        // CSPm Definition 3 — Worker(i).
+        {
+            let i2 = interner.clone();
+            let emit_obj = emit_obj.clone();
+            env.define("Worker", move |args| {
+                let w = args[0];
+                let branches: Vec<Proc> = emit_obj
+                    .iter()
+                    .map(|&o| {
+                        let ein = i2.intern(&format!("b.{w}.{}", value_name(o)));
+                        if o == ut() {
+                            let eout = i2.intern(&format!("c.{w}.UT"));
+                            Proc::prefix(ein, Proc::prefix(eout, Proc::Skip))
+                        } else {
+                            // f(o) = primed value.
+                            let eout =
+                                i2.intern(&format!("c.{w}.{}", value_name(o + LETTERS)));
+                            Proc::prefix(ein, Proc::prefix(eout, Proc::call("Worker", &[w])))
+                        }
+                    })
+                    .collect();
+                Proc::ext_choice(branches)
+            });
+        }
+
+        // CSPm Definition 5 — Reducer as a closed-mask process.
+        {
+            let i2 = interner.clone();
+            let f_obj = f_obj.clone();
+            env.define("Reducer", move |args| {
+                let mask = args[0]; // bitmask of channels that sent UT
+                let n = N_OF(&i2);
+                let mut branches = Vec::new();
+                for w in 0..n {
+                    if mask & (1 << w) != 0 {
+                        continue;
+                    }
+                    for &o in &f_obj {
+                        let ein = i2.intern(&format!("c.{w}.{}", value_name(o)));
+                        if o == ut() {
+                            let m2 = mask | (1 << w);
+                            if m2 == (1 << n) - 1 {
+                                let eout = i2.intern("d.UT");
+                                branches.push(Proc::prefix(
+                                    ein,
+                                    Proc::prefix(eout, Proc::Skip),
+                                ));
+                            } else {
+                                branches
+                                    .push(Proc::prefix(ein, Proc::call("Reducer", &[m2])));
+                            }
+                        } else {
+                            let eout = i2.intern(&format!("d.{}", value_name(o)));
+                            branches.push(Proc::prefix(
+                                ein,
+                                Proc::prefix(eout, Proc::call("Reducer", &[mask])),
+                            ));
+                        }
+                    }
+                }
+                Proc::ext_choice(branches)
+            });
+        }
+
+        // CSPm Definition 2 — Collect.
+        {
+            let i2 = interner.clone();
+            let all_d: Vec<i64> = f_obj.clone();
+            env.define("Collect", move |_| {
+                let branches: Vec<Proc> = all_d
+                    .iter()
+                    .map(|&o| {
+                        let ein = i2.intern(&format!("d.{}", value_name(o)));
+                        if o == ut() {
+                            Proc::prefix(ein, Proc::call("CollectEnd", &[]))
+                        } else {
+                            Proc::prefix(ein, Proc::call("Collect", &[]))
+                        }
+                    })
+                    .collect();
+                Proc::ext_choice(branches)
+            });
+            let i3 = interner.clone();
+            env.define("CollectEnd", move |_| {
+                let fin = i3.intern("finished.True");
+                Proc::prefix(fin, Proc::call("CollectEnd", &[]))
+            });
+        }
+
+        // Alphabets (CSPm Definition 6 lines 11-14).
+        let a_a = interner.channel_alphabet("a");
+        let a_b = interner.channel_alphabet("b");
+        let a_c = interner.channel_alphabet("c");
+        let a_d = interner.channel_alphabet("d");
+        let a_fin: BTreeSet<Event> = [interner.intern("finished.True")].into();
+
+        let union = |xs: &[&BTreeSet<Event>]| -> BTreeSet<Event> {
+            let mut out = BTreeSet::new();
+            for x in xs {
+                out.extend(x.iter().copied());
+            }
+            out
+        };
+
+        // Workers() = || i Worker(i) with per-worker alphabets.
+        let workers_par: Vec<(Proc, BTreeSet<Event>)> = (0..n)
+            .map(|w| {
+                let aw = union(&[
+                    &interner.channel_alphabet(&format!("b.{w}")),
+                    &interner.channel_alphabet(&format!("c.{w}")),
+                ]);
+                (Proc::call("Worker", &[w]), aw)
+            })
+            .collect();
+
+        let system = Proc::par(vec![
+            (Proc::call("Emit", &[0]), a_a.clone()),
+            (Proc::call("Spread", &[0]), union(&[&a_a, &a_b])),
+            (Proc::Par(workers_par.into_iter().map(|(p, a)| (p, std::rc::Rc::new(a))).collect()), union(&[&a_b, &a_c])),
+            (Proc::call("Reducer", &[0]), union(&[&a_c, &a_d])),
+            (Proc::call("Collect", &[]), union(&[&a_d, &a_fin])),
+        ]);
+
+        let hide_set = union(&[&a_a, &a_b, &a_c, &a_d]);
+        let hidden_system = Proc::hide(system.clone(), hide_set);
+
+        // TestSystem = finished!True -> TestSystem.
+        let fin = interner.intern("finished.True");
+        env.define_test_system(fin);
+
+        Self {
+            interner,
+            env,
+            n,
+            system,
+            hidden_system,
+            test_system: Proc::call("TestSystem", &[]),
+        }
+    }
+
+    /// Run every Definition-6 assertion; returns (name, result) pairs.
+    pub fn check_all(&self) -> Result<Vec<(String, CheckResult)>> {
+        let mut out = Vec::new();
+        let sys = Lts::explore(&self.system, &self.env)?;
+        let checker = Checker::new(&sys, &self.interner);
+        out.push(("System :[deadlock free]".into(), checker.deadlock_free()));
+        out.push((
+            "System :[divergence free]".into(),
+            checker.divergence_free(),
+        ));
+        out.push(("System :[deterministic]".into(), checker.deterministic()));
+
+        let hidden = Lts::explore(&self.hidden_system, &self.env)?;
+        let test = Lts::explore(&self.test_system, &self.env)?;
+        out.push((
+            "TestSystem [T= System \\ {|a,b,c,d|}".into(),
+            traces_refines(&test, &hidden, &self.interner)?,
+        ));
+        // The hidden system has leading taus before the infinite
+        // finished-loop; stable-failures refinement still holds because
+        // every stable state offers `finished`.
+        out.push((
+            "TestSystem [F= System \\ {|a,b,c,d|}".into(),
+            failures_refines(&test, &hidden, &self.interner)?,
+        ));
+        // [FD= — stable failures plus divergence-freedom of the
+        // implementation (checked on the hidden system).
+        let hidden_checker = Checker::new(&hidden, &self.interner);
+        let div = hidden_checker.divergence_free();
+        out.push((
+            "System \\ {|a,b,c,d|} :[divergence free] (FD component)".into(),
+            div,
+        ));
+        Ok(out)
+    }
+}
+
+// The worker count is needed inside `move` closures that only capture the
+// interner; stash it in a thread local set by BaseModel::new.
+thread_local! {
+    static MODEL_N: std::cell::Cell<i64> = const { std::cell::Cell::new(2) };
+}
+
+#[allow(non_snake_case)]
+fn N_OF(_i: &Interner) -> i64 {
+    MODEL_N.with(|c| c.get())
+}
+
+/// Set the worker count used by the recursive definitions.
+pub fn set_model_n(n: i64) {
+    MODEL_N.with(|c| c.set(n));
+}
+
+
+
+impl Env {
+    fn define_test_system(&mut self, fin: Event) {
+        self.define("TestSystem", move |_| {
+            Proc::prefix(fin, Proc::call("TestSystem", &[]))
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_model_n2_all_assertions_hold() {
+        set_model_n(2);
+        let m = BaseModel::new(2);
+        let results = m.check_all().unwrap();
+        for (name, r) in &results {
+            assert!(r.holds(), "assertion failed: {name}: {r:?}");
+        }
+        assert_eq!(results.len(), 6);
+    }
+
+    #[test]
+    fn base_model_n3_all_assertions_hold() {
+        set_model_n(3);
+        let m = BaseModel::new(3);
+        for (name, r) in m.check_all().unwrap() {
+            assert!(r.holds(), "assertion failed: {name}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn system_state_space_is_reasonable() {
+        set_model_n(2);
+        let m = BaseModel::new(2);
+        let lts = Lts::explore(&m.system, &m.env).unwrap();
+        assert!(lts.states() > 10, "too trivial: {}", lts.states());
+        assert!(lts.states() < 100_000, "blowup: {}", lts.states());
+    }
+}

@@ -1,0 +1,275 @@
+//! Process terms and the definition environment.
+
+use std::collections::BTreeSet;
+use std::collections::HashMap;
+use std::fmt;
+use std::rc::Rc;
+use std::sync::Mutex;
+
+/// Interned visible event.
+pub type Event = u32;
+
+/// Event interner: maps channel-dot names ("b.0.UT") to ids.
+#[derive(Default)]
+pub struct Interner {
+    names: Mutex<(Vec<String>, HashMap<String, Event>)>,
+}
+
+impl Interner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn intern(&self, name: &str) -> Event {
+        let mut g = self.names.lock().unwrap();
+        if let Some(&e) = g.1.get(name) {
+            return e;
+        }
+        let id = g.0.len() as Event;
+        g.0.push(name.to_string());
+        g.1.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn name(&self, e: Event) -> String {
+        self.names.lock().unwrap().0[e as usize].clone()
+    }
+
+    /// All events whose name starts with `prefix` + "." (a channel's
+    /// alphabet, CSPm `{| c |}`).
+    pub fn channel_alphabet(&self, prefix: &str) -> BTreeSet<Event> {
+        let g = self.names.lock().unwrap();
+        g.0.iter()
+            .enumerate()
+            .filter(|(_, n)| n.starts_with(prefix) && n[prefix.len()..].starts_with('.'))
+            .map(|(i, _)| i as Event)
+            .collect()
+    }
+}
+
+/// A parameterised process definition: name(args) ⇒ body.
+pub type DefFn = Rc<dyn Fn(&[i64]) -> Proc>;
+
+/// Definition environment (the CSPm script's equations).
+#[derive(Clone, Default)]
+pub struct Env {
+    defs: HashMap<String, DefFn>,
+}
+
+impl Env {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn define(&mut self, name: &str, f: impl Fn(&[i64]) -> Proc + 'static) {
+        self.defs.insert(name.to_string(), Rc::new(f));
+    }
+
+    pub fn expand(&self, name: &str, args: &[i64]) -> Option<Proc> {
+        self.defs.get(name).map(|f| f(args))
+    }
+}
+
+/// CSP process terms.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub enum Proc {
+    /// STOP — no behaviour (deadlock).
+    Stop,
+    /// SKIP — terminate successfully (tick then Omega).
+    Skip,
+    /// Terminated (post-tick) — internal marker.
+    Omega,
+    /// e -> P
+    Prefix(Event, Rc<Proc>),
+    /// P [] Q [] …
+    ExtChoice(Vec<Proc>),
+    /// P |~| Q |~| … (internal choice: tau to each branch)
+    IntChoice(Vec<Proc>),
+    /// P ; Q
+    Seq(Rc<Proc>, Rc<Proc>),
+    /// Alphabetised parallel: [(P, αP), (Q, αQ), …]
+    Par(Vec<(Proc, Rc<BTreeSet<Event>>)>),
+    /// P \ H
+    Hide(Rc<Proc>, Rc<BTreeSet<Event>>),
+    /// Named recursion: name(args), resolved via [`Env`].
+    Call(String, Vec<i64>),
+}
+
+impl Proc {
+    pub fn prefix(e: Event, p: Proc) -> Proc {
+        Proc::Prefix(e, Rc::new(p))
+    }
+
+    /// e1 -> e2 -> … -> P
+    pub fn prefixes(events: &[Event], p: Proc) -> Proc {
+        events
+            .iter()
+            .rev()
+            .fold(p, |acc, &e| Proc::Prefix(e, Rc::new(acc)))
+    }
+
+    pub fn ext_choice(ps: Vec<Proc>) -> Proc {
+        match ps.len() {
+            0 => Proc::Stop,
+            1 => ps.into_iter().next().unwrap(),
+            _ => Proc::ExtChoice(ps),
+        }
+    }
+
+    pub fn call(name: &str, args: &[i64]) -> Proc {
+        Proc::Call(name.to_string(), args.to_vec())
+    }
+
+    pub fn hide(p: Proc, events: BTreeSet<Event>) -> Proc {
+        Proc::Hide(Rc::new(p), Rc::new(events))
+    }
+
+    pub fn par(parts: Vec<(Proc, BTreeSet<Event>)>) -> Proc {
+        Proc::Par(
+            parts
+                .into_iter()
+                .map(|(p, a)| (p, Rc::new(a)))
+                .collect(),
+        )
+    }
+
+    /// Canonical key for state deduplication during exploration.
+    pub fn key(&self) -> String {
+        let mut s = String::new();
+        self.write_key(&mut s);
+        s
+    }
+
+    fn write_key(&self, out: &mut String) {
+        match self {
+            Proc::Stop => out.push('0'),
+            Proc::Skip => out.push('1'),
+            Proc::Omega => out.push('W'),
+            Proc::Prefix(e, p) => {
+                out.push_str(&format!("P{e}("));
+                p.write_key(out);
+                out.push(')');
+            }
+            Proc::ExtChoice(ps) => {
+                out.push_str("E(");
+                for p in ps {
+                    p.write_key(out);
+                    out.push(',');
+                }
+                out.push(')');
+            }
+            Proc::IntChoice(ps) => {
+                out.push_str("I(");
+                for p in ps {
+                    p.write_key(out);
+                    out.push(',');
+                }
+                out.push(')');
+            }
+            Proc::Seq(p, q) => {
+                out.push_str("S(");
+                p.write_key(out);
+                out.push(';');
+                q.write_key(out);
+                out.push(')');
+            }
+            Proc::Par(parts) => {
+                out.push_str("A(");
+                for (p, a) in parts {
+                    p.write_key(out);
+                    out.push('@');
+                    // Alphabets are fixed per system; identity via pointer
+                    // would be unstable, so encode length + first/last.
+                    out.push_str(&format!(
+                        "{}:{:?}",
+                        a.len(),
+                        a.iter().next().copied().unwrap_or(u32::MAX)
+                    ));
+                    out.push(',');
+                }
+                out.push(')');
+            }
+            Proc::Hide(p, h) => {
+                out.push_str(&format!("H{}(", h.len()));
+                p.write_key(out);
+                out.push(')');
+            }
+            Proc::Call(name, args) => {
+                out.push_str(&format!("C{name}{args:?}"));
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Proc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.key())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interner_is_stable() {
+        let i = Interner::new();
+        let a = i.intern("a.A");
+        let b = i.intern("b.0");
+        assert_ne!(a, b);
+        assert_eq!(i.intern("a.A"), a);
+        assert_eq!(i.name(a), "a.A");
+    }
+
+    #[test]
+    fn channel_alphabet_collects_prefixed() {
+        let i = Interner::new();
+        let a1 = i.intern("c.0.A");
+        let a2 = i.intern("c.1.B");
+        let _other = i.intern("d.0.A");
+        let _similar = i.intern("cc.0");
+        let alpha = i.channel_alphabet("c");
+        assert!(alpha.contains(&a1) && alpha.contains(&a2));
+        assert_eq!(alpha.len(), 2);
+    }
+
+    #[test]
+    fn keys_distinguish_terms() {
+        let i = Interner::new();
+        let e = i.intern("x");
+        let p1 = Proc::prefix(e, Proc::Stop);
+        let p2 = Proc::prefix(e, Proc::Skip);
+        assert_ne!(p1.key(), p2.key());
+        assert_eq!(p1.key(), Proc::prefix(e, Proc::Stop).key());
+    }
+
+    #[test]
+    fn env_expands_definitions() {
+        let i = Interner::new();
+        let e = i.intern("tick.0");
+        let mut env = Env::new();
+        env.define("P", move |args| {
+            if args[0] == 0 {
+                Proc::Skip
+            } else {
+                Proc::prefix(e, Proc::call("P", &[args[0] - 1]))
+            }
+        });
+        let p = env.expand("P", &[2]).unwrap();
+        assert!(matches!(p, Proc::Prefix(_, _)));
+        assert!(env.expand("missing", &[]).is_none());
+    }
+
+    #[test]
+    fn prefixes_builds_chain() {
+        let i = Interner::new();
+        let es: Vec<Event> = ["a", "b", "c"].iter().map(|n| i.intern(n)).collect();
+        let p = Proc::prefixes(&es, Proc::Skip);
+        // Outermost prefix must be the first event.
+        if let Proc::Prefix(e, _) = p {
+            assert_eq!(e, es[0]);
+        } else {
+            panic!();
+        }
+    }
+}

@@ -1,0 +1,357 @@
+//! Concordance (paper §6.1): the basic map-reduce example.
+//!
+//! For each word-string length n in 1..=N, find every location of every
+//! repeated n-word sequence in a large text. One object per n flows
+//! through a 3-stage pipeline — `valueList` → `indicesMap` → `wordsMap`
+//! — with collection/filtering at the end (phases 2–5 of the paper's
+//! algorithm; phase 1, text input and word valuation, happens in the
+//! Emit init and can optionally be parallelised, §8.1).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::csp::error::Result;
+use crate::data::details::{DataDetails, ResultDetails};
+use crate::data::object::{downcast_mut, register_class, Aux, Params, ReturnCode, Value};
+
+use super::corpus::{clean_words, word_value};
+
+/// One concordance task: all sequences of length `n`.
+#[derive(Clone, Debug, Default)]
+pub struct ConcordanceData {
+    pub n: usize,
+    pub min_seq_len: usize,
+    /// Shared, read-only text data (the paper's static structures). The
+    /// Arc is never mutated after init, so sharing across clones is safe.
+    pub words: Arc<Vec<String>>,
+    pub values: Arc<Vec<i64>>,
+    /// Stage outputs.
+    pub value_list: Vec<i64>,
+    pub indices_map: HashMap<i64, Vec<usize>>,
+    pub words_map: HashMap<String, Vec<usize>>,
+    /// Prototype emission state.
+    max_n: usize,
+    next_n: usize,
+}
+
+impl ConcordanceData {
+    /// `initClass([text, N, minSeqLen])` — phase 1: "Read in the text
+    /// file, remove extraneous punctuation … calculate an integer value".
+    fn init_class(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        let text = p.str(0)?;
+        self.max_n = p.usize(1)?;
+        self.min_seq_len = p.usize(2)?;
+        let words = clean_words(text);
+        let values: Vec<i64> = words.iter().map(|w| word_value(w)).collect();
+        self.words = Arc::new(words);
+        self.values = Arc::new(values);
+        self.next_n = 1;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// `create` — one instance per n.
+    fn create(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let proto =
+            downcast_mut::<ConcordanceData>(aux.expect("proto"), "concordance.create")?;
+        if proto.next_n > proto.max_n {
+            return Ok(ReturnCode::NormalTermination);
+        }
+        self.n = proto.next_n;
+        self.min_seq_len = proto.min_seq_len;
+        self.words = proto.words.clone();
+        self.values = proto.values.clone();
+        self.value_list.clear();
+        self.indices_map.clear();
+        self.words_map.clear();
+        proto.next_n += 1;
+        Ok(ReturnCode::NormalContinuation)
+    }
+
+    /// Stage 1 (`valueList`, phase 2): sliding-window sums of n word
+    /// values for every location.
+    fn value_list(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        let n = self.n;
+        let values = &self.values;
+        if values.len() < n || n == 0 {
+            self.value_list.clear();
+            return Ok(ReturnCode::CompletedOk);
+        }
+        let mut out = Vec::with_capacity(values.len() - n + 1);
+        let mut acc: i64 = values[..n].iter().sum();
+        out.push(acc);
+        for i in n..values.len() {
+            acc += values[i] - values[i - n];
+            out.push(acc);
+        }
+        self.value_list = out;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// Stage 2 (`indicesMap`, phase 3): group locations by equal value.
+    fn indices_map(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        let mut map: HashMap<i64, Vec<usize>> = HashMap::new();
+        for (i, &v) in self.value_list.iter().enumerate() {
+            map.entry(v).or_default().push(i);
+        }
+        // Only collisions can be repeats.
+        map.retain(|_, locs| locs.len() >= 2);
+        self.indices_map = map;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// Stage 3 (`wordsMap`, phase 4): disambiguate — "In some cases, the
+    /// same value will refer to different strings of words".
+    fn words_map(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        let n = self.n;
+        let words = &self.words;
+        let mut out: HashMap<String, Vec<usize>> = HashMap::new();
+        for locs in self.indices_map.values() {
+            for &loc in locs {
+                let phrase = words[loc..loc + n].join(" ");
+                out.entry(phrase).or_default().push(loc);
+            }
+        }
+        out.retain(|_, locs| locs.len() >= self.min_seq_len.max(2));
+        for locs in out.values_mut() {
+            locs.sort_unstable();
+        }
+        self.words_map = out;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// Number of distinct repeated sequences found.
+    pub fn sequences_found(&self) -> usize {
+        self.words_map.len()
+    }
+}
+
+crate::gpp_data_class!(ConcordanceData, "concordanceData", {
+    "initClass" => init_class,
+    "create" => create,
+    "valueList" => value_list,
+    "indicesMap" => indices_map,
+    "wordsMap" => words_map,
+}, props {
+    "n" => |s| Value::Int(s.n as i64),
+    "sequences" => |s| Value::Int(s.words_map.len() as i64),
+});
+
+/// Result object: totals per n (phase 5; file output optional).
+#[derive(Clone, Debug, Default)]
+pub struct ConcordanceResult {
+    /// (n, distinct sequences, total locations) per collected object.
+    pub per_n: Vec<(usize, usize, usize)>,
+    /// Optional output directory: one file per n, as the paper writes.
+    pub out_dir: Option<String>,
+}
+
+impl ConcordanceResult {
+    fn init(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        if let Ok(dir) = p.str(0) {
+            if !dir.is_empty() {
+                self.out_dir = Some(dir.to_string());
+            }
+        }
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn collector(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let d = downcast_mut::<ConcordanceData>(aux.expect("input"), "concordance.collector")?;
+        let locations: usize = d.words_map.values().map(|v| v.len()).sum();
+        self.per_n.push((d.n, d.words_map.len(), locations));
+        if let Some(dir) = &self.out_dir {
+            let mut lines: Vec<String> = d
+                .words_map
+                .iter()
+                .map(|(phrase, locs)| format!("{phrase}: {locs:?}"))
+                .collect();
+            lines.sort();
+            let path = format!("{dir}/concordance_n{}.txt", d.n);
+            if std::fs::write(&path, lines.join("\n")).is_err() {
+                return Ok(ReturnCode::Error(-40));
+            }
+        }
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn finalise(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.per_n.sort_unstable();
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// Canonical summary for cross-architecture comparison.
+    pub fn summary(&self) -> Vec<(usize, usize, usize)> {
+        let mut v = self.per_n.clone();
+        v.sort_unstable();
+        v
+    }
+}
+
+crate::gpp_data_class!(ConcordanceResult, "concordanceResult", {
+    "init" => init,
+    "collector" => collector,
+    "finalise" => finalise,
+}, props {
+    "count" => |s| Value::Int(s.per_n.len() as i64),
+    "totalSequences" => |s| Value::Int(s.per_n.iter().map(|x| x.1 as i64).sum()),
+});
+
+impl ConcordanceData {
+    pub fn emit_details(text: &str, max_n: usize, min_seq_len: usize) -> DataDetails {
+        DataDetails::new("concordanceData")
+            .init(
+                "initClass",
+                Params::of(vec![
+                    Value::Str(text.to_string()),
+                    Value::Int(max_n as i64),
+                    Value::Int(min_seq_len as i64),
+                ]),
+            )
+            .create("create", Params::empty())
+    }
+
+    /// Stage spec list for the pipeline patterns.
+    pub fn stages() -> Vec<crate::functionals::pipelines::StageSpec> {
+        use crate::functionals::pipelines::StageSpec;
+        vec![
+            StageSpec::new("valueList"),
+            StageSpec::new("indicesMap"),
+            StageSpec::new("wordsMap"),
+        ]
+    }
+}
+
+impl ConcordanceResult {
+    pub fn result_details() -> ResultDetails {
+        ResultDetails::new("concordanceResult")
+            .init("init", Params::empty())
+            .collect("collector")
+            .finalise("finalise", Params::empty())
+    }
+}
+
+pub fn register() {
+    register_class("concordanceData", || Box::new(ConcordanceData::default()));
+    register_class("concordanceResult", || {
+        Box::new(ConcordanceResult::default())
+    });
+}
+
+/// Sequential baseline over the same phases.
+pub fn sequential(text: &str, max_n: usize, min_seq_len: usize) -> Result<ConcordanceResult> {
+    let mut proto = ConcordanceData::default();
+    proto.init_class(
+        &Params::of(vec![
+            Value::Str(text.to_string()),
+            Value::Int(max_n as i64),
+            Value::Int(min_seq_len as i64),
+        ]),
+        None,
+    )?;
+    let mut result = ConcordanceResult::default();
+    result.init(&Params::empty(), None)?;
+    loop {
+        let mut d = proto.clone();
+        if let ReturnCode::NormalTermination = {
+            let pr = &mut proto;
+            d.create(&Params::empty(), Some(pr))?
+        } {
+            break;
+        }
+        d.value_list(&Params::empty(), None)?;
+        d.indices_map(&Params::empty(), None)?;
+        d.words_map(&Params::empty(), None)?;
+        result.collector(&Params::empty(), Some(&mut d))?;
+    }
+    result.finalise(&Params::empty(), None)?;
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functionals::pipelines::StageSpec;
+    use crate::patterns::{GroupOfPipelineCollects, TaskParallelOfGroupCollects};
+    use crate::workloads::corpus::generate;
+
+    fn tiny_text() -> String {
+        // "a b a b c a b" → "a b" repeats 3 times at 0, 2, 5.
+        "a b a b c a b".to_string()
+    }
+
+    #[test]
+    fn sequential_finds_known_repeats() {
+        let r = sequential(&tiny_text(), 2, 2).unwrap();
+        let s = r.summary();
+        // n=1: 'a' ×3, 'b' ×3 (c only once) → 2 sequences, 6 locations.
+        assert_eq!(s[0], (1, 2, 6));
+        // n=2: only "a b" repeats (locations 0, 2, 5); "b a" occurs once
+        // (it shares the letter-sum value with "a b" — the indicesMap
+        // collision — but wordsMap disambiguates and drops it).
+        let (n, seqs, locs) = s[1];
+        assert_eq!(n, 2);
+        assert_eq!(seqs, 1);
+        assert_eq!(locs, 3);
+    }
+
+    #[test]
+    fn collisions_disambiguated() {
+        // "ab" and "ba" share a letter-sum value; wordsMap must separate.
+        let r = sequential("ab ba ab ba", 1, 2).unwrap();
+        let s = r.summary();
+        assert_eq!(s[0].1, 2, "two distinct words despite equal value");
+    }
+
+    #[test]
+    fn gop_matches_sequential() {
+        register();
+        let text = generate(3000, 77);
+        let seq = sequential(&text, 4, 2).unwrap();
+        let gop = GroupOfPipelineCollects::new(
+            ConcordanceData::emit_details(&text, 4, 2),
+            vec![ConcordanceResult::result_details(); 2],
+            ConcordanceData::stages(),
+            2,
+        );
+        let results = gop.run_network().unwrap();
+        // Merge the per-pipeline collectors.
+        let mut merged: Vec<(usize, usize, usize)> = Vec::new();
+        for r in &results {
+            let c = r
+                .as_any()
+                .downcast_ref::<ConcordanceResult>()
+                .expect("ConcordanceResult");
+            merged.extend(c.summary());
+        }
+        merged.sort_unstable();
+        assert_eq!(merged, seq.summary());
+    }
+
+    #[test]
+    fn pog_matches_sequential() {
+        register();
+        let text = generate(3000, 78);
+        let seq = sequential(&text, 4, 2).unwrap();
+        let pog = TaskParallelOfGroupCollects::new(
+            ConcordanceData::emit_details(&text, 4, 2),
+            vec![ConcordanceResult::result_details(); 2],
+            vec![
+                StageSpec::new("valueList"),
+                StageSpec::new("indicesMap"),
+                StageSpec::new("wordsMap"),
+            ],
+            2,
+        );
+        let results = pog.run_network().unwrap();
+        let mut merged: Vec<(usize, usize, usize)> = Vec::new();
+        for r in &results {
+            let c = r
+                .as_any()
+                .downcast_ref::<ConcordanceResult>()
+                .expect("ConcordanceResult");
+            merged.extend(c.summary());
+        }
+        merged.sort_unstable();
+        assert_eq!(merged, seq.summary());
+    }
+}

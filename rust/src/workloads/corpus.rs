@@ -1,0 +1,164 @@
+//! Synthetic concordance corpus (substitution for the paper's Project
+//! Gutenberg Bible, 802k words / 4.6 MB).
+//!
+//! Natural-language word statistics are what drive the concordance's
+//! value-collision and repeat-sequence behaviour, so the generator draws
+//! words from a Zipf(s≈1.07) distribution over a deterministic
+//! consonant-vowel vocabulary, with short common function words at the
+//! top ranks — the same shape as English. Sequences repeat (the Bible's
+//! repeated phrases) because high-rank words dominate.
+
+use crate::util::rng::Rng;
+
+/// Deterministic vocabulary: rank 0 is "the"-like, ranks grow longer.
+pub fn vocabulary(size: usize) -> Vec<String> {
+    const CONS: &[u8] = b"bcdfghklmnprstvw";
+    const VOWS: &[u8] = b"aeiou";
+    let mut words = Vec::with_capacity(size);
+    let mut i = 0usize;
+    while words.len() < size {
+        // Syllable count grows with rank: common words are short.
+        let syllables = 1 + words.len() / 200;
+        let mut w = String::new();
+        let mut k = i;
+        for _ in 0..syllables.min(4) {
+            w.push(CONS[k % CONS.len()] as char);
+            k /= CONS.len();
+            w.push(VOWS[k % VOWS.len()] as char);
+            k /= VOWS.len();
+        }
+        // Vary endings so words stay unique.
+        if i >= CONS.len() * VOWS.len() {
+            w.push(CONS[(i / 7) % CONS.len()] as char);
+        }
+        if !words.contains(&w) {
+            words.push(w);
+        }
+        i += 1;
+    }
+    words
+}
+
+/// Zipf CDF sampler (precomputed).
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        Self { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        match self
+            .cdf
+            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// Generate a corpus of `words` tokens with punctuation sprinkled in so
+/// the concordance's cleaning step has work to do.
+pub fn generate(words: usize, seed: u64) -> String {
+    let vocab = vocabulary(4000.min(words.max(100)));
+    let zipf = ZipfSampler::new(vocab.len(), 1.07);
+    let mut rng = Rng::new(seed);
+    let mut out = String::with_capacity(words * 6);
+    for i in 0..words {
+        let w = &vocab[zipf.sample(&mut rng)];
+        out.push_str(w);
+        // Punctuation ~ every 12 words; newline ~ every 14 words.
+        match rng.next_bounded(14) {
+            0 => out.push_str(". "),
+            1 => out.push_str(", "),
+            2 => out.push('\n'),
+            _ => out.push(' '),
+        }
+        let _ = i;
+    }
+    out
+}
+
+/// Tokenize + clean (the concordance's "remove extraneous punctuation").
+pub fn clean_words(text: &str) -> Vec<String> {
+    text.split_whitespace()
+        .map(|w| {
+            w.chars()
+                .filter(|c| c.is_ascii_alphanumeric())
+                .collect::<String>()
+                .to_lowercase()
+        })
+        .filter(|w| !w.is_empty())
+        .collect()
+}
+
+/// The concordance's word value: "an integer value corresponding to the
+/// sum of the letter codes in the word".
+pub fn word_value(w: &str) -> i64 {
+    w.bytes().map(|b| b as i64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocabulary_unique_and_sized() {
+        let v = vocabulary(500);
+        assert_eq!(v.len(), 500);
+        let set: std::collections::HashSet<_> = v.iter().collect();
+        assert_eq!(set.len(), 500);
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        assert_eq!(generate(1000, 42), generate(1000, 42));
+        assert_ne!(generate(1000, 42), generate(1000, 43));
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let v = vocabulary(100);
+        let words = clean_words(&generate(20_000, 7));
+        let mut counts = std::collections::HashMap::new();
+        for w in &words {
+            *counts.entry(w.clone()).or_insert(0usize) += 1;
+        }
+        let top = counts.get(&v[0]).copied().unwrap_or(0);
+        let mid = counts.get(&v[50]).copied().unwrap_or(0);
+        assert!(top > mid * 5, "top={top} mid={mid}");
+    }
+
+    #[test]
+    fn clean_strips_punctuation() {
+        let words = clean_words("Hello, World. FOO-bar\nbaz!");
+        assert_eq!(words, vec!["hello", "world", "foobar", "baz"]);
+    }
+
+    #[test]
+    fn word_value_sums_codes() {
+        assert_eq!(word_value("ab"), 97 + 98);
+        assert_eq!(word_value(""), 0);
+    }
+
+    #[test]
+    fn corpus_word_count_close() {
+        let words = clean_words(&generate(5000, 1));
+        // Every token yields one word.
+        assert_eq!(words.len(), 5000);
+    }
+}

@@ -1,0 +1,547 @@
+//! Goldbach conjecture (paper §6.5, Listing 18, Figure 9): the
+//! unstructured two-phase network.
+//!
+//! Phase 1 — segmented sieve: an `EmitWithLocal` emits each prime up to
+//! `filter = √maxPrime` (found by the local sieve class); a group of
+//! workers each owns a partition of `[2, maxPrime]` and strikes the
+//! multiples of every incoming prime (out_data=false — the partition
+//! bitmaps are emitted at termination). `CombineNto1` merges partitions
+//! into the full prime table.
+//!
+//! Phase 2 — Goldbach check: the prime table is `OneParCastList`-cast to
+//! `gWorkers` workers, each verifying the even numbers in its partition
+//! decompose as p+q; a reducer feeds the collector which reports the
+//! largest even number with a *continuous* run of verified predecessors.
+
+use crate::csp::error::Result;
+use crate::data::details::{DataDetails, LocalDetails, ResultDetails};
+use crate::data::object::{downcast_mut, register_class, Aux, Params, ReturnCode, Value};
+
+/// Local sieve class for `EmitWithLocal`: yields successive primes ≤ filter.
+#[derive(Clone, Debug, Default)]
+pub struct SieveLocal {
+    pub filter: i64,
+    pub last: i64,
+}
+
+impl SieveLocal {
+    fn init(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.filter = p.int(0)?;
+        self.last = 1;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// Next prime after `last`, or 0 when exhausted.
+    pub fn next_prime(&mut self) -> i64 {
+        let mut c = self.last + 1;
+        'outer: while c <= self.filter {
+            if c >= 2 {
+                let mut d = 2;
+                while d * d <= c {
+                    if c % d == 0 {
+                        c += 1;
+                        continue 'outer;
+                    }
+                    d += 1;
+                }
+                self.last = c;
+                return c;
+            }
+            c += 1;
+        }
+        0
+    }
+}
+
+crate::gpp_data_class!(SieveLocal, "sieveLocal", {
+    "init" => init,
+});
+
+/// The emitted prime object.
+#[derive(Clone, Debug, Default)]
+pub struct PrimeData {
+    pub prime: i64,
+}
+
+impl PrimeData {
+    fn init(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// `create` — aux is the `SieveLocal`; terminate when exhausted.
+    fn create(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let sieve = downcast_mut::<SieveLocal>(aux.expect("local"), "prime.create")?;
+        let p = sieve.next_prime();
+        if p == 0 {
+            return Ok(ReturnCode::NormalTermination);
+        }
+        self.prime = p;
+        Ok(ReturnCode::NormalContinuation)
+    }
+
+    /// `sievePrime` — worker function: strike multiples of this prime in
+    /// the worker's partition (held in the worker-local `SievePartition`).
+    fn sieve_prime(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let part = downcast_mut::<SievePartition>(aux.expect("worker local"), "sievePrime")?;
+        let p = self.prime;
+        if p < 2 {
+            return Ok(ReturnCode::Error(-50));
+        }
+        // First multiple ≥ max(p², lo), aligned to p.
+        let mut m = (p * p).max((part.lo + p - 1) / p * p);
+        while m < part.hi {
+            part.composite[(m - part.lo) as usize] = true;
+            m += p;
+        }
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+crate::gpp_data_class!(PrimeData, "primeData", {
+    "init" => init,
+    "create" => create,
+    "sievePrime" => sieve_prime,
+}, props {
+    "prime" => |s| Value::Int(s.prime),
+});
+
+/// Worker-local partition of the sieve range (out_data=false payload).
+#[derive(Clone, Debug, Default)]
+pub struct SievePartition {
+    pub lo: i64,
+    pub hi: i64,
+    pub composite: Vec<bool>,
+}
+
+impl SievePartition {
+    /// `init([index, workers, maxPrime])`: equal split of [2, maxPrime).
+    fn init(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        let index = p.int(0)?;
+        let workers = p.int(1)?;
+        let max = p.int(2)?;
+        let span = max - 2;
+        self.lo = 2 + span * index / workers;
+        self.hi = 2 + span * (index + 1) / workers;
+        self.composite = vec![false; (self.hi - self.lo).max(0) as usize];
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+crate::gpp_data_class!(SievePartition, "sievePartition", {
+    "init" => init,
+}, props {
+    "lo" => |s| Value::Int(s.lo),
+});
+
+/// Accumulator local for `CombineNto1`: merges partitions into the full
+/// prime table (the paper's `internalList.toIntegers`).
+#[derive(Clone, Debug, Default)]
+pub struct PrimeTable {
+    pub max: i64,
+    /// is_prime[i] ⇔ i prime, for i < max.
+    pub is_prime: Vec<bool>,
+    pub primes: Vec<i64>,
+    // Phase-2 fields (the paper keeps one `resultantPrimes` class for
+    // both phases too).
+    pub range_lo: i64,
+    pub range_hi: i64,
+    pub failures: Vec<i64>,
+    pub checked: bool,
+}
+
+impl PrimeTable {
+    fn init(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.max = p.int(0)?;
+        self.is_prime = vec![false; self.max as usize];
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// `combine` — fold one `SievePartition` in.
+    fn combine(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let part = downcast_mut::<SievePartition>(aux.expect("input"), "primeTable.combine")?;
+        for (k, &comp) in part.composite.iter().enumerate() {
+            let v = part.lo + k as i64;
+            if !comp && v >= 2 {
+                self.is_prime[v as usize] = true;
+            }
+        }
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// `toIntegers` — finalise: materialise the sorted prime list.
+    fn to_integers(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.primes = self
+            .is_prime
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b)
+            .map(|(i, _)| i as i64)
+            .collect();
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// `getRange([index, workers])` — phase 2 worker function: check the
+    /// even numbers in this worker's partition of [4, 2·max).
+    fn get_range(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        let index = p.int(0)?;
+        let workers = p.int(1)?;
+        let max_goldbach = 2 * self.max;
+        let span = (max_goldbach - 4) / 2; // count of even numbers
+        let lo_k = span * index / workers;
+        let hi_k = span * (index + 1) / workers;
+        self.range_lo = 4 + 2 * lo_k;
+        self.range_hi = 4 + 2 * hi_k;
+        self.failures.clear();
+        let e_lo = self.range_lo;
+        let e_hi = self.range_hi;
+        let mut e = e_lo;
+        while e < e_hi {
+            if !self.check_even(e) {
+                self.failures.push(e);
+            }
+            e += 2;
+        }
+        self.checked = true;
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+impl PrimeTable {
+    /// Does even `e` decompose as p + q with both prime (≤ max)?
+    pub fn check_even(&self, e: i64) -> bool {
+        debug_assert!(e % 2 == 0);
+        for &p in &self.primes {
+            if p > e / 2 {
+                break;
+            }
+            let q = e - p;
+            if q < self.max && self.is_prime[q as usize] {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+crate::gpp_data_class!(PrimeTable, "primeTable", {
+    "init" => init,
+    "combine" => combine,
+    "toIntegers" => to_integers,
+    "getRange" => get_range,
+}, props {
+    "primes" => |s| Value::Int(s.primes.len() as i64),
+    "rangeLo" => |s| Value::Int(s.range_lo),
+});
+
+/// Result collector: "determines the maximum number that has a Goldbach
+/// conjecture pair of prime numbers" (continuously from 4).
+#[derive(Clone, Debug, Default)]
+pub struct GoldbachResult {
+    /// Verified ranges and their failures.
+    pub ranges: Vec<(i64, i64)>,
+    pub failures: Vec<i64>,
+    pub max_continuous: i64,
+}
+
+impl GoldbachResult {
+    fn init(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn collector(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let t = downcast_mut::<PrimeTable>(aux.expect("input"), "goldbach.collector")?;
+        if t.checked {
+            self.ranges.push((t.range_lo, t.range_hi));
+            self.failures.extend_from_slice(&t.failures);
+        }
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn finalise(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.ranges.sort_unstable();
+        self.failures.sort_unstable();
+        // Largest even e such that [4, e] is fully covered and failure-free.
+        let mut covered_to = 4i64;
+        for &(lo, hi) in &self.ranges {
+            if lo <= covered_to {
+                covered_to = covered_to.max(hi);
+            } else {
+                break;
+            }
+        }
+        let first_failure = self.failures.first().copied().unwrap_or(i64::MAX);
+        self.max_continuous = (covered_to - 2).min(first_failure - 2);
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+crate::gpp_data_class!(GoldbachResult, "goldbachResult", {
+    "init" => init,
+    "collector" => collector,
+    "finalise" => finalise,
+}, props {
+    "maxContinuous" => |s| Value::Int(s.max_continuous),
+    "failures" => |s| Value::Int(s.failures.len() as i64),
+});
+
+impl PrimeData {
+    pub fn emit_details() -> DataDetails {
+        DataDetails::new("primeData")
+            .init("init", Params::empty())
+            .create("create", Params::empty())
+    }
+}
+
+impl SieveLocal {
+    pub fn local_details(filter: i64) -> LocalDetails {
+        LocalDetails::new("sieveLocal").init("init", Params::of(vec![Value::Int(filter)]))
+    }
+}
+
+impl SievePartition {
+    pub fn local_details(index: i64, workers: i64, max_prime: i64) -> LocalDetails {
+        LocalDetails::new("sievePartition").init(
+            "init",
+            Params::of(vec![
+                Value::Int(index),
+                Value::Int(workers),
+                Value::Int(max_prime),
+            ]),
+        )
+    }
+}
+
+impl PrimeTable {
+    pub fn combine_local(max_prime: i64) -> LocalDetails {
+        LocalDetails::new("primeTable").init("init", Params::of(vec![Value::Int(max_prime)]))
+    }
+}
+
+impl GoldbachResult {
+    pub fn result_details() -> ResultDetails {
+        ResultDetails::new("goldbachResult")
+            .init("init", Params::empty())
+            .collect("collector")
+            .finalise("finalise", Params::empty())
+    }
+}
+
+pub fn register() {
+    register_class("sieveLocal", || Box::new(SieveLocal::default()));
+    register_class("primeData", || Box::new(PrimeData::default()));
+    register_class("sievePartition", || Box::new(SievePartition::default()));
+    register_class("primeTable", || Box::new(PrimeTable::default()));
+    register_class("goldbachResult", || Box::new(GoldbachResult::default()));
+}
+
+/// Sequential baseline: sieve + check in plain loops.
+pub fn sequential(max_prime: i64) -> Result<GoldbachResult> {
+    // Sieve of Eratosthenes up to max_prime.
+    let mut is_prime = vec![true; max_prime as usize];
+    is_prime[0] = false;
+    if max_prime > 1 {
+        is_prime[1] = false;
+    }
+    let mut p = 2i64;
+    while p * p < max_prime {
+        if is_prime[p as usize] {
+            let mut m = p * p;
+            while m < max_prime {
+                is_prime[m as usize] = false;
+                m += p;
+            }
+        }
+        p += 1;
+    }
+    let primes: Vec<i64> = is_prime
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b)
+        .map(|(i, _)| i as i64)
+        .collect();
+    let table = PrimeTable {
+        max: max_prime,
+        is_prime,
+        primes,
+        ..Default::default()
+    };
+    let mut result = GoldbachResult::default();
+    let mut e = 4i64;
+    let mut failures = Vec::new();
+    while e < 2 * max_prime {
+        if !table.check_even(e) {
+            failures.push(e);
+        }
+        e += 2;
+    }
+    result.ranges.push((4, 2 * max_prime));
+    result.failures = failures;
+    result.finalise(&Params::empty(), None)?;
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sieve_local_yields_primes_in_order() {
+        let mut s = SieveLocal {
+            filter: 30,
+            last: 1,
+        };
+        let mut got = Vec::new();
+        loop {
+            let p = s.next_prime();
+            if p == 0 {
+                break;
+            }
+            got.push(p);
+        }
+        assert_eq!(got, vec![2, 3, 5, 7, 11, 13, 17, 19, 23, 29]);
+    }
+
+    #[test]
+    fn sequential_goldbach_small() {
+        let r = sequential(100).unwrap();
+        // All evens < ~200 satisfy Goldbach when q may reach max_prime;
+        // near 2·max the decomposition window narrows but 100 is safe.
+        assert!(r.max_continuous >= 100, "{}", r.max_continuous);
+    }
+
+    #[test]
+    fn check_even_known_cases() {
+        let mut is_prime = vec![false; 50];
+        for p in [2usize, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47] {
+            is_prime[p] = true;
+        }
+        let t = PrimeTable {
+            max: 50,
+            primes: is_prime
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b)
+                .map(|(i, _)| i as i64)
+                .collect(),
+            is_prime,
+            ..Default::default()
+        };
+        assert!(t.check_even(4)); // 2+2
+        assert!(t.check_even(28)); // 5+23
+        assert!(t.check_even(90)); // 43+47
+    }
+}
+
+/// Build and run the full two-phase Goldbach network (paper Listing 18,
+/// Figure 9): segmented-sieve phase feeding the Goldbach-check phase.
+pub fn run_network(max_prime: i64, p_workers: usize, g_workers: usize) -> Result<GoldbachResult> {
+    use crate::csp::channel::{channel_list, named_channel};
+    use crate::csp::process::{run_parallel_named, CSProcess};
+    use crate::data::message::Message;
+    use crate::processes::{Collect, CombineNto1, EmitWithLocal, ListSeqOne, OneParCastList, OneSeqCastList};
+
+    register();
+    let filter = (max_prime as f64).sqrt() as i64 + 1;
+
+    let (emit_out, spread1_in) = named_channel::<Message>("gb.emit");
+    let (g1_outs, g1_ins) = channel_list::<Message>(p_workers, "gb.toG1");
+    let (g1_res_outs, g1_res_ins) = channel_list::<Message>(p_workers, "gb.fromG1");
+    let (red1_out, combine_in) = named_channel::<Message>("gb.red1");
+    let (combine_out, spread2_in) = named_channel::<Message>("gb.combined");
+    let (g2_outs, g2_ins) = channel_list::<Message>(g_workers, "gb.toG2");
+    let (g2_res_outs, g2_res_ins) = channel_list::<Message>(g_workers, "gb.fromG2");
+    let (red2_out, coll_in) = named_channel::<Message>("gb.red2");
+    let (tx, rx) = std::sync::mpsc::channel();
+
+    let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
+    // Phase 1: prime emission + partitioned sieve.
+    procs.push(Box::new(EmitWithLocal::new(
+        PrimeData::emit_details(),
+        SieveLocal::local_details(filter),
+        emit_out,
+    )));
+    // Every group1 member sees every prime.
+    procs.push(Box::new(OneSeqCastList::new(spread1_in, g1_outs)));
+    // Group1: indexed workers, each with its own sieve partition local;
+    // out_data=false so the partition itself is emitted at termination.
+    for (i, (inp, out)) in g1_ins.into_iter().zip(g1_res_outs).enumerate() {
+        procs.push(Box::new(
+            crate::processes::Worker::new(inp, out, "sievePrime")
+                .with_local(SievePartition::local_details(
+                    i as i64,
+                    p_workers as i64,
+                    max_prime,
+                ))
+                .with_out_data(false)
+                .with_index(i),
+        ));
+    }
+
+    // Phase 1 reduction into the combined prime table.
+    procs.push(Box::new(ListSeqOne::new(g1_res_ins, red1_out)));
+    procs.push(Box::new(
+        CombineNto1::new(
+            combine_in,
+            combine_out,
+            PrimeTable::combine_local(max_prime),
+            "combine",
+        )
+        .with_finalise("toIntegers"),
+    ));
+
+    // Phase 2: broadcast the prime table to every Goldbach worker.
+    procs.push(Box::new(OneParCastList::new(spread2_in, g2_outs)));
+    for (i, (inp, out)) in g2_ins.into_iter().zip(g2_res_outs).enumerate() {
+        procs.push(Box::new(
+            crate::processes::Worker::new(inp, out, "getRange")
+                .with_modifier(Params::of(vec![
+                    Value::Int(i as i64),
+                    Value::Int(g_workers as i64),
+                ]))
+                .with_index(i),
+        ));
+    }
+    procs.push(Box::new(ListSeqOne::new(g2_res_ins, red2_out)));
+    procs.push(Box::new(
+        Collect::new(GoldbachResult::result_details(), coll_in).with_result_out(tx),
+    ));
+
+    run_parallel_named("goldbach", procs)?;
+    let result = rx
+        .try_iter()
+        .next()
+        .ok_or_else(|| crate::csp::error::GppError::Other("no goldbach result".into()))?;
+    result
+        .as_any()
+        .downcast_ref::<GoldbachResult>()
+        .cloned()
+        .ok_or_else(|| crate::csp::error::GppError::BadCast {
+            expected: "GoldbachResult".into(),
+            context: "goldbach::run_network".into(),
+        })
+}
+
+#[cfg(test)]
+mod network_tests {
+    use super::*;
+
+    #[test]
+    fn network_matches_sequential() {
+        let seq = sequential(2000).unwrap();
+        for (pw, gw) in [(1usize, 2usize), (2, 4)] {
+            let net = run_network(2000, pw, gw).unwrap();
+            assert_eq!(
+                net.max_continuous, seq.max_continuous,
+                "pWorkers={pw} gWorkers={gw}"
+            );
+            assert_eq!(net.failures, seq.failures);
+        }
+    }
+
+    #[test]
+    fn network_covers_whole_range() {
+        let r = run_network(500, 1, 3).unwrap();
+        assert_eq!(r.ranges.first().map(|r| r.0), Some(4));
+        assert_eq!(r.ranges.last().map(|r| r.1), Some(1000));
+    }
+}

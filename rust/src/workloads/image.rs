@@ -1,0 +1,404 @@
+//! Kernel-based image processing (paper §6.4, Listing 17): a stream of
+//! images put through greyscale conversion then edge detection (3×3 or
+//! 5×5 kernels) on chained [`crate::engines::StencilEngine`]s.
+//!
+//! The paper uses a 24-Mpixel photograph scaled to four sizes; we
+//! generate content-equivalent synthetic images (stencil cost is
+//! per-pixel and content-independent — DESIGN.md substitution table).
+
+use std::sync::Arc;
+
+use crate::csp::error::Result;
+use crate::data::details::{DataDetails, ResultDetails};
+use crate::data::object::{downcast_mut, register_class, Aux, Params, ReturnCode, Value};
+use crate::engines::state::{access_state, CalcCtx, CalcFn, EngineState, StateAccessor};
+use crate::util::rng::Rng;
+
+pub const CHANNELS: usize = 3;
+
+/// The paper's two edge-detection kernels (Listing 17).
+pub fn edge_kernel_3x3() -> (Vec<f64>, usize) {
+    (
+        vec![
+            -1.0, -1.0, -1.0, //
+            -1.0, 8.0, -1.0, //
+            -1.0, -1.0, -1.0,
+        ],
+        3,
+    )
+}
+
+pub fn edge_kernel_5x5() -> (Vec<f64>, usize) {
+    let mut k = vec![-1.0; 25];
+    k[12] = 24.0;
+    (k, 5)
+}
+
+/// One flowing image: `current`/`next` hold interleaved RGB rows
+/// (stride = row, i.e. one "element" per row so partitions are row
+/// blocks); `meta = [width, height]`; `consts` = convolution kernel.
+#[derive(Clone, Debug, Default)]
+pub struct ImageData {
+    pub width: usize,
+    pub height: usize,
+    pub state: EngineState,
+    /// Prototype emission fields.
+    widths: Vec<i64>,
+    heights: Vec<i64>,
+    next_img: usize,
+    seed: u64,
+}
+
+impl ImageData {
+    /// `initMethod([seed, w1, h1, w2, h2, …])`.
+    fn init_method(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.seed = p.int(0)? as u64;
+        self.widths.clear();
+        self.heights.clear();
+        let rest = &p.0[1..];
+        if rest.len() % 2 != 0 {
+            return Ok(ReturnCode::Error(-30));
+        }
+        for pair in rest.chunks(2) {
+            self.widths.push(pair[0].as_int()?);
+            self.heights.push(pair[1].as_int()?);
+        }
+        self.next_img = 0;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn create_method(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let proto = downcast_mut::<ImageData>(aux.expect("proto"), "imageData.create")?;
+        if proto.next_img >= proto.widths.len() {
+            return Ok(ReturnCode::NormalTermination);
+        }
+        let w = proto.widths[proto.next_img] as usize;
+        let h = proto.heights[proto.next_img] as usize;
+        proto.next_img += 1;
+        *self = generate_image(w, h, proto.seed);
+        Ok(ReturnCode::NormalContinuation)
+    }
+}
+
+crate::gpp_data_class!(ImageData, "imageData", {
+    "initMethod" => init_method,
+    "createMethod" => create_method,
+}, props {
+    "width" => |s| Value::Int(s.width as i64),
+    "height" => |s| Value::Int(s.height as i64),
+});
+
+/// Synthetic "photograph": smooth gradients plus seeded shapes so the
+/// edge detector has real structure to find.
+pub fn generate_image(width: usize, height: usize, seed: u64) -> ImageData {
+    let mut rng = Rng::new(seed);
+    let mut pixels = vec![0.0f64; width * height * CHANNELS];
+    for y in 0..height {
+        for x in 0..width {
+            let base = (y * width + x) * CHANNELS;
+            pixels[base] = (x as f64 / width as f64) * 255.0;
+            pixels[base + 1] = (y as f64 / height as f64) * 255.0;
+            pixels[base + 2] = ((x + y) as f64 / (width + height) as f64) * 255.0;
+        }
+    }
+    // Random bright rectangles (edges for the detector).
+    for _ in 0..10 {
+        let rx = rng.next_bounded(width.max(1) as u64) as usize;
+        let ry = rng.next_bounded(height.max(1) as u64) as usize;
+        let rw = (rng.next_bounded(width.max(4) as u64 / 4 + 1) + 2) as usize;
+        let rh = (rng.next_bounded(height.max(4) as u64 / 4 + 1) + 2) as usize;
+        let v = rng.range_f64(100.0, 255.0);
+        for y in ry..(ry + rh).min(height) {
+            for x in rx..(rx + rw).min(width) {
+                let base = (y * width + x) * CHANNELS;
+                pixels[base] = v;
+                pixels[base + 1] = 255.0 - v;
+                pixels[base + 2] = v * 0.5;
+            }
+        }
+    }
+    let row_stride = width * CHANNELS;
+    ImageData {
+        width,
+        height,
+        state: EngineState {
+            consts: Vec::new(),
+            const_dims: Vec::new(),
+            next: vec![0.0; pixels.len()],
+            current: pixels,
+            meta: vec![width as f64, height as f64],
+            partitions: Vec::new(),
+            stride: row_stride, // one element = one image row
+            iterations_done: 0,
+        },
+        widths: Vec::new(),
+        heights: Vec::new(),
+        next_img: 0,
+        seed,
+    }
+}
+
+/// `greyScaleMethod`: per-row luminance conversion.
+pub fn greyscale_op() -> CalcFn {
+    Arc::new(|ctx: &CalcCtx, range, out| {
+        let width = ctx.meta[0] as usize;
+        for (k, row) in range.clone().enumerate() {
+            let src = &ctx.current[row * ctx.stride..(row + 1) * ctx.stride];
+            let dst = &mut out[k * ctx.stride..(k + 1) * ctx.stride];
+            for x in 0..width {
+                let b = x * CHANNELS;
+                let grey = 0.299 * src[b] + 0.587 * src[b + 1] + 0.114 * src[b + 2];
+                dst[b] = grey;
+                dst[b + 1] = grey;
+                dst[b + 2] = grey;
+            }
+        }
+        Ok(())
+    })
+}
+
+/// `convolutionMethod`: kernel convolution with clamped edges; the
+/// kernel matrix travels as `kernel` (captured), matching the paper's
+/// `convolutionData: [kernel2, 1, 0]` (scale 1, offset 0).
+pub fn convolution_op(kernel: Vec<f64>, ksize: usize, scale: f64, offset: f64) -> CalcFn {
+    Arc::new(move |ctx: &CalcCtx, range, out| {
+        let width = ctx.meta[0] as usize;
+        let height = ctx.meta[1] as usize;
+        let half = (ksize / 2) as isize;
+        for (k, row) in range.clone().enumerate() {
+            let dst = &mut out[k * ctx.stride..(k + 1) * ctx.stride];
+            for x in 0..width {
+                for c in 0..CHANNELS {
+                    let mut acc = 0.0;
+                    for ky in -half..=half {
+                        let sy = (row as isize + ky).clamp(0, height as isize - 1) as usize;
+                        for kx in -half..=half {
+                            let sx = (x as isize + kx).clamp(0, width as isize - 1) as usize;
+                            let kv = kernel[((ky + half) as usize) * ksize + (kx + half) as usize];
+                            acc += kv * ctx.current[(sy * width + sx) * CHANNELS + c];
+                        }
+                    }
+                    dst[x * CHANNELS + c] = (acc * scale + offset).clamp(0.0, 255.0);
+                }
+            }
+        }
+        Ok(())
+    })
+}
+
+/// XLA-backed 5×5 convolution through the `stencil` artifact (fixed
+/// width/height at AOT time; greyscale input assumed, single channel
+/// computed then replicated). Falls back to native on shape mismatch.
+pub fn convolution_op_xla(w_art: usize, h_art: usize) -> CalcFn {
+    let native = convolution_op(edge_kernel_5x5().0, 5, 1.0, 0.0);
+    Arc::new(move |ctx: &CalcCtx, range, out| {
+        let width = ctx.meta[0] as usize;
+        let height = ctx.meta[1] as usize;
+        if width != w_art || height != h_art {
+            return native(ctx, range, out);
+        }
+        use crate::runtime::XlaBackend;
+        let exe = XlaBackend::global()?.load("stencil")?;
+        // Greyscale: channel 0 carries the value.
+        let grey: Vec<f64> = (0..width * height)
+            .map(|i| ctx.current[i * CHANNELS])
+            .collect();
+        let outs = exe.run_f64(&[(&grey, &[height, width])])?;
+        let conv = &outs[0];
+        for (k, row) in range.clone().enumerate() {
+            let dst = &mut out[k * ctx.stride..(k + 1) * ctx.stride];
+            for x in 0..width {
+                let v = conv[row * width + x].clamp(0.0, 255.0);
+                dst[x * CHANNELS] = v;
+                dst[x * CHANNELS + 1] = v;
+                dst[x * CHANNELS + 2] = v;
+            }
+        }
+        Ok(())
+    })
+}
+
+pub fn accessor() -> StateAccessor {
+    |obj| access_state::<ImageData>(obj, |d| &mut d.state)
+}
+
+/// Result object: image checksums for backend/worker-count comparison.
+#[derive(Clone, Debug, Default)]
+pub struct ImageResult {
+    pub images: i64,
+    pub checksums: Vec<i64>,
+}
+
+impl ImageResult {
+    fn init(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn collector(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let d = downcast_mut::<ImageData>(aux.expect("input"), "imageResult.collector")?;
+        self.images += 1;
+        self.checksums
+            .push(crate::workloads::nbody::state_checksum(&d.state.current));
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn finalise(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+crate::gpp_data_class!(ImageResult, "imageResult", {
+    "init" => init,
+    "collector" => collector,
+    "finalise" => finalise,
+}, props {
+    "images" => |s| Value::Int(s.images),
+    "checksum" => |s| Value::Int(*s.checksums.first().unwrap_or(&0)),
+});
+
+impl ImageData {
+    pub fn emit_details(seed: u64, sizes: &[(i64, i64)]) -> DataDetails {
+        let mut init = vec![Value::Int(seed as i64)];
+        for (w, h) in sizes {
+            init.push(Value::Int(*w));
+            init.push(Value::Int(*h));
+        }
+        DataDetails::new("imageData")
+            .init("initMethod", Params::of(init))
+            .create("createMethod", Params::empty())
+    }
+}
+
+impl ImageResult {
+    pub fn result_details() -> ResultDetails {
+        ResultDetails::new("imageResult")
+            .init("init", Params::empty())
+            .collect("collector")
+            .finalise("finalise", Params::empty())
+    }
+}
+
+pub fn register() {
+    register_class("imageData", || Box::new(ImageData::default()));
+    register_class("imageResult", || Box::new(ImageResult::default()));
+}
+
+/// Sequential baseline: greyscale then convolution on one core.
+pub fn sequential(width: usize, height: usize, seed: u64, ksize: usize) -> Result<ImageData> {
+    let mut img = generate_image(width, height, seed);
+    let grey = greyscale_op();
+    let (kern, ks) = if ksize == 3 {
+        edge_kernel_3x3()
+    } else {
+        edge_kernel_5x5()
+    };
+    let conv = convolution_op(kern, ks, 1.0, 0.0);
+    for op in [grey, conv] {
+        {
+            let st = &mut img.state;
+            let ctx = CalcCtx {
+                consts: &st.consts,
+                const_dims: &st.const_dims,
+                current: &st.current,
+                meta: &st.meta,
+                stride: st.stride,
+                iteration: 0,
+            };
+            let mut next = std::mem::take(&mut st.next);
+            op(&ctx, 0..height, &mut next)?;
+            st.next = next;
+        }
+        img.state.swap_buffers();
+    }
+    Ok(img)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::channel::named_channel;
+    use crate::csp::process::CSProcess;
+    use crate::data::message::Message;
+    use crate::engines::StencilEngine;
+    use crate::processes::{Collect, Emit};
+
+    #[test]
+    fn greyscale_makes_channels_equal() {
+        let img = generate_image(16, 8, 1);
+        let mut next = vec![0.0; img.state.current.len()];
+        let ctx = CalcCtx {
+            consts: &img.state.consts,
+            const_dims: &[],
+            current: &img.state.current,
+            meta: &img.state.meta,
+            stride: img.state.stride,
+            iteration: 0,
+        };
+        greyscale_op()(&ctx, 0..8, &mut next).unwrap();
+        for px in next.chunks(CHANNELS) {
+            assert_eq!(px[0], px[1]);
+            assert_eq!(px[1], px[2]);
+        }
+    }
+
+    #[test]
+    fn uniform_image_has_zero_edges() {
+        // Edge kernels sum to zero → flat regions map to ~0.
+        let mut img = generate_image(12, 12, 2);
+        for v in img.state.current.iter_mut() {
+            *v = 128.0;
+        }
+        let (k, ks) = edge_kernel_5x5();
+        let conv = convolution_op(k, ks, 1.0, 0.0);
+        let mut next = vec![0.0; img.state.current.len()];
+        let ctx = CalcCtx {
+            consts: &[],
+            const_dims: &[],
+            current: &img.state.current,
+            meta: &img.state.meta,
+            stride: img.state.stride,
+            iteration: 0,
+        };
+        conv(&ctx, 0..12, &mut next).unwrap();
+        assert!(next.iter().all(|&v| v.abs() < 1e-9));
+    }
+
+    #[test]
+    fn engine_pipeline_matches_sequential() {
+        register();
+        let (w, h) = (24usize, 18usize);
+        let seq = sequential(w, h, 7, 5).unwrap();
+        let seq_sum = crate::workloads::nbody::state_checksum(&seq.state.current);
+        for nodes in [1usize, 3] {
+            let (emit_out, e1_in) = named_channel::<Message>("img.emit");
+            let (e1_out, e2_in) = named_channel::<Message>("img.grey");
+            let (e2_out, coll_in) = named_channel::<Message>("img.edge");
+            let (tx, rx) = std::sync::mpsc::channel();
+            let (k5, ks) = edge_kernel_5x5();
+            let procs: Vec<Box<dyn CSProcess>> = vec![
+                Box::new(Emit::new(
+                    ImageData::emit_details(7, &[(w as i64, h as i64)]),
+                    emit_out,
+                )),
+                Box::new(
+                    StencilEngine::new(e1_in, e1_out, nodes, accessor(), greyscale_op())
+                        .with_tag("grey"),
+                ),
+                Box::new(
+                    StencilEngine::new(
+                        e2_in,
+                        e2_out,
+                        nodes,
+                        accessor(),
+                        convolution_op(k5, ks, 1.0, 0.0),
+                    )
+                    .with_tag("edge"),
+                ),
+                Box::new(Collect::new(ImageResult::result_details(), coll_in).with_result_out(tx)),
+            ];
+            crate::csp::process::run_parallel(procs).unwrap();
+            let result = rx.try_iter().next().unwrap();
+            assert_eq!(result.log_prop("checksum"), Some(Value::Int(seq_sum)), "nodes={nodes}");
+        }
+    }
+}

@@ -1,0 +1,380 @@
+//! Mandelbrot set (paper §6.6, Listing 19; cluster version §7).
+//!
+//! "The problem can be solved by … processing a line of the grid [which
+//! is] adopted in this paper for a multi-core and cluster-based
+//! solution. The architecture is a simple farm, using any style
+//! connections." One `MandelbrotLine` object per image row; workers
+//! compute escape iterations per pixel.
+
+use crate::csp::error::Result;
+use crate::data::details::{DataDetails, ResultDetails};
+use crate::data::object::{downcast_mut, register_class, Aux, Params, ReturnCode, Value};
+use crate::util::codec::Wire;
+
+/// Fixed row width baked into the `mandelbrot` AOT artifact.
+pub const XLA_WIDTH: usize = 700;
+/// Escape iteration bound baked into the artifact.
+pub const XLA_MAX_ITER: i64 = 100;
+
+/// One image row to compute (emitted object).
+#[derive(Clone, Debug, Default)]
+pub struct MandelbrotLine {
+    pub row: i64,
+    pub width: i64,
+    pub height: i64,
+    pub max_iterations: i64,
+    pub pixel_delta: f64,
+    /// Lower-left corner of the rendered region.
+    pub x0: f64,
+    pub y0: f64,
+    /// Escape counts per pixel (filled by the worker).
+    pub counts: Vec<i32>,
+    /// Prototype emission cursor (not part of the payload).
+    pub next_row: i64,
+}
+
+impl MandelbrotLine {
+    /// `initClass(width, height, maxIterations, pixelDelta)` on the proto.
+    fn init_class(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.width = p.int(0)?;
+        self.height = p.int(1)?;
+        self.max_iterations = p.int(2)?;
+        self.pixel_delta = p.float(3)?;
+        // Centre the region on the usual (-2.5..1, -1..1)-ish window.
+        self.x0 = -(self.width as f64) * self.pixel_delta * 0.7;
+        self.y0 = -(self.height as f64) * self.pixel_delta * 0.5;
+        self.next_row = 0;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// `createLine` — one object per row.
+    fn create_line(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let proto = downcast_mut::<MandelbrotLine>(
+            aux.expect("Emit passes the prototype"),
+            "mandelbrotLine.createLine",
+        )?;
+        if proto.next_row >= proto.height {
+            return Ok(ReturnCode::NormalTermination);
+        }
+        self.row = proto.next_row;
+        self.counts.clear();
+        proto.next_row += 1;
+        Ok(ReturnCode::NormalContinuation)
+    }
+
+    /// Escape-iteration count for one point.
+    #[inline]
+    pub fn escape(cr: f64, ci: f64, max_iter: i64) -> i32 {
+        let mut zr = 0.0f64;
+        let mut zi = 0.0f64;
+        let mut n = 0i64;
+        while n < max_iter && zr * zr + zi * zi <= 4.0 {
+            let t = zr * zr - zi * zi + cr;
+            zi = 2.0 * zr * zi + ci;
+            zr = t;
+            n += 1;
+        }
+        n as i32
+    }
+
+    /// `computeLine` — native escape loop over the row.
+    fn compute_line(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        let ci = self.y0 + self.row as f64 * self.pixel_delta;
+        let mut counts = Vec::with_capacity(self.width as usize);
+        for x in 0..self.width {
+            let cr = self.x0 + x as f64 * self.pixel_delta;
+            counts.push(Self::escape(cr, ci, self.max_iterations));
+        }
+        self.counts = counts;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// `computeLineXla` — the row through the AOT Pallas kernel. Shape
+    /// is fixed at artifact build (`XLA_WIDTH`, `XLA_MAX_ITER`); other
+    /// sizes fall back to the native path (documented substitution).
+    fn compute_line_xla(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        if self.width as usize != XLA_WIDTH || self.max_iterations != XLA_MAX_ITER {
+            return self.compute_line(_p, _aux);
+        }
+        use crate::runtime::XlaBackend;
+        let exe = XlaBackend::global()?.load("mandelbrot")?;
+        let cr: Vec<f32> = (0..self.width)
+            .map(|x| (self.x0 + x as f64 * self.pixel_delta) as f32)
+            .collect();
+        let ci = vec![(self.y0 + self.row as f64 * self.pixel_delta) as f32; 1];
+        let out = exe.run_f32(&[(&cr, &[XLA_WIDTH]), (&ci, &[1])])?;
+        self.counts = out[0].iter().map(|&v| v as i32).collect();
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+crate::gpp_data_class!(MandelbrotLine, "mandelbrotLine", {
+    "initClass" => init_class,
+    "createLine" => create_line,
+    "computeLine" => compute_line,
+    "computeLineXla" => compute_line_xla,
+}, props {
+    "row" => |s| Value::Int(s.row),
+});
+
+/// Collector assembling the image.
+#[derive(Clone, Debug, Default)]
+pub struct MandelbrotCollect {
+    pub width: i64,
+    pub height: i64,
+    pub max_iterations: i64,
+    pub rows: Vec<Vec<i32>>,
+    pub rows_seen: i64,
+    /// Optional PPM output path written by finalise.
+    pub out_path: Option<String>,
+}
+
+impl MandelbrotCollect {
+    /// `init(width, height, maxIterations [, path])`.
+    fn init(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.width = p.int(0)?;
+        self.height = p.int(1)?;
+        self.max_iterations = p.int(2)?;
+        if let Ok(path) = p.str(3) {
+            self.out_path = Some(path.to_string());
+        }
+        self.rows = vec![Vec::new(); self.height as usize];
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn collector(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let line = downcast_mut::<MandelbrotLine>(
+            aux.expect("Collect passes input"),
+            "mandelbrotCollect.collector",
+        )?;
+        self.rows[line.row as usize] = std::mem::take(&mut line.counts);
+        self.rows_seen += 1;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn finalise(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        if let Some(path) = &self.out_path {
+            if let Err(e) = std::fs::write(path, self.to_ppm()) {
+                eprintln!("mandelbrot: could not write {path}: {e}");
+                return Ok(ReturnCode::Error(-20));
+            }
+        }
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// Render as a simple greyscale PPM (P6).
+    pub fn to_ppm(&self) -> Vec<u8> {
+        let mut out = format!("P6\n{} {}\n255\n", self.width, self.height).into_bytes();
+        for row in &self.rows {
+            for &c in row {
+                let v = if c as i64 >= self.max_iterations {
+                    0u8
+                } else {
+                    (255 - (c as i64 * 255 / self.max_iterations.max(1))) as u8
+                };
+                out.extend_from_slice(&[v, v, v]);
+            }
+        }
+        out
+    }
+
+    /// Deterministic checksum for cross-backend / cluster validation.
+    pub fn checksum(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64; // FNV-1a
+        for row in &self.rows {
+            for &c in row {
+                h ^= c as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        h
+    }
+}
+
+crate::gpp_data_class!(MandelbrotCollect, "mandelbrotCollect", {
+    "init" => init,
+    "collector" => collector,
+    "finalise" => finalise,
+}, props {
+    "rowsSeen" => |s| Value::Int(s.rows_seen),
+    "checksum" => |s| Value::Int(s.checksum() as i64),
+});
+
+impl MandelbrotLine {
+    pub fn emit_details(width: i64, height: i64, max_iter: i64, delta: f64) -> DataDetails {
+        DataDetails::new("mandelbrotLine")
+            .init(
+                "initClass",
+                Params::of(vec![
+                    Value::Int(width),
+                    Value::Int(height),
+                    Value::Int(max_iter),
+                    Value::Float(delta),
+                ]),
+            )
+            .create("createLine", Params::empty())
+    }
+}
+
+impl MandelbrotCollect {
+    pub fn result_details(width: i64, height: i64, max_iter: i64) -> ResultDetails {
+        ResultDetails::new("mandelbrotCollect")
+            .init(
+                "init",
+                Params::of(vec![
+                    Value::Int(width),
+                    Value::Int(height),
+                    Value::Int(max_iter),
+                ]),
+            )
+            .collect("collector")
+            .finalise("finalise", Params::empty())
+    }
+}
+
+pub fn register() {
+    register_class("mandelbrotLine", || Box::new(MandelbrotLine::default()));
+    register_class("mandelbrotCollect", || Box::new(MandelbrotCollect::default()));
+}
+
+/// Sequential baseline: compute every row in a plain loop.
+pub fn sequential(width: i64, height: i64, max_iter: i64, delta: f64) -> Result<MandelbrotCollect> {
+    let mut proto = MandelbrotLine::default();
+    proto.init_class(
+        &Params::of(vec![
+            Value::Int(width),
+            Value::Int(height),
+            Value::Int(max_iter),
+            Value::Float(delta),
+        ]),
+        None,
+    )?;
+    let mut collect = MandelbrotCollect::default();
+    collect.init(
+        &Params::of(vec![Value::Int(width), Value::Int(height), Value::Int(max_iter)]),
+        None,
+    )?;
+    loop {
+        let mut line = proto.clone();
+        if let ReturnCode::NormalTermination = {
+            let proto_ref = &mut proto;
+            line.create_line(&Params::empty(), Some(proto_ref))?
+        } {
+            break;
+        }
+        line.compute_line(&Params::empty(), None)?;
+        collect.collector(&Params::empty(), Some(&mut line))?;
+    }
+    collect.finalise(&Params::empty(), None)?;
+    Ok(collect)
+}
+
+/// Wire form of a line for the cluster transport.
+impl Wire for MandelbrotLine {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.row.encode(out);
+        self.width.encode(out);
+        self.height.encode(out);
+        self.max_iterations.encode(out);
+        self.pixel_delta.encode(out);
+        self.x0.encode(out);
+        self.y0.encode(out);
+        let counts: Vec<i32> = self.counts.clone();
+        counts.encode(out);
+    }
+
+    fn decode(input: &mut &[u8]) -> crate::csp::error::Result<Self> {
+        Ok(Self {
+            row: i64::decode(input)?,
+            width: i64::decode(input)?,
+            height: i64::decode(input)?,
+            max_iterations: i64::decode(input)?,
+            pixel_delta: f64::decode(input)?,
+            x0: f64::decode(input)?,
+            y0: f64::decode(input)?,
+            counts: Vec::<i32>::decode(input)?,
+            next_row: 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterns::DataParallelCollect;
+    use crate::util::codec::{from_bytes, to_bytes};
+
+    #[test]
+    fn escape_known_points() {
+        // Origin never escapes.
+        assert_eq!(MandelbrotLine::escape(0.0, 0.0, 50), 50);
+        // Far point escapes immediately.
+        assert_eq!(MandelbrotLine::escape(2.0, 2.0, 50), 1);
+    }
+
+    #[test]
+    fn farm_matches_sequential_checksum() {
+        register();
+        let seq = sequential(64, 48, 40, 0.04).unwrap();
+        for workers in [1usize, 3] {
+            let result = DataParallelCollect::new(
+                MandelbrotLine::emit_details(64, 48, 40, 0.04),
+                MandelbrotCollect::result_details(64, 48, 40),
+                workers,
+                "computeLine",
+            )
+            .run_network()
+            .unwrap();
+            match result.log_prop("checksum") {
+                Some(Value::Int(c)) => assert_eq!(c as u64, seq.checksum(), "workers={workers}"),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn all_rows_collected() {
+        register();
+        let result = DataParallelCollect::new(
+            MandelbrotLine::emit_details(16, 33, 20, 0.05),
+            MandelbrotCollect::result_details(16, 33, 20),
+            4,
+            "computeLine",
+        )
+        .run_network()
+        .unwrap();
+        match result.log_prop("rowsSeen") {
+            Some(Value::Int(n)) => assert_eq!(n, 33),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn ppm_header_and_size() {
+        let c = sequential(8, 4, 10, 0.1).unwrap();
+        let ppm = c.to_ppm();
+        assert!(ppm.starts_with(b"P6\n8 4\n255\n"));
+        assert_eq!(ppm.len(), "P6\n8 4\n255\n".len() + 8 * 4 * 3);
+    }
+
+    #[test]
+    fn line_wire_roundtrip() {
+        let mut l = MandelbrotLine {
+            row: 3,
+            width: 8,
+            height: 4,
+            max_iterations: 10,
+            pixel_delta: 0.5,
+            x0: -1.0,
+            y0: -1.0,
+            counts: vec![1, 2, 3],
+            next_row: 0,
+        };
+        let bytes = to_bytes(&l);
+        let d: MandelbrotLine = from_bytes(&bytes).unwrap();
+        l.next_row = 0;
+        assert_eq!(d.row, l.row);
+        assert_eq!(d.counts, l.counts);
+        assert_eq!(d.pixel_delta, l.pixel_delta);
+    }
+}

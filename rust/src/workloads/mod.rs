@@ -1,0 +1,31 @@
+//! The paper's evaluation workloads (§3, §6): user-level "extant
+//! sequential code" packaged as [`crate::data::DataObject`] classes so
+//! the generic library processes can drive them by exported method name.
+//!
+//! Every workload ships:
+//! * the data / result classes with string-dispatched methods,
+//! * a **sequential driver** replicating the paper's Listing-4-style
+//!   invocation (the baseline every speedup table divides by),
+//! * a **native** Rust compute path, and where the kernel is numeric, an
+//!   **XLA** compute path executing the AOT Pallas artifact.
+
+pub mod montecarlo;
+pub mod mandelbrot;
+pub mod jacobi;
+pub mod nbody;
+pub mod image;
+pub mod corpus;
+pub mod concordance;
+pub mod goldbach;
+
+/// Register every workload class with the global registry so the
+/// declarative DSL can instantiate them by name. Idempotent.
+pub fn register_all() {
+    montecarlo::register();
+    mandelbrot::register();
+    jacobi::register();
+    nbody::register();
+    image::register();
+    concordance::register();
+    goldbach::register();
+}

@@ -1,0 +1,268 @@
+//! Monte-Carlo π (paper §3, Listings 1–6): the motivating example.
+//!
+//! `instances` objects each evaluate `iterations` random points in the
+//! unit quadrant; the ratio within the unit circle estimates π/4.
+
+use crate::csp::error::Result;
+use crate::data::details::{DataDetails, ResultDetails};
+use crate::data::object::{
+    downcast_mut, register_class, Aux, Params, ReturnCode, Value,
+};
+use crate::util::rng::Rng;
+
+/// Base seed: each instance derives its own stream, so results are
+/// reproducible and independent of worker scheduling.
+pub const BASE_SEED: u64 = 0x6d63_7069; // "mcpi"
+
+/// The emitted data object (paper Listing 5).
+#[derive(Clone, Debug, Default)]
+pub struct PiData {
+    pub iterations: i64,
+    pub within: i64,
+    /// Instance number of *this* object.
+    pub instance: i64,
+    /// On the prototype: total to create + next instance number (the
+    /// paper's `static` fields live on the Emit prototype here).
+    pub instances: i64,
+    pub next_instance: i64,
+}
+
+impl PiData {
+    /// `initClass` — runs on the Emit prototype.
+    fn init_class(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.instances = p.int(0)?;
+        self.next_instance = 1;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// `createInstance` — runs on each fresh clone; `aux` is the
+    /// prototype carrying the shared counters (paper Listing 5:15-23).
+    fn create_instance(&mut self, d: &Params, aux: Aux) -> Result<ReturnCode> {
+        let proto = downcast_mut::<PiData>(
+            aux.expect("Emit passes the prototype"),
+            "piData.createInstance",
+        )?;
+        if proto.next_instance > proto.instances {
+            return Ok(ReturnCode::NormalTermination);
+        }
+        self.iterations = d.int(0)?;
+        self.within = 0;
+        self.instance = proto.next_instance;
+        proto.next_instance += 1;
+        Ok(ReturnCode::NormalContinuation)
+    }
+
+    /// `getWithin` — count points inside the quadrant (Listing 5:25-34).
+    fn get_within(&mut self, _d: &Params, _aux: Aux) -> Result<ReturnCode> {
+        let mut rng = Rng::new(BASE_SEED.wrapping_add(self.instance as u64));
+        let mut within = 0i64;
+        for _ in 0..self.iterations {
+            let x = rng.next_f32();
+            let y = rng.next_f32();
+            if x * x + y * y <= 1.0 {
+                within += 1;
+            }
+        }
+        self.within = within;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// `getWithinXla` — same computation through the AOT Pallas kernel
+    /// (artifact `montecarlo`, shape-fixed batch of point coordinates).
+    fn get_within_xla(&mut self, _d: &Params, _aux: Aux) -> Result<ReturnCode> {
+        use crate::runtime::XlaBackend;
+        let exe = XlaBackend::global()?.load("montecarlo")?;
+        // The artifact consumes a (2, ITERS) block of uniforms and
+        // returns the within count; uniforms come from the same host RNG
+        // stream as the native path, so both backends agree exactly.
+        let iters = crate::workloads::montecarlo::XLA_BATCH;
+        let mut rng = Rng::new(BASE_SEED.wrapping_add(self.instance as u64));
+        let mut within = 0i64;
+        let mut remaining = self.iterations as usize;
+        while remaining > 0 {
+            let n = remaining.min(iters);
+            let mut pts = vec![0f32; 2 * iters];
+            for i in 0..n {
+                pts[i] = rng.next_f32();
+                pts[iters + i] = rng.next_f32();
+            }
+            // Pad with points outside the circle so they never count.
+            for i in n..iters {
+                pts[i] = 1.0;
+                pts[iters + i] = 1.0;
+            }
+            let out = exe.run_f32(&[(&pts, &[2, iters])])?;
+            within += out[0][0] as i64;
+            remaining -= n;
+        }
+        self.within = within;
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+/// Batch size baked into the `montecarlo` artifact at AOT time.
+pub const XLA_BATCH: usize = 100_000;
+
+crate::gpp_data_class!(PiData, "piData", {
+    "initClass" => init_class,
+    "createInstance" => create_instance,
+    "getWithin" => get_within,
+    "getWithinXla" => get_within_xla,
+}, props {
+    "instance" => |s| Value::Int(s.instance),
+    "within" => |s| Value::Int(s.within),
+});
+
+/// The result object (paper Listing 6).
+#[derive(Clone, Debug, Default)]
+pub struct PiResults {
+    pub iteration_sum: i64,
+    pub within_sum: i64,
+    pub pi: f64,
+    /// Quiet mode for benches (the paper's finalise prints).
+    pub quiet: bool,
+}
+
+impl PiResults {
+    fn init_class(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        if let Ok(v) = p.int(0) {
+            self.quiet = v != 0;
+        }
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// `collector` — "simply accumulates the within values, as well as
+    /// the total number of iterations".
+    fn collector(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let o = downcast_mut::<PiData>(aux.expect("Collect passes input"), "piResults.collector")?;
+        self.iteration_sum += o.iterations;
+        self.within_sum += o.within;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn finalise(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.pi = 4.0 * (self.within_sum as f64) / (self.iteration_sum.max(1) as f64);
+        if !self.quiet {
+            println!(
+                "Total Iterations: {} Points Within: {} pi Value: {}",
+                self.iteration_sum, self.within_sum, self.pi
+            );
+        }
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+crate::gpp_data_class!(PiResults, "piResults", {
+    "initClass" => init_class,
+    "collector" => collector,
+    "finalise" => finalise,
+}, props {
+    "pi" => |s| Value::Float(s.pi),
+    "withinSum" => |s| Value::Int(s.within_sum),
+    "iterationSum" => |s| Value::Int(s.iteration_sum),
+});
+
+impl PiData {
+    /// Paper Listing 1's `emitData` DataDetails.
+    pub fn emit_details(instances: i64, iterations: i64) -> DataDetails {
+        DataDetails::new("piData")
+            .init("initClass", Params::of(vec![Value::Int(instances)]))
+            .create("createInstance", Params::of(vec![Value::Int(iterations)]))
+    }
+}
+
+impl PiResults {
+    pub fn result_details() -> ResultDetails {
+        ResultDetails::new("piResults")
+            .init("initClass", Params::of(vec![Value::Int(1)])) // quiet
+            .collect("collector")
+            .finalise("finalise", Params::empty())
+    }
+
+    pub fn result_details_verbose() -> ResultDetails {
+        ResultDetails::new("piResults")
+            .init("initClass", Params::of(vec![Value::Int(0)]))
+            .collect("collector")
+            .finalise("finalise", Params::empty())
+    }
+}
+
+pub fn register() {
+    register_class("piData", || Box::new(PiData::default()));
+    register_class("piResults", || Box::new(PiResults::default()));
+}
+
+/// Sequential invocation (paper Listing 4): "the user can take the
+/// objects that are used within the parallel network and invoke them in
+/// a purely sequential manner".
+pub fn sequential(instances: i64, iterations: i64) -> Result<f64> {
+    let mut results = PiResults {
+        quiet: true,
+        ..Default::default()
+    };
+    let mut proto = PiData::default();
+    proto.init_class(&Params::of(vec![Value::Int(instances)]), None)?;
+    loop {
+        let mut mcpi = proto.clone();
+        match mcpi.create_instance(&Params::of(vec![Value::Int(iterations)]), Some(&mut proto))? {
+            ReturnCode::NormalTermination => break,
+            _ => {}
+        }
+        mcpi.get_within(&Params::empty(), None)?;
+        results.collector(&Params::empty(), Some(&mut mcpi))?;
+    }
+    results.finalise(&Params::empty(), None)?;
+    Ok(results.pi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterns::DataParallelCollect;
+
+    #[test]
+    fn sequential_estimates_pi() {
+        let pi = sequential(64, 4000).unwrap();
+        assert!((pi - std::f64::consts::PI).abs() < 0.05, "pi={pi}");
+    }
+
+    #[test]
+    fn farm_matches_sequential_exactly() {
+        register();
+        let seq_pi = sequential(32, 2000).unwrap();
+        for workers in [1usize, 2, 4] {
+            let result = DataParallelCollect::new(
+                PiData::emit_details(32, 2000),
+                PiResults::result_details(),
+                workers,
+                "getWithin",
+            )
+            .run_network()
+            .unwrap();
+            let pi = match result.log_prop("pi") {
+                Some(Value::Float(p)) => p,
+                other => panic!("missing pi prop: {other:?}"),
+            };
+            // Same per-instance seeds → identical estimate regardless of
+            // scheduling or worker count.
+            assert_eq!(pi, seq_pi, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn emit_stops_at_instance_count() {
+        register();
+        let result = DataParallelCollect::new(
+            PiData::emit_details(10, 100),
+            PiResults::result_details(),
+            2,
+            "getWithin",
+        )
+        .run_network()
+        .unwrap();
+        match result.log_prop("iterationSum") {
+            Some(Value::Int(total)) => assert_eq!(total, 10 * 100),
+            other => panic!("{other:?}"),
+        }
+    }
+}

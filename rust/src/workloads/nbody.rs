@@ -1,0 +1,334 @@
+//! Planetary movement: the N-body problem (paper §6.3, Listing 16).
+//!
+//! All-pairs gravitational interaction, integrated with the leapfrog-ish
+//! kick-drift scheme of the paper's reference code; fixed iteration
+//! count ("the algorithm just runs for a fixed number of iterations, as
+//! the concept of an error margin is not appropriate"). Runs on the
+//! `MultiCoreEngine` with stride-6 state (x,y,z,vx,vy,vz) and masses in
+//! `consts`.
+
+use std::sync::Arc;
+
+use crate::csp::error::Result;
+use crate::data::details::{DataDetails, ResultDetails};
+use crate::data::object::{downcast_mut, register_class, Aux, Params, ReturnCode, Value};
+use crate::engines::state::{access_state, CalcCtx, CalcFn, EngineState, StateAccessor};
+use crate::util::rng::Rng;
+
+pub const STRIDE: usize = 6;
+const G: f64 = 6.674e-3; // scaled gravitational constant
+const SOFTENING: f64 = 1e-3;
+
+/// One N-body system.
+#[derive(Clone, Debug, Default)]
+pub struct NBodyData {
+    pub n: usize,
+    pub state: EngineState,
+    /// Prototype emission fields.
+    sizes: Vec<i64>,
+    next: usize,
+    seed: u64,
+    dt: f64,
+}
+
+impl NBodyData {
+    /// `initMethod([seed, dt, n1, n2, …])` — the paper reads 10,000
+    /// random bodies from a file; we generate the pool deterministically
+    /// and take the first `n` (same effect, documented substitution).
+    fn init_method(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.seed = p.int(0)? as u64;
+        self.dt = p.float(1)?;
+        self.sizes = p.0[2..]
+            .iter()
+            .map(|v| v.as_int())
+            .collect::<Result<Vec<_>>>()?;
+        self.next = 0;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn create_method(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let proto = downcast_mut::<NBodyData>(aux.expect("proto"), "nBodyData.create")?;
+        if proto.next >= proto.sizes.len() {
+            return Ok(ReturnCode::NormalTermination);
+        }
+        let n = proto.sizes[proto.next] as usize;
+        proto.next += 1;
+        *self = generate_bodies(n, proto.seed, proto.dt);
+        Ok(ReturnCode::NormalContinuation)
+    }
+}
+
+crate::gpp_data_class!(NBodyData, "nBodyData", {
+    "initMethod" => init_method,
+    "createMethod" => create_method,
+}, props {
+    "n" => |s| Value::Int(s.n as i64),
+});
+
+/// Deterministic body pool: positions in a unit box, small velocities,
+/// masses in [0.5, 1.5]. Taking a prefix of the same pool mirrors the
+/// paper's "different sized problems simply take the required number of
+/// data points from the file".
+pub fn generate_bodies(n: usize, seed: u64, dt: f64) -> NBodyData {
+    let mut rng = Rng::new(seed);
+    let mut current = Vec::with_capacity(n * STRIDE);
+    let mut masses = Vec::with_capacity(n);
+    for _ in 0..n {
+        current.push(rng.range_f64(-1.0, 1.0)); // x
+        current.push(rng.range_f64(-1.0, 1.0)); // y
+        current.push(rng.range_f64(-1.0, 1.0)); // z
+        current.push(rng.range_f64(-0.01, 0.01)); // vx
+        current.push(rng.range_f64(-0.01, 0.01)); // vy
+        current.push(rng.range_f64(-0.01, 0.01)); // vz
+        masses.push(rng.range_f64(0.5, 1.5));
+    }
+    NBodyData {
+        n,
+        state: EngineState {
+            consts: masses,
+            const_dims: vec![n],
+            next: vec![0.0; n * STRIDE],
+            current,
+            meta: vec![dt, n as f64],
+            partitions: Vec::new(),
+            stride: STRIDE,
+            iterations_done: 0,
+        },
+        sizes: Vec::new(),
+        next: 0,
+        seed,
+        dt,
+    }
+}
+
+/// `calculationMethod`: for each body in the partition, accumulate
+/// acceleration over **all** bodies (reads the whole shared state), then
+/// kick velocity and drift position.
+pub fn calculation() -> CalcFn {
+    Arc::new(|ctx: &CalcCtx, range, out| {
+        let n = ctx.meta[1] as usize;
+        let dt = ctx.meta[0];
+        let masses = &ctx.consts[..n];
+        let cur = ctx.current;
+        for (k, i) in range.clone().enumerate() {
+            let bi = i * STRIDE;
+            let (xi, yi, zi) = (cur[bi], cur[bi + 1], cur[bi + 2]);
+            let mut ax = 0.0;
+            let mut ay = 0.0;
+            let mut az = 0.0;
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let bj = j * STRIDE;
+                let dx = cur[bj] - xi;
+                let dy = cur[bj + 1] - yi;
+                let dz = cur[bj + 2] - zi;
+                let r2 = dx * dx + dy * dy + dz * dz + SOFTENING;
+                let inv_r3 = 1.0 / (r2 * r2.sqrt());
+                let f = G * masses[j] * inv_r3;
+                ax += f * dx;
+                ay += f * dy;
+                az += f * dz;
+            }
+            let o = k * STRIDE;
+            let vx = cur[bi + 3] + ax * dt;
+            let vy = cur[bi + 4] + ay * dt;
+            let vz = cur[bi + 5] + az * dt;
+            out[o] = xi + vx * dt;
+            out[o + 1] = yi + vy * dt;
+            out[o + 2] = zi + vz * dt;
+            out[o + 3] = vx;
+            out[o + 4] = vy;
+            out[o + 5] = vz;
+        }
+        Ok(())
+    })
+}
+
+/// XLA-backed step through the `nbody` artifact (fixed n at AOT time);
+/// other sizes fall back to the native path.
+pub fn calculation_xla(n_artifact: usize) -> CalcFn {
+    let native = calculation();
+    Arc::new(move |ctx: &CalcCtx, range, out| {
+        let n = ctx.meta[1] as usize;
+        if n != n_artifact {
+            return native(ctx, range, out);
+        }
+        use crate::runtime::XlaBackend;
+        let exe = XlaBackend::global()?.load("nbody")?;
+        let outs = exe.run_f64(&[
+            (ctx.current, &[n, STRIDE]),
+            (&ctx.consts[..n], &[n]),
+            (&ctx.meta[..1], &[1]),
+        ])?;
+        let full = &outs[0];
+        out.copy_from_slice(&full[range.start * STRIDE..range.end * STRIDE]);
+        Ok(())
+    })
+}
+
+pub fn accessor() -> StateAccessor {
+    |obj| access_state::<NBodyData>(obj, |d| &mut d.state)
+}
+
+/// Result object: captures a checksum of the final state and energy so
+/// runs can be compared across node counts and against the sequential
+/// execution ("the output compared with a sequential execution … to
+/// check that all the solutions are identical").
+#[derive(Clone, Debug, Default)]
+pub struct NBodyResult {
+    pub systems: i64,
+    pub checksums: Vec<i64>,
+    pub final_states: Vec<Vec<f64>>,
+}
+
+impl NBodyResult {
+    fn init(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn collector(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let d = downcast_mut::<NBodyData>(aux.expect("input"), "nBodyResult.collector")?;
+        self.systems += 1;
+        self.checksums.push(state_checksum(&d.state.current));
+        self.final_states.push(d.state.current.clone());
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn finalise(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+/// Bit-exact checksum of an f64 state vector.
+pub fn state_checksum(xs: &[f64]) -> i64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for x in xs {
+        h ^= x.to_bits();
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h as i64
+}
+
+crate::gpp_data_class!(NBodyResult, "nBodyResult", {
+    "init" => init,
+    "collector" => collector,
+    "finalise" => finalise,
+}, props {
+    "systems" => |s| Value::Int(s.systems),
+    "checksum" => |s| Value::Int(*s.checksums.first().unwrap_or(&0)),
+});
+
+impl NBodyData {
+    pub fn emit_details(seed: u64, dt: f64, sizes: &[i64]) -> DataDetails {
+        let mut init = vec![Value::Int(seed as i64), Value::Float(dt)];
+        init.extend(sizes.iter().map(|&n| Value::Int(n)));
+        DataDetails::new("nBodyData")
+            .init("initMethod", Params::of(init))
+            .create("createMethod", Params::empty())
+    }
+}
+
+impl NBodyResult {
+    pub fn result_details() -> ResultDetails {
+        ResultDetails::new("nBodyResult")
+            .init("init", Params::empty())
+            .collect("collector")
+            .finalise("finalise", Params::empty())
+    }
+}
+
+pub fn register() {
+    register_class("nBodyData", || Box::new(NBodyData::default()));
+    register_class("nBodyResult", || Box::new(NBodyResult::default()));
+}
+
+/// Sequential baseline: run `iterations` steps on one core.
+pub fn sequential(n: usize, seed: u64, dt: f64, iterations: usize) -> Result<NBodyData> {
+    let mut d = generate_bodies(n, seed, dt);
+    let calc = calculation();
+    for iter in 0..iterations {
+        {
+            let st = &mut d.state;
+            let ctx = CalcCtx {
+                consts: &st.consts,
+                const_dims: &st.const_dims,
+                current: &st.current,
+                meta: &st.meta,
+                stride: STRIDE,
+                iteration: iter,
+            };
+            let mut next = std::mem::take(&mut st.next);
+            calc(&ctx, 0..n, &mut next)?;
+            st.next = next;
+        }
+        d.state.swap_buffers();
+        d.state.iterations_done = iter + 1;
+    }
+    Ok(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::channel::named_channel;
+    use crate::csp::process::CSProcess;
+    use crate::data::message::Message;
+    use crate::engines::MultiCoreEngine;
+    use crate::processes::{Collect, Emit};
+
+    #[test]
+    fn sequential_conserves_momentum_roughly() {
+        let d = sequential(32, 11, 0.01, 50).unwrap();
+        // With equal-and-opposite forces (same G), total momentum change
+        // should be small (softening breaks exact symmetry only mildly).
+        let n = d.n;
+        let mut px = 0.0;
+        for i in 0..n {
+            px += d.state.consts[i] * d.state.current[i * STRIDE + 3];
+        }
+        assert!(px.abs() < 1.0, "px={px}");
+    }
+
+    #[test]
+    fn engine_matches_sequential_bit_exact() {
+        register();
+        let iterations = 20;
+        let seq = sequential(24, 5, 0.01, iterations).unwrap();
+        for nodes in [1usize, 2, 4] {
+            let (emit_out, eng_in) = named_channel::<Message>("nb.emit");
+            let (eng_out, coll_in) = named_channel::<Message>("nb.eng");
+            let (tx, rx) = std::sync::mpsc::channel();
+            let procs: Vec<Box<dyn CSProcess>> = vec![
+                Box::new(Emit::new(NBodyData::emit_details(5, 0.01, &[24]), emit_out)),
+                Box::new(
+                    MultiCoreEngine::new(eng_in, eng_out, nodes, accessor(), calculation())
+                        .with_iterations(iterations),
+                ),
+                Box::new(
+                    Collect::new(NBodyResult::result_details(), coll_in).with_result_out(tx),
+                ),
+            ];
+            crate::csp::process::run_parallel(procs).unwrap();
+            let result = rx.try_iter().next().unwrap();
+            assert_eq!(
+                result.log_prop("checksum"),
+                Some(Value::Int(state_checksum(&seq.state.current))),
+                "nodes={nodes}"
+            );
+        }
+    }
+
+    #[test]
+    fn bodies_prefix_property() {
+        // First k bodies of a larger pool equal the k-pool (same seed) —
+        // mirrors the paper's take-from-file behaviour.
+        let small = generate_bodies(8, 3, 0.01);
+        let large = generate_bodies(16, 3, 0.01);
+        assert_eq!(
+            &small.state.current[..8 * STRIDE],
+            &large.state.current[..8 * STRIDE]
+        );
+    }
+}

@@ -1,0 +1,218 @@
+//! Cross-module integration tests: whole networks end to end, the XLA
+//! artifact path against the native backends, failure injection through
+//! a full farm, and the DSL round trip.
+
+use gpp::csp::process::CSProcess;
+use gpp::data::object::{DataObject, Params, Value};
+use gpp::patterns::DataParallelCollect;
+use gpp::workloads::montecarlo::{PiData, PiResults};
+
+fn setup() {
+    gpp::workloads::register_all();
+}
+
+#[test]
+fn farm_scales_worker_counts_without_changing_results() {
+    setup();
+    let mut sums = Vec::new();
+    for workers in [1usize, 2, 3, 5, 8] {
+        let r = DataParallelCollect::new(
+            PiData::emit_details(40, 1000),
+            PiResults::result_details(),
+            workers,
+            "getWithin",
+        )
+        .run_network()
+        .unwrap();
+        sums.push(r.log_prop("withinSum"));
+    }
+    assert!(sums.windows(2).all(|w| w[0] == w[1]), "{sums:?}");
+}
+
+#[test]
+fn user_error_terminates_whole_network_with_code() {
+    setup();
+    // Unknown function name → NoSuchMethod propagates, network poisons.
+    let err = match DataParallelCollect::new(
+        PiData::emit_details(10, 10),
+        PiResults::result_details(),
+        2,
+        "noSuchOp",
+    )
+    .run_network()
+    {
+        Err(e) => e,
+        Ok(_) => panic!("expected failure"),
+    };
+    assert!(
+        err.to_string().contains("noSuchOp"),
+        "got: {err}"
+    );
+}
+
+#[test]
+fn xla_montecarlo_matches_native_exactly() {
+    setup();
+    if !gpp::runtime::have_artifacts(&["montecarlo"]) {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let run = |function: &str| -> i64 {
+        let r = DataParallelCollect::new(
+            PiData::emit_details(4, 100_000),
+            PiResults::result_details(),
+            2,
+            function,
+        )
+        .run_network()
+        .unwrap();
+        match r.log_prop("withinSum") {
+            Some(Value::Int(w)) => w,
+            other => panic!("{other:?}"),
+        }
+    };
+    assert_eq!(run("getWithin"), run("getWithinXla"));
+}
+
+#[test]
+fn xla_mandelbrot_rows_match_native_counts() {
+    setup();
+    if !gpp::runtime::have_artifacts(&["mandelbrot"]) {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use gpp::workloads::mandelbrot::MandelbrotLine;
+    let mut a = MandelbrotLine {
+        row: 37,
+        width: 700,
+        height: 400,
+        max_iterations: 100,
+        pixel_delta: 0.005,
+        x0: -2.45,
+        y0: -1.0,
+        ..Default::default()
+    };
+    let mut b = a.clone();
+    a.call("computeLine", &Params::empty(), None).unwrap();
+    b.call("computeLineXla", &Params::empty(), None).unwrap();
+    let agree = a
+        .counts
+        .iter()
+        .zip(&b.counts)
+        .filter(|(x, y)| x == y)
+        .count();
+    // f32 kernel vs f64 native: only boundary pixels may differ.
+    assert!(agree as f64 / a.counts.len() as f64 > 0.98, "{agree}/700");
+}
+
+#[test]
+fn xla_jacobi_sweep_close_to_native() {
+    setup();
+    if !gpp::runtime::have_artifacts(&["jacobi"]) {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use gpp::engines::state::CalcCtx;
+    use gpp::workloads::jacobi;
+    let d = jacobi::generate_system(256, 5, 1e-6);
+    let st = &d.state;
+    let ctx = CalcCtx {
+        consts: &st.consts,
+        const_dims: &st.const_dims,
+        current: &st.current,
+        meta: &st.meta,
+        stride: 1,
+        iteration: 0,
+    };
+    let mut native = vec![0.0; 256];
+    jacobi::calculation()(&ctx, 0..256, &mut native).unwrap();
+    let mut xla = vec![0.0; 256];
+    jacobi::calculation_xla(256)(&ctx, 0..256, &mut xla).unwrap();
+    for (n, x) in native.iter().zip(&xla) {
+        assert!((n - x).abs() < 1e-3, "native {n} vs xla {x}");
+    }
+}
+
+#[test]
+fn xla_nbody_step_close_to_native() {
+    setup();
+    if !gpp::runtime::have_artifacts(&["nbody"]) {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use gpp::engines::state::CalcCtx;
+    use gpp::workloads::nbody;
+    let d = nbody::generate_bodies(256, 5, 0.01);
+    let st = &d.state;
+    let ctx = CalcCtx {
+        consts: &st.consts,
+        const_dims: &st.const_dims,
+        current: &st.current,
+        meta: &st.meta,
+        stride: nbody::STRIDE,
+        iteration: 0,
+    };
+    let mut native = vec![0.0; 256 * 6];
+    nbody::calculation()(&ctx, 0..256, &mut native).unwrap();
+    let mut xla = vec![0.0; 256 * 6];
+    nbody::calculation_xla(256)(&ctx, 0..256, &mut xla).unwrap();
+    for (n, x) in native.iter().zip(&xla) {
+        assert!((n - x).abs() < 1e-3, "native {n} vs xla {x}");
+    }
+}
+
+#[test]
+fn dsl_text_to_running_network() {
+    setup();
+    let spec = gpp::builder::parse_network(
+        r#"
+emit      class=piData init=initClass(12) create=createInstance(300)
+fanAny    destinations=3
+group     workers=3 function=getWithin
+reduceAny sources=3
+collect   class=piResults init=initClass(1)
+"#,
+    )
+    .unwrap();
+    let results = spec.run().unwrap();
+    assert_eq!(results.len(), 1);
+    assert_eq!(
+        results[0].log_prop("iterationSum"),
+        Some(Value::Int(12 * 300))
+    );
+}
+
+#[test]
+fn verify_cli_assertions_via_library() {
+    gpp::verify::models::set_model_n(2);
+    let m = gpp::verify::models::BaseModel::new(2);
+    assert!(m.check_all().unwrap().iter().all(|(_, r)| r.holds()));
+}
+
+#[test]
+fn logged_network_produces_phase_report() {
+    setup();
+    use gpp::logging::logger::close_logger;
+    use gpp::logging::{analyse, LogSink, Logger};
+    let (mut logger, tx, records) = Logger::new(false, None);
+    let sink = LogSink::on(tx.clone(), Some("instance"));
+    let net = DataParallelCollect::new(
+        PiData::emit_details(16, 100),
+        PiResults::result_details(),
+        2,
+        "getWithin",
+    )
+    .with_log(sink);
+    let (ctx, _rx) = std::sync::mpsc::channel();
+    let procs = net.build(Some(ctx));
+    let h = std::thread::spawn(move || logger.run());
+    gpp::csp::process::run_parallel(procs).unwrap();
+    close_logger(&tx);
+    h.join().unwrap().unwrap();
+    let recs = records.lock().unwrap();
+    assert!(recs.len() >= 16 * 2, "records {}", recs.len());
+    let report = analyse(&recs);
+    assert!(report.iter().any(|p| p.phase == "getWithin"));
+    // The logged property (instance id) rode along.
+    assert!(recs.iter().any(|r| matches!(r.prop, Some(Value::Int(_)))));
+}
