@@ -1,19 +1,90 @@
 //! Microbenchmarks of the CSP substrate hot path — the §Perf targets.
 //!
-//! Every object in a farm crosses ≥4 rendezvous; channel cost bounds
-//! the minimum useful work-item size. Measured here: one2one ping-pong,
-//! any-end contention, Alt select, barrier round, deep-clone cast cost,
-//! and whole-network overhead per item (zero-work farm).
+//! Every object in a farm crosses ≥4 channel edges; channel cost bounds
+//! the minimum useful work-item size. Measured here: one2one ping-pong
+//! on both transports, any-end contention, barrier round, whole-network
+//! overhead per item (zero-work farm), a 4-stage relay pipeline on
+//! rendezvous vs buffered transports, and thread-per-process vs pooled
+//! process startup.
+//!
+//! Results are also written to `BENCH_csp.json` (override the path with
+//! `GPP_BENCH_JSON`) so future PRs have a perf trajectory to compare
+//! against. The acceptance bar for the transport refactor is the
+//! `pipeline_speedup_buffered_vs_rendezvous` derived value ≥ 2.
 
 use gpp::csp::barrier::Barrier;
-use gpp::csp::channel::channel;
+use gpp::csp::channel::{buffered_channel, channel, In, Out};
+use gpp::csp::executor::{Executor, PooledExecutor, ThreadPerProcess};
+use gpp::csp::process::{CSProcess, ProcessFn};
+use gpp::csp::RuntimeConfig;
+use gpp::harness::BenchJson;
 use gpp::patterns::DataParallelCollect;
-use gpp::util::bench::{black_box, Bench};
+use gpp::util::bench::{black_box, fmt_time, Bench};
 use gpp::workloads::montecarlo::{PiData, PiResults};
+
+/// Drive `n_msgs` u64 values through a 4-edge relay pipeline (source →
+/// 3 relays → sink); returns elapsed seconds. The relays use batched
+/// take/put, which is a no-op win on rendezvous (each take still
+/// completes one handshake) and the whole point on buffered edges.
+fn pipeline_run(n_msgs: u64, mk: &dyn Fn(&str) -> (Out<u64>, In<u64>)) -> f64 {
+    const STAGES: usize = 3;
+    let (src_tx, mut up_rx) = mk("pipe.0");
+    let mut relays = Vec::new();
+    for s in 0..STAGES {
+        let (tx, rx) = mk(&format!("pipe.{}", s + 1));
+        let up = up_rx;
+        relays.push(std::thread::spawn(move || loop {
+            let vs = up.read_batch(64).unwrap();
+            let done = vs.last() == Some(&u64::MAX);
+            tx.write_batch(vs).unwrap();
+            if done {
+                break;
+            }
+        }));
+        up_rx = rx;
+    }
+    let sink_rx = up_rx;
+    let sink = std::thread::spawn(move || {
+        let mut count = 0u64;
+        'outer: loop {
+            for v in sink_rx.read_batch(64).unwrap() {
+                if v == u64::MAX {
+                    break 'outer;
+                }
+                count += 1;
+            }
+        }
+        count
+    });
+
+    let t0 = std::time::Instant::now();
+    for i in 0..n_msgs {
+        src_tx.write(i).unwrap();
+    }
+    src_tx.write(u64::MAX).unwrap();
+    let count = sink.join().unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(count, n_msgs);
+    for r in relays {
+        r.join().unwrap();
+    }
+    secs
+}
+
+/// Spawn `n` trivial processes on the given executor; returns seconds.
+fn executor_run(n: usize, exec: &dyn Executor) -> f64 {
+    let procs: Vec<Box<dyn CSProcess>> = (0..n)
+        .map(|_| ProcessFn::boxed("tick", || Ok(())))
+        .collect();
+    let t0 = std::time::Instant::now();
+    exec.run_named("bench", procs).unwrap();
+    t0.elapsed().as_secs_f64()
+}
 
 fn main() {
     gpp::workloads::register_all();
     let mut b = Bench::new("csp substrate");
+    let mut json = BenchJson::new("micro_csp");
 
     // one2one rendezvous round trip (2 rendezvous per iteration).
     {
@@ -26,10 +97,32 @@ fn main() {
                 }
             }
         });
-        b.bench("one2one ping-pong (2 rendezvous)", || {
+        let s = b.bench("one2one ping-pong (2 rendezvous)", || {
             tx.write(1).unwrap();
             black_box(rx2.read().unwrap());
         });
+        json.add("rendezvous_pingpong", s.median);
+        tx.write(u64::MAX).unwrap();
+        echo.join().unwrap();
+    }
+
+    // Same ping-pong over buffered edges (still synchronous round trips;
+    // measures the transport's raw lock cost, not batching).
+    {
+        let (tx, rx) = buffered_channel::<u64>("bp.a", 64);
+        let (tx2, rx2) = buffered_channel::<u64>("bp.b", 64);
+        let echo = std::thread::spawn(move || {
+            while let Ok(v) = rx.read() {
+                if v == u64::MAX || tx2.write(v).is_err() {
+                    break;
+                }
+            }
+        });
+        let s = b.bench("one2one ping-pong (buffered)", || {
+            tx.write(1).unwrap();
+            black_box(rx2.read().unwrap());
+        });
+        json.add("buffered_pingpong", s.median);
         tx.write(u64::MAX).unwrap();
         echo.join().unwrap();
     }
@@ -51,10 +144,11 @@ fn main() {
                 }
             }));
         }
-        b.bench("any-end write+read (4 readers)", || {
+        let s = b.bench("any-end write+read (4 readers)", || {
             tx.write(1).unwrap();
             black_box(done_rx.read().unwrap());
         });
+        json.add("any_end_4_readers", s.median);
         for _ in 0..4 {
             tx.write(u64::MAX).unwrap();
         }
@@ -69,17 +163,67 @@ fn main() {
         let bar2 = bar.clone();
         // Peer spins on sync until the barrier is poisoned.
         let peer = std::thread::spawn(move || while bar2.sync().is_ok() {});
-        b.bench("barrier sync (2 parties)", || {
+        let s = b.bench("barrier sync (2 parties)", || {
             bar.sync().unwrap();
         });
+        json.add("barrier_sync_2", s.median);
         bar.poison();
         peer.join().unwrap();
     }
 
-    // Whole-farm overhead per item: zero-work objects through the full
-    // Emit→Fan→Workers→Reduce→Collect network.
+    // The tentpole comparison: a 4-edge relay pipeline, rendezvous vs
+    // bounded-buffered transport (same code, different transport).
     {
-        b.bench_once("farm overhead, 512 items x 2 workers", || {
+        let n_msgs: u64 = std::env::var("GPP_PIPE_MSGS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(20_000);
+        // Warm + measure best-of-3 each (whole-pipeline runs are noisy).
+        let rdv = (0..3)
+            .map(|_| pipeline_run(n_msgs, &|_n| channel::<u64>()))
+            .fold(f64::INFINITY, f64::min);
+        let buf = (0..3)
+            .map(|_| pipeline_run(n_msgs, &|n| buffered_channel::<u64>(n, 256)))
+            .fold(f64::INFINITY, f64::min);
+        let speedup = rdv / buf.max(1e-12);
+        println!(
+            "pipeline x{n_msgs} msgs  rendezvous {}  buffered {}  speedup {speedup:.1}x",
+            fmt_time(rdv),
+            fmt_time(buf)
+        );
+        json.add("pipeline_rendezvous", rdv);
+        json.add("pipeline_buffered", buf);
+        json.add_derived("pipeline_msgs", n_msgs as f64);
+        json.add_derived("pipeline_msgs_per_sec_rendezvous", n_msgs as f64 / rdv);
+        json.add_derived("pipeline_msgs_per_sec_buffered", n_msgs as f64 / buf);
+        json.add_derived("pipeline_speedup_buffered_vs_rendezvous", speedup);
+    }
+
+    // Executor comparison: 256 short-lived processes, thread-per-process
+    // vs a fixed pool (thread reuse).
+    {
+        const N: usize = 256;
+        let tpp = (0..3)
+            .map(|_| executor_run(N, &ThreadPerProcess::default()))
+            .fold(f64::INFINITY, f64::min);
+        let pooled = (0..3)
+            .map(|_| executor_run(N, &PooledExecutor::default()))
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "{N} trivial procs  thread-per-process {}  pooled {}  ratio {:.1}x",
+            fmt_time(tpp),
+            fmt_time(pooled),
+            tpp / pooled.max(1e-12)
+        );
+        json.add("executor_thread_per_process_256", tpp);
+        json.add("executor_pooled_256", pooled);
+        json.add_derived("executor_speedup_pooled_vs_threads", tpp / pooled.max(1e-12));
+    }
+
+    // Whole-farm overhead per item: zero-work objects through the full
+    // Emit→Fan→Workers→Reduce→Collect network, on both configs.
+    {
+        let (_, t) = b.bench_once("farm overhead, 512 items x 2 workers", || {
             DataParallelCollect::new(
                 PiData::emit_details(512, 0), // 0 iterations: pure plumbing
                 PiResults::result_details(),
@@ -89,7 +233,25 @@ fn main() {
             .run_network()
             .unwrap();
         });
+        json.add("farm_overhead_rendezvous", t);
+        let (_, t) = b.bench_once("farm overhead, buffered transport", || {
+            DataParallelCollect::new(
+                PiData::emit_details(512, 0),
+                PiResults::result_details(),
+                2,
+                "getWithin",
+            )
+            .with_config(RuntimeConfig::buffered(256))
+            .run_network()
+            .unwrap();
+        });
+        json.add("farm_overhead_buffered", t);
     }
 
+    let path = std::env::var("GPP_BENCH_JSON").unwrap_or_else(|_| "BENCH_csp.json".to_string());
+    match json.write(&path) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
     b.finish();
 }

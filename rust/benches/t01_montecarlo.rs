@@ -71,4 +71,29 @@ fn main() {
             seq_t / t
         );
     }
+
+    // (c) Substrate configs on the same farm: the paper's rendezvous +
+    // thread-per-process semantics vs buffered channels + pooled
+    // executor (capacity covers the whole stream, so even a small pool
+    // cannot deadlock — see ARCHITECTURE.md).
+    println!("\n-- transport/executor configs (64 instances, 2 workers) --");
+    use gpp::csp::RuntimeConfig;
+    let configs: [(&str, RuntimeConfig); 3] = [
+        ("rendezvous + threads", RuntimeConfig::default()),
+        ("buffered(256) + threads", RuntimeConfig::buffered(256)),
+        ("buffered(256) + pooled(4)", RuntimeConfig::buffered(256).with_pool(4)),
+    ];
+    for (name, cfg) in configs {
+        let t0 = std::time::Instant::now();
+        DataParallelCollect::new(
+            PiData::emit_details(64, 100_000),
+            PiResults::result_details(),
+            2,
+            "getWithin",
+        )
+        .with_config(cfg)
+        .run_network()
+        .unwrap();
+        println!("{name:<28} {}", fmt_time(t0.elapsed().as_secs_f64()));
+    }
 }

@@ -1,0 +1,236 @@
+//! Render the runnable code a [`NetworkSpec`] expands to — the way
+//! gppBuilder emits Groovy — and count its lines (paper §11.4,
+//! Table 10: DSL specification vs built-code line counts).
+//!
+//! The listing is what the user *didn't* have to write: every channel
+//! declaration, every process instantiation (groups and pipelines
+//! expand to one line per worker/stage, plus their internal channels)
+//! and the final `PAR` invocation.
+
+use super::{NetworkSpec, ProcSpec};
+
+/// Number of generated-code lines the spec expands to.
+pub fn built_line_count(spec: &NetworkSpec) -> usize {
+    expansion_listing(spec)
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .count()
+}
+
+/// The generated code, in Groovy-flavoured pseudocode.
+pub fn expansion_listing(spec: &NetworkSpec) -> String {
+    let mut out = String::new();
+    let mut names: Vec<String> = Vec::new();
+    let n = spec.procs.len();
+
+    // Channels between adjacent specs: c{i} feeds spec i+1.
+    for (i, p) in spec.procs.iter().enumerate() {
+        if i + 1 == n {
+            break;
+        }
+        match p {
+            ProcSpec::OneSeqCastList { destinations } | ProcSpec::OneParCastList { destinations } => {
+                for j in 0..*destinations {
+                    out.push_str(&format!("def c{i}_{j} = Channel.one2one()\n"));
+                }
+            }
+            ProcSpec::ListGroupList { workers, .. } => {
+                for j in 0..*workers {
+                    out.push_str(&format!("def c{i}_{j} = Channel.one2one()\n"));
+                }
+            }
+            _ => out.push_str(&format!("def c{i} = Channel.any2any()\n")),
+        }
+    }
+
+    let input_of = |i: usize| format!("c{}", i.saturating_sub(1));
+    for (i, p) in spec.procs.iter().enumerate() {
+        match p {
+            ProcSpec::Emit { details } => {
+                let name = format!("emit{i}");
+                out.push_str(&format!(
+                    "def {name} = new Emit(eDetails: {}, output: c{i}.out())\n",
+                    details.class
+                ));
+                names.push(name);
+            }
+            ProcSpec::EmitWithLocal { details, local } => {
+                let name = format!("emit{i}");
+                out.push_str(&format!(
+                    "def {name} = new EmitWithLocal(eDetails: {}, lDetails: {}, output: c{i}.out())\n",
+                    details.class, local.class
+                ));
+                names.push(name);
+            }
+            ProcSpec::OneFanAny { destinations } => {
+                let name = format!("fan{i}");
+                out.push_str(&format!(
+                    "def {name} = new OneFanAny(input: {}.in(), output: c{i}.out(), destinations: {destinations})\n",
+                    input_of(i)
+                ));
+                names.push(name);
+            }
+            ProcSpec::OneSeqCastList { destinations } | ProcSpec::OneParCastList { destinations } => {
+                let kind = if matches!(p, ProcSpec::OneSeqCastList { .. }) {
+                    "OneSeqCastList"
+                } else {
+                    "OneParCastList"
+                };
+                let name = format!("cast{i}");
+                out.push_str(&format!(
+                    "def {name} = new {kind}(input: {}.in(), outputs: [0..<{destinations}].collect {{ j -> c{i}_$j.out() }})\n",
+                    input_of(i)
+                ));
+                names.push(name);
+            }
+            ProcSpec::AnyGroupAny { workers, function, .. } => {
+                for w in 0..*workers {
+                    let name = format!("worker{i}_{w}");
+                    out.push_str(&format!(
+                        "def {name} = new Worker(function: {function}, input: {}.in(), output: c{i}.out())\n",
+                        input_of(i)
+                    ));
+                    names.push(name);
+                }
+            }
+            ProcSpec::ListGroupList { workers, function, .. } => {
+                for w in 0..*workers {
+                    let name = format!("worker{i}_{w}");
+                    out.push_str(&format!(
+                        "def {name} = new Worker(function: {function}, input: c{}_{w}.in(), output: c{i}_{w}.out())\n",
+                        i.saturating_sub(1)
+                    ));
+                    names.push(name);
+                }
+            }
+            ProcSpec::Pipeline { stages } => {
+                // Internal stage channels are synthesised too.
+                for s in 0..stages.len().saturating_sub(1) {
+                    out.push_str(&format!("def p{i}s{s} = Channel.one2one()\n"));
+                }
+                for (s, stage) in stages.iter().enumerate() {
+                    let name = format!("stage{i}_{s}");
+                    let inp = if s == 0 {
+                        format!("{}.in()", input_of(i))
+                    } else {
+                        format!("p{i}s{}.in()", s - 1)
+                    };
+                    let outp = if s + 1 == stages.len() {
+                        format!("c{i}.out()")
+                    } else {
+                        format!("p{i}s{s}.out()")
+                    };
+                    out.push_str(&format!(
+                        "def {name} = new Worker(function: {}, input: {inp}, output: {outp})\n",
+                        stage.function
+                    ));
+                    names.push(name);
+                }
+            }
+            ProcSpec::AnyFanOne { sources } => {
+                let name = format!("reduce{i}");
+                out.push_str(&format!(
+                    "def {name} = new AnyFanOne(input: {}.in(), output: c{i}.out(), sources: {sources})\n",
+                    input_of(i)
+                ));
+                names.push(name);
+            }
+            ProcSpec::ListSeqOne { sources } => {
+                let name = format!("reduce{i}");
+                out.push_str(&format!(
+                    "def {name} = new ListSeqOne(inputs: [0..<{sources}].collect {{ j -> c{}_$j.in() }}, output: c{i}.out())\n",
+                    i.saturating_sub(1)
+                ));
+                names.push(name);
+            }
+            ProcSpec::CombineNto1 { local, combine_method, .. } => {
+                let name = format!("combine{i}");
+                out.push_str(&format!(
+                    "def {name} = new CombineNto1(local: {}, method: {combine_method}, input: {}.in(), output: c{i}.out())\n",
+                    local.class,
+                    input_of(i)
+                ));
+                names.push(name);
+            }
+            ProcSpec::Collect { details } => {
+                let name = format!("collect{i}");
+                out.push_str(&format!(
+                    "def {name} = new Collect(rDetails: {}, input: {}.in())\n",
+                    details.class,
+                    input_of(i)
+                ));
+                names.push(name);
+            }
+        }
+    }
+
+    out.push_str("new PAR([\n");
+    out.push_str(&format!("  {}\n", names.join(", ")));
+    out.push_str("]).run()\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::object::Params;
+    use crate::functionals::pipelines::StageSpec;
+    use crate::workloads::montecarlo::{PiData, PiResults};
+
+    fn farm(workers: usize) -> NetworkSpec {
+        NetworkSpec::new()
+            .push(ProcSpec::Emit {
+                details: PiData::emit_details(4, 10),
+            })
+            .push(ProcSpec::OneFanAny { destinations: workers })
+            .push(ProcSpec::AnyGroupAny {
+                workers,
+                function: "getWithin".into(),
+                modifier: Params::empty(),
+                local: None,
+                out_data: true,
+            })
+            .push(ProcSpec::AnyFanOne { sources: workers })
+            .push(ProcSpec::Collect {
+                details: PiResults::result_details(),
+            })
+    }
+
+    #[test]
+    fn built_code_exceeds_dsl_lines() {
+        let spec = farm(4);
+        let dsl = spec.dsl_line_count();
+        let built = built_line_count(&spec);
+        assert!(built > dsl, "built {built} vs dsl {dsl}");
+        // 4 channels + emit + fan + 4 workers + reduce + collect + 3 PAR.
+        assert_eq!(built, 4 + 8 + 3);
+    }
+
+    #[test]
+    fn listing_mentions_every_process() {
+        let spec = farm(2);
+        let listing = expansion_listing(&spec);
+        for needle in ["Emit", "OneFanAny", "Worker", "AnyFanOne", "Collect", "PAR"] {
+            assert!(listing.contains(needle), "missing {needle}:\n{listing}");
+        }
+    }
+
+    #[test]
+    fn pipeline_expands_stage_channels() {
+        let spec = NetworkSpec::new()
+            .push(ProcSpec::Emit {
+                details: PiData::emit_details(1, 1),
+            })
+            .push(ProcSpec::Pipeline {
+                stages: vec![StageSpec::new("a"), StageSpec::new("b"), StageSpec::new("c")],
+            })
+            .push(ProcSpec::Collect {
+                details: PiResults::result_details(),
+            });
+        let listing = expansion_listing(&spec);
+        // 2 chain channels + 2 internal stage channels.
+        assert!(listing.contains("p1s0"), "{listing}");
+        assert!(listing.contains("p1s1"), "{listing}");
+        assert_eq!(built_line_count(&spec), 2 + 2 + 1 + 3 + 1 + 3);
+    }
+}

@@ -1,0 +1,854 @@
+//! The declarative network builder — the paper's `gppBuilder` DSL (§11).
+//!
+//! A network is a linear chain of process specifications
+//! ([`ProcSpec`]); the builder synthesises **every** channel ("All the
+//! internal communication channels are created automatically", §5.2),
+//! instantiates the library processes, and runs them — the user never
+//! declares a channel or writes a `PAR`. Networks come either from code
+//! (`NetworkSpec::new().push(…)`, used by the benches) or from text
+//! ([`parse_network`], used by `gpp run <file>`):
+//!
+//! ```text
+//! # Monte-Carlo farm, paper Listing 2
+//! config    transport=buffered capacity=64 executor=pooled:4
+//! emit      class=piData init=initClass(12) create=createInstance(300)
+//! fanAny    destinations=3
+//! group     workers=3 function=getWithin
+//! reduceAny sources=3
+//! collect   class=piResults init=initClass(1)
+//! ```
+//!
+//! The optional `config` line picks the channel transport and executor
+//! ([`RuntimeConfig`]); without it the network runs on the paper's
+//! rendezvous + thread-per-process semantics. [`expand`] renders the
+//! runnable code a spec expands to, reproducing the paper's Table 10
+//! DSL-vs-built-code comparison.
+
+pub mod expand;
+
+pub use expand::{built_line_count, expansion_listing};
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+use crate::csp::channel::{In, Out};
+use crate::csp::config::RuntimeConfig;
+use crate::csp::error::{GppError, Result};
+use crate::csp::executor::ExecutorKind;
+use crate::csp::process::CSProcess;
+use crate::csp::transport::TransportKind;
+use crate::data::details::{DataDetails, LocalDetails, ResultDetails};
+use crate::data::message::Message;
+use crate::data::object::{DataObject, Params, Value};
+use crate::functionals::groups::{AnyGroupAny, GroupOptions};
+use crate::functionals::pipelines::{OnePipelineOne, StageSpec};
+use crate::logging::LogSink;
+use crate::processes::{
+    AnyFanOne, Collect, CombineNto1, Emit, EmitWithLocal, ListSeqOne, OneFanAny, OneParCastList,
+    OneSeqCastList, Worker,
+};
+
+/// Per-worker local details for list groups (the Goldbach §6.5 pattern
+/// where worker `i` sieves partition `i`).
+pub type LocalFactory = fn(usize) -> LocalDetails;
+
+/// One process (or process group) in the declarative chain.
+#[derive(Clone)]
+pub enum ProcSpec {
+    Emit {
+        details: DataDetails,
+    },
+    EmitWithLocal {
+        details: DataDetails,
+        local: LocalDetails,
+    },
+    OneFanAny {
+        destinations: usize,
+    },
+    OneSeqCastList {
+        destinations: usize,
+    },
+    OneParCastList {
+        destinations: usize,
+    },
+    AnyGroupAny {
+        workers: usize,
+        function: String,
+        modifier: Params,
+        local: Option<LocalDetails>,
+        out_data: bool,
+    },
+    ListGroupList {
+        workers: usize,
+        function: String,
+        per_worker_modifier: Vec<Params>,
+        local_factory: Option<LocalFactory>,
+        out_data: bool,
+    },
+    Pipeline {
+        stages: Vec<StageSpec>,
+    },
+    AnyFanOne {
+        sources: usize,
+    },
+    ListSeqOne {
+        sources: usize,
+    },
+    CombineNto1 {
+        local: LocalDetails,
+        combine_method: String,
+        finalise_method: Option<String>,
+    },
+    Collect {
+        details: ResultDetails,
+    },
+}
+
+/// How a spec connects to its neighbours.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Arity {
+    None,
+    Single,
+    List(usize),
+}
+
+impl ProcSpec {
+    fn input_arity(&self) -> Arity {
+        match self {
+            ProcSpec::Emit { .. } | ProcSpec::EmitWithLocal { .. } => Arity::None,
+            ProcSpec::ListGroupList { workers, .. } => Arity::List(*workers),
+            ProcSpec::ListSeqOne { sources } => Arity::List(*sources),
+            _ => Arity::Single,
+        }
+    }
+
+    fn output_arity(&self) -> Arity {
+        match self {
+            ProcSpec::Collect { .. } => Arity::None,
+            ProcSpec::OneSeqCastList { destinations } | ProcSpec::OneParCastList { destinations } => {
+                Arity::List(*destinations)
+            }
+            ProcSpec::ListGroupList { workers, .. } => Arity::List(*workers),
+            _ => Arity::Single,
+        }
+    }
+
+    /// Terminators this spec delivers downstream per output channel
+    /// (used to validate the `UniversalTerminator` protocol wiring).
+    fn terminators_out(&self) -> usize {
+        match self {
+            ProcSpec::OneFanAny { destinations } => *destinations,
+            ProcSpec::AnyGroupAny { workers, .. } => *workers,
+            _ => 1,
+        }
+    }
+
+    /// Terminators this spec consumes from its (shared) input.
+    fn terminators_in(&self) -> usize {
+        match self {
+            ProcSpec::AnyGroupAny { workers, .. } => *workers,
+            ProcSpec::AnyFanOne { sources } => *sources,
+            _ => 1,
+        }
+    }
+
+    /// Short name for diagnostics and the expansion listing.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProcSpec::Emit { .. } => "Emit",
+            ProcSpec::EmitWithLocal { .. } => "EmitWithLocal",
+            ProcSpec::OneFanAny { .. } => "OneFanAny",
+            ProcSpec::OneSeqCastList { .. } => "OneSeqCastList",
+            ProcSpec::OneParCastList { .. } => "OneParCastList",
+            ProcSpec::AnyGroupAny { .. } => "AnyGroupAny",
+            ProcSpec::ListGroupList { .. } => "ListGroupList",
+            ProcSpec::Pipeline { .. } => "Pipeline",
+            ProcSpec::AnyFanOne { .. } => "AnyFanOne",
+            ProcSpec::ListSeqOne { .. } => "ListSeqOne",
+            ProcSpec::CombineNto1 { .. } => "CombineNto1",
+            ProcSpec::Collect { .. } => "Collect",
+        }
+    }
+}
+
+/// A declarative network: an ordered chain of specs plus the runtime
+/// configuration its channels and executor are built from.
+#[derive(Clone, Default)]
+pub struct NetworkSpec {
+    pub procs: Vec<ProcSpec>,
+    pub config: RuntimeConfig,
+    /// Source line count when parsed from DSL text (Table 10 metric).
+    dsl_lines: Option<usize>,
+}
+
+impl NetworkSpec {
+    pub fn new() -> Self {
+        Self {
+            procs: Vec::new(),
+            config: RuntimeConfig::default(),
+            dsl_lines: None,
+        }
+    }
+
+    pub fn push(mut self, spec: ProcSpec) -> Self {
+        self.procs.push(spec);
+        self
+    }
+
+    pub fn with_config(mut self, config: RuntimeConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Lines of DSL this network corresponds to: the parsed line count,
+    /// or one line per process entry plus the invoking line.
+    pub fn dsl_line_count(&self) -> usize {
+        self.dsl_lines.unwrap_or(self.procs.len() + 1)
+    }
+
+    fn err(msg: String) -> GppError {
+        GppError::InvalidNetwork(msg)
+    }
+
+    /// Check the chain wires up: a source first, a sink last, matching
+    /// channel arities, and consistent terminator counts on fan edges.
+    pub fn validate(&self) -> Result<()> {
+        if self.procs.len() < 2 {
+            return Err(Self::err("network needs at least a source and a sink".into()));
+        }
+        for (i, p) in self.procs.iter().enumerate() {
+            let is_first = i == 0;
+            let is_last = i + 1 == self.procs.len();
+            if (p.input_arity() == Arity::None) != is_first {
+                return Err(Self::err(format!(
+                    "{} at position {i}: sources must come first",
+                    p.label()
+                )));
+            }
+            if (p.output_arity() == Arity::None) != is_last {
+                return Err(Self::err(format!(
+                    "{} at position {i}: sinks must come last",
+                    p.label()
+                )));
+            }
+        }
+        for w in self.procs.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            match (a.output_arity(), b.input_arity()) {
+                (Arity::Single, Arity::Single) => {}
+                (Arity::List(n), Arity::List(m)) if n == m => {}
+                (x, y) => {
+                    return Err(Self::err(format!(
+                        "{} ({x:?}) cannot feed {} ({y:?})",
+                        a.label(),
+                        b.label()
+                    )));
+                }
+            }
+            if a.terminators_out() != b.terminators_in() {
+                return Err(Self::err(format!(
+                    "{} delivers {} terminator(s) but {} consumes {}",
+                    a.label(),
+                    a.terminators_out(),
+                    b.label(),
+                    b.terminators_in()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand to the runnable process vector, synthesising every channel
+    /// on the configured transport.
+    pub fn build(
+        &self,
+        result_tx: Option<mpsc::Sender<Box<dyn DataObject>>>,
+    ) -> Result<Vec<Box<dyn CSProcess>>> {
+        self.validate()?;
+        let cfg = &self.config;
+        let batch = cfg.io_batch();
+        let log = LogSink::off();
+        let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
+
+        enum Ends {
+            Start,
+            Single(In<Message>),
+            List(Vec<In<Message>>),
+        }
+
+        enum OutEnds {
+            Single(Out<Message>),
+            List(Vec<Out<Message>>),
+        }
+
+        let mut upstream = Ends::Start;
+        let last = self.procs.len() - 1;
+        for (i, spec) in self.procs.iter().enumerate() {
+            // Synthesise this spec's output channel(s).
+            let (outs, next_upstream): (Option<OutEnds>, Ends) = if i == last {
+                (None, Ends::Start)
+            } else {
+                match spec.output_arity() {
+                    Arity::Single => {
+                        let (o, r) = cfg.channel::<Message>(&format!("dsl.{i}.{}", spec.label()));
+                        (Some(OutEnds::Single(o)), Ends::Single(r))
+                    }
+                    Arity::List(k) => {
+                        let (os, rs) =
+                            cfg.channel_list::<Message>(k, &format!("dsl.{i}.{}", spec.label()));
+                        (Some(OutEnds::List(os)), Ends::List(rs))
+                    }
+                    Arity::None => unreachable!("validated: sinks are last"),
+                }
+            };
+
+            let single_in = |e: &Ends| -> Result<In<Message>> {
+                match e {
+                    Ends::Single(r) => Ok(r.clone()),
+                    _ => Err(Self::err(format!("{} needs a single input", spec.label()))),
+                }
+            };
+            let list_in = |e: &Ends| -> Result<Vec<In<Message>>> {
+                match e {
+                    Ends::List(rs) => Ok(rs.clone()),
+                    _ => Err(Self::err(format!("{} needs a list input", spec.label()))),
+                }
+            };
+            let single_out = |o: &Option<OutEnds>| -> Result<Out<Message>> {
+                match o {
+                    Some(OutEnds::Single(o)) => Ok(o.clone()),
+                    _ => Err(Self::err(format!("{} needs a single output", spec.label()))),
+                }
+            };
+            let list_out = |o: &Option<OutEnds>| -> Result<Vec<Out<Message>>> {
+                match o {
+                    Some(OutEnds::List(os)) => Ok(os.clone()),
+                    _ => Err(Self::err(format!("{} needs a list output", spec.label()))),
+                }
+            };
+
+            match spec {
+                ProcSpec::Emit { details } => {
+                    procs.push(Box::new(
+                        Emit::new(details.clone(), single_out(&outs)?).with_batch(batch),
+                    ));
+                }
+                ProcSpec::EmitWithLocal { details, local } => {
+                    procs.push(Box::new(EmitWithLocal::new(
+                        details.clone(),
+                        local.clone(),
+                        single_out(&outs)?,
+                    )));
+                }
+                ProcSpec::OneFanAny { destinations } => {
+                    procs.push(Box::new(
+                        OneFanAny::new(single_in(&upstream)?, single_out(&outs)?, *destinations)
+                            .with_batch(batch),
+                    ));
+                }
+                ProcSpec::OneSeqCastList { .. } => {
+                    procs.push(Box::new(OneSeqCastList::new(
+                        single_in(&upstream)?,
+                        list_out(&outs)?,
+                    )));
+                }
+                ProcSpec::OneParCastList { .. } => {
+                    procs.push(Box::new(OneParCastList::new(
+                        single_in(&upstream)?,
+                        list_out(&outs)?,
+                    )));
+                }
+                ProcSpec::AnyGroupAny {
+                    workers,
+                    function,
+                    modifier,
+                    local,
+                    out_data,
+                } => {
+                    let mut opts = GroupOptions::new(function)
+                        .modifier(modifier.clone())
+                        .out_data(*out_data)
+                        .io_batch(batch);
+                    if let Some(l) = local {
+                        opts = opts.local(l.clone());
+                    }
+                    procs.extend(AnyGroupAny::build(
+                        single_in(&upstream)?,
+                        single_out(&outs)?,
+                        *workers,
+                        &opts,
+                    ));
+                }
+                ProcSpec::ListGroupList {
+                    workers,
+                    function,
+                    per_worker_modifier,
+                    local_factory,
+                    out_data,
+                } => {
+                    let ins = list_in(&upstream)?;
+                    let outs_v = list_out(&outs)?;
+                    for (w, (inp, out)) in ins.into_iter().zip(outs_v).enumerate() {
+                        let modifier = per_worker_modifier
+                            .get(w)
+                            .cloned()
+                            .unwrap_or_else(Params::empty);
+                        let mut wk = Worker::new(inp, out, function)
+                            .with_modifier(modifier)
+                            .with_out_data(*out_data)
+                            .with_index(w)
+                            .with_batch(batch);
+                        if let Some(f) = local_factory {
+                            wk = wk.with_local(f(w));
+                        }
+                        let _ = workers; // arity already fixed the count
+                        procs.push(Box::new(wk));
+                    }
+                }
+                ProcSpec::Pipeline { stages } => {
+                    procs.extend(OnePipelineOne::build_with(
+                        cfg,
+                        single_in(&upstream)?,
+                        single_out(&outs)?,
+                        stages,
+                        i,
+                        log.clone(),
+                    ));
+                }
+                ProcSpec::AnyFanOne { sources } => {
+                    procs.push(Box::new(
+                        AnyFanOne::new(single_in(&upstream)?, single_out(&outs)?, *sources)
+                            .with_batch(batch),
+                    ));
+                }
+                ProcSpec::ListSeqOne { .. } => {
+                    procs.push(Box::new(ListSeqOne::new(
+                        list_in(&upstream)?,
+                        single_out(&outs)?,
+                    )));
+                }
+                ProcSpec::CombineNto1 {
+                    local,
+                    combine_method,
+                    finalise_method,
+                } => {
+                    let mut c = CombineNto1::new(
+                        single_in(&upstream)?,
+                        single_out(&outs)?,
+                        local.clone(),
+                        combine_method,
+                    );
+                    if let Some(fin) = finalise_method {
+                        c = c.with_finalise(fin);
+                    }
+                    procs.push(Box::new(c));
+                }
+                ProcSpec::Collect { details } => {
+                    let mut c = Collect::new(details.clone(), single_in(&upstream)?)
+                        .with_batch(batch);
+                    if let Some(tx) = &result_tx {
+                        c = c.with_result_out(tx.clone());
+                    }
+                    procs.push(Box::new(c));
+                }
+            }
+            upstream = next_upstream;
+        }
+        Ok(procs)
+    }
+
+    /// The configured executor, downgraded to thread-per-process when a
+    /// pooled config would deadlock this network: a pool smaller than
+    /// the process count cannot run a rendezvous clique (blocked
+    /// processes hold every pool thread while their partners wait in
+    /// the queue), so a `.gpp` `config` line must never hang silently.
+    /// Buffered configs are the user's capacity call; they get a note.
+    fn runnable_config(&self) -> RuntimeConfig {
+        let mut cfg = self.config.clone();
+        if let ExecutorKind::Pooled(n) = cfg.executor {
+            let pc = self.process_count();
+            if n < pc {
+                match cfg.transport {
+                    TransportKind::Rendezvous => {
+                        eprintln!(
+                            "gpp: note: a {n}-thread pool cannot run this {pc}-process \
+                             rendezvous network without deadlock; using thread-per-process \
+                             (add `config transport=buffered` to use the pool)"
+                        );
+                        cfg.executor = ExecutorKind::ThreadPerProcess;
+                    }
+                    TransportKind::Buffered => {
+                        eprintln!(
+                            "gpp: note: pooled:{n} over buffered edges completes only if \
+                             capacity ({}) covers the whole object stream",
+                            cfg.capacity
+                        );
+                    }
+                }
+            }
+        }
+        cfg
+    }
+
+    /// Build and run on the configured executor; returns the collector
+    /// result objects.
+    pub fn run(&self) -> Result<Vec<Box<dyn DataObject>>> {
+        crate::data::object::register_builtin_classes();
+        let (tx, rx) = mpsc::channel();
+        let procs = self.build(Some(tx))?;
+        self.runnable_config().run_named("gppBuilder", procs)?;
+        Ok(rx.try_iter().collect())
+    }
+
+    /// Processes the network expands to (Table 10's "generated process
+    /// count").
+    pub fn process_count(&self) -> usize {
+        self.procs
+            .iter()
+            .map(|p| match p {
+                ProcSpec::AnyGroupAny { workers, .. } => *workers,
+                ProcSpec::ListGroupList { workers, .. } => *workers,
+                ProcSpec::Pipeline { stages } => stages.len(),
+                _ => 1,
+            })
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------- parser
+
+/// Parse the textual DSL (see the module docs for the grammar). Each
+/// non-comment line is `keyword key=value …`.
+pub fn parse_network(text: &str) -> Result<NetworkSpec> {
+    let mut spec = NetworkSpec::new();
+    let mut lines = 0usize;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        lines += 1;
+        let mut toks = line.split_whitespace();
+        let kw = toks.next().expect("non-empty line");
+        let kvs = parse_kvs(toks, lineno + 1)?;
+        let at = |key: &str| -> Result<String> {
+            kvs.get(key).cloned().ok_or_else(|| {
+                NetworkSpec::err(format!("line {}: '{kw}' needs {key}=…", lineno + 1))
+            })
+        };
+        let usize_at = |key: &str| -> Result<usize> {
+            at(key)?.parse::<usize>().map_err(|_| {
+                NetworkSpec::err(format!("line {}: {key} must be an integer", lineno + 1))
+            })
+        };
+        match kw {
+            "config" => {
+                if let Some(t) = kvs.get("transport") {
+                    spec.config.transport = TransportKind::parse(t).ok_or_else(|| {
+                        NetworkSpec::err(format!("line {}: unknown transport '{t}'", lineno + 1))
+                    })?;
+                }
+                if kvs.contains_key("capacity") {
+                    spec.config.capacity = usize_at("capacity")?.max(1);
+                }
+                if let Some(e) = kvs.get("executor") {
+                    spec.config.executor = ExecutorKind::parse(e).ok_or_else(|| {
+                        NetworkSpec::err(format!("line {}: unknown executor '{e}'", lineno + 1))
+                    })?;
+                }
+            }
+            "emit" | "emitLocal" => {
+                let mut details = DataDetails::new(&at("class")?);
+                if let Some(v) = kvs.get("init") {
+                    let (m, p) = parse_method(v);
+                    details = details.init(&m, p);
+                }
+                if let Some(v) = kvs.get("create") {
+                    let (m, p) = parse_method(v);
+                    details = details.create(&m, p);
+                }
+                if kw == "emitLocal" {
+                    let mut local = LocalDetails::new(&at("localClass")?);
+                    if let Some(v) = kvs.get("localInit") {
+                        let (m, p) = parse_method(v);
+                        local = local.init(&m, p);
+                    }
+                    spec.procs.push(ProcSpec::EmitWithLocal { details, local });
+                } else {
+                    spec.procs.push(ProcSpec::Emit { details });
+                }
+            }
+            "fanAny" => spec.procs.push(ProcSpec::OneFanAny {
+                destinations: usize_at("destinations")?,
+            }),
+            "seqCast" => spec.procs.push(ProcSpec::OneSeqCastList {
+                destinations: usize_at("destinations")?,
+            }),
+            "parCast" => spec.procs.push(ProcSpec::OneParCastList {
+                destinations: usize_at("destinations")?,
+            }),
+            "group" | "listGroup" => {
+                let workers = usize_at("workers")?;
+                let function = at("function")?;
+                let out_data = kvs.get("outData").map_or(true, |v| v != "false");
+                let modifier = match kvs.get("modifier") {
+                    Some(v) => parse_params(v),
+                    None => Params::empty(),
+                };
+                if kw == "group" {
+                    spec.procs.push(ProcSpec::AnyGroupAny {
+                        workers,
+                        function,
+                        modifier,
+                        local: None,
+                        out_data,
+                    });
+                } else {
+                    spec.procs.push(ProcSpec::ListGroupList {
+                        workers,
+                        function,
+                        per_worker_modifier: vec![modifier; workers],
+                        local_factory: None,
+                        out_data,
+                    });
+                }
+            }
+            "pipeline" => {
+                let stages: Vec<StageSpec> = at("stages")?
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(StageSpec::new)
+                    .collect();
+                if stages.len() < 2 {
+                    return Err(NetworkSpec::err(format!(
+                        "line {}: pipelines need at least two stages",
+                        lineno + 1
+                    )));
+                }
+                spec.procs.push(ProcSpec::Pipeline { stages });
+            }
+            "reduceAny" => spec.procs.push(ProcSpec::AnyFanOne {
+                sources: usize_at("sources")?,
+            }),
+            "listSeq" => spec.procs.push(ProcSpec::ListSeqOne {
+                sources: usize_at("sources")?,
+            }),
+            "combine" => {
+                let mut local = LocalDetails::new(&at("class")?);
+                if let Some(v) = kvs.get("init") {
+                    let (m, p) = parse_method(v);
+                    local = local.init(&m, p);
+                }
+                spec.procs.push(ProcSpec::CombineNto1 {
+                    local,
+                    combine_method: at("method")?,
+                    finalise_method: kvs.get("finalise").map(|v| parse_method(v).0),
+                });
+            }
+            "collect" => {
+                let mut details = ResultDetails::new(&at("class")?);
+                if let Some(v) = kvs.get("init") {
+                    let (m, p) = parse_method(v);
+                    details = details.init(&m, p);
+                }
+                if let Some(v) = kvs.get("collect") {
+                    details = details.collect(&parse_method(v).0);
+                }
+                if let Some(v) = kvs.get("finalise") {
+                    let (m, p) = parse_method(v);
+                    details = details.finalise(&m, p);
+                }
+                spec.procs.push(ProcSpec::Collect { details });
+            }
+            other => {
+                return Err(NetworkSpec::err(format!(
+                    "line {}: unknown process '{other}'",
+                    lineno + 1
+                )));
+            }
+        }
+    }
+    spec.dsl_lines = Some(lines);
+    Ok(spec)
+}
+
+fn parse_kvs<'a>(
+    toks: impl Iterator<Item = &'a str>,
+    lineno: usize,
+) -> Result<HashMap<String, String>> {
+    let mut map = HashMap::new();
+    for tok in toks {
+        let (k, v) = tok.split_once('=').ok_or_else(|| {
+            NetworkSpec::err(format!("line {lineno}: expected key=value, got '{tok}'"))
+        })?;
+        map.insert(k.to_string(), v.to_string());
+    }
+    Ok(map)
+}
+
+/// `initClass(12,0.5,abc)` → `("initClass", [Int(12), Float(0.5), Str])`;
+/// a bare `collector` has empty params.
+fn parse_method(v: &str) -> (String, Params) {
+    match v.split_once('(') {
+        Some((name, rest)) => {
+            let args = rest.strip_suffix(')').unwrap_or(rest);
+            (name.to_string(), parse_args(args))
+        }
+        None => (v.to_string(), Params::empty()),
+    }
+}
+
+/// `(1,2.5,x)` or `1,2.5,x` → Params.
+fn parse_params(v: &str) -> Params {
+    let inner = v
+        .strip_prefix('(')
+        .and_then(|s| s.strip_suffix(')'))
+        .unwrap_or(v);
+    parse_args(inner)
+}
+
+fn parse_args(args: &str) -> Params {
+    let vals: Vec<Value> = args
+        .split(',')
+        .map(|a| a.trim())
+        .filter(|a| !a.is_empty())
+        .map(|a| {
+            if let Ok(i) = a.parse::<i64>() {
+                Value::Int(i)
+            } else if let Ok(f) = a.parse::<f64>() {
+                Value::Float(f)
+            } else {
+                Value::Str(a.to_string())
+            }
+        })
+        .collect();
+    Params::of(vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::montecarlo::{PiData, PiResults};
+
+    fn farm_spec(workers: usize) -> NetworkSpec {
+        NetworkSpec::new()
+            .push(ProcSpec::Emit {
+                details: PiData::emit_details(8, 50),
+            })
+            .push(ProcSpec::OneFanAny { destinations: workers })
+            .push(ProcSpec::AnyGroupAny {
+                workers,
+                function: "getWithin".into(),
+                modifier: Params::empty(),
+                local: None,
+                out_data: true,
+            })
+            .push(ProcSpec::AnyFanOne { sources: workers })
+            .push(ProcSpec::Collect {
+                details: PiResults::result_details(),
+            })
+    }
+
+    #[test]
+    fn programmatic_farm_runs() {
+        crate::workloads::register_all();
+        let results = farm_spec(3).run().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].log_prop("iterationSum"), Some(Value::Int(8 * 50)));
+    }
+
+    #[test]
+    fn farm_runs_on_buffered_pooled_config() {
+        crate::workloads::register_all();
+        // Capacity ≥ stream length + terminators lets even a tiny pool
+        // drive the farm to completion.
+        let spec = farm_spec(2).with_config(RuntimeConfig::buffered(64).with_pool(2));
+        let results = spec.run().unwrap();
+        assert_eq!(results[0].log_prop("iterationSum"), Some(Value::Int(8 * 50)));
+    }
+
+    #[test]
+    fn parse_applies_config_line() {
+        let spec = parse_network(
+            "config transport=buffered capacity=32 executor=pooled:3\n\
+             emit class=piData init=initClass(4) create=createInstance(10)\n\
+             fanAny destinations=2\n\
+             group workers=2 function=getWithin\n\
+             reduceAny sources=2\n\
+             collect class=piResults init=initClass(1)\n",
+        )
+        .unwrap();
+        assert_eq!(spec.config.transport, TransportKind::Buffered);
+        assert_eq!(spec.config.capacity, 32);
+        assert_eq!(spec.config.executor, ExecutorKind::Pooled(3));
+        assert_eq!(spec.dsl_line_count(), 6);
+        crate::workloads::register_all();
+        let results = spec.run().unwrap();
+        assert_eq!(results[0].log_prop("iterationSum"), Some(Value::Int(40)));
+    }
+
+    #[test]
+    fn validate_rejects_arity_mismatch() {
+        let spec = NetworkSpec::new()
+            .push(ProcSpec::Emit {
+                details: PiData::emit_details(1, 1),
+            })
+            .push(ProcSpec::ListSeqOne { sources: 3 }) // Single → List
+            .push(ProcSpec::Collect {
+                details: PiResults::result_details(),
+            });
+        assert!(matches!(
+            spec.validate().unwrap_err(),
+            GppError::InvalidNetwork(_)
+        ));
+    }
+
+    #[test]
+    fn validate_rejects_terminator_mismatch() {
+        let mut spec = farm_spec(3);
+        // Fan says 3 destinations but the group has 2 workers.
+        spec.procs[2] = ProcSpec::AnyGroupAny {
+            workers: 2,
+            function: "getWithin".into(),
+            modifier: Params::empty(),
+            local: None,
+            out_data: true,
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_misplaced_source() {
+        let spec = NetworkSpec::new()
+            .push(ProcSpec::OneFanAny { destinations: 1 })
+            .push(ProcSpec::Collect {
+                details: PiResults::result_details(),
+            });
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keyword() {
+        assert!(parse_network("frobnicate x=1\n").is_err());
+        assert!(parse_network("emit\n").is_err()); // missing class=
+        assert!(parse_network("emit class\n").is_err()); // not key=value
+    }
+
+    #[test]
+    fn method_and_params_parse() {
+        let (m, p) = parse_method("initClass(12,0.5,abc)");
+        assert_eq!(m, "initClass");
+        assert_eq!(
+            p,
+            Params::of(vec![
+                Value::Int(12),
+                Value::Float(0.5),
+                Value::Str("abc".into())
+            ])
+        );
+        let (m2, p2) = parse_method("collector");
+        assert_eq!(m2, "collector");
+        assert!(p2.is_empty());
+        assert_eq!(parse_params("(7)"), Params::of(vec![Value::Int(7)]));
+    }
+}

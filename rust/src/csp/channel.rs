@@ -1,4 +1,4 @@
-//! Synchronised, unbuffered (rendezvous) channels with shareable ends.
+//! Channel ends and the default rendezvous transport.
 //!
 //! One implementation covers the four JCSP variants the paper's
 //! connector processes need (`One2One`, `One2Any`, `Any2One`,
@@ -6,25 +6,31 @@
 //! cloneable; the one-to-one discipline of the paper's plain channels is
 //! imposed by the network builder, not the type system.
 //!
-//! Semantics (paper §2.1): "Whichever process attempts to communicate
-//! first, waits, idle until the other process is ready at which point
-//! the data is copied from the writing process to the reading process."
-//! A write therefore blocks until *its* value is taken by a reader;
-//! multiple blocked writers are served in FIFO order ("write requests
-//! are queued in a FIFO structure … reads are processed in the order the
-//! writes occurred", §4.5.3).
+//! Since the transport refactor the ends are handles onto a
+//! [`Transport`] object: [`ChannelCore`] here is the synchronised,
+//! unbuffered (rendezvous) transport — the verified default — and
+//! [`crate::csp::transport::BufferedCore`] is the bounded-buffer
+//! alternative for throughput edges. [`channel`]/[`named_channel`]
+//! build rendezvous channels; [`buffered_channel`] builds buffered
+//! ones; [`crate::csp::RuntimeConfig::channel`] picks by configuration.
+//!
+//! Rendezvous semantics (paper §2.1): "Whichever process attempts to
+//! communicate first, waits, idle until the other process is ready at
+//! which point the data is copied from the writing process to the
+//! reading process." A write therefore blocks until *its* value is
+//! taken by a reader; multiple blocked writers are served in FIFO order
+//! ("write requests are queued in a FIFO structure … reads are
+//! processed in the order the writes occurred", §4.5.3).
 //!
 //! Channels can be **poisoned** to tear down the network on error: every
 //! blocked or future operation returns [`GppError::Poisoned`].
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::{Arc, Condvar, Mutex};
 
 use super::alt::AltSignal;
 use super::error::{GppError, Result};
-
-static NEXT_CHAN_ID: AtomicU64 = AtomicU64::new(1);
+use super::transport::{next_chan_id, AltWaiters, Transport, TransportKind, TransportStats};
 
 struct Pending<T> {
     write_id: u64,
@@ -38,12 +44,28 @@ struct Inner<T> {
     /// removes its id as it wakes and returns.
     taken: Vec<u64>,
     next_write_id: u64,
+    /// Writers currently parked in `write`. Invariant: every id in
+    /// `taken` belongs to a parked writer, so `blocked_writers == 0`
+    /// proves any `taken` residue is stale and safe to drop.
+    blocked_writers: usize,
     poisoned: bool,
     /// Alts currently waiting for this channel to become ready.
-    alt_waiters: Vec<Weak<AltSignal>>,
+    alt_waiters: AltWaiters,
 }
 
-/// Shared channel state.
+impl<T> Inner<T> {
+    /// Drop bookkeeping that can no longer be claimed. A `taken` id is
+    /// claimed by its (parked) writer as it wakes; with no writers
+    /// parked, leftovers would otherwise sit on a long-lived channel
+    /// forever.
+    fn drain_stale(&mut self) {
+        if self.blocked_writers == 0 && !self.taken.is_empty() {
+            self.taken.clear();
+        }
+    }
+}
+
+/// The rendezvous transport (shared channel state).
 pub struct ChannelCore<T> {
     id: u64,
     name: String,
@@ -55,22 +77,25 @@ pub struct ChannelCore<T> {
 }
 
 impl<T> ChannelCore<T> {
-    fn new(name: String) -> Arc<Self> {
+    pub fn new(name: String) -> Arc<Self> {
         Arc::new(Self {
-            id: NEXT_CHAN_ID.fetch_add(1, Ordering::Relaxed),
+            id: next_chan_id(),
             name,
             inner: Mutex::new(Inner {
                 pending: VecDeque::new(),
                 taken: Vec::new(),
                 next_write_id: 1,
+                blocked_writers: 0,
                 poisoned: false,
-                alt_waiters: Vec::new(),
+                alt_waiters: AltWaiters::new(),
             }),
             read_cond: Condvar::new(),
             write_cond: Condvar::new(),
         })
     }
+}
 
+impl<T: Send> Transport<T> for ChannelCore<T> {
     /// Blocking rendezvous write: returns once a reader has taken `value`.
     fn write(&self, value: T) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
@@ -80,24 +105,28 @@ impl<T> ChannelCore<T> {
         let write_id = g.next_write_id;
         g.next_write_id += 1;
         g.pending.push_back(Pending { write_id, value });
+        g.blocked_writers += 1;
 
         // Wake one blocked reader and any registered Alts. (§Perf: the
         // substrate originally shared one Condvar between readers and
         // writers and notified all; splitting the queues and waking one
         // reader cut the rendezvous cost — see EXPERIMENTS.md §Perf.)
         self.read_cond.notify_one();
-        Self::signal_alts(&mut g);
+        g.alt_waiters.fire_all();
 
         // Wait until a reader consumes our value (rendezvous completes).
         loop {
             if let Some(pos) = g.taken.iter().position(|&id| id == write_id) {
                 g.taken.swap_remove(pos);
+                g.blocked_writers -= 1;
                 return Ok(());
             }
             if g.poisoned {
                 // Our value may still sit in `pending`; it is dropped with
                 // the channel. Either way the write did not complete.
                 g.pending.retain(|p| p.write_id != write_id);
+                g.blocked_writers -= 1;
+                g.drain_stale();
                 return Err(GppError::Poisoned);
             }
             g = self.write_cond.wait(g).unwrap();
@@ -117,6 +146,7 @@ impl<T> ChannelCore<T> {
                 return Ok(p.value);
             }
             if g.poisoned {
+                g.drain_stale();
                 return Err(GppError::Poisoned);
             }
             g = self.read_cond.wait(g).unwrap();
@@ -132,9 +162,67 @@ impl<T> ChannelCore<T> {
             return Ok(Some(p.value));
         }
         if g.poisoned {
+            g.drain_stale();
             return Err(GppError::Poisoned);
         }
         Ok(None)
+    }
+
+    /// Take up to `max` offered values under one lock acquisition. Each
+    /// taken value completes its writer's rendezvous exactly as a
+    /// one-by-one read sequence would, in the same FIFO order.
+    fn read_batch(&self, max: usize) -> Result<Vec<T>> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.pending.is_empty() {
+                let n = g.pending.len().min(max);
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let p = g.pending.pop_front().unwrap();
+                    g.taken.push(p.write_id);
+                    out.push(p.value);
+                }
+                self.write_cond.notify_all();
+                return Ok(out);
+            }
+            if g.poisoned {
+                g.drain_stale();
+                return Err(GppError::Poisoned);
+            }
+            g = self.read_cond.wait(g).unwrap();
+        }
+    }
+
+    fn read_batch_while(&self, max: usize, keep: &dyn Fn(&T) -> bool) -> Result<Vec<T>> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.pending.is_empty() {
+                let mut out = Vec::new();
+                while out.len() < max {
+                    let take = match g.pending.front() {
+                        Some(p) => keep(&p.value),
+                        None => false,
+                    };
+                    if !take {
+                        break;
+                    }
+                    let p = g.pending.pop_front().unwrap();
+                    g.taken.push(p.write_id);
+                    out.push(p.value);
+                }
+                if !out.is_empty() {
+                    self.write_cond.notify_all();
+                }
+                return Ok(out);
+            }
+            if g.poisoned {
+                g.drain_stale();
+                return Err(GppError::Poisoned);
+            }
+            g = self.read_cond.wait(g).unwrap();
+        }
     }
 
     /// True if a read would not block (a writer is waiting) — used by Alt.
@@ -149,20 +237,8 @@ impl<T> ChannelCore<T> {
         if !g.pending.is_empty() || g.poisoned {
             return true; // already ready, no need to register
         }
-        g.alt_waiters.push(Arc::downgrade(sig));
+        g.alt_waiters.register(sig);
         false
-    }
-
-    fn signal_alts(g: &mut Inner<T>) {
-        if g.alt_waiters.is_empty() {
-            return;
-        }
-        let waiters = std::mem::take(&mut g.alt_waiters);
-        for w in waiters {
-            if let Some(sig) = w.upgrade() {
-                sig.fire();
-            }
-        }
     }
 
     /// Poison the channel: all blocked and future operations fail.
@@ -174,22 +250,44 @@ impl<T> ChannelCore<T> {
         g.poisoned = true;
         self.read_cond.notify_all();
         self.write_cond.notify_all();
-        Self::signal_alts(&mut g);
+        g.alt_waiters.fire_all();
     }
 
     fn is_poisoned(&self) -> bool {
         self.inner.lock().unwrap().poisoned
     }
+
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Rendezvous
+    }
+
+    fn stats(&self) -> TransportStats {
+        let g = self.inner.lock().unwrap();
+        TransportStats {
+            pending: g.pending.len(),
+            taken: g.taken.len(),
+            alt_waiters: g.alt_waiters.len(),
+            blocked_writers: g.blocked_writers,
+        }
+    }
 }
 
 /// Writing end of a channel. Cloneable (shared `any` end).
 pub struct Out<T> {
-    core: Arc<ChannelCore<T>>,
+    core: Arc<dyn Transport<T>>,
 }
 
 /// Reading end of a channel. Cloneable (shared `any` end).
 pub struct In<T> {
-    core: Arc<ChannelCore<T>>,
+    core: Arc<dyn Transport<T>>,
 }
 
 impl<T> Clone for Out<T> {
@@ -205,9 +303,14 @@ impl<T> Clone for In<T> {
 }
 
 impl<T> Out<T> {
-    /// Synchronised write; blocks until a reader takes the value.
+    /// Transport write; rendezvous blocks until a reader takes the value.
     pub fn write(&self, value: T) -> Result<()> {
         self.core.write(value)
+    }
+
+    /// Write a batch (buffered transports queue it under one ticket).
+    pub fn write_batch(&self, values: Vec<T>) -> Result<()> {
+        self.core.write_batch(values)
     }
 
     pub fn poison(&self) {
@@ -219,16 +322,28 @@ impl<T> Out<T> {
     }
 
     pub fn channel_id(&self) -> u64 {
-        self.core.id
+        self.core.id()
     }
 
     pub fn name(&self) -> &str {
-        &self.core.name
+        self.core.name()
+    }
+
+    pub fn transport_kind(&self) -> TransportKind {
+        self.core.kind()
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.core.capacity()
+    }
+
+    pub fn stats(&self) -> TransportStats {
+        self.core.stats()
     }
 }
 
 impl<T> In<T> {
-    /// Synchronised read; blocks until a writer offers a value.
+    /// Transport read; blocks until a value is available.
     pub fn read(&self) -> Result<T> {
         self.core.read()
     }
@@ -236,6 +351,18 @@ impl<T> In<T> {
     /// Non-blocking read (Alt internals, draining).
     pub fn try_read(&self) -> Result<Option<T>> {
         self.core.try_read()
+    }
+
+    /// Blocking read of up to `max` values under one lock acquisition.
+    pub fn read_batch(&self, max: usize) -> Result<Vec<T>> {
+        self.core.read_batch(max)
+    }
+
+    /// Batched read that stops before the first value `keep` rejects
+    /// (see [`Transport::read_batch_while`]); an empty result means the
+    /// queue head was rejected — take it with [`In::read`].
+    pub fn read_batch_while(&self, max: usize, keep: &dyn Fn(&T) -> bool) -> Result<Vec<T>> {
+        self.core.read_batch_while(max, keep)
     }
 
     /// Would a read complete without blocking?
@@ -256,28 +383,53 @@ impl<T> In<T> {
     }
 
     pub fn channel_id(&self) -> u64 {
-        self.core.id
+        self.core.id()
     }
 
     pub fn name(&self) -> &str {
-        &self.core.name
+        self.core.name()
+    }
+
+    pub fn transport_kind(&self) -> TransportKind {
+        self.core.kind()
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.core.capacity()
+    }
+
+    pub fn stats(&self) -> TransportStats {
+        self.core.stats()
     }
 }
 
-/// Create a channel, returning `(writer, reader)`.
-pub fn channel<T>() -> (Out<T>, In<T>) {
-    named_channel("chan")
-}
-
-/// Create a channel with a diagnostic name (the builder names channels
-/// after the processes they connect, which the logger reports).
-pub fn named_channel<T>(name: &str) -> (Out<T>, In<T>) {
-    let core = ChannelCore::new(name.to_string());
+/// Wrap an existing transport into channel ends.
+pub fn ends_of<T>(core: Arc<dyn Transport<T>>) -> (Out<T>, In<T>) {
     (Out { core: core.clone() }, In { core })
 }
 
-/// Create `n` channels at once (a JCSP "channel list").
-pub fn channel_list<T>(n: usize, name: &str) -> (Vec<Out<T>>, Vec<In<T>>) {
+/// Create a rendezvous channel, returning `(writer, reader)`.
+pub fn channel<T: Send + 'static>() -> (Out<T>, In<T>) {
+    named_channel("chan")
+}
+
+/// Create a rendezvous channel with a diagnostic name (the builder names
+/// channels after the processes they connect, which the logger reports).
+pub fn named_channel<T: Send + 'static>(name: &str) -> (Out<T>, In<T>) {
+    let core: Arc<dyn Transport<T>> = ChannelCore::new(name.to_string());
+    ends_of(core)
+}
+
+/// Create a bounded buffered channel (see
+/// [`crate::csp::transport::BufferedCore`]).
+pub fn buffered_channel<T: Send + 'static>(name: &str, capacity: usize) -> (Out<T>, In<T>) {
+    let core: Arc<dyn Transport<T>> =
+        super::transport::BufferedCore::new(name.to_string(), capacity);
+    ends_of(core)
+}
+
+/// Create `n` rendezvous channels at once (a JCSP "channel list").
+pub fn channel_list<T: Send + 'static>(n: usize, name: &str) -> (Vec<Out<T>>, Vec<In<T>>) {
     let mut outs = Vec::with_capacity(n);
     let mut ins = Vec::with_capacity(n);
     for i in 0..n {
@@ -288,9 +440,26 @@ pub fn channel_list<T>(n: usize, name: &str) -> (Vec<Out<T>>, Vec<In<T>>) {
     (outs, ins)
 }
 
+/// Create `n` buffered channels at once.
+pub fn buffered_channel_list<T: Send + 'static>(
+    n: usize,
+    name: &str,
+    capacity: usize,
+) -> (Vec<Out<T>>, Vec<In<T>>) {
+    let mut outs = Vec::with_capacity(n);
+    let mut ins = Vec::with_capacity(n);
+    for i in 0..n {
+        let (o, r) = buffered_channel(&format!("{name}[{i}]"), capacity);
+        outs.push(o);
+        ins.push(r);
+    }
+    (outs, ins)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::Ordering;
     use std::thread;
     use std::time::Duration;
 
@@ -326,12 +495,17 @@ mod tests {
         for i in 0..4 {
             let tx = tx.clone();
             handles.push(thread::spawn(move || {
-                // Stagger starts so the queue order is deterministic.
-                thread::sleep(Duration::from_millis(20 * i as u64 + 10));
+                // Sequence arrivals deterministically: writer i enqueues
+                // only once i values are already pending.
+                while tx.stats().pending != i {
+                    thread::yield_now();
+                }
                 tx.write(i).unwrap();
             }));
         }
-        thread::sleep(Duration::from_millis(120));
+        while tx.stats().pending != 4 {
+            thread::yield_now();
+        }
         let got: Vec<usize> = (0..4).map(|_| rx.read().unwrap()).collect();
         assert_eq!(got, vec![0, 1, 2, 3]);
         for h in handles {
@@ -428,6 +602,33 @@ mod tests {
     }
 
     #[test]
+    fn read_batch_takes_all_pending_in_order() {
+        let (tx, rx) = channel::<usize>();
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                // Writer i enqueues only once i values are pending, so
+                // arrival order is deterministic without sleeps.
+                while tx.stats().pending != i {
+                    thread::yield_now();
+                }
+                tx.write(i).unwrap();
+            }));
+        }
+        while tx.stats().pending != 4 {
+            thread::yield_now();
+        }
+        // All four rendezvous complete in one batched take.
+        assert_eq!(rx.read_batch(16).unwrap(), vec![0, 1, 2, 3]);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(tx.stats().taken, 0);
+        assert_eq!(tx.stats().blocked_writers, 0);
+    }
+
+    #[test]
     fn channel_list_creates_n() {
         let (outs, ins) = channel_list::<u8>(5, "w");
         assert_eq!(outs.len(), 5);
@@ -477,5 +678,43 @@ mod tests {
         all.sort_unstable();
         assert_eq!(all.len(), W * PER as usize);
         assert_eq!(all, (0..(W as u64 * PER)).collect::<Vec<_>>());
+        // After everything drained, no bookkeeping residue remains.
+        let s = tx.stats();
+        assert_eq!((s.pending, s.taken, s.blocked_writers), (0, 0, 0));
+    }
+
+    #[test]
+    fn dead_alt_registrations_are_purged() {
+        let (_tx, rx) = channel::<u32>();
+        // Register many short-lived Alt signals that are dropped without
+        // ever being fired — the channel must not accumulate them.
+        for _ in 0..1000 {
+            let sig = AltSignal::new();
+            assert!(!rx.register_alt(&sig));
+            drop(sig);
+        }
+        // One live registration (the last) plus at most the final dead
+        // one that purging hasn't seen yet.
+        assert!(rx.stats().alt_waiters <= 2, "{}", rx.stats().alt_waiters);
+    }
+
+    #[test]
+    fn bookkeeping_empty_after_heavy_traffic() {
+        let (tx, rx) = channel::<u64>();
+        for round in 0..50u64 {
+            let tx = tx.clone();
+            let h = thread::spawn(move || {
+                for i in 0..20 {
+                    tx.write(round * 20 + i).unwrap();
+                }
+            });
+            let mut got = 0;
+            while got < 20 {
+                got += rx.read_batch(7).unwrap().len();
+            }
+            h.join().unwrap();
+        }
+        let s = rx.stats();
+        assert_eq!((s.pending, s.taken, s.blocked_writers), (0, 0, 0));
     }
 }

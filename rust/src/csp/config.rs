@@ -1,0 +1,163 @@
+//! Runtime configuration: which transport channels run over and which
+//! executor runs the processes.
+//!
+//! Every network builder (patterns, functionals, the declarative DSL)
+//! accepts a `RuntimeConfig`; the default reproduces the paper exactly
+//! (rendezvous channels, thread-per-process). Throughput deployments
+//! flip the transport to `Buffered` and/or the executor to `Pooled`
+//! without touching any process code — the point of the substrate
+//! refactor is that future scaling work (sharding, async backends)
+//! plugs in here instead of rewriting the builders again.
+
+use super::channel::{buffered_channel, buffered_channel_list, channel_list, named_channel, In, Out};
+use super::error::Result;
+use super::executor::{Executor, ExecutorKind, PooledExecutor, ThreadPerProcess};
+use super::process::CSProcess;
+use super::transport::TransportKind;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RuntimeConfig {
+    pub transport: TransportKind,
+    /// Buffer capacity for `Buffered` channels (ignored by rendezvous).
+    pub capacity: usize,
+    pub executor: ExecutorKind,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self {
+            transport: TransportKind::Rendezvous,
+            capacity: 64,
+            executor: ExecutorKind::ThreadPerProcess,
+        }
+    }
+}
+
+impl RuntimeConfig {
+    /// The paper's semantics: rendezvous + thread-per-process.
+    pub fn rendezvous() -> Self {
+        Self::default()
+    }
+
+    /// Buffered channels of the given capacity (thread-per-process).
+    pub fn buffered(capacity: usize) -> Self {
+        Self::default().with_transport(TransportKind::Buffered).with_capacity(capacity)
+    }
+
+    pub fn with_transport(mut self, t: TransportKind) -> Self {
+        self.transport = t;
+        self
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity.max(1);
+        self
+    }
+
+    pub fn with_executor(mut self, e: ExecutorKind) -> Self {
+        self.executor = e;
+        self
+    }
+
+    /// Shorthand for a pooled executor of `threads` workers.
+    pub fn with_pool(self, threads: usize) -> Self {
+        self.with_executor(ExecutorKind::Pooled(threads))
+    }
+
+    /// Create one channel on the configured transport.
+    pub fn channel<T: Send + 'static>(&self, name: &str) -> (Out<T>, In<T>) {
+        match self.transport {
+            TransportKind::Rendezvous => named_channel(name),
+            TransportKind::Buffered => buffered_channel(name, self.capacity),
+        }
+    }
+
+    /// Create a channel list on the configured transport.
+    pub fn channel_list<T: Send + 'static>(
+        &self,
+        n: usize,
+        name: &str,
+    ) -> (Vec<Out<T>>, Vec<In<T>>) {
+        match self.transport {
+            TransportKind::Rendezvous => channel_list(n, name),
+            TransportKind::Buffered => buffered_channel_list(n, name, self.capacity),
+        }
+    }
+
+    /// The configured executor.
+    pub fn executor(&self) -> Box<dyn Executor> {
+        match self.executor {
+            ExecutorKind::ThreadPerProcess => Box::new(ThreadPerProcess::default()),
+            ExecutorKind::Pooled(threads) => Box::new(PooledExecutor::new(threads)),
+        }
+    }
+
+    /// Run a process vector on the configured executor.
+    pub fn run_named(&self, label: &str, procs: Vec<Box<dyn CSProcess>>) -> Result<()> {
+        self.executor().run_named(label, procs)
+    }
+
+    /// How many messages a process should take per channel lock: 1 on
+    /// rendezvous (each take completes a handshake the partner is
+    /// blocked on — batching buys nothing and would only skew farm load
+    /// balance), a modest batch on buffered edges.
+    pub fn io_batch(&self) -> usize {
+        match self.transport {
+            TransportKind::Rendezvous => 1,
+            TransportKind::Buffered => self.capacity.min(16).max(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_semantics() {
+        let c = RuntimeConfig::default();
+        assert_eq!(c.transport, TransportKind::Rendezvous);
+        assert_eq!(c.executor, ExecutorKind::ThreadPerProcess);
+        assert_eq!(c.io_batch(), 1);
+        let (tx, _rx) = c.channel::<u32>("x");
+        assert_eq!(tx.transport_kind(), TransportKind::Rendezvous);
+    }
+
+    #[test]
+    fn buffered_config_builds_buffered_channels() {
+        let c = RuntimeConfig::buffered(8).with_pool(2);
+        let (tx, rx) = c.channel::<u32>("x");
+        assert_eq!(tx.transport_kind(), TransportKind::Buffered);
+        assert_eq!(tx.capacity(), Some(8));
+        tx.write(3).unwrap(); // completes without a reader
+        assert_eq!(rx.read().unwrap(), 3);
+        assert!(c.io_batch() > 1);
+        let (outs, ins) = c.channel_list::<u32>(3, "l");
+        assert_eq!(outs.len(), 3);
+        assert_eq!(ins[2].capacity(), Some(8));
+    }
+
+    #[test]
+    fn config_runs_procs_on_selected_executor() {
+        use crate::csp::process::ProcessFn;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        for cfg in [
+            RuntimeConfig::default(),
+            RuntimeConfig::buffered(4).with_pool(2),
+        ] {
+            let count = Arc::new(AtomicUsize::new(0));
+            let procs: Vec<Box<dyn CSProcess>> = (0..8)
+                .map(|_| {
+                    let c = count.clone();
+                    ProcessFn::boxed("inc", move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                        Ok(())
+                    })
+                })
+                .collect();
+            cfg.run_named("t", procs).unwrap();
+            assert_eq!(count.load(Ordering::SeqCst), 8);
+        }
+    }
+}

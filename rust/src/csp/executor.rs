@@ -1,0 +1,331 @@
+//! Pluggable process executors.
+//!
+//! JCSP's model — and this library's default — is **one OS thread per
+//! process**: "an idle process consumes no processing resource
+//! whatsoever" because blocked threads are descheduled. That is the
+//! right default for rendezvous networks (any process may need to be
+//! runnable for its partner to progress) but wasteful for farms that
+//! spin up hundreds of short-lived workers: thread creation dominates
+//! the small work items the paper's §6.6 grain-size analysis worries
+//! about.
+//!
+//! [`Executor`] abstracts the mapping of processes onto threads:
+//!
+//! * [`ThreadPerProcess`] — the JCSP model, semantics-preserving
+//!   default; always safe.
+//! * [`PooledExecutor`] — multiplexes the process list onto a fixed
+//!   pool; each pooled thread runs processes **to completion** in list
+//!   order. Safe whenever at most `threads` processes need to be
+//!   *simultaneously* blocked on one another — e.g. many independent
+//!   short-lived workers, or a pipeline whose edges are buffered
+//!   transports with capacity ≥ the stream length (then each stage can
+//!   run to completion before the next starts). A pool smaller than a
+//!   mutually-blocking rendezvous clique will deadlock, exactly as
+//!   JCSP documents for its own pooled parallel; pick
+//!   [`ThreadPerProcess`] when in doubt.
+//!
+//! Both executors report errors with the same policy as the original
+//! `run_parallel`: the first *root-cause* error wins over the
+//! `Poisoned` cascade it triggered in the neighbours.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
+
+use super::error::{GppError, Result};
+use super::process::CSProcess;
+
+/// Strategy for running a set of processes in parallel.
+pub trait Executor: Send + Sync {
+    /// Run every process; wait for all to finish; summarise errors.
+    fn run_named(&self, label: &str, procs: Vec<Box<dyn CSProcess>>) -> Result<()>;
+
+    fn run(&self, procs: Vec<Box<dyn CSProcess>>) -> Result<()> {
+        self.run_named("par", procs)
+    }
+}
+
+/// Which executor a [`super::RuntimeConfig`] selects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// One OS thread per process (JCSP model; always safe).
+    ThreadPerProcess,
+    /// Fixed pool of `threads` workers running processes to completion.
+    Pooled(usize),
+}
+
+impl ExecutorKind {
+    /// Parse a CLI / DSL spelling: `threads`, `pooled` or `pooled:N`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "threads" | "thread-per-process" => Some(ExecutorKind::ThreadPerProcess),
+            "pooled" => Some(ExecutorKind::Pooled(default_pool_size())),
+            _ => {
+                let n = s.strip_prefix("pooled:")?.parse().ok()?;
+                Some(ExecutorKind::Pooled(n))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ExecutorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecutorKind::ThreadPerProcess => write!(f, "threads"),
+            ExecutorKind::Pooled(n) => write!(f, "pooled:{n}"),
+        }
+    }
+}
+
+/// Default pool width: the machine's logical parallelism.
+pub fn default_pool_size() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Outcome of one process, normalised across spawn/join and catch_unwind.
+type Outcome = std::result::Result<Result<()>, String>;
+
+fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
+    panic
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "process panicked".to_string())
+}
+
+/// The original `run_parallel` error policy: return the first
+/// *root-cause* error (user code, cast, method lookup, I/O, panic …) if
+/// any process produced one; only if every failure is a `Poisoned`
+/// cascade do we return `Poisoned` itself.
+fn summarise(outcomes: Vec<Outcome>) -> Result<()> {
+    let mut root_cause: Option<GppError> = None;
+    let mut poisoned = false;
+    for o in outcomes {
+        match o {
+            Ok(Ok(())) => {}
+            Ok(Err(GppError::Poisoned)) => poisoned = true,
+            Ok(Err(e)) => {
+                if root_cause.is_none() {
+                    root_cause = Some(e);
+                }
+            }
+            Err(msg) => {
+                if root_cause.is_none() {
+                    root_cause = Some(GppError::Other(format!("panic: {msg}")));
+                }
+            }
+        }
+    }
+    match root_cause {
+        Some(e) => Err(e),
+        None if poisoned => Err(GppError::Poisoned),
+        None => Ok(()),
+    }
+}
+
+/// One OS thread per process — the JCSP `PAR`.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadPerProcess {
+    /// GPP networks are many-process; modest stacks keep a 1000-worker
+    /// farm from exhausting address space on small machines. User
+    /// compute owns no deep recursion.
+    pub stack_size: usize,
+}
+
+impl Default for ThreadPerProcess {
+    fn default() -> Self {
+        Self { stack_size: 512 * 1024 }
+    }
+}
+
+impl Executor for ThreadPerProcess {
+    fn run_named(&self, label: &str, procs: Vec<Box<dyn CSProcess>>) -> Result<()> {
+        let mut handles = Vec::with_capacity(procs.len());
+        for (i, mut p) in procs.into_iter().enumerate() {
+            let tname = format!("{label}/{}-{i}", p.name());
+            let h = std::thread::Builder::new()
+                .name(tname.clone())
+                .stack_size(self.stack_size)
+                .spawn(move || p.run())
+                .map_err(|e| GppError::Other(format!("spawn {tname}: {e}")))?;
+            handles.push(h);
+        }
+        let outcomes: Vec<Outcome> = handles
+            .into_iter()
+            .map(|h| h.join().map_err(panic_message))
+            .collect();
+        summarise(outcomes)
+    }
+}
+
+/// Fixed pool of worker threads; each runs queued processes to
+/// completion in list order. See the module docs for when this is safe.
+#[derive(Clone, Copy, Debug)]
+pub struct PooledExecutor {
+    pub threads: usize,
+    pub stack_size: usize,
+}
+
+impl PooledExecutor {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+            stack_size: 512 * 1024,
+        }
+    }
+}
+
+impl Default for PooledExecutor {
+    fn default() -> Self {
+        Self::new(default_pool_size())
+    }
+}
+
+impl Executor for PooledExecutor {
+    fn run_named(&self, label: &str, procs: Vec<Box<dyn CSProcess>>) -> Result<()> {
+        let n_procs = procs.len();
+        let queue: Arc<Mutex<VecDeque<Box<dyn CSProcess>>>> =
+            Arc::new(Mutex::new(procs.into()));
+        let workers = self.threads.min(n_procs).max(1);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let queue = queue.clone();
+            let tname = format!("{label}/pool-{w}");
+            let h = std::thread::Builder::new()
+                .name(tname.clone())
+                .stack_size(self.stack_size)
+                .spawn(move || {
+                    let mut outcomes: Vec<Outcome> = Vec::new();
+                    loop {
+                        let next = queue.lock().unwrap().pop_front();
+                        match next {
+                            Some(mut p) => {
+                                let r = catch_unwind(AssertUnwindSafe(|| p.run()))
+                                    .map_err(panic_message);
+                                outcomes.push(r);
+                            }
+                            None => return outcomes,
+                        }
+                    }
+                })
+                .map_err(|e| GppError::Other(format!("spawn {tname}: {e}")))?;
+            handles.push(h);
+        }
+        let mut outcomes: Vec<Outcome> = Vec::with_capacity(n_procs);
+        for h in handles {
+            match h.join() {
+                Ok(v) => outcomes.extend(v),
+                // A pool worker itself panicking (outside catch_unwind)
+                // is not expected; record it like a process panic.
+                Err(p) => outcomes.push(Err(panic_message(p))),
+            }
+        }
+        summarise(outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::channel::buffered_channel;
+    use crate::csp::process::ProcessFn;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn counting_procs(n: usize, count: &Arc<AtomicUsize>) -> Vec<Box<dyn CSProcess>> {
+        (0..n)
+            .map(|_| {
+                let c = count.clone();
+                ProcessFn::boxed("inc", move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pooled_runs_every_process() {
+        let count = Arc::new(AtomicUsize::new(0));
+        PooledExecutor::new(3)
+            .run_named("t", counting_procs(64, &count))
+            .unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn pooled_with_more_threads_than_procs() {
+        let count = Arc::new(AtomicUsize::new(0));
+        PooledExecutor::new(64)
+            .run_named("t", counting_procs(3, &count))
+            .unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn pooled_captures_panic_as_root_cause() {
+        let ok = ProcessFn::boxed("fine", || Ok(()));
+        let boom = ProcessFn::boxed("boom", || panic!("kapool {}", 7));
+        let err = PooledExecutor::new(2)
+            .run_named("t", vec![ok, boom])
+            .unwrap_err();
+        assert!(err.to_string().contains("kapool"), "{err}");
+    }
+
+    #[test]
+    fn pooled_prefers_root_cause_over_poison() {
+        let (tx, rx) = buffered_channel::<u64>("t", 1);
+        let failing = ProcessFn::boxed("fail", move || {
+            tx.poison();
+            Err(GppError::UserCode { code: -5, context: "t".into() })
+        });
+        let victim = ProcessFn::boxed("victim", move || rx.read().map(|_| ()));
+        let err = PooledExecutor::new(2)
+            .run_named("t", vec![failing, victim])
+            .unwrap_err();
+        assert_eq!(err.user_code(), Some(-5));
+    }
+
+    #[test]
+    fn single_thread_pool_runs_pipeline_over_buffered_edges() {
+        // emit → relay → sink with capacity ≥ stream length: each stage
+        // runs to completion before the next starts, so ONE pool thread
+        // suffices — the thread-reuse win the pooled executor exists for.
+        let (tx, rx) = buffered_channel::<u64>("a", 64);
+        let (tx2, rx2) = buffered_channel::<u64>("b", 64);
+        let emit = ProcessFn::boxed("emit", move || {
+            for i in 0..32 {
+                tx.write(i)?;
+            }
+            Ok(())
+        });
+        let relay = ProcessFn::boxed("relay", move || {
+            for _ in 0..32 {
+                tx2.write(rx.read()? * 2)?;
+            }
+            Ok(())
+        });
+        let sum = Arc::new(AtomicUsize::new(0));
+        let s2 = sum.clone();
+        let sink = ProcessFn::boxed("sink", move || {
+            for _ in 0..32 {
+                s2.fetch_add(rx2.read()? as usize, Ordering::SeqCst);
+            }
+            Ok(())
+        });
+        PooledExecutor::new(1)
+            .run_named("t", vec![emit, relay, sink])
+            .unwrap();
+        assert_eq!(sum.load(Ordering::SeqCst), (0..32).map(|i| i * 2).sum());
+    }
+
+    #[test]
+    fn executor_kind_parse() {
+        assert_eq!(ExecutorKind::parse("threads"), Some(ExecutorKind::ThreadPerProcess));
+        assert_eq!(ExecutorKind::parse("pooled:8"), Some(ExecutorKind::Pooled(8)));
+        assert!(matches!(ExecutorKind::parse("pooled"), Some(ExecutorKind::Pooled(_))));
+        assert_eq!(ExecutorKind::parse("x"), None);
+        assert_eq!(ExecutorKind::Pooled(4).to_string(), "pooled:4");
+    }
+}

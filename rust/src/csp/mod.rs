@@ -4,28 +4,38 @@
 //! Semantics follow Hoare CSP as implemented by occam/JCSP and described
 //! in §2.1 of the paper:
 //!
-//! * channels are **unidirectional, unbuffered and synchronised** — the
-//!   first party to arrive blocks, idle, until its partner arrives;
+//! * channels are **unidirectional, unbuffered and synchronised** by
+//!   default — the first party to arrive blocks, idle, until its partner
+//!   arrives; a [`RuntimeConfig`] can swap the edge onto a bounded
+//!   buffered [`transport::Transport`] where throughput matters;
 //! * processes **share no data**; object references move across channels
 //!   (Rust's ownership system *enforces* the paper's rule that a sender
 //!   never touches a sent object again, which JCSP leaves to discipline);
 //! * `any` channel ends may be shared by several readers/writers; write
-//!   requests queue FIFO;
+//!   requests queue FIFO — on every transport;
 //! * [`alt::Alt`] provides fair non-deterministic choice over inputs
 //!   (JCSP `fairSelect`);
 //! * networks shut down either cleanly via the `UniversalTerminator`
 //!   protocol (see [`crate::data`]) or abruptly via channel **poison**
 //!   when user code reports an error — the paper's "print message and
-//!   terminate the network" behaviour.
+//!   terminate the network" behaviour;
+//! * process-to-thread mapping is an [`executor::Executor`]: one OS
+//!   thread per process (default) or a fixed pool.
 
 pub mod error;
+pub mod transport;
 pub mod channel;
 pub mod alt;
 pub mod barrier;
+pub mod executor;
 pub mod process;
+pub mod config;
 
 pub use alt::Alt;
 pub use barrier::Barrier;
-pub use channel::{channel, In, Out};
+pub use channel::{buffered_channel, channel, In, Out};
+pub use config::RuntimeConfig;
 pub use error::{GppError, Result};
+pub use executor::{Executor, ExecutorKind, PooledExecutor, ThreadPerProcess};
 pub use process::{run_parallel, run_parallel_named, CSProcess, ProcessFn};
+pub use transport::{Transport, TransportKind, TransportStats};

@@ -1,14 +1,17 @@
 //! The process abstraction and parallel execution (the groovyJCSP `PAR`).
 //!
-//! A GPP network is a set of [`CSProcess`]es run by [`run_parallel`]:
-//! each gets its own OS thread (the JCSP model — "an idle process
-//! consumes no processing resource whatsoever" because blocked threads
-//! are descheduled). `run_parallel` joins all of them and reports the
+//! A GPP network is a set of [`CSProcess`]es run by an
+//! [`super::executor::Executor`]. [`run_parallel`] keeps the historical
+//! entry point: the thread-per-process model (the JCSP model — "an idle
+//! process consumes no processing resource whatsoever" because blocked
+//! threads are descheduled). It joins all processes and reports the
 //! most informative error: if user code failed somewhere, that error is
 //! returned rather than the cascade of `Poisoned` errors it triggered in
-//! the neighbours.
+//! the neighbours. Pass a [`super::RuntimeConfig`] to builders to run
+//! the same networks on the pooled executor instead.
 
 use super::error::{GppError, Result};
+use super::executor::{Executor, ThreadPerProcess};
 
 /// A communicating sequential process: the `run()` method defines its
 /// entire behaviour (paper, Listing 9: "The interface CSProcess requires
@@ -61,7 +64,8 @@ impl CSProcess for ProcessFn {
     }
 }
 
-/// Run a set of processes in parallel; wait for all to finish.
+/// Run a set of processes in parallel, one thread each; wait for all to
+/// finish.
 ///
 /// Error policy: return the first *root-cause* error (user code, cast,
 /// method lookup, I/O …) if any process produced one; only if every
@@ -71,48 +75,7 @@ pub fn run_parallel(procs: Vec<Box<dyn CSProcess>>) -> Result<()> {
 }
 
 pub fn run_parallel_named(label: &str, procs: Vec<Box<dyn CSProcess>>) -> Result<()> {
-    let mut handles = Vec::with_capacity(procs.len());
-    for (i, mut p) in procs.into_iter().enumerate() {
-        let tname = format!("{label}/{}-{i}", p.name());
-        let h = std::thread::Builder::new()
-            .name(tname.clone())
-            // GPP networks are many-process; keep stacks modest so a
-            // 1000-worker farm does not exhaust address space on small
-            // machines. User compute owns no deep recursion.
-            .stack_size(512 * 1024)
-            .spawn(move || p.run())
-            .map_err(|e| GppError::Other(format!("spawn {tname}: {e}")))?;
-        handles.push(h);
-    }
-
-    let mut root_cause: Option<GppError> = None;
-    let mut poisoned = false;
-    for h in handles {
-        match h.join() {
-            Ok(Ok(())) => {}
-            Ok(Err(GppError::Poisoned)) => poisoned = true,
-            Ok(Err(e)) => {
-                if root_cause.is_none() {
-                    root_cause = Some(e);
-                }
-            }
-            Err(panic) => {
-                let msg = panic
-                    .downcast_ref::<&str>()
-                    .map(|s| s.to_string())
-                    .or_else(|| panic.downcast_ref::<String>().cloned())
-                    .unwrap_or_else(|| "process panicked".to_string());
-                if root_cause.is_none() {
-                    root_cause = Some(GppError::Other(format!("panic: {msg}")));
-                }
-            }
-        }
-    }
-    match root_cause {
-        Some(e) => Err(e),
-        None if poisoned => Err(GppError::Poisoned),
-        None => Ok(()),
-    }
+    ThreadPerProcess::default().run_named(label, procs)
 }
 
 #[cfg(test)]

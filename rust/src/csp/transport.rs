@@ -1,0 +1,578 @@
+//! Pluggable channel transports.
+//!
+//! The paper's channels are synchronised rendezvous (§2.1) — the right
+//! *default*, because every CSPm model in [`crate::verify`] is stated
+//! over rendezvous events. But a rendezvous costs two context switches
+//! per message, which caps farm throughput well below the hardware. This
+//! module splits the *semantics the network sees* (`In`/`Out` ends,
+//! FIFO writer ordering, poison, Alt readiness) from the *transport*
+//! underneath:
+//!
+//! * [`crate::csp::channel::ChannelCore`] — the verified rendezvous
+//!   transport (default; writes block until their value is taken);
+//! * [`BufferedCore`] — a bounded buffer for throughput edges: writes
+//!   complete as soon as space exists, readers can take a whole batch
+//!   under one lock acquisition, and blocked writers are served in
+//!   strict ticket FIFO so the paper's write-ordering guarantee (§4.5.3)
+//!   holds identically.
+//!
+//! Both transports share the poison protocol (every blocked or future
+//! operation fails once poisoned, pending values drain first) and the
+//! Alt signalling protocol, so `Alt`, connectors and the termination
+//! logic work unchanged over either.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+
+use super::alt::AltSignal;
+use super::error::{GppError, Result};
+
+static NEXT_CHAN_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Fresh channel id (shared across all transports so logs stay unique).
+pub(crate) fn next_chan_id() -> u64 {
+    NEXT_CHAN_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Which transport a channel runs over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Unbuffered synchronised rendezvous (the paper's semantics).
+    Rendezvous,
+    /// Bounded FIFO buffer with batched take.
+    Buffered,
+}
+
+impl TransportKind {
+    /// Parse a CLI / DSL spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rendezvous" | "sync" => Some(TransportKind::Rendezvous),
+            "buffered" | "buffer" => Some(TransportKind::Buffered),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportKind::Rendezvous => write!(f, "rendezvous"),
+            TransportKind::Buffered => write!(f, "buffered"),
+        }
+    }
+}
+
+/// Alt-registration store shared by every transport: registering
+/// purges tokens whose Alt has moved on (selected another channel and
+/// dropped its signal) so idle channels don't grow; firing drains all.
+pub(crate) struct AltWaiters(Vec<Weak<AltSignal>>);
+
+impl AltWaiters {
+    pub(crate) fn new() -> Self {
+        AltWaiters(Vec::new())
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub(crate) fn register(&mut self, sig: &Arc<AltSignal>) {
+        self.0.retain(|w| w.strong_count() > 0);
+        self.0.push(Arc::downgrade(sig));
+    }
+
+    pub(crate) fn fire_all(&mut self) {
+        if self.0.is_empty() {
+            return;
+        }
+        for w in std::mem::take(&mut self.0) {
+            if let Some(sig) = w.upgrade() {
+                sig.fire();
+            }
+        }
+    }
+}
+
+/// Occupancy counters for tests and leak diagnostics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Values offered/queued but not yet read.
+    pub pending: usize,
+    /// Rendezvous bookkeeping entries awaiting their writer (always 0
+    /// for buffered transports).
+    pub taken: usize,
+    /// Registered Alt wakeup tokens (dead ones are purged on register).
+    pub alt_waiters: usize,
+    /// Writers currently blocked in `write`.
+    pub blocked_writers: usize,
+}
+
+/// What `In`/`Out` dispatch to. One implementation per transport.
+///
+/// Contract every implementation must uphold (the property tests in
+/// `rust/tests/transport_props.rs` check it for both):
+///
+/// * values from one writer arrive in the order written, and values
+///   from writers blocked concurrently are served FIFO by arrival;
+/// * after `poison`, blocked and future operations fail with
+///   [`GppError::Poisoned`] — but values already offered/queued drain
+///   to readers first (so terminators in flight still arrive);
+/// * `register_alt` either reports the channel ready or parks the
+///   signal, and every later write/poison fires parked signals.
+pub trait Transport<T>: Send + Sync {
+    /// Blocking write. Rendezvous: returns when a reader took the value.
+    /// Buffered: returns when the value is queued (blocking on a full
+    /// buffer, FIFO among blocked writers).
+    fn write(&self, value: T) -> Result<()>;
+
+    /// Write many values. Buffered transports queue the whole batch
+    /// under one ticket so batches from concurrent writers do not
+    /// interleave; the default just loops (rendezvous must handshake
+    /// per value anyway).
+    fn write_batch(&self, values: Vec<T>) -> Result<()> {
+        for v in values {
+            self.write(v)?;
+        }
+        Ok(())
+    }
+
+    /// Blocking read of the oldest value.
+    fn read(&self) -> Result<T>;
+
+    /// Non-blocking read (Alt internals, draining).
+    fn try_read(&self) -> Result<Option<T>>;
+
+    /// Blocking read of up to `max` values under one lock acquisition:
+    /// waits for the first value, then drains whatever else is already
+    /// queued (never blocks for the 2nd..`max`th).
+    fn read_batch(&self, max: usize) -> Result<Vec<T>>;
+
+    /// Like [`Transport::read_batch`] but only takes queued values while
+    /// `keep` approves them, leaving the first rejected value queued.
+    /// Blocks until at least one value is queued; an **empty** result
+    /// therefore means the head value was rejected (read it with
+    /// [`Transport::read`]). Lets processes batch data messages without
+    /// ever swallowing a terminator meant for a sibling reader.
+    fn read_batch_while(&self, max: usize, keep: &dyn Fn(&T) -> bool) -> Result<Vec<T>>;
+
+    /// True if a read would not block (a value waits, or poison).
+    fn ready(&self) -> bool;
+
+    /// Register an Alt to be signalled when this channel becomes ready.
+    /// Returns `true` if the channel is already ready (not registered).
+    fn register_alt(&self, sig: &Arc<AltSignal>) -> bool;
+
+    /// Poison: all blocked and future operations fail.
+    fn poison(&self);
+
+    fn is_poisoned(&self) -> bool;
+
+    fn id(&self) -> u64;
+
+    fn name(&self) -> &str;
+
+    fn kind(&self) -> TransportKind;
+
+    /// Buffer capacity, if the transport has one.
+    fn capacity(&self) -> Option<usize> {
+        None
+    }
+
+    /// Occupancy counters (tests, leak checks).
+    fn stats(&self) -> TransportStats;
+}
+
+struct BufInner<T> {
+    queue: VecDeque<T>,
+    /// Ticket dispenser for writer FIFO fairness: a writer blocked on a
+    /// full buffer holds a ticket; tickets are served strictly in order,
+    /// so the §4.5.3 "reads are processed in the order the writes
+    /// occurred" guarantee survives buffering.
+    next_ticket: u64,
+    serving: u64,
+    /// Tickets abandoned by writers that exited with `Poisoned` (the
+    /// poison path never advances `serving`, so without this count
+    /// `stats().blocked_writers` would report phantom writers forever).
+    aborted: u64,
+    poisoned: bool,
+    alt_waiters: AltWaiters,
+}
+
+/// Bounded-buffer transport (see module docs).
+pub struct BufferedCore<T> {
+    id: u64,
+    name: String,
+    capacity: usize,
+    inner: Mutex<BufInner<T>>,
+    /// Readers wait here for a value to arrive.
+    read_cond: Condvar,
+    /// Writers wait here for space (and for their ticket to come up).
+    write_cond: Condvar,
+}
+
+impl<T> BufferedCore<T> {
+    pub fn new(name: String, capacity: usize) -> Arc<Self> {
+        Arc::new(Self {
+            id: next_chan_id(),
+            name,
+            capacity: capacity.max(1),
+            inner: Mutex::new(BufInner {
+                queue: VecDeque::new(),
+                next_ticket: 0,
+                serving: 0,
+                aborted: 0,
+                poisoned: false,
+                alt_waiters: AltWaiters::new(),
+            }),
+            read_cond: Condvar::new(),
+            write_cond: Condvar::new(),
+        })
+    }
+
+}
+
+impl<T: Send> Transport<T> for BufferedCore<T> {
+    fn write(&self, value: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned {
+            return Err(GppError::Poisoned);
+        }
+        let ticket = g.next_ticket;
+        g.next_ticket += 1;
+        loop {
+            if g.poisoned {
+                // Do not advance `serving`: every writer queued behind us
+                // observes the poison and fails the same way.
+                g.aborted += 1;
+                self.write_cond.notify_all();
+                return Err(GppError::Poisoned);
+            }
+            if g.serving == ticket && g.queue.len() < self.capacity {
+                g.queue.push_back(value);
+                g.serving += 1;
+                self.read_cond.notify_one();
+                // Wake the next ticket holder (tickets are writer-specific;
+                // woken non-holders re-sleep).
+                self.write_cond.notify_all();
+                g.alt_waiters.fire_all();
+                return Ok(());
+            }
+            g = self.write_cond.wait(g).unwrap();
+        }
+    }
+
+    fn write_batch(&self, values: Vec<T>) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned {
+            return Err(GppError::Poisoned);
+        }
+        let ticket = g.next_ticket;
+        g.next_ticket += 1;
+        while g.serving != ticket {
+            if g.poisoned {
+                g.aborted += 1;
+                self.write_cond.notify_all();
+                return Err(GppError::Poisoned);
+            }
+            g = self.write_cond.wait(g).unwrap();
+        }
+        for v in values {
+            loop {
+                if g.poisoned {
+                    g.aborted += 1;
+                    self.write_cond.notify_all();
+                    return Err(GppError::Poisoned);
+                }
+                if g.queue.len() < self.capacity {
+                    g.queue.push_back(v);
+                    self.read_cond.notify_one();
+                    g.alt_waiters.fire_all();
+                    break;
+                }
+                g = self.write_cond.wait(g).unwrap();
+            }
+        }
+        g.serving += 1;
+        self.write_cond.notify_all();
+        Ok(())
+    }
+
+    fn read(&self) -> Result<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = g.queue.pop_front() {
+                self.write_cond.notify_all();
+                return Ok(v);
+            }
+            if g.poisoned {
+                return Err(GppError::Poisoned);
+            }
+            g = self.read_cond.wait(g).unwrap();
+        }
+    }
+
+    fn try_read(&self) -> Result<Option<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(v) = g.queue.pop_front() {
+            self.write_cond.notify_all();
+            return Ok(Some(v));
+        }
+        if g.poisoned {
+            return Err(GppError::Poisoned);
+        }
+        Ok(None)
+    }
+
+    fn read_batch(&self, max: usize) -> Result<Vec<T>> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.queue.is_empty() {
+                let n = g.queue.len().min(max);
+                let out: Vec<T> = g.queue.drain(..n).collect();
+                self.write_cond.notify_all();
+                return Ok(out);
+            }
+            if g.poisoned {
+                return Err(GppError::Poisoned);
+            }
+            g = self.read_cond.wait(g).unwrap();
+        }
+    }
+
+    fn read_batch_while(&self, max: usize, keep: &dyn Fn(&T) -> bool) -> Result<Vec<T>> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.queue.is_empty() {
+                let mut out = Vec::new();
+                while out.len() < max {
+                    let take = match g.queue.front() {
+                        Some(v) => keep(v),
+                        None => false,
+                    };
+                    if !take {
+                        break;
+                    }
+                    out.push(g.queue.pop_front().unwrap());
+                }
+                if !out.is_empty() {
+                    self.write_cond.notify_all();
+                }
+                return Ok(out);
+            }
+            if g.poisoned {
+                return Err(GppError::Poisoned);
+            }
+            g = self.read_cond.wait(g).unwrap();
+        }
+    }
+
+    fn ready(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        !g.queue.is_empty() || g.poisoned
+    }
+
+    fn register_alt(&self, sig: &Arc<AltSignal>) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if !g.queue.is_empty() || g.poisoned {
+            return true;
+        }
+        g.alt_waiters.register(sig);
+        false
+    }
+
+    fn poison(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned {
+            return;
+        }
+        g.poisoned = true;
+        self.read_cond.notify_all();
+        self.write_cond.notify_all();
+        g.alt_waiters.fire_all();
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.inner.lock().unwrap().poisoned
+    }
+
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Buffered
+    }
+
+    fn capacity(&self) -> Option<usize> {
+        Some(self.capacity)
+    }
+
+    fn stats(&self) -> TransportStats {
+        let g = self.inner.lock().unwrap();
+        TransportStats {
+            pending: g.queue.len(),
+            taken: 0,
+            alt_waiters: g.alt_waiters.len(),
+            blocked_writers: (g.next_ticket - g.serving - g.aborted) as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::channel::buffered_channel;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn writes_complete_without_reader_up_to_capacity() {
+        let (tx, rx) = buffered_channel::<u32>("b", 4);
+        for i in 0..4 {
+            tx.write(i).unwrap(); // must not block
+        }
+        for i in 0..4 {
+            assert_eq!(rx.read().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn writer_blocks_when_full_then_resumes() {
+        let (tx, rx) = buffered_channel::<u32>("b", 2);
+        tx.write(0).unwrap();
+        tx.write(1).unwrap();
+        let t2 = tx.clone();
+        let h = thread::spawn(move || t2.write(2));
+        thread::sleep(Duration::from_millis(30));
+        // Writer of 2 is blocked on the full buffer.
+        assert_eq!(tx.stats().blocked_writers, 1);
+        assert_eq!(rx.read().unwrap(), 0);
+        h.join().unwrap().unwrap();
+        assert_eq!(rx.read().unwrap(), 1);
+        assert_eq!(rx.read().unwrap(), 2);
+    }
+
+    #[test]
+    fn blocked_writers_served_fifo_by_ticket() {
+        let (tx, rx) = buffered_channel::<u64>("b", 1);
+        tx.write(100).unwrap(); // fill the buffer
+        let mut handles = Vec::new();
+        for i in 0..4u64 {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                // Writer i takes its ticket only after i writers are
+                // already blocked: arrival order is deterministic.
+                while tx.stats().blocked_writers != i as usize {
+                    thread::yield_now();
+                }
+                tx.write(i).unwrap();
+            }));
+        }
+        while tx.stats().blocked_writers != 4 {
+            thread::yield_now();
+        }
+        assert_eq!(rx.read().unwrap(), 100);
+        let got: Vec<u64> = (0..4).map(|_| rx.read().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn read_batch_drains_under_one_lock() {
+        let (tx, rx) = buffered_channel::<u32>("b", 8);
+        for i in 0..5 {
+            tx.write(i).unwrap();
+        }
+        assert_eq!(rx.read_batch(3).unwrap(), vec![0, 1, 2]);
+        assert_eq!(rx.read_batch(10).unwrap(), vec![3, 4]);
+    }
+
+    #[test]
+    fn write_batch_is_atomic_wrt_other_writers() {
+        let (tx, rx) = buffered_channel::<u32>("b", 2);
+        let t2 = tx.clone();
+        let h = thread::spawn(move || t2.write_batch((0..6).collect()));
+        // Wait until the batch writer holds the serving ticket; a late
+        // single write must then land after the whole batch.
+        while tx.stats().blocked_writers == 0 {
+            thread::yield_now();
+        }
+        let t3 = tx.clone();
+        let h2 = thread::spawn(move || t3.write(99));
+        let mut got = Vec::new();
+        for _ in 0..7 {
+            got.push(rx.read().unwrap());
+        }
+        h.join().unwrap().unwrap();
+        h2.join().unwrap().unwrap();
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5, 99]);
+    }
+
+    #[test]
+    fn poison_drains_queued_values_first() {
+        let (tx, rx) = buffered_channel::<u32>("b", 4);
+        tx.write(1).unwrap();
+        tx.write(2).unwrap();
+        tx.poison();
+        assert_eq!(rx.read().unwrap(), 1);
+        assert_eq!(rx.read().unwrap(), 2);
+        assert_eq!(rx.read(), Err(GppError::Poisoned));
+        assert_eq!(tx.write(3), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn poison_unblocks_full_buffer_writer() {
+        let (tx, rx) = buffered_channel::<u32>("b", 1);
+        tx.write(0).unwrap();
+        let t2 = tx.clone();
+        let h = thread::spawn(move || t2.write(1));
+        thread::sleep(Duration::from_millis(30));
+        rx.poison();
+        assert_eq!(h.join().unwrap(), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn poisoned_writer_does_not_leave_phantom_blocked_count() {
+        let (tx, rx) = buffered_channel::<u32>("b", 1);
+        tx.write(0).unwrap();
+        let t2 = tx.clone();
+        let h = thread::spawn(move || t2.write(1));
+        while tx.stats().blocked_writers == 0 {
+            thread::yield_now();
+        }
+        rx.poison();
+        assert_eq!(h.join().unwrap(), Err(GppError::Poisoned));
+        assert_eq!(tx.stats().blocked_writers, 0);
+        // A post-poison failed write must not distort the count either.
+        assert_eq!(tx.write(2), Err(GppError::Poisoned));
+        assert_eq!(tx.stats().blocked_writers, 0);
+    }
+
+    #[test]
+    fn transport_kind_reported() {
+        let (tx, _rx) = buffered_channel::<u32>("b", 3);
+        assert_eq!(tx.transport_kind(), TransportKind::Buffered);
+        assert_eq!(tx.capacity(), Some(3));
+        let (t2, _r2) = crate::csp::channel::channel::<u32>();
+        assert_eq!(t2.transport_kind(), TransportKind::Rendezvous);
+        assert_eq!(t2.capacity(), None);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        assert_eq!(TransportKind::parse("buffered"), Some(TransportKind::Buffered));
+        assert_eq!(TransportKind::parse("rendezvous"), Some(TransportKind::Rendezvous));
+        assert_eq!(TransportKind::parse("nope"), None);
+        assert_eq!(TransportKind::Buffered.to_string(), "buffered");
+    }
+}

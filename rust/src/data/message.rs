@@ -71,6 +71,24 @@ impl std::fmt::Debug for Message {
     }
 }
 
+impl crate::csp::channel::In<Message> {
+    /// Take up to `batch` **data** messages under one channel lock, or a
+    /// single message when the queue head is a terminator (or `batch`
+    /// is 1). Never batches a terminator: on a shared any-end the next
+    /// terminator may belong to a sibling reader, so the
+    /// `UniversalTerminator` counting protocol stays intact. Always
+    /// returns at least one message.
+    pub fn read_data_batch(&self, batch: usize) -> crate::csp::error::Result<Vec<Message>> {
+        if batch > 1 {
+            let data = self.read_batch_while(batch, &|m: &Message| !m.is_terminator())?;
+            if !data.is_empty() {
+                return Ok(data);
+            }
+        }
+        Ok(vec![self.read()?])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

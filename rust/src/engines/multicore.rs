@@ -16,6 +16,7 @@
 //! 4. repeat until converged / iteration budget; forward the object.
 
 use crate::csp::channel::{In, Out};
+use crate::csp::config::RuntimeConfig;
 use crate::csp::error::{GppError, Result};
 use crate::csp::process::CSProcess;
 use crate::data::message::Message;
@@ -39,6 +40,8 @@ pub struct MultiCoreEngine {
     pub iterations: usize,
     /// Forward the object once finished ("finalOut: true").
     pub final_out: bool,
+    /// Transport-aware I/O (batched input take on buffered edges).
+    pub config: RuntimeConfig,
     pub log: LogSink,
 }
 
@@ -62,6 +65,7 @@ impl MultiCoreEngine {
             partition_method: None,
             iterations: 10_000,
             final_out: true,
+            config: RuntimeConfig::default(),
             log: LogSink::off(),
         }
     }
@@ -88,6 +92,11 @@ impl MultiCoreEngine {
 
     pub fn with_log(mut self, log: LogSink) -> Self {
         self.log = log;
+        self
+    }
+
+    pub fn with_config(mut self, config: RuntimeConfig) -> Self {
+        self.config = config;
         self
     }
 
@@ -188,25 +197,31 @@ impl MultiCoreEngine {
 
     fn run_inner(&mut self) -> Result<()> {
         self.log.log("MultiCoreEngine", "engine", LogKind::Start, None);
+        let batch = self.config.io_batch();
         loop {
-            match self.input.read()? {
-                Message::Data(mut obj) => {
-                    self.log
-                        .log("MultiCoreEngine", "engine", LogKind::Input, Some(obj.as_ref()));
-                    {
-                        let state = (self.accessor)(obj.as_mut())?;
-                        self.solve(state)?;
-                    }
-                    if self.final_out {
+            // Batched take of queued objects on buffered edges; the
+            // terminator is always taken singly (shutdown protocol).
+            let msgs: Vec<Message> = self.input.read_data_batch(batch)?;
+            for msg in msgs {
+                match msg {
+                    Message::Data(mut obj) => {
                         self.log
-                            .log("MultiCoreEngine", "engine", LogKind::Output, Some(obj.as_ref()));
-                        self.output.write(Message::Data(obj))?;
+                            .log("MultiCoreEngine", "engine", LogKind::Input, Some(obj.as_ref()));
+                        {
+                            let state = (self.accessor)(obj.as_mut())?;
+                            self.solve(state)?;
+                        }
+                        if self.final_out {
+                            self.log
+                                .log("MultiCoreEngine", "engine", LogKind::Output, Some(obj.as_ref()));
+                            self.output.write(Message::Data(obj))?;
+                        }
                     }
-                }
-                Message::Terminator(t) => {
-                    self.log.log("MultiCoreEngine", "engine", LogKind::End, None);
-                    self.output.write(Message::Terminator(t))?;
-                    return Ok(());
+                    Message::Terminator(t) => {
+                        self.log.log("MultiCoreEngine", "engine", LogKind::End, None);
+                        self.output.write(Message::Terminator(t))?;
+                        return Ok(());
+                    }
                 }
             }
         }

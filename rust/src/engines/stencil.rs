@@ -13,6 +13,7 @@
 //! the downstream engine reads this engine's output.
 
 use crate::csp::channel::{In, Out};
+use crate::csp::config::RuntimeConfig;
 use crate::csp::error::Result;
 use crate::csp::process::CSProcess;
 use crate::data::message::Message;
@@ -32,6 +33,8 @@ pub struct StencilEngine {
     /// Flip the double buffer after the pass (default: swap) — the
     /// paper's `updateImageIndexMethod`.
     pub flip_buffers: bool,
+    /// Transport-aware I/O (batched input take on buffered edges).
+    pub config: RuntimeConfig,
     pub log: LogSink,
     pub tag: String,
 }
@@ -53,6 +56,7 @@ impl StencilEngine {
             operation,
             partition_method: None,
             flip_buffers: true,
+            config: RuntimeConfig::default(),
             log: LogSink::off(),
             tag: "StencilEngine".to_string(),
         }
@@ -75,6 +79,11 @@ impl StencilEngine {
 
     pub fn with_log(mut self, log: LogSink) -> Self {
         self.log = log;
+        self
+    }
+
+    pub fn with_config(mut self, config: RuntimeConfig) -> Self {
+        self.config = config;
         self
     }
 
@@ -139,21 +148,27 @@ impl StencilEngine {
 
     fn run_inner(&mut self) -> Result<()> {
         self.log.log(&self.tag, "stencil", LogKind::Start, None);
+        let batch = self.config.io_batch();
         loop {
-            match self.input.read()? {
-                Message::Data(mut obj) => {
-                    self.log.log(&self.tag, "stencil", LogKind::Input, Some(obj.as_ref()));
-                    {
-                        let state = (self.accessor)(obj.as_mut())?;
-                        self.pass(state)?;
+            // Batched take of queued images on buffered edges; the
+            // terminator is always taken singly (shutdown protocol).
+            let msgs: Vec<Message> = self.input.read_data_batch(batch)?;
+            for msg in msgs {
+                match msg {
+                    Message::Data(mut obj) => {
+                        self.log.log(&self.tag, "stencil", LogKind::Input, Some(obj.as_ref()));
+                        {
+                            let state = (self.accessor)(obj.as_mut())?;
+                            self.pass(state)?;
+                        }
+                        self.log.log(&self.tag, "stencil", LogKind::Output, Some(obj.as_ref()));
+                        self.output.write(Message::Data(obj))?;
                     }
-                    self.log.log(&self.tag, "stencil", LogKind::Output, Some(obj.as_ref()));
-                    self.output.write(Message::Data(obj))?;
-                }
-                Message::Terminator(t) => {
-                    self.log.log(&self.tag, "stencil", LogKind::End, None);
-                    self.output.write(Message::Terminator(t))?;
-                    return Ok(());
+                    Message::Terminator(t) => {
+                        self.log.log(&self.tag, "stencil", LogKind::End, None);
+                        self.output.write(Message::Terminator(t))?;
+                        return Ok(());
+                    }
                 }
             }
         }

@@ -5,14 +5,17 @@
 //! §9.2 (and CSPm Definition 7) prove the two shapes equivalent in
 //! behaviour; §6.1.2 measures their differing performance. Both builders
 //! here take a single upstream input end and a single downstream output
-//! end and expand to `stages × workers` Worker processes.
+//! end and expand to `stages × workers` Worker processes. The
+//! `build_with` variants synthesise the internal channels on a
+//! [`RuntimeConfig`]'s transport; `build` keeps the default rendezvous.
 
-use crate::csp::channel::{named_channel, In, Out};
+use crate::csp::channel::{In, Out};
+use crate::csp::config::RuntimeConfig;
 use crate::csp::process::CSProcess;
 use crate::data::message::Message;
 use crate::logging::LogSink;
-use crate::processes::spreaders::OneFanAny;
 use crate::processes::reducers::AnyFanOne;
+use crate::processes::spreaders::OneFanAny;
 
 use super::groups::{AnyGroupAny, GroupOptions};
 use super::pipelines::{OnePipelineOne, StageSpec};
@@ -33,9 +36,21 @@ impl GroupOfPipelines {
         stages: &[StageSpec],
         log: LogSink,
     ) -> Vec<Box<dyn CSProcess>> {
+        Self::build_with(&RuntimeConfig::default(), input, output, pipes, stages, log)
+    }
+
+    pub fn build_with(
+        config: &RuntimeConfig,
+        input: In<Message>,
+        output: Out<Message>,
+        pipes: usize,
+        stages: &[StageSpec],
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
         let mut procs = Vec::new();
         for p in 0..pipes {
-            procs.extend(OnePipelineOne::build(
+            procs.extend(OnePipelineOne::build_with(
+                config,
                 input.clone(),
                 output.clone(),
                 stages,
@@ -65,6 +80,17 @@ impl PipelineOfGroups {
         stages: &[StageSpec],
         log: LogSink,
     ) -> Vec<Box<dyn CSProcess>> {
+        Self::build_with(&RuntimeConfig::default(), input, output, workers, stages, log)
+    }
+
+    pub fn build_with(
+        config: &RuntimeConfig,
+        input: In<Message>,
+        output: Out<Message>,
+        workers: usize,
+        stages: &[StageSpec],
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
         assert!(!stages.is_empty());
         let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
         let mut upstream = input;
@@ -75,11 +101,12 @@ impl PipelineOfGroups {
             let (stage_out, stage_in) = if is_last {
                 (output.clone(), None)
             } else {
-                let (o, i) = named_channel::<Message>(&format!("pog.stage{s}"));
+                let (o, i) = config.channel::<Message>(&format!("pog.stage{s}"));
                 (o, Some(i))
             };
             let opts = GroupOptions::new(&spec.function)
                 .modifier(spec.modifier.clone())
+                .io_batch(config.io_batch())
                 .log(log.clone(), &spec.function);
             let opts = match &spec.local {
                 Some(l) => opts.local(l.clone()),
@@ -116,12 +143,29 @@ impl FramedComposite {
         stages: &[StageSpec],
         log: LogSink,
     ) -> Vec<Box<dyn CSProcess>> {
-        let (fan_out, fan_in) = named_channel::<Message>("gop.fan");
-        let (red_out, red_in) = named_channel::<Message>("gop.reduce");
+        Self::group_of_pipelines_with(&RuntimeConfig::default(), input, output, pipes, stages, log)
+    }
+
+    pub fn group_of_pipelines_with(
+        config: &RuntimeConfig,
+        input: In<Message>,
+        output: Out<Message>,
+        pipes: usize,
+        stages: &[StageSpec],
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
+        let (fan_out, fan_in) = config.channel::<Message>("gop.fan");
+        let (red_out, red_in) = config.channel::<Message>("gop.reduce");
         let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
-        procs.push(Box::new(OneFanAny::new(input, fan_out, pipes)));
-        procs.extend(GroupOfPipelines::build(fan_in, red_out, pipes, stages, log));
-        procs.push(Box::new(AnyFanOne::new(red_in, output, pipes)));
+        procs.push(Box::new(
+            OneFanAny::new(input, fan_out, pipes).with_batch(config.io_batch()),
+        ));
+        procs.extend(GroupOfPipelines::build_with(
+            config, fan_in, red_out, pipes, stages, log,
+        ));
+        procs.push(Box::new(
+            AnyFanOne::new(red_in, output, pipes).with_batch(config.io_batch()),
+        ));
         procs
     }
 
@@ -132,12 +176,29 @@ impl FramedComposite {
         stages: &[StageSpec],
         log: LogSink,
     ) -> Vec<Box<dyn CSProcess>> {
-        let (fan_out, fan_in) = named_channel::<Message>("pog.fan");
-        let (red_out, red_in) = named_channel::<Message>("pog.reduce");
+        Self::pipeline_of_groups_with(&RuntimeConfig::default(), input, output, workers, stages, log)
+    }
+
+    pub fn pipeline_of_groups_with(
+        config: &RuntimeConfig,
+        input: In<Message>,
+        output: Out<Message>,
+        workers: usize,
+        stages: &[StageSpec],
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
+        let (fan_out, fan_in) = config.channel::<Message>("pog.fan");
+        let (red_out, red_in) = config.channel::<Message>("pog.reduce");
         let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
-        procs.push(Box::new(OneFanAny::new(input, fan_out, workers)));
-        procs.extend(PipelineOfGroups::build(fan_in, red_out, workers, stages, log));
-        procs.push(Box::new(AnyFanOne::new(red_in, output, workers)));
+        procs.push(Box::new(
+            OneFanAny::new(input, fan_out, workers).with_batch(config.io_batch()),
+        ));
+        procs.extend(PipelineOfGroups::build_with(
+            config, fan_in, red_out, workers, stages, log,
+        ));
+        procs.push(Box::new(
+            AnyFanOne::new(red_in, output, workers).with_batch(config.io_batch()),
+        ));
         procs
     }
 }

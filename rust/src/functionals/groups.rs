@@ -28,6 +28,9 @@ pub struct GroupOptions {
     pub out_data: bool,
     /// Create a group-wide BSP barrier (paper §4.4 / §5.3).
     pub synchronised: bool,
+    /// Messages each worker takes per channel lock (see
+    /// [`crate::csp::RuntimeConfig::io_batch`]).
+    pub io_batch: usize,
     pub log: LogSink,
     pub log_phase: String,
 }
@@ -41,6 +44,7 @@ impl GroupOptions {
             local: None,
             out_data: true,
             synchronised: false,
+            io_batch: 1,
             log: LogSink::off(),
             log_phase: String::new(),
         }
@@ -71,6 +75,11 @@ impl GroupOptions {
         self
     }
 
+    pub fn io_batch(mut self, n: usize) -> Self {
+        self.io_batch = n.max(1);
+        self
+    }
+
     pub fn log(mut self, sink: LogSink, phase: &str) -> Self {
         self.log = sink;
         self.log_phase = phase.to_string();
@@ -87,6 +96,7 @@ impl GroupOptions {
             .with_modifier(modifier)
             .with_out_data(self.out_data)
             .with_index(i)
+            .with_batch(self.io_batch)
             .with_log(self.log.clone(), &self.log_phase);
         if let Some(l) = &self.local {
             w = w.with_local(l.clone());

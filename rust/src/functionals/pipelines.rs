@@ -3,7 +3,8 @@
 //! always have at least two stages. All the internal communication
 //! channels are created automatically."
 
-use crate::csp::channel::{named_channel, In, Out};
+use crate::csp::channel::{In, Out};
+use crate::csp::config::RuntimeConfig;
 use crate::csp::process::CSProcess;
 use crate::data::details::{LocalDetails, ResultDetails};
 use crate::data::message::Message;
@@ -50,6 +51,20 @@ impl OnePipelineOne {
         pipe_index: usize,
         log: LogSink,
     ) -> Vec<Box<dyn CSProcess>> {
+        Self::build_with(&RuntimeConfig::default(), input, output, stages, pipe_index, log)
+    }
+
+    /// Like [`OnePipelineOne::build`] but the internal stage channels
+    /// run on the configured transport and each worker batches per
+    /// `config.io_batch()`.
+    pub fn build_with(
+        config: &RuntimeConfig,
+        input: In<Message>,
+        output: Out<Message>,
+        stages: &[StageSpec],
+        pipe_index: usize,
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
         assert!(
             stages.len() >= 2,
             "pipelines must always have at least two stages (paper §5.2)"
@@ -61,7 +76,7 @@ impl OnePipelineOne {
             let (next_out, next_in) = if is_last {
                 (None, None)
             } else {
-                let (o, i) = named_channel::<Message>(&format!("pipe{pipe_index}.stage{s}"));
+                let (o, i) = config.channel::<Message>(&format!("pipe{pipe_index}.stage{s}"));
                 (Some(o), Some(i))
             };
             let out = match next_out {
@@ -71,6 +86,7 @@ impl OnePipelineOne {
             let mut w = Worker::new(upstream, out, &spec.function)
                 .with_modifier(spec.modifier.clone())
                 .with_index(pipe_index * 100 + s)
+                .with_batch(config.io_batch())
                 .with_log(log.clone(), &spec.function);
             if let Some(l) = &spec.local {
                 w = w.with_local(l.clone());
@@ -100,10 +116,34 @@ impl OnePipelineCollect {
         pipe_index: usize,
         log: LogSink,
     ) -> Vec<Box<dyn CSProcess>> {
+        Self::build_with(
+            &RuntimeConfig::default(),
+            input,
+            stages,
+            result,
+            result_out,
+            pipe_index,
+            log,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_with(
+        config: &RuntimeConfig,
+        input: In<Message>,
+        stages: &[StageSpec],
+        result: ResultDetails,
+        result_out: Option<std::sync::mpsc::Sender<Box<dyn crate::data::DataObject>>>,
+        pipe_index: usize,
+        log: LogSink,
+    ) -> Vec<Box<dyn CSProcess>> {
         assert!(!stages.is_empty(), "OnePipelineCollect needs at least one worker stage");
-        let (tail_out, tail_in) = named_channel::<Message>(&format!("pipe{pipe_index}.tail"));
-        let mut procs = OnePipelineOne::build(input, tail_out, stages, pipe_index, log.clone());
-        let mut c = Collect::new(result, tail_in).with_log(log, "collect");
+        let (tail_out, tail_in) = config.channel::<Message>(&format!("pipe{pipe_index}.tail"));
+        let mut procs =
+            OnePipelineOne::build_with(config, input, tail_out, stages, pipe_index, log.clone());
+        let mut c = Collect::new(result, tail_in)
+            .with_batch(config.io_batch())
+            .with_log(log, "collect");
         if let Some(tx) = result_out {
             c = c.with_result_out(tx);
         }

@@ -3,7 +3,7 @@
 
 pub mod tables;
 
-pub use tables::{EffTable, Row};
+pub use tables::{BenchJson, EffTable, Row};
 
 use std::time::Instant;
 

@@ -1,5 +1,7 @@
 //! Speedup/efficiency tables in the paper's layout (e.g. Table 1:
-//! columns per problem size, rows per process count).
+//! columns per problem size, rows per process count), plus a small
+//! machine-readable bench emitter ([`BenchJson`]) so successive PRs can
+//! track the substrate's perf trajectory (`BENCH_csp.json`).
 
 /// One measured cell: runtime for a (processes, problem) pair.
 #[derive(Clone, Debug)]
@@ -101,9 +103,105 @@ impl EffTable {
     }
 }
 
+/// Machine-readable benchmark results, written as JSON (no external
+/// crates offline, so the writer is hand-rolled; the schema is flat on
+/// purpose: `{"bench": …, "results": [{"name", "seconds"}…],
+/// "derived": {…}}`).
+#[derive(Clone, Debug, Default)]
+pub struct BenchJson {
+    pub bench: String,
+    results: Vec<(String, f64)>,
+    derived: Vec<(String, f64)>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> Self {
+        Self {
+            bench: bench.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Record one measurement, in seconds.
+    pub fn add(&mut self, name: &str, seconds: f64) {
+        self.results.push((name.to_string(), seconds));
+    }
+
+    /// Record a derived quantity (a speedup ratio, a msgs/sec rate …).
+    pub fn add_derived(&mut self, name: &str, value: f64) {
+        self.derived.push((name.to_string(), value));
+    }
+
+    fn escape(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+
+    fn number(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".to_string()
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", Self::escape(&self.bench)));
+        s.push_str("  \"results\": [\n");
+        for (i, (name, secs)) in self.results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"seconds\": {}}}{}\n",
+                Self::escape(name),
+                Self::number(*secs),
+                if i + 1 == self.results.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"derived\": {");
+        for (i, (name, v)) in self.derived.iter().enumerate() {
+            s.push_str(&format!(
+                "\n    \"{}\": {}{}",
+                Self::escape(name),
+                Self::number(*v),
+                if i + 1 == self.derived.len() { "\n  " } else { "," }
+            ));
+        }
+        s.push_str("}\n}\n");
+        s
+    }
+
+    /// Write to `path` (benches pass `BENCH_csp.json` at the repo root).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_json_renders_valid_shape() {
+        let mut j = BenchJson::new("csp substrate");
+        j.add("one2one \"ping\"", 1.5e-6);
+        j.add("buffered", 2.0e-7);
+        j.add_derived("speedup", 7.5);
+        let s = j.render();
+        assert!(s.contains("\"bench\": \"csp substrate\""));
+        assert!(s.contains("\\\"ping\\\""), "{s}");
+        assert!(s.contains("\"speedup\": 7.5"));
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn bench_json_handles_empty_and_nonfinite() {
+        let mut j = BenchJson::new("empty");
+        assert!(j.render().contains("\"results\": [\n  ]"));
+        j.add("inf", f64::INFINITY);
+        assert!(j.render().contains("\"seconds\": null"));
+    }
 
     #[test]
     fn speedup_and_efficiency() {

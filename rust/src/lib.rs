@@ -52,4 +52,5 @@ pub mod workloads;
 pub mod harness;
 
 pub use csp::error::{GppError, Result};
+pub use csp::{ExecutorKind, RuntimeConfig, TransportKind};
 pub use data::object::{DataObject, Params, ReturnCode, Value};

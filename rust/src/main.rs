@@ -16,6 +16,77 @@ use gpp::data::object::Value;
 use gpp::util::cli::Args;
 use gpp::verify::models::{set_model_n, BaseModel};
 use gpp::verify::laws::GopPogModel;
+use gpp::{ExecutorKind, RuntimeConfig, TransportKind};
+
+/// Shared substrate flags: `--transport rendezvous|buffered`,
+/// `--capacity N`, `--executor threads|pooled|pooled:N`.
+fn config_from_args(args: &Args) -> RuntimeConfig {
+    let mut cfg = RuntimeConfig::default();
+    if let Some(t) = args.get("transport") {
+        match TransportKind::parse(t) {
+            Some(k) => cfg.transport = k,
+            None => eprintln!("gpp: unknown --transport '{t}', using {}", cfg.transport),
+        }
+    }
+    cfg.capacity = args.usize("capacity", cfg.capacity).max(1);
+    if let Some(e) = args.get("executor") {
+        match ExecutorKind::parse(e) {
+            Some(k) => cfg.executor = k,
+            None => eprintln!("gpp: unknown --executor '{e}', using {}", cfg.executor),
+        }
+    }
+    cfg
+}
+
+/// Keep user-chosen configs runnable: a pooled executor smaller than
+/// the process count deadlocks a rendezvous network (every process may
+/// need to be simultaneously blocked), and over buffered edges it needs
+/// capacity covering the whole stream so early processes can run to
+/// completion (see ARCHITECTURE.md). `stream_len` is the number of
+/// objects the Emit will produce, when the command knows it.
+fn sanitise_config(
+    mut cfg: RuntimeConfig,
+    process_count: usize,
+    stream_len: Option<usize>,
+) -> RuntimeConfig {
+    if let ExecutorKind::Pooled(n) = cfg.executor {
+        match cfg.transport {
+            TransportKind::Rendezvous => {
+                if n < process_count {
+                    eprintln!(
+                        "gpp: note: a {n}-thread pool cannot run this {process_count}-process \
+                         rendezvous network without deadlock; using thread-per-process \
+                         (add --transport buffered to use the pool)"
+                    );
+                    cfg.executor = ExecutorKind::ThreadPerProcess;
+                }
+            }
+            TransportKind::Buffered => match stream_len {
+                Some(len) if cfg.capacity < len + process_count && n < process_count => {
+                    let cap = len + process_count;
+                    eprintln!(
+                        "gpp: note: raising --capacity {} -> {cap} so the {n}-thread pool \
+                         can drive the {len}-object stream to completion",
+                        cfg.capacity
+                    );
+                    cfg.capacity = cap;
+                }
+                Some(_) => {}
+                None => {
+                    if n < process_count {
+                        eprintln!(
+                            "gpp: note: stream length unknown; a {n}-thread pool may deadlock \
+                             if --capacity {} does not cover it; using thread-per-process",
+                            cfg.capacity
+                        );
+                        cfg.executor = ExecutorKind::ThreadPerProcess;
+                    }
+                }
+            },
+        }
+    }
+    cfg
+}
 
 fn main() {
     let args = Args::from_env();
@@ -61,6 +132,11 @@ COMMANDS
   verify [which]     run FDR-style assertions: base | gop-pog | all (default all)
   calibrate          measure per-item workload costs on this host
   logdemo            logged concordance run + bottleneck report (paper Sec 8)
+
+SUBSTRATE FLAGS (pi, mandelbrot, concordance; or a `config` line in .gpp files)
+  --transport rendezvous|buffered   channel transport (default rendezvous)
+  --capacity N                      buffered channel capacity (default 64)
+  --executor threads|pooled[:N]     process executor (default threads)
 "#;
 
 fn fail(e: impl std::fmt::Display) -> i32 {
@@ -99,14 +175,18 @@ fn cmd_pi(args: &Args) -> i32 {
         _ => "getWithin",
     };
     let t0 = std::time::Instant::now();
-    match DataParallelCollect::new(
+    let net = DataParallelCollect::new(
         PiData::emit_details(instances, iterations),
         PiResults::result_details_verbose(),
         workers,
         function,
-    )
-    .run_network()
-    {
+    );
+    let cfg = sanitise_config(
+        config_from_args(args),
+        net.process_count(),
+        Some(instances as usize),
+    );
+    match net.with_config(cfg).run_network() {
         Ok(_) => {
             println!("elapsed: {:.3}s ({workers} workers)", t0.elapsed().as_secs_f64());
             0
@@ -132,14 +212,14 @@ fn cmd_mandelbrot(args: &Args) -> i32 {
         rd.init_data.0.push(Value::Str(out.to_string()));
     }
     let t0 = std::time::Instant::now();
-    match DataParallelCollect::new(
+    let net = DataParallelCollect::new(
         MandelbrotLine::emit_details(width, height, max_iter, delta),
         rd,
         workers,
         function,
-    )
-    .run_network()
-    {
+    );
+    let cfg = sanitise_config(config_from_args(args), net.process_count(), Some(height as usize));
+    match net.with_config(cfg).run_network() {
         Ok(result) => {
             println!(
                 "mandelbrot {}x{} checksum {:?} elapsed {:.3}s",
@@ -300,14 +380,14 @@ fn cmd_concordance(args: &Args) -> i32 {
         None => corpus::generate(words, 33),
     };
     let t0 = std::time::Instant::now();
-    match GroupOfPipelineCollects::new(
+    let net = GroupOfPipelineCollects::new(
         ConcordanceData::emit_details(&text, n, 2),
         vec![ConcordanceResult::result_details(); groups],
         ConcordanceData::stages(),
         groups,
-    )
-    .run_network()
-    {
+    );
+    let cfg = sanitise_config(config_from_args(args), net.process_count(), None);
+    match net.with_config(cfg).run_network() {
         Ok(results) => {
             let total: i64 = results
                 .iter()

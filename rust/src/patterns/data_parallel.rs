@@ -10,7 +10,7 @@
 
 use std::sync::mpsc;
 
-use crate::csp::channel::named_channel;
+use crate::csp::config::RuntimeConfig;
 use crate::csp::error::Result;
 use crate::csp::process::CSProcess;
 use crate::data::details::{DataDetails, LocalDetails, ResultDetails};
@@ -28,6 +28,8 @@ pub struct DataParallelCollect {
     pub modifier: Params,
     pub local: Option<LocalDetails>,
     pub log: LogSink,
+    /// Channel transport + executor the pattern expands onto.
+    pub config: RuntimeConfig,
 }
 
 impl DataParallelCollect {
@@ -46,6 +48,7 @@ impl DataParallelCollect {
             modifier: Params::empty(),
             local: None,
             log: LogSink::off(),
+            config: RuntimeConfig::default(),
         }
     }
 
@@ -64,25 +67,37 @@ impl DataParallelCollect {
         self
     }
 
-    /// Build the process vector (the paper's Listing 3 expansion).
+    pub fn with_config(mut self, config: RuntimeConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Build the process vector (the paper's Listing 3 expansion) on the
+    /// configured transport.
     pub fn build(
         &self,
         result_tx: Option<mpsc::Sender<Box<dyn DataObject>>>,
     ) -> Vec<Box<dyn CSProcess>> {
-        let (emit_out, fan_in) = named_channel::<Message>("dp.emit");
-        let (fan_out, group_in) = named_channel::<Message>("dp.fan");
-        let (group_out, red_in) = named_channel::<Message>("dp.group");
-        let (red_out, collect_in) = named_channel::<Message>("dp.reduce");
+        let cfg = &self.config;
+        let batch = cfg.io_batch();
+        let (emit_out, fan_in) = cfg.channel::<Message>("dp.emit");
+        let (fan_out, group_in) = cfg.channel::<Message>("dp.fan");
+        let (group_out, red_in) = cfg.channel::<Message>("dp.group");
+        let (red_out, collect_in) = cfg.channel::<Message>("dp.reduce");
 
         let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
         procs.push(Box::new(
             Emit::new(self.emit_details.clone(), emit_out)
+                .with_batch(batch)
                 .with_log(self.log.clone(), "emit"),
         ));
-        procs.push(Box::new(OneFanAny::new(fan_in, fan_out, self.workers)));
+        procs.push(Box::new(
+            OneFanAny::new(fan_in, fan_out, self.workers).with_batch(batch),
+        ));
         let opts = {
             let o = GroupOptions::new(&self.function)
                 .modifier(self.modifier.clone())
+                .io_batch(batch)
                 .log(self.log.clone(), &self.function);
             match &self.local {
                 Some(l) => o.local(l.clone()),
@@ -90,8 +105,11 @@ impl DataParallelCollect {
             }
         };
         procs.extend(AnyGroupAny::build(group_in, group_out, self.workers, &opts));
-        procs.push(Box::new(AnyFanOne::new(red_in, red_out, self.workers)));
+        procs.push(Box::new(
+            AnyFanOne::new(red_in, red_out, self.workers).with_batch(batch),
+        ));
         let mut collect = Collect::new(self.result_details.clone(), collect_in)
+            .with_batch(batch)
             .with_log(self.log.clone(), "collect");
         if let Some(tx) = result_tx {
             collect = collect.with_result_out(tx);
@@ -100,11 +118,13 @@ impl DataParallelCollect {
         procs
     }
 
-    /// Build and run; returns the finished result object.
+    /// Build and run on the configured executor; returns the finished
+    /// result object.
     pub fn run_network(&self) -> Result<Box<dyn DataObject>> {
         let (tx, rx) = mpsc::channel();
         let procs = self.build(Some(tx));
-        let mut results = super::run_and_harvest("DataParallelCollect", procs, rx)?;
+        let mut results =
+            super::run_and_harvest_with("DataParallelCollect", procs, rx, &self.config)?;
         Ok(results.remove(0))
     }
 

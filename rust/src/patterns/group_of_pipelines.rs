@@ -4,7 +4,7 @@
 
 use std::sync::mpsc;
 
-use crate::csp::channel::named_channel;
+use crate::csp::config::RuntimeConfig;
 use crate::csp::error::Result;
 use crate::csp::process::CSProcess;
 use crate::data::details::{DataDetails, ResultDetails};
@@ -21,6 +21,7 @@ pub struct GroupOfPipelineCollects {
     pub stage_ops: Vec<StageSpec>,
     pub groups: usize,
     pub log: LogSink,
+    pub config: RuntimeConfig,
 }
 
 impl GroupOfPipelineCollects {
@@ -38,6 +39,7 @@ impl GroupOfPipelineCollects {
             stage_ops,
             groups,
             log: LogSink::off(),
+            config: RuntimeConfig::default(),
         }
     }
 
@@ -46,21 +48,32 @@ impl GroupOfPipelineCollects {
         self
     }
 
+    pub fn with_config(mut self, config: RuntimeConfig) -> Self {
+        self.config = config;
+        self
+    }
+
     pub fn build(
         &self,
         result_tx: Option<mpsc::Sender<Box<dyn DataObject>>>,
     ) -> Vec<Box<dyn CSProcess>> {
-        let (emit_out, fan_in) = named_channel::<Message>("gop.emit");
-        let (fan_out, pipes_in) = named_channel::<Message>("gop.fan");
+        let cfg = &self.config;
+        let (emit_out, fan_in) = cfg.channel::<Message>("gop.emit");
+        let (fan_out, pipes_in) = cfg.channel::<Message>("gop.fan");
 
         let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
         procs.push(Box::new(
-            Emit::new(self.emit_details.clone(), emit_out).with_log(self.log.clone(), "emit"),
+            Emit::new(self.emit_details.clone(), emit_out)
+                .with_batch(cfg.io_batch())
+                .with_log(self.log.clone(), "emit"),
         ));
         // Any free pipeline's first stage takes the next object.
-        procs.push(Box::new(OneFanAny::new(fan_in, fan_out, self.groups)));
+        procs.push(Box::new(
+            OneFanAny::new(fan_in, fan_out, self.groups).with_batch(cfg.io_batch()),
+        ));
         for (g, d) in self.result_details.iter().enumerate() {
-            procs.extend(OnePipelineCollect::build(
+            procs.extend(OnePipelineCollect::build_with(
+                cfg,
                 pipes_in.clone(),
                 &self.stage_ops,
                 d.clone(),
@@ -75,7 +88,7 @@ impl GroupOfPipelineCollects {
     pub fn run_network(&self) -> Result<Vec<Box<dyn DataObject>>> {
         let (tx, rx) = mpsc::channel();
         let procs = self.build(Some(tx));
-        super::run_and_harvest("GroupOfPipelineCollects", procs, rx)
+        super::run_and_harvest_with("GroupOfPipelineCollects", procs, rx, &self.config)
     }
 
     pub fn process_count(&self) -> usize {

@@ -16,6 +16,7 @@ pub use data_parallel::DataParallelCollect;
 pub use group_of_pipelines::GroupOfPipelineCollects;
 pub use task_parallel::TaskParallelOfGroupCollects;
 
+use crate::csp::config::RuntimeConfig;
 use crate::csp::error::Result;
 use crate::csp::process::{run_parallel_named, CSProcess};
 use crate::data::object::DataObject;
@@ -28,5 +29,16 @@ pub fn run_and_harvest(
     rx: std::sync::mpsc::Receiver<Box<dyn DataObject>>,
 ) -> Result<Vec<Box<dyn DataObject>>> {
     run_parallel_named(label, procs)?;
+    Ok(rx.try_iter().collect())
+}
+
+/// [`run_and_harvest`] on the executor a [`RuntimeConfig`] selects.
+pub fn run_and_harvest_with(
+    label: &str,
+    procs: Vec<Box<dyn CSProcess>>,
+    rx: std::sync::mpsc::Receiver<Box<dyn DataObject>>,
+    config: &RuntimeConfig,
+) -> Result<Vec<Box<dyn DataObject>>> {
+    config.run_named(label, procs)?;
     Ok(rx.try_iter().collect())
 }

@@ -5,7 +5,7 @@
 
 use std::sync::mpsc;
 
-use crate::csp::channel::named_channel;
+use crate::csp::config::RuntimeConfig;
 use crate::csp::error::Result;
 use crate::csp::process::CSProcess;
 use crate::data::details::{DataDetails, ResultDetails};
@@ -24,6 +24,7 @@ pub struct TaskParallelOfGroupCollects {
     pub stage_ops: Vec<StageSpec>,
     pub workers: usize,
     pub log: LogSink,
+    pub config: RuntimeConfig,
 }
 
 impl TaskParallelOfGroupCollects {
@@ -45,6 +46,7 @@ impl TaskParallelOfGroupCollects {
             stage_ops,
             workers,
             log: LogSink::off(),
+            config: RuntimeConfig::default(),
         }
     }
 
@@ -53,22 +55,34 @@ impl TaskParallelOfGroupCollects {
         self
     }
 
+    pub fn with_config(mut self, config: RuntimeConfig) -> Self {
+        self.config = config;
+        self
+    }
+
     pub fn build(
         &self,
         result_tx: Option<mpsc::Sender<Box<dyn DataObject>>>,
     ) -> Vec<Box<dyn CSProcess>> {
-        let (emit_out, fan_in) = named_channel::<Message>("pog.emit");
-        let (fan_out, pipe_in) = named_channel::<Message>("pog.fan");
-        let (pipe_out, coll_in) = named_channel::<Message>("pog.tail");
+        let cfg = &self.config;
+        let batch = cfg.io_batch();
+        let (emit_out, fan_in) = cfg.channel::<Message>("pog.emit");
+        let (fan_out, pipe_in) = cfg.channel::<Message>("pog.fan");
+        let (pipe_out, coll_in) = cfg.channel::<Message>("pog.tail");
 
         let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
         procs.push(Box::new(
-            Emit::new(self.emit_details.clone(), emit_out).with_log(self.log.clone(), "emit"),
+            Emit::new(self.emit_details.clone(), emit_out)
+                .with_batch(batch)
+                .with_log(self.log.clone(), "emit"),
         ));
         // The fan issues `workers` terminators: the first stage group has
         // `workers` members each consuming one.
-        procs.push(Box::new(OneFanAny::new(fan_in, fan_out, self.workers)));
-        procs.extend(PipelineOfGroups::build(
+        procs.push(Box::new(
+            OneFanAny::new(fan_in, fan_out, self.workers).with_batch(batch),
+        ));
+        procs.extend(PipelineOfGroups::build_with(
+            cfg,
             pipe_in,
             pipe_out,
             self.workers,
@@ -79,6 +93,7 @@ impl TaskParallelOfGroupCollects {
         // last worker group emitted `workers` terminators, one each.
         for d in self.result_details.iter() {
             let mut c = Collect::new(d.clone(), coll_in.clone())
+                .with_batch(batch)
                 .with_log(self.log.clone(), "collect");
             if let Some(tx) = &result_tx {
                 c = c.with_result_out(tx.clone());
@@ -92,7 +107,7 @@ impl TaskParallelOfGroupCollects {
     pub fn run_network(&self) -> Result<Vec<Box<dyn DataObject>>> {
         let (tx, rx) = mpsc::channel();
         let procs = self.build(Some(tx));
-        super::run_and_harvest("TaskParallelOfGroupCollects", procs, rx)
+        super::run_and_harvest_with("TaskParallelOfGroupCollects", procs, rx, &self.config)
     }
 
     pub fn process_count(&self) -> usize {

@@ -25,6 +25,9 @@ pub struct Collect {
     /// (the paper's finalise typically prints; callers of the library
     /// usually also want the value).
     pub result_out: Option<Sender<Box<dyn DataObject>>>,
+    /// Messages taken per input-channel lock (see
+    /// [`crate::csp::RuntimeConfig::io_batch`]).
+    pub batch: usize,
 }
 
 impl Collect {
@@ -35,12 +38,18 @@ impl Collect {
             log: LogSink::off(),
             log_phase: "collect".to_string(),
             result_out: None,
+            batch: 1,
         }
     }
 
     pub fn with_log(mut self, log: LogSink, phase: &str) -> Self {
         self.log = log;
         self.log_phase = phase.to_string();
+        self
+    }
+
+    pub fn with_batch(mut self, n: usize) -> Self {
+        self.batch = n.max(1);
         self
     }
 
@@ -57,24 +66,29 @@ impl Collect {
             .check(&format!("Collect init {}.{}", d.class, d.init_method))?;
 
         self.log.log("Collect", &self.log_phase, LogKind::Start, None);
-        loop {
-            match self.input.read()? {
-                Message::Data(mut obj) => {
-                    self.log
-                        .log("Collect", &self.log_phase, LogKind::Input, Some(obj.as_ref()));
-                    // "The result object's collectMethod is called with
-                    // the inputObject as a parameter."
-                    result
-                        .call(&d.collect_method, &crate::data::object::Params::empty(), Some(obj.as_mut()))?
-                        .check(&format!("Collect {}.{}", d.class, d.collect_method))?;
-                }
-                Message::Terminator(term) => {
-                    // Terminators may carry log records gathered upstream;
-                    // forward them into our sink's stream by re-rendering.
-                    for rec in term.logs {
-                        self.log.log(&rec.tag, &rec.phase, rec.kind, None);
+        'collecting: loop {
+            // Batched take of data messages on buffered transports; the
+            // terminator is always taken singly (its arrival ends us).
+            let msgs: Vec<Message> = self.input.read_data_batch(self.batch)?;
+            for msg in msgs {
+                match msg {
+                    Message::Data(mut obj) => {
+                        self.log
+                            .log("Collect", &self.log_phase, LogKind::Input, Some(obj.as_ref()));
+                        // "The result object's collectMethod is called with
+                        // the inputObject as a parameter."
+                        result
+                            .call(&d.collect_method, &crate::data::object::Params::empty(), Some(obj.as_mut()))?
+                            .check(&format!("Collect {}.{}", d.class, d.collect_method))?;
                     }
-                    break;
+                    Message::Terminator(term) => {
+                        // Terminators may carry log records gathered upstream;
+                        // forward them into our sink's stream by re-rendering.
+                        for rec in term.logs {
+                            self.log.log(&rec.tag, &rec.phase, rec.kind, None);
+                        }
+                        break 'collecting;
+                    }
                 }
             }
         }

@@ -18,6 +18,10 @@ use crate::logging::{LogKind, LogSink};
 pub struct Emit {
     pub details: DataDetails,
     pub output: Out<Message>,
+    /// Objects written per output-channel lock (1 = write-per-object;
+    /// >1 batches onto buffered transports — see
+    /// [`crate::csp::RuntimeConfig::io_batch`]).
+    pub batch: usize,
     pub log: LogSink,
     pub log_phase: String,
 }
@@ -27,6 +31,7 @@ impl Emit {
         Self {
             details,
             output,
+            batch: 1,
             log: LogSink::off(),
             log_phase: "emit".to_string(),
         }
@@ -36,6 +41,23 @@ impl Emit {
         self.log = log;
         self.log_phase = phase.to_string();
         self
+    }
+
+    pub fn with_batch(mut self, n: usize) -> Self {
+        self.batch = n.max(1);
+        self
+    }
+
+    /// Write one created object, buffering when batching is on.
+    fn push_out(&self, buf: &mut Vec<Message>, msg: Message) -> Result<()> {
+        if self.batch <= 1 {
+            return self.output.write(msg);
+        }
+        buf.push(msg);
+        if buf.len() >= self.batch {
+            self.output.write_batch(std::mem::take(buf))?;
+        }
+        Ok(())
     }
 
     fn run_inner(&mut self) -> Result<()> {
@@ -49,6 +71,7 @@ impl Emit {
             .check(&format!("Emit init {}.{}", d.class, d.init_method))?;
 
         self.log.log("Emit", &self.log_phase, LogKind::Start, None);
+        let mut buf: Vec<Message> = Vec::new();
         loop {
             // "The main loop of the process creates a new instance of the
             // emitted object and its associated createMethod is called."
@@ -60,7 +83,7 @@ impl Emit {
                 ReturnCode::NormalContinuation => {
                     self.log
                         .log("Emit", &self.log_phase, LogKind::Output, Some(obj.as_ref()));
-                    self.output.write(Message::Data(obj))?;
+                    self.push_out(&mut buf, Message::Data(obj))?;
                 }
                 ReturnCode::NormalTermination => break,
                 ReturnCode::CompletedOk => {
@@ -69,7 +92,7 @@ impl Emit {
                     // termination on a later call).
                     self.log
                         .log("Emit", &self.log_phase, LogKind::Output, Some(obj.as_ref()));
-                    self.output.write(Message::Data(obj))?;
+                    self.push_out(&mut buf, Message::Data(obj))?;
                 }
                 ReturnCode::Error(code) => {
                     self.output.poison();
@@ -79,6 +102,9 @@ impl Emit {
                     });
                 }
             }
+        }
+        if !buf.is_empty() {
+            self.output.write_batch(buf)?;
         }
         self.log.log("Emit", &self.log_phase, LogKind::End, None);
         // "After normal termination a UniversalTerminator object is

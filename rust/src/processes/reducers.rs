@@ -21,6 +21,9 @@ pub struct AnyFanOne {
     pub input: In<Message>,
     pub output: Out<Message>,
     pub sources: usize,
+    /// Messages forwarded per channel-lock pair (see
+    /// [`crate::csp::RuntimeConfig::io_batch`]).
+    pub batch: usize,
     pub log: LogSink,
 }
 
@@ -30,24 +33,42 @@ impl AnyFanOne {
             input,
             output,
             sources,
+            batch: 1,
             log: LogSink::off(),
         }
+    }
+
+    pub fn with_batch(mut self, n: usize) -> Self {
+        self.batch = n.max(1);
+        self
     }
 
     fn run_inner(&mut self) -> Result<()> {
         let mut terms_seen = 0usize;
         let mut term = Terminator::new();
         while terms_seen < self.sources {
-            match self.input.read()? {
-                Message::Data(obj) => {
-                    self.log.log("AnyFanOne", "reduce", LogKind::Input, Some(obj.as_ref()));
-                    self.output.write(Message::Data(obj))?;
+            // All-data batch, or a single message (maybe a terminator —
+            // writers sharing the any-end may interleave more data after
+            // one, so terminators are counted one at a time).
+            let mut msgs = self.input.read_data_batch(self.batch)?;
+            if msgs.len() == 1 && msgs[0].is_terminator() {
+                match msgs.pop() {
+                    Some(Message::Terminator(t)) => {
+                        term.absorb(t);
+                        terms_seen += 1;
+                    }
+                    _ => unreachable!("checked is_terminator"),
                 }
-                Message::Terminator(t) => {
-                    term.absorb(t);
-                    terms_seen += 1;
+                continue;
+            }
+            if self.log.enabled() {
+                for m in &msgs {
+                    if let Message::Data(obj) = m {
+                        self.log.log("AnyFanOne", "reduce", LogKind::Input, Some(obj.as_ref()));
+                    }
                 }
             }
+            self.output.write_batch(msgs)?;
         }
         self.output.write(Message::Terminator(term))?;
         Ok(())

@@ -29,6 +29,11 @@ pub struct OneFanAny {
     /// Number of reader processes sharing the output end; each needs its
     /// own terminator.
     pub destinations: usize,
+    /// Messages forwarded per channel-lock pair (see
+    /// [`crate::csp::RuntimeConfig::io_batch`]). Connectors "undertake
+    /// no data processing", so on buffered edges forwarding a batch is
+    /// pure lock amortisation.
+    pub batch: usize,
     pub log: LogSink,
 }
 
@@ -38,26 +43,40 @@ impl OneFanAny {
             input,
             output,
             destinations,
+            batch: 1,
             log: LogSink::off(),
         }
     }
 
+    pub fn with_batch(mut self, n: usize) -> Self {
+        self.batch = n.max(1);
+        self
+    }
+
     fn run_inner(&mut self) -> Result<()> {
         loop {
-            match self.input.read()? {
-                Message::Data(obj) => {
-                    self.log.log("OneFanAny", "spread", LogKind::Output, Some(obj.as_ref()));
-                    self.output.write(Message::Data(obj))?;
+            // All-data batch, or a single message (maybe the terminator).
+            let mut msgs = self.input.read_data_batch(self.batch)?;
+            if msgs.len() == 1 && msgs[0].is_terminator() {
+                let term = match msgs.pop() {
+                    Some(Message::Terminator(t)) => t,
+                    _ => unreachable!("checked is_terminator"),
+                };
+                // Spread_End: one terminator per sharing reader.
+                for i in 0..self.destinations {
+                    let t = if i == 0 { term.clone() } else { Terminator::new() };
+                    self.output.write(Message::Terminator(t))?;
                 }
-                Message::Terminator(term) => {
-                    // Spread_End: one terminator per sharing reader.
-                    for i in 0..self.destinations {
-                        let t = if i == 0 { term.clone() } else { Terminator::new() };
-                        self.output.write(Message::Terminator(t))?;
+                return Ok(());
+            }
+            if self.log.enabled() {
+                for m in &msgs {
+                    if let Message::Data(obj) = m {
+                        self.log.log("OneFanAny", "spread", LogKind::Output, Some(obj.as_ref()));
                     }
-                    return Ok(());
                 }
             }
+            self.output.write_batch(msgs)?;
         }
     }
 }

@@ -37,6 +37,10 @@ pub struct Worker {
     pub barrier: Option<Barrier>,
     /// Worker index within its group (diagnostics + logging tag).
     pub index: usize,
+    /// Messages taken per input-channel lock (1 = the paper's message-
+    /// at-a-time semantics; >1 amortises lock traffic on buffered
+    /// transports — see [`crate::csp::RuntimeConfig::io_batch`]).
+    pub batch: usize,
     pub log: LogSink,
     pub log_phase: String,
 }
@@ -52,6 +56,7 @@ impl Worker {
             out_data: true,
             barrier: None,
             index: 0,
+            batch: 1,
             log: LogSink::off(),
             log_phase: String::new(),
         }
@@ -79,6 +84,11 @@ impl Worker {
 
     pub fn with_index(mut self, i: usize) -> Self {
         self.index = i;
+        self
+    }
+
+    pub fn with_batch(mut self, n: usize) -> Self {
+        self.batch = n.max(1);
         self
     }
 
@@ -116,48 +126,58 @@ impl Worker {
         let phase = self.phase();
         self.log.log(&tag, &phase, LogKind::Start, None);
 
-        // I/O-SEQ main loop (paper Listing 21).
+        // I/O-SEQ main loop (paper Listing 21). With `batch > 1` data
+        // messages are drained in batches per channel lock; terminators
+        // are never batched (a sibling sharing the any-end may own the
+        // next one), so the shutdown protocol is untouched. A BSP
+        // barrier forces batch 1: the group must sync once per message,
+        // and an uneven batched take would leave siblings starved of
+        // messages and the barrier short of parties.
+        let batch = if self.barrier.is_some() { 1 } else { self.batch };
         loop {
-            match self.input.read()? {
-                Message::Data(mut obj) => {
-                    self.log.log(&tag, &phase, LogKind::Input, Some(obj.as_ref()));
-                    // callUserMethod(inputObject, function, [dataModifier, wc])
-                    let rc = obj.call(
-                        &self.function,
-                        &self.data_modifier,
-                        local.as_mut().map(|b| b.as_mut() as &mut dyn DataObject),
-                    )?;
-                    if let ReturnCode::Error(code) = rc {
-                        self.output.poison();
-                        self.input.poison();
-                        return Err(GppError::UserCode {
-                            code,
-                            context: format!("{}.{}", tag, self.function),
-                        });
-                    }
-                    if self.out_data {
-                        if let Some(b) = &self.barrier {
-                            // BSP: wait for the whole group before output.
-                            b.sync()?;
+            let msgs: Vec<Message> = self.input.read_data_batch(batch)?;
+            for msg in msgs {
+                match msg {
+                    Message::Data(mut obj) => {
+                        self.log.log(&tag, &phase, LogKind::Input, Some(obj.as_ref()));
+                        // callUserMethod(inputObject, function, [dataModifier, wc])
+                        let rc = obj.call(
+                            &self.function,
+                            &self.data_modifier,
+                            local.as_mut().map(|b| b.as_mut() as &mut dyn DataObject),
+                        )?;
+                        if let ReturnCode::Error(code) = rc {
+                            self.output.poison();
+                            self.input.poison();
+                            return Err(GppError::UserCode {
+                                code,
+                                context: format!("{}.{}", tag, self.function),
+                            });
                         }
-                        self.log.log(&tag, &phase, LogKind::Output, Some(obj.as_ref()));
-                        self.output.write(Message::Data(obj))?;
-                    }
-                }
-                Message::Terminator(term) => {
-                    // When retaining data (out_data == false), the local
-                    // accumulator is emitted just before the terminator —
-                    // "it may be required to output the local class rather
-                    // than each input object".
-                    if !self.out_data {
-                        if let Some(obj) = local.take() {
+                        if self.out_data {
+                            if let Some(b) = &self.barrier {
+                                // BSP: wait for the whole group before output.
+                                b.sync()?;
+                            }
                             self.log.log(&tag, &phase, LogKind::Output, Some(obj.as_ref()));
                             self.output.write(Message::Data(obj))?;
                         }
                     }
-                    self.log.log(&tag, &phase, LogKind::End, None);
-                    self.output.write(Message::Terminator(term))?;
-                    return Ok(());
+                    Message::Terminator(term) => {
+                        // When retaining data (out_data == false), the local
+                        // accumulator is emitted just before the terminator —
+                        // "it may be required to output the local class rather
+                        // than each input object".
+                        if !self.out_data {
+                            if let Some(obj) = local.take() {
+                                self.log.log(&tag, &phase, LogKind::Output, Some(obj.as_ref()));
+                                self.output.write(Message::Data(obj))?;
+                            }
+                        }
+                        self.log.log(&tag, &phase, LogKind::End, None);
+                        self.output.write(Message::Terminator(term))?;
+                        return Ok(());
+                    }
                 }
             }
         }
