@@ -1,14 +1,27 @@
-//! Cluster Mandelbrot (paper §7): the host/worker Client-Server network
-//! over TCP. This example plays all roles itself — it spawns `--nodes`
-//! worker *processes* (separate OS processes, the paper's workstations
-//! on loopback) and hosts the row farm, then cross-checks against the
+//! Cluster Mandelbrot (paper §7): host/worker over TCP, now on the
+//! generic work-stealing cluster runtime — the host serves opaque work
+//! items, workers resolve the `mandelbrot-row` job by name, and a
+//! worker dying mid-row has its row requeued to the survivors.
+//!
+//! This example plays all roles itself — it spawns `--nodes` worker
+//! *processes* (separate OS processes, the paper's workstations on
+//! loopback) and hosts the row farm, then cross-checks against the
 //! local sequential render.
 //!
+//! Cluster quickstart:
+//!
 //! ```sh
+//! # single machine, 3 worker processes:
 //! cargo run --release --example cluster_mandelbrot -- --nodes 3 --width 1120 --height 640
-//! # or run roles by hand on separate machines:
-//! #   gpp cluster-host --addr 0.0.0.0:7777 --nodes 2 ...
-//! #   gpp cluster-worker --addr host:7777
+//!
+//! # by hand across machines (any order; workers retry nothing — start the host first):
+//! #   gpp cluster-host   --join 0.0.0.0:7777 --nodes 2 --width 5600 --height 3200
+//! #   gpp cluster-worker --join host:7777
+//!
+//! # or deploy ANY declarative network the same way (node-loader DSL):
+//! #   gpp run examples/cluster_pi.gpp                      # loopback cluster
+//! #   gpp run examples/cluster_pi.gpp --role host   --join 0.0.0.0:7777
+//! #   gpp run examples/cluster_pi.gpp --role worker --join host:7777
 //! ```
 
 use gpp::net::cluster::{default_config, run_host, run_worker};
@@ -17,11 +30,11 @@ use gpp::workloads::mandelbrot;
 
 fn main() -> gpp::Result<()> {
     let args = Args::from_env();
-    // Child-process role: `--role worker --addr ...`.
+    // Child-process role: `--role worker --join ...`.
     if args.get("role") == Some("worker") {
-        let addr = args.get_or("addr", "127.0.0.1:7787").to_string();
-        let rows = run_worker(&addr)?;
-        println!("worker done: {rows} rows");
+        let addr = args.get_or("join", "127.0.0.1:7787").to_string();
+        let items = run_worker(&addr)?;
+        println!("worker done: {items} rows");
         return Ok(());
     }
 
@@ -44,7 +57,7 @@ fn main() -> gpp::Result<()> {
             // Give the host a moment to bind.
             std::thread::sleep(std::time::Duration::from_millis(150));
             std::process::Command::new(exe2)
-                .args(["--role", "worker", "--addr", &addr2])
+                .args(["--role", "worker", "--join", &addr2])
                 .status()
         }));
     }

@@ -1,16 +1,37 @@
-//! Table 9 + Figure 12: Mandelbrot on a workstation cluster.
+//! Table 9 + Figure 12: Mandelbrot on a workstation cluster — plus the
+//! generic distributed runtime's own trajectory (`BENCH_net.json`).
 //!
 //! Paper: width 5600, escape 1000, 1–6 worker nodes on 1-Gbit Ethernet;
 //! speedup 0.99 → 4.73 with efficiency falling 0.99 → 0.79. The DES
 //! models each workstation as its own 4-core machine, the Ethernet as a
 //! per-row RTT, and the host's serialized emit/collect handling.
-//! A real 2-process loopback cluster run validates the protocol.
+//!
+//! Real runs validate the protocol end to end: the Mandelbrot cluster
+//! over loopback, the same declarative pi network on the in-memory
+//! transport vs loopback `NetTransport` vs the node-loader cluster, and
+//! N-body + Concordance through the same work-stealing loop — written
+//! to `BENCH_net.json` so successive PRs can track the net layer.
 
-use gpp::harness::EffTable;
+use gpp::builder::parse_network;
+use gpp::harness::{time_it, BenchJson, EffTable};
+use gpp::net::loader;
+use gpp::net::NodePlacement;
 use gpp::sim::{calibrate, sim_cluster, CostDb, MachineConfig};
+use gpp::RuntimeConfig;
+
+fn pi_dsl(workers: usize, instances: i64, iterations: i64) -> String {
+    format!(
+        "emit class=piData init=initClass({instances}) create=createInstance({iterations})\n\
+         fanAny destinations={workers}\n\
+         group workers={workers} function=getWithin\n\
+         reduceAny sources={workers}\n\
+         collect class=piResults init=initClass(1)\n"
+    )
+}
 
 fn main() {
     gpp::workloads::register_all();
+    gpp::net::register_builtin_jobs();
     let db = calibrate::calibrate();
     let host = MachineConfig::i7_4790k();
     let node = MachineConfig::workstation();
@@ -42,6 +63,8 @@ fn main() {
     print!("{}", table.render_runtimes()); // Figure 12 series
     println!("(speedup here is vs the 1-node cluster, as the paper's Table 9 normalises)");
 
+    let mut json = BenchJson::new("net layer: in-memory vs loopback net vs cluster");
+
     // Real protocol check over loopback with OS processes ≈ threads.
     println!("\n-- real loopback cluster (reduced: 280x160, esc 100) --");
     use gpp::net::cluster::{default_config, run_host, run_worker};
@@ -63,11 +86,104 @@ fn main() {
         for w in ws {
             w.join().unwrap().unwrap();
         }
+        let secs = t0.elapsed().as_secs_f64();
         println!(
             "nodes={nodes}: {:.3}s rows={} checksum={}",
-            t0.elapsed().as_secs_f64(),
+            secs,
             collect.rows_seen,
             collect.checksum()
         );
+        json.add(&format!("mandelbrot cluster loopback nodes={nodes}"), secs);
     }
+
+    // The same declarative network on three substrates: in-memory
+    // rendezvous, every edge over loopback NetTransport, and sharded
+    // across a loopback cluster by the node loader. Identical results;
+    // the deltas are the net layer's cost.
+    println!("\n-- pi network: in-memory vs net transport vs cluster --");
+    let (instances, iterations, workers) = (32i64, 20_000i64, 2usize);
+    let dsl = pi_dsl(workers, instances, iterations);
+
+    let spec = parse_network(&dsl).unwrap();
+    let (mem_results, mem_s) = time_it(|| spec.run().unwrap());
+    println!("in-memory rendezvous: {mem_s:.3}s");
+    json.add("pi dsl in-memory rendezvous", mem_s);
+
+    let spec = parse_network(&dsl)
+        .unwrap()
+        .with_config(RuntimeConfig::net_loopback().with_capacity(16));
+    let (net_results, net_s) = time_it(|| spec.run().unwrap());
+    println!("loopback NetTransport:  {net_s:.3}s");
+    json.add("pi dsl loopback net transport", net_s);
+
+    let spec = parse_network(&dsl)
+        .unwrap()
+        .with_placement(NodePlacement::new(workers));
+    let (cl_results, cl_s) = time_it(|| loader::run_cluster_loopback(&spec).unwrap());
+    println!("node-loader cluster:    {cl_s:.3}s");
+    json.add("pi dsl loopback cluster", cl_s);
+
+    let within = |r: &[Box<dyn gpp::DataObject>]| r[0].log_prop("withinSum");
+    assert_eq!(within(&mem_results), within(&net_results), "net transport result drift");
+    assert_eq!(within(&mem_results), within(&cl_results), "cluster result drift");
+    json.add_derived("net_over_memory_slowdown", net_s / mem_s.max(1e-9));
+    json.add_derived("cluster_over_memory_slowdown", cl_s / mem_s.max(1e-9));
+
+    // Scenario diversity over the same cluster path: N-body and
+    // Concordance (cf. t05 / t02) in loopback mode.
+    println!("\n-- scenario diversity over the cluster path --");
+    {
+        use gpp::net::cluster::serve_items;
+        use gpp::net::jobs::{NBodyJobConfig, NBODY_SIM};
+        use gpp::util::codec::to_bytes;
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("127.0.0.1:{}", l.local_addr().unwrap().port());
+        drop(l);
+        let cfg = NBodyJobConfig { seed: 11, dt: 0.01, steps: 30 };
+        let items: Vec<Vec<u8>> = [64u64, 96, 128, 160].iter().map(to_bytes).collect();
+        let addr2 = addr.clone();
+        let host = std::thread::spawn(move || {
+            serve_items(&addr2, 2, NBODY_SIM, &to_bytes(&cfg), items, &Default::default())
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let ws: Vec<_> = (0..2)
+            .map(|_| {
+                let a = addr.clone();
+                std::thread::spawn(move || run_worker(&a))
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let report = host.join().unwrap().unwrap();
+        for w in ws {
+            w.join().unwrap().unwrap();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        println!("nbody 4 systems over 2 nodes: {secs:.3}s ({} results)", report.results.len());
+        json.add("nbody cluster loopback 2 nodes", secs);
+    }
+    {
+        use gpp::builder::{NetworkSpec, ProcSpec};
+        use gpp::workloads::concordance::{ConcordanceData, ConcordanceResult};
+        let text = gpp::workloads::corpus::generate(4000, 33);
+        let spec = NetworkSpec::new()
+            .push(ProcSpec::Emit {
+                details: ConcordanceData::emit_details(&text, 6, 2),
+            })
+            .push(ProcSpec::Pipeline {
+                stages: ConcordanceData::stages(),
+            })
+            .push(ProcSpec::Collect {
+                details: ConcordanceResult::result_details(),
+            })
+            .with_placement(NodePlacement::new(2));
+        let (results, secs) = time_it(|| loader::run_cluster_loopback(&spec).unwrap());
+        println!(
+            "concordance N=6 over 2 nodes: {secs:.3}s ({:?} sequences)",
+            results[0].log_prop("totalSequences")
+        );
+        json.add("concordance cluster loopback 2 nodes", secs);
+    }
+
+    json.write("BENCH_net.json").expect("write BENCH_net.json");
+    println!("\nwrote BENCH_net.json");
 }

@@ -23,6 +23,18 @@ pub fn expansion_listing(spec: &NetworkSpec) -> String {
     let mut names: Vec<String> = Vec::new();
     let n = spec.procs.len();
 
+    // Cluster deployment expands to the ClusterBuilder node-loader
+    // preamble: the host installs the definitional objects on every
+    // worker node, then the same process chain runs distributed.
+    if let Some(p) = &spec.placement {
+        let join = p.join.as_deref().unwrap_or("127.0.0.1:0 (loopback)");
+        out.push_str(&format!(
+            "def loader = new NodeLoader(workers: {}, join: \"{join}\")\n",
+            p.workers
+        ));
+        out.push_str("loader.installDefinitions()\n");
+    }
+
     // Channels between adjacent specs: c{i} feeds spec i+1.
     for (i, p) in spec.procs.iter().enumerate() {
         if i + 1 == n {
@@ -213,6 +225,14 @@ mod tests {
         for needle in ["Emit", "OneFanAny", "Worker", "AnyFanOne", "Collect", "PAR"] {
             assert!(listing.contains(needle), "missing {needle}:\n{listing}");
         }
+    }
+
+    #[test]
+    fn placed_spec_expands_node_loader_lines() {
+        let spec = farm(2).with_placement(crate::net::NodePlacement::new(2));
+        let listing = expansion_listing(&spec);
+        assert!(listing.contains("NodeLoader"), "{listing}");
+        assert!(built_line_count(&spec) > built_line_count(&farm(2)));
     }
 
     #[test]

@@ -20,9 +20,13 @@
 //!
 //! The optional `config` line picks the channel transport and executor
 //! ([`RuntimeConfig`]); without it the network runs on the paper's
-//! rendezvous + thread-per-process semantics. [`expand`] renders the
-//! runnable code a spec expands to, reproducing the paper's Table 10
-//! DSL-vs-built-code comparison.
+//! rendezvous + thread-per-process semantics. An optional `hosts` line
+//! (`hosts workers=3 join=host:7777 timeout=5000`, optionally followed
+//! by `place stage=N`) deploys the same chain across a cluster via the
+//! node loader ([`crate::net::loader`]) — terminals on the host, the
+//! farmed section on every worker. [`expand`] renders the runnable code
+//! a spec expands to, reproducing the paper's Table 10 DSL-vs-built-code
+//! comparison.
 
 pub mod expand;
 
@@ -172,11 +176,15 @@ impl ProcSpec {
 }
 
 /// A declarative network: an ordered chain of specs plus the runtime
-/// configuration its channels and executor are built from.
+/// configuration its channels and executor are built from, plus an
+/// optional cluster placement (the `hosts`/`place` DSL lines) that
+/// deploys the same chain across a host and N worker nodes.
 #[derive(Clone, Default)]
 pub struct NetworkSpec {
     pub procs: Vec<ProcSpec>,
     pub config: RuntimeConfig,
+    /// Cluster deployment (`hosts` line); `None` runs in-process.
+    pub placement: Option<crate::net::NodePlacement>,
     /// Source line count when parsed from DSL text (Table 10 metric).
     dsl_lines: Option<usize>,
 }
@@ -186,6 +194,7 @@ impl NetworkSpec {
         Self {
             procs: Vec::new(),
             config: RuntimeConfig::default(),
+            placement: None,
             dsl_lines: None,
         }
     }
@@ -197,6 +206,12 @@ impl NetworkSpec {
 
     pub fn with_config(mut self, config: RuntimeConfig) -> Self {
         self.config = config;
+        self
+    }
+
+    /// Deploy across a cluster (see [`crate::net::loader`]).
+    pub fn with_placement(mut self, placement: crate::net::NodePlacement) -> Self {
+        self.placement = Some(placement);
         self
     }
 
@@ -477,11 +492,11 @@ impl NetworkSpec {
                         );
                         cfg.executor = ExecutorKind::ThreadPerProcess;
                     }
-                    TransportKind::Buffered => {
+                    TransportKind::Buffered | TransportKind::Net => {
                         eprintln!(
-                            "gpp: note: pooled:{n} over buffered edges completes only if \
+                            "gpp: note: pooled:{n} over {} edges completes only if \
                              capacity ({}) covers the whole object stream",
-                            cfg.capacity
+                            cfg.transport, cfg.capacity
                         );
                     }
                 }
@@ -491,9 +506,14 @@ impl NetworkSpec {
     }
 
     /// Build and run on the configured executor; returns the collector
-    /// result objects.
+    /// result objects. A spec with a `hosts` placement deploys as a
+    /// loopback cluster (host plus worker threads over real sockets) —
+    /// use `gpp run --role host|worker` to split across machines.
     pub fn run(&self) -> Result<Vec<Box<dyn DataObject>>> {
         crate::data::object::register_builtin_classes();
+        if self.placement.is_some() {
+            return crate::net::loader::run_cluster_loopback(self);
+        }
         let (tx, rx) = mpsc::channel();
         let procs = self.build(Some(tx))?;
         self.runnable_config().run_named("gppBuilder", procs)?;
@@ -542,6 +562,28 @@ pub fn parse_network(text: &str) -> Result<NetworkSpec> {
             })
         };
         match kw {
+            "hosts" => {
+                let mut p = crate::net::NodePlacement::new(usize_at("workers")?);
+                if let Some(j) = kvs.get("join") {
+                    p.join = Some(j.clone());
+                }
+                if kvs.contains_key("timeout") {
+                    p.timeout_ms = Some(usize_at("timeout")? as u64);
+                }
+                spec.placement = Some(p);
+            }
+            "place" => {
+                let stage = usize_at("stage")?;
+                match spec.placement.as_mut() {
+                    Some(p) => p.stage = Some(stage),
+                    None => {
+                        return Err(NetworkSpec::err(format!(
+                            "line {}: 'place' needs a preceding 'hosts' line",
+                            lineno + 1
+                        )))
+                    }
+                }
+            }
             "config" => {
                 if let Some(t) = kvs.get("transport") {
                     spec.config.transport = TransportKind::parse(t).ok_or_else(|| {
@@ -785,6 +827,27 @@ mod tests {
         crate::workloads::register_all();
         let results = spec.run().unwrap();
         assert_eq!(results[0].log_prop("iterationSum"), Some(Value::Int(40)));
+    }
+
+    #[test]
+    fn parse_applies_hosts_and_place_lines() {
+        let spec = parse_network(
+            "hosts workers=3 join=10.0.0.1:7777 timeout=2500\n\
+             place stage=2\n\
+             emit class=piData init=initClass(4) create=createInstance(10)\n\
+             fanAny destinations=3\n\
+             group workers=3 function=getWithin\n\
+             reduceAny sources=3\n\
+             collect class=piResults init=initClass(1)\n",
+        )
+        .unwrap();
+        let p = spec.placement.expect("placement parsed");
+        assert_eq!(p.workers, 3);
+        assert_eq!(p.join.as_deref(), Some("10.0.0.1:7777"));
+        assert_eq!(p.timeout_ms, Some(2500));
+        assert_eq!(p.stage, Some(2));
+        // `place` without `hosts` is rejected.
+        assert!(parse_network("place stage=1\n").is_err());
     }
 
     #[test]

@@ -4,23 +4,28 @@
 //! Every network builder (patterns, functionals, the declarative DSL)
 //! accepts a `RuntimeConfig`; the default reproduces the paper exactly
 //! (rendezvous channels, thread-per-process). Throughput deployments
-//! flip the transport to `Buffered` and/or the executor to `Pooled`
-//! without touching any process code — the point of the substrate
-//! refactor is that future scaling work (sharding, async backends)
-//! plugs in here instead of rewriting the builders again.
+//! flip the transport to `Buffered` and/or the executor to `Pooled`,
+//! and distribution flips it to `Net` — each edge then runs over a real
+//! TCP socket (loopback in-process; across machines via the cluster
+//! node-loader) — all without touching any process code.
 
 use super::channel::{buffered_channel, buffered_channel_list, channel_list, named_channel, In, Out};
 use super::error::Result;
 use super::executor::{Executor, ExecutorKind, PooledExecutor, ThreadPerProcess};
 use super::process::CSProcess;
 use super::transport::TransportKind;
+use crate::net::NetOptions;
+use crate::util::codec::Wire;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RuntimeConfig {
     pub transport: TransportKind,
-    /// Buffer capacity for `Buffered` channels (ignored by rendezvous).
+    /// Buffer capacity for `Buffered` channels and the local queue of
+    /// `Net` channel reading ends (ignored by rendezvous).
     pub capacity: usize,
     pub executor: ExecutorKind,
+    /// Socket options for `Net` channels (timeouts; `None` = blocking).
+    pub net: NetOptions,
 }
 
 impl Default for RuntimeConfig {
@@ -29,6 +34,7 @@ impl Default for RuntimeConfig {
             transport: TransportKind::Rendezvous,
             capacity: 64,
             executor: ExecutorKind::ThreadPerProcess,
+            net: NetOptions::default(),
         }
     }
 }
@@ -42,6 +48,12 @@ impl RuntimeConfig {
     /// Buffered channels of the given capacity (thread-per-process).
     pub fn buffered(capacity: usize) -> Self {
         Self::default().with_transport(TransportKind::Buffered).with_capacity(capacity)
+    }
+
+    /// Every edge over loopback TCP — the full net protocol without a
+    /// second machine. Same results, real sockets.
+    pub fn net_loopback() -> Self {
+        Self::default().with_transport(TransportKind::Net)
     }
 
     pub fn with_transport(mut self, t: TransportKind) -> Self {
@@ -64,16 +76,35 @@ impl RuntimeConfig {
         self.with_executor(ExecutorKind::Pooled(threads))
     }
 
+    /// Bound every net-channel socket wait (read side) to `ms`
+    /// milliseconds, so a dead peer surfaces as an error instead of a
+    /// hang; `0` disables the bound. The bound must exceed the longest
+    /// consumer stall: on a net channel the ACK wait includes
+    /// downstream backpressure.
+    pub fn with_net_timeout_ms(mut self, ms: u64) -> Self {
+        self.net = self.net.with_read_timeout_ms(ms);
+        self
+    }
+
     /// Create one channel on the configured transport.
-    pub fn channel<T: Send + 'static>(&self, name: &str) -> (Out<T>, In<T>) {
+    ///
+    /// `T: Wire` so the edge *can* be a network edge; in-memory
+    /// transports never serialize. For `Net`, failure to stand up the
+    /// loopback socket pair panics — channel creation has no error
+    /// path, and a host that cannot bind loopback cannot run at all.
+    pub fn channel<T: Wire + Send + 'static>(&self, name: &str) -> (Out<T>, In<T>) {
         match self.transport {
             TransportKind::Rendezvous => named_channel(name),
             TransportKind::Buffered => buffered_channel(name, self.capacity),
+            TransportKind::Net => {
+                crate::net::transport::net_loopback_pair(name, self.capacity, &self.net)
+                    .unwrap_or_else(|e| panic!("net channel '{name}': {e}"))
+            }
         }
     }
 
     /// Create a channel list on the configured transport.
-    pub fn channel_list<T: Send + 'static>(
+    pub fn channel_list<T: Wire + Send + 'static>(
         &self,
         n: usize,
         name: &str,
@@ -81,6 +112,16 @@ impl RuntimeConfig {
         match self.transport {
             TransportKind::Rendezvous => channel_list(n, name),
             TransportKind::Buffered => buffered_channel_list(n, name, self.capacity),
+            TransportKind::Net => {
+                let mut outs = Vec::with_capacity(n);
+                let mut ins = Vec::with_capacity(n);
+                for i in 0..n {
+                    let (o, r) = self.channel(&format!("{name}[{i}]"));
+                    outs.push(o);
+                    ins.push(r);
+                }
+                (outs, ins)
+            }
         }
     }
 
@@ -100,11 +141,12 @@ impl RuntimeConfig {
     /// How many messages a process should take per channel lock: 1 on
     /// rendezvous (each take completes a handshake the partner is
     /// blocked on — batching buys nothing and would only skew farm load
-    /// balance), a modest batch on buffered edges.
+    /// balance), a modest batch on buffered and net edges (the net
+    /// reading end drains its local queue under one lock).
     pub fn io_batch(&self) -> usize {
         match self.transport {
             TransportKind::Rendezvous => 1,
-            TransportKind::Buffered => self.capacity.min(16).max(1),
+            TransportKind::Buffered | TransportKind::Net => self.capacity.min(16).max(1),
         }
     }
 }
@@ -135,6 +177,20 @@ mod tests {
         let (outs, ins) = c.channel_list::<u32>(3, "l");
         assert_eq!(outs.len(), 3);
         assert_eq!(ins[2].capacity(), Some(8));
+    }
+
+    #[test]
+    fn net_config_builds_socket_channels() {
+        let c = RuntimeConfig::net_loopback().with_capacity(4);
+        let (tx, rx) = c.channel::<u32>("x");
+        assert_eq!(tx.transport_kind(), TransportKind::Net);
+        let h = std::thread::spawn(move || tx.write(42));
+        assert_eq!(rx.read().unwrap(), 42);
+        h.join().unwrap().unwrap();
+        assert!(c.io_batch() > 1);
+        let (outs, ins) = c.channel_list::<u32>(2, "l");
+        assert_eq!(outs.len(), 2);
+        assert_eq!(ins[1].transport_kind(), TransportKind::Net);
     }
 
     #[test]

@@ -42,6 +42,12 @@ pub enum TransportKind {
     Rendezvous,
     /// Bounded FIFO buffer with batched take.
     Buffered,
+    /// TCP-framed channel ([`crate::net::transport`]): each edge runs
+    /// over a real socket (loopback when built by `RuntimeConfig`,
+    /// machine-to-machine via the cluster node-loader). Values must be
+    /// `Wire`-codable; semantics (FIFO, poison-drains-first, Alt,
+    /// batched take) match the in-memory transports.
+    Net,
 }
 
 impl TransportKind {
@@ -50,6 +56,7 @@ impl TransportKind {
         match s {
             "rendezvous" | "sync" => Some(TransportKind::Rendezvous),
             "buffered" | "buffer" => Some(TransportKind::Buffered),
+            "net" | "loopback" | "tcp" => Some(TransportKind::Net),
             _ => None,
         }
     }
@@ -60,6 +67,7 @@ impl std::fmt::Display for TransportKind {
         match self {
             TransportKind::Rendezvous => write!(f, "rendezvous"),
             TransportKind::Buffered => write!(f, "buffered"),
+            TransportKind::Net => write!(f, "net"),
         }
     }
 }
@@ -572,7 +580,10 @@ mod tests {
     fn kind_parse_roundtrip() {
         assert_eq!(TransportKind::parse("buffered"), Some(TransportKind::Buffered));
         assert_eq!(TransportKind::parse("rendezvous"), Some(TransportKind::Rendezvous));
+        assert_eq!(TransportKind::parse("net"), Some(TransportKind::Net));
+        assert_eq!(TransportKind::parse("loopback"), Some(TransportKind::Net));
         assert_eq!(TransportKind::parse("nope"), None);
         assert_eq!(TransportKind::Buffered.to_string(), "buffered");
+        assert_eq!(TransportKind::Net.to_string(), "net");
     }
 }

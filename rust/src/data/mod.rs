@@ -12,9 +12,11 @@
 pub mod object;
 pub mod details;
 pub mod message;
+pub mod wire;
 
 pub use details::{DataDetails, LocalDetails, ResultDetails};
 pub use message::{Message, Terminator};
 pub use object::{
     instantiate, register_class, DataObject, Params, ReturnCode, Value,
 };
+pub use wire::{decode_object, encode_object, is_net_mobile, register_wire_class};

@@ -1,0 +1,279 @@
+//! Network mobility for data objects — the piece JCSP calls a
+//! *serializable mobile object* and the paper's cluster chapter (§7)
+//! assumes: "the nature of a channel, be it internal or network, is
+//! transparent to the process definition".
+//!
+//! A [`crate::data::object::DataObject`] is a trait object, so the wire
+//! codec cannot see its concrete type. Classes opt in to network
+//! mobility by registering a `(encode, decode)` pair under their class
+//! name ([`register_wire_class`]); [`encode_object`]/[`decode_object`]
+//! then move any registered object as `class-name + payload` bytes, and
+//! [`Message`] itself becomes [`Wire`]-codable, which is what lets a
+//! whole `Out<Message>`/`In<Message>` edge run over TCP
+//! ([`crate::net::transport`]) with zero process-code changes.
+//!
+//! Classes that never cross a machine boundary don't need any of this —
+//! sending an unregistered class over a net channel fails with a
+//! `Codec` error naming the class.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::csp::error::{GppError, Result};
+use crate::data::message::{Message, Terminator};
+use crate::data::object::{DataObject, Params, Value};
+use crate::util::codec::{from_bytes, to_bytes, Wire};
+
+type EncodeFn = fn(&dyn DataObject) -> Result<Vec<u8>>;
+type DecodeFn = fn(&[u8]) -> Result<Box<dyn DataObject>>;
+
+fn registry() -> &'static Mutex<HashMap<String, (EncodeFn, DecodeFn)>> {
+    static REG: OnceLock<Mutex<HashMap<String, (EncodeFn, DecodeFn)>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn enc_as<T: DataObject + Wire + 'static>(obj: &dyn DataObject) -> Result<Vec<u8>> {
+    let t = obj.as_any().downcast_ref::<T>().ok_or_else(|| {
+        GppError::Codec(format!(
+            "wire encoder registered for another type (object is {})",
+            obj.class_name()
+        ))
+    })?;
+    Ok(to_bytes(t))
+}
+
+fn dec_as<T: DataObject + Wire + 'static>(bytes: &[u8]) -> Result<Box<dyn DataObject>> {
+    Ok(Box::new(from_bytes::<T>(bytes)?))
+}
+
+/// Make class `name` net-mobile: `T` must be the concrete type the
+/// class registry instantiates for `name`. Idempotent.
+pub fn register_wire_class<T: DataObject + Wire + 'static>(name: &str) {
+    registry()
+        .lock()
+        .unwrap()
+        .insert(name.to_string(), (enc_as::<T>, dec_as::<T>));
+}
+
+/// True if `name` has a registered wire form.
+pub fn is_net_mobile(name: &str) -> bool {
+    registry().lock().unwrap().contains_key(name)
+}
+
+/// Encode a data object as `class-name + payload`.
+pub fn encode_object(obj: &dyn DataObject) -> Result<Vec<u8>> {
+    let name = obj.class_name();
+    let enc = registry()
+        .lock()
+        .unwrap()
+        .get(name)
+        .map(|(e, _)| *e)
+        .ok_or_else(|| {
+            GppError::Codec(format!(
+                "class '{name}' is not net-mobile; call register_wire_class::<{name}>"
+            ))
+        })?;
+    let payload = enc(obj)?;
+    let mut out = Vec::with_capacity(name.len() + payload.len() + 16);
+    name.to_string().encode(&mut out);
+    payload.encode(&mut out);
+    Ok(out)
+}
+
+/// Decode a `class-name + payload` buffer back into a boxed object.
+pub fn decode_object(bytes: &[u8]) -> Result<Box<dyn DataObject>> {
+    let mut input = bytes;
+    let name = String::decode(&mut input)?;
+    let payload = Vec::<u8>::decode(&mut input)?;
+    if !input.is_empty() {
+        return Err(GppError::Codec(format!(
+            "{} trailing bytes after object decode",
+            input.len()
+        )));
+    }
+    let dec = registry()
+        .lock()
+        .unwrap()
+        .get(&name)
+        .map(|(_, d)| *d)
+        .ok_or_else(|| {
+            GppError::Codec(format!("class '{name}' is not net-mobile on this node"))
+        })?;
+    dec(&payload)
+}
+
+// ------------------------------------------------ Value / Params wire
+
+const V_INT: u8 = 0;
+const V_FLOAT: u8 = 1;
+const V_STR: u8 = 2;
+const V_BOOL: u8 = 3;
+const V_INT_LIST: u8 = 4;
+const V_FLOAT_LIST: u8 = 5;
+const V_STR_LIST: u8 = 6;
+
+impl Wire for Value {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Value::Int(i) => {
+                out.push(V_INT);
+                i.encode(out);
+            }
+            Value::Float(f) => {
+                out.push(V_FLOAT);
+                f.encode(out);
+            }
+            Value::Str(s) => {
+                out.push(V_STR);
+                s.encode(out);
+            }
+            Value::Bool(b) => {
+                out.push(V_BOOL);
+                b.encode(out);
+            }
+            Value::IntList(v) => {
+                out.push(V_INT_LIST);
+                v.encode(out);
+            }
+            Value::FloatList(v) => {
+                out.push(V_FLOAT_LIST);
+                v.encode(out);
+            }
+            Value::StrList(v) => {
+                out.push(V_STR_LIST);
+                v.encode(out);
+            }
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(match u8::decode(input)? {
+            V_INT => Value::Int(i64::decode(input)?),
+            V_FLOAT => Value::Float(f64::decode(input)?),
+            V_STR => Value::Str(String::decode(input)?),
+            V_BOOL => Value::Bool(bool::decode(input)?),
+            V_INT_LIST => Value::IntList(Vec::<i64>::decode(input)?),
+            V_FLOAT_LIST => Value::FloatList(Vec::<f64>::decode(input)?),
+            V_STR_LIST => Value::StrList(Vec::<String>::decode(input)?),
+            tag => return Err(GppError::Codec(format!("bad Value tag {tag}"))),
+        })
+    }
+}
+
+impl Wire for Params {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(Params(Vec::<Value>::decode(input)?))
+    }
+}
+
+// ------------------------------------------------------- Message wire
+
+const M_DATA: u8 = 0;
+const M_TERM: u8 = 1;
+
+/// `Message` over the wire: data objects go through the wire-class
+/// registry; terminators travel as a bare marker (accumulated log
+/// records do **not** cross a machine boundary — phase logging is
+/// per-node, see ARCHITECTURE.md "net layer").
+///
+/// Encoding an unregistered class panics with an instructive message:
+/// `Wire::encode` is infallible by contract, and the panic unwinds the
+/// writing process like any other process failure (the executor poisons
+/// the network). Check [`is_net_mobile`] first to fail softly.
+impl Wire for Message {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Message::Data(obj) => {
+                out.push(M_DATA);
+                match encode_object(obj.as_ref()) {
+                    Ok(bytes) => bytes.encode(out),
+                    Err(e) => panic!("net channel: {e}"),
+                }
+            }
+            Message::Terminator(_) => out.push(M_TERM),
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        match u8::decode(input)? {
+            M_DATA => {
+                let bytes = Vec::<u8>::decode(input)?;
+                Ok(Message::Data(decode_object(&bytes)?))
+            }
+            M_TERM => Ok(Message::Terminator(Terminator::new())),
+            tag => Err(GppError::Codec(format!("bad Message tag {tag}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::object::downcast_ref;
+    use crate::workloads::montecarlo::PiData;
+
+    #[test]
+    fn value_and_params_roundtrip() {
+        let p = Params::of(vec![
+            Value::Int(-3),
+            Value::Float(2.5),
+            Value::Str("abc".into()),
+            Value::Bool(true),
+            Value::IntList(vec![1, 2]),
+            Value::FloatList(vec![0.5]),
+            Value::StrList(vec!["x".into()]),
+        ]);
+        assert_eq!(from_bytes::<Params>(&to_bytes(&p)).unwrap(), p);
+    }
+
+    #[test]
+    fn object_roundtrip_via_registry() {
+        crate::workloads::register_all();
+        let d = PiData {
+            iterations: 10,
+            within: 7,
+            instance: 3,
+            instances: 0,
+            next_instance: 0,
+        };
+        let bytes = encode_object(&d).unwrap();
+        let back = decode_object(&bytes).unwrap();
+        let b: &PiData = downcast_ref(back.as_ref(), "t").unwrap();
+        assert_eq!((b.iterations, b.within, b.instance), (10, 7, 3));
+    }
+
+    #[test]
+    fn unregistered_class_errors_by_name() {
+        let err = decode_object(&to_bytes(&(
+            "noSuchClass".to_string(),
+            Vec::<u8>::new(),
+        )))
+        .unwrap_err();
+        assert!(err.to_string().contains("noSuchClass"), "{err}");
+    }
+
+    #[test]
+    fn message_roundtrip_data_and_terminator() {
+        crate::workloads::register_all();
+        let msg = Message::data(PiData {
+            iterations: 5,
+            within: 2,
+            instance: 1,
+            instances: 0,
+            next_instance: 0,
+        });
+        let back = from_bytes::<Message>(&to_bytes(&msg)).unwrap();
+        match back {
+            Message::Data(obj) => {
+                let p: &PiData = downcast_ref(obj.as_ref(), "t").unwrap();
+                assert_eq!(p.within, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        let t = from_bytes::<Message>(&to_bytes(&Message::Terminator(Terminator::new()))).unwrap();
+        assert!(t.is_terminator());
+    }
+}

@@ -61,7 +61,7 @@ fn sanitise_config(
                     cfg.executor = ExecutorKind::ThreadPerProcess;
                 }
             }
-            TransportKind::Buffered => match stream_len {
+            TransportKind::Buffered | TransportKind::Net => match stream_len {
                 Some(len) if cfg.capacity < len + process_count && n < process_count => {
                     let cap = len + process_count;
                     eprintln!(
@@ -120,6 +120,8 @@ USAGE: gpp <command> [--flags]
 
 COMMANDS
   run <file>         run a declarative .gpp network file (the DSL)
+                     cluster specs (a `hosts` line): [--role host|worker|loopback
+                     --join addr --workers N --timeout-ms T]
   pi                 Monte-Carlo pi farm      [--workers N --instances I --iterations K --backend native|xla]
   mandelbrot         Mandelbrot farm          [--workers N --width W --height H --max-iter M --out img.ppm]
   jacobi             Jacobi MultiCoreEngine   [--nodes N --size S --margin E]
@@ -127,15 +129,16 @@ COMMANDS
   image              grey+edge StencilEngines [--nodes N --width W --height H]
   goldbach           Goldbach two-phase net   [--workers G --max-prime P]
   concordance        GoP concordance          [--groups G --words W --N n]
-  cluster-host       serve Mandelbrot rows    [--addr A --nodes N --width W --height H --max-iter M]
-  cluster-worker     compute rows             [--addr A]
+  cluster-host       serve Mandelbrot rows    [--join A --nodes N --width W --height H --max-iter M --timeout-ms T]
+  cluster-worker     join a host, run its job [--join A --timeout-ms T]
   verify [which]     run FDR-style assertions: base | gop-pog | all (default all)
   calibrate          measure per-item workload costs on this host
   logdemo            logged concordance run + bottleneck report (paper Sec 8)
 
 SUBSTRATE FLAGS (pi, mandelbrot, concordance; or a `config` line in .gpp files)
-  --transport rendezvous|buffered   channel transport (default rendezvous)
-  --capacity N                      buffered channel capacity (default 64)
+  --transport rendezvous|buffered|net  channel transport (default rendezvous;
+                                       net = every edge over loopback TCP)
+  --capacity N                      buffered/net channel capacity (default 64)
   --executor threads|pooled[:N]     process executor (default threads)
 "#;
 
@@ -145,6 +148,7 @@ fn fail(e: impl std::fmt::Display) -> i32 {
 }
 
 fn cmd_run(args: &Args) -> i32 {
+    use gpp::net::loader;
     let Some(path) = args.positional.get(1) else {
         return fail("run needs a network file");
     };
@@ -152,10 +156,51 @@ fn cmd_run(args: &Args) -> i32 {
         Ok(t) => t,
         Err(e) => return fail(format!("{path}: {e}")),
     };
-    match parse_network(&text).and_then(|spec| {
+    let mut spec = match parse_network(&text).and_then(|spec| {
         spec.validate()?;
-        spec.run()
+        Ok(spec)
     }) {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    // CLI overrides for the `hosts` line (cluster deployment).
+    if let Some(p) = spec.placement.as_mut() {
+        if let Some(j) = args.get("join") {
+            p.join = Some(j.to_string());
+        }
+        if args.get("workers").is_some() {
+            p.workers = args.usize("workers", p.workers).max(1);
+        }
+        if args.get("timeout-ms").is_some() {
+            p.timeout_ms = Some(args.u64("timeout-ms", 0));
+        }
+    }
+    let role = args.get_or("role", "loopback");
+    if spec.placement.is_none() && matches!(role, "host" | "worker") {
+        return fail(format!(
+            "--role {role} needs a cluster spec: add a `hosts workers=N …` line to {path}"
+        ));
+    }
+    let result = match (role, &spec.placement) {
+        (_, None) | ("loopback", Some(_)) | ("local", Some(_)) => spec.run(),
+        ("host", Some(p)) => {
+            let addr = p.join.clone().unwrap_or_else(|| "0.0.0.0:7777".to_string());
+            loader::run_cluster_host(&spec, &addr)
+        }
+        ("worker", Some(p)) => {
+            let addr = p.join.clone().unwrap_or_else(|| "127.0.0.1:7777".to_string());
+            let opts = p.net_options();
+            return match loader::run_cluster_worker(&addr, &opts) {
+                Ok(n) => {
+                    println!("cluster worker: completed {n} items");
+                    0
+                }
+                Err(e) => fail(e),
+            };
+        }
+        (other, Some(_)) => return fail(format!("unknown --role '{other}' (host|worker|loopback)")),
+    };
+    match result {
         Ok(results) => {
             println!("network completed with {} collector result(s)", results.len());
             0
@@ -406,9 +451,23 @@ fn cmd_concordance(args: &Args) -> i32 {
     }
 }
 
+/// `--timeout-ms N` → socket options bounding every net wait.
+fn net_opts_from_args(args: &Args) -> gpp::net::NetOptions {
+    let mut opts = gpp::net::NetOptions::default();
+    if args.get("timeout-ms").is_some() {
+        opts = opts.with_read_timeout_ms(args.u64("timeout-ms", 0));
+    }
+    opts
+}
+
 fn cmd_cluster_host(args: &Args) -> i32 {
-    use gpp::net::cluster::{default_config, run_host};
-    let addr = args.get_or("addr", "127.0.0.1:7777").to_string();
+    use gpp::net::cluster::{default_config, run_host_opts};
+    // `--join` is the canonical spelling; `--addr` still accepted.
+    let addr = args
+        .get("join")
+        .or(args.get("addr"))
+        .unwrap_or("127.0.0.1:7777")
+        .to_string();
     let nodes = args.usize("nodes", 2);
     let width = args.u64("width", 5600) as i64;
     let height = args.u64("height", 3200) as i64;
@@ -416,7 +475,7 @@ fn cmd_cluster_host(args: &Args) -> i32 {
     let cores = args.usize("cores", 1);
     let cfg = default_config(width, height, max_iter, cores);
     let t0 = std::time::Instant::now();
-    match run_host(&addr, nodes, &cfg) {
+    match run_host_opts(&addr, nodes, &cfg, &net_opts_from_args(args)) {
         Ok(c) => {
             println!(
                 "cluster host: {} rows from {nodes} nodes, checksum {}, elapsed {:.3}s",
@@ -431,10 +490,14 @@ fn cmd_cluster_host(args: &Args) -> i32 {
 }
 
 fn cmd_cluster_worker(args: &Args) -> i32 {
-    let addr = args.get_or("addr", "127.0.0.1:7777").to_string();
-    match gpp::net::cluster::run_worker(&addr) {
-        Ok(rows) => {
-            println!("cluster worker: computed {rows} rows");
+    let addr = args
+        .get("join")
+        .or(args.get("addr"))
+        .unwrap_or("127.0.0.1:7777")
+        .to_string();
+    match gpp::net::cluster::run_worker_opts(&addr, &net_opts_from_args(args)) {
+        Ok(items) => {
+            println!("cluster worker: completed {items} items");
             0
         }
         Err(e) => fail(e),

@@ -1,21 +1,34 @@
 //! Host/worker cluster protocol (paper §7), Client-Server pattern:
 //! a worker (client) requests work; the host (server) responds within
 //! finite time with a work item or a terminator. Loop-free ⇒ deadlock
-//! free (Welch's Client-Server proof). The workload is the paper's
-//! cluster experiment: Mandelbrot at width 5600, escape 1000.
+//! free (Welch's Client-Server proof).
+//!
+//! Since the generic-runtime refactor the host loop is
+//! **workload-agnostic**: [`serve_items`] farms opaque `Vec<u8>` work
+//! items to workers that apply a registered *job* ([`super::jobs`]) and
+//! return opaque results. The host tracks the item each connection has
+//! in flight; when a worker dies mid-item (socket error, timeout, kill)
+//! the item is requeued to the surviving workers, so the run still
+//! terminates with a complete result — work is stolen, never lost.
+//! The paper's Mandelbrot cluster (§7, Table 9) is now just one job
+//! ([`run_host`]/[`run_worker`]); Concordance, N-body and any
+//! declarative network ship over the same loop (see [`super::loader`]).
 
+use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::csp::error::{GppError, Result};
 use crate::util::codec::{from_bytes, to_bytes, Wire};
 use crate::workloads::mandelbrot::{MandelbrotCollect, MandelbrotLine};
 
-use super::frame::{read_frame, write_frame};
+use super::frame::{read_frame, set_io_timeouts, write_frame};
+use super::jobs;
+use super::NetOptions;
 
-/// Host-side experiment configuration, sent to each worker on Hello —
-/// the paper's "definitional object" installed by the node loader.
+/// Host-side experiment configuration for the Mandelbrot job, sent to
+/// each worker on Hello — the paper's "definitional object" installed
+/// by the node loader.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterConfig {
     pub width: i64,
@@ -52,95 +65,269 @@ impl Wire for ClusterConfig {
     }
 }
 
+// Protocol tags. Worker → host:
 const W_HELLO: u8 = 1;
-const W_RESULT: u8 = 2;
+/// Bare work request (first request; carries no result).
+const W_REQ: u8 = 2;
+/// `[tag][u64 item id][result bytes…]`
+const W_RESULT: u8 = 3;
+/// `[tag][u64 item id][String error]` — the job itself failed; fatal.
+const W_FAIL: u8 = 4;
+// Host → worker:
+/// `[tag][String job name][config bytes…]`
 const H_CONFIG: u8 = 10;
+/// `[tag][u64 item id][item bytes…]`
 const H_WORK: u8 = 11;
 const H_DONE: u8 = 12;
 
-/// Run the host: serve `height` rows to `nodes` workers, collect the
-/// image, return the collector (with all rows).
-pub fn run_host(addr: &str, nodes: usize, cfg: &ClusterConfig) -> Result<MandelbrotCollect> {
-    let listener = TcpListener::bind(addr)?;
-    let next_row = Arc::new(Mutex::new(0i64));
-    let (tx, rx) = mpsc::channel::<MandelbrotLine>();
-
-    let mut handles = Vec::new();
-    for _ in 0..nodes {
-        let (stream, _) = listener.accept()?;
-        let next_row = next_row.clone();
-        let tx = tx.clone();
-        let cfg = cfg.clone();
-        handles.push(std::thread::spawn(move || -> Result<()> {
-            serve_worker(stream, &cfg, &next_row, &tx)
-        }));
-    }
-    drop(tx);
-
-    let mut collect = MandelbrotCollect {
-        width: cfg.width,
-        height: cfg.height,
-        max_iterations: cfg.max_iterations,
-        rows: vec![Vec::new(); cfg.height as usize],
-        ..Default::default()
-    };
-    for line in rx {
-        collect.rows[line.row as usize] = line.counts;
-        collect.rows_seen += 1;
-    }
-    for h in handles {
-        h.join().map_err(|_| GppError::Net("host thread panicked".into()))??;
-    }
-    if collect.rows_seen != cfg.height {
-        return Err(GppError::Net(format!(
-            "collected {} of {} rows",
-            collect.rows_seen, cfg.height
-        )));
-    }
-    Ok(collect)
+/// What a completed [`serve_items`] run reports.
+#[derive(Debug)]
+pub struct HostReport {
+    /// One result per item, in item order.
+    pub results: Vec<Vec<u8>>,
+    /// Connections that joined the run.
+    pub workers_joined: usize,
+    /// Connections that died mid-run (their work was requeued).
+    pub workers_lost: usize,
+    /// Items that were requeued after a worker loss.
+    pub items_requeued: usize,
 }
 
-fn serve_worker(
-    mut stream: TcpStream,
-    cfg: &ClusterConfig,
-    next_row: &Mutex<i64>,
-    tx: &mpsc::Sender<MandelbrotLine>,
+struct Shared {
+    queue: VecDeque<(usize, Arc<Vec<u8>>)>,
+    results: Vec<Option<Vec<u8>>>,
+    done: usize,
+    total: usize,
+    workers_lost: usize,
+    items_requeued: usize,
+    /// A job reported failure — deterministic items fail everywhere, so
+    /// requeueing cannot help; the whole run aborts.
+    fatal: Option<GppError>,
+}
+
+type HostSync = (Mutex<Shared>, Condvar);
+
+/// Serve `items` to `nodes` workers running `job`, work-stealing style:
+/// any idle worker takes the next item; a dead worker's in-flight item
+/// goes back on the queue. Returns when every item has a result (or a
+/// job failed / every worker died).
+pub fn serve_items(
+    addr: &str,
+    nodes: usize,
+    job: &str,
+    cfg: &[u8],
+    items: Vec<Vec<u8>>,
+    opts: &NetOptions,
+) -> Result<HostReport> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| GppError::Net(format!("host bind {addr}: {e}")))?;
+    let total = items.len();
+    let sync: Arc<HostSync> = Arc::new((
+        Mutex::new(Shared {
+            queue: items
+                .into_iter()
+                .enumerate()
+                .map(|(i, b)| (i, Arc::new(b)))
+                .collect(),
+            results: vec![None; total],
+            done: 0,
+            total,
+            workers_lost: 0,
+            items_requeued: 0,
+            fatal: None,
+        }),
+        Condvar::new(),
+    ));
+
+    // Join phase. Without a timeout, block until the declared fleet has
+    // joined (the paper's §7 contract: the host waits for its
+    // workstations). With a read timeout configured, the join wait is
+    // bounded too: each worker must connect within the timeout of the
+    // previous join, a run whose joined workers already finished every
+    // item stops waiting for stragglers, and a reduced fleet proceeds —
+    // no worker joining at all is an error, never a silent hang.
+    let mut handles = Vec::new();
+    let spawn_conn = |stream: TcpStream, handles: &mut Vec<std::thread::JoinHandle<Result<()>>>| -> Result<()> {
+        set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
+        let sync = sync.clone();
+        let job = job.to_string();
+        let cfg = cfg.to_vec();
+        handles.push(std::thread::spawn(move || {
+            serve_conn(stream, &job, &cfg, &sync)
+        }));
+        Ok(())
+    };
+    match opts.read_timeout {
+        None => {
+            for _ in 0..nodes {
+                let (stream, _) = listener
+                    .accept()
+                    .map_err(|e| GppError::Net(format!("host accept: {e}")))?;
+                spawn_conn(stream, &mut handles)?;
+            }
+        }
+        Some(limit) => {
+            listener
+                .set_nonblocking(true)
+                .map_err(|e| GppError::Net(format!("host accept: {e}")))?;
+            let mut deadline = std::time::Instant::now() + limit;
+            while handles.len() < nodes {
+                {
+                    let g = sync.0.lock().unwrap();
+                    if g.done == g.total || g.fatal.is_some() {
+                        break; // finished (or aborted) with the workers we have
+                    }
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // Blocking mode of an accepted socket is platform-
+                        // dependent under a non-blocking listener; force it.
+                        stream
+                            .set_nonblocking(false)
+                            .map_err(|e| GppError::Net(format!("host accept: {e}")))?;
+                        spawn_conn(stream, &mut handles)?;
+                        deadline = std::time::Instant::now() + limit;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if std::time::Instant::now() >= deadline {
+                            if handles.is_empty() {
+                                return Err(GppError::Net(format!(
+                                    "host accept: no worker joined within {limit:?}"
+                                )));
+                            }
+                            break; // proceed with the reduced fleet
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                    Err(e) => return Err(GppError::Net(format!("host accept: {e}"))),
+                }
+            }
+        }
+    }
+    drop(listener); // no more joins; late connects are refused
+    let workers_joined = handles.len();
+
+    let mut first_err: Option<GppError> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => first_err = first_err.or(Some(GppError::Net("host thread panicked".into()))),
+        }
+    }
+
+    let mut g = sync.0.lock().unwrap();
+    if let Some(e) = &g.fatal {
+        return Err(e.clone());
+    }
+    if g.done != g.total {
+        return Err(GppError::Net(format!(
+            "cluster lost all workers with {} of {} items incomplete",
+            g.total - g.done,
+            g.total
+        )));
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    // Every connection thread has been joined; move the buffers out
+    // instead of cloning (results can be hundreds of MB at full size).
+    let results = std::mem::take(&mut g.results)
+        .into_iter()
+        .map(|r| r.expect("done==total"))
+        .collect();
+    Ok(HostReport {
+        results,
+        workers_joined,
+        workers_lost: g.workers_lost,
+        items_requeued: g.items_requeued,
+    })
+}
+
+/// One host connection. Socket failures mark the worker lost and
+/// requeue its in-flight item — not an error for the run; only a job
+/// failure ([`W_FAIL`]) is fatal.
+fn serve_conn(mut stream: TcpStream, job: &str, cfg: &[u8], sync: &Arc<HostSync>) -> Result<()> {
+    let mut in_flight: Option<(usize, Arc<Vec<u8>>)> = None;
+    match conn_loop(&mut stream, job, cfg, sync, &mut in_flight) {
+        Ok(()) => Ok(()),
+        Err(fatal @ GppError::UserCode { .. }) => Err(fatal),
+        Err(_socket_err) => {
+            // Worker lost: put its item back for the survivors.
+            let (m, cv) = &**sync;
+            let mut g = m.lock().unwrap();
+            g.workers_lost += 1;
+            if let Some((id, item)) = in_flight.take() {
+                if g.results[id].is_none() {
+                    g.queue.push_back((id, item));
+                    g.items_requeued += 1;
+                }
+            }
+            cv.notify_all();
+            Ok(())
+        }
+    }
+}
+
+fn conn_loop(
+    stream: &mut TcpStream,
+    job: &str,
+    cfg: &[u8],
+    sync: &Arc<HostSync>,
+    in_flight: &mut Option<(usize, Arc<Vec<u8>>)>,
 ) -> Result<()> {
     loop {
-        let frame = read_frame(&mut stream)?;
+        let frame = read_frame(stream)?;
         match frame.split_first() {
             Some((&W_HELLO, _)) => {
                 let mut reply = vec![H_CONFIG];
-                reply.extend(to_bytes(cfg));
-                write_frame(&mut stream, &reply)?;
+                job.to_string().encode(&mut reply);
+                reply.extend_from_slice(cfg);
+                write_frame(stream, &reply)?;
+            }
+            Some((&W_REQ, _)) => {
+                if dispatch(stream, sync, in_flight)? {
+                    return Ok(());
+                }
             }
             Some((&W_RESULT, rest)) => {
-                if !rest.is_empty() {
-                    let line: MandelbrotLine = from_bytes(rest)?;
-                    let _ = tx.send(line);
+                let mut input = rest;
+                let id = u64::decode(&mut input)? as usize;
+                let expected = in_flight.as_ref().map(|(i, _)| *i);
+                if expected != Some(id) {
+                    return Err(GppError::Net(format!(
+                        "host: result for item {id} but {expected:?} was in flight"
+                    )));
                 }
-                // Server guarantees a response: work or done.
-                let row = {
-                    let mut g = next_row.lock().unwrap();
-                    if *g < cfg.height {
-                        let r = *g;
-                        *g += 1;
-                        Some(r)
-                    } else {
-                        None
+                {
+                    let (m, cv) = &**sync;
+                    let mut g = m.lock().unwrap();
+                    if g.results[id].is_none() {
+                        g.results[id] = Some(input.to_vec());
+                        g.done += 1;
                     }
+                    *in_flight = None;
+                    cv.notify_all();
+                }
+                if dispatch(stream, sync, in_flight)? {
+                    return Ok(());
+                }
+            }
+            Some((&W_FAIL, rest)) => {
+                let mut input = rest;
+                let id = u64::decode(&mut input)?;
+                let msg = String::decode(&mut input)?;
+                let err = GppError::UserCode {
+                    code: -1,
+                    context: format!("cluster job '{job}' failed on item {id}: {msg}"),
                 };
-                match row {
-                    Some(r) => {
-                        let mut reply = vec![H_WORK];
-                        r.encode(&mut reply);
-                        write_frame(&mut stream, &reply)?;
-                    }
-                    None => {
-                        write_frame(&mut stream, &[H_DONE])?;
-                        return Ok(());
-                    }
-                }
+                let (m, cv) = &**sync;
+                let mut g = m.lock().unwrap();
+                g.fatal = Some(err.clone());
+                cv.notify_all();
+                drop(g);
+                let _ = write_frame(stream, &[H_DONE]);
+                return Err(err);
             }
             other => {
                 return Err(GppError::Net(format!(
@@ -152,16 +339,71 @@ fn serve_worker(
     }
 }
 
-/// Run one worker node: fetch config, then request/compute/return rows
-/// until the host says done. Rows are computed with `cores_per_node`
-/// threads — "each worker node has a process network that exploits the
-/// maximum number of available cores".
+/// Answer a work request: the next queued item, or — once everything is
+/// done — `H_DONE` (returns `true`). Blocks while the queue is empty
+/// but other connections still hold items in flight: those items may
+/// yet be requeued, and the Client-Server guarantee only requires a
+/// response in finite time, which completion or requeue provides.
+fn dispatch(
+    stream: &mut TcpStream,
+    sync: &Arc<HostSync>,
+    in_flight: &mut Option<(usize, Arc<Vec<u8>>)>,
+) -> Result<bool> {
+    let (m, cv) = &**sync;
+    let mut g = m.lock().unwrap();
+    loop {
+        if let Some(e) = &g.fatal {
+            let err = e.clone();
+            drop(g);
+            let _ = write_frame(stream, &[H_DONE]);
+            return Err(err);
+        }
+        if g.done == g.total {
+            drop(g);
+            write_frame(stream, &[H_DONE])?;
+            return Ok(true);
+        }
+        // Skip items that were requeued and then completed elsewhere.
+        while let Some((id, item)) = g.queue.pop_front() {
+            if g.results[id].is_some() {
+                continue;
+            }
+            *in_flight = Some((id, item.clone()));
+            drop(g);
+            let mut reply = vec![H_WORK];
+            (id as u64).encode(&mut reply);
+            reply.extend_from_slice(&item);
+            if let Err(e) = write_frame(stream, &reply) {
+                // This worker is gone before the item went out; the
+                // caller requeues it via in_flight.
+                return Err(e);
+            }
+            return Ok(false);
+        }
+        g = cv.wait(g).unwrap();
+    }
+}
+
+/// Run one worker node: connect, fetch the job + its config from the
+/// host, then request/compute/return items until the host says done.
+/// Returns the number of items this worker completed.
 pub fn run_worker(addr: &str) -> Result<usize> {
-    let mut stream = TcpStream::connect(addr)?;
+    run_worker_opts(addr, &NetOptions::default())
+}
+
+pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
+    jobs::register_builtin_jobs();
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| GppError::Net(format!("worker connect {addr}: {e}")))?;
+    set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
     write_frame(&mut stream, &[W_HELLO])?;
     let frame = read_frame(&mut stream)?;
-    let cfg: ClusterConfig = match frame.split_first() {
-        Some((&H_CONFIG, rest)) => from_bytes(rest)?,
+    let (job_name, cfg) = match frame.split_first() {
+        Some((&H_CONFIG, rest)) => {
+            let mut input = rest;
+            let name = String::decode(&mut input)?;
+            (name, input.to_vec())
+        }
         other => {
             return Err(GppError::Net(format!(
                 "worker: expected config, got {:?}",
@@ -169,22 +411,34 @@ pub fn run_worker(addr: &str) -> Result<usize> {
             )))
         }
     };
+    let job = jobs::lookup(&job_name)?;
 
-    let mut rows_done = 0usize;
-    // First request carries no result.
-    write_frame(&mut stream, &[W_RESULT])?;
+    let mut items_done = 0usize;
+    write_frame(&mut stream, &[W_REQ])?;
     loop {
         let frame = read_frame(&mut stream)?;
         match frame.split_first() {
-            Some((&H_WORK, mut rest)) => {
-                let row = i64::decode(&mut rest)?;
-                let line = compute_row(&cfg, row);
-                rows_done += 1;
-                let mut reply = vec![W_RESULT];
-                reply.extend(to_bytes(&line));
-                write_frame(&mut stream, &reply)?;
+            Some((&H_WORK, rest)) => {
+                let mut input = rest;
+                let id = u64::decode(&mut input)?;
+                match job(&cfg, input) {
+                    Ok(result) => {
+                        let mut reply = vec![W_RESULT];
+                        id.encode(&mut reply);
+                        reply.extend_from_slice(&result);
+                        write_frame(&mut stream, &reply)?;
+                        items_done += 1;
+                    }
+                    Err(e) => {
+                        let mut reply = vec![W_FAIL];
+                        id.encode(&mut reply);
+                        e.to_string().encode(&mut reply);
+                        let _ = write_frame(&mut stream, &reply);
+                        return Err(e);
+                    }
+                }
             }
-            Some((&H_DONE, _)) => return Ok(rows_done),
+            Some((&H_DONE, _)) => return Ok(items_done),
             other => {
                 return Err(GppError::Net(format!(
                     "worker: unexpected host frame {:?}",
@@ -195,7 +449,45 @@ pub fn run_worker(addr: &str) -> Result<usize> {
     }
 }
 
-fn compute_row(cfg: &ClusterConfig, row: i64) -> MandelbrotLine {
+/// Run the Mandelbrot host (paper §7): serve `height` rows to `nodes`
+/// workers over the generic loop, reassemble the image.
+pub fn run_host(addr: &str, nodes: usize, cfg: &ClusterConfig) -> Result<MandelbrotCollect> {
+    run_host_opts(addr, nodes, cfg, &NetOptions::default())
+}
+
+pub fn run_host_opts(
+    addr: &str,
+    nodes: usize,
+    cfg: &ClusterConfig,
+    opts: &NetOptions,
+) -> Result<MandelbrotCollect> {
+    let items: Vec<Vec<u8>> = (0..cfg.height).map(|row| to_bytes(&row)).collect();
+    let report = serve_items(addr, nodes, jobs::MANDELBROT_ROW, &to_bytes(cfg), items, opts)?;
+    let mut collect = MandelbrotCollect {
+        width: cfg.width,
+        height: cfg.height,
+        max_iterations: cfg.max_iterations,
+        rows: vec![Vec::new(); cfg.height as usize],
+        ..Default::default()
+    };
+    for bytes in &report.results {
+        let line: MandelbrotLine = from_bytes(bytes)?;
+        collect.rows[line.row as usize] = line.counts;
+        collect.rows_seen += 1;
+    }
+    if collect.rows_seen != cfg.height {
+        return Err(GppError::Net(format!(
+            "collected {} of {} rows",
+            collect.rows_seen, cfg.height
+        )));
+    }
+    Ok(collect)
+}
+
+/// Compute one Mandelbrot row with `cores_per_node` threads — "each
+/// worker node has a process network that exploits the maximum number
+/// of available cores".
+pub(crate) fn compute_row(cfg: &ClusterConfig, row: i64) -> MandelbrotLine {
     let ci = cfg.y0 + row as f64 * cfg.pixel_delta;
     let w = cfg.width as usize;
     let cores = cfg.cores_per_node.max(1);
@@ -292,5 +584,73 @@ mod tests {
         let cfg = default_config(100, 80, 10, 4);
         let d: ClusterConfig = from_bytes(&to_bytes(&cfg)).unwrap();
         assert_eq!(d, cfg);
+    }
+
+    /// A protocol-speaking client that takes one work item and dies —
+    /// the "pull the network cable mid-computation" case.
+    fn faulty_worker(addr: &str) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_frame(&mut s, &[W_HELLO]).unwrap();
+        let _cfg = read_frame(&mut s).unwrap();
+        write_frame(&mut s, &[W_REQ]).unwrap();
+        let frame = read_frame(&mut s).unwrap();
+        assert_eq!(frame.first(), Some(&H_WORK));
+        drop(s); // die holding the item
+    }
+
+    #[test]
+    fn dead_worker_item_is_requeued_and_run_completes() {
+        let addr = free_addr();
+        let cfg = default_config(48, 32, 30, 1);
+        let seq = mandelbrot::sequential(48, 32, 30, cfg.pixel_delta).unwrap();
+        let addr2 = addr.clone();
+        let cfg2 = cfg.clone();
+        let host = std::thread::spawn(move || run_host(&addr2, 2, &cfg2));
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // The faulty worker joins first so it deterministically holds an
+        // item before the good worker can drain the queue.
+        let a1 = addr.clone();
+        let bad = std::thread::spawn(move || faulty_worker(&a1));
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        let a2 = addr.clone();
+        let good = std::thread::spawn(move || run_worker(&a2));
+        let collect = host.join().unwrap().unwrap();
+        bad.join().unwrap();
+        let done = good.join().unwrap().unwrap();
+        // The survivor did every row, including the one the dead worker held.
+        assert_eq!(done, 32);
+        assert_eq!(collect.rows_seen, 32);
+        assert_eq!(collect.checksum(), seq.checksum());
+    }
+
+    #[test]
+    fn serve_items_reports_losses() {
+        let addr = free_addr();
+        let cfg = to_bytes(&default_config(32, 8, 10, 1));
+        let items: Vec<Vec<u8>> = (0..8i64).map(|r| to_bytes(&r)).collect();
+        let addr2 = addr.clone();
+        let host = std::thread::spawn(move || {
+            serve_items(
+                &addr2,
+                2,
+                jobs::MANDELBROT_ROW,
+                &cfg,
+                items,
+                &NetOptions::default(),
+            )
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let a1 = addr.clone();
+        let bad = std::thread::spawn(move || faulty_worker(&a1));
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        let a2 = addr.clone();
+        let good = std::thread::spawn(move || run_worker(&a2));
+        let report = host.join().unwrap().unwrap();
+        bad.join().unwrap();
+        good.join().unwrap().unwrap();
+        assert_eq!(report.results.len(), 8);
+        assert_eq!(report.workers_lost, 1);
+        assert_eq!(report.items_requeued, 1);
+        assert_eq!(report.workers_joined, 2);
     }
 }

@@ -1,12 +1,47 @@
 //! Length-prefixed message framing over TCP.
+//!
+//! Every socket error — including a configured read/write timeout
+//! firing — surfaces as [`GppError::Net`] with the failing operation in
+//! the message, so a dead or wedged peer is an *error* the caller can
+//! requeue around, never a silent hang (see [`set_io_timeouts`]).
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use crate::csp::error::{GppError, Result};
 
 /// Maximum frame size (64 MB) — sanity bound against corruption.
 pub const MAX_FRAME: u32 = 64 << 20;
+
+/// True if `e` is a read/write timeout (the two kinds `set_read_timeout`
+/// surfaces, platform-dependent).
+pub fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::TimedOut | ErrorKind::WouldBlock)
+}
+
+fn net_err<T>(r: std::io::Result<T>, what: &str) -> Result<T> {
+    r.map_err(|e| {
+        if is_timeout(&e) {
+            GppError::Net(format!("{what}: peer timed out ({e})"))
+        } else {
+            GppError::Net(format!("{what}: {e}"))
+        }
+    })
+}
+
+/// Apply read/write timeouts to a stream. `None` keeps the blocking
+/// default. A timed-out operation then fails with [`GppError::Net`]
+/// instead of blocking forever on a dead peer.
+pub fn set_io_timeouts(
+    stream: &TcpStream,
+    read: Option<Duration>,
+    write: Option<Duration>,
+) -> Result<()> {
+    net_err(stream.set_read_timeout(read), "set_read_timeout")?;
+    net_err(stream.set_write_timeout(write), "set_write_timeout")?;
+    Ok(())
+}
 
 /// Write one frame: u32 LE length then payload.
 pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
@@ -14,22 +49,22 @@ pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
     if len > MAX_FRAME {
         return Err(GppError::Net(format!("frame too large: {len}")));
     }
-    stream.write_all(&len.to_le_bytes())?;
-    stream.write_all(payload)?;
-    stream.flush()?;
+    net_err(stream.write_all(&len.to_le_bytes()), "write frame length")?;
+    net_err(stream.write_all(payload), "write frame payload")?;
+    net_err(stream.flush(), "flush frame")?;
     Ok(())
 }
 
 /// Read one frame.
 pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
     let mut len_buf = [0u8; 4];
-    stream.read_exact(&mut len_buf)?;
+    net_err(stream.read_exact(&mut len_buf), "read frame length")?;
     let len = u32::from_le_bytes(len_buf);
     if len > MAX_FRAME {
         return Err(GppError::Net(format!("frame length {len} exceeds bound")));
     }
     let mut buf = vec![0u8; len as usize];
-    stream.read_exact(&mut buf)?;
+    net_err(stream.read_exact(&mut buf), "read frame payload")?;
     Ok(buf)
 }
 
@@ -64,5 +99,38 @@ mod tests {
         let mut c = TcpStream::connect(addr).unwrap();
         write_frame(&mut c, b"").unwrap();
         assert_eq!(h.join().unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn silent_peer_times_out_as_net_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Server accepts but never writes.
+        let h = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_millis(300));
+            drop(s);
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        set_io_timeouts(&c, Some(Duration::from_millis(50)), None).unwrap();
+        let err = read_frame(&mut c).unwrap_err();
+        match err {
+            GppError::Net(msg) => assert!(msg.contains("timed out"), "{msg}"),
+            other => panic!("expected Net, got {other:?}"),
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dead_peer_is_net_error_not_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            drop(s); // peer dies immediately
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        h.join().unwrap();
+        assert!(matches!(read_frame(&mut c), Err(GppError::Net(_))));
     }
 }

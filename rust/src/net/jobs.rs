@@ -1,0 +1,190 @@
+//! Worker-side job registry: what a cluster worker *does* with a work
+//! item. A job is a pure function `(config bytes, item bytes) → result
+//! bytes`; the host names the job in its Hello reply and every worker
+//! resolves it here — the cluster loop itself never knows the workload
+//! (the ClusterBuilder model: the node loader installs the behaviour,
+//! the runtime moves the bytes).
+//!
+//! Built-ins:
+//!
+//! * [`MANDELBROT_ROW`] — the paper's §7 experiment: item = row index,
+//!   result = the computed `MandelbrotLine`.
+//! * [`NBODY_SIM`] — one whole N-body system per item (the emit-side
+//!   farm of t05): item = body count, result = `(n, checksum)` of the
+//!   final state after `steps` leapfrog iterations.
+//! * [`DSL_APPLY`] — the generic job behind the node-loader: item = a
+//!   wire-encoded data object, config = the function chain a worker of
+//!   the declarative network would apply; result = the transformed
+//!   object. This is what lets *any* `emit → … group/pipeline … →
+//!   collect` network run on the cluster unchanged.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::csp::error::{GppError, Result};
+use crate::data::object::Params;
+use crate::data::wire::{decode_object, encode_object};
+use crate::util::codec::{from_bytes, to_bytes, Wire};
+use crate::workloads::nbody;
+
+use super::cluster::{compute_row, ClusterConfig};
+
+/// A cluster job: `(config bytes, item bytes) → result bytes`.
+pub type JobFn = fn(&[u8], &[u8]) -> Result<Vec<u8>>;
+
+pub const MANDELBROT_ROW: &str = "mandelbrot-row";
+pub const NBODY_SIM: &str = "nbody-sim";
+pub const DSL_APPLY: &str = "gpp-dsl-apply";
+
+fn registry() -> &'static Mutex<HashMap<String, JobFn>> {
+    static REG: OnceLock<Mutex<HashMap<String, JobFn>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Register a job under `name` (idempotent; later registrations win).
+pub fn register_job(name: &str, f: JobFn) {
+    registry().lock().unwrap().insert(name.to_string(), f);
+}
+
+/// Resolve a job by name, with a helpful error naming the node.
+pub fn lookup(name: &str) -> Result<JobFn> {
+    registry().lock().unwrap().get(name).copied().ok_or_else(|| {
+        GppError::Net(format!("job '{name}' is not registered on this worker node"))
+    })
+}
+
+/// Register the built-in jobs (and the workload + wire classes they
+/// need). Idempotent; called by every worker entry point.
+pub fn register_builtin_jobs() {
+    crate::workloads::register_all();
+    register_job(MANDELBROT_ROW, mandelbrot_row);
+    register_job(NBODY_SIM, nbody_sim);
+    register_job(DSL_APPLY, dsl_apply);
+}
+
+fn mandelbrot_row(cfg: &[u8], item: &[u8]) -> Result<Vec<u8>> {
+    let cfg: ClusterConfig = from_bytes(cfg)?;
+    let row: i64 = from_bytes(item)?;
+    Ok(to_bytes(&compute_row(&cfg, row)))
+}
+
+/// Config for [`NBODY_SIM`]: the shared generation parameters; each
+/// item is a body count (mirrors `NBodyData::emit_details(seed, dt,
+/// sizes)` where every size becomes one emitted system).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NBodyJobConfig {
+    pub seed: u64,
+    pub dt: f64,
+    pub steps: usize,
+}
+
+impl Wire for NBodyJobConfig {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.seed.encode(out);
+        self.dt.encode(out);
+        self.steps.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(Self {
+            seed: u64::decode(input)?,
+            dt: f64::decode(input)?,
+            steps: usize::decode(input)?,
+        })
+    }
+}
+
+fn nbody_sim(cfg: &[u8], item: &[u8]) -> Result<Vec<u8>> {
+    let cfg: NBodyJobConfig = from_bytes(cfg)?;
+    let n: u64 = from_bytes(item)?;
+    let d = nbody::sequential(n as usize, cfg.seed, cfg.dt, cfg.steps)?;
+    let checksum = nbody::state_checksum(&d.state.current);
+    Ok(to_bytes(&(n, checksum)))
+}
+
+/// Config for [`DSL_APPLY`]: the function chain (with modifier params)
+/// that the farmed section of a declarative network applies to each
+/// object — a group's single function, or a pipeline's stages in order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DslJobConfig {
+    pub steps: Vec<(String, Params)>,
+}
+
+impl Wire for DslJobConfig {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.steps.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(Self {
+            steps: Vec::<(String, Params)>::decode(input)?,
+        })
+    }
+}
+
+fn dsl_apply(cfg: &[u8], item: &[u8]) -> Result<Vec<u8>> {
+    let cfg: DslJobConfig = from_bytes(cfg)?;
+    let mut obj = decode_object(item)?;
+    for (function, modifier) in &cfg.steps {
+        obj.call(function, modifier, None)?
+            .check(&format!("cluster worker {}.{function}", obj.class_name()))?;
+    }
+    encode_object(obj.as_ref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::cluster::default_config;
+
+    #[test]
+    fn lookup_unknown_names_the_job() {
+        let err = lookup("no-such-job").unwrap_err();
+        assert!(err.to_string().contains("no-such-job"), "{err}");
+    }
+
+    #[test]
+    fn mandelbrot_row_job_roundtrip() {
+        register_builtin_jobs();
+        let cfg = default_config(16, 8, 10, 1);
+        let job = lookup(MANDELBROT_ROW).unwrap();
+        let out = job(&to_bytes(&cfg), &to_bytes(&3i64)).unwrap();
+        let line: crate::workloads::mandelbrot::MandelbrotLine = from_bytes(&out).unwrap();
+        assert_eq!(line.row, 3);
+        assert_eq!(line.counts.len(), 16);
+    }
+
+    #[test]
+    fn nbody_job_matches_local_sequential() {
+        register_builtin_jobs();
+        let cfg = NBodyJobConfig { seed: 5, dt: 0.01, steps: 10 };
+        let job = lookup(NBODY_SIM).unwrap();
+        let out = job(&to_bytes(&cfg), &to_bytes(&16u64)).unwrap();
+        let (n, checksum): (u64, i64) = from_bytes(&out).unwrap();
+        let local = nbody::sequential(16, 5, 0.01, 10).unwrap();
+        assert_eq!(n, 16);
+        assert_eq!(checksum, nbody::state_checksum(&local.state.current));
+    }
+
+    #[test]
+    fn dsl_apply_runs_the_function_chain() {
+        use crate::data::object::downcast_ref;
+        use crate::workloads::montecarlo::PiData;
+        register_builtin_jobs();
+        let item = encode_object(&PiData {
+            iterations: 500,
+            within: 0,
+            instance: 2,
+            instances: 0,
+            next_instance: 0,
+        })
+        .unwrap();
+        let cfg = DslJobConfig {
+            steps: vec![("getWithin".to_string(), Params::empty())],
+        };
+        let job = lookup(DSL_APPLY).unwrap();
+        let out = job(&to_bytes(&cfg), &item).unwrap();
+        let obj = decode_object(&out).unwrap();
+        let p: &PiData = downcast_ref(obj.as_ref(), "t").unwrap();
+        assert!(p.within > 0, "getWithin ran on the worker");
+        assert_eq!(p.iterations, 500);
+    }
+}

@@ -1,0 +1,414 @@
+//! ClusterBuilder-style node loader: deploy a declarative
+//! [`NetworkSpec`] across a host plus N worker nodes.
+//!
+//! The follow-on ClusterBuilder paper (Kerridge, arXiv:2206.04429)
+//! generalises the paper's hand-wired §7 cluster: a loader reads the
+//! network specification, keeps the terminals (Emit, Collect) on the
+//! host node, and installs the farmed section — a group's function or a
+//! pipeline's stage chain — on every worker node. Here that is two DSL
+//! lines on top of any existing `.gpp` network:
+//!
+//! ```text
+//! hosts workers=3 join=127.0.0.1:7777 timeout=5000
+//! place stage=2            # optional: name the farmed spec explicitly
+//! emit    class=piData init=initClass(64) create=createInstance(100000)
+//! fanAny  destinations=3
+//! group   workers=3 function=getWithin
+//! reduceAny sources=3
+//! collect class=piResults init=initClass(1)
+//! ```
+//!
+//! Placement: the Emit runs on the host (items are the emitted objects,
+//! wire-encoded via [`crate::data::wire`]); every farmable middle spec
+//! (groups, pipelines) becomes the worker-side function chain of a
+//! [`super::jobs::DSL_APPLY`] job served by the generic work-stealing
+//! host loop ([`super::cluster::serve_items`]); the Collect runs on the
+//! host over results in emission order. Spreader/reducer connectors
+//! (`fanAny`/`reduceAny`) describe in-memory distribution and are
+//! subsumed by the cluster farm. Worker death, requeue and timeout
+//! semantics come from the cluster layer unchanged.
+
+use crate::builder::{NetworkSpec, ProcSpec};
+use crate::csp::error::{GppError, Result};
+use crate::data::details::{DataDetails, ResultDetails};
+use crate::data::object::{instantiate, DataObject, Params, ReturnCode};
+use crate::data::wire::{decode_object, encode_object, is_net_mobile};
+use crate::util::codec::to_bytes;
+
+use super::cluster::{run_worker_opts, serve_items};
+use super::jobs::{self, DslJobConfig};
+use super::NetOptions;
+
+/// Where and how a declarative network is deployed — the `hosts` /
+/// `place` DSL lines.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodePlacement {
+    /// Worker node count the host waits for.
+    pub workers: usize,
+    /// Host bind address / worker join address. `None` = loopback.
+    pub join: Option<String>,
+    /// Socket read timeout (dead-peer detection), milliseconds.
+    pub timeout_ms: Option<u64>,
+    /// Spec index that must be the farmed section (validated); `None`
+    /// farms every farmable middle spec.
+    pub stage: Option<usize>,
+}
+
+impl NodePlacement {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+            join: None,
+            timeout_ms: None,
+            stage: None,
+        }
+    }
+
+    pub fn net_options(&self) -> NetOptions {
+        let mut o = NetOptions::default();
+        if let Some(ms) = self.timeout_ms {
+            o = o.with_read_timeout_ms(ms);
+        }
+        o
+    }
+}
+
+/// The host-side deployment plan extracted from a spec.
+pub struct ClusterPlan {
+    pub emit: DataDetails,
+    /// Worker-side function chain, in network order.
+    pub steps: Vec<(String, Params)>,
+    pub collect: ResultDetails,
+}
+
+fn err(msg: String) -> GppError {
+    GppError::InvalidNetwork(msg)
+}
+
+/// Check the spec is cluster-deployable and split it into host and
+/// worker responsibilities.
+pub fn plan(spec: &NetworkSpec) -> Result<ClusterPlan> {
+    spec.validate()?;
+    let n = spec.procs.len();
+    let emit = match &spec.procs[0] {
+        ProcSpec::Emit { details } => details.clone(),
+        other => {
+            return Err(err(format!(
+                "cluster deployment needs a plain Emit first, found {}",
+                other.label()
+            )))
+        }
+    };
+    let collect = match &spec.procs[n - 1] {
+        ProcSpec::Collect { details } => details.clone(),
+        other => {
+            return Err(err(format!(
+                "cluster deployment needs a Collect last, found {}",
+                other.label()
+            )))
+        }
+    };
+    let mut steps: Vec<(String, Params)> = Vec::new();
+    let mut farmed_indices: Vec<usize> = Vec::new();
+    for (i, p) in spec.procs.iter().enumerate().take(n - 1).skip(1) {
+        match p {
+            // In-memory distribution connectors: subsumed by the farm.
+            ProcSpec::OneFanAny { .. } | ProcSpec::AnyFanOne { .. } => {}
+            ProcSpec::AnyGroupAny {
+                function,
+                modifier,
+                local,
+                out_data,
+                ..
+            } => {
+                if local.is_some() {
+                    return Err(err(
+                        "cluster deployment of groups with local state is not supported yet".into(),
+                    ));
+                }
+                if !*out_data {
+                    // In-process, out_data=false workers withhold their
+                    // objects; shipping them anyway would change results.
+                    return Err(err(
+                        "cluster deployment of groups with outData=false is not supported".into(),
+                    ));
+                }
+                steps.push((function.clone(), modifier.clone()));
+                farmed_indices.push(i);
+            }
+            ProcSpec::Pipeline { stages } => {
+                for s in stages {
+                    if s.local.is_some() {
+                        return Err(err(
+                            "cluster deployment of pipeline stages with local state is not supported yet"
+                                .into(),
+                        ));
+                    }
+                    steps.push((s.function.clone(), s.modifier.clone()));
+                }
+                farmed_indices.push(i);
+            }
+            other => {
+                return Err(err(format!(
+                    "cluster deployment does not support {} (position {i})",
+                    other.label()
+                )))
+            }
+        }
+    }
+    if steps.is_empty() {
+        return Err(err(
+            "cluster deployment needs at least one group or pipeline to farm".into(),
+        ));
+    }
+    if let Some(placement) = &spec.placement {
+        if let Some(stage) = placement.stage {
+            if !farmed_indices.contains(&stage) {
+                return Err(err(format!(
+                    "place stage={stage} does not name a farmable spec (farmable: {farmed_indices:?})"
+                )));
+            }
+            // `place` pins the farmed section: other farmable specs
+            // would have to run host-side, which the loader does not
+            // support — reject rather than silently farming them too.
+            if farmed_indices.len() > 1 {
+                return Err(err(format!(
+                    "place stage={stage} but specs {farmed_indices:?} are all farmable; \
+                     host-side groups/pipelines are not supported — farm one section"
+                )));
+            }
+        }
+    }
+    if !is_net_mobile(&emit.class) {
+        return Err(err(format!(
+            "class '{}' is not net-mobile (no wire form registered) — it cannot cross to a worker node",
+            emit.class
+        )));
+    }
+    Ok(ClusterPlan {
+        emit,
+        steps,
+        collect,
+    })
+}
+
+/// Run the Emit protocol locally and wire-encode every created object —
+/// these are the cluster work items, in emission order.
+fn emit_items(d: &DataDetails) -> Result<Vec<Vec<u8>>> {
+    let mut proto = instantiate(&d.class)?;
+    proto
+        .call(&d.init_method, &d.init_data, None)?
+        .check(&format!("node-loader Emit init {}.{}", d.class, d.init_method))?;
+    let mut items = Vec::new();
+    loop {
+        let mut obj = proto.deep_clone();
+        let rc = obj
+            .call(&d.create_method, &d.create_data, Some(proto.as_mut()))?
+            .check(&format!("node-loader Emit create {}.{}", d.class, d.create_method))?;
+        match rc {
+            ReturnCode::NormalContinuation | ReturnCode::CompletedOk => {
+                items.push(encode_object(obj.as_ref())?);
+            }
+            ReturnCode::NormalTermination => break,
+            ReturnCode::Error(_) => unreachable!("check() surfaced the error"),
+        }
+    }
+    Ok(items)
+}
+
+/// Feed decoded worker results through the Collect protocol.
+fn collect_results(rd: &ResultDetails, results: &[Vec<u8>]) -> Result<Box<dyn DataObject>> {
+    let mut result = instantiate(&rd.class)?;
+    result
+        .call(&rd.init_method, &rd.init_data, None)?
+        .check(&format!("node-loader Collect init {}.{}", rd.class, rd.init_method))?;
+    for bytes in results {
+        let mut obj = decode_object(bytes)?;
+        result
+            .call(&rd.collect_method, &Params::empty(), Some(obj.as_mut()))?
+            .check(&format!("node-loader Collect {}.{}", rd.class, rd.collect_method))?;
+    }
+    result
+        .call(&rd.finalise_method, &rd.finalise_data, None)?
+        .check(&format!(
+            "node-loader Collect finalise {}.{}",
+            rd.class, rd.finalise_method
+        ))?;
+    Ok(result)
+}
+
+/// Host role: bind `addr`, wait for the placement's worker count, farm
+/// the network, return the collector result objects.
+pub fn run_cluster_host(spec: &NetworkSpec, addr: &str) -> Result<Vec<Box<dyn DataObject>>> {
+    jobs::register_builtin_jobs();
+    let placement = spec
+        .placement
+        .clone()
+        .ok_or_else(|| err("spec has no hosts line".into()))?;
+    let plan = plan(spec)?;
+    let items = emit_items(&plan.emit)?;
+    let cfg = to_bytes(&DslJobConfig {
+        steps: plan.steps.clone(),
+    });
+    let report = serve_items(
+        addr,
+        placement.workers,
+        jobs::DSL_APPLY,
+        &cfg,
+        items,
+        &placement.net_options(),
+    )?;
+    Ok(vec![collect_results(&plan.collect, &report.results)?])
+}
+
+/// Worker role: join the host at `addr` and serve until done.
+pub fn run_cluster_worker(addr: &str, opts: &NetOptions) -> Result<usize> {
+    run_worker_opts(addr, opts)
+}
+
+/// Single-machine deployment: host plus `workers` worker threads over
+/// loopback TCP — the full cluster path without a second machine.
+pub fn run_cluster_loopback(spec: &NetworkSpec) -> Result<Vec<Box<dyn DataObject>>> {
+    jobs::register_builtin_jobs();
+    let placement = spec
+        .placement
+        .clone()
+        .ok_or_else(|| err("spec has no hosts line".into()))?;
+    // Reserve a loopback port.
+    let l = std::net::TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| GppError::Net(format!("bind loopback: {e}")))?;
+    let addr = format!(
+        "127.0.0.1:{}",
+        l.local_addr().map_err(|e| GppError::Net(e.to_string()))?.port()
+    );
+    drop(l);
+
+    let spec2 = spec.clone();
+    let addr2 = addr.clone();
+    let host = std::thread::spawn(move || run_cluster_host(&spec2, &addr2));
+    let opts = placement.net_options();
+    let mut workers = Vec::new();
+    for _ in 0..placement.workers {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            // The host binds before accepting; retry the join briefly so
+            // worker threads need no external start-up ordering.
+            let mut last = GppError::Net("unreached".into());
+            for _ in 0..100 {
+                match run_cluster_worker(&addr, &opts) {
+                    Ok(n) => return Ok(n),
+                    Err(e) => {
+                        let transient = e.to_string().contains("connect");
+                        last = e;
+                        if !transient {
+                            return Err(last);
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                }
+            }
+            Err(last)
+        }));
+    }
+    let result = host
+        .join()
+        .map_err(|_| GppError::Net("cluster host thread panicked".into()))?;
+    for w in workers {
+        // Join for cleanup only: the host's outcome is authoritative. A
+        // completed host proves the work is done, and a failed host is
+        // the root cause (workers then fail with secondary connect /
+        // closed-socket errors that would only mask it).
+        let _ = w.join();
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::builder::parse_network;
+    use crate::data::object::Value;
+
+    fn pi_cluster_spec(workers: usize) -> NetworkSpec {
+        parse_network(&format!(
+            "hosts workers={workers}\n\
+             emit class=piData init=initClass(8) create=createInstance(200)\n\
+             fanAny destinations={workers}\n\
+             group workers={workers} function=getWithin\n\
+             reduceAny sources={workers}\n\
+             collect class=piResults init=initClass(1)\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn plan_extracts_terminals_and_steps() {
+        crate::workloads::register_all();
+        let spec = pi_cluster_spec(2);
+        let p = plan(&spec).unwrap();
+        assert_eq!(p.emit.class, "piData");
+        assert_eq!(p.collect.class, "piResults");
+        assert_eq!(p.steps, vec![("getWithin".to_string(), Params::empty())]);
+    }
+
+    #[test]
+    fn plan_rejects_unfarmable_and_non_mobile() {
+        crate::workloads::register_all();
+        // No group/pipeline in the middle.
+        let spec = parse_network(
+            "hosts workers=1\n\
+             emit class=piData init=initClass(1) create=createInstance(1)\n\
+             fanAny destinations=1\n\
+             reduceAny sources=1\n\
+             collect class=piResults init=initClass(1)\n",
+        )
+        .unwrap();
+        assert!(plan(&spec).is_err());
+        // place naming a non-farmable index (1 = the fanAny connector).
+        let mut spec = pi_cluster_spec(2);
+        spec.placement.as_mut().unwrap().stage = Some(1);
+        assert!(plan(&spec).unwrap_err().to_string().contains("place"));
+        // place naming the group (index 2) is fine.
+        let mut ok = pi_cluster_spec(2);
+        ok.placement.as_mut().unwrap().stage = Some(2);
+        assert!(plan(&ok).is_ok());
+        // outData=false groups withhold objects in-process; the loader
+        // cannot reproduce that, so it must refuse.
+        let spec = parse_network(
+            "hosts workers=1\n\
+             emit class=piData init=initClass(1) create=createInstance(1)\n\
+             fanAny destinations=1\n\
+             group workers=1 function=getWithin outData=false\n\
+             reduceAny sources=1\n\
+             collect class=piResults init=initClass(1)\n",
+        )
+        .unwrap();
+        assert!(plan(&spec).unwrap_err().to_string().contains("outData"));
+    }
+
+    #[test]
+    fn loopback_cluster_matches_local_run() {
+        crate::workloads::register_all();
+        // Local in-memory run of the same network (placement ignored by
+        // building the plain spec without a hosts line).
+        let local = parse_network(
+            "emit class=piData init=initClass(8) create=createInstance(200)\n\
+             fanAny destinations=2\n\
+             group workers=2 function=getWithin\n\
+             reduceAny sources=2\n\
+             collect class=piResults init=initClass(1)\n",
+        )
+        .unwrap()
+        .run()
+        .unwrap();
+        let clustered = run_cluster_loopback(&pi_cluster_spec(2)).unwrap();
+        assert_eq!(
+            clustered[0].log_prop("withinSum"),
+            local[0].log_prop("withinSum")
+        );
+        assert_eq!(
+            clustered[0].log_prop("iterationSum"),
+            Some(Value::Int(8 * 200))
+        );
+    }
+}

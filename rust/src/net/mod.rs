@@ -1,4 +1,6 @@
-//! Cluster runtime (paper §7): host + worker nodes over TCP.
+//! Distributed runtime (paper §7 + the ClusterBuilder follow-on):
+//! network channels, a generic work-stealing host/worker cluster, and a
+//! node-loader that deploys declarative networks across nodes.
 //!
 //! "One of the workstations is designated as the host node and the
 //! remainder as worker nodes. The host node … executes the emit and
@@ -7,18 +9,64 @@
 //! location information to the host … the complete cluster can be
 //! initialised and run from a single host workstation."
 //!
-//! Here the "workstations" are processes on localhost (the paper's
-//! 1-Gbit Ethernet becomes loopback; the DES models the latency term for
-//! Table 9's shape). The process bodies are unchanged — [`netchan`]
-//! exposes the same `read`/`write` rendezvous interface as
-//! [`crate::csp::channel`], reproducing JCSP's channel-type transparency
-//! (§11.7). The Client-Server pattern (worker requests a line, host
-//! responds with work or a terminator) is loop-free, hence
-//! deadlock-free by Welch's proof [20,21].
+//! Layers, bottom up:
+//!
+//! * [`frame`] — length-prefixed TCP framing with timeout-aware errors;
+//! * [`netchan`] — raw acknowledged channel ends (`NetOut`/`NetIn`);
+//! * [`transport`] — the full [`crate::csp::transport::Transport`]
+//!   contract over sockets (`TransportKind::Net` edges);
+//! * [`cluster`] — a generic work-stealing host loop (Client-Server,
+//!   loop-free hence deadlock-free by Welch's proof [20,21]) with
+//!   per-connection outstanding-work tracking: a worker dying mid-item
+//!   requeues the item to survivors, so the host still terminates with
+//!   a complete result;
+//! * [`jobs`] — the worker-side job registry (what a worker *does* with
+//!   an item), including the generic DSL-apply job;
+//! * [`loader`] — the ClusterBuilder-style node-loader: shard a
+//!   [`crate::builder::NetworkSpec`] across a host plus N workers
+//!   (`hosts`/`place` DSL lines, `--role host|worker --join addr`).
 
 pub mod frame;
 pub mod netchan;
+pub mod transport;
 pub mod cluster;
+pub mod jobs;
+pub mod loader;
 
-pub use cluster::{run_host, run_worker, ClusterConfig};
-pub use netchan::{NetIn, NetOut};
+pub use cluster::{run_host, run_worker, ClusterConfig, HostReport};
+pub use jobs::register_builtin_jobs;
+pub use loader::NodePlacement;
+pub use netchan::{NetIn, NetMsg, NetOut};
+
+use std::time::Duration;
+
+/// Socket tuning shared by net channels and the cluster protocol.
+///
+/// `read_timeout` bounds every single socket wait: a peer silent for
+/// longer fails the operation with [`crate::csp::error::GppError::Net`]
+/// instead of hanging the network. Leave `None` (the default) when
+/// waits are legitimately unbounded — e.g. a cluster host waiting for a
+/// worker to finish a long item; set it when you want dead-peer
+/// detection and can bound the longest legitimate stall.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetOptions {
+    pub read_timeout: Option<Duration>,
+    pub write_timeout: Option<Duration>,
+}
+
+impl NetOptions {
+    /// Bound reads (and thus dead-peer detection) to `ms` milliseconds.
+    /// `0` disables the bound (blocking reads) — `set_read_timeout`
+    /// rejects a zero `Duration`, and "0 = off" is what a CLI user
+    /// passing `--timeout-ms 0` means.
+    pub fn with_read_timeout_ms(mut self, ms: u64) -> Self {
+        self.read_timeout = (ms > 0).then(|| Duration::from_millis(ms));
+        self
+    }
+
+    /// Bound writes to `ms` milliseconds; `0` disables the bound.
+    pub fn with_write_timeout_ms(mut self, ms: u64) -> Self {
+        self.write_timeout = (ms > 0).then(|| Duration::from_millis(ms));
+        self
+    }
+}

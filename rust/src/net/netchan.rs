@@ -4,21 +4,58 @@
 //!
 //! A `NetOut<T>`/`NetIn<T>` pair moves `Wire`-codable values as frames;
 //! writes are acknowledged (one in flight), giving the unbuffered
-//! synchronised semantics CSP channels require.
+//! synchronised semantics CSP channels require. Control frames carry
+//! the terminator and **poison** protocols across the wire, and ACK
+//! tags are validated unconditionally — a corrupt or misordered control
+//! frame is a [`GppError::Net`], in release builds too.
+//!
+//! These are the raw request/response ends; [`super::transport`] builds
+//! the full [`crate::csp::transport::Transport`] contract (Alt
+//! signalling, batched take) on top of the same tags.
 
 use std::marker::PhantomData;
 use std::net::TcpStream;
 use std::sync::Mutex;
+use std::time::Duration;
 
-use crate::csp::error::Result;
+use crate::csp::error::{GppError, Result};
 use crate::util::codec::{from_bytes, to_bytes, Wire};
 
-use super::frame::{read_frame, write_frame};
+use super::frame::{read_frame, set_io_timeouts, write_frame};
 
 /// Tag byte distinguishing payloads from control messages.
-const TAG_DATA: u8 = 1;
-const TAG_TERM: u8 = 2;
-const TAG_ACK: u8 = 3;
+pub(crate) const TAG_DATA: u8 = 1;
+pub(crate) const TAG_TERM: u8 = 2;
+pub(crate) const TAG_ACK: u8 = 3;
+pub(crate) const TAG_POISON: u8 = 4;
+
+/// Validate an acknowledgement frame. Checked unconditionally (not
+/// `debug_assert`): release builds must reject corrupt/misordered
+/// control frames too. A poison frame in ack position propagates the
+/// peer's poison to this end.
+pub(crate) fn check_ack(frame: &[u8], context: &str) -> Result<()> {
+    match frame.first() {
+        Some(&TAG_ACK) => Ok(()),
+        Some(&TAG_POISON) => Err(GppError::Poisoned),
+        other => Err(GppError::Net(format!(
+            "{context}: expected ack, got frame tag {other:?}"
+        ))),
+    }
+}
+
+/// The writer side of one synchronised exchange: send `payload`, block
+/// for the acknowledgement, validate it. Shared by [`NetOut`] and the
+/// transport-core writing end ([`super::transport`]) so the two stay
+/// protocol-identical.
+pub(crate) fn send_and_ack(
+    stream: &mut std::net::TcpStream,
+    payload: &[u8],
+    context: &str,
+) -> Result<()> {
+    write_frame(stream, payload)?;
+    let ack = read_frame(stream)?;
+    check_ack(&ack, context)
+}
 
 /// A value or end-of-stream — network channels carry the same
 /// terminator protocol as in-memory ones.
@@ -31,6 +68,7 @@ pub enum NetMsg<T> {
 /// Writing end over a TCP stream.
 pub struct NetOut<T: Wire> {
     stream: Mutex<TcpStream>,
+    poisoned: std::sync::atomic::AtomicBool,
     _marker: PhantomData<T>,
 }
 
@@ -38,32 +76,78 @@ impl<T: Wire> NetOut<T> {
     pub fn new(stream: TcpStream) -> Self {
         Self {
             stream: Mutex::new(stream),
+            poisoned: std::sync::atomic::AtomicBool::new(false),
             _marker: PhantomData,
         }
     }
 
+    /// Like [`NetOut::new`] with socket read/write timeouts applied, so
+    /// a dead peer fails the write instead of hanging it. The read
+    /// timeout bounds the ACK wait: it must exceed the reader's longest
+    /// processing stall, since the ACK is the rendezvous.
+    pub fn with_timeouts(
+        stream: TcpStream,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<Self> {
+        set_io_timeouts(&stream, read, write)?;
+        Ok(Self::new(stream))
+    }
+
+    fn poison_check(&self) -> Result<()> {
+        if self.poisoned.load(std::sync::atomic::Ordering::SeqCst) {
+            Err(GppError::Poisoned)
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Any failed send/ack exchange latches the channel: after a
+    /// timeout or corrupt ack the stream's value/ack pairing can no
+    /// longer be trusted (the "missing" ack may still be in flight), so
+    /// a retried write would desync the protocol by one forever. The
+    /// channel dies with the first error instead.
+    fn latch_on_err(&self, r: Result<()>) -> Result<()> {
+        if r.is_err() {
+            self.poisoned.store(true, std::sync::atomic::Ordering::SeqCst);
+        }
+        r
+    }
+
     /// Synchronised write: block until the reader acknowledges.
     pub fn write(&self, value: &T) -> Result<()> {
+        self.poison_check()?;
         let mut s = self.stream.lock().unwrap();
         let mut payload = vec![TAG_DATA];
         payload.extend(to_bytes(value));
-        write_frame(&mut s, &payload)?;
-        let ack = read_frame(&mut s)?;
-        debug_assert_eq!(ack.first(), Some(&TAG_ACK));
-        Ok(())
+        self.latch_on_err(send_and_ack(&mut s, &payload, "NetOut::write"))
     }
 
     pub fn write_terminator(&self) -> Result<()> {
+        self.poison_check()?;
         let mut s = self.stream.lock().unwrap();
-        write_frame(&mut s, &[TAG_TERM])?;
-        let _ack = read_frame(&mut s)?;
-        Ok(())
+        self.latch_on_err(send_and_ack(&mut s, &[TAG_TERM], "NetOut::write_terminator"))
+    }
+
+    /// Poison the channel: tell the peer (best effort) and fail all
+    /// future writes locally.
+    pub fn poison(&self) {
+        if !self.poisoned.swap(true, std::sync::atomic::Ordering::SeqCst) {
+            if let Ok(mut s) = self.stream.lock() {
+                let _ = write_frame(&mut s, &[TAG_POISON]);
+            }
+        }
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(std::sync::atomic::Ordering::SeqCst)
     }
 }
 
 /// Reading end over a TCP stream.
 pub struct NetIn<T: Wire> {
     stream: Mutex<TcpStream>,
+    poisoned: std::sync::atomic::AtomicBool,
     _marker: PhantomData<T>,
 }
 
@@ -71,26 +155,83 @@ impl<T: Wire> NetIn<T> {
     pub fn new(stream: TcpStream) -> Self {
         Self {
             stream: Mutex::new(stream),
+            poisoned: std::sync::atomic::AtomicBool::new(false),
             _marker: PhantomData,
         }
     }
 
+    /// Like [`NetIn::new`] with socket timeouts applied; the read
+    /// timeout bounds how long a read waits for a silent peer.
+    pub fn with_timeouts(
+        stream: TcpStream,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<Self> {
+        set_io_timeouts(&stream, read, write)?;
+        Ok(Self::new(stream))
+    }
+
     /// Blocking read of the next message; sends the rendezvous ack.
+    /// A poison frame from the writer surfaces as [`GppError::Poisoned`].
+    ///
+    /// Any failure latches the channel and (where the wire may still be
+    /// up: decode failure, bad tag) tells the writer with a poison
+    /// frame — otherwise the writer, blocked awaiting its ack, would
+    /// hang forever. A timed-out read may have consumed partial frame
+    /// bytes, so the stream cannot be retried either way.
     pub fn read(&self) -> Result<NetMsg<T>> {
+        if self.poisoned.load(std::sync::atomic::Ordering::SeqCst) {
+            return Err(GppError::Poisoned);
+        }
         let mut s = self.stream.lock().unwrap();
-        let frame = read_frame(&mut s)?;
+        let latch = |r: Result<NetMsg<T>>| {
+            if r.is_err() {
+                self.poisoned.store(true, std::sync::atomic::Ordering::SeqCst);
+            }
+            r
+        };
+        let frame = match read_frame(&mut s) {
+            Ok(f) => f,
+            Err(e) => return latch(Err(e)),
+        };
         let msg = match frame.split_first() {
-            Some((&TAG_DATA, rest)) => NetMsg::Data(from_bytes::<T>(rest)?),
+            Some((&TAG_DATA, rest)) => match from_bytes::<T>(rest) {
+                Ok(v) => NetMsg::Data(v),
+                Err(e) => {
+                    let _ = write_frame(&mut s, &[TAG_POISON]);
+                    return latch(Err(e));
+                }
+            },
             Some((&TAG_TERM, _)) => NetMsg::Terminator,
+            Some((&TAG_POISON, _)) => {
+                return latch(Err(GppError::Poisoned));
+            }
             other => {
-                return Err(crate::csp::error::GppError::Net(format!(
+                let _ = write_frame(&mut s, &[TAG_POISON]);
+                return latch(Err(GppError::Net(format!(
                     "bad frame tag {:?}",
                     other.map(|(t, _)| t)
-                )))
+                ))));
             }
         };
-        write_frame(&mut s, &[TAG_ACK])?;
-        Ok(msg)
+        match write_frame(&mut s, &[TAG_ACK]) {
+            Ok(()) => Ok(msg),
+            Err(e) => latch(Err(e)),
+        }
+    }
+
+    /// Poison the channel: fail local reads and tell the writer (the
+    /// next write's ack slot carries the poison frame).
+    pub fn poison(&self) {
+        if !self.poisoned.swap(true, std::sync::atomic::Ordering::SeqCst) {
+            if let Ok(mut s) = self.stream.lock() {
+                let _ = write_frame(&mut s, &[TAG_POISON]);
+            }
+        }
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(std::sync::atomic::Ordering::SeqCst)
     }
 }
 
@@ -145,5 +286,94 @@ mod tests {
         let elapsed = t0.elapsed();
         assert!(elapsed >= std::time::Duration::from_millis(40), "{elapsed:?}");
         let _ = h.join().unwrap();
+    }
+
+    #[test]
+    fn corrupt_ack_rejected_in_release_builds_too() {
+        // A peer that answers a frame with a junk tag must fail the
+        // operation with GppError::Net — this used to be
+        // debug_assert-only. One channel per path: the first corrupt
+        // ack latches the channel (later ops return Poisoned).
+        let bogus_acker = || {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let h = std::thread::spawn(move || {
+                let (mut s, _) = listener.accept().unwrap();
+                let _ = read_frame(&mut s).unwrap(); // swallow the frame
+                write_frame(&mut s, &[0xEE]).unwrap(); // bogus ack tag
+            });
+            (NetOut::<u64>::new(TcpStream::connect(addr).unwrap()), h)
+        };
+        let (tx, h) = bogus_acker();
+        assert!(matches!(tx.write(&1), Err(GppError::Net(_))));
+        // The failed exchange latched the channel.
+        assert!(tx.is_poisoned());
+        assert_eq!(tx.write(&2), Err(GppError::Poisoned));
+        h.join().unwrap();
+        let (tx, h) = bogus_acker();
+        assert!(matches!(tx.write_terminator(), Err(GppError::Net(_))));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn reader_poison_reaches_blocked_writer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let rx = NetIn::<u64>::new(s);
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            rx.poison();
+            assert!(rx.is_poisoned());
+        });
+        let tx = NetOut::<u64>::new(TcpStream::connect(addr).unwrap());
+        // The poison frame lands in the ack slot of this write.
+        assert_eq!(tx.write(&7), Err(GppError::Poisoned));
+        assert!(tx.is_poisoned());
+        // Later writes fail locally without touching the socket.
+        assert_eq!(tx.write(&8), Err(GppError::Poisoned));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn writer_poison_reaches_reader() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let rx = NetIn::<u64>::new(s);
+            assert_eq!(rx.read().map(|m| matches!(m, NetMsg::Data(3))), Ok(true));
+            // Next frame is the poison.
+            assert_eq!(rx.read().unwrap_err(), GppError::Poisoned);
+            assert!(rx.is_poisoned());
+        });
+        let tx = NetOut::<u64>::new(TcpStream::connect(addr).unwrap());
+        tx.write(&3).unwrap();
+        tx.poison();
+        assert_eq!(tx.write(&4), Err(GppError::Poisoned));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_surfaces_as_net_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Reader accepts but never reads: the writer's ack wait times out.
+        let h = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(250));
+            drop(s);
+        });
+        let tx = NetOut::<u64>::with_timeouts(
+            TcpStream::connect(addr).unwrap(),
+            Some(Duration::from_millis(50)),
+            None,
+        )
+        .unwrap();
+        match tx.write(&1) {
+            Err(GppError::Net(msg)) => assert!(msg.contains("timed out"), "{msg}"),
+            other => panic!("expected timeout Net error, got {other:?}"),
+        }
+        h.join().unwrap();
     }
 }

@@ -1,0 +1,496 @@
+//! `NetTransport` — the [`Transport`] contract over TCP framing.
+//!
+//! The PR-1 substrate refactor split channel *semantics* from channel
+//! *transport*; this module adds the third transport next to rendezvous
+//! and buffered: a channel whose two ends live in different OS
+//! processes (or machines), moving [`Wire`]-codable values over the
+//! [`super::frame`] framing with the [`super::netchan`] tag protocol.
+//! `RuntimeConfig { transport: TransportKind::Net, .. }` builds every
+//! edge of an unmodified network over loopback TCP — the paper's "the
+//! nature of a channel, be it internal or network, is transparent to
+//! the process definition" (§7).
+//!
+//! Shape:
+//!
+//! * [`NetOutCore`] (writing side): `write` sends a `DATA` frame and
+//!   blocks for the acknowledgement — the ACK **is** the rendezvous, so
+//!   backpressure crosses the wire (the reader acks a value only after
+//!   queueing it locally; with `capacity 1` that is at most one value
+//!   in flight). `poison` sends a `POISON` frame.
+//! * [`NetInCore`] (reading side): a pump thread reads frames, decodes,
+//!   queues into a local [`BufferedCore`] and acks. All reader-side
+//!   contract obligations — batched take (`read_batch`/
+//!   `read_batch_while`), Alt signalling, poison-drains-first — are
+//!   delegated to that verified local core, so they hold identically
+//!   over the network. Reader-side `poison` propagates upstream: the
+//!   writer's next ack slot carries the poison frame.
+//!
+//! Failure model: a dead peer (EOF/reset) or a configured socket
+//! timeout poisons the local end, so a broken wire unwinds the network
+//! through the ordinary poison protocol instead of hanging it.
+
+use std::marker::PhantomData;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::csp::alt::AltSignal;
+use crate::csp::channel::{ends_of, In, Out};
+use crate::csp::error::{GppError, Result};
+use crate::csp::transport::{next_chan_id, BufferedCore, Transport, TransportKind, TransportStats};
+use crate::util::codec::{from_bytes, to_bytes, Wire};
+
+use super::frame::{read_frame, set_io_timeouts, write_frame};
+use super::netchan::{send_and_ack, TAG_ACK, TAG_DATA, TAG_POISON};
+use super::NetOptions;
+
+/// Writing side of a network channel (see module docs).
+pub struct NetOutCore<T> {
+    id: u64,
+    name: String,
+    stream: Mutex<TcpStream>,
+    poisoned: AtomicBool,
+    _marker: PhantomData<fn(T) -> T>,
+}
+
+impl<T: Wire> NetOutCore<T> {
+    fn new(stream: TcpStream, name: &str) -> Arc<Self> {
+        Arc::new(Self {
+            id: next_chan_id(),
+            name: name.to_string(),
+            stream: Mutex::new(stream),
+            poisoned: AtomicBool::new(false),
+            _marker: PhantomData,
+        })
+    }
+
+    fn wrong_end<U>(&self, op: &str) -> Result<U> {
+        Err(GppError::Net(format!(
+            "net channel '{}': {op} on the writing end (the reading end lives on the peer node)",
+            self.name
+        )))
+    }
+}
+
+impl<T: Wire + Send> Transport<T> for NetOutCore<T> {
+    fn write(&self, value: T) -> Result<()> {
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(GppError::Poisoned);
+        }
+        let mut s = self.stream.lock().unwrap();
+        let mut payload = vec![TAG_DATA];
+        payload.extend(to_bytes(&value));
+        match send_and_ack(&mut s, &payload, "NetOutCore::write") {
+            Ok(()) => Ok(()),
+            Err(GppError::Poisoned) => {
+                self.poisoned.store(true, Ordering::SeqCst);
+                Err(GppError::Poisoned)
+            }
+            Err(e) => {
+                // Broken wire: fail this and all future operations.
+                self.poisoned.store(true, Ordering::SeqCst);
+                Err(e)
+            }
+        }
+    }
+
+    fn read(&self) -> Result<T> {
+        self.wrong_end("read")
+    }
+
+    fn try_read(&self) -> Result<Option<T>> {
+        self.wrong_end("try_read")
+    }
+
+    fn read_batch(&self, _max: usize) -> Result<Vec<T>> {
+        self.wrong_end("read_batch")
+    }
+
+    fn read_batch_while(&self, _max: usize, _keep: &dyn Fn(&T) -> bool) -> Result<Vec<T>> {
+        self.wrong_end("read_batch_while")
+    }
+
+    fn ready(&self) -> bool {
+        false
+    }
+
+    fn register_alt(&self, _sig: &Arc<AltSignal>) -> bool {
+        false
+    }
+
+    fn poison(&self) {
+        if !self.poisoned.swap(true, Ordering::SeqCst) {
+            if let Ok(mut s) = self.stream.lock() {
+                let _ = write_frame(&mut s, &[TAG_POISON]);
+            }
+        }
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Net
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats::default()
+    }
+}
+
+/// Reading side of a network channel (see module docs).
+pub struct NetInCore<T: Send> {
+    id: u64,
+    name: String,
+    inner: Arc<BufferedCore<T>>,
+    /// Shared write handle (acks + upstream poison); the pump owns a
+    /// cloned read handle, so reads never hold this lock.
+    wr: Mutex<TcpStream>,
+    poison_sent: AtomicBool,
+}
+
+impl<T: Wire + Send + 'static> NetInCore<T> {
+    fn start(stream: TcpStream, name: &str, capacity: usize) -> Result<Arc<Self>> {
+        let rd = stream
+            .try_clone()
+            .map_err(|e| GppError::Net(format!("clone net stream: {e}")))?;
+        let core = Arc::new(Self {
+            id: next_chan_id(),
+            name: name.to_string(),
+            inner: BufferedCore::new(format!("{name}.net"), capacity.max(1)),
+            wr: Mutex::new(stream),
+            poison_sent: AtomicBool::new(false),
+        });
+        let pump = core.clone();
+        std::thread::Builder::new()
+            .name(format!("net-in:{name}"))
+            .spawn(move || pump.pump(rd))
+            .map_err(|e| GppError::Net(format!("spawn net pump: {e}")))?;
+        Ok(core)
+    }
+
+    fn send_ctl(&self, tag: u8) -> Result<()> {
+        let mut s = self.wr.lock().unwrap();
+        write_frame(&mut s, &[tag])
+    }
+
+    fn send_poison_once(&self) {
+        if !self.poison_sent.swap(true, Ordering::SeqCst) {
+            let _ = self.send_ctl(TAG_POISON);
+        }
+    }
+
+    fn pump(&self, mut rd: TcpStream) {
+        loop {
+            let frame = match read_frame(&mut rd) {
+                Ok(f) => f,
+                Err(_) => {
+                    // Peer dead / wire broken / timeout: poison locally
+                    // (queued values drain to the reader first).
+                    self.inner.poison();
+                    return;
+                }
+            };
+            match frame.split_first() {
+                Some((&TAG_DATA, rest)) => {
+                    let v = match from_bytes::<T>(rest) {
+                        Ok(v) => v,
+                        Err(_) => {
+                            self.inner.poison();
+                            self.send_poison_once();
+                            return;
+                        }
+                    };
+                    // Blocks while the local queue is full — this delay
+                    // is what carries backpressure to the writer, whose
+                    // ack arrives only after the value is queued.
+                    if self.inner.write(v).is_err() {
+                        // Locally poisoned while we waited.
+                        self.send_poison_once();
+                        return;
+                    }
+                    if self.send_ctl(TAG_ACK).is_err() {
+                        self.inner.poison();
+                        return;
+                    }
+                }
+                Some((&TAG_POISON, _)) => {
+                    self.inner.poison();
+                    return;
+                }
+                _ => {
+                    self.inner.poison();
+                    self.send_poison_once();
+                    return;
+                }
+            }
+        }
+    }
+}
+
+impl<T: Wire + Send + 'static> Transport<T> for NetInCore<T> {
+    fn write(&self, _value: T) -> Result<()> {
+        Err(GppError::Net(format!(
+            "net channel '{}': write on the reading end (the writing end lives on the peer node)",
+            self.name
+        )))
+    }
+
+    fn read(&self) -> Result<T> {
+        self.inner.read()
+    }
+
+    fn try_read(&self) -> Result<Option<T>> {
+        self.inner.try_read()
+    }
+
+    fn read_batch(&self, max: usize) -> Result<Vec<T>> {
+        self.inner.read_batch(max)
+    }
+
+    fn read_batch_while(&self, max: usize, keep: &dyn Fn(&T) -> bool) -> Result<Vec<T>> {
+        self.inner.read_batch_while(max, keep)
+    }
+
+    fn ready(&self) -> bool {
+        self.inner.ready()
+    }
+
+    fn register_alt(&self, sig: &Arc<AltSignal>) -> bool {
+        self.inner.register_alt(sig)
+    }
+
+    fn poison(&self) {
+        self.inner.poison();
+        self.send_poison_once();
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.inner.is_poisoned()
+    }
+
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Net
+    }
+
+    fn capacity(&self) -> Option<usize> {
+        self.inner.capacity()
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.stats()
+    }
+}
+
+/// Wrap a connected stream as the writing end of a net channel.
+pub fn net_channel_out<T: Wire + Send + 'static>(
+    stream: TcpStream,
+    name: &str,
+    opts: &NetOptions,
+) -> Result<Out<T>> {
+    set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
+    let core: Arc<dyn Transport<T>> = NetOutCore::new(stream, name);
+    let (out, _unused_in) = ends_of(core);
+    Ok(out)
+}
+
+/// Wrap a connected stream as the reading end of a net channel.
+pub fn net_channel_in<T: Wire + Send + 'static>(
+    stream: TcpStream,
+    name: &str,
+    capacity: usize,
+    opts: &NetOptions,
+) -> Result<In<T>> {
+    set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
+    let core: Arc<dyn Transport<T>> = NetInCore::start(stream, name, capacity)?;
+    let (_unused_out, inp) = ends_of(core);
+    Ok(inp)
+}
+
+/// Connect to a listening reader and return the writing end.
+pub fn net_out<T: Wire + Send + 'static>(
+    addr: &str,
+    name: &str,
+    opts: &NetOptions,
+) -> Result<Out<T>> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| GppError::Net(format!("connect {addr}: {e}")))?;
+    net_channel_out(stream, name, opts)
+}
+
+/// Accept one writer connection and return the reading end.
+pub fn net_in_accept<T: Wire + Send + 'static>(
+    listener: &TcpListener,
+    name: &str,
+    capacity: usize,
+    opts: &NetOptions,
+) -> Result<In<T>> {
+    let (stream, _) = listener
+        .accept()
+        .map_err(|e| GppError::Net(format!("accept: {e}")))?;
+    net_channel_in(stream, name, capacity, opts)
+}
+
+/// A complete net channel over loopback TCP, both ends in this process
+/// — every value still crosses a real socket and the full frame/ack
+/// protocol. This is what `TransportKind::Net` builds for each edge.
+pub fn net_loopback_pair<T: Wire + Send + 'static>(
+    name: &str,
+    capacity: usize,
+    opts: &NetOptions,
+) -> Result<(Out<T>, In<T>)> {
+    let listener = TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| GppError::Net(format!("bind loopback: {e}")))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| GppError::Net(format!("local_addr: {e}")))?;
+    // The connect completes via the listen backlog before accept runs,
+    // so doing both on one thread cannot deadlock.
+    let client = TcpStream::connect(addr)
+        .map_err(|e| GppError::Net(format!("connect loopback: {e}")))?;
+    let (server, _) = listener
+        .accept()
+        .map_err(|e| GppError::Net(format!("accept loopback: {e}")))?;
+    let out = net_channel_out(client, name, opts)?;
+    let inp = net_channel_in(server, name, capacity, opts)?;
+    Ok((out, inp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    fn pair<T: Wire + Send + 'static>(cap: usize) -> (Out<T>, In<T>) {
+        net_loopback_pair("t", cap, &NetOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn values_cross_the_socket_in_order() {
+        let (tx, rx) = pair::<u64>(4);
+        let h = thread::spawn(move || {
+            for i in 0..50u64 {
+                tx.write(i).unwrap();
+            }
+        });
+        for i in 0..50u64 {
+            assert_eq!(rx.read().unwrap(), i);
+        }
+        h.join().unwrap();
+        assert_eq!(rx.transport_kind(), TransportKind::Net);
+    }
+
+    #[test]
+    fn ack_carries_backpressure() {
+        // capacity 1: the writer cannot run more than ~2 values ahead of
+        // the reader (one queued + one in the ack pipeline).
+        let (tx, rx) = pair::<u64>(1);
+        let h = thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            for i in 0..4u64 {
+                tx.write(i).unwrap();
+            }
+            t0.elapsed()
+        });
+        thread::sleep(Duration::from_millis(80));
+        for i in 0..4u64 {
+            assert_eq!(rx.read().unwrap(), i);
+        }
+        let writer_time = h.join().unwrap();
+        assert!(
+            writer_time >= Duration::from_millis(40),
+            "writer finished in {writer_time:?} without waiting for the reader"
+        );
+    }
+
+    #[test]
+    fn batched_take_works_over_the_wire() {
+        let (tx, rx) = pair::<u32>(16);
+        let h = thread::spawn(move || {
+            for i in 0..10u32 {
+                tx.write(i).unwrap();
+            }
+        });
+        let mut got = Vec::new();
+        while got.len() < 10 {
+            got.extend(rx.read_batch(8).unwrap());
+        }
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn writer_poison_drains_then_fails_reader() {
+        let (tx, rx) = pair::<u32>(8);
+        tx.write(1).unwrap();
+        tx.write(2).unwrap();
+        tx.poison();
+        // Queued values drain first (the transport contract), then Poisoned.
+        assert_eq!(rx.read().unwrap(), 1);
+        assert_eq!(rx.read().unwrap(), 2);
+        // The poison frame races the reads only through the pump, which
+        // processes frames in order — so after the drain it has landed.
+        assert_eq!(rx.read(), Err(GppError::Poisoned));
+        assert_eq!(tx.write(3), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn reader_poison_reaches_writer() {
+        let (tx, rx) = pair::<u32>(1);
+        rx.poison();
+        // The writer learns on its next write (poison in the ack slot) —
+        // possibly one write later if the DATA frame was already queued
+        // before the poison frame arrived at the pump.
+        let mut poisoned = false;
+        for i in 0..3 {
+            if tx.write(i) == Err(GppError::Poisoned) {
+                poisoned = true;
+                break;
+            }
+        }
+        assert!(poisoned, "writer never observed reader poison");
+        assert_eq!(rx.read(), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn dropped_writer_poisons_reader_instead_of_hanging() {
+        let (tx, rx) = pair::<u32>(4);
+        tx.write(9).unwrap();
+        drop(tx); // socket closes → pump sees EOF → poison
+        assert_eq!(rx.read().unwrap(), 9);
+        assert_eq!(rx.read(), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn alt_signalling_fires_on_net_arrival() {
+        use crate::csp::alt::Alt;
+        let (tx, rx) = pair::<u32>(4);
+        let mut alt = Alt::new(vec![rx]);
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(30));
+            tx.write(5).unwrap();
+        });
+        let (idx, v) = alt.select_read().unwrap();
+        assert_eq!(idx, 0);
+        assert_eq!(v, 5);
+        h.join().unwrap();
+    }
+}

@@ -132,6 +132,48 @@ impl<A: Wire, B: Wire> Wire for (A, B) {
     }
 }
 
+impl<A: Wire, B: Wire, C: Wire> Wire for (A, B, C) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+        self.2.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok((A::decode(input)?, B::decode(input)?, C::decode(input)?))
+    }
+}
+
+/// Maps encode in sorted key order so equal maps produce equal bytes
+/// (cluster nodes compare result payloads byte-wise in tests).
+impl<K, V> Wire for std::collections::HashMap<K, V>
+where
+    K: Wire + Ord + std::hash::Hash + Eq,
+    V: Wire,
+{
+    fn encode(&self, out: &mut Vec<u8>) {
+        let mut keys: Vec<&K> = self.keys().collect();
+        keys.sort();
+        self.len().encode(out);
+        for k in keys {
+            k.encode(out);
+            self[k].encode(out);
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        let n = usize::decode(input)?;
+        if n > 1 << 30 {
+            return Err(GppError::Codec(format!("implausible map length {n}")));
+        }
+        let mut m = Self::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let k = K::decode(input)?;
+            let v = V::decode(input)?;
+            m.insert(k, v);
+        }
+        Ok(m)
+    }
+}
+
 /// Encode a value into a fresh buffer.
 pub fn to_bytes<T: Wire>(x: &T) -> Vec<u8> {
     let mut out = Vec::new();
@@ -174,6 +216,23 @@ mod tests {
         assert_eq!(from_bytes::<Vec<(u32, String)>>(&to_bytes(&v)).unwrap(), v);
         let o: Option<Vec<f32>> = Some(vec![1.0, 2.0]);
         assert_eq!(from_bytes::<Option<Vec<f32>>>(&to_bytes(&o)).unwrap(), o);
+        let t: (u8, String, i64) = (7, "x".into(), -3);
+        assert_eq!(from_bytes::<(u8, String, i64)>(&to_bytes(&t)).unwrap(), t);
+    }
+
+    #[test]
+    fn roundtrip_map_deterministic() {
+        use std::collections::HashMap;
+        let mut m: HashMap<String, Vec<i64>> = HashMap::new();
+        m.insert("b".into(), vec![2, 3]);
+        m.insert("a".into(), vec![1]);
+        let bytes = to_bytes(&m);
+        assert_eq!(from_bytes::<HashMap<String, Vec<i64>>>(&bytes).unwrap(), m);
+        // Same entries inserted in another order → identical bytes.
+        let mut m2: HashMap<String, Vec<i64>> = HashMap::new();
+        m2.insert("a".into(), vec![1]);
+        m2.insert("b".into(), vec![2, 3]);
+        assert_eq!(to_bytes(&m2), bytes);
     }
 
     #[test]

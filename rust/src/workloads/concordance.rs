@@ -230,11 +230,43 @@ impl ConcordanceResult {
     }
 }
 
+/// Wire form for cluster transport: the shared text data ships with
+/// each task (word + value arrays), stage outputs as plain maps. The
+/// prototype emission cursors stay host-side (zeroed on decode).
+impl crate::util::codec::Wire for ConcordanceData {
+    fn encode(&self, out: &mut Vec<u8>) {
+        use crate::util::codec::Wire;
+        self.n.encode(out);
+        self.min_seq_len.encode(out);
+        self.words.as_ref().encode(out);
+        self.values.as_ref().encode(out);
+        self.value_list.encode(out);
+        self.indices_map.encode(out);
+        self.words_map.encode(out);
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        use crate::util::codec::Wire;
+        Ok(Self {
+            n: usize::decode(input)?,
+            min_seq_len: usize::decode(input)?,
+            words: Arc::new(Vec::<String>::decode(input)?),
+            values: Arc::new(Vec::<i64>::decode(input)?),
+            value_list: Vec::<i64>::decode(input)?,
+            indices_map: HashMap::<i64, Vec<usize>>::decode(input)?,
+            words_map: HashMap::<String, Vec<usize>>::decode(input)?,
+            max_n: 0,
+            next_n: 0,
+        })
+    }
+}
+
 pub fn register() {
     register_class("concordanceData", || Box::new(ConcordanceData::default()));
     register_class("concordanceResult", || {
         Box::new(ConcordanceResult::default())
     });
+    crate::data::wire::register_wire_class::<ConcordanceData>("concordanceData");
 }
 
 /// Sequential baseline over the same phases.

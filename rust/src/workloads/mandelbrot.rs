@@ -235,6 +235,7 @@ impl MandelbrotCollect {
 pub fn register() {
     register_class("mandelbrotLine", || Box::new(MandelbrotLine::default()));
     register_class("mandelbrotCollect", || Box::new(MandelbrotCollect::default()));
+    crate::data::wire::register_wire_class::<MandelbrotLine>("mandelbrotLine");
 }
 
 /// Sequential baseline: compute every row in a plain loop.

@@ -8,6 +8,7 @@ use crate::data::details::{DataDetails, ResultDetails};
 use crate::data::object::{
     downcast_mut, register_class, Aux, Params, ReturnCode, Value,
 };
+use crate::util::codec::Wire;
 use crate::util::rng::Rng;
 
 /// Base seed: each instance derives its own stream, so results are
@@ -187,9 +188,31 @@ impl PiResults {
     }
 }
 
+/// Wire form for cluster / net-channel transport.
+impl Wire for PiData {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.iterations.encode(out);
+        self.within.encode(out);
+        self.instance.encode(out);
+        self.instances.encode(out);
+        self.next_instance.encode(out);
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(Self {
+            iterations: i64::decode(input)?,
+            within: i64::decode(input)?,
+            instance: i64::decode(input)?,
+            instances: i64::decode(input)?,
+            next_instance: i64::decode(input)?,
+        })
+    }
+}
+
 pub fn register() {
     register_class("piData", || Box::new(PiData::default()));
     register_class("piResults", || Box::new(PiResults::default()));
+    crate::data::wire::register_wire_class::<PiData>("piData");
 }
 
 /// Sequential invocation (paper Listing 4): "the user can take the

@@ -1,0 +1,265 @@
+//! Distributed-runtime integration tests: net channels end to end
+//! (data, terminator, poison, timeouts), unmodified networks over the
+//! loopback `NetTransport`, and the generic cluster with worker-death
+//! recovery — the acceptance criteria of the net-layer PR.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use gpp::builder::parse_network;
+use gpp::net::cluster::{default_config, run_host, run_worker};
+use gpp::net::frame::{read_frame, write_frame};
+use gpp::net::loader;
+use gpp::net::{NetIn, NetMsg, NetOut, NetOptions};
+use gpp::workloads::{concordance, mandelbrot, nbody};
+use gpp::{GppError, RuntimeConfig, Value};
+
+fn setup() {
+    gpp::workloads::register_all();
+    gpp::net::register_builtin_jobs();
+}
+
+fn free_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let a = l.local_addr().unwrap();
+    drop(l);
+    format!("127.0.0.1:{}", a.port())
+}
+
+// ---------------------------------------------------------- netchan
+
+#[test]
+fn netchan_roundtrip_data_terminator_poison() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let reader = std::thread::spawn(move || {
+        let (s, _) = listener.accept().unwrap();
+        let rx = NetIn::<Vec<i64>>::new(s);
+        let mut got = Vec::new();
+        loop {
+            match rx.read() {
+                Ok(NetMsg::Data(v)) => got.push(v),
+                Ok(NetMsg::Terminator) => got.push(vec![-1]),
+                Err(GppError::Poisoned) => break,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        got
+    });
+    let tx = NetOut::<Vec<i64>>::new(TcpStream::connect(addr).unwrap());
+    tx.write(&vec![1, 2]).unwrap();
+    tx.write(&vec![3]).unwrap();
+    tx.write_terminator().unwrap();
+    tx.poison();
+    let got = reader.join().unwrap();
+    assert_eq!(got, vec![vec![1, 2], vec![3], vec![-1]]);
+    assert!(tx.is_poisoned());
+}
+
+#[test]
+fn netchan_dead_peer_times_out_instead_of_hanging() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let hold = std::thread::spawn(move || {
+        let (s, _) = listener.accept().unwrap();
+        std::thread::sleep(Duration::from_millis(400));
+        drop(s);
+    });
+    let rx = NetIn::<u64>::with_timeouts(
+        TcpStream::connect(addr).unwrap(),
+        Some(Duration::from_millis(60)),
+        None,
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    match rx.read() {
+        Err(GppError::Net(msg)) => assert!(msg.contains("timed out"), "{msg}"),
+        other => panic!("expected timeout, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_millis(350), "timeout did not bound the wait");
+    hold.join().unwrap();
+}
+
+// ------------------------------------------------- NetTransport edges
+
+/// The acceptance criterion: an unmodified network produces identical
+/// results on the in-memory transport and over loopback `NetTransport`.
+#[test]
+fn unmodified_network_identical_over_memory_and_net() {
+    setup();
+    let dsl = "emit class=piData init=initClass(12) create=createInstance(400)\n\
+               fanAny destinations=3\n\
+               group workers=3 function=getWithin\n\
+               reduceAny sources=3\n\
+               collect class=piResults init=initClass(1)\n";
+    let run_with = |cfg: RuntimeConfig| {
+        let spec = parse_network(dsl).unwrap().with_config(cfg);
+        let results = spec.run().unwrap();
+        (
+            results[0].log_prop("withinSum"),
+            results[0].log_prop("iterationSum"),
+        )
+    };
+    let memory = run_with(RuntimeConfig::default());
+    let net = run_with(RuntimeConfig::net_loopback());
+    assert_eq!(memory, net, "net transport changed the results");
+    assert_eq!(net.1, Some(Value::Int(12 * 400)));
+}
+
+#[test]
+fn pipeline_network_runs_over_net_transport() {
+    setup();
+    // A different shape (pure pipeline, no fan) over net edges.
+    let dsl = "emit class=piData init=initClass(6) create=createInstance(300)\n\
+               pipeline stages=getWithin,getWithin\n\
+               collect class=piResults init=initClass(1)\n";
+    let local = parse_network(dsl).unwrap().run().unwrap();
+    let net = parse_network(dsl)
+        .unwrap()
+        .with_config(RuntimeConfig::net_loopback().with_capacity(8))
+        .run()
+        .unwrap();
+    assert_eq!(
+        net[0].log_prop("withinSum"),
+        local[0].log_prop("withinSum")
+    );
+}
+
+// ------------------------------------------------------ cluster layer
+
+/// Kill a worker mid-run: the host must requeue its in-flight item,
+/// finish with a complete (checksum-identical) result, and terminate.
+#[test]
+fn killed_worker_does_not_lose_work_or_hang_host() {
+    setup();
+    let addr = free_addr();
+    let cfg = default_config(64, 40, 30, 1);
+    let seq = mandelbrot::sequential(64, 40, 30, cfg.pixel_delta).unwrap();
+
+    let addr2 = addr.clone();
+    let cfg2 = cfg.clone();
+    let host = std::thread::spawn(move || run_host(&addr2, 2, &cfg2));
+    std::thread::sleep(Duration::from_millis(50));
+
+    // Victim: speaks the protocol far enough to hold one work item,
+    // then its "machine" dies (socket drops mid-computation).
+    let a1 = addr.clone();
+    let victim = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(&a1).unwrap();
+        write_frame(&mut s, &[1]).unwrap(); // W_HELLO
+        let _cfg = read_frame(&mut s).unwrap();
+        write_frame(&mut s, &[2]).unwrap(); // W_REQ
+        let work = read_frame(&mut s).unwrap();
+        assert_eq!(work.first(), Some(&11), "expected H_WORK");
+        drop(s);
+    });
+    std::thread::sleep(Duration::from_millis(80));
+    let a2 = addr.clone();
+    let survivor = std::thread::spawn(move || run_worker(&a2));
+
+    let collect = host.join().unwrap().unwrap();
+    victim.join().unwrap();
+    let done = survivor.join().unwrap().unwrap();
+    assert_eq!(done, 40, "survivor computed every row, including the stolen one");
+    assert_eq!(collect.rows_seen, 40, "no lost work");
+    assert_eq!(collect.checksum(), seq.checksum(), "result still exact");
+}
+
+/// Scenario diversity: Concordance (t02's workload) through the same
+/// generic cluster path, via the node-loader DSL, in loopback mode.
+#[test]
+fn concordance_over_cluster_matches_sequential() {
+    setup();
+    let text = gpp::workloads::corpus::generate(2000, 77);
+    let seq = concordance::sequential(&text, 4, 2).unwrap();
+    use gpp::builder::{NetworkSpec, ProcSpec};
+    use gpp::workloads::concordance::{ConcordanceData, ConcordanceResult};
+    let spec = NetworkSpec::new()
+        .push(ProcSpec::Emit {
+            details: ConcordanceData::emit_details(&text, 4, 2),
+        })
+        .push(ProcSpec::Pipeline {
+            stages: ConcordanceData::stages(),
+        })
+        .push(ProcSpec::Collect {
+            details: ConcordanceResult::result_details(),
+        })
+        .with_placement(gpp::net::NodePlacement::new(2));
+    let results = loader::run_cluster_loopback(&spec).unwrap();
+    let got = results[0]
+        .as_any()
+        .downcast_ref::<ConcordanceResult>()
+        .expect("ConcordanceResult")
+        .summary();
+    assert_eq!(got, seq.summary());
+}
+
+/// Scenario diversity: N-body (t05's workload) as a cluster job over
+/// the same work-stealing loop.
+#[test]
+fn nbody_over_cluster_matches_sequential() {
+    setup();
+    use gpp::net::cluster::serve_items;
+    use gpp::net::jobs::{NBodyJobConfig, NBODY_SIM};
+    use gpp::util::codec::{from_bytes, to_bytes};
+    let addr = free_addr();
+    let cfg = NBodyJobConfig { seed: 9, dt: 0.01, steps: 15 };
+    let sizes = [8u64, 16, 24, 32];
+    let items: Vec<Vec<u8>> = sizes.iter().map(|n| to_bytes(n)).collect();
+    let addr2 = addr.clone();
+    let host = std::thread::spawn(move || {
+        serve_items(&addr2, 2, NBODY_SIM, &to_bytes(&cfg), items, &NetOptions::default())
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    let mut workers = Vec::new();
+    for _ in 0..2 {
+        let a = addr.clone();
+        workers.push(std::thread::spawn(move || run_worker(&a)));
+    }
+    let report = host.join().unwrap().unwrap();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+    assert_eq!(report.results.len(), sizes.len());
+    for (i, bytes) in report.results.iter().enumerate() {
+        let (n, checksum): (u64, i64) = from_bytes(bytes).unwrap();
+        assert_eq!(n, sizes[i], "results stay in item order");
+        let local = nbody::sequential(n as usize, cfg.seed, cfg.dt, cfg.steps).unwrap();
+        assert_eq!(checksum, nbody::state_checksum(&local.state.current));
+    }
+}
+
+/// The node-loader DSL end to end from text, exactly as `gpp run` sees it.
+#[test]
+fn dsl_hosts_line_runs_loopback_cluster() {
+    setup();
+    let spec = parse_network(
+        "hosts workers=2 timeout=30000\n\
+         emit class=piData init=initClass(10) create=createInstance(500)\n\
+         fanAny destinations=2\n\
+         group workers=2 function=getWithin\n\
+         reduceAny sources=2\n\
+         collect class=piResults init=initClass(1)\n",
+    )
+    .unwrap();
+    let clustered = spec.run().unwrap();
+    // Reference: the identical network without the hosts line, in-process.
+    let local = parse_network(
+        "emit class=piData init=initClass(10) create=createInstance(500)\n\
+         fanAny destinations=2\n\
+         group workers=2 function=getWithin\n\
+         reduceAny sources=2\n\
+         collect class=piResults init=initClass(1)\n",
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(
+        clustered[0].log_prop("withinSum"),
+        local[0].log_prop("withinSum")
+    );
+    assert_eq!(
+        clustered[0].log_prop("iterationSum"),
+        Some(Value::Int(10 * 500))
+    );
+}
