@@ -520,6 +520,47 @@ impl NetworkSpec {
         Ok(rx.try_iter().collect())
     }
 
+    /// Compile this **declarative network** into a CSP model over a
+    /// stream of `objects` abstract values and return it ready for the
+    /// [`crate::verify::Checker`] — the `gppBuilder` counterpart of the
+    /// paper's hand-written CSPm scripts, generated from the same
+    /// `ProcSpec` chain `build()` expands (see
+    /// [`crate::verify::extract`]). Spreader/reducer connectors not yet
+    /// covered by extraction (casts, list groups) report a `Verify`
+    /// error naming the spec.
+    pub fn extract_model(&self, objects: i64) -> Result<crate::verify::ExtractedModel> {
+        use crate::verify::extract::{extract_chain, new_interner, ChainStage};
+        self.validate()?;
+        let mut chain = Vec::new();
+        for p in &self.procs {
+            match p {
+                ProcSpec::Emit { .. }
+                | ProcSpec::EmitWithLocal { .. }
+                | ProcSpec::Collect { .. } => {} // implicit chain endpoints
+                ProcSpec::OneFanAny { destinations } => chain.push(ChainStage::FanAny {
+                    destinations: *destinations,
+                }),
+                ProcSpec::AnyGroupAny { workers, .. } => {
+                    chain.push(ChainStage::Group { workers: *workers })
+                }
+                ProcSpec::Pipeline { stages } => chain.push(ChainStage::Pipeline {
+                    stages: stages.len(),
+                }),
+                ProcSpec::CombineNto1 { .. } => chain.push(ChainStage::Worker),
+                ProcSpec::AnyFanOne { sources } => {
+                    chain.push(ChainStage::ReduceAny { sources: *sources })
+                }
+                other => {
+                    return Err(GppError::Verify(format!(
+                        "model extraction does not yet cover {} (ROADMAP open item)",
+                        other.label()
+                    )));
+                }
+            }
+        }
+        extract_chain(new_interner(), &chain, objects)
+    }
+
     /// Processes the network expands to (Table 10's "generated process
     /// count").
     pub fn process_count(&self) -> usize {
@@ -895,6 +936,37 @@ mod tests {
         assert!(parse_network("frobnicate x=1\n").is_err());
         assert!(parse_network("emit\n").is_err()); // missing class=
         assert!(parse_network("emit class\n").is_err()); // not key=value
+    }
+
+    #[test]
+    fn extracted_model_of_parsed_farm_holds() {
+        // The DSL text → NetworkSpec → CSP model → checker: deadlock
+        // and divergence freedom proved on the *constructed* chain.
+        let spec = parse_network(
+            "emit class=piData init=initClass(4) create=createInstance(10)\n\
+             fanAny destinations=2\n\
+             group workers=2 function=getWithin\n\
+             reduceAny sources=2\n\
+             collect class=piResults init=initClass(1)\n",
+        )
+        .unwrap();
+        let model = spec.extract_model(2).unwrap();
+        model.assert_all().unwrap();
+    }
+
+    #[test]
+    fn extraction_rejects_unsupported_connectors() {
+        let spec = NetworkSpec::new()
+            .push(ProcSpec::Emit {
+                details: PiData::emit_details(1, 1),
+            })
+            .push(ProcSpec::OneSeqCastList { destinations: 2 })
+            .push(ProcSpec::ListSeqOne { sources: 2 })
+            .push(ProcSpec::Collect {
+                details: PiResults::result_details(),
+            });
+        let err = spec.extract_model(2).unwrap_err();
+        assert!(matches!(err, GppError::Verify(_)), "{err}");
     }
 
     #[test]

@@ -9,15 +9,17 @@
 //! TCP socket (loopback in-process; across machines via the cluster
 //! node-loader) — all without touching any process code.
 
-use super::channel::{buffered_channel, buffered_channel_list, channel_list, named_channel, In, Out};
+use std::sync::Arc;
+
+use super::channel::{channel_list, ends_of, named_channel, In, Out};
 use super::error::Result;
 use super::executor::{Executor, ExecutorKind, PooledExecutor, ThreadPerProcess};
 use super::process::CSProcess;
-use super::transport::TransportKind;
+use super::transport::{BufferedCore, FaultPlan, Transport, TransportKind};
 use crate::net::NetOptions;
 use crate::util::codec::Wire;
 
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug)]
 pub struct RuntimeConfig {
     pub transport: TransportKind,
     /// Buffer capacity for `Buffered` channels and the local queue of
@@ -26,7 +28,25 @@ pub struct RuntimeConfig {
     pub executor: ExecutorKind,
     /// Socket options for `Net` channels (timeouts; `None` = blocking).
     pub net: NetOptions,
+    /// Scripted deterministic faults injected into buffered / net / sim
+    /// edges built by this config (`None` in production). See
+    /// [`crate::csp::transport::FaultPlan`].
+    pub faults: Option<Arc<FaultPlan>>,
 }
+
+/// Equality ignores the fault script: two configs that build the same
+/// transports are the same config (fault plans carry interior counters
+/// and exist only for tests).
+impl PartialEq for RuntimeConfig {
+    fn eq(&self, other: &Self) -> bool {
+        self.transport == other.transport
+            && self.capacity == other.capacity
+            && self.executor == other.executor
+            && self.net == other.net
+    }
+}
+
+impl Eq for RuntimeConfig {}
 
 impl Default for RuntimeConfig {
     fn default() -> Self {
@@ -35,6 +55,7 @@ impl Default for RuntimeConfig {
             capacity: 64,
             executor: ExecutorKind::ThreadPerProcess,
             net: NetOptions::default(),
+            faults: None,
         }
     }
 }
@@ -86,20 +107,52 @@ impl RuntimeConfig {
         self
     }
 
+    /// Inject a scripted fault plan into the buffered / net / sim edges
+    /// this config builds (tests; `None` in production).
+    pub fn with_faults(mut self, faults: Arc<FaultPlan>) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
     /// Create one channel on the configured transport.
     ///
     /// `T: Wire` so the edge *can* be a network edge; in-memory
     /// transports never serialize. For `Net`, failure to stand up the
     /// loopback socket pair panics — channel creation has no error
     /// path, and a host that cannot bind loopback cannot run at all.
+    ///
+    /// Inside [`crate::csp::sim::SimNet::build_under`] every edge is
+    /// redirected onto the deterministic sim transport instead
+    /// (rendezvous configs map to sim rendezvous, buffered/net configs
+    /// to the sim buffer of the configured capacity), which is how
+    /// unmodified builders run under the controlled scheduler.
     pub fn channel<T: Wire + Send + 'static>(&self, name: &str) -> (Out<T>, In<T>) {
+        if let Some(kernel) = super::sim::build_kernel() {
+            let capacity = match self.transport {
+                TransportKind::Rendezvous => 0,
+                TransportKind::Buffered | TransportKind::Net => self.capacity,
+            };
+            let core: Arc<dyn Transport<T>> =
+                super::sim::SimCore::new(kernel, name, capacity, self.faults.clone());
+            return ends_of(core);
+        }
         match self.transport {
             TransportKind::Rendezvous => named_channel(name),
-            TransportKind::Buffered => buffered_channel(name, self.capacity),
-            TransportKind::Net => {
-                crate::net::transport::net_loopback_pair(name, self.capacity, &self.net)
-                    .unwrap_or_else(|e| panic!("net channel '{name}': {e}"))
+            TransportKind::Buffered => {
+                let core: Arc<dyn Transport<T>> = BufferedCore::new_faulted(
+                    name.to_string(),
+                    self.capacity,
+                    self.faults.clone(),
+                );
+                ends_of(core)
             }
+            TransportKind::Net => crate::net::transport::net_loopback_pair_faulted(
+                name,
+                self.capacity,
+                &self.net,
+                self.faults.clone(),
+            )
+            .unwrap_or_else(|e| panic!("net channel '{name}': {e}")),
         }
     }
 
@@ -110,9 +163,10 @@ impl RuntimeConfig {
         name: &str,
     ) -> (Vec<Out<T>>, Vec<In<T>>) {
         match self.transport {
-            TransportKind::Rendezvous => channel_list(n, name),
-            TransportKind::Buffered => buffered_channel_list(n, name, self.capacity),
-            TransportKind::Net => {
+            TransportKind::Rendezvous if super::sim::build_kernel().is_none() => {
+                channel_list(n, name)
+            }
+            _ => {
                 let mut outs = Vec::with_capacity(n);
                 let mut ins = Vec::with_capacity(n);
                 for i in 0..n {

@@ -85,9 +85,10 @@ pub fn default_pool_size() -> usize {
 }
 
 /// Outcome of one process, normalised across spawn/join and catch_unwind.
-type Outcome = std::result::Result<Result<()>, String>;
+/// Shared with the deterministic [`crate::csp::sim`] executor.
+pub(crate) type Outcome = std::result::Result<Result<()>, String>;
 
-fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
+pub(crate) fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
     panic
         .downcast_ref::<&str>()
         .map(|s| s.to_string())
@@ -99,7 +100,7 @@ fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
 /// *root-cause* error (user code, cast, method lookup, I/O, panic …) if
 /// any process produced one; only if every failure is a `Poisoned`
 /// cascade do we return `Poisoned` itself.
-fn summarise(outcomes: Vec<Outcome>) -> Result<()> {
+pub(crate) fn summarise(outcomes: Vec<Outcome>) -> Result<()> {
     let mut root_cause: Option<GppError> = None;
     let mut poisoned = false;
     for o in outcomes {

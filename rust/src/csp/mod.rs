@@ -30,6 +30,7 @@ pub mod barrier;
 pub mod executor;
 pub mod process;
 pub mod config;
+pub mod sim;
 
 pub use alt::Alt;
 pub use barrier::Barrier;
@@ -38,4 +39,5 @@ pub use config::RuntimeConfig;
 pub use error::{GppError, Result};
 pub use executor::{Executor, ExecutorKind, PooledExecutor, ThreadPerProcess};
 pub use process::{run_parallel, run_parallel_named, CSProcess, ProcessFn};
-pub use transport::{Transport, TransportKind, TransportStats};
+pub use sim::{Explorer, SimNet, SimPolicy};
+pub use transport::{FaultAction, FaultOp, FaultPlan, FaultRule, Transport, TransportKind, TransportStats};

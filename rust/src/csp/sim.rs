@@ -1,0 +1,1447 @@
+//! Deterministic simulation runtime: run a whole process network
+//! cooperatively under a controlled scheduler.
+//!
+//! The paper's guarantee — any network of library processes "is
+//! guaranteed to be deadlock and livelock free and terminate correctly"
+//! (§2.1, §9) — is discharged symbolically by [`crate::verify`]. This
+//! module closes the model↔implementation gap from the other side: the
+//! *actual* process objects (the same `Box<dyn CSProcess>` vectors the
+//! builders produce) run on a [`SimNet`], where
+//!
+//! * every process still gets its own OS thread, but a token-passing
+//!   kernel lets **exactly one** run at a time, so the interleaving is
+//!   fully determined by a [`SimPolicy`];
+//! * every channel operation is a *schedule point*: the kernel may
+//!   switch processes before each op, and a blocked op parks the
+//!   process until a peer changes the channel state;
+//! * "no runnable process" is **detected** and reported as
+//!   [`GppError::Sim`] with the offending schedule — a deadlock becomes
+//!   a failing assertion instead of a hung test;
+//! * the schedule trace (the sequence of chosen process ids) is
+//!   recorded; re-running under [`SimPolicy::Replay`] reproduces a
+//!   failure byte-for-byte;
+//! * a virtual clock replaces wall time: [`sim_sleep`] advances only
+//!   when nothing is runnable, so timeout/delayed-fault paths are
+//!   deterministic and instant;
+//! * [`Explorer`] enumerates *all* interleavings of a small network by
+//!   depth-first search over the schedule tree (bounded by
+//!   `max_steps`/`max_schedules`), the dynamic analogue of the
+//!   [`crate::verify`] state-space exploration;
+//! * [`SimNet::pooled`] emulates [`super::executor::PooledExecutor`]'s
+//!   run-to-completion semantics (at most `n` processes active, list
+//!   order), so the documented pool-smaller-than-a-rendezvous-clique
+//!   deadlock is *provable* as a deterministic regression test.
+//!
+//! Limitations (by design, documented in ROADMAP open items): processes
+//! that perform channel operations from helper threads they spawn
+//! themselves (`OneParCastList`, the net reading-end pump) are not
+//! simulable — a sim channel op from an unregistered thread fails with
+//! a clear `GppError::Sim`. Compute-only helper threads (the
+//! `MultiCoreEngine` node phase) are fine: they run to completion while
+//! their process holds the turn.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
+
+use super::alt::AltSignal;
+use super::channel::{ends_of, In, Out};
+use super::error::{GppError, Result};
+use super::executor::{panic_message, summarise, Executor, Outcome};
+use super::process::CSProcess;
+use super::transport::{
+    next_chan_id, FaultAction, FaultOp, FaultPlan, Transport, TransportKind, TransportStats,
+};
+use crate::util::rng::Rng;
+
+/// Sentinel: no process holds the turn.
+const IDLE: usize = usize::MAX;
+
+/// Default per-run schedule-step bound (a guard against runaway loops;
+/// each channel operation costs one step or more).
+pub const DEFAULT_MAX_STEPS: usize = 200_000;
+
+// ------------------------------------------------------------- policies
+
+/// How the kernel picks the next process at each schedule point.
+#[derive(Clone, Debug)]
+pub enum SimPolicy {
+    /// Cycle through runnable processes in pid order — the fair
+    /// baseline; every process makes steady progress.
+    RoundRobin,
+    /// Seeded pseudo-random choice ([`crate::util::rng::Rng`]): a
+    /// schedule *fuzzer*. The same seed always yields the same
+    /// schedule.
+    Seeded(u64),
+    /// Follow a recorded schedule (the chosen pid per step) exactly;
+    /// diverging from it is an error. This is what makes a printed
+    /// failure reproducible.
+    Replay(Vec<usize>),
+    /// Follow a prefix, then always pick the first runnable pid —
+    /// the [`Explorer`]'s DFS probe.
+    Forced(Vec<usize>),
+}
+
+struct PolicyState {
+    policy: SimPolicy,
+    rng: Option<Rng>,
+    rr_last: usize,
+}
+
+impl PolicyState {
+    fn new(policy: SimPolicy) -> Self {
+        let rng = match &policy {
+            SimPolicy::Seeded(seed) => Some(Rng::new(*seed)),
+            _ => None,
+        };
+        Self { policy, rng, rr_last: usize::MAX }
+    }
+
+    /// Index into `runnable`, or `None` when a replay diverges.
+    fn choose(&mut self, step: usize, runnable: &[usize]) -> Option<usize> {
+        match &self.policy {
+            SimPolicy::RoundRobin => {
+                let next = runnable
+                    .iter()
+                    .position(|&p| self.rr_last == usize::MAX || p > self.rr_last)
+                    .unwrap_or(0);
+                self.rr_last = runnable[next];
+                Some(next)
+            }
+            SimPolicy::Seeded(_) => {
+                let rng = self.rng.as_mut().expect("seeded policy has rng");
+                Some(rng.next_bounded(runnable.len() as u64) as usize)
+            }
+            SimPolicy::Replay(trace) => match trace.get(step) {
+                Some(pid) => runnable.iter().position(|p| p == pid),
+                None => None,
+            },
+            SimPolicy::Forced(prefix) => match prefix.get(step) {
+                Some(pid) => runnable.iter().position(|p| p == pid),
+                None => Some(0),
+            },
+        }
+    }
+}
+
+// --------------------------------------------------------------- kernel
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum PStat {
+    /// Waiting for a pool slot (pool emulation only).
+    Queued,
+    Runnable,
+    Blocked,
+    Sleeping,
+    Done,
+}
+
+struct Kst {
+    names: Vec<String>,
+    status: Vec<PStat>,
+    blocked_on: Vec<String>,
+    /// Virtual wake time, meaningful while `Sleeping`.
+    wake_at: Vec<u64>,
+    /// pid currently holding the turn ([`IDLE`] when none).
+    current: usize,
+    policy: PolicyState,
+    /// Chosen pid per schedule step.
+    trace: Vec<usize>,
+    /// Runnable-set snapshot + chosen pid per step (Explorer input).
+    decisions: Vec<(Vec<usize>, usize)>,
+    steps: usize,
+    max_steps: usize,
+    abort: Option<GppError>,
+    /// Pool emulation: at most this many processes active at once.
+    pool: Option<usize>,
+    activated: Vec<bool>,
+    active: usize,
+    /// Virtual clock.
+    time: u64,
+}
+
+/// The cooperative scheduler shared by every [`SimCore`] channel and the
+/// process threads of one simulation run.
+pub struct SimKernel {
+    st: Mutex<Kst>,
+    cv: Condvar,
+}
+
+thread_local! {
+    /// (kernel, pid) of the simulated process running on this thread.
+    static SIM_TLS: RefCell<Option<(Arc<SimKernel>, usize)>> = const { RefCell::new(None) };
+    /// Kernel stack consulted by [`crate::csp::RuntimeConfig::channel`]
+    /// so unmodified builders synthesise sim channels.
+    static SIM_BUILD: RefCell<Vec<Arc<SimKernel>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The kernel + pid attached to the calling thread, if it is a
+/// simulated process.
+pub(crate) fn attached() -> Option<(Arc<SimKernel>, usize)> {
+    SIM_TLS.with(|t| t.borrow().clone())
+}
+
+/// The kernel channels should currently be built on (see
+/// [`SimNet::build_under`]).
+pub(crate) fn build_kernel() -> Option<Arc<SimKernel>> {
+    SIM_BUILD.with(|b| b.borrow().last().cloned())
+}
+
+impl SimKernel {
+    fn new(policy: SimPolicy, pool: Option<usize>, max_steps: usize) -> Arc<Self> {
+        Arc::new(Self {
+            st: Mutex::new(Kst {
+                names: Vec::new(),
+                status: Vec::new(),
+                blocked_on: Vec::new(),
+                wake_at: Vec::new(),
+                current: IDLE,
+                policy: PolicyState::new(policy),
+                trace: Vec::new(),
+                decisions: Vec::new(),
+                steps: 0,
+                max_steps: max_steps.max(1),
+                abort: None,
+                pool,
+                activated: Vec::new(),
+                active: 0,
+                time: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn add_proc(&self, name: &str) -> usize {
+        let mut g = self.st.lock().unwrap();
+        let pid = g.names.len();
+        g.names.push(name.to_string());
+        g.status.push(if g.pool.is_some() { PStat::Queued } else { PStat::Runnable });
+        g.blocked_on.push(String::new());
+        g.wake_at.push(0);
+        g.activated.push(false);
+        pid
+    }
+
+    fn deadlock_message(g: &Kst) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for p in 0..g.status.len() {
+            let what = match g.status[p] {
+                PStat::Done => continue,
+                PStat::Queued => "queued for a pool slot".to_string(),
+                PStat::Blocked => g.blocked_on[p].clone(),
+                PStat::Sleeping => format!("sleeping until t={}", g.wake_at[p]),
+                PStat::Runnable => "runnable".to_string(),
+            };
+            parts.push(format!("{p}:{} [{what}]", g.names[p]));
+        }
+        let pool = match g.pool {
+            Some(n) => format!(" (pool of {n}, {} active)", g.active),
+            None => String::new(),
+        };
+        format!(
+            "deadlock detected{pool}: stuck processes: {}; schedule=[{}]",
+            parts.join(", "),
+            schedule_to_string(&g.trace)
+        )
+    }
+
+    /// Pick the next process to run. Caller holds the state lock with
+    /// `current == IDLE`.
+    fn schedule_locked(&self, g: &mut Kst) {
+        if g.abort.is_none() {
+            loop {
+                if let Some(limit) = g.pool {
+                    // Fill free pool slots in list order — exactly the
+                    // PooledExecutor's pop_front behaviour.
+                    while g.active < limit {
+                        match (0..g.status.len()).find(|&p| g.status[p] == PStat::Queued) {
+                            Some(p) => {
+                                g.status[p] = PStat::Runnable;
+                                g.activated[p] = true;
+                                g.active += 1;
+                            }
+                            None => break,
+                        }
+                    }
+                }
+                let runnable: Vec<usize> = (0..g.status.len())
+                    .filter(|&p| g.status[p] == PStat::Runnable)
+                    .collect();
+                if !runnable.is_empty() {
+                    if g.steps >= g.max_steps {
+                        g.abort = Some(GppError::Sim(format!(
+                            "schedule exceeded {} steps (possible livelock)",
+                            g.max_steps
+                        )));
+                        break;
+                    }
+                    match g.policy.choose(g.steps, &runnable) {
+                        Some(k) => {
+                            let pid = runnable[k];
+                            g.current = pid;
+                            g.trace.push(pid);
+                            g.decisions.push((runnable, pid));
+                            g.steps += 1;
+                        }
+                        None => {
+                            g.abort = Some(GppError::Sim(format!(
+                                "replay diverged at step {} (runnable: {:?})",
+                                g.steps, runnable
+                            )));
+                        }
+                    }
+                    break;
+                }
+                if g.status.iter().all(|&s| s == PStat::Done) {
+                    g.current = IDLE;
+                    break;
+                }
+                // Nothing runnable but sleepers exist: jump the virtual
+                // clock to the earliest wake time.
+                let next_wake = (0..g.status.len())
+                    .filter(|&p| g.status[p] == PStat::Sleeping)
+                    .map(|p| g.wake_at[p])
+                    .min();
+                if let Some(t) = next_wake {
+                    if t > g.time {
+                        g.time = t;
+                    }
+                    let now = g.time;
+                    for p in 0..g.status.len() {
+                        if g.status[p] == PStat::Sleeping && g.wake_at[p] <= now {
+                            g.status[p] = PStat::Runnable;
+                        }
+                    }
+                    continue;
+                }
+                g.abort = Some(GppError::Sim(Self::deadlock_message(g)));
+                break;
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    fn wait_my_turn<'a>(
+        &self,
+        mut g: MutexGuard<'a, Kst>,
+        pid: usize,
+    ) -> (MutexGuard<'a, Kst>, Result<()>) {
+        loop {
+            if let Some(e) = g.abort.clone() {
+                return (g, Err(e));
+            }
+            if g.current == pid {
+                return (g, Ok(()));
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Block a freshly spawned process thread until first scheduled.
+    fn start_gate(&self, pid: usize) -> Result<()> {
+        let g = self.st.lock().unwrap();
+        let (_g, r) = self.wait_my_turn(g, pid);
+        r
+    }
+
+    /// Schedule point: stay runnable, but let the policy pick who runs
+    /// next (possibly this process again).
+    pub(crate) fn yield_now(&self, pid: usize) -> Result<()> {
+        let mut g = self.st.lock().unwrap();
+        if let Some(e) = g.abort.clone() {
+            return Err(e);
+        }
+        g.current = IDLE;
+        self.schedule_locked(&mut g);
+        let (_g, r) = self.wait_my_turn(g, pid);
+        r
+    }
+
+    /// Park the calling process until a peer wakes it (and the scheduler
+    /// picks it again). `reason` shows up in deadlock reports.
+    pub(crate) fn block(&self, pid: usize, reason: &str) -> Result<()> {
+        let mut g = self.st.lock().unwrap();
+        if let Some(e) = g.abort.clone() {
+            return Err(e);
+        }
+        g.status[pid] = PStat::Blocked;
+        g.blocked_on[pid] = reason.to_string();
+        g.current = IDLE;
+        self.schedule_locked(&mut g);
+        let (_g, r) = self.wait_my_turn(g, pid);
+        r
+    }
+
+    /// Mark blocked processes runnable again (channel state changed).
+    /// Spurious wakes are safe: every blocking site re-checks its
+    /// condition in a loop.
+    pub(crate) fn wake(&self, pids: &[usize]) {
+        if pids.is_empty() {
+            return;
+        }
+        let mut g = self.st.lock().unwrap();
+        for &p in pids {
+            if g.status[p] == PStat::Blocked {
+                g.status[p] = PStat::Runnable;
+                g.blocked_on[p].clear();
+            }
+        }
+    }
+
+    /// Virtual-clock sleep (deterministic: time advances only when
+    /// nothing is runnable).
+    fn sleep(&self, pid: usize, ticks: u64) -> Result<()> {
+        let mut g = self.st.lock().unwrap();
+        if let Some(e) = g.abort.clone() {
+            return Err(e);
+        }
+        g.wake_at[pid] = g.time.saturating_add(ticks);
+        g.status[pid] = PStat::Sleeping;
+        g.current = IDLE;
+        self.schedule_locked(&mut g);
+        let (_g, r) = self.wait_my_turn(g, pid);
+        r
+    }
+
+    fn finish(&self, pid: usize) {
+        let mut g = self.st.lock().unwrap();
+        g.status[pid] = PStat::Done;
+        g.blocked_on[pid].clear();
+        if g.pool.is_some() && g.activated[pid] {
+            g.activated[pid] = false;
+            g.active -= 1;
+        }
+        if g.current == pid {
+            g.current = IDLE;
+            self.schedule_locked(&mut g);
+        } else {
+            self.cv.notify_all();
+        }
+    }
+
+    fn abort_error(&self) -> Option<GppError> {
+        self.st.lock().unwrap().abort.clone()
+    }
+
+    fn trace(&self) -> Vec<usize> {
+        self.st.lock().unwrap().trace.clone()
+    }
+
+    fn decisions(&self) -> Vec<(Vec<usize>, usize)> {
+        self.st.lock().unwrap().decisions.clone()
+    }
+
+    fn proc_names(&self) -> Vec<String> {
+        self.st.lock().unwrap().names.clone()
+    }
+
+    fn now(&self) -> u64 {
+        self.st.lock().unwrap().time
+    }
+
+    /// Sim-aware [`AltSignal`] wait: park until the signal fires.
+    pub(crate) fn wait_signal(&self, pid: usize, sig: &AltSignal) {
+        loop {
+            if sig.is_fired() {
+                return;
+            }
+            if self.block(pid, "alt select").is_err() {
+                // Aborted (deadlock/step bound): unwind this process;
+                // the executor reports the kernel's error.
+                panic!("simulation aborted while selecting");
+            }
+        }
+    }
+}
+
+/// Virtual-clock sleep for the calling simulated process. Outside a
+/// simulation this is an error (real processes must not busy-wait).
+pub fn sim_sleep(ticks: u64) -> Result<()> {
+    match attached() {
+        Some((k, pid)) => k.sleep(pid, ticks),
+        None => Err(GppError::Sim("sim_sleep outside a simulated process".into())),
+    }
+}
+
+/// Current virtual time of the calling simulated process's kernel.
+pub fn sim_now() -> Option<u64> {
+    attached().map(|(k, _)| k.now())
+}
+
+/// Render a schedule as the canonical comma-separated pid list — the
+/// replay key printed with every sim failure.
+pub fn schedule_to_string(trace: &[usize]) -> String {
+    trace
+        .iter()
+        .map(|p| p.to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Parse [`schedule_to_string`] output back into a replayable schedule.
+pub fn parse_schedule(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .map_err(|_| GppError::Sim(format!("bad schedule token '{t}'")))
+        })
+        .collect()
+}
+
+// -------------------------------------------------------- sim transport
+
+struct SimPending<T> {
+    wid: u64,
+    value: T,
+}
+
+struct SimChSt<T> {
+    queue: VecDeque<SimPending<T>>,
+    /// Rendezvous bookkeeping: completed write ids not yet claimed.
+    taken: Vec<u64>,
+    next_wid: u64,
+    poisoned: bool,
+    blocked_readers: Vec<usize>,
+    blocked_writers: Vec<usize>,
+    alt_waiters: Vec<(usize, Weak<AltSignal>)>,
+}
+
+/// Kernel-controlled channel transport. `capacity == 0` gives rendezvous
+/// semantics (a write blocks until *its* value is taken); `capacity > 0`
+/// a bounded buffer. Either way, blocking goes through the kernel, so
+/// the scheduler fully controls the interleaving.
+pub struct SimCore<T> {
+    id: u64,
+    name: String,
+    capacity: usize,
+    kernel: Arc<SimKernel>,
+    st: Mutex<SimChSt<T>>,
+    faults: Option<Arc<FaultPlan>>,
+}
+
+impl<T> SimCore<T> {
+    pub fn new(
+        kernel: Arc<SimKernel>,
+        name: &str,
+        capacity: usize,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            id: next_chan_id(),
+            name: name.to_string(),
+            capacity,
+            kernel,
+            st: Mutex::new(SimChSt {
+                queue: VecDeque::new(),
+                taken: Vec::new(),
+                next_wid: 1,
+                poisoned: false,
+                blocked_readers: Vec::new(),
+                blocked_writers: Vec::new(),
+                alt_waiters: Vec::new(),
+            }),
+            faults,
+        })
+    }
+
+    fn pid(&self) -> Result<usize> {
+        match attached() {
+            Some((k, pid)) if Arc::ptr_eq(&k, &self.kernel) => Ok(pid),
+            Some(_) => Err(GppError::Sim(format!(
+                "sim channel '{}' used from a different simulation",
+                self.name
+            ))),
+            None => Err(GppError::Sim(format!(
+                "sim channel '{}' used from a thread outside the simulation",
+                self.name
+            ))),
+        }
+    }
+
+    /// Wake readers + alt waiters after channel state became readable.
+    fn wake_readers(&self, ch: &mut SimChSt<T>) {
+        let mut pids: Vec<usize> = ch.blocked_readers.drain(..).collect();
+        for (pid, w) in std::mem::take(&mut ch.alt_waiters) {
+            if let Some(sig) = w.upgrade() {
+                sig.fire();
+            }
+            pids.push(pid);
+        }
+        self.kernel.wake(&pids);
+    }
+
+    fn wake_writers(&self, ch: &mut SimChSt<T>) {
+        let pids: Vec<usize> = ch.blocked_writers.drain(..).collect();
+        self.kernel.wake(&pids);
+    }
+
+    fn fault(&self, op: FaultOp) -> Option<FaultAction> {
+        self.faults.as_ref().and_then(|fp| fp.apply(op, &self.name))
+    }
+}
+
+impl<T: Send> Transport<T> for SimCore<T> {
+    fn write(&self, value: T) -> Result<()> {
+        let pid = self.pid()?;
+        self.kernel.yield_now(pid)?;
+        match self.fault(FaultOp::Write) {
+            Some(FaultAction::Drop) => return Ok(()),
+            Some(FaultAction::Poison) => {
+                self.poison();
+                return Err(GppError::Poisoned);
+            }
+            // Same error type the real in-memory transport surfaces for
+            // an injected failure, so fault scripts are drop-in.
+            Some(FaultAction::Fail(msg)) => return Err(GppError::Io(msg)),
+            None => {}
+        }
+        if self.capacity == 0 {
+            // Rendezvous: enqueue the offer, wait until taken.
+            let wid = {
+                let mut ch = self.st.lock().unwrap();
+                if ch.poisoned {
+                    return Err(GppError::Poisoned);
+                }
+                let wid = ch.next_wid;
+                ch.next_wid += 1;
+                ch.queue.push_back(SimPending { wid, value });
+                self.wake_readers(&mut ch);
+                wid
+            };
+            loop {
+                {
+                    let mut ch = self.st.lock().unwrap();
+                    if let Some(pos) = ch.taken.iter().position(|&w| w == wid) {
+                        ch.taken.swap_remove(pos);
+                        return Ok(());
+                    }
+                    if ch.poisoned {
+                        ch.queue.retain(|p| p.wid != wid);
+                        return Err(GppError::Poisoned);
+                    }
+                    ch.blocked_writers.push(pid);
+                }
+                self.kernel
+                    .block(pid, &format!("rendezvous write '{}'", self.name))?;
+            }
+        } else {
+            // Bounded buffer: wait for space, complete once queued.
+            let mut value = Some(value);
+            loop {
+                {
+                    let mut ch = self.st.lock().unwrap();
+                    if ch.poisoned {
+                        return Err(GppError::Poisoned);
+                    }
+                    if ch.queue.len() < self.capacity {
+                        let wid = ch.next_wid;
+                        ch.next_wid += 1;
+                        ch.queue.push_back(SimPending {
+                            wid,
+                            value: value.take().expect("value written once"),
+                        });
+                        self.wake_readers(&mut ch);
+                        return Ok(());
+                    }
+                    ch.blocked_writers.push(pid);
+                }
+                self.kernel
+                    .block(pid, &format!("write '{}' (buffer full)", self.name))?;
+            }
+        }
+    }
+
+    fn read(&self) -> Result<T> {
+        let pid = self.pid()?;
+        self.kernel.yield_now(pid)?;
+        match self.fault(FaultOp::Read) {
+            Some(FaultAction::Poison) => {
+                self.poison();
+                return Err(GppError::Poisoned);
+            }
+            Some(FaultAction::Fail(msg)) => return Err(GppError::Io(msg)),
+            _ => {}
+        }
+        loop {
+            {
+                let mut ch = self.st.lock().unwrap();
+                if let Some(p) = ch.queue.pop_front() {
+                    if self.capacity == 0 {
+                        ch.taken.push(p.wid);
+                    }
+                    self.wake_writers(&mut ch);
+                    return Ok(p.value);
+                }
+                if ch.poisoned {
+                    return Err(GppError::Poisoned);
+                }
+                ch.blocked_readers.push(pid);
+            }
+            self.kernel.block(pid, &format!("read '{}'", self.name))?;
+        }
+    }
+
+    fn try_read(&self) -> Result<Option<T>> {
+        let pid = self.pid()?;
+        self.kernel.yield_now(pid)?;
+        let mut ch = self.st.lock().unwrap();
+        if let Some(p) = ch.queue.pop_front() {
+            if self.capacity == 0 {
+                ch.taken.push(p.wid);
+            }
+            self.wake_writers(&mut ch);
+            return Ok(Some(p.value));
+        }
+        if ch.poisoned {
+            return Err(GppError::Poisoned);
+        }
+        Ok(None)
+    }
+
+    fn read_batch(&self, max: usize) -> Result<Vec<T>> {
+        let pid = self.pid()?;
+        self.kernel.yield_now(pid)?;
+        let max = max.max(1);
+        loop {
+            {
+                let mut ch = self.st.lock().unwrap();
+                if !ch.queue.is_empty() {
+                    let n = ch.queue.len().min(max);
+                    let mut out = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let p = ch.queue.pop_front().unwrap();
+                        if self.capacity == 0 {
+                            ch.taken.push(p.wid);
+                        }
+                        out.push(p.value);
+                    }
+                    self.wake_writers(&mut ch);
+                    return Ok(out);
+                }
+                if ch.poisoned {
+                    return Err(GppError::Poisoned);
+                }
+                ch.blocked_readers.push(pid);
+            }
+            self.kernel.block(pid, &format!("read '{}'", self.name))?;
+        }
+    }
+
+    fn read_batch_while(&self, max: usize, keep: &dyn Fn(&T) -> bool) -> Result<Vec<T>> {
+        let pid = self.pid()?;
+        self.kernel.yield_now(pid)?;
+        let max = max.max(1);
+        loop {
+            {
+                let mut ch = self.st.lock().unwrap();
+                if !ch.queue.is_empty() {
+                    let mut out = Vec::new();
+                    while out.len() < max {
+                        let take = match ch.queue.front() {
+                            Some(p) => keep(&p.value),
+                            None => false,
+                        };
+                        if !take {
+                            break;
+                        }
+                        let p = ch.queue.pop_front().unwrap();
+                        if self.capacity == 0 {
+                            ch.taken.push(p.wid);
+                        }
+                        out.push(p.value);
+                    }
+                    if !out.is_empty() {
+                        self.wake_writers(&mut ch);
+                    }
+                    return Ok(out);
+                }
+                if ch.poisoned {
+                    return Err(GppError::Poisoned);
+                }
+                ch.blocked_readers.push(pid);
+            }
+            self.kernel.block(pid, &format!("read '{}'", self.name))?;
+        }
+    }
+
+    fn ready(&self) -> bool {
+        let ch = self.st.lock().unwrap();
+        !ch.queue.is_empty() || ch.poisoned
+    }
+
+    fn register_alt(&self, sig: &Arc<AltSignal>) -> bool {
+        let mut ch = self.st.lock().unwrap();
+        if !ch.queue.is_empty() || ch.poisoned {
+            return true;
+        }
+        if let Some((_, pid)) = attached() {
+            ch.alt_waiters.retain(|(_, w)| w.strong_count() > 0);
+            ch.alt_waiters.push((pid, Arc::downgrade(sig)));
+        }
+        false
+    }
+
+    fn poison(&self) {
+        let mut ch = self.st.lock().unwrap();
+        if ch.poisoned {
+            return;
+        }
+        ch.poisoned = true;
+        self.wake_readers(&mut ch);
+        self.wake_writers(&mut ch);
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.st.lock().unwrap().poisoned
+    }
+
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> TransportKind {
+        if self.capacity == 0 {
+            TransportKind::Rendezvous
+        } else {
+            TransportKind::Buffered
+        }
+    }
+
+    fn capacity(&self) -> Option<usize> {
+        if self.capacity == 0 {
+            None
+        } else {
+            Some(self.capacity)
+        }
+    }
+
+    fn stats(&self) -> TransportStats {
+        let ch = self.st.lock().unwrap();
+        TransportStats {
+            pending: ch.queue.len(),
+            taken: ch.taken.len(),
+            alt_waiters: ch.alt_waiters.len(),
+            blocked_writers: ch.blocked_writers.len(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- facade
+
+/// One deterministic simulation run: create channels on it, then
+/// [`SimNet::run`] a process vector under the configured policy.
+pub struct SimNet {
+    kernel: Arc<SimKernel>,
+}
+
+impl SimNet {
+    /// All processes runnable at once (the thread-per-process analog).
+    pub fn new(policy: SimPolicy) -> Self {
+        Self::with_options(policy, None, DEFAULT_MAX_STEPS)
+    }
+
+    /// Emulate [`super::executor::PooledExecutor`]: at most `threads`
+    /// processes active simultaneously, activated in list order, each
+    /// holding its slot until completion — including while blocked,
+    /// which is exactly the documented deadlock hazard.
+    pub fn pooled(policy: SimPolicy, threads: usize) -> Self {
+        Self::with_options(policy, Some(threads.max(1)), DEFAULT_MAX_STEPS)
+    }
+
+    pub fn with_options(policy: SimPolicy, pool: Option<usize>, max_steps: usize) -> Self {
+        Self {
+            kernel: SimKernel::new(policy, pool, max_steps),
+        }
+    }
+
+    /// A rendezvous channel under this simulation.
+    pub fn channel<T: Send + 'static>(&self, name: &str) -> (Out<T>, In<T>) {
+        let core: Arc<dyn Transport<T>> = SimCore::new(self.kernel.clone(), name, 0, None);
+        ends_of(core)
+    }
+
+    /// A bounded buffered channel under this simulation.
+    pub fn buffered_channel<T: Send + 'static>(
+        &self,
+        name: &str,
+        capacity: usize,
+    ) -> (Out<T>, In<T>) {
+        let core: Arc<dyn Transport<T>> =
+            SimCore::new(self.kernel.clone(), name, capacity.max(1), None);
+        ends_of(core)
+    }
+
+    /// Like [`SimNet::channel`] but with a deterministic fault plan.
+    pub fn faulted_channel<T: Send + 'static>(
+        &self,
+        name: &str,
+        capacity: usize,
+        faults: Arc<FaultPlan>,
+    ) -> (Out<T>, In<T>) {
+        let core: Arc<dyn Transport<T>> =
+            SimCore::new(self.kernel.clone(), name, capacity, Some(faults));
+        ends_of(core)
+    }
+
+    /// Run `f` with [`crate::csp::RuntimeConfig::channel`] redirected to
+    /// this simulation, so **unmodified builders** (patterns, the DSL)
+    /// synthesise sim channels: rendezvous configs map to sim
+    /// rendezvous, buffered/net configs to the sim buffer of the
+    /// configured capacity.
+    pub fn build_under<R>(&self, f: impl FnOnce() -> R) -> R {
+        struct Guard;
+        impl Drop for Guard {
+            fn drop(&mut self) {
+                SIM_BUILD.with(|b| {
+                    b.borrow_mut().pop();
+                });
+            }
+        }
+        SIM_BUILD.with(|b| b.borrow_mut().push(self.kernel.clone()));
+        let _g = Guard;
+        f()
+    }
+
+    /// Run the processes to completion under the kernel. Returns the
+    /// summarised process outcome; a detected deadlock / replay
+    /// divergence / step-bound overrun surfaces as [`GppError::Sim`]
+    /// carrying the offending schedule.
+    pub fn run(&self, label: &str, procs: Vec<Box<dyn CSProcess>>) -> Result<()> {
+        let pids: Vec<usize> = procs.iter().map(|p| self.kernel.add_proc(&p.name())).collect();
+        let mut handles = Vec::with_capacity(procs.len());
+        for (pid, mut p) in pids.into_iter().zip(procs) {
+            let kernel = self.kernel.clone();
+            let tname = format!("{label}/sim-{pid}");
+            let h = std::thread::Builder::new()
+                .name(tname.clone())
+                .stack_size(512 * 1024)
+                .spawn(move || -> Outcome {
+                    SIM_TLS.with(|t| *t.borrow_mut() = Some((kernel.clone(), pid)));
+                    let out: Outcome = match kernel.start_gate(pid) {
+                        Ok(()) => {
+                            catch_unwind(AssertUnwindSafe(|| p.run())).map_err(panic_message)
+                        }
+                        Err(e) => Ok(Err(e)),
+                    };
+                    kernel.finish(pid);
+                    SIM_TLS.with(|t| *t.borrow_mut() = None);
+                    out
+                })
+                .map_err(|e| GppError::Sim(format!("spawn {tname}: {e}")))?;
+            handles.push(h);
+        }
+        // Hand the first turn out only after every thread exists, so the
+        // schedule is a pure function of the policy.
+        {
+            let mut g = self.kernel.st.lock().unwrap();
+            self.kernel.schedule_locked(&mut g);
+        }
+        let outcomes: Vec<Outcome> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|p| Err(panic_message(p))))
+            .collect();
+        if let Some(e) = self.kernel.abort_error() {
+            return Err(e);
+        }
+        summarise(outcomes)
+    }
+
+    /// The schedule this run followed (chosen pid per step).
+    pub fn trace(&self) -> Vec<usize> {
+        self.kernel.trace()
+    }
+
+    /// [`schedule_to_string`] of [`SimNet::trace`] — print this with any
+    /// failure; feeding it to [`SimPolicy::Replay`] reproduces the run.
+    pub fn schedule_string(&self) -> String {
+        schedule_to_string(&self.kernel.trace())
+    }
+
+    pub fn proc_names(&self) -> Vec<String> {
+        self.kernel.proc_names()
+    }
+
+    /// Final virtual time.
+    pub fn now(&self) -> u64 {
+        self.kernel.now()
+    }
+
+    fn decisions(&self) -> Vec<(Vec<usize>, usize)> {
+        self.kernel.decisions()
+    }
+
+    /// An [`Executor`] bound to this simulation (the PR-1 trait, so
+    /// `RuntimeConfig`-style call sites can run under the sim).
+    pub fn executor(&self) -> SimExecutor {
+        SimExecutor {
+            kernel: self.kernel.clone(),
+            net: SimNet {
+                kernel: self.kernel.clone(),
+            },
+        }
+    }
+}
+
+/// [`Executor`] implementation delegating to a [`SimNet`]. One run per
+/// simulation: the kernel's schedule/trace covers everything executed
+/// through it.
+pub struct SimExecutor {
+    #[allow(dead_code)]
+    kernel: Arc<SimKernel>,
+    net: SimNet,
+}
+
+impl Executor for SimExecutor {
+    fn run_named(&self, label: &str, procs: Vec<Box<dyn CSProcess>>) -> Result<()> {
+        self.net.run(label, procs)
+    }
+}
+
+// -------------------------------------------------------------- explorer
+
+/// Outcome of a schedule-space exploration.
+pub struct ExploreReport {
+    /// Distinct schedules executed.
+    pub schedules: usize,
+    /// True when the whole bounded schedule tree was covered.
+    pub exhaustive: bool,
+    /// First failing schedule found, if any.
+    pub failure: Option<ExploreFailure>,
+}
+
+pub struct ExploreFailure {
+    pub error: GppError,
+    /// The offending schedule — replay it with [`SimPolicy::Replay`].
+    pub schedule: Vec<usize>,
+    pub proc_names: Vec<String>,
+}
+
+impl std::fmt::Display for ExploreFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} under schedule [{}] over {:?}",
+            self.error,
+            schedule_to_string(&self.schedule),
+            self.proc_names
+        )
+    }
+}
+
+/// Exhaustive DFS over the schedule tree of a small network: every
+/// interleaving of channel operations up to `max_steps`, newest-branch
+/// first, stopping at the first failure or after `max_schedules` runs.
+pub struct Explorer {
+    pub max_steps: usize,
+    pub max_schedules: usize,
+    /// Emulate a pooled executor of this many slots (see
+    /// [`SimNet::pooled`]).
+    pub pool: Option<usize>,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Self {
+            max_steps: 5_000,
+            max_schedules: 2_000,
+            pool: None,
+        }
+    }
+}
+
+impl Explorer {
+    pub fn new(max_steps: usize, max_schedules: usize) -> Self {
+        Self {
+            max_steps,
+            max_schedules,
+            pool: None,
+        }
+    }
+
+    pub fn pooled(mut self, threads: usize) -> Self {
+        self.pool = Some(threads.max(1));
+        self
+    }
+
+    /// Enumerate interleavings. `factory` must rebuild the *same*
+    /// network on the given [`SimNet`] every time it is called (fresh
+    /// channels, same process list order) — exploration assumes the
+    /// runnable sets are a pure function of the schedule prefix.
+    pub fn explore<F>(&self, mut factory: F) -> ExploreReport
+    where
+        F: FnMut(&SimNet) -> Vec<Box<dyn CSProcess>>,
+    {
+        let mut prefixes: Vec<Vec<usize>> = vec![Vec::new()];
+        let mut schedules = 0usize;
+        while let Some(prefix) = prefixes.pop() {
+            if schedules >= self.max_schedules {
+                return ExploreReport {
+                    schedules,
+                    exhaustive: false,
+                    failure: None,
+                };
+            }
+            schedules += 1;
+            let net = SimNet::with_options(
+                SimPolicy::Forced(prefix.clone()),
+                self.pool,
+                self.max_steps,
+            );
+            let procs = factory(&net);
+            let result = net.run("explore", procs);
+            let decisions = net.decisions();
+            // Register the untried siblings discovered past the forced
+            // prefix (each is a fresh schedule subtree).
+            for d in (prefix.len()..decisions.len()).rev() {
+                let (runnable, chosen) = &decisions[d];
+                let chosen = *chosen;
+                for &alt in runnable.iter() {
+                    if alt == chosen {
+                        continue;
+                    }
+                    let mut p: Vec<usize> =
+                        decisions[..d].iter().map(|(_, c)| *c).collect();
+                    p.push(alt);
+                    prefixes.push(p);
+                }
+            }
+            if let Err(error) = result {
+                return ExploreReport {
+                    schedules,
+                    exhaustive: false,
+                    failure: Some(ExploreFailure {
+                        error,
+                        schedule: net.trace(),
+                        proc_names: net.proc_names(),
+                    }),
+                };
+            }
+        }
+        ExploreReport {
+            schedules,
+            exhaustive: true,
+            failure: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::process::ProcessFn;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// emit → relay → sink over rendezvous sim channels.
+    fn pipeline_procs(net: &SimNet, n: u64) -> (Vec<Box<dyn CSProcess>>, Arc<AtomicUsize>) {
+        let (tx, rx) = net.channel::<u64>("a");
+        let (tx2, rx2) = net.channel::<u64>("b");
+        let sum = Arc::new(AtomicUsize::new(0));
+        let emit = ProcessFn::boxed("emit", move || {
+            for i in 0..n {
+                tx.write(i)?;
+            }
+            tx.poison();
+            Ok(())
+        });
+        let relay = ProcessFn::boxed("relay", move || loop {
+            match rx.read() {
+                Ok(v) => tx2.write(v * 2)?,
+                Err(GppError::Poisoned) => {
+                    tx2.poison();
+                    return Ok(());
+                }
+                Err(e) => return Err(e),
+            }
+        });
+        let s2 = sum.clone();
+        let sink = ProcessFn::boxed("sink", move || loop {
+            match rx2.read() {
+                Ok(v) => {
+                    s2.fetch_add(v as usize, Ordering::SeqCst);
+                }
+                Err(GppError::Poisoned) => return Ok(()),
+                Err(e) => return Err(e),
+            }
+        });
+        (vec![emit, relay, sink], sum)
+    }
+
+    #[test]
+    fn round_robin_pipeline_completes() {
+        let net = SimNet::new(SimPolicy::RoundRobin);
+        let (procs, sum) = pipeline_procs(&net, 10);
+        net.run("t", procs).unwrap();
+        assert_eq!(sum.load(Ordering::SeqCst), (0..10).map(|i| i * 2).sum::<u64>() as usize);
+        assert!(!net.trace().is_empty());
+    }
+
+    #[test]
+    fn seeded_schedules_are_reproducible() {
+        let run = |seed: u64| -> Vec<usize> {
+            let net = SimNet::new(SimPolicy::Seeded(seed));
+            let (procs, _sum) = pipeline_procs(&net, 8);
+            net.run("t", procs).unwrap();
+            net.trace()
+        };
+        assert_eq!(run(7), run(7), "same seed, same schedule");
+        // Different seeds usually diverge (not guaranteed, but with a
+        // 3-process network over 8 values, overwhelmingly likely).
+        assert_ne!(run(7), run(8), "different seeds explore differently");
+    }
+
+    #[test]
+    fn replay_reproduces_a_seeded_run_exactly() {
+        let net = SimNet::new(SimPolicy::Seeded(42));
+        let (procs, _sum) = pipeline_procs(&net, 6);
+        net.run("t", procs).unwrap();
+        let printed = net.schedule_string();
+
+        let net2 = SimNet::new(SimPolicy::Replay(parse_schedule(&printed).unwrap()));
+        let (procs2, sum2) = pipeline_procs(&net2, 6);
+        net2.run("t", procs2).unwrap();
+        assert_eq!(net2.schedule_string(), printed, "byte-identical replay");
+        assert_eq!(sum2.load(Ordering::SeqCst), (0..6).map(|i| i * 2).sum::<u64>() as usize);
+    }
+
+    #[test]
+    fn deadlock_is_detected_not_hung() {
+        // Two processes each writing before reading: classic cycle.
+        let net = SimNet::new(SimPolicy::RoundRobin);
+        let (atx, arx) = net.channel::<u32>("a");
+        let (btx, brx) = net.channel::<u32>("b");
+        let p1 = ProcessFn::boxed("p1", move || {
+            atx.write(1)?;
+            brx.read()?;
+            Ok(())
+        });
+        let p2 = ProcessFn::boxed("p2", move || {
+            btx.write(2)?;
+            arx.read()?;
+            Ok(())
+        });
+        let err = net.run("t", vec![p1, p2]).unwrap_err();
+        match &err {
+            GppError::Sim(msg) => {
+                assert!(msg.contains("deadlock"), "{msg}");
+                assert!(msg.contains("schedule="), "{msg}");
+            }
+            other => panic!("expected Sim deadlock, got {other}"),
+        }
+    }
+
+    #[test]
+    fn deadlock_replay_is_byte_identical() {
+        let build = |net: &SimNet| -> Vec<Box<dyn CSProcess>> {
+            let (atx, arx) = net.channel::<u32>("a");
+            let (btx, brx) = net.channel::<u32>("b");
+            vec![
+                ProcessFn::boxed("p1", move || {
+                    atx.write(1)?;
+                    brx.read()?;
+                    Ok(())
+                }),
+                ProcessFn::boxed("p2", move || {
+                    btx.write(2)?;
+                    arx.read()?;
+                    Ok(())
+                }),
+            ]
+        };
+        let net = SimNet::new(SimPolicy::Seeded(1));
+        let err = net.run("t", build(&net)).unwrap_err();
+        let printed = net.schedule_string();
+
+        let net2 = SimNet::new(SimPolicy::Replay(parse_schedule(&printed).unwrap()));
+        let err2 = net2.run("t", build(&net2)).unwrap_err();
+        assert_eq!(err.to_string(), err2.to_string());
+        assert_eq!(net2.schedule_string(), printed);
+    }
+
+    #[test]
+    fn explorer_covers_small_tree_and_finds_no_bug() {
+        let explorer = Explorer::new(2_000, 5_000);
+        let report = explorer.explore(|net| {
+            let (tx, rx) = net.channel::<u32>("c");
+            vec![
+                ProcessFn::boxed("w", move || {
+                    tx.write(1)?;
+                    tx.write(2)?;
+                    Ok(())
+                }),
+                ProcessFn::boxed("r", move || {
+                    assert_eq!(rx.read()?, 1);
+                    assert_eq!(rx.read()?, 2);
+                    Ok(())
+                }),
+            ]
+        });
+        assert!(report.failure.is_none(), "{:?}", report.failure.map(|f| f.to_string()));
+        assert!(report.exhaustive);
+        assert!(report.schedules > 1, "must branch: {}", report.schedules);
+    }
+
+    #[test]
+    fn explorer_finds_order_dependent_bug() {
+        // Two writers race into one rendezvous channel; the reader
+        // asserts a fixed order — some interleaving must break it.
+        let explorer = Explorer::new(2_000, 5_000);
+        let report = explorer.explore(|net| {
+            let (tx, rx) = net.channel::<u32>("c");
+            let tx2 = tx.clone();
+            vec![
+                ProcessFn::boxed("w1", move || tx.write(1)),
+                ProcessFn::boxed("w2", move || tx2.write(2)),
+                ProcessFn::boxed("r", move || {
+                    let a = rx.read()?;
+                    let b = rx.read()?;
+                    if (a, b) != (1, 2) {
+                        return Err(GppError::Other(format!("order ({a},{b})")));
+                    }
+                    Ok(())
+                }),
+            ]
+        });
+        let f = report.failure.expect("explorer must find the racy order");
+        assert!(f.error.to_string().contains("order"), "{f}");
+        assert!(!f.schedule.is_empty());
+    }
+
+    #[test]
+    fn pooled_sim_detects_rendezvous_clique_deadlock() {
+        // A 1-slot pool cannot run writer+reader over rendezvous: the
+        // writer blocks holding the only slot. Detected, not hung.
+        let net = SimNet::pooled(SimPolicy::RoundRobin, 1);
+        let (tx, rx) = net.channel::<u32>("c");
+        let w = ProcessFn::boxed("w", move || tx.write(1));
+        let r = ProcessFn::boxed("r", move || rx.read().map(|_| ()));
+        let err = net.run("t", vec![w, r]).unwrap_err();
+        match err {
+            GppError::Sim(msg) => {
+                assert!(msg.contains("deadlock"), "{msg}");
+                assert!(msg.contains("pool of 1"), "{msg}");
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn pooled_sim_wide_enough_completes() {
+        let net = SimNet::pooled(SimPolicy::RoundRobin, 3);
+        let (procs, sum) = pipeline_procs(&net, 5);
+        net.run("t", procs).unwrap();
+        assert_eq!(sum.load(Ordering::SeqCst), (0..5).map(|i| i * 2).sum::<u64>() as usize);
+    }
+
+    #[test]
+    fn virtual_clock_advances_without_wall_time() {
+        let net = SimNet::new(SimPolicy::RoundRobin);
+        let (tx, rx) = net.channel::<u32>("c");
+        let t0 = std::time::Instant::now();
+        let sleeper = ProcessFn::boxed("sleeper", move || {
+            sim_sleep(1_000_000)?; // a "long" virtual delay
+            tx.write(9)?;
+            Ok(())
+        });
+        let reader = ProcessFn::boxed("reader", move || {
+            assert_eq!(rx.read()?, 9);
+            Ok(())
+        });
+        net.run("t", vec![sleeper, reader]).unwrap();
+        assert!(net.now() >= 1_000_000);
+        assert!(t0.elapsed().as_secs() < 30, "virtual time must not be wall time");
+    }
+
+    #[test]
+    fn delayed_poison_fault_process_is_deterministic() {
+        // Fault injection via a sim process: poison the channel at a
+        // virtual instant between the 2nd and 3rd write.
+        let run = || -> (Result<()>, Vec<usize>) {
+            let net = SimNet::new(SimPolicy::Seeded(11));
+            let (tx, rx) = net.channel::<u32>("c");
+            let txp = tx.clone();
+            let writer = ProcessFn::boxed("writer", move || {
+                for i in 0..5u32 {
+                    sim_sleep(10)?;
+                    tx.write(i)?;
+                }
+                Ok(())
+            });
+            let reader = ProcessFn::boxed("reader", move || loop {
+                if rx.read().is_err() {
+                    return Ok(());
+                }
+            });
+            let saboteur = ProcessFn::boxed("saboteur", move || {
+                sim_sleep(25)?;
+                txp.poison();
+                Ok(())
+            });
+            let r = net.run("t", vec![writer, reader, saboteur]);
+            (r, net.trace())
+        };
+        let (r1, t1) = run();
+        let (r2, t2) = run();
+        assert_eq!(t1, t2, "same seed, same faulted schedule");
+        assert_eq!(r1.is_err(), r2.is_err());
+        // The writer was poisoned mid-stream.
+        assert_eq!(r1.unwrap_err(), GppError::Poisoned);
+    }
+
+    #[test]
+    fn alt_works_under_sim() {
+        use crate::csp::alt::Alt;
+        let net = SimNet::new(SimPolicy::RoundRobin);
+        let (tx0, rx0) = net.channel::<u32>("c0");
+        let (tx1, rx1) = net.channel::<u32>("c1");
+        let w0 = ProcessFn::boxed("w0", move || tx0.write(10));
+        let w1 = ProcessFn::boxed("w1", move || tx1.write(11));
+        let sel = ProcessFn::boxed("sel", move || {
+            let mut alt = Alt::new(vec![rx0, rx1]);
+            let mut got = Vec::new();
+            for _ in 0..2 {
+                let (_i, v) = alt.select_read()?;
+                got.push(v);
+            }
+            got.sort_unstable();
+            assert_eq!(got, vec![10, 11]);
+            Ok(())
+        });
+        net.run("t", vec![w0, w1, sel]).unwrap();
+    }
+
+    #[test]
+    fn schedule_string_roundtrip() {
+        let t = vec![0usize, 2, 1, 1, 0];
+        assert_eq!(parse_schedule(&schedule_to_string(&t)).unwrap(), t);
+        assert!(parse_schedule("1,x,2").is_err());
+        assert_eq!(parse_schedule("").unwrap(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn buffered_sim_channel_decouples_writer() {
+        let net = SimNet::new(SimPolicy::RoundRobin);
+        let (tx, rx) = net.buffered_channel::<u32>("b", 8);
+        let w = ProcessFn::boxed("w", move || {
+            for i in 0..8 {
+                tx.write(i)?; // completes without the reader running
+            }
+            Ok(())
+        });
+        let r = ProcessFn::boxed("r", move || {
+            let mut got = Vec::new();
+            while got.len() < 8 {
+                got.extend(rx.read_batch(4)?);
+            }
+            assert_eq!(got, (0..8).collect::<Vec<_>>());
+            Ok(())
+        });
+        net.run("t", vec![w, r]).unwrap();
+    }
+}

@@ -72,6 +72,105 @@ impl std::fmt::Display for TransportKind {
     }
 }
 
+// ---------------------------------------------------------------- faults
+//
+// Deterministic fault injection. A [`FaultPlan`] is a list of scripted
+// rules — "on the Nth write to a channel whose name contains S, do X" —
+// attached to a transport via `RuntimeConfig::with_faults` (buffered and
+// net edges) or `SimNet::faulted_channel` (sim edges). Because rules
+// trigger on *operation counts*, not wall time, the same plan produces
+// the same failure every run; under the sim scheduler the whole
+// failure interleaving is reproducible from a schedule trace. This is
+// what turns "kill a worker and hope the timing works out" socket tests
+// into deterministic unit tests.
+
+/// Which operation a fault rule intercepts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOp {
+    Write,
+    Read,
+}
+
+/// What happens when a rule fires.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Silently discard the value (message loss). On a net writing end
+    /// this models a DATA frame lost before its ACK: the operation
+    /// fails the way a configured socket timeout would, and the end is
+    /// poisoned.
+    Drop,
+    /// Poison the channel at this operation (abrupt teardown).
+    Poison,
+    /// Fail the operation with this message (injected I/O error).
+    Fail(String),
+}
+
+/// One scripted fault.
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    /// Substring match on the channel name ("" matches every channel).
+    pub chan: String,
+    pub op: FaultOp,
+    /// 1-based: fire on the nth matching operation.
+    pub nth: u64,
+    pub action: FaultAction,
+}
+
+impl FaultRule {
+    pub fn new(chan: &str, op: FaultOp, nth: u64, action: FaultAction) -> Self {
+        Self {
+            chan: chan.to_string(),
+            op,
+            nth: nth.max(1),
+            action,
+        }
+    }
+}
+
+/// A shared, counter-driven fault script (see module comment above).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    rules: Mutex<Vec<(FaultRule, u64, bool)>>,
+}
+
+impl FaultPlan {
+    pub fn new(rules: Vec<FaultRule>) -> Arc<Self> {
+        Arc::new(Self {
+            rules: Mutex::new(rules.into_iter().map(|r| (r, 0, false)).collect()),
+        })
+    }
+
+    /// Count this operation against every matching rule; return the
+    /// action of the first unfired rule whose `nth` has been reached.
+    /// At most one rule fires per operation; a rule whose turn arrives
+    /// while another fires stays armed (`count >= nth`) and fires on
+    /// the next matching operation instead of being lost.
+    pub fn apply(&self, op: FaultOp, chan: &str) -> Option<FaultAction> {
+        let mut g = self.rules.lock().unwrap();
+        let mut hit: Option<FaultAction> = None;
+        for (r, count, fired) in g.iter_mut() {
+            if r.op == op && chan.contains(&r.chan) {
+                *count += 1;
+                if !*fired && *count >= r.nth && hit.is_none() {
+                    *fired = true;
+                    hit = Some(r.action.clone());
+                }
+            }
+        }
+        hit
+    }
+
+    /// How many rules have fired so far (test assertions).
+    pub fn fired(&self) -> usize {
+        self.rules
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, _, fired)| *fired)
+            .count()
+    }
+}
+
 /// Alt-registration store shared by every transport: registering
 /// purges tokens whose Alt has moved on (selected another channel and
 /// dropped its signal) so idle channels don't grow; firing drains all.
@@ -218,10 +317,20 @@ pub struct BufferedCore<T> {
     read_cond: Condvar,
     /// Writers wait here for space (and for their ticket to come up).
     write_cond: Condvar,
+    /// Scripted deterministic faults (None in production).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl<T> BufferedCore<T> {
     pub fn new(name: String, capacity: usize) -> Arc<Self> {
+        Self::new_faulted(name, capacity, None)
+    }
+
+    pub fn new_faulted(
+        name: String,
+        capacity: usize,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Arc<Self> {
         Arc::new(Self {
             id: next_chan_id(),
             name,
@@ -236,13 +345,32 @@ impl<T> BufferedCore<T> {
             }),
             read_cond: Condvar::new(),
             write_cond: Condvar::new(),
+            faults,
         })
     }
 
+    /// Apply a scripted fault, if one fires for this op. Must be called
+    /// *before* taking the inner lock (`Poison` re-enters).
+    fn fault(&self, op: FaultOp) -> Option<FaultAction>
+    where
+        T: Send,
+    {
+        let action = self.faults.as_ref()?.apply(op, &self.name)?;
+        if action == FaultAction::Poison {
+            Transport::<T>::poison(self);
+        }
+        Some(action)
+    }
 }
 
 impl<T: Send> Transport<T> for BufferedCore<T> {
     fn write(&self, value: T) -> Result<()> {
+        match self.fault(FaultOp::Write) {
+            Some(FaultAction::Drop) => return Ok(()),
+            Some(FaultAction::Poison) => return Err(GppError::Poisoned),
+            Some(FaultAction::Fail(msg)) => return Err(GppError::Io(msg)),
+            None => {}
+        }
         let mut g = self.inner.lock().unwrap();
         if g.poisoned {
             return Err(GppError::Poisoned);
@@ -308,6 +436,11 @@ impl<T: Send> Transport<T> for BufferedCore<T> {
     }
 
     fn read(&self) -> Result<T> {
+        match self.fault(FaultOp::Read) {
+            Some(FaultAction::Poison) => return Err(GppError::Poisoned),
+            Some(FaultAction::Fail(msg)) => return Err(GppError::Io(msg)),
+            _ => {}
+        }
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(v) = g.queue.pop_front() {
@@ -459,8 +592,11 @@ mod tests {
         tx.write(1).unwrap();
         let t2 = tx.clone();
         let h = thread::spawn(move || t2.write(2));
-        thread::sleep(Duration::from_millis(30));
-        // Writer of 2 is blocked on the full buffer.
+        // Writer of 2 blocks on the full buffer (spin-wait: deterministic
+        // on any scheduler, unlike a fixed sleep).
+        while tx.stats().blocked_writers != 1 {
+            thread::yield_now();
+        }
         assert_eq!(tx.stats().blocked_writers, 1);
         assert_eq!(rx.read().unwrap(), 0);
         h.join().unwrap().unwrap();
@@ -574,6 +710,57 @@ mod tests {
         let (t2, _r2) = crate::csp::channel::channel::<u32>();
         assert_eq!(t2.transport_kind(), TransportKind::Rendezvous);
         assert_eq!(t2.capacity(), None);
+    }
+
+    #[test]
+    fn fault_plan_drops_nth_write_deterministically() {
+        let plan = FaultPlan::new(vec![FaultRule::new(
+            "b",
+            FaultOp::Write,
+            2,
+            FaultAction::Drop,
+        )]);
+        let core = BufferedCore::<u32>::new_faulted("b".into(), 8, Some(plan.clone()));
+        for i in 0..4 {
+            Transport::write(&*core, i).unwrap();
+        }
+        // Write #2 (value 1) was silently lost; the rest arrived in order.
+        assert_eq!(core.read_batch(8).unwrap(), vec![0, 2, 3]);
+        assert_eq!(plan.fired(), 1);
+    }
+
+    #[test]
+    fn fault_plan_poisons_on_schedule() {
+        let plan = FaultPlan::new(vec![FaultRule::new(
+            "",
+            FaultOp::Write,
+            3,
+            FaultAction::Poison,
+        )]);
+        let core = BufferedCore::<u32>::new_faulted("x".into(), 8, Some(plan));
+        Transport::write(&*core, 1).unwrap();
+        Transport::write(&*core, 2).unwrap();
+        assert_eq!(Transport::write(&*core, 3), Err(GppError::Poisoned));
+        // Queued values still drain first — poison contract upheld.
+        assert_eq!(core.read().unwrap(), 1);
+        assert_eq!(core.read().unwrap(), 2);
+        assert_eq!(core.read(), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn fault_plan_injected_error_names_itself() {
+        let plan = FaultPlan::new(vec![FaultRule::new(
+            "edge",
+            FaultOp::Read,
+            1,
+            FaultAction::Fail("injected wire cut".into()),
+        )]);
+        let core = BufferedCore::<u32>::new_faulted("edge".into(), 4, Some(plan));
+        Transport::write(&*core, 7).unwrap();
+        let err = core.read().unwrap_err();
+        assert!(err.to_string().contains("injected wire cut"), "{err}");
+        // Only the scripted occurrence fires; later reads are clean.
+        assert_eq!(core.read().unwrap(), 7);
     }
 
     #[test]

@@ -100,6 +100,28 @@ impl MultiCoreEngine {
         self
     }
 
+    /// Compile **this** engine's chain (`Emit → MultiCoreEngine(self.
+    /// nodes) → Collect`) into a CSP model: the node phase is a
+    /// parallel of per-node `calc` events whose distributed termination
+    /// models the scoped-thread join, repeated `model_iterations` times
+    /// per object (see [`crate::verify::extract`]). The node count is
+    /// read off the constructed engine; the iteration count is an
+    /// explicit *finite model bound* — `self.iterations` is a
+    /// convergence guard (often 10⁴+), which would be state-space
+    /// blowup, and the phase structure is identical for every bound ≥ 1.
+    pub fn extract_model(
+        &self,
+        model_iterations: usize,
+        objects: i64,
+    ) -> crate::verify::ExtractedModel {
+        crate::verify::extract::extract_engine(
+            crate::verify::extract::new_interner(),
+            self.nodes,
+            model_iterations.min(self.iterations.max(1)),
+            objects,
+        )
+    }
+
     /// One full solve of the object's engine state.
     fn solve(&self, state: &mut super::state::EngineState) -> Result<()> {
         if state.stride == 0 {

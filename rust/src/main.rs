@@ -6,7 +6,7 @@
 //! gpp mandelbrot [--workers N] …  Mandelbrot farm (paper §6.6)
 //! gpp jacobi | nbody | image | goldbach | concordance
 //! gpp cluster-host | cluster-worker  cluster roles (paper §7)
-//! gpp verify [base|gop-pog|all]   run the CSPm/FDR assertions (§4.6, §9)
+//! gpp verify [base|gop-pog|extracted|all]   run the CSPm/FDR assertions (§4.6, §9)
 //! gpp calibrate                   print this host's workload costs
 //! gpp logdemo                     logged concordance + phase report (§8)
 //! ```
@@ -131,7 +131,7 @@ COMMANDS
   concordance        GoP concordance          [--groups G --words W --N n]
   cluster-host       serve Mandelbrot rows    [--join A --nodes N --width W --height H --max-iter M --timeout-ms T]
   cluster-worker     join a host, run its job [--join A --timeout-ms T]
-  verify [which]     run FDR-style assertions: base | gop-pog | all (default all)
+  verify [which]     run FDR-style assertions: base | gop-pog | extracted | all (default all)
   calibrate          measure per-item workload costs on this host
   logdemo            logged concordance run + bottleneck report (paper Sec 8)
 
@@ -531,6 +531,47 @@ fn cmd_verify(args: &Args) -> i32 {
         println!("== CSPm Definition 7: GoP ≡ PoG ==");
         let model = GopPogModel::new();
         match model.check_equivalence() {
+            Ok(results) => {
+                for (name, r) in results {
+                    let ok = r.holds();
+                    all_ok &= ok;
+                    println!("  {} {}", if ok { "✓" } else { "✗" }, name);
+                }
+            }
+            Err(e) => return fail(e),
+        }
+    }
+    if which == "extracted" || which == "all" {
+        use gpp::verify::extract::{
+            extract_engine, extract_farm, extract_gop, extract_pog, new_interner,
+            traces_equivalent,
+        };
+        println!("== extracted models (checked on the constructed networks) ==");
+        let shared = new_interner();
+        let gop = extract_gop(shared.clone(), 2, 2, 2);
+        let pog = extract_pog(shared.clone(), 2, 2, 2);
+        let models = [
+            extract_farm(new_interner(), 4, 2),
+            extract_gop(new_interner(), 2, 3, 2),
+            extract_pog(new_interner(), 2, 3, 2),
+            extract_engine(new_interner(), 4, 2, 2),
+        ];
+        for m in &models {
+            match m.check() {
+                Ok(results) => {
+                    for (name, r) in results {
+                        let ok = r.holds();
+                        all_ok &= ok;
+                        println!("  {} {}", if ok { "✓" } else { "✗" }, name);
+                        if let gpp::verify::check::CheckResult::Fails { reason, trace } = r {
+                            println!("     {reason}; trace: {trace:?}");
+                        }
+                    }
+                }
+                Err(e) => return fail(e),
+            }
+        }
+        match traces_equivalent(&gop, &pog) {
             Ok(results) => {
                 for (name, r) in results {
                     let ok = r.holds();

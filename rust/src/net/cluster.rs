@@ -575,7 +575,12 @@ mod tests {
         let r1 = w1.join().unwrap().unwrap();
         let r2 = w2.join().unwrap().unwrap();
         assert_eq!(r1 + r2, 48, "all rows computed exactly once");
-        assert!(r1 > 0 && r2 > 0, "both workers participated");
+        if cfg!(feature = "timing-tests") {
+            // Work-sharing fairness is a scheduling property: on a
+            // loaded box one worker can legally drain the whole queue
+            // before the other joins.
+            assert!(r1 > 0 && r2 > 0, "both workers participated");
+        }
         assert_eq!(collect.checksum(), seq.checksum());
     }
 
@@ -599,6 +604,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "timing-tests"),
+        ignore = "sleep-ordered join race; the deterministic variant below covers the behaviour"
+    )]
     fn dead_worker_item_is_requeued_and_run_completes() {
         let addr = free_addr();
         let cfg = default_config(48, 32, 30, 1);
@@ -623,7 +632,65 @@ mod tests {
         assert_eq!(collect.checksum(), seq.checksum());
     }
 
+    /// Connect with bounded retries (liveness wait for the listener —
+    /// the test's *outcome* does not depend on timing).
+    fn connect_retry(addr: &str) -> TcpStream {
+        for _ in 0..400 {
+            if let Ok(s) = TcpStream::connect(addr) {
+                return s;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        panic!("host never listened on {addr}");
+    }
+
     #[test]
+    fn worker_death_mid_item_requeues_without_timing_dependence() {
+        // Deterministic version of the kill-a-worker test: the phases
+        // are sequenced by the protocol itself (this thread completes
+        // the scripted death before the survivor ever joins), so the
+        // requeue path is exercised on operation counts, not sleeps.
+        let addr = free_addr();
+        let cfg = to_bytes(&default_config(32, 8, 10, 1));
+        let items: Vec<Vec<u8>> = (0..6i64).map(|r| to_bytes(&r)).collect();
+        let addr2 = addr.clone();
+        let host = std::thread::spawn(move || {
+            serve_items(
+                &addr2,
+                2,
+                jobs::MANDELBROT_ROW,
+                &cfg,
+                items,
+                &NetOptions::default(),
+            )
+        });
+        // Phase 1 (on this thread, to completion): speak the worker
+        // protocol, take exactly one item, die holding it.
+        {
+            let mut s = connect_retry(&addr);
+            write_frame(&mut s, &[W_HELLO]).unwrap();
+            let _cfg = read_frame(&mut s).unwrap();
+            write_frame(&mut s, &[W_REQ]).unwrap();
+            let frame = read_frame(&mut s).unwrap();
+            assert_eq!(frame.first(), Some(&H_WORK));
+            drop(s);
+        }
+        // Phase 2: the survivor joins strictly afterwards and must
+        // complete every item, including the requeued one.
+        let done = run_worker(&addr).unwrap();
+        let report = host.join().unwrap().unwrap();
+        assert_eq!(done, 6, "survivor drains the full queue");
+        assert_eq!(report.results.len(), 6);
+        assert_eq!(report.workers_lost, 1);
+        assert_eq!(report.items_requeued, 1);
+        assert_eq!(report.workers_joined, 2);
+    }
+
+    #[test]
+    #[cfg_attr(
+        not(feature = "timing-tests"),
+        ignore = "sleep-ordered join race; worker_death_mid_item_requeues_without_timing_dependence covers it"
+    )]
     fn serve_items_reports_losses() {
         let addr = free_addr();
         let cfg = to_bytes(&default_config(32, 8, 10, 1));

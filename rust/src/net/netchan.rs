@@ -267,6 +267,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "timing-tests"),
+        ignore = "wall-clock-dependent; run with --features timing-tests"
+    )]
     fn write_blocks_until_ack() {
         // With a reader that delays, the writer's second write cannot
         // complete before the first read (synchronised semantics).

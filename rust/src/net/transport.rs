@@ -37,7 +37,10 @@ use std::sync::{Arc, Mutex};
 use crate::csp::alt::AltSignal;
 use crate::csp::channel::{ends_of, In, Out};
 use crate::csp::error::{GppError, Result};
-use crate::csp::transport::{next_chan_id, BufferedCore, Transport, TransportKind, TransportStats};
+use crate::csp::transport::{
+    next_chan_id, BufferedCore, FaultAction, FaultOp, FaultPlan, Transport, TransportKind,
+    TransportStats,
+};
 use crate::util::codec::{from_bytes, to_bytes, Wire};
 
 use super::frame::{read_frame, set_io_timeouts, write_frame};
@@ -50,16 +53,22 @@ pub struct NetOutCore<T> {
     name: String,
     stream: Mutex<TcpStream>,
     poisoned: AtomicBool,
+    /// Scripted deterministic faults (None in production). `Drop` on a
+    /// write models a DATA frame lost before its ACK: the write fails
+    /// the way a socket timeout would and the end poisons — count-
+    /// driven, so the failure path is exercised without real timeouts.
+    faults: Option<Arc<FaultPlan>>,
     _marker: PhantomData<fn(T) -> T>,
 }
 
 impl<T: Wire> NetOutCore<T> {
-    fn new(stream: TcpStream, name: &str) -> Arc<Self> {
+    fn new(stream: TcpStream, name: &str, faults: Option<Arc<FaultPlan>>) -> Arc<Self> {
         Arc::new(Self {
             id: next_chan_id(),
             name: name.to_string(),
             stream: Mutex::new(stream),
             poisoned: AtomicBool::new(false),
+            faults,
             _marker: PhantomData,
         })
     }
@@ -76,6 +85,28 @@ impl<T: Wire + Send> Transport<T> for NetOutCore<T> {
     fn write(&self, value: T) -> Result<()> {
         if self.poisoned.load(Ordering::SeqCst) {
             return Err(GppError::Poisoned);
+        }
+        if let Some(fp) = &self.faults {
+            match fp.apply(FaultOp::Write, &self.name) {
+                Some(FaultAction::Drop) => {
+                    // DATA frame lost before its ACK: deterministic
+                    // stand-in for the timeout this would become.
+                    self.poisoned.store(true, Ordering::SeqCst);
+                    return Err(GppError::Net(format!(
+                        "net channel '{}': injected fault: DATA frame lost before ACK",
+                        self.name
+                    )));
+                }
+                Some(FaultAction::Poison) => {
+                    Transport::<T>::poison(self);
+                    return Err(GppError::Poisoned);
+                }
+                Some(FaultAction::Fail(msg)) => {
+                    self.poisoned.store(true, Ordering::SeqCst);
+                    return Err(GppError::Net(msg));
+                }
+                None => {}
+            }
         }
         let mut s = self.stream.lock().unwrap();
         let mut payload = vec![TAG_DATA];
@@ -156,10 +187,19 @@ pub struct NetInCore<T: Send> {
     /// cloned read handle, so reads never hold this lock.
     wr: Mutex<TcpStream>,
     poison_sent: AtomicBool,
+    /// Scripted deterministic faults applied by the pump to inbound
+    /// DATA frames (`Drop` = ack-but-discard, i.e. silent message loss;
+    /// `Poison`/`Fail` = delayed poison after the nth frame).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl<T: Wire + Send + 'static> NetInCore<T> {
-    fn start(stream: TcpStream, name: &str, capacity: usize) -> Result<Arc<Self>> {
+    fn start(
+        stream: TcpStream,
+        name: &str,
+        capacity: usize,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Result<Arc<Self>> {
         let rd = stream
             .try_clone()
             .map_err(|e| GppError::Net(format!("clone net stream: {e}")))?;
@@ -169,6 +209,7 @@ impl<T: Wire + Send + 'static> NetInCore<T> {
             inner: BufferedCore::new(format!("{name}.net"), capacity.max(1)),
             wr: Mutex::new(stream),
             poison_sent: AtomicBool::new(false),
+            faults,
         });
         let pump = core.clone();
         std::thread::Builder::new()
@@ -202,6 +243,27 @@ impl<T: Wire + Send + 'static> NetInCore<T> {
             };
             match frame.split_first() {
                 Some((&TAG_DATA, rest)) => {
+                    if let Some(fp) = &self.faults {
+                        match fp.apply(FaultOp::Read, &self.name) {
+                            Some(FaultAction::Drop) => {
+                                // Silent message loss: ack so the writer
+                                // proceeds, discard the payload.
+                                if self.send_ctl(TAG_ACK).is_err() {
+                                    self.inner.poison();
+                                    return;
+                                }
+                                continue;
+                            }
+                            Some(FaultAction::Poison) | Some(FaultAction::Fail(_)) => {
+                                // Delayed poison: the nth frame tears the
+                                // channel down instead of delivering.
+                                self.inner.poison();
+                                self.send_poison_once();
+                                return;
+                            }
+                            None => {}
+                        }
+                    }
                     let v = match from_bytes::<T>(rest) {
                         Ok(v) => v,
                         Err(_) => {
@@ -305,8 +367,18 @@ pub fn net_channel_out<T: Wire + Send + 'static>(
     name: &str,
     opts: &NetOptions,
 ) -> Result<Out<T>> {
+    net_channel_out_faulted(stream, name, opts, None)
+}
+
+/// [`net_channel_out`] with a scripted fault plan (tests).
+pub fn net_channel_out_faulted<T: Wire + Send + 'static>(
+    stream: TcpStream,
+    name: &str,
+    opts: &NetOptions,
+    faults: Option<Arc<FaultPlan>>,
+) -> Result<Out<T>> {
     set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
-    let core: Arc<dyn Transport<T>> = NetOutCore::new(stream, name);
+    let core: Arc<dyn Transport<T>> = NetOutCore::new(stream, name, faults);
     let (out, _unused_in) = ends_of(core);
     Ok(out)
 }
@@ -318,8 +390,19 @@ pub fn net_channel_in<T: Wire + Send + 'static>(
     capacity: usize,
     opts: &NetOptions,
 ) -> Result<In<T>> {
+    net_channel_in_faulted(stream, name, capacity, opts, None)
+}
+
+/// [`net_channel_in`] with a scripted fault plan (tests).
+pub fn net_channel_in_faulted<T: Wire + Send + 'static>(
+    stream: TcpStream,
+    name: &str,
+    capacity: usize,
+    opts: &NetOptions,
+    faults: Option<Arc<FaultPlan>>,
+) -> Result<In<T>> {
     set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
-    let core: Arc<dyn Transport<T>> = NetInCore::start(stream, name, capacity)?;
+    let core: Arc<dyn Transport<T>> = NetInCore::start(stream, name, capacity, faults)?;
     let (_unused_out, inp) = ends_of(core);
     Ok(inp)
 }
@@ -356,6 +439,17 @@ pub fn net_loopback_pair<T: Wire + Send + 'static>(
     capacity: usize,
     opts: &NetOptions,
 ) -> Result<(Out<T>, In<T>)> {
+    net_loopback_pair_faulted(name, capacity, opts, None)
+}
+
+/// [`net_loopback_pair`] with a scripted fault plan: the writing end
+/// applies `Write` rules, the reading pump `Read` rules.
+pub fn net_loopback_pair_faulted<T: Wire + Send + 'static>(
+    name: &str,
+    capacity: usize,
+    opts: &NetOptions,
+    faults: Option<Arc<FaultPlan>>,
+) -> Result<(Out<T>, In<T>)> {
     let listener = TcpListener::bind("127.0.0.1:0")
         .map_err(|e| GppError::Net(format!("bind loopback: {e}")))?;
     let addr = listener
@@ -368,8 +462,8 @@ pub fn net_loopback_pair<T: Wire + Send + 'static>(
     let (server, _) = listener
         .accept()
         .map_err(|e| GppError::Net(format!("accept loopback: {e}")))?;
-    let out = net_channel_out(client, name, opts)?;
-    let inp = net_channel_in(server, name, capacity, opts)?;
+    let out = net_channel_out_faulted(client, name, opts, faults.clone())?;
+    let inp = net_channel_in_faulted(server, name, capacity, opts, faults)?;
     Ok((out, inp))
 }
 
@@ -399,6 +493,90 @@ mod tests {
     }
 
     #[test]
+    fn injected_ack_loss_fails_writer_deterministically() {
+        use crate::csp::transport::{FaultOp, FaultPlan, FaultRule};
+        // The 3rd DATA frame is "lost before its ACK": the writer fails
+        // with a Net error naming the fault and the end poisons — the
+        // code path a real lost ack + timeout would take, but exercised
+        // on an operation count instead of wall time.
+        let plan = FaultPlan::new(vec![FaultRule::new(
+            "t",
+            FaultOp::Write,
+            3,
+            FaultAction::Drop,
+        )]);
+        let (tx, rx) =
+            net_loopback_pair_faulted::<u64>("t", 4, &NetOptions::default(), Some(plan.clone()))
+                .unwrap();
+        tx.write(1).unwrap();
+        tx.write(2).unwrap();
+        let err = tx.write(3).unwrap_err();
+        assert!(err.to_string().contains("DATA frame lost"), "{err}");
+        assert_eq!(tx.write(4), Err(GppError::Poisoned));
+        // Values delivered before the fault still drain.
+        assert_eq!(rx.read().unwrap(), 1);
+        assert_eq!(rx.read().unwrap(), 2);
+        assert_eq!(plan.fired(), 1);
+    }
+
+    #[test]
+    fn injected_delayed_poison_on_reader_pump() {
+        use crate::csp::transport::{FaultAction as FA, FaultOp, FaultPlan, FaultRule};
+        // The pump delivers 2 frames, then the 3rd poisons the channel:
+        // a deterministic "peer died mid-stream" for the reading side.
+        let plan = FaultPlan::new(vec![FaultRule::new(
+            "t",
+            FaultOp::Read,
+            3,
+            FA::Poison,
+        )]);
+        let (tx, rx) =
+            net_loopback_pair_faulted::<u64>("t", 8, &NetOptions::default(), Some(plan)).unwrap();
+        tx.write(10).unwrap();
+        tx.write(11).unwrap();
+        // The 3rd write's frame is consumed by the pump as the poison
+        // trigger; the writer may see the poison on this write or the
+        // next depending on ack pipelining — either way it surfaces.
+        let mut write_failed = false;
+        for i in 0..3 {
+            if tx.write(12 + i).is_err() {
+                write_failed = true;
+                break;
+            }
+        }
+        assert!(write_failed, "writer must observe the delayed poison");
+        assert_eq!(rx.read().unwrap(), 10);
+        assert_eq!(rx.read().unwrap(), 11);
+        assert_eq!(rx.read(), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn injected_silent_frame_loss_is_acked_but_dropped() {
+        use crate::csp::transport::{FaultAction as FA, FaultOp, FaultPlan, FaultRule};
+        let plan = FaultPlan::new(vec![FaultRule::new(
+            "t",
+            FaultOp::Read,
+            2,
+            FA::Drop,
+        )]);
+        let (tx, rx) =
+            net_loopback_pair_faulted::<u64>("t", 8, &NetOptions::default(), Some(plan)).unwrap();
+        for i in 0..4u64 {
+            tx.write(i).unwrap(); // all writes ack — the loss is silent
+        }
+        drop(tx);
+        let mut got = Vec::new();
+        while let Ok(v) = rx.read() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 2, 3], "exactly frame #2 vanished");
+    }
+
+    #[test]
+    #[cfg_attr(
+        not(feature = "timing-tests"),
+        ignore = "wall-clock-dependent; run with --features timing-tests"
+    )]
     fn ack_carries_backpressure() {
         // capacity 1: the writer cannot run more than ~2 values ahead of
         // the reader (one queued + one in the ack pipeline).

@@ -133,4 +133,16 @@ impl DataParallelCollect {
     pub fn process_count(&self) -> usize {
         self.workers + 4
     }
+
+    /// Compile **this** farm — same worker count, same connector
+    /// protocol — into a CSP model over a stream of `objects` abstract
+    /// values, ready for the [`crate::verify::Checker`] (deadlock +
+    /// divergence freedom). See [`crate::verify::extract`].
+    pub fn extract_model(&self, objects: i64) -> crate::verify::ExtractedModel {
+        crate::verify::extract::extract_farm(
+            crate::verify::extract::new_interner(),
+            self.workers,
+            objects,
+        )
+    }
 }

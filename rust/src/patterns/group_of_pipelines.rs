@@ -95,4 +95,22 @@ impl GroupOfPipelineCollects {
         // emit + fan + groups*(stages + collect)
         2 + self.groups * (self.stage_ops.len() + 1)
     }
+
+    /// Compile **this** GoP — same pipe count and stage depth — into a
+    /// CSP model over `objects` abstract values (see
+    /// [`crate::verify::extract`]). Share `interner` with the matching
+    /// PoG extraction to check Definition 7 traces equivalence on the
+    /// constructed architectures.
+    pub fn extract_model(
+        &self,
+        interner: std::rc::Rc<crate::verify::Interner>,
+        objects: i64,
+    ) -> crate::verify::ExtractedModel {
+        crate::verify::extract::extract_gop(
+            interner,
+            self.groups,
+            self.stage_ops.len(),
+            objects,
+        )
+    }
 }

@@ -114,4 +114,20 @@ impl TaskParallelOfGroupCollects {
         // emit + fan + stages*workers + workers collects
         2 + self.stage_ops.len() * self.workers + self.workers
     }
+
+    /// Compile **this** PoG — same group width and stage depth, every
+    /// stage boundary a shared any-end — into a CSP model over
+    /// `objects` abstract values (see [`crate::verify::extract`]).
+    pub fn extract_model(
+        &self,
+        interner: std::rc::Rc<crate::verify::Interner>,
+        objects: i64,
+    ) -> crate::verify::ExtractedModel {
+        crate::verify::extract::extract_pog(
+            interner,
+            self.workers,
+            self.stage_ops.len(),
+            objects,
+        )
+    }
 }

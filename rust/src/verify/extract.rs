@@ -1,0 +1,1082 @@
+//! Model extraction: compile the networks we *actually build* into
+//! [`super::syntax::Proc`] terms and discharge the paper's assertions
+//! on them.
+//!
+//! [`super::models`] transcribes the paper's CSPm Definitions 1–7 by
+//! hand; this module closes the model↔implementation gap by generating
+//! the CSP model *from the constructed object* — the same worker
+//! counts, stage chains and connector protocols a
+//! [`crate::builder::NetworkSpec`] or a pattern struct
+//! ([`crate::patterns::DataParallelCollect`],
+//! [`crate::patterns::GroupOfPipelineCollects`],
+//! [`crate::patterns::TaskParallelOfGroupCollects`],
+//! [`crate::engines::MultiCoreEngine`]) expands into. The [`Checker`]
+//! then proves deadlock and divergence freedom of the extracted system,
+//! and GoP↔PoG traces equivalence on the two extracted architectures.
+//!
+//! ## Abstraction
+//!
+//! Values are uninterpreted: a stream of `objects` letters (`A`, `B`,
+//! …) tagged with the number of worker stages applied (`A` → `Ap` →
+//! `App`), closed by the `UniversalTerminator` `UT` — the same value
+//! abstraction as Definitions 1–7. Every channel edge is a set of
+//! events `edge.w.r.value` indexed by writer and reader; a **shared
+//! any-end** is modelled faithfully as free choice over the index (any
+//! reader may take any value), not as the round-robin approximation the
+//! paper's hand models use — so the checker explores every routing the
+//! real scheduler could produce. Terminator counting mirrors the
+//! implementation exactly: a fan delivers one `UT` per sharing reader,
+//! a worker forwards its single `UT`, a reducer counts one `UT` per
+//! writer, a collector consumes one.
+//!
+//! Like all finite-state model checking (and the paper's own CSPm
+//! scripts, which fix five letters and small worker counts), extraction
+//! checks a *bounded instance* of the architecture; the structure —
+//! spreaders, groups, stages, reducers, the termination protocol — is
+//! taken from the real network object.
+
+use std::collections::BTreeSet;
+use std::rc::Rc;
+
+use super::check::{traces_refines, CheckResult, Checker};
+use super::lts::Lts;
+use super::syntax::{Env, Event, Interner, Proc};
+use crate::csp::error::{GppError, Result};
+
+/// The terminator in the abstract value space.
+pub const UT: i64 = 9_999;
+
+/// Human-readable value name: letter + one `p` (prime) per applied
+/// stage, `UT` for the terminator.
+fn vname(k: i64, v: i64) -> String {
+    if v == UT {
+        return "UT".to_string();
+    }
+    let letter = (v % k) as u8;
+    let stage = v / k;
+    let mut s = String::new();
+    s.push((b'A' + letter) as char);
+    for _ in 0..stage {
+        s.push('p');
+    }
+    s
+}
+
+/// Data values on an edge carrying stage-`stage` objects, plus `UT`.
+fn stage_values(k: i64, stage: i64) -> Vec<i64> {
+    (0..k).map(|l| stage * k + l).chain([UT]).collect()
+}
+
+/// One channel edge of the extracted network. `writers`/`readers` count
+/// the processes sharing each end; events are `name.w.r.value`.
+#[derive(Clone)]
+struct Edge {
+    name: String,
+    writers: usize,
+    readers: usize,
+    /// Stage tag of the data values flowing on this edge.
+    stage: i64,
+}
+
+impl Edge {
+    fn new(name: &str, writers: usize, readers: usize, stage: i64) -> Self {
+        Self {
+            name: name.to_string(),
+            writers,
+            readers,
+            stage,
+        }
+    }
+
+    fn ev(&self, i: &Interner, k: i64, w: usize, r: usize, v: i64) -> Event {
+        i.intern(&format!("{}.{w}.{r}.{}", self.name, vname(k, v)))
+    }
+
+    fn values(&self, k: i64) -> Vec<i64> {
+        stage_values(k, self.stage)
+    }
+
+    /// Intern the full event set (alphabets must be complete before any
+    /// parallel composition is assembled).
+    fn intern_all(&self, i: &Interner, k: i64) {
+        for w in 0..self.writers {
+            for r in 0..self.readers {
+                for v in self.values(k) {
+                    self.ev(i, k, w, r, v);
+                }
+            }
+        }
+    }
+
+    /// Events writer `w` engages in (any reader, any value).
+    fn writer_alpha(&self, i: &Interner, k: i64, w: usize) -> BTreeSet<Event> {
+        let mut a = BTreeSet::new();
+        for r in 0..self.readers {
+            for v in self.values(k) {
+                a.insert(self.ev(i, k, w, r, v));
+            }
+        }
+        a
+    }
+
+    /// Events reader `r` engages in (any writer, any value).
+    fn reader_alpha(&self, i: &Interner, k: i64, r: usize) -> BTreeSet<Event> {
+        let mut a = BTreeSet::new();
+        for w in 0..self.writers {
+            for v in self.values(k) {
+                a.insert(self.ev(i, k, w, r, v));
+            }
+        }
+        a
+    }
+
+    fn all_alpha(&self, i: &Interner, k: i64) -> BTreeSet<Event> {
+        let mut a = BTreeSet::new();
+        for w in 0..self.writers {
+            a.extend(self.writer_alpha(i, k, w));
+        }
+        a
+    }
+}
+
+fn union(sets: &[BTreeSet<Event>]) -> BTreeSet<Event> {
+    let mut out = BTreeSet::new();
+    for s in sets {
+        out.extend(s.iter().copied());
+    }
+    out
+}
+
+/// Observation event a collector emits per delivered value:
+/// `out.<collector>.<value>`.
+fn out_ev(i: &Interner, k: i64, collector: usize, v: i64) -> Event {
+    i.intern(&format!("out.{collector}.{}", vname(k, v)))
+}
+
+// ------------------------------------------------- component definitions
+
+/// `Emit = e!A -> e!B -> … -> e!UT -> SKIP` on a 1×1 edge.
+fn define_emit(env: &mut Env, i: Rc<Interner>, edge: Edge, k: i64, def: &str) {
+    let name = def.to_string();
+    env.define(def, move |args| {
+        let o = args[0];
+        let e = edge.ev(&i, k, 0, 0, o);
+        if o == UT {
+            Proc::prefix(e, Proc::Skip)
+        } else {
+            let next = if (o % k) + 1 >= k { UT } else { o + 1 };
+            Proc::prefix(e, Proc::call(&name, &[next]))
+        }
+    });
+}
+
+/// `OneFanAny`: forward each value to *any* reader of the shared out
+/// edge (free choice — the real any-end), then deliver one `UT` per
+/// reader (the implementation's `Spread_End`).
+fn define_fan(env: &mut Env, i: Rc<Interner>, ein: Edge, eout: Edge, k: i64, def: &str) {
+    let name = def.to_string();
+    let end_name = format!("{def}End");
+    {
+        let i2 = i.clone();
+        let ein2 = ein.clone();
+        let eout2 = eout.clone();
+        let end2 = end_name.clone();
+        env.define(def, move |_| {
+            let mut branches = Vec::new();
+            for o in ein2.values(k) {
+                let e_in = ein2.ev(&i2, k, 0, 0, o);
+                if o == UT {
+                    branches.push(Proc::prefix(e_in, Proc::call(&end2, &[0])));
+                } else {
+                    // Any free reader takes the value.
+                    let routes: Vec<Proc> = (0..eout2.readers)
+                        .map(|r| {
+                            Proc::prefix(eout2.ev(&i2, k, 0, r, o), Proc::call(&name, &[]))
+                        })
+                        .collect();
+                    branches.push(Proc::prefix(e_in, Proc::ext_choice(routes)));
+                }
+            }
+            Proc::ext_choice(branches)
+        });
+    }
+    {
+        let readers = eout.readers;
+        env.define(&end_name.clone(), move |args| {
+            let r = args[0] as usize;
+            if r >= readers {
+                Proc::Skip
+            } else {
+                Proc::prefix(eout.ev(&i, k, 0, r, UT), Proc::call(&end_name, &[args[0] + 1]))
+            }
+        });
+    }
+}
+
+/// A worker: read a value from the in edge (as reader `win`, from any
+/// writer), apply the stage function (`v → v+k`, one prime), write to
+/// the out edge (as writer `wout`, to any reader). Forward the single
+/// `UT` and stop.
+#[allow(clippy::too_many_arguments)]
+fn define_worker(
+    env: &mut Env,
+    i: Rc<Interner>,
+    ein: Edge,
+    win: usize,
+    eout: Edge,
+    wout: usize,
+    k: i64,
+    def: &str,
+) {
+    let name = def.to_string();
+    env.define(def, move |_| {
+        let mut branches = Vec::new();
+        for o in ein.values(k) {
+            for wr in 0..ein.writers {
+                let e_in = ein.ev(&i, k, wr, win, o);
+                if o == UT {
+                    let routes: Vec<Proc> = (0..eout.readers)
+                        .map(|r| Proc::prefix(eout.ev(&i, k, wout, r, UT), Proc::Skip))
+                        .collect();
+                    branches.push(Proc::prefix(e_in, Proc::ext_choice(routes)));
+                } else {
+                    let routes: Vec<Proc> = (0..eout.readers)
+                        .map(|r| {
+                            Proc::prefix(eout.ev(&i, k, wout, r, o + k), Proc::call(&name, &[]))
+                        })
+                        .collect();
+                    branches.push(Proc::prefix(e_in, Proc::ext_choice(routes)));
+                }
+            }
+        }
+        Proc::ext_choice(branches)
+    });
+}
+
+/// `AnyFanOne`: single reader of a shared edge with `ein.writers`
+/// writers; forwards data, counts one `UT` per writer (Definition 5's
+/// mask), then emits one `UT` downstream and stops.
+fn define_reducer(env: &mut Env, i: Rc<Interner>, ein: Edge, eout: Edge, k: i64, def: &str) {
+    let name = def.to_string();
+    let writers = ein.writers;
+    env.define(def, move |args| {
+        let mask = args[0];
+        let full = (1i64 << writers) - 1;
+        let mut branches = Vec::new();
+        for w in 0..writers {
+            if mask & (1 << w) != 0 {
+                continue;
+            }
+            for o in ein.values(k) {
+                let e_in = ein.ev(&i, k, w, 0, o);
+                if o == UT {
+                    let m2 = mask | (1 << w);
+                    if m2 == full {
+                        branches.push(Proc::prefix(
+                            e_in,
+                            Proc::prefix(eout.ev(&i, k, 0, 0, UT), Proc::Skip),
+                        ));
+                    } else {
+                        branches.push(Proc::prefix(e_in, Proc::call(&name, &[m2])));
+                    }
+                } else {
+                    branches.push(Proc::prefix(
+                        e_in,
+                        Proc::prefix(eout.ev(&i, k, 0, 0, o), Proc::call(&name, &[mask])),
+                    ));
+                }
+            }
+        }
+        Proc::ext_choice(branches)
+    });
+}
+
+/// `Collect` (as reader `rin` of its in edge): each delivered value is
+/// observed as a visible `out.<idx>.<value>` event; the `UT` (from any
+/// writer) terminates it.
+fn define_collect(
+    env: &mut Env,
+    i: Rc<Interner>,
+    ein: Edge,
+    rin: usize,
+    out_idx: usize,
+    k: i64,
+    def: &str,
+) {
+    let name = def.to_string();
+    env.define(def, move |_| {
+        let mut branches = Vec::new();
+        for o in ein.values(k) {
+            for w in 0..ein.writers {
+                let e_in = ein.ev(&i, k, w, rin, o);
+                if o == UT {
+                    branches.push(Proc::prefix(e_in, Proc::Skip));
+                } else {
+                    branches.push(Proc::prefix(
+                        e_in,
+                        Proc::prefix(out_ev(&i, k, out_idx, o), Proc::call(&name, &[])),
+                    ));
+                }
+            }
+        }
+        Proc::ext_choice(branches)
+    });
+}
+
+/// `MultiCoreEngine`: per object, `iterations` fork/join node phases —
+/// a parallel of `calc.<node>.<iter>` events whose distributed
+/// termination *is* the scoped-thread join — then the object moves on.
+#[allow(clippy::too_many_arguments)]
+fn define_engine(
+    env: &mut Env,
+    i: Rc<Interner>,
+    ein: Edge,
+    eout: Edge,
+    nodes: usize,
+    iterations: usize,
+    k: i64,
+    def: &str,
+) {
+    let name = def.to_string();
+    env.define(def, move |_| {
+        let phase = |it: usize| -> Proc {
+            let parts: Vec<(Proc, BTreeSet<Event>)> = (0..nodes)
+                .map(|n| {
+                    let e = i.intern(&format!("calc.{n}.{it}"));
+                    (Proc::prefix(e, Proc::Skip), BTreeSet::from([e]))
+                })
+                .collect();
+            Proc::par(parts)
+        };
+        let mut branches = Vec::new();
+        for o in ein.values(k) {
+            let e_in = ein.ev(&i, k, 0, 0, o);
+            if o == UT {
+                branches.push(Proc::prefix(
+                    e_in,
+                    Proc::prefix(eout.ev(&i, k, 0, 0, UT), Proc::Skip),
+                ));
+            } else {
+                // phases(0) ; phases(1) ; … ; out!o' ; Engine
+                let tail = Proc::prefix(eout.ev(&i, k, 0, 0, o + k), Proc::call(&name, &[]));
+                let solved = (0..iterations).rev().fold(tail, |acc, it| {
+                    Proc::Seq(Rc::new(phase(it)), Rc::new(acc))
+                });
+                branches.push(Proc::prefix(e_in, solved));
+            }
+        }
+        Proc::ext_choice(branches)
+    });
+}
+
+// --------------------------------------------------------------- models
+
+/// A network compiled to a checkable CSP system.
+pub struct ExtractedModel {
+    pub name: String,
+    pub interner: Rc<Interner>,
+    pub env: Env,
+    /// The full system: every channel event visible.
+    pub system: Proc,
+    /// The system with channel internals hidden: only the collectors'
+    /// `out.*` observations (and ✓) remain.
+    pub observed: Proc,
+}
+
+impl ExtractedModel {
+    /// The paper's §2.1/§9 guarantees on the extracted system: deadlock
+    /// freedom (on the full system) and divergence/livelock freedom (on
+    /// the hidden system, where internal progress is tau).
+    pub fn check(&self) -> Result<Vec<(String, CheckResult)>> {
+        let sys = Lts::explore(&self.system, &self.env)?;
+        let checker = Checker::new(&sys, &self.interner);
+        let hidden = Lts::explore(&self.observed, &self.env)?;
+        let hidden_checker = Checker::new(&hidden, &self.interner);
+        Ok(vec![
+            (
+                format!("{} :[deadlock free]", self.name),
+                checker.deadlock_free(),
+            ),
+            (
+                format!("{} \\ internals :[divergence free]", self.name),
+                hidden_checker.divergence_free(),
+            ),
+        ])
+    }
+
+    /// `check`, failing hard with the first counterexample.
+    pub fn assert_all(&self) -> Result<()> {
+        for (name, r) in self.check()? {
+            if let CheckResult::Fails { reason, trace } = r {
+                return Err(GppError::Verify(format!(
+                    "{name} FAILED: {reason}; trace: {}",
+                    trace.join(" → ")
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The observed LTS with collector indices collapsed
+    /// (`out.<idx>.<v>` → `out.<v>`) so differently-indexed
+    /// architectures compare under traces refinement.
+    pub fn observed_lts_collapsed(&self) -> Result<Lts> {
+        let lts = Lts::explore(&self.observed, &self.env)?;
+        let interner = self.interner.clone();
+        Ok(lts.relabel(&move |e| {
+            let n = interner.name(e);
+            let mut parts = n.splitn(3, '.');
+            match (parts.next(), parts.next(), parts.next()) {
+                (Some("out"), Some(_idx), Some(v)) => interner.intern(&format!("out.{v}")),
+                _ => e,
+            }
+        }))
+    }
+}
+
+/// Mutual traces refinement of two extracted models over their
+/// collapsed observations — the Definition 7 equivalence, on the
+/// *constructed* architectures. Both models must share one [`Interner`].
+pub fn traces_equivalent(
+    a: &ExtractedModel,
+    b: &ExtractedModel,
+) -> Result<Vec<(String, CheckResult)>> {
+    assert!(
+        Rc::ptr_eq(&a.interner, &b.interner),
+        "models must share an interner for event identity"
+    );
+    let la = a.observed_lts_collapsed()?;
+    let lb = b.observed_lts_collapsed()?;
+    Ok(vec![
+        (
+            format!("{} [T= {}", a.name, b.name),
+            traces_refines(&la, &lb, &a.interner)?,
+        ),
+        (
+            format!("{} [T= {}", b.name, a.name),
+            traces_refines(&lb, &la, &a.interner)?,
+        ),
+    ])
+}
+
+/// One middle element of a linear `Emit → … → Collect` chain, the
+/// shape the declarative DSL builds
+/// ([`crate::builder::NetworkSpec::extract_model`] maps `ProcSpec`s
+/// onto these).
+#[derive(Clone, Copy, Debug)]
+pub enum ChainStage {
+    /// `OneFanAny`: one-in, shared-any out feeding `destinations`
+    /// readers (one `UT` each).
+    FanAny { destinations: usize },
+    /// `AnyGroupAny`: `workers` parallel Workers over shared any ends.
+    Group { workers: usize },
+    /// `OnePipelineOne`: `stages` chained 1×1 Workers.
+    Pipeline { stages: usize },
+    /// A single 1×1 functional stage (`CombineNto1`).
+    Worker,
+    /// `AnyFanOne`: shared-any in from `sources` writers (counting one
+    /// `UT` each), one out.
+    ReduceAny { sources: usize },
+}
+
+/// Normalised element of the chain (pipelines flattened to workers).
+#[derive(Clone, Copy, Debug)]
+enum Elem {
+    Emit,
+    Fan(usize),
+    Group(usize),
+    Worker,
+    Reduce(usize),
+    Collect,
+}
+
+impl Elem {
+    fn writers(&self) -> usize {
+        match self {
+            Elem::Group(w) => *w,
+            _ => 1,
+        }
+    }
+
+    fn readers(&self) -> usize {
+        match self {
+            Elem::Group(w) => *w,
+            _ => 1,
+        }
+    }
+
+    /// Does this element apply the stage function (prime values)?
+    fn is_functional(&self) -> bool {
+        matches!(self, Elem::Group(_) | Elem::Worker)
+    }
+}
+
+/// Compile a linear chain — implicit `Emit` up front and `Collect` at
+/// the end, `stages` in between — into a checkable model. This is the
+/// extraction target of [`crate::builder::NetworkSpec`]: the same
+/// arity/terminator bookkeeping the builder's `validate()` enforces is
+/// what the model's components implement, so a chain the builder
+/// accepts compiles to a model and the checker proves it deadlock-free
+/// (or produces the counterexample schedule).
+pub fn extract_chain(
+    interner: Rc<Interner>,
+    chain: &[ChainStage],
+    objects: i64,
+) -> Result<ExtractedModel> {
+    let k = objects.max(1);
+    let i = interner;
+    let mut env = Env::new();
+
+    // Normalise: pipelines become runs of single workers.
+    let mut elems: Vec<Elem> = vec![Elem::Emit];
+    for c in chain {
+        match c {
+            ChainStage::FanAny { destinations } => elems.push(Elem::Fan(*destinations)),
+            ChainStage::Group { workers } => elems.push(Elem::Group((*workers).max(1))),
+            ChainStage::Pipeline { stages } => {
+                for _ in 0..(*stages).max(1) {
+                    elems.push(Elem::Worker);
+                }
+            }
+            ChainStage::Worker => elems.push(Elem::Worker),
+            ChainStage::ReduceAny { sources } => elems.push(Elem::Reduce(*sources)),
+        }
+    }
+    elems.push(Elem::Collect);
+
+    // Edge j connects elems[j] → elems[j+1]; stage tag = functional
+    // elements seen so far.
+    let mut edges: Vec<Edge> = Vec::new();
+    let mut stage = 0i64;
+    for j in 0..elems.len() - 1 {
+        if elems[j].is_functional() {
+            stage += 1;
+        }
+        edges.push(Edge::new(
+            &format!("c{j}"),
+            elems[j].writers(),
+            elems[j + 1].readers(),
+            stage,
+        ));
+    }
+    let final_stage = edges.last().expect("chain has ≥1 edge").stage;
+
+    // Terminator bookkeeping mirrors builder::NetworkSpec::validate:
+    // UTs delivered on each edge must equal UTs consumed.
+    for (j, e) in edges.iter().enumerate() {
+        let delivered = match elems[j] {
+            Elem::Fan(d) => {
+                if d != e.readers {
+                    return Err(GppError::Verify(format!(
+                        "fanAny delivers {d} terminator(s) but {} reader(s) follow",
+                        e.readers
+                    )));
+                }
+                d
+            }
+            other => other.writers(),
+        };
+        let consumed = match elems[j + 1] {
+            Elem::Reduce(s) => s,
+            Elem::Group(w) => w,
+            _ => 1,
+        };
+        if delivered != consumed {
+            return Err(GppError::Verify(format!(
+                "edge {j}: {delivered} terminator(s) delivered but {consumed} consumed \
+                 ({:?} → {:?})",
+                elems[j],
+                elems[j + 1]
+            )));
+        }
+    }
+
+    for e in &edges {
+        e.intern_all(&i, k);
+    }
+    for v in stage_values(k, final_stage) {
+        if v != UT {
+            out_ev(&i, k, 0, v);
+        }
+    }
+
+    let mut parts: Vec<(Proc, BTreeSet<Event>)> = Vec::new();
+    let mut internals: BTreeSet<Event> = BTreeSet::new();
+    for e in &edges {
+        internals.extend(e.all_alpha(&i, k));
+    }
+
+    for (j, elem) in elems.iter().enumerate() {
+        let ein = if j > 0 { Some(edges[j - 1].clone()) } else { None };
+        let eout = if j < edges.len() { Some(edges[j].clone()) } else { None };
+        match elem {
+            Elem::Emit => {
+                let out = eout.expect("emit has an out edge");
+                define_emit(&mut env, i.clone(), out.clone(), k, "Emit");
+                parts.push((Proc::call("Emit", &[0]), out.all_alpha(&i, k)));
+            }
+            Elem::Fan(_) => {
+                let (inp, out) = (ein.expect("fan in"), eout.expect("fan out"));
+                let def = format!("Fan{j}");
+                define_fan(&mut env, i.clone(), inp.clone(), out.clone(), k, &def);
+                parts.push((
+                    Proc::call(&def, &[]),
+                    union(&[inp.all_alpha(&i, k), out.all_alpha(&i, k)]),
+                ));
+            }
+            Elem::Group(w) => {
+                let (inp, out) = (ein.expect("group in"), eout.expect("group out"));
+                for wk in 0..*w {
+                    let def = format!("W{j}_{wk}");
+                    define_worker(&mut env, i.clone(), inp.clone(), wk, out.clone(), wk, k, &def);
+                    parts.push((
+                        Proc::call(&def, &[]),
+                        union(&[inp.reader_alpha(&i, k, wk), out.writer_alpha(&i, k, wk)]),
+                    ));
+                }
+            }
+            Elem::Worker => {
+                let (inp, out) = (ein.expect("worker in"), eout.expect("worker out"));
+                let def = format!("W{j}");
+                define_worker(&mut env, i.clone(), inp.clone(), 0, out.clone(), 0, k, &def);
+                parts.push((
+                    Proc::call(&def, &[]),
+                    union(&[inp.all_alpha(&i, k), out.all_alpha(&i, k)]),
+                ));
+            }
+            Elem::Reduce(_) => {
+                let (inp, out) = (ein.expect("reduce in"), eout.expect("reduce out"));
+                let def = format!("Red{j}");
+                define_reducer(&mut env, i.clone(), inp.clone(), out.clone(), k, &def);
+                parts.push((
+                    Proc::call(&def, &[0]),
+                    union(&[inp.all_alpha(&i, k), out.all_alpha(&i, k)]),
+                ));
+            }
+            Elem::Collect => {
+                let inp = ein.expect("collect in");
+                let def = "Coll".to_string();
+                define_collect(&mut env, i.clone(), inp.clone(), 0, 0, k, &def);
+                let out_alpha: BTreeSet<Event> = stage_values(k, final_stage)
+                    .into_iter()
+                    .filter(|&v| v != UT)
+                    .map(|v| out_ev(&i, k, 0, v))
+                    .collect();
+                parts.push((
+                    Proc::call(&def, &[]),
+                    union(&[inp.all_alpha(&i, k), out_alpha]),
+                ));
+            }
+        }
+    }
+
+    let system = Proc::par(parts);
+    let observed = Proc::hide(system.clone(), internals);
+    Ok(ExtractedModel {
+        name: format!("Chain({} elements, objects={k})", elems.len()),
+        interner: i,
+        env,
+        system,
+        observed,
+    })
+}
+
+/// The farm (`DataParallelCollect`, quickstart/mandelbrot shape):
+/// `Emit → OneFanAny → workers × Worker → AnyFanOne → Collect`.
+pub fn extract_farm(interner: Rc<Interner>, workers: usize, objects: i64) -> ExtractedModel {
+    let w = workers.max(1);
+    let mut m = extract_chain(
+        interner,
+        &[
+            ChainStage::FanAny { destinations: w },
+            ChainStage::Group { workers: w },
+            ChainStage::ReduceAny { sources: w },
+        ],
+        objects,
+    )
+    .expect("farm chain is always consistent");
+    m.name = format!("Farm(workers={w}, objects={})", objects.max(1));
+    m
+}
+
+/// GoP (`GroupOfPipelineCollects`, concordance Listing 13): `Emit →
+/// OneFanAny → pipes × (stage chain → Collect)`, one collector per
+/// pipe.
+pub fn extract_gop(
+    interner: Rc<Interner>,
+    pipes: usize,
+    stages: usize,
+    objects: i64,
+) -> ExtractedModel {
+    let k = objects.max(1);
+    let g = pipes.max(1);
+    let s = stages.max(1);
+    let i = interner;
+    let mut env = Env::new();
+
+    let e0 = Edge::new("ga", 1, 1, 0); // emit → fan
+    let fan_out = Edge::new("gf", 1, g, 0); // fan → pipes (shared any)
+    // Per pipe: stage edges p{p}s{j} (1×1), last one feeds the collector.
+    let stage_edge = |p: usize, j: usize| -> Edge {
+        Edge::new(&format!("gp{p}s{j}"), 1, 1, j as i64 + 1)
+    };
+    e0.intern_all(&i, k);
+    fan_out.intern_all(&i, k);
+    for p in 0..g {
+        for j in 0..s {
+            stage_edge(p, j).intern_all(&i, k);
+        }
+        for v in stage_values(k, s as i64) {
+            if v != UT {
+                out_ev(&i, k, p, v);
+            }
+        }
+    }
+
+    define_emit(&mut env, i.clone(), e0.clone(), k, "Emit");
+    define_fan(&mut env, i.clone(), e0.clone(), fan_out.clone(), k, "Fan");
+    for p in 0..g {
+        for j in 0..s {
+            let ein = if j == 0 { fan_out.clone() } else { stage_edge(p, j - 1) };
+            let win = if j == 0 { p } else { 0 };
+            define_worker(
+                &mut env,
+                i.clone(),
+                ein,
+                win,
+                stage_edge(p, j),
+                0,
+                k,
+                &format!("W{p}_{j}"),
+            );
+        }
+        define_collect(
+            &mut env,
+            i.clone(),
+            stage_edge(p, s - 1),
+            0,
+            p,
+            k,
+            &format!("C{p}"),
+        );
+    }
+
+    let mut parts: Vec<(Proc, BTreeSet<Event>)> = vec![
+        (Proc::call("Emit", &[0]), e0.all_alpha(&i, k)),
+        (
+            Proc::call("Fan", &[]),
+            union(&[e0.all_alpha(&i, k), fan_out.all_alpha(&i, k)]),
+        ),
+    ];
+    let mut internals = union(&[e0.all_alpha(&i, k), fan_out.all_alpha(&i, k)]);
+    for p in 0..g {
+        for j in 0..s {
+            let in_alpha = if j == 0 {
+                fan_out.reader_alpha(&i, k, p)
+            } else {
+                stage_edge(p, j - 1).all_alpha(&i, k)
+            };
+            parts.push((
+                Proc::call(&format!("W{p}_{j}"), &[]),
+                union(&[in_alpha, stage_edge(p, j).all_alpha(&i, k)]),
+            ));
+            internals.extend(stage_edge(p, j).all_alpha(&i, k));
+        }
+        let out_alpha: BTreeSet<Event> = stage_values(k, s as i64)
+            .into_iter()
+            .filter(|&v| v != UT)
+            .map(|v| out_ev(&i, k, p, v))
+            .collect();
+        parts.push((
+            Proc::call(&format!("C{p}"), &[]),
+            union(&[stage_edge(p, s - 1).all_alpha(&i, k), out_alpha]),
+        ));
+    }
+    let system = Proc::par(parts);
+    let observed = Proc::hide(system.clone(), internals);
+
+    ExtractedModel {
+        name: format!("GoP(pipes={g}, stages={s}, objects={k})"),
+        interner: i,
+        env,
+        system,
+        observed,
+    }
+}
+
+/// PoG (`TaskParallelOfGroupCollects`, concordance Listing 14): `Emit →
+/// OneFanAny → stages × (width-wide worker group) → width × Collect`,
+/// every stage boundary a shared any-end.
+pub fn extract_pog(
+    interner: Rc<Interner>,
+    width: usize,
+    stages: usize,
+    objects: i64,
+) -> ExtractedModel {
+    let k = objects.max(1);
+    let w = width.max(1);
+    let s = stages.max(1);
+    let i = interner;
+    let mut env = Env::new();
+
+    let e0 = Edge::new("qa", 1, 1, 0); // emit → fan
+    let fan_out = Edge::new("qf", 1, w, 0); // fan → first group (shared any)
+    // Group boundary j (output of stage j): W writers × W readers.
+    let group_edge = |j: usize| -> Edge {
+        let readers = w; // next group, or the collector group
+        Edge::new(&format!("qg{j}"), w, readers, j as i64 + 1)
+    };
+    e0.intern_all(&i, k);
+    fan_out.intern_all(&i, k);
+    for j in 0..s {
+        group_edge(j).intern_all(&i, k);
+    }
+    for c in 0..w {
+        for v in stage_values(k, s as i64) {
+            if v != UT {
+                out_ev(&i, k, c, v);
+            }
+        }
+    }
+
+    define_emit(&mut env, i.clone(), e0.clone(), k, "Emit");
+    define_fan(&mut env, i.clone(), e0.clone(), fan_out.clone(), k, "Fan");
+    for j in 0..s {
+        for wk in 0..w {
+            let ein = if j == 0 { fan_out.clone() } else { group_edge(j - 1) };
+            define_worker(
+                &mut env,
+                i.clone(),
+                ein,
+                wk,
+                group_edge(j),
+                wk,
+                k,
+                &format!("W{j}_{wk}"),
+            );
+        }
+    }
+    for c in 0..w {
+        define_collect(
+            &mut env,
+            i.clone(),
+            group_edge(s - 1),
+            c,
+            c,
+            k,
+            &format!("C{c}"),
+        );
+    }
+
+    let mut parts: Vec<(Proc, BTreeSet<Event>)> = vec![
+        (Proc::call("Emit", &[0]), e0.all_alpha(&i, k)),
+        (
+            Proc::call("Fan", &[]),
+            union(&[e0.all_alpha(&i, k), fan_out.all_alpha(&i, k)]),
+        ),
+    ];
+    let mut internals = union(&[e0.all_alpha(&i, k), fan_out.all_alpha(&i, k)]);
+    for j in 0..s {
+        internals.extend(group_edge(j).all_alpha(&i, k));
+        for wk in 0..w {
+            let in_alpha = if j == 0 {
+                fan_out.reader_alpha(&i, k, wk)
+            } else {
+                group_edge(j - 1).reader_alpha(&i, k, wk)
+            };
+            parts.push((
+                Proc::call(&format!("W{j}_{wk}"), &[]),
+                union(&[in_alpha, group_edge(j).writer_alpha(&i, k, wk)]),
+            ));
+        }
+    }
+    for c in 0..w {
+        let out_alpha: BTreeSet<Event> = stage_values(k, s as i64)
+            .into_iter()
+            .filter(|&v| v != UT)
+            .map(|v| out_ev(&i, k, c, v))
+            .collect();
+        parts.push((
+            Proc::call(&format!("C{c}"), &[]),
+            union(&[group_edge(s - 1).reader_alpha(&i, k, c), out_alpha]),
+        ));
+    }
+    let system = Proc::par(parts);
+    let observed = Proc::hide(system.clone(), internals);
+
+    ExtractedModel {
+        name: format!("PoG(width={w}, stages={s}, objects={k})"),
+        interner: i,
+        env,
+        system,
+        observed,
+    }
+}
+
+/// The `MultiCoreEngine` chain (jacobi/nbody examples): `Emit → Engine
+/// (nodes × fork/join phases × iterations) → Collect`.
+pub fn extract_engine(
+    interner: Rc<Interner>,
+    nodes: usize,
+    iterations: usize,
+    objects: i64,
+) -> ExtractedModel {
+    let k = objects.max(1);
+    let n = nodes.max(1);
+    let iters = iterations.max(1);
+    let i = interner;
+    let mut env = Env::new();
+
+    let e0 = Edge::new("na", 1, 1, 0); // emit → engine
+    let e1 = Edge::new("nb", 1, 1, 1); // engine → collect
+    e0.intern_all(&i, k);
+    e1.intern_all(&i, k);
+    let mut calc_alpha: BTreeSet<Event> = BTreeSet::new();
+    for nd in 0..n {
+        for it in 0..iters {
+            calc_alpha.insert(i.intern(&format!("calc.{nd}.{it}")));
+        }
+    }
+    for v in stage_values(k, 1) {
+        if v != UT {
+            out_ev(&i, k, 0, v);
+        }
+    }
+
+    define_emit(&mut env, i.clone(), e0.clone(), k, "Emit");
+    define_engine(&mut env, i.clone(), e0.clone(), e1.clone(), n, iters, k, "Engine");
+    define_collect(&mut env, i.clone(), e1.clone(), 0, 0, k, "Coll");
+
+    let out_alpha: BTreeSet<Event> = stage_values(k, 1)
+        .into_iter()
+        .filter(|&v| v != UT)
+        .map(|v| out_ev(&i, k, 0, v))
+        .collect();
+
+    let system = Proc::par(vec![
+        (Proc::call("Emit", &[0]), e0.all_alpha(&i, k)),
+        (
+            Proc::call("Engine", &[]),
+            union(&[e0.all_alpha(&i, k), e1.all_alpha(&i, k), calc_alpha.clone()]),
+        ),
+        (
+            Proc::call("Coll", &[]),
+            union(&[e1.all_alpha(&i, k), out_alpha]),
+        ),
+    ]);
+    let internals = union(&[e0.all_alpha(&i, k), e1.all_alpha(&i, k), calc_alpha]);
+    let observed = Proc::hide(system.clone(), internals);
+
+    ExtractedModel {
+        name: format!("Engine(nodes={n}, iterations={iters}, objects={k})"),
+        interner: i,
+        env,
+        system,
+        observed,
+    }
+}
+
+/// Fresh interner for standalone extraction; share one across models
+/// you intend to compare with [`traces_equivalent`].
+pub fn new_interner() -> Rc<Interner> {
+    Rc::new(Interner::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_holds(model: &ExtractedModel) {
+        for (name, r) in model.check().unwrap() {
+            assert!(r.holds(), "{name}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn farm_models_are_deadlock_and_divergence_free() {
+        for workers in [1usize, 2, 3] {
+            assert_holds(&extract_farm(new_interner(), workers, 2));
+        }
+    }
+
+    #[test]
+    fn farm_model_detects_a_broken_terminator_protocol() {
+        // Sanity: the checker is not vacuous. A fan that delivers UTs
+        // for one reader FEWER than the sharing workers deadlocks.
+        let i = new_interner();
+        let k = 2i64;
+        let mut env = Env::new();
+        let e0 = Edge::new("e0", 1, 1, 0);
+        let e1 = Edge::new("e1", 1, 2, 0);
+        let e2 = Edge::new("e2", 2, 1, 1);
+        let e3 = Edge::new("e3", 1, 1, 1);
+        for e in [&e0, &e1, &e2, &e3] {
+            e.intern_all(&i, k);
+        }
+        define_emit(&mut env, i.clone(), e0.clone(), k, "Emit");
+        // Broken fan: pretends the out edge has ONE reader at UT time.
+        let short = Edge::new("e1", 1, 1, 0); // same events, fewer UTs
+        define_fan(&mut env, i.clone(), e0.clone(), short, k, "Fan");
+        for w in 0..2 {
+            define_worker(&mut env, i.clone(), e1.clone(), w, e2.clone(), w, k, &format!("W{w}"));
+        }
+        define_reducer(&mut env, i.clone(), e2.clone(), e3.clone(), k, "Red");
+        define_collect(&mut env, i.clone(), e3.clone(), 0, 0, k, "Coll");
+        let mut parts: Vec<(Proc, std::collections::BTreeSet<Event>)> = vec![
+            (Proc::call("Emit", &[0]), e0.all_alpha(&i, k)),
+            (
+                Proc::call("Fan", &[]),
+                union(&[e0.all_alpha(&i, k), e1.all_alpha(&i, k)]),
+            ),
+        ];
+        for w in 0..2 {
+            parts.push((
+                Proc::call(&format!("W{w}"), &[]),
+                union(&[e1.reader_alpha(&i, k, w), e2.writer_alpha(&i, k, w)]),
+            ));
+        }
+        parts.push((
+            Proc::call("Red", &[0]),
+            union(&[e2.all_alpha(&i, k), e3.all_alpha(&i, k)]),
+        ));
+        let out_alpha: std::collections::BTreeSet<Event> = stage_values(k, 1)
+            .into_iter()
+            .filter(|&v| v != UT)
+            .map(|v| out_ev(&i, k, 0, v))
+            .collect();
+        parts.push((
+            Proc::call("Coll", &[]),
+            union(&[e3.all_alpha(&i, k), out_alpha]),
+        ));
+        let system = Proc::par(parts);
+        let lts = Lts::explore(&system, &env).unwrap();
+        let r = Checker::new(&lts, &i).deadlock_free();
+        assert!(!r.holds(), "missing terminator must deadlock the model");
+    }
+
+    #[test]
+    fn gop_and_pog_models_hold_and_are_traces_equivalent() {
+        let i = new_interner();
+        let gop = extract_gop(i.clone(), 2, 2, 2);
+        let pog = extract_pog(i.clone(), 2, 2, 2);
+        assert_holds(&gop);
+        assert_holds(&pog);
+        for (name, r) in traces_equivalent(&gop, &pog).unwrap() {
+            assert!(r.holds(), "{name}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn engine_model_holds() {
+        assert_holds(&extract_engine(new_interner(), 3, 2, 2));
+    }
+
+    #[test]
+    fn value_names_follow_stage_tags() {
+        assert_eq!(vname(2, 0), "A");
+        assert_eq!(vname(2, 1), "B");
+        assert_eq!(vname(2, 2), "Ap");
+        assert_eq!(vname(2, 5), "Bpp");
+        assert_eq!(vname(2, UT), "UT");
+    }
+}

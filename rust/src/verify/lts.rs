@@ -238,6 +238,35 @@ impl Lts {
         out
     }
 
+    /// A copy of this LTS with every visible event mapped through `f` —
+    /// CSPm renaming applied at the semantic level. Model extraction
+    /// uses it to collapse per-process observation indices
+    /// (`out.1.Ap` → `out.Ap`) so architectures whose internal indexing
+    /// differs (GoP's per-pipe collectors vs PoG's collector group)
+    /// become comparable under traces refinement.
+    pub fn relabel(&self, f: &dyn Fn(Event) -> Event) -> Lts {
+        let map = |l: &Label| -> Label {
+            match l {
+                Label::Vis(e) => Label::Vis(f(*e)),
+                other => *other,
+            }
+        };
+        Lts {
+            edges: self
+                .edges
+                .iter()
+                .map(|outs| outs.iter().map(|(l, t)| (map(l), *t)).collect())
+                .collect(),
+            keys: self.keys.clone(),
+            init: self.init,
+            trace_to: self
+                .trace_to
+                .iter()
+                .map(|tr| tr.iter().map(&map).collect())
+                .collect(),
+        }
+    }
+
     /// A state is stable if it has no outgoing tau.
     pub fn is_stable(&self, s: usize) -> bool {
         self.edges[s].iter().all(|(l, _)| *l != Label::Tau)

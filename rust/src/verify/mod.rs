@@ -20,14 +20,20 @@
 //!   subset construction;
 //! * [`models`] — CSPm Definitions 1–6 transcribed, and the Definition 7
 //!   GoP/PoG systems;
-//! * [`laws`] — the occam PAR associativity/symmetry expansions (§9.2).
+//! * [`laws`] — the occam PAR associativity/symmetry expansions (§9.2);
+//! * [`extract`] — model **extraction**: compile the networks the
+//!   builders actually construct (farm, GoP, PoG, engine chains) into
+//!   `Proc` terms and discharge the assertions on those, instead of a
+//!   hand transcription.
 
 pub mod syntax;
 pub mod lts;
 pub mod check;
 pub mod models;
 pub mod laws;
+pub mod extract;
 
 pub use check::{CheckResult, Checker};
+pub use extract::ExtractedModel;
 pub use lts::Lts;
 pub use syntax::{Env, Event, Interner, Proc};

@@ -139,27 +139,33 @@ fn killed_worker_does_not_lose_work_or_hang_host() {
     let addr2 = addr.clone();
     let cfg2 = cfg.clone();
     let host = std::thread::spawn(move || run_host(&addr2, 2, &cfg2));
-    std::thread::sleep(Duration::from_millis(50));
 
-    // Victim: speaks the protocol far enough to hold one work item,
-    // then its "machine" dies (socket drops mid-computation).
-    let a1 = addr.clone();
-    let victim = std::thread::spawn(move || {
-        let mut s = TcpStream::connect(&a1).unwrap();
+    // Victim (on this thread, strictly before the survivor exists):
+    // speaks the protocol far enough to hold one work item, then its
+    // "machine" dies (socket drops mid-computation). Connecting retries
+    // until the listener is up — a liveness wait, not an ordering one;
+    // the requeue sequencing itself is protocol-driven, not sleep-driven.
+    {
+        let mut s = (0..400)
+            .find_map(|_| {
+                TcpStream::connect(&addr).ok().or_else(|| {
+                    std::thread::sleep(Duration::from_millis(5));
+                    None
+                })
+            })
+            .expect("host never listened");
         write_frame(&mut s, &[1]).unwrap(); // W_HELLO
         let _cfg = read_frame(&mut s).unwrap();
         write_frame(&mut s, &[2]).unwrap(); // W_REQ
         let work = read_frame(&mut s).unwrap();
         assert_eq!(work.first(), Some(&11), "expected H_WORK");
         drop(s);
-    });
-    std::thread::sleep(Duration::from_millis(80));
-    let a2 = addr.clone();
-    let survivor = std::thread::spawn(move || run_worker(&a2));
+    }
+    // Survivor joins only after the victim has provably died holding
+    // an item.
+    let done = run_worker(&addr).unwrap();
 
     let collect = host.join().unwrap().unwrap();
-    victim.join().unwrap();
-    let done = survivor.join().unwrap().unwrap();
     assert_eq!(done, 40, "survivor computed every row, including the stolen one");
     assert_eq!(collect.rows_seen, 40, "no lost work");
     assert_eq!(collect.checksum(), seq.checksum(), "result still exact");

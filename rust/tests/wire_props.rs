@@ -1,0 +1,217 @@
+//! Property tests for the wire layer: every registered net-mobile
+//! class round-trips byte-exactly, and malformed input — unknown
+//! classes, truncated frames, trailing garbage — fails *cleanly* with a
+//! `Codec` error instead of panicking or mis-decoding. These are the
+//! invariants the cluster transport (`net/`) relies on when frames
+//! arrive from another machine.
+
+use std::collections::HashMap;
+
+use gpp::data::message::{Message, Terminator};
+use gpp::data::object::downcast_ref;
+use gpp::data::wire::{decode_object, encode_object, is_net_mobile};
+use gpp::util::codec::{from_bytes, to_bytes, Wire};
+use gpp::util::prop::{forall, Gen};
+use gpp::workloads::concordance::ConcordanceData;
+use gpp::workloads::mandelbrot::MandelbrotLine;
+use gpp::workloads::montecarlo::PiData;
+use gpp::{GppError, Params, Value};
+
+fn setup() {
+    gpp::workloads::register_all();
+}
+
+fn gen_value(g: &mut Gen) -> Value {
+    match g.usize_in(0, 6) {
+        0 => Value::Int(g.i64_in(-1_000_000, 1_000_000)),
+        1 => Value::Float(g.f64_in(-1e6, 1e6)),
+        2 => Value::Str(format!("s{}", g.u64() % 100_000)),
+        3 => Value::Bool(g.bool()),
+        4 => Value::IntList((0..g.usize_in(0, 8)).map(|_| g.i64_in(-99, 99)).collect()),
+        5 => Value::FloatList((0..g.usize_in(0, 8)).map(|_| g.f64_in(-9.0, 9.0)).collect()),
+        _ => Value::StrList((0..g.usize_in(0, 5)).map(|i| format!("w{i}")).collect()),
+    }
+}
+
+fn gen_pi(g: &mut Gen) -> PiData {
+    PiData {
+        iterations: g.i64_in(0, 10_000),
+        within: g.i64_in(0, 10_000),
+        instance: g.i64_in(0, 1_000),
+        instances: g.i64_in(0, 1_000),
+        next_instance: g.i64_in(0, 1_000),
+    }
+}
+
+fn gen_mandelbrot(g: &mut Gen) -> MandelbrotLine {
+    MandelbrotLine {
+        row: g.i64_in(0, 400),
+        width: g.i64_in(1, 64),
+        height: g.i64_in(1, 64),
+        max_iterations: g.i64_in(1, 100),
+        pixel_delta: g.f64_in(1e-4, 1e-2),
+        x0: g.f64_in(-3.0, 0.0),
+        y0: g.f64_in(-2.0, 0.0),
+        counts: (0..g.usize_in(0, 32)).map(|_| g.i64_in(0, 100) as i32).collect(),
+        next_row: g.i64_in(0, 400),
+    }
+}
+
+// ConcordanceData keeps its emission cursors private, so the struct
+// cannot be built with literal syntax from here; field-by-field
+// mutation of a default is the intended construction path.
+#[allow(clippy::field_reassign_with_default)]
+fn gen_concordance(g: &mut Gen) -> ConcordanceData {
+    let mut d = ConcordanceData::default();
+    d.n = g.usize_in(1, 8);
+    d.min_seq_len = g.usize_in(1, 4);
+    d.value_list = (0..g.usize_in(0, 16)).map(|_| g.i64_in(0, 500)).collect();
+    let mut im: HashMap<i64, Vec<usize>> = HashMap::new();
+    for _ in 0..g.usize_in(0, 6) {
+        im.insert(g.i64_in(0, 50), (0..g.usize_in(0, 4)).map(|_| g.usize_in(0, 30)).collect());
+    }
+    d.indices_map = im;
+    let mut wm: HashMap<String, Vec<usize>> = HashMap::new();
+    for k in 0..g.usize_in(0, 6) {
+        wm.insert(format!("word{k}"), (0..g.usize_in(0, 4)).map(|_| g.usize_in(0, 30)).collect());
+    }
+    d.words_map = wm;
+    d
+}
+
+#[test]
+fn prop_value_and_params_roundtrip() {
+    forall("Value roundtrip", 200, |g| {
+        let v = gen_value(g);
+        from_bytes::<Value>(&to_bytes(&v)).unwrap() == v
+    });
+    forall("Params roundtrip", 200, |g| {
+        let p = Params::of((0..g.usize_in(0, 6)).map(|_| gen_value(g)).collect());
+        from_bytes::<Params>(&to_bytes(&p)).unwrap() == p
+    });
+}
+
+#[test]
+fn prop_pidata_roundtrips_via_registry() {
+    setup();
+    assert!(is_net_mobile("piData"));
+    forall("piData object roundtrip", 200, |g| {
+        let d = gen_pi(g);
+        let back = decode_object(&encode_object(&d).unwrap()).unwrap();
+        let b: &PiData = downcast_ref(back.as_ref(), "t").unwrap();
+        (b.iterations, b.within, b.instance) == (d.iterations, d.within, d.instance)
+    });
+}
+
+#[test]
+fn prop_mandelbrot_line_roundtrips_via_registry() {
+    setup();
+    assert!(is_net_mobile("mandelbrotLine"));
+    forall("mandelbrotLine roundtrip", 100, |g| {
+        let d = gen_mandelbrot(g);
+        let back = decode_object(&encode_object(&d).unwrap()).unwrap();
+        let b: &MandelbrotLine = downcast_ref(back.as_ref(), "t").unwrap();
+        b.row == d.row
+            && b.counts == d.counts
+            && b.pixel_delta == d.pixel_delta
+            && b.max_iterations == d.max_iterations
+    });
+}
+
+#[test]
+fn prop_concordance_data_roundtrips_via_registry() {
+    setup();
+    assert!(is_net_mobile("concordanceData"));
+    forall("concordanceData roundtrip", 100, |g| {
+        let d = gen_concordance(g);
+        let back = decode_object(&encode_object(&d).unwrap()).unwrap();
+        let b: &ConcordanceData = downcast_ref(back.as_ref(), "t").unwrap();
+        b.n == d.n
+            && b.value_list == d.value_list
+            && b.indices_map == d.indices_map
+            && b.words_map == d.words_map
+    });
+}
+
+#[test]
+fn prop_message_roundtrips_data_and_terminator() {
+    setup();
+    forall("Message<piData> roundtrip", 100, |g| {
+        let d = gen_pi(g);
+        let msg = Message::data(d.clone());
+        match from_bytes::<Message>(&to_bytes(&msg)).unwrap() {
+            Message::Data(obj) => {
+                let b: &PiData = downcast_ref(obj.as_ref(), "t").unwrap();
+                b.within == d.within && b.iterations == d.iterations
+            }
+            Message::Terminator(_) => false,
+        }
+    });
+    let t = from_bytes::<Message>(&to_bytes(&Message::Terminator(Terminator::new()))).unwrap();
+    assert!(t.is_terminator());
+}
+
+#[test]
+fn prop_hashmap_and_tuples_roundtrip() {
+    forall("HashMap<String,Vec<i64>> roundtrip", 150, |g| {
+        let mut m: HashMap<String, Vec<i64>> = HashMap::new();
+        for k in 0..g.usize_in(0, 8) {
+            m.insert(
+                format!("k{k}"),
+                (0..g.usize_in(0, 6)).map(|_| g.i64_in(-500, 500)).collect(),
+            );
+        }
+        from_bytes::<HashMap<String, Vec<i64>>>(&to_bytes(&m)).unwrap() == m
+    });
+    forall("3-tuple roundtrip", 150, |g| {
+        let t: (u8, String, i64) = (
+            (g.u64() % 256) as u8,
+            format!("x{}", g.u64() % 1000),
+            g.i64_in(-1_000_000_000, 1_000_000_000),
+        );
+        from_bytes::<(u8, String, i64)>(&to_bytes(&t)).unwrap() == t
+    });
+}
+
+#[test]
+fn unknown_class_decodes_to_clean_codec_error() {
+    setup();
+    let bytes = to_bytes(&("definitelyNotAClass".to_string(), vec![1u8, 2, 3]));
+    match decode_object(&bytes) {
+        Err(GppError::Codec(msg)) => {
+            assert!(msg.contains("definitelyNotAClass"), "{msg}")
+        }
+        other => panic!("expected Codec error, got {other:?}"),
+    }
+}
+
+#[test]
+fn prop_truncated_frames_fail_cleanly() {
+    setup();
+    // Every strict prefix of a valid encoding must error (never panic,
+    // never decode to a wrong value) — for both raw Wire types and
+    // registry-framed objects.
+    forall("truncated Message decode fails", 60, |g| {
+        let bytes = to_bytes(&Message::data(gen_pi(g)));
+        let cut = g.usize_in(0, bytes.len() - 1);
+        from_bytes::<Message>(&bytes[..cut]).is_err()
+    });
+    forall("truncated object frame fails", 60, |g| {
+        let bytes = encode_object(&gen_mandelbrot(g)).unwrap();
+        let cut = g.usize_in(0, bytes.len() - 1);
+        decode_object(&bytes[..cut]).is_err()
+    });
+}
+
+#[test]
+fn prop_trailing_garbage_rejected() {
+    setup();
+    forall("trailing bytes rejected", 60, |g| {
+        let mut bytes = to_bytes(&gen_value(g));
+        bytes.push((g.u64() % 256) as u8);
+        from_bytes::<Value>(&bytes).is_err()
+    });
+    let mut bytes = encode_object(&PiData::default()).unwrap();
+    bytes.push(0);
+    assert!(decode_object(&bytes).is_err());
+}
