@@ -10,66 +10,18 @@
 //! Results are also written to `BENCH_csp.json` (override the path with
 //! `GPP_BENCH_JSON`) so future PRs have a perf trajectory to compare
 //! against. The acceptance bar for the transport refactor is the
-//! `pipeline_speedup_buffered_vs_rendezvous` derived value ≥ 2.
+//! `buffered_over_rendezvous_speedup` derived value ≥ 2.
 
 use gpp::csp::barrier::Barrier;
-use gpp::csp::channel::{buffered_channel, channel, In, Out};
+use gpp::csp::channel::{buffered_channel, channel};
 use gpp::csp::executor::{Executor, PooledExecutor, ThreadPerProcess};
 use gpp::csp::process::{CSProcess, ProcessFn};
 use gpp::csp::RuntimeConfig;
+use gpp::harness::micro::{pipeline_run, record_csp_rows};
 use gpp::harness::BenchJson;
 use gpp::patterns::DataParallelCollect;
 use gpp::util::bench::{black_box, fmt_time, Bench};
 use gpp::workloads::montecarlo::{PiData, PiResults};
-
-/// Drive `n_msgs` u64 values through a 4-edge relay pipeline (source →
-/// 3 relays → sink); returns elapsed seconds. The relays use batched
-/// take/put, which is a no-op win on rendezvous (each take still
-/// completes one handshake) and the whole point on buffered edges.
-fn pipeline_run(n_msgs: u64, mk: &dyn Fn(&str) -> (Out<u64>, In<u64>)) -> f64 {
-    const STAGES: usize = 3;
-    let (src_tx, mut up_rx) = mk("pipe.0");
-    let mut relays = Vec::new();
-    for s in 0..STAGES {
-        let (tx, rx) = mk(&format!("pipe.{}", s + 1));
-        let up = up_rx;
-        relays.push(std::thread::spawn(move || loop {
-            let vs = up.read_batch(64).unwrap();
-            let done = vs.last() == Some(&u64::MAX);
-            tx.write_batch(vs).unwrap();
-            if done {
-                break;
-            }
-        }));
-        up_rx = rx;
-    }
-    let sink_rx = up_rx;
-    let sink = std::thread::spawn(move || {
-        let mut count = 0u64;
-        'outer: loop {
-            for v in sink_rx.read_batch(64).unwrap() {
-                if v == u64::MAX {
-                    break 'outer;
-                }
-                count += 1;
-            }
-        }
-        count
-    });
-
-    let t0 = std::time::Instant::now();
-    for i in 0..n_msgs {
-        src_tx.write(i).unwrap();
-    }
-    src_tx.write(u64::MAX).unwrap();
-    let count = sink.join().unwrap();
-    let secs = t0.elapsed().as_secs_f64();
-    assert_eq!(count, n_msgs);
-    for r in relays {
-        r.join().unwrap();
-    }
-    secs
-}
 
 /// Spawn `n` trivial processes on the given executor; returns seconds.
 fn executor_run(n: usize, exec: &dyn Executor) -> f64 {
@@ -185,18 +137,14 @@ fn main() {
         let buf = (0..3)
             .map(|_| pipeline_run(n_msgs, &|n| buffered_channel::<u64>(n, 256)))
             .fold(f64::INFINITY, f64::min);
-        let speedup = rdv / buf.max(1e-12);
+        // Canonical row names shared with `gpp bench` and t01 (every
+        // BENCH_csp.json producer emits the same trajectory rows).
+        let speedup = record_csp_rows(&mut json, n_msgs, rdv, buf);
         println!(
             "pipeline x{n_msgs} msgs  rendezvous {}  buffered {}  speedup {speedup:.1}x",
             fmt_time(rdv),
             fmt_time(buf)
         );
-        json.add("pipeline_rendezvous", rdv);
-        json.add("pipeline_buffered", buf);
-        json.add_derived("pipeline_msgs", n_msgs as f64);
-        json.add_derived("pipeline_msgs_per_sec_rendezvous", n_msgs as f64 / rdv);
-        json.add_derived("pipeline_msgs_per_sec_buffered", n_msgs as f64 / buf);
-        json.add_derived("pipeline_speedup_buffered_vs_rendezvous", speedup);
     }
 
     // Executor comparison: 256 short-lived processes, thread-per-process
@@ -248,10 +196,16 @@ fn main() {
         json.add("farm_overhead_buffered", t);
     }
 
-    let path = std::env::var("GPP_BENCH_JSON").unwrap_or_else(|_| "BENCH_csp.json".to_string());
-    match json.write(&path) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
+    // `GPP_BENCH_JSON` still overrides with an explicit path; the
+    // default now resolves at the repo root regardless of CWD, so the
+    // perf trajectory always lands in one place.
+    let result = match std::env::var("GPP_BENCH_JSON") {
+        Ok(path) => json.write(&path).map(|()| std::path::PathBuf::from(path)),
+        Err(_) => json.write_at_root("BENCH_csp.json"),
+    };
+    match result {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_csp.json: {e}"),
     }
     b.finish();
 }

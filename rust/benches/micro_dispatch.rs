@@ -1,0 +1,82 @@
+//! Microbenchmarks of the method-dispatch hot path — the third layer
+//! of the throughput overhaul.
+//!
+//! Every `Worker`/`Emit`/`Collect` message used to pay a string-named
+//! lookup (`obj.call(&function, …)`: a method-name comparison cascade)
+//! per message. Those processes now resolve the name once to a
+//! [`gpp::data::object::MethodHandle`] and dispatch by index. Measured
+//! here: the raw call paths head to head, the handle's class-switch
+//! revalidation cost, and a zero-work farm on both paths. Written to
+//! `BENCH_dispatch.json` at the repo root.
+
+use gpp::data::object::{MethodHandle, Params, Value};
+use gpp::harness::micro::{dispatch_run, record_dispatch_rows, DispatchProbe};
+use gpp::harness::BenchJson;
+use gpp::util::bench::{black_box, fmt_time, Bench};
+
+fn main() {
+    gpp::workloads::register_all();
+    let mut b = Bench::new("method dispatch");
+    let mut json = BenchJson::new("micro_dispatch");
+
+    let calls: u64 = std::env::var("GPP_DISPATCH_CALLS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+
+    // Head to head: the reflective string path vs the interned handle.
+    let string = (0..3)
+        .map(|_| dispatch_run(calls, false))
+        .fold(f64::INFINITY, f64::min);
+    let interned = (0..3)
+        .map(|_| dispatch_run(calls, true))
+        .fold(f64::INFINITY, f64::min);
+    // Canonical row names shared with `gpp bench`.
+    let speedup = record_dispatch_rows(&mut json, calls, string, interned);
+    println!(
+        "dispatch x{calls}: string {}  interned {}  speedup {speedup:.2}x",
+        fmt_time(string),
+        fmt_time(interned)
+    );
+
+    // Worst case for the handle: the class changes on every call, so
+    // every invoke revalidates and re-resolves.
+    {
+        let mut a = DispatchProbe::default();
+        let mut pi = gpp::workloads::montecarlo::PiData::default();
+        let params = Params::of(vec![Value::Int(1)]);
+        let mut handle = MethodHandle::new("accumulate");
+        let s = b.bench("handle revalidation (class flip per call)", || {
+            let _ = black_box(handle.invoke(&mut a, &params, None));
+            // PiData has no "accumulate": the handle falls back to the
+            // string path after re-resolving — the pathological case.
+            let _ = black_box(handle.invoke(&mut pi, &params, None));
+        });
+        json.add("handle_class_flip_pair", s.median);
+    }
+
+    // End to end: a zero-work farm where the only difference is how the
+    // worker dispatches its function — the Worker now resolves once, so
+    // this row tracks the integrated win.
+    {
+        use gpp::patterns::DataParallelCollect;
+        use gpp::workloads::montecarlo::{PiData, PiResults};
+        let (_, t) = b.bench_once("farm 512 items x 2 workers (cached dispatch)", || {
+            DataParallelCollect::new(
+                PiData::emit_details(512, 0),
+                PiResults::result_details(),
+                2,
+                "getWithin",
+            )
+            .run_network()
+            .unwrap();
+        });
+        json.add("farm_overhead_cached_dispatch", t);
+    }
+
+    match json.write_at_root("BENCH_dispatch.json") {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_dispatch.json: {e}"),
+    }
+    b.finish();
+}

@@ -7,7 +7,7 @@
 //! (b) real wall-clock on this host for a reduced sweep (recorded for
 //!     honesty — on a 1-core CI box speedup ≈ 1).
 
-use gpp::harness::EffTable;
+use gpp::harness::{BenchJson, EffTable};
 use gpp::sim::{calibrate, sim_farm, sim_sequential, MachineConfig};
 use gpp::util::bench::fmt_time;
 
@@ -78,6 +78,23 @@ fn main() {
     // cannot deadlock — see ARCHITECTURE.md).
     println!("\n-- transport/executor configs (64 instances, 2 workers) --");
     use gpp::csp::RuntimeConfig;
+    let mut json = BenchJson::new("t01 montecarlo: substrate configs (64 instances, 2 workers)");
+    // Canonical BENCH_csp.json trajectory rows first (shared with
+    // `gpp bench` and micro_csp): whichever bench writes the file
+    // last, the documented pipeline rows survive.
+    {
+        use gpp::csp::channel::{buffered_channel, channel};
+        use gpp::harness::micro::{pipeline_run, record_csp_rows};
+        let n: u64 = 20_000;
+        let rdv = (0..3)
+            .map(|_| pipeline_run(n, &|_n| channel::<u64>()))
+            .fold(f64::INFINITY, f64::min);
+        let buf = (0..3)
+            .map(|_| pipeline_run(n, &|nm| buffered_channel::<u64>(nm, 256)))
+            .fold(f64::INFINITY, f64::min);
+        record_csp_rows(&mut json, n, rdv, buf);
+    }
+    json.add("sequential_64_instances", seq_t);
     let configs: [(&str, RuntimeConfig); 3] = [
         ("rendezvous + threads", RuntimeConfig::default()),
         ("buffered(256) + threads", RuntimeConfig::buffered(256)),
@@ -94,6 +111,16 @@ fn main() {
         .with_config(cfg)
         .run_network()
         .unwrap();
-        println!("{name:<28} {}", fmt_time(t0.elapsed().as_secs_f64()));
+        let t = t0.elapsed().as_secs_f64();
+        println!("{name:<28} {}", fmt_time(t));
+        json.add(name, t);
+        json.add_derived(
+            &format!("instances_per_sec [{name}]"),
+            64.0 / t.max(1e-12),
+        );
+    }
+    match json.write_at_root("BENCH_csp.json") {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_csp.json: {e}"),
     }
 }

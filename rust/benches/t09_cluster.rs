@@ -184,6 +184,31 @@ fn main() {
         json.add("concordance cluster loopback 2 nodes", secs);
     }
 
-    json.write("BENCH_net.json").expect("write BENCH_net.json");
-    println!("\nwrote BENCH_net.json");
+    // The credit-window trajectory: one raw loopback net edge at the
+    // per-message-ACK baseline (window 1, the pre-overhaul protocol,
+    // still speakable bit-for-bit) vs the capacity-sized window. This
+    // is the row CI's bench-smoke gate asserts >= 2x on.
+    println!("\n-- net edge: per-message ACK vs credit window --");
+    {
+        use gpp::harness::micro::{net_edge_run, record_net_window_rows};
+        let msgs = 20_000u64;
+        let cap = 16usize;
+        let ack = (0..3)
+            .map(|_| net_edge_run(msgs, cap, 1))
+            .fold(f64::INFINITY, f64::min);
+        let win = (0..3)
+            .map(|_| net_edge_run(msgs, cap, cap as u32))
+            .fold(f64::INFINITY, f64::min);
+        // Canonical row names shared with `gpp bench` so the
+        // trajectory rows stay comparable across producers and PRs.
+        let speedup = record_net_window_rows(&mut json, msgs, cap, ack, win);
+        println!(
+            "window=1 {:.0} msgs/s   window={cap} {:.0} msgs/s   speedup {speedup:.1}x",
+            msgs as f64 / ack,
+            msgs as f64 / win
+        );
+    }
+
+    let path = json.write_at_root("BENCH_net.json").expect("write BENCH_net.json");
+    println!("\nwrote {}", path.display());
 }

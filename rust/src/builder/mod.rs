@@ -10,7 +10,7 @@
 //!
 //! ```text
 //! # Monte-Carlo farm, paper Listing 2
-//! config    transport=buffered capacity=64 executor=pooled:4
+//! config    transport=buffered capacity=64 executor=pooled:4 window=16 nodelay=on
 //! emit      class=piData init=initClass(12) create=createInstance(300)
 //! fanAny    destinations=3
 //! group     workers=3 function=getWithin
@@ -638,6 +638,12 @@ pub fn parse_network(text: &str) -> Result<NetworkSpec> {
                     spec.config.executor = ExecutorKind::parse(e).ok_or_else(|| {
                         NetworkSpec::err(format!("line {}: unknown executor '{e}'", lineno + 1))
                     })?;
+                }
+                if kvs.contains_key("window") {
+                    spec.config.net = spec.config.net.with_window(usize_at("window")? as u32);
+                }
+                if let Some(v) = kvs.get("nodelay") {
+                    spec.config.net = spec.config.net.with_nodelay(v != "off" && v != "false");
                 }
             }
             "emit" | "emitLocal" => {

@@ -107,6 +107,22 @@ impl RuntimeConfig {
         self
     }
 
+    /// Override the credit window of net edges (how many DATA frames a
+    /// writer streams ahead of the reader's credit grants). Default:
+    /// the channel capacity. `1` restores the per-message DATA→ACK
+    /// rendezvous, byte-identical on the wire.
+    pub fn with_window(mut self, window: u32) -> Self {
+        self.net = self.net.with_window(window);
+        self
+    }
+
+    /// Toggle `TCP_NODELAY` on net-edge and cluster sockets (default
+    /// on).
+    pub fn with_nodelay(mut self, on: bool) -> Self {
+        self.net = self.net.with_nodelay(on);
+        self
+    }
+
     /// Inject a scripted fault plan into the buffered / net / sim edges
     /// this config builds (tests; `None` in production).
     pub fn with_faults(mut self, faults: Arc<FaultPlan>) -> Self {

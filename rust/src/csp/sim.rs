@@ -829,6 +829,11 @@ impl<T: Send> Transport<T> for SimCore<T> {
             taken: ch.taken.len(),
             alt_waiters: ch.alt_waiters.len(),
             blocked_writers: ch.blocked_writers.len(),
+            waiting_readers: ch.blocked_readers.len(),
+            waiting_writers: ch.blocked_writers.len(),
+            // The sim kernel parks processes itself — no condvars, so
+            // no notifications exist to skip.
+            notifies_skipped: 0,
         }
     }
 }

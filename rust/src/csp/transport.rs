@@ -174,31 +174,126 @@ impl FaultPlan {
 /// Alt-registration store shared by every transport: registering
 /// purges tokens whose Alt has moved on (selected another channel and
 /// dropped its signal) so idle channels don't grow; firing drains all.
-pub(crate) struct AltWaiters(Vec<Weak<AltSignal>>);
+///
+/// The purge is **amortized**: scanning for dead `Weak`s on every
+/// register made registration O(n) on hot Alt loops, so the scan now
+/// runs only once the list reaches a high-water mark, which then moves
+/// to twice the surviving population (classic doubling: total purge
+/// work stays linear in registrations). The list is still bounded —
+/// at most `2 × live + ε` entries between purges.
+pub(crate) struct AltWaiters {
+    sigs: Vec<Weak<AltSignal>>,
+    /// Purge when `sigs` reaches this length.
+    purge_at: usize,
+}
+
+/// Initial high-water mark for the amortized dead-`Weak` purge.
+const ALT_PURGE_FLOOR: usize = 8;
 
 impl AltWaiters {
     pub(crate) fn new() -> Self {
-        AltWaiters(Vec::new())
+        AltWaiters {
+            sigs: Vec::new(),
+            purge_at: ALT_PURGE_FLOOR,
+        }
     }
 
     pub(crate) fn len(&self) -> usize {
-        self.0.len()
+        self.sigs.len()
     }
 
     pub(crate) fn register(&mut self, sig: &Arc<AltSignal>) {
-        self.0.retain(|w| w.strong_count() > 0);
-        self.0.push(Arc::downgrade(sig));
+        if self.sigs.len() >= self.purge_at {
+            self.sigs.retain(|w| w.strong_count() > 0);
+            self.purge_at = (self.sigs.len() * 2).max(ALT_PURGE_FLOOR);
+        }
+        self.sigs.push(Arc::downgrade(sig));
     }
 
     pub(crate) fn fire_all(&mut self) {
-        if self.0.is_empty() {
+        if self.sigs.is_empty() {
             return;
         }
-        for w in std::mem::take(&mut self.0) {
+        for w in std::mem::take(&mut self.sigs) {
             if let Some(sig) = w.upgrade() {
                 sig.fire();
             }
         }
+    }
+}
+
+/// A [`Condvar`] with the waiter-count notify gate built in — shared
+/// by [`BufferedCore`] and [`crate::csp::channel::ChannelCore`] so the
+/// gate's lost-wakeup argument lives in exactly one place.
+///
+/// Safety argument: the waiter count passed to the `notify_*_gated`
+/// methods and mutated by [`GatedCond::wait_counted`] must live inside
+/// the same `Mutex` the condvar is used with. A thread that is about
+/// to wait holds that lock from its state check through the count
+/// increment into the wait itself (`Condvar::wait` releases the lock
+/// atomically), and a woken thread decrements, re-checks and
+/// re-increments without ever releasing the lock in between — so a
+/// notifier holding the lock and seeing `waiters == 0` is *proof* that
+/// no thread is parked or committed to parking on this condvar, and
+/// the elided syscall can never lose a wakeup.
+pub(crate) struct GatedCond {
+    cond: Condvar,
+    /// Notifications elided because the waiter count was zero.
+    skipped: AtomicU64,
+}
+
+impl GatedCond {
+    pub(crate) fn new() -> Self {
+        Self {
+            cond: Condvar::new(),
+            skipped: AtomicU64::new(0),
+        }
+    }
+
+    /// Wake one waiter — or skip (and count) the syscall when none waits.
+    pub(crate) fn notify_one_gated(&self, waiters: usize) {
+        if waiters > 0 {
+            self.cond.notify_one();
+        } else {
+            self.skipped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Wake every waiter — or skip (and count) the syscall when none
+    /// waits. Used where wakeups are waiter-specific (tickets, write
+    /// ids): woken non-owners re-check and re-sleep.
+    pub(crate) fn notify_all_gated(&self, waiters: usize) {
+        if waiters > 0 {
+            self.cond.notify_all();
+        } else {
+            self.skipped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Wake every waiter iff any is parked (teardown paths, where an
+    /// elision is not a meaningful perf statistic).
+    pub(crate) fn notify_all_if_waiting(&self, waiters: usize) {
+        if waiters > 0 {
+            self.cond.notify_all();
+        }
+    }
+
+    /// Park on the condvar with the waiter count maintained strictly
+    /// under the lock (see the type docs for why that suffices).
+    pub(crate) fn wait_counted<'a, T>(
+        &self,
+        mut g: std::sync::MutexGuard<'a, T>,
+        counter: fn(&mut T) -> &mut usize,
+    ) -> std::sync::MutexGuard<'a, T> {
+        *counter(&mut g) += 1;
+        let mut g = self.cond.wait(g).unwrap();
+        *counter(&mut g) -= 1;
+        g
+    }
+
+    /// Notifications elided so far.
+    pub(crate) fn skipped(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
     }
 }
 
@@ -210,10 +305,19 @@ pub struct TransportStats {
     /// Rendezvous bookkeeping entries awaiting their writer (always 0
     /// for buffered transports).
     pub taken: usize,
-    /// Registered Alt wakeup tokens (dead ones are purged on register).
+    /// Registered Alt wakeup tokens (dead ones are purged on register,
+    /// amortized).
     pub alt_waiters: usize,
     /// Writers currently blocked in `write`.
     pub blocked_writers: usize,
+    /// Threads currently parked in a read-side condvar wait.
+    pub waiting_readers: usize,
+    /// Threads currently parked in a write-side condvar wait.
+    pub waiting_writers: usize,
+    /// Condvar notifications elided because no thread was waiting on
+    /// the other side (the §Perf waiter-count gate): each one is a
+    /// futex syscall the old unconditional-notify code would have paid.
+    pub notifies_skipped: u64,
 }
 
 /// What `In`/`Out` dispatch to. One implementation per transport.
@@ -303,6 +407,13 @@ struct BufInner<T> {
     /// poison path never advances `serving`, so without this count
     /// `stats().blocked_writers` would report phantom writers forever).
     aborted: u64,
+    /// Threads currently parked in a condvar wait on `read_cond` /
+    /// `write_cond`. Maintained strictly under the lock, so a notify
+    /// gated on "count > 0" can never lose a wakeup: a thread that is
+    /// about to wait holds the lock from its state check through the
+    /// count increment into the wait itself.
+    waiting_readers: usize,
+    waiting_writers: usize,
     poisoned: bool,
     alt_waiters: AltWaiters,
 }
@@ -314,9 +425,9 @@ pub struct BufferedCore<T> {
     capacity: usize,
     inner: Mutex<BufInner<T>>,
     /// Readers wait here for a value to arrive.
-    read_cond: Condvar,
+    read_cond: GatedCond,
     /// Writers wait here for space (and for their ticket to come up).
-    write_cond: Condvar,
+    write_cond: GatedCond,
     /// Scripted deterministic faults (None in production).
     faults: Option<Arc<FaultPlan>>,
 }
@@ -340,11 +451,13 @@ impl<T> BufferedCore<T> {
                 next_ticket: 0,
                 serving: 0,
                 aborted: 0,
+                waiting_readers: 0,
+                waiting_writers: 0,
                 poisoned: false,
                 alt_waiters: AltWaiters::new(),
             }),
-            read_cond: Condvar::new(),
-            write_cond: Condvar::new(),
+            read_cond: GatedCond::new(),
+            write_cond: GatedCond::new(),
             faults,
         })
     }
@@ -360,6 +473,33 @@ impl<T> BufferedCore<T> {
             Transport::<T>::poison(self);
         }
         Some(action)
+    }
+
+    /// Wake one parked reader — or skip the syscall when none waits.
+    fn notify_reader(&self, g: &BufInner<T>) {
+        self.read_cond.notify_one_gated(g.waiting_readers);
+    }
+
+    /// Wake the parked writers (tickets are writer-specific, so every
+    /// holder must recheck) — or skip the syscall when none waits.
+    fn notify_writers(&self, g: &BufInner<T>) {
+        self.write_cond.notify_all_gated(g.waiting_writers);
+    }
+
+    /// Park on `read_cond` with the waiter count maintained.
+    fn wait_reader<'a>(
+        &self,
+        g: std::sync::MutexGuard<'a, BufInner<T>>,
+    ) -> std::sync::MutexGuard<'a, BufInner<T>> {
+        self.read_cond.wait_counted(g, |i| &mut i.waiting_readers)
+    }
+
+    /// Park on `write_cond` with the waiter count maintained.
+    fn wait_writer<'a>(
+        &self,
+        g: std::sync::MutexGuard<'a, BufInner<T>>,
+    ) -> std::sync::MutexGuard<'a, BufInner<T>> {
+        self.write_cond.wait_counted(g, |i| &mut i.waiting_writers)
     }
 }
 
@@ -382,24 +522,48 @@ impl<T: Send> Transport<T> for BufferedCore<T> {
                 // Do not advance `serving`: every writer queued behind us
                 // observes the poison and fails the same way.
                 g.aborted += 1;
-                self.write_cond.notify_all();
+                self.notify_writers(&g);
                 return Err(GppError::Poisoned);
             }
             if g.serving == ticket && g.queue.len() < self.capacity {
                 g.queue.push_back(value);
                 g.serving += 1;
-                self.read_cond.notify_one();
+                self.notify_reader(&g);
                 // Wake the next ticket holder (tickets are writer-specific;
                 // woken non-holders re-sleep).
-                self.write_cond.notify_all();
+                self.notify_writers(&g);
                 g.alt_waiters.fire_all();
                 return Ok(());
             }
-            g = self.write_cond.wait(g).unwrap();
+            g = self.wait_writer(g);
         }
     }
 
-    fn write_batch(&self, values: Vec<T>) -> Result<()> {
+    fn write_batch(&self, mut values: Vec<T>) -> Result<()> {
+        // Scripted faults count every value in the batch as one write
+        // operation, exactly as a loop of single writes would: values
+        // preceding a poison/fail fault are still delivered, and the
+        // poison side effect fires only after they are queued (outside
+        // the lock — `poison` re-enters it).
+        let mut pending: Option<(bool, GppError)> = None;
+        if let Some(fp) = &self.faults {
+            let mut kept = Vec::with_capacity(values.len());
+            for v in values {
+                match fp.apply(FaultOp::Write, &self.name) {
+                    None => kept.push(v),
+                    Some(FaultAction::Drop) => {}
+                    Some(FaultAction::Poison) => {
+                        pending = Some((true, GppError::Poisoned));
+                        break;
+                    }
+                    Some(FaultAction::Fail(msg)) => {
+                        pending = Some((false, GppError::Io(msg)));
+                        break;
+                    }
+                }
+            }
+            values = kept;
+        }
         let mut g = self.inner.lock().unwrap();
         if g.poisoned {
             return Err(GppError::Poisoned);
@@ -409,30 +573,39 @@ impl<T: Send> Transport<T> for BufferedCore<T> {
         while g.serving != ticket {
             if g.poisoned {
                 g.aborted += 1;
-                self.write_cond.notify_all();
+                self.notify_writers(&g);
                 return Err(GppError::Poisoned);
             }
-            g = self.write_cond.wait(g).unwrap();
+            g = self.wait_writer(g);
         }
         for v in values {
             loop {
                 if g.poisoned {
                     g.aborted += 1;
-                    self.write_cond.notify_all();
+                    self.notify_writers(&g);
                     return Err(GppError::Poisoned);
                 }
                 if g.queue.len() < self.capacity {
                     g.queue.push_back(v);
-                    self.read_cond.notify_one();
+                    self.notify_reader(&g);
                     g.alt_waiters.fire_all();
                     break;
                 }
-                g = self.write_cond.wait(g).unwrap();
+                g = self.wait_writer(g);
             }
         }
         g.serving += 1;
-        self.write_cond.notify_all();
-        Ok(())
+        self.notify_writers(&g);
+        drop(g);
+        match pending {
+            Some((poison, e)) => {
+                if poison {
+                    Transport::<T>::poison(self);
+                }
+                Err(e)
+            }
+            None => Ok(()),
+        }
     }
 
     fn read(&self) -> Result<T> {
@@ -444,20 +617,20 @@ impl<T: Send> Transport<T> for BufferedCore<T> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(v) = g.queue.pop_front() {
-                self.write_cond.notify_all();
+                self.notify_writers(&g);
                 return Ok(v);
             }
             if g.poisoned {
                 return Err(GppError::Poisoned);
             }
-            g = self.read_cond.wait(g).unwrap();
+            g = self.wait_reader(g);
         }
     }
 
     fn try_read(&self) -> Result<Option<T>> {
         let mut g = self.inner.lock().unwrap();
         if let Some(v) = g.queue.pop_front() {
-            self.write_cond.notify_all();
+            self.notify_writers(&g);
             return Ok(Some(v));
         }
         if g.poisoned {
@@ -473,13 +646,13 @@ impl<T: Send> Transport<T> for BufferedCore<T> {
             if !g.queue.is_empty() {
                 let n = g.queue.len().min(max);
                 let out: Vec<T> = g.queue.drain(..n).collect();
-                self.write_cond.notify_all();
+                self.notify_writers(&g);
                 return Ok(out);
             }
             if g.poisoned {
                 return Err(GppError::Poisoned);
             }
-            g = self.read_cond.wait(g).unwrap();
+            g = self.wait_reader(g);
         }
     }
 
@@ -500,14 +673,14 @@ impl<T: Send> Transport<T> for BufferedCore<T> {
                     out.push(g.queue.pop_front().unwrap());
                 }
                 if !out.is_empty() {
-                    self.write_cond.notify_all();
+                    self.notify_writers(&g);
                 }
                 return Ok(out);
             }
             if g.poisoned {
                 return Err(GppError::Poisoned);
             }
-            g = self.read_cond.wait(g).unwrap();
+            g = self.wait_reader(g);
         }
     }
 
@@ -531,8 +704,8 @@ impl<T: Send> Transport<T> for BufferedCore<T> {
             return;
         }
         g.poisoned = true;
-        self.read_cond.notify_all();
-        self.write_cond.notify_all();
+        self.read_cond.notify_all_if_waiting(g.waiting_readers);
+        self.write_cond.notify_all_if_waiting(g.waiting_writers);
         g.alt_waiters.fire_all();
     }
 
@@ -563,6 +736,9 @@ impl<T: Send> Transport<T> for BufferedCore<T> {
             taken: 0,
             alt_waiters: g.alt_waiters.len(),
             blocked_writers: (g.next_ticket - g.serving - g.aborted) as usize,
+            waiting_readers: g.waiting_readers,
+            waiting_writers: g.waiting_writers,
+            notifies_skipped: self.read_cond.skipped() + self.write_cond.skipped(),
         }
     }
 }
@@ -700,6 +876,55 @@ mod tests {
         // A post-poison failed write must not distort the count either.
         assert_eq!(tx.write(2), Err(GppError::Poisoned));
         assert_eq!(tx.stats().blocked_writers, 0);
+    }
+
+    #[test]
+    fn uncontended_traffic_skips_condvar_notifies() {
+        // Single-threaded write→read traffic: nobody ever waits on
+        // either condvar, so every notify the old code issued
+        // unconditionally must now be elided and counted.
+        let (tx, rx) = buffered_channel::<u32>("quiet", 8);
+        for i in 0..4 {
+            tx.write(i).unwrap(); // reader-notify + writer-notify skipped
+        }
+        for _ in 0..4 {
+            rx.read().unwrap(); // writer-notify skipped
+        }
+        let skipped = tx.stats().notifies_skipped;
+        // 4 writes × 2 elided notifies + 4 reads × 1 = 12.
+        assert_eq!(skipped, 12, "expected every notify elided, got {skipped}");
+        // Batched ops skip too.
+        tx.write_batch(vec![9, 10]).unwrap();
+        assert_eq!(rx.read_batch(4).unwrap(), vec![9, 10]);
+        assert!(tx.stats().notifies_skipped > skipped);
+    }
+
+    #[test]
+    fn notify_still_delivered_when_reader_waits() {
+        // The gate must never skip a needed wakeup: a parked reader is
+        // woken by the next write (this test hangs on regression).
+        let (tx, rx) = buffered_channel::<u32>("wake", 2);
+        let h = thread::spawn(move || rx.read());
+        // Spin until the reader is provably parked in the condvar wait.
+        while tx.stats().waiting_readers == 0 {
+            thread::yield_now();
+        }
+        tx.write(42).unwrap();
+        assert_eq!(h.join().unwrap().unwrap(), 42);
+    }
+
+    #[test]
+    fn notify_still_delivered_when_writer_waits() {
+        let (tx, rx) = buffered_channel::<u32>("wake.w", 1);
+        tx.write(1).unwrap(); // fill
+        let t2 = tx.clone();
+        let h = thread::spawn(move || t2.write(2));
+        while tx.stats().waiting_writers == 0 {
+            thread::yield_now();
+        }
+        assert_eq!(rx.read().unwrap(), 1); // must wake the parked writer
+        h.join().unwrap().unwrap();
+        assert_eq!(rx.read().unwrap(), 2);
     }
 
     #[test]

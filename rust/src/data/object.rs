@@ -192,10 +192,85 @@ pub trait DataObject: Send {
     /// Invoke the method exported as `method`.
     fn call(&mut self, method: &str, params: &Params, aux: Aux) -> Result<ReturnCode>;
 
+    /// Stable index of `method` in this class's dispatch table, or
+    /// `None` if the class has no indexed table. Resolved **once** per
+    /// (class, method) by [`MethodHandle`]; the returned index is only
+    /// meaningful for objects of the same class.
+    fn method_index(&self, _method: &str) -> Option<u32> {
+        None
+    }
+
+    /// Indexed dispatch fast path: invoke the method at the index
+    /// previously returned by [`DataObject::method_index`] — a couple
+    /// of integer compares instead of a string-match cascade per
+    /// message. Classes built with [`gpp_data_class!`] implement both;
+    /// the default refuses, so a class without a table can never be
+    /// called through a stale index.
+    fn call_indexed(&mut self, idx: u32, _params: &Params, _aux: Aux) -> Result<ReturnCode> {
+        Err(GppError::NoSuchMethod {
+            class: self.class_name().to_string(),
+            method: format!("#{idx}"),
+        })
+    }
+
     /// Value of a named property, for the logging system ("the user
     /// [specifies] the object property that is to be logged", §1).
     fn log_prop(&self, _name: &str) -> Option<Value> {
         None
+    }
+}
+
+/// A method name resolved once to an indexed dispatch handle — the
+/// per-message fast path for the functional processes.
+///
+/// The paper's processes dispatch every message through a string-named
+/// lookup (`obj.call(&function, …)`), which costs a method-name
+/// comparison cascade per message. A `MethodHandle` resolves the name
+/// against the first object's class and then calls by index; the
+/// resolution is revalidated only when an object of a *different*
+/// class arrives (cheap: a pointer comparison on the `&'static str`
+/// class name, falling back to one string compare). Heterogeneous
+/// streams therefore still work — they just re-resolve at each class
+/// boundary — and classes without an indexed table fall back to the
+/// reflective string path. The string-keyed class registry (`dName`
+/// reflection for the builder/DSL surface) is untouched.
+pub struct MethodHandle {
+    name: String,
+    /// Class the cached index belongs to ("" = not yet resolved).
+    class: &'static str,
+    idx: Option<u32>,
+}
+
+impl MethodHandle {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            class: "",
+            idx: None,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Invoke the handled method on `obj` (see type docs).
+    #[inline]
+    pub fn invoke(
+        &mut self,
+        obj: &mut dyn DataObject,
+        params: &Params,
+        aux: Aux,
+    ) -> Result<ReturnCode> {
+        let cls = obj.class_name();
+        if !std::ptr::eq(cls, self.class) && cls != self.class {
+            self.class = cls;
+            self.idx = obj.method_index(&self.name);
+        }
+        match self.idx {
+            Some(i) => obj.call_indexed(i, params, aux),
+            None => obj.call(&self.name, params, aux),
+        }
     }
 }
 
@@ -298,6 +373,42 @@ macro_rules! gpp_data_class {
                     }),
                 }
             }
+            fn method_index(&self, method: &str) -> Option<u32> {
+                // Resolved once per (class, method) by `MethodHandle`;
+                // a linear scan here is off the per-message path.
+                let _ = method;
+                let mut __i: u32 = 0;
+                $(
+                    if method == $m {
+                        return Some(__i);
+                    }
+                    __i += 1;
+                )*
+                let _ = __i;
+                None
+            }
+            fn call_indexed(
+                &mut self,
+                idx: u32,
+                params: &$crate::data::object::Params,
+                mut aux: $crate::data::object::Aux,
+            ) -> $crate::csp::error::Result<$crate::data::object::ReturnCode> {
+                // The per-message fast path: integer compares only (the
+                // optimizer folds the chain into a jump table).
+                let _ = (params, &mut aux);
+                let mut __i: u32 = 0;
+                $(
+                    if idx == __i {
+                        return self.$f(params, aux.take());
+                    }
+                    __i += 1;
+                )*
+                let _ = __i;
+                Err($crate::csp::error::GppError::NoSuchMethod {
+                    class: $name.to_string(),
+                    method: format!("#{idx}"),
+                })
+            }
             #[allow(unused_variables)]
             fn log_prop(&self, name: &str) -> Option<$crate::data::object::Value> {
                 $(
@@ -339,6 +450,111 @@ mod tests {
         "bump" => bump,
         "fail" => fail,
     }, props { "n" => |s| Value::Int(s.n) });
+
+    // A second class whose "bump" sits at a *different* index than
+    // Counter's, so the handle-revalidation test can prove a cached
+    // index is never applied across classes.
+    #[derive(Clone, Debug, Default)]
+    struct Shifted {
+        n: i64,
+    }
+
+    impl Shifted {
+        fn noop(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+            Ok(ReturnCode::CompletedOk)
+        }
+
+        fn bump(&mut self, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+            self.n += 10 * p.int(0)?;
+            Ok(ReturnCode::CompletedOk)
+        }
+    }
+
+    crate::gpp_data_class!(Shifted, "shifted", {
+        "noop" => noop,
+        "bump" => bump,
+    });
+
+    #[test]
+    fn indexed_dispatch_matches_string_dispatch() {
+        let mut c = Counter::default();
+        assert_eq!(c.method_index("bump"), Some(0));
+        assert_eq!(c.method_index("fail"), Some(1));
+        assert_eq!(c.method_index("nope"), None);
+        let idx = c.method_index("bump").unwrap();
+        c.call_indexed(idx, &Params::of(vec![Value::Int(5)]), None)
+            .unwrap();
+        assert_eq!(c.n, 5);
+        let err = c.call_indexed(9, &Params::empty(), None).unwrap_err();
+        assert!(matches!(err, GppError::NoSuchMethod { .. }));
+    }
+
+    #[test]
+    fn method_handle_caches_and_revalidates_across_classes() {
+        let mut handle = MethodHandle::new("bump");
+        let mut c = Counter::default();
+        let mut s = Shifted::default();
+        // Resolves against Counter (index 0)…
+        handle
+            .invoke(&mut c, &Params::of(vec![Value::Int(3)]), None)
+            .unwrap();
+        handle
+            .invoke(&mut c, &Params::of(vec![Value::Int(4)]), None)
+            .unwrap();
+        assert_eq!(c.n, 7);
+        // …then re-resolves when a different class arrives (index 1
+        // there): a stale Counter index would call `noop` instead.
+        handle
+            .invoke(&mut s, &Params::of(vec![Value::Int(2)]), None)
+            .unwrap();
+        assert_eq!(s.n, 20);
+        // And back again.
+        handle
+            .invoke(&mut c, &Params::of(vec![Value::Int(1)]), None)
+            .unwrap();
+        assert_eq!(c.n, 8);
+    }
+
+    #[test]
+    fn method_handle_falls_back_to_string_dispatch() {
+        // A method that exists only via `call` on a table-less class:
+        // the default `method_index` is None, so the handle uses the
+        // reflective path and still works.
+        struct Bare(i64);
+        impl DataObject for Bare {
+            fn class_name(&self) -> &'static str {
+                "bare"
+            }
+            fn as_any(&self) -> &dyn Any {
+                self
+            }
+            fn as_any_mut(&mut self) -> &mut dyn Any {
+                self
+            }
+            fn deep_clone(&self) -> Box<dyn DataObject> {
+                Box::new(Bare(self.0))
+            }
+            fn call(&mut self, method: &str, p: &Params, _aux: Aux) -> Result<ReturnCode> {
+                match method {
+                    "add" => {
+                        self.0 += p.int(0)?;
+                        Ok(ReturnCode::CompletedOk)
+                    }
+                    _ => Err(GppError::NoSuchMethod {
+                        class: "bare".into(),
+                        method: method.into(),
+                    }),
+                }
+            }
+        }
+        let mut handle = MethodHandle::new("add");
+        let mut b = Bare(1);
+        handle
+            .invoke(&mut b, &Params::of(vec![Value::Int(2)]), None)
+            .unwrap();
+        assert_eq!(b.0, 3);
+        assert!(b.method_index("add").is_none());
+    }
 
     #[test]
     fn string_dispatch_calls_method() {

@@ -1,0 +1,275 @@
+//! Shared micro-benchmark drivers for the three hot paths the
+//! throughput overhaul targets, used by both the `cargo bench` targets
+//! and the `gpp bench` CLI command (so CI's `bench-smoke` job and a
+//! developer at a prompt measure exactly the same thing):
+//!
+//! * [`pipeline_run`] — a 4-edge relay pipeline over any channel
+//!   constructor (rendezvous vs buffered: the CSP-core trajectory);
+//! * [`net_edge_run`] — one loopback net edge at a configurable credit
+//!   window (window 1 *is* the old ACK-per-message protocol, so
+//!   `net_edge_run(n, cap, 1)` vs `net_edge_run(n, cap, cap)` measures
+//!   exactly what the credit overhaul bought);
+//! * [`dispatch_run`] — string-named vs interned method dispatch on a
+//!   registered data class (the `MethodHandle` trajectory).
+//!
+//! All return elapsed seconds for `n` operations; callers derive
+//! msgs/sec and ns/op for the `BENCH_*.json` rows.
+
+use crate::csp::channel::{In, Out};
+use crate::data::object::{Aux, DataObject, MethodHandle, Params, ReturnCode, Value};
+use crate::harness::BenchJson;
+use crate::net::NetOptions;
+
+/// Drive `n_msgs` u64 values through a 4-edge relay pipeline (source →
+/// 3 relays → sink); returns elapsed seconds. The relays use batched
+/// take/put, which is a no-op win on rendezvous (each take still
+/// completes one handshake) and the whole point on buffered edges.
+pub fn pipeline_run(n_msgs: u64, mk: &dyn Fn(&str) -> (Out<u64>, In<u64>)) -> f64 {
+    const STAGES: usize = 3;
+    let (src_tx, mut up_rx) = mk("pipe.0");
+    let mut relays = Vec::new();
+    for s in 0..STAGES {
+        let (tx, rx) = mk(&format!("pipe.{}", s + 1));
+        let up = up_rx;
+        relays.push(std::thread::spawn(move || loop {
+            let vs = up.read_batch(64).unwrap();
+            let done = vs.last() == Some(&u64::MAX);
+            tx.write_batch(vs).unwrap();
+            if done {
+                break;
+            }
+        }));
+        up_rx = rx;
+    }
+    let sink_rx = up_rx;
+    let sink = std::thread::spawn(move || {
+        let mut count = 0u64;
+        'outer: loop {
+            for v in sink_rx.read_batch(64).unwrap() {
+                if v == u64::MAX {
+                    break 'outer;
+                }
+                count += 1;
+            }
+        }
+        count
+    });
+
+    let t0 = std::time::Instant::now();
+    for i in 0..n_msgs {
+        src_tx.write(i).unwrap();
+    }
+    src_tx.write(u64::MAX).unwrap();
+    let count = sink.join().unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(count, n_msgs);
+    for r in relays {
+        r.join().unwrap();
+    }
+    secs
+}
+
+/// Stream `n_msgs` u64 values across one loopback net edge of the
+/// given `capacity` and credit `window`; returns elapsed seconds.
+/// The writer runs on its own thread (as a process would); the caller's
+/// thread drains with batched takes. `window == 1` reproduces the old
+/// ACK-per-message protocol exactly — the baseline the credit window
+/// is measured against.
+pub fn net_edge_run(n_msgs: u64, capacity: usize, window: u32) -> f64 {
+    let opts = NetOptions::default().with_window(window);
+    let (tx, rx) = crate::net::transport::net_loopback_pair::<u64>("bench.net", capacity, &opts)
+        .expect("loopback net edge");
+    let t0 = std::time::Instant::now();
+    let writer = std::thread::spawn(move || {
+        let mut batch = Vec::with_capacity(64);
+        for i in 0..n_msgs {
+            batch.push(i);
+            if batch.len() == 64 {
+                tx.write_batch(std::mem::take(&mut batch)).unwrap();
+            }
+        }
+        if !batch.is_empty() {
+            tx.write_batch(batch).unwrap();
+        }
+    });
+    let mut got = 0u64;
+    while got < n_msgs {
+        got += rx.read_batch(64).unwrap().len() as u64;
+    }
+    writer.join().unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(got, n_msgs);
+    secs
+}
+
+/// Record the relay-pipeline comparison into `json` under the
+/// **canonical row names** (every producer of `BENCH_csp.json` —
+/// `gpp bench`, the micro_csp bench and the t01 table bench — goes
+/// through here, so whichever writer runs last, the file still
+/// carries the documented trajectory rows). Returns the
+/// buffered-over-rendezvous speedup.
+pub fn record_csp_rows(
+    json: &mut BenchJson,
+    msgs: u64,
+    rendezvous_secs: f64,
+    buffered_secs: f64,
+) -> f64 {
+    let speedup = rendezvous_secs / buffered_secs.max(1e-12);
+    json.add("pipeline_rendezvous", rendezvous_secs);
+    json.add("pipeline_buffered", buffered_secs);
+    json.add_derived("pipeline_msgs", msgs as f64);
+    json.add_derived("rendezvous_msgs_per_sec", msgs as f64 / rendezvous_secs.max(1e-12));
+    json.add_derived("buffered_msgs_per_sec", msgs as f64 / buffered_secs.max(1e-12));
+    json.add_derived("rendezvous_ns_per_op", rendezvous_secs * 1e9 / msgs as f64);
+    json.add_derived("buffered_ns_per_op", buffered_secs * 1e9 / msgs as f64);
+    json.add_derived("buffered_over_rendezvous_speedup", speedup);
+    speedup
+}
+
+/// Record the net-edge window comparison into `json` under the
+/// **canonical row names** ARCHITECTURE.md documents (every producer
+/// of `BENCH_net.json` — `gpp bench` and the t09 bench — goes through
+/// here, so the trajectory rows stay comparable across PRs). Returns
+/// the windowed-over-ack speedup, the `bench-smoke` gate value.
+pub fn record_net_window_rows(
+    json: &mut BenchJson,
+    msgs: u64,
+    capacity: usize,
+    ack_secs: f64,
+    windowed_secs: f64,
+) -> f64 {
+    let speedup = ack_secs / windowed_secs.max(1e-12);
+    json.add("net_edge_ack_per_message", ack_secs);
+    json.add("net_edge_credit_window", windowed_secs);
+    json.add_derived("net_msgs", msgs as f64);
+    json.add_derived("capacity", capacity as f64);
+    json.add_derived("ack_msgs_per_sec", msgs as f64 / ack_secs.max(1e-12));
+    json.add_derived("windowed_msgs_per_sec", msgs as f64 / windowed_secs.max(1e-12));
+    json.add_derived("ack_ns_per_op", ack_secs * 1e9 / msgs as f64);
+    json.add_derived("windowed_ns_per_op", windowed_secs * 1e9 / msgs as f64);
+    json.add_derived("windowed_over_ack_speedup", speedup);
+    speedup
+}
+
+/// Record the dispatch comparison under the canonical row names (both
+/// `gpp bench` and the micro_dispatch bench go through here). Returns
+/// the interned-over-string speedup.
+pub fn record_dispatch_rows(
+    json: &mut BenchJson,
+    calls: u64,
+    string_secs: f64,
+    interned_secs: f64,
+) -> f64 {
+    let speedup = string_secs / interned_secs.max(1e-12);
+    json.add("dispatch_string", string_secs);
+    json.add("dispatch_interned", interned_secs);
+    json.add_derived("dispatch_calls", calls as f64);
+    json.add_derived("string_calls_per_sec", calls as f64 / string_secs.max(1e-12));
+    json.add_derived("interned_calls_per_sec", calls as f64 / interned_secs.max(1e-12));
+    json.add_derived("string_ns_per_op", string_secs * 1e9 / calls as f64);
+    json.add_derived("interned_ns_per_op", interned_secs * 1e9 / calls as f64);
+    json.add_derived("interned_over_string_speedup", speedup);
+    speedup
+}
+
+/// A workload class with a realistically-sized method table: the hot
+/// method sits *last*, so string dispatch pays the full comparison
+/// cascade the way a user class with many exported methods would.
+#[derive(Clone, Debug, Default)]
+pub struct DispatchProbe {
+    pub acc: i64,
+}
+
+impl DispatchProbe {
+    fn init_class(&mut self, _p: &Params, _a: Aux) -> crate::csp::error::Result<ReturnCode> {
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn create_instance(&mut self, _p: &Params, _a: Aux) -> crate::csp::error::Result<ReturnCode> {
+        Ok(ReturnCode::NormalContinuation)
+    }
+
+    fn reset(&mut self, _p: &Params, _a: Aux) -> crate::csp::error::Result<ReturnCode> {
+        self.acc = 0;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn scale(&mut self, p: &Params, _a: Aux) -> crate::csp::error::Result<ReturnCode> {
+        self.acc *= p.int(0)?;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn finalise(&mut self, _p: &Params, _a: Aux) -> crate::csp::error::Result<ReturnCode> {
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    fn accumulate(&mut self, p: &Params, _a: Aux) -> crate::csp::error::Result<ReturnCode> {
+        self.acc = self.acc.wrapping_add(p.int(0)?);
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+crate::gpp_data_class!(DispatchProbe, "dispatchProbe", {
+    "initClass" => init_class,
+    "createInstance" => create_instance,
+    "reset" => reset,
+    "scale" => scale,
+    "finalise" => finalise,
+    "accumulate" => accumulate,
+}, props { "acc" => |s| Value::Int(s.acc) });
+
+/// Invoke `accumulate` `n_calls` times through the reflective string
+/// path (`interned == false`) or a resolved [`MethodHandle`]
+/// (`interned == true`); returns elapsed seconds.
+pub fn dispatch_run(n_calls: u64, interned: bool) -> f64 {
+    let mut probe = DispatchProbe::default();
+    let params = Params::of(vec![Value::Int(3)]);
+    let obj: &mut dyn DataObject = &mut probe;
+    let t0 = std::time::Instant::now();
+    if interned {
+        let mut handle = MethodHandle::new("accumulate");
+        for _ in 0..n_calls {
+            handle.invoke(&mut *obj, &params, None).unwrap();
+        }
+    } else {
+        for _ in 0..n_calls {
+            obj.call("accumulate", &params, None).unwrap();
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    assert!(obj.log_prop("acc").is_some());
+    secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::channel::{buffered_channel, channel};
+
+    #[test]
+    fn pipeline_driver_delivers_everything() {
+        assert!(pipeline_run(200, &|_n| channel::<u64>()) > 0.0);
+        assert!(pipeline_run(200, &|n| buffered_channel::<u64>(n, 32)) > 0.0);
+    }
+
+    #[test]
+    fn net_driver_runs_both_protocols() {
+        // window 1 (old ACK protocol) and windowed both deliver.
+        assert!(net_edge_run(100, 8, 1) > 0.0);
+        assert!(net_edge_run(100, 8, 8) > 0.0);
+    }
+
+    #[test]
+    fn dispatch_paths_agree() {
+        assert!(dispatch_run(1000, false) > 0.0);
+        assert!(dispatch_run(1000, true) > 0.0);
+        // Both paths invoke the same method: equal results.
+        let mut a = DispatchProbe::default();
+        let p = Params::of(vec![Value::Int(5)]);
+        let mut h = MethodHandle::new("accumulate");
+        h.invoke(&mut a, &p, None).unwrap();
+        let mut b = DispatchProbe::default();
+        b.call("accumulate", &p, None).unwrap();
+        assert_eq!(a.acc, b.acc);
+    }
+}

@@ -1,9 +1,10 @@
 //! Experiment harness: wall-clock sweeps, speedup/efficiency tables in
 //! the paper's format, and markdown rendering for EXPERIMENTS.md.
 
+pub mod micro;
 pub mod tables;
 
-pub use tables::{BenchJson, EffTable, Row};
+pub use tables::{bench_json_looks_valid, bench_root_path, BenchJson, EffTable, Row};
 
 use std::time::Instant;
 

@@ -174,6 +174,49 @@ impl BenchJson {
     pub fn write(&self, path: &str) -> std::io::Result<()> {
         std::fs::write(path, self.render())
     }
+
+    /// Write `file` at the repo root (see [`bench_root_path`]) so the
+    /// perf trajectory lands in one stable place no matter which
+    /// working directory the bench or CLI ran from. Returns the path
+    /// written.
+    pub fn write_at_root(&self, file: &str) -> std::io::Result<std::path::PathBuf> {
+        let path = bench_root_path(file);
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
+/// Resolve a `BENCH_*.json` file name at the repository root.
+/// Precedence: `GPP_BENCH_DIR` (explicit override) → the crate's
+/// compile-time manifest directory *if it still exists at runtime*
+/// (the `cargo bench` / in-checkout `gpp bench` case, independent of
+/// CWD) → the current directory (a relocated/installed binary, where
+/// the build path means nothing).
+pub fn bench_root_path(file: &str) -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("GPP_BENCH_DIR") {
+        if !dir.is_empty() {
+            return std::path::Path::new(&dir).join(file);
+        }
+    }
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    if manifest.is_dir() {
+        manifest.join(file)
+    } else {
+        std::path::PathBuf::from(file)
+    }
+}
+
+/// Cheap structural check that a written `BENCH_*.json` is well-formed
+/// (the hand-rolled writer has no parser to round-trip through): the
+/// required keys exist and braces/brackets balance. CI's `bench-smoke`
+/// job fails the build on a miss.
+pub fn bench_json_looks_valid(text: &str) -> bool {
+    text.trim_start().starts_with('{')
+        && text.contains("\"bench\"")
+        && text.contains("\"results\"")
+        && text.contains("\"derived\"")
+        && text.matches('{').count() == text.matches('}').count()
+        && text.matches('[').count() == text.matches(']').count()
 }
 
 #[cfg(test)]
@@ -201,6 +244,23 @@ mod tests {
         assert!(j.render().contains("\"results\": [\n  ]"));
         j.add("inf", f64::INFINITY);
         assert!(j.render().contains("\"seconds\": null"));
+    }
+
+    #[test]
+    fn bench_json_validity_check() {
+        let mut j = BenchJson::new("v");
+        j.add("x", 1.0);
+        j.add_derived("d", 2.0);
+        assert!(bench_json_looks_valid(&j.render()));
+        assert!(!bench_json_looks_valid(""));
+        assert!(!bench_json_looks_valid("{\"bench\": \"v\""));
+    }
+
+    #[test]
+    fn bench_root_path_is_stable() {
+        let p = bench_root_path("BENCH_x.json");
+        assert!(p.ends_with("BENCH_x.json"));
+        assert!(p.is_absolute());
     }
 
     #[test]

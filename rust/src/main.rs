@@ -18,8 +18,10 @@ use gpp::verify::models::{set_model_n, BaseModel};
 use gpp::verify::laws::GopPogModel;
 use gpp::{ExecutorKind, RuntimeConfig, TransportKind};
 
-/// Shared substrate flags: `--transport rendezvous|buffered`,
-/// `--capacity N`, `--executor threads|pooled|pooled:N`.
+/// Shared substrate flags: `--transport rendezvous|buffered|net`,
+/// `--capacity N`, `--executor threads|pooled|pooled:N`, `--window N`
+/// (net credit window; default = capacity; 1 = per-message ACK),
+/// `--nodelay on|off` (TCP_NODELAY on net/cluster sockets; default on).
 fn config_from_args(args: &Args) -> RuntimeConfig {
     let mut cfg = RuntimeConfig::default();
     if let Some(t) = args.get("transport") {
@@ -35,6 +37,10 @@ fn config_from_args(args: &Args) -> RuntimeConfig {
             None => eprintln!("gpp: unknown --executor '{e}', using {}", cfg.executor),
         }
     }
+    if args.get("window").is_some() {
+        cfg = cfg.with_window(args.usize("window", 0) as u32);
+    }
+    cfg = cfg.with_nodelay(args.bool("nodelay", true));
     cfg
 }
 
@@ -105,6 +111,7 @@ fn main() {
         "cluster-worker" => cmd_cluster_worker(&args),
         "verify" => cmd_verify(&args),
         "calibrate" => cmd_calibrate(),
+        "bench" => cmd_bench(&args),
         "logdemo" => cmd_logdemo(&args),
         _ => {
             print!("{}", HELP);
@@ -133,6 +140,11 @@ COMMANDS
   cluster-worker     join a host, run its job [--join A --timeout-ms T]
   verify [which]     run FDR-style assertions: base | gop-pog | extracted | all (default all)
   calibrate          measure per-item workload costs on this host
+  bench              hot-path micro benches; writes BENCH_csp.json, BENCH_net.json and
+                     BENCH_dispatch.json at the repo root
+                     [--msgs N --capacity C --smoke --min-speedup X]
+                     (--smoke fails unless windowed net throughput >= X times the
+                      per-message-ACK baseline and every BENCH file is well-formed)
   logdemo            logged concordance run + bottleneck report (paper Sec 8)
 
 SUBSTRATE FLAGS (pi, mandelbrot, concordance; or a `config` line in .gpp files)
@@ -140,6 +152,9 @@ SUBSTRATE FLAGS (pi, mandelbrot, concordance; or a `config` line in .gpp files)
                                        net = every edge over loopback TCP)
   --capacity N                      buffered/net channel capacity (default 64)
   --executor threads|pooled[:N]     process executor (default threads)
+  --window N                        net credit window (default = capacity;
+                                    1 = per-message ACK rendezvous)
+  --nodelay on|off                  TCP_NODELAY on net/cluster sockets (default on)
 "#;
 
 fn fail(e: impl std::fmt::Display) -> i32 {
@@ -593,6 +608,111 @@ fn cmd_verify(args: &Args) -> i32 {
 fn cmd_calibrate() -> i32 {
     let db = gpp::sim::calibrate::calibrate();
     println!("{db:#?}");
+    0
+}
+
+/// Hot-path micro benches (`gpp bench`): the three layers the
+/// throughput overhaul touched, each written as a `BENCH_*.json`
+/// trajectory file at the repo root with msgs/sec and ns/op rows.
+/// `--smoke` turns it into an acceptance gate: windowed net throughput
+/// must beat the per-message-ACK baseline by `--min-speedup` (default
+/// 2.0) at `--capacity` (default 16, min 8 enforced for the gate), and
+/// every written file must be well-formed.
+fn cmd_bench(args: &Args) -> i32 {
+    use gpp::harness::micro::{
+        dispatch_run, net_edge_run, pipeline_run, record_csp_rows, record_dispatch_rows,
+        record_net_window_rows,
+    };
+    use gpp::harness::{bench_json_looks_valid, BenchJson};
+
+    let smoke = args.has("smoke");
+    let msgs = args.u64("msgs", if smoke { 20_000 } else { 50_000 });
+    let capacity = args.usize("capacity", 16).max(if smoke { 8 } else { 1 });
+    let min_speedup = args.f64("min-speedup", 2.0);
+    let best3 = |f: &dyn Fn() -> f64| (0..3).map(|_| f()).fold(f64::INFINITY, f64::min);
+    let mut written: Vec<std::path::PathBuf> = Vec::new();
+
+    // (1) CSP core: the relay pipeline, rendezvous vs buffered.
+    {
+        use gpp::csp::channel::{buffered_channel, channel};
+        let mut json = BenchJson::new("gpp bench: csp substrate");
+        let rdv = best3(&|| pipeline_run(msgs, &|_n| channel::<u64>()));
+        let buf = best3(&|| pipeline_run(msgs, &|n| buffered_channel::<u64>(n, 256)));
+        record_csp_rows(&mut json, msgs, rdv, buf);
+        match json.write_at_root("BENCH_csp.json") {
+            Ok(p) => {
+                println!(
+                    "csp: rendezvous {:.0}/s buffered {:.0}/s -> {}",
+                    msgs as f64 / rdv,
+                    msgs as f64 / buf,
+                    p.display()
+                );
+                written.push(p);
+            }
+            Err(e) => return fail(format!("BENCH_csp.json: {e}")),
+        }
+    }
+
+    // (2) Wire layer: one loopback net edge, per-message ACK (window 1)
+    // vs the credit window — the tentpole's acceptance measurement.
+    let net_speedup = {
+        let mut json = BenchJson::new("gpp bench: net credit window");
+        let ack = best3(&|| net_edge_run(msgs, capacity, 1));
+        let win = best3(&|| net_edge_run(msgs, capacity, capacity as u32));
+        let speedup = record_net_window_rows(&mut json, msgs, capacity, ack, win);
+        match json.write_at_root("BENCH_net.json") {
+            Ok(p) => {
+                println!(
+                    "net: ack {:.0}/s windowed {:.0}/s ({speedup:.1}x) -> {}",
+                    msgs as f64 / ack,
+                    msgs as f64 / win,
+                    p.display()
+                );
+                written.push(p);
+            }
+            Err(e) => return fail(format!("BENCH_net.json: {e}")),
+        }
+        speedup
+    };
+
+    // (3) Dispatch layer: string-named vs interned method dispatch.
+    {
+        let calls = msgs.max(100_000);
+        let mut json = BenchJson::new("gpp bench: method dispatch");
+        let string = best3(&|| dispatch_run(calls, false));
+        let interned = best3(&|| dispatch_run(calls, true));
+        record_dispatch_rows(&mut json, calls, string, interned);
+        match json.write_at_root("BENCH_dispatch.json") {
+            Ok(p) => {
+                println!(
+                    "dispatch: string {:.1}ns interned {:.1}ns -> {}",
+                    string * 1e9 / calls as f64,
+                    interned * 1e9 / calls as f64,
+                    p.display()
+                );
+                written.push(p);
+            }
+            Err(e) => return fail(format!("BENCH_dispatch.json: {e}")),
+        }
+    }
+
+    // Every emitted file must re-read as well-formed bench JSON.
+    for p in &written {
+        match std::fs::read_to_string(p) {
+            Ok(text) if bench_json_looks_valid(&text) => {}
+            Ok(_) => return fail(format!("{} is malformed", p.display())),
+            Err(e) => return fail(format!("{}: {e}", p.display())),
+        }
+    }
+    if smoke && net_speedup < min_speedup {
+        return fail(format!(
+            "bench smoke: windowed net throughput only {net_speedup:.2}x the \
+             per-message-ACK baseline (required >= {min_speedup:.1}x at capacity {capacity})"
+        ));
+    }
+    if smoke {
+        println!("bench smoke passed: windowed/ack = {net_speedup:.2}x (>= {min_speedup:.1}x)");
+    }
     0
 }
 

@@ -22,7 +22,7 @@ use crate::csp::error::{GppError, Result};
 use crate::util::codec::{from_bytes, to_bytes, Wire};
 use crate::workloads::mandelbrot::{MandelbrotCollect, MandelbrotLine};
 
-use super::frame::{read_frame, set_io_timeouts, write_frame};
+use super::frame::{read_frame, set_io_timeouts, set_nodelay, write_frame};
 use super::jobs;
 use super::NetOptions;
 
@@ -149,6 +149,7 @@ pub fn serve_items(
     let mut handles = Vec::new();
     let spawn_conn = |stream: TcpStream, handles: &mut Vec<std::thread::JoinHandle<Result<()>>>| -> Result<()> {
         set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
+        set_nodelay(&stream, opts.nodelay)?;
         let sync = sync.clone();
         let job = job.to_string();
         let cfg = cfg.to_vec();
@@ -396,6 +397,7 @@ pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
     let mut stream = TcpStream::connect(addr)
         .map_err(|e| GppError::Net(format!("worker connect {addr}: {e}")))?;
     set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
+    set_nodelay(&stream, opts.nodelay)?;
     write_frame(&mut stream, &[W_HELLO])?;
     let frame = read_frame(&mut stream)?;
     let (job_name, cfg) = match frame.split_first() {

@@ -43,6 +43,13 @@ pub fn set_io_timeouts(
     Ok(())
 }
 
+/// Apply (or clear) `TCP_NODELAY`. Every message-passing socket in the
+/// library wants it on: frames are small and latency-bound, and Nagle
+/// batching on top of the credit window only delays ACK/credit frames.
+pub fn set_nodelay(stream: &TcpStream, on: bool) -> Result<()> {
+    net_err(stream.set_nodelay(on), "set_nodelay")
+}
+
 /// Write one frame: u32 LE length then payload.
 pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
     let len = payload.len() as u32;
@@ -52,6 +59,27 @@ pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
     net_err(stream.write_all(&len.to_le_bytes()), "write frame length")?;
     net_err(stream.write_all(payload), "write frame payload")?;
     net_err(stream.flush(), "flush frame")?;
+    Ok(())
+}
+
+/// Write several frames coalesced into a single buffer and one
+/// `write_all` — the batched-write path of the credit protocol. Each
+/// payload stays an ordinary length-prefixed frame on the wire, so the
+/// reading side (and its per-frame fault/poison rules) is oblivious to
+/// how writes were coalesced.
+pub fn write_frames(stream: &mut TcpStream, payloads: &[Vec<u8>]) -> Result<()> {
+    let total: usize = payloads.iter().map(|p| p.len() + 4).sum();
+    let mut buf = Vec::with_capacity(total);
+    for p in payloads {
+        let len = p.len() as u32;
+        if len > MAX_FRAME {
+            return Err(GppError::Net(format!("frame too large: {len}")));
+        }
+        buf.extend_from_slice(&len.to_le_bytes());
+        buf.extend_from_slice(p);
+    }
+    net_err(stream.write_all(&buf), "write frame batch")?;
+    net_err(stream.flush(), "flush frame batch")?;
     Ok(())
 }
 
@@ -86,6 +114,26 @@ mod tests {
         write_frame(&mut c, b"hello cluster").unwrap();
         assert_eq!(read_frame(&mut c).unwrap(), b"hello cluster");
         h.join().unwrap();
+    }
+
+    #[test]
+    fn coalesced_frames_read_back_individually() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            (0..3)
+                .map(|_| read_frame(&mut s).unwrap())
+                .collect::<Vec<_>>()
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        write_frames(
+            &mut c,
+            &[b"one".to_vec(), Vec::new(), b"three".to_vec()],
+        )
+        .unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(got, vec![b"one".to_vec(), Vec::new(), b"three".to_vec()]);
     }
 
     #[test]

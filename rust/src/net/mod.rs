@@ -48,10 +48,29 @@ use std::time::Duration;
 /// waits are legitimately unbounded — e.g. a cluster host waiting for a
 /// worker to finish a long item; set it when you want dead-peer
 /// detection and can bound the longest legitimate stall.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct NetOptions {
     pub read_timeout: Option<Duration>,
     pub write_timeout: Option<Duration>,
+    /// Credit window for net channel edges (how many DATA frames the
+    /// writer may stream ahead of the reader's credit grants). `None`
+    /// (the default) sizes the window to the channel capacity; `1`
+    /// reproduces the PR-2 DATA→ACK rendezvous byte-for-byte.
+    pub window: Option<u32>,
+    /// Apply `TCP_NODELAY` to every cluster / net-channel socket
+    /// (default on: frames are small and latency-bound).
+    pub nodelay: bool,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        Self {
+            read_timeout: None,
+            write_timeout: None,
+            window: None,
+            nodelay: true,
+        }
+    }
 }
 
 impl NetOptions {
@@ -68,5 +87,27 @@ impl NetOptions {
     pub fn with_write_timeout_ms(mut self, ms: u64) -> Self {
         self.write_timeout = (ms > 0).then(|| Duration::from_millis(ms));
         self
+    }
+
+    /// Override the credit window (see the field docs); `0` restores
+    /// the default (window = channel capacity).
+    pub fn with_window(mut self, window: u32) -> Self {
+        self.window = (window > 0).then_some(window);
+        self
+    }
+
+    /// Toggle `TCP_NODELAY` on the sockets this config opens.
+    pub fn with_nodelay(mut self, on: bool) -> Self {
+        self.nodelay = on;
+        self
+    }
+
+    /// The credit window for an edge of the given channel capacity:
+    /// the explicit override, else the capacity itself (≥ 1).
+    pub fn window_for(&self, capacity: usize) -> u64 {
+        match self.window {
+            Some(w) => w.max(1) as u64,
+            None => capacity.max(1) as u64,
+        }
     }
 }

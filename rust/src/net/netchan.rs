@@ -2,16 +2,24 @@
 //! as in-memory channels — JCSP's "the nature of a channel, be it
 //! internal or network, is transparent to the process definition" (§7).
 //!
-//! A `NetOut<T>`/`NetIn<T>` pair moves `Wire`-codable values as frames;
-//! writes are acknowledged (one in flight), giving the unbuffered
-//! synchronised semantics CSP channels require. Control frames carry
-//! the terminator and **poison** protocols across the wire, and ACK
-//! tags are validated unconditionally — a corrupt or misordered control
-//! frame is a [`GppError::Net`], in release builds too.
+//! A `NetOut<T>`/`NetIn<T>` pair moves `Wire`-codable values as frames
+//! under **credit-based flow control**: the writer holds a window of
+//! `window` credits, each DATA/TERM frame spends one, and the reader
+//! returns credits as it consumes frames. With `window == 1` (the
+//! default) this is byte-for-byte the original DATA→ACK exchange —
+//! every write blocks until the reader's acknowledgement, giving the
+//! unbuffered synchronised semantics CSP channels require. Larger
+//! windows let the writer stream ahead by up to `window` frames, so a
+//! buffered edge no longer pays a full RTT per message. Control frames
+//! carry the terminator and **poison** protocols across the wire, and
+//! ACK/credit tags are validated unconditionally — a corrupt or
+//! misordered control frame is a [`GppError::Net`], in release builds
+//! too.
 //!
 //! These are the raw request/response ends; [`super::transport`] builds
 //! the full [`crate::csp::transport::Transport`] contract (Alt
-//! signalling, batched take) on top of the same tags.
+//! signalling, batched take, coalesced batch writes) on top of the
+//! same tags.
 
 use std::marker::PhantomData;
 use std::net::TcpStream;
@@ -29,32 +37,82 @@ pub(crate) const TAG_TERM: u8 = 2;
 pub(crate) const TAG_ACK: u8 = 3;
 pub(crate) const TAG_POISON: u8 = 4;
 
-/// Validate an acknowledgement frame. Checked unconditionally (not
-/// `debug_assert`): release builds must reject corrupt/misordered
-/// control frames too. A poison frame in ack position propagates the
-/// peer's poison to this end.
-pub(crate) fn check_ack(frame: &[u8], context: &str) -> Result<()> {
-    match frame.first() {
-        Some(&TAG_ACK) => Ok(()),
-        Some(&TAG_POISON) => Err(GppError::Poisoned),
+/// Parse a credit/acknowledgement frame: `[TAG_ACK]` grants one credit
+/// (the original per-message ACK, kept byte-identical so `window == 1`
+/// speaks the old protocol exactly), `[TAG_ACK, n:u32le]` grants `n`
+/// (a coalesced grant from a batching reader). Checked unconditionally
+/// (not `debug_assert`): release builds must reject corrupt/misordered
+/// control frames too. A poison frame in credit position propagates
+/// the peer's poison to this end.
+pub(crate) fn parse_credit(frame: &[u8], context: &str) -> Result<u64> {
+    match frame.split_first() {
+        Some((&TAG_ACK, rest)) if rest.is_empty() => Ok(1),
+        Some((&TAG_ACK, rest)) if rest.len() == 4 => {
+            let n = u32::from_le_bytes(rest.try_into().unwrap());
+            if n == 0 {
+                return Err(GppError::Net(format!("{context}: zero credit grant")));
+            }
+            Ok(n as u64)
+        }
+        Some((&TAG_ACK, _)) => Err(GppError::Net(format!(
+            "{context}: malformed credit grant"
+        ))),
+        Some((&TAG_POISON, _)) => Err(GppError::Poisoned),
         other => Err(GppError::Net(format!(
-            "{context}: expected ack, got frame tag {other:?}"
+            "{context}: expected ack, got frame tag {:?}",
+            other.map(|(t, _)| t)
         ))),
     }
 }
 
-/// The writer side of one synchronised exchange: send `payload`, block
-/// for the acknowledgement, validate it. Shared by [`NetOut`] and the
+/// Encode a credit grant: a bare `[TAG_ACK]` for one credit (the old
+/// wire format), `[TAG_ACK, n]` for a coalesced grant.
+pub(crate) fn encode_credit(n: u64) -> Vec<u8> {
+    if n == 1 {
+        vec![TAG_ACK]
+    } else {
+        let mut f = vec![TAG_ACK];
+        f.extend_from_slice(&(n.min(u32::MAX as u64) as u32).to_le_bytes());
+        f
+    }
+}
+
+/// Writer-side credit bookkeeping shared by [`NetOut`] and the
 /// transport-core writing end ([`super::transport`]) so the two stay
-/// protocol-identical.
-pub(crate) fn send_and_ack(
-    stream: &mut std::net::TcpStream,
-    payload: &[u8],
-    context: &str,
-) -> Result<()> {
-    write_frame(stream, payload)?;
-    let ack = read_frame(stream)?;
-    check_ack(&ack, context)
+/// protocol-identical: the stream plus the credits currently held.
+pub(crate) struct CreditedStream {
+    pub(crate) stream: std::net::TcpStream,
+    pub(crate) credits: u64,
+}
+
+impl CreditedStream {
+    pub(crate) fn new(stream: std::net::TcpStream, window: u64) -> Self {
+        Self {
+            stream,
+            credits: window.max(1),
+        }
+    }
+
+    /// Block for the next credit/poison frame from the reader.
+    pub(crate) fn wait_credit(&mut self, context: &str) -> Result<()> {
+        let frame = read_frame(&mut self.stream)?;
+        self.credits += parse_credit(&frame, context)?;
+        Ok(())
+    }
+
+    /// Send one frame, spending a credit, then block until at least one
+    /// credit is held again. With `window == 1` this is exactly the old
+    /// send-DATA-await-ACK exchange (the write returns only once the
+    /// reader consumed the frame); with a larger window the wait is
+    /// satisfied immediately until the window is exhausted.
+    pub(crate) fn send(&mut self, payload: &[u8], context: &str) -> Result<()> {
+        write_frame(&mut self.stream, payload)?;
+        self.credits -= 1;
+        while self.credits == 0 {
+            self.wait_credit(context)?;
+        }
+        Ok(())
+    }
 }
 
 /// A value or end-of-stream — network channels carry the same
@@ -67,15 +125,27 @@ pub enum NetMsg<T> {
 
 /// Writing end over a TCP stream.
 pub struct NetOut<T: Wire> {
-    stream: Mutex<TcpStream>,
+    stream: Mutex<CreditedStream>,
+    window: u64,
     poisoned: std::sync::atomic::AtomicBool,
     _marker: PhantomData<T>,
 }
 
 impl<T: Wire> NetOut<T> {
+    /// Window-1 writer: every write blocks for the reader's ACK — the
+    /// original synchronised wire protocol, byte for byte.
     pub fn new(stream: TcpStream) -> Self {
+        Self::with_window(stream, 1)
+    }
+
+    /// Writer with a credit window of `window` frames: writes stream
+    /// ahead until the window is exhausted, then block for credits.
+    pub fn with_window(stream: TcpStream, window: u64) -> Self {
+        let _ = stream.set_nodelay(true);
+        let window = window.max(1);
         Self {
-            stream: Mutex::new(stream),
+            stream: Mutex::new(CreditedStream::new(stream, window)),
+            window,
             poisoned: std::sync::atomic::AtomicBool::new(false),
             _marker: PhantomData,
         }
@@ -83,8 +153,8 @@ impl<T: Wire> NetOut<T> {
 
     /// Like [`NetOut::new`] with socket read/write timeouts applied, so
     /// a dead peer fails the write instead of hanging it. The read
-    /// timeout bounds the ACK wait: it must exceed the reader's longest
-    /// processing stall, since the ACK is the rendezvous.
+    /// timeout bounds the credit wait: it must exceed the reader's
+    /// longest processing stall, since the credit is the rendezvous.
     pub fn with_timeouts(
         stream: TcpStream,
         read: Option<Duration>,
@@ -114,19 +184,30 @@ impl<T: Wire> NetOut<T> {
         r
     }
 
-    /// Synchronised write: block until the reader acknowledges.
+    /// Credited write: blocks only when the window is exhausted (with
+    /// `window == 1`, until the reader acknowledges — synchronised).
     pub fn write(&self, value: &T) -> Result<()> {
         self.poison_check()?;
         let mut s = self.stream.lock().unwrap();
         let mut payload = vec![TAG_DATA];
         payload.extend(to_bytes(value));
-        self.latch_on_err(send_and_ack(&mut s, &payload, "NetOut::write"))
+        self.latch_on_err(s.send(&payload, "NetOut::write"))
     }
 
+    /// Send the terminator and block until the reader has consumed
+    /// every in-flight frame including it (credits drain back to the
+    /// full window), so termination stays a synchronisation point at
+    /// any window size.
     pub fn write_terminator(&self) -> Result<()> {
         self.poison_check()?;
         let mut s = self.stream.lock().unwrap();
-        self.latch_on_err(send_and_ack(&mut s, &[TAG_TERM], "NetOut::write_terminator"))
+        let r = s.send(&[TAG_TERM], "NetOut::write_terminator").and_then(|()| {
+            while s.credits < self.window {
+                s.wait_credit("NetOut::write_terminator")?;
+            }
+            Ok(())
+        });
+        self.latch_on_err(r)
     }
 
     /// Poison the channel: tell the peer (best effort) and fail all
@@ -134,7 +215,7 @@ impl<T: Wire> NetOut<T> {
     pub fn poison(&self) {
         if !self.poisoned.swap(true, std::sync::atomic::Ordering::SeqCst) {
             if let Ok(mut s) = self.stream.lock() {
-                let _ = write_frame(&mut s, &[TAG_POISON]);
+                let _ = write_frame(&mut s.stream, &[TAG_POISON]);
             }
         }
     }
@@ -153,6 +234,7 @@ pub struct NetIn<T: Wire> {
 
 impl<T: Wire> NetIn<T> {
     pub fn new(stream: TcpStream) -> Self {
+        let _ = stream.set_nodelay(true);
         Self {
             stream: Mutex::new(stream),
             poisoned: std::sync::atomic::AtomicBool::new(false),
@@ -264,6 +346,37 @@ mod tests {
         let got = h.join().unwrap();
         assert_eq!(got.len(), 10);
         assert_eq!(got[3], vec![3, 6]);
+    }
+
+    #[test]
+    fn windowed_writer_streams_ahead_of_reader() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let tx = NetOut::<u64>::with_window(TcpStream::connect(addr).unwrap(), 4);
+        let (s, _) = listener.accept().unwrap();
+        // Nobody has read anything yet: the first window-1 writes must
+        // complete on initial credits alone (no per-message RTT). If
+        // the old one-in-flight protocol were still in force, the very
+        // first write here would hang this single thread forever.
+        tx.write(&1).unwrap();
+        tx.write(&2).unwrap();
+        tx.write(&3).unwrap();
+        let rx = NetIn::<u64>::new(s);
+        let h = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            loop {
+                match rx.read().unwrap() {
+                    NetMsg::Data(v) => got.push(v),
+                    NetMsg::Terminator => return got,
+                }
+            }
+        });
+        tx.write(&4).unwrap();
+        tx.write(&5).unwrap();
+        // The terminator drains credits back to the full window: when
+        // it returns, the reader has consumed everything.
+        tx.write_terminator().unwrap();
+        assert_eq!(h.join().unwrap(), vec![1, 2, 3, 4, 5]);
     }
 
     #[test]

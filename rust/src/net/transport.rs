@@ -10,20 +10,36 @@
 //! nature of a channel, be it internal or network, is transparent to
 //! the process definition" (§7).
 //!
-//! Shape:
+//! Shape (since the credit-window overhaul):
 //!
-//! * [`NetOutCore`] (writing side): `write` sends a `DATA` frame and
-//!   blocks for the acknowledgement — the ACK **is** the rendezvous, so
-//!   backpressure crosses the wire (the reader acks a value only after
-//!   queueing it locally; with `capacity 1` that is at most one value
-//!   in flight). `poison` sends a `POISON` frame.
+//! * [`NetOutCore`] (writing side): the writer holds a **credit
+//!   window** sized to the channel capacity (override:
+//!   [`super::NetOptions::window`]). Each DATA frame spends a credit;
+//!   the writer streams ahead until the window is exhausted, then
+//!   blocks for a credit/poison frame. `write_batch` coalesces as many
+//!   queued values as it holds credits for into a single framed buffer
+//!   and one socket write. With `window == 1` every write blocks for
+//!   its grant — byte-identical to the original DATA→ACK rendezvous,
+//!   so capacity-1 edges keep synchronised CSP semantics. `poison`
+//!   sends a `POISON` frame.
 //! * [`NetInCore`] (reading side): a pump thread reads frames, decodes,
-//!   queues into a local [`BufferedCore`] and acks. All reader-side
-//!   contract obligations — batched take (`read_batch`/
-//!   `read_batch_while`), Alt signalling, poison-drains-first — are
-//!   delegated to that verified local core, so they hold identically
-//!   over the network. Reader-side `poison` propagates upstream: the
-//!   writer's next ack slot carries the poison frame.
+//!   queues into a local [`BufferedCore`] and **grants credits**:
+//!   grants are coalesced (one `[ACK, n]` frame per ~half window) so
+//!   the reverse path carries a fraction of the old per-message ACK
+//!   traffic; at `window == 1` each grant is the old bare `[ACK]`
+//!   frame. All reader-side contract obligations — batched take
+//!   (`read_batch`/`read_batch_while`), Alt signalling,
+//!   poison-drains-first — are delegated to that verified local core,
+//!   so they hold identically over the network. Reader-side `poison`
+//!   propagates upstream: the writer's next credit slot carries the
+//!   poison frame (a writer holding credits learns when it next
+//!   exhausts them, or when the socket dies).
+//!
+//! Backpressure: credits are granted only after a frame is queued into
+//! the local core, so at most `window` frames are in flight beyond the
+//! local buffer — the writer can never outrun the reader by more than
+//! `window + capacity` values, exactly as the old per-message ACK
+//! bounded it at `1 + capacity`.
 //!
 //! Failure model: a dead peer (EOF/reset) or a configured socket
 //! timeout poisons the local end, so a broken wire unwinds the network
@@ -43,15 +59,17 @@ use crate::csp::transport::{
 };
 use crate::util::codec::{from_bytes, to_bytes, Wire};
 
-use super::frame::{read_frame, set_io_timeouts, write_frame};
-use super::netchan::{send_and_ack, TAG_ACK, TAG_DATA, TAG_POISON};
+use super::frame::{read_frame, set_io_timeouts, set_nodelay, write_frame, write_frames};
+use super::netchan::{encode_credit, CreditedStream, TAG_DATA, TAG_POISON};
 use super::NetOptions;
 
 /// Writing side of a network channel (see module docs).
 pub struct NetOutCore<T> {
     id: u64,
     name: String,
-    stream: Mutex<TcpStream>,
+    stream: Mutex<CreditedStream>,
+    /// Credit window (frames the writer may stream ahead of grants).
+    window: u64,
     poisoned: AtomicBool,
     /// Scripted deterministic faults (None in production). `Drop` on a
     /// write models a DATA frame lost before its ACK: the write fails
@@ -62,11 +80,18 @@ pub struct NetOutCore<T> {
 }
 
 impl<T: Wire> NetOutCore<T> {
-    fn new(stream: TcpStream, name: &str, faults: Option<Arc<FaultPlan>>) -> Arc<Self> {
+    fn new(
+        stream: TcpStream,
+        name: &str,
+        window: u64,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Arc<Self> {
+        let window = window.max(1);
         Arc::new(Self {
             id: next_chan_id(),
             name: name.to_string(),
-            stream: Mutex::new(stream),
+            stream: Mutex::new(CreditedStream::new(stream, window)),
+            window,
             poisoned: AtomicBool::new(false),
             faults,
             _marker: PhantomData,
@@ -79,6 +104,41 @@ impl<T: Wire> NetOutCore<T> {
             self.name
         )))
     }
+
+    /// Apply the scripted write fault for one frame, if any. Counts
+    /// every frame — including each frame inside a coalesced batch.
+    fn write_fault(&self) -> Result<()> {
+        let Some(fp) = &self.faults else { return Ok(()) };
+        match fp.apply(FaultOp::Write, &self.name) {
+            Some(FaultAction::Drop) => {
+                // DATA frame lost before its ACK: deterministic
+                // stand-in for the timeout this would become.
+                self.poisoned.store(true, Ordering::SeqCst);
+                Err(GppError::Net(format!(
+                    "net channel '{}': injected fault: DATA frame lost before ACK",
+                    self.name
+                )))
+            }
+            Some(FaultAction::Poison) => {
+                Transport::<T>::poison(self);
+                Err(GppError::Poisoned)
+            }
+            Some(FaultAction::Fail(msg)) => {
+                self.poisoned.store(true, Ordering::SeqCst);
+                Err(GppError::Net(msg))
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// Latch the end poisoned on any wire error (a failed exchange can
+    /// leave the credit accounting unsynchronised forever).
+    fn latch(&self, r: Result<()>) -> Result<()> {
+        if r.is_err() {
+            self.poisoned.store(true, Ordering::SeqCst);
+        }
+        r
+    }
 }
 
 impl<T: Wire + Send> Transport<T> for NetOutCore<T> {
@@ -86,43 +146,87 @@ impl<T: Wire + Send> Transport<T> for NetOutCore<T> {
         if self.poisoned.load(Ordering::SeqCst) {
             return Err(GppError::Poisoned);
         }
-        if let Some(fp) = &self.faults {
-            match fp.apply(FaultOp::Write, &self.name) {
-                Some(FaultAction::Drop) => {
-                    // DATA frame lost before its ACK: deterministic
-                    // stand-in for the timeout this would become.
-                    self.poisoned.store(true, Ordering::SeqCst);
-                    return Err(GppError::Net(format!(
-                        "net channel '{}': injected fault: DATA frame lost before ACK",
-                        self.name
-                    )));
-                }
-                Some(FaultAction::Poison) => {
-                    Transport::<T>::poison(self);
-                    return Err(GppError::Poisoned);
-                }
-                Some(FaultAction::Fail(msg)) => {
-                    self.poisoned.store(true, Ordering::SeqCst);
-                    return Err(GppError::Net(msg));
-                }
-                None => {}
-            }
-        }
+        self.write_fault()?;
         let mut s = self.stream.lock().unwrap();
         let mut payload = vec![TAG_DATA];
         payload.extend(to_bytes(&value));
-        match send_and_ack(&mut s, &payload, "NetOutCore::write") {
-            Ok(()) => Ok(()),
-            Err(GppError::Poisoned) => {
-                self.poisoned.store(true, Ordering::SeqCst);
-                Err(GppError::Poisoned)
-            }
-            Err(e) => {
-                // Broken wire: fail this and all future operations.
-                self.poisoned.store(true, Ordering::SeqCst);
-                Err(e)
-            }
+        let r = s.send(&payload, "NetOutCore::write");
+        self.latch(r)
+    }
+
+    /// Coalesced batch write: encode every value, then stream the
+    /// frames in chunks bounded by the credits held — each chunk is a
+    /// single buffered socket write. Fault rules count every frame in
+    /// the batch, exactly as a loop of single writes would: frames
+    /// preceding a triggered fault are still sent, and the fault's
+    /// side effect (poison frame / latch) fires only **after** they
+    /// are on the wire — the pump processes frames in order, so a
+    /// poison emitted first would destroy the survivors.
+    fn write_batch(&self, values: Vec<T>) -> Result<()> {
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(GppError::Poisoned);
         }
+        let mut frames: Vec<Vec<u8>> = Vec::with_capacity(values.len());
+        // (send_poison_frame, error) deferred until the survivors went out.
+        let mut pending: Option<(bool, GppError)> = None;
+        for v in &values {
+            if let Some(fp) = &self.faults {
+                match fp.apply(FaultOp::Write, &self.name) {
+                    None => {}
+                    Some(FaultAction::Drop) => {
+                        pending = Some((
+                            false,
+                            GppError::Net(format!(
+                                "net channel '{}': injected fault: DATA frame lost before ACK",
+                                self.name
+                            )),
+                        ));
+                        break;
+                    }
+                    Some(FaultAction::Poison) => {
+                        pending = Some((true, GppError::Poisoned));
+                        break;
+                    }
+                    Some(FaultAction::Fail(msg)) => {
+                        pending = Some((false, GppError::Net(msg)));
+                        break;
+                    }
+                }
+            }
+            let mut payload = vec![TAG_DATA];
+            payload.extend(to_bytes(v));
+            frames.push(payload);
+        }
+        let mut s = self.stream.lock().unwrap();
+        let mut sent = 0usize;
+        while sent < frames.len() {
+            while s.credits == 0 {
+                let r = s.wait_credit("NetOutCore::write_batch");
+                self.latch(r)?;
+            }
+            let n = (frames.len() - sent).min(s.credits as usize);
+            let r = write_frames(&mut s.stream, &frames[sent..sent + n]);
+            self.latch(r)?;
+            s.credits -= n as u64;
+            sent += n;
+        }
+        if let Some((send_poison, e)) = pending {
+            // The end is dead either way; no credit-drain is needed
+            // because every later operation is refused by the latch.
+            self.poisoned.store(true, Ordering::SeqCst);
+            if send_poison {
+                let _ = write_frame(&mut s.stream, &[TAG_POISON]);
+            }
+            return Err(e);
+        }
+        // Hold at least one credit before returning, mirroring `send`:
+        // at window 1 this makes a batch of N exactly N synchronised
+        // writes, byte-identical to the pre-credit protocol.
+        while s.credits == 0 {
+            let r = s.wait_credit("NetOutCore::write_batch");
+            self.latch(r)?;
+        }
+        Ok(())
     }
 
     fn read(&self) -> Result<T> {
@@ -152,7 +256,7 @@ impl<T: Wire + Send> Transport<T> for NetOutCore<T> {
     fn poison(&self) {
         if !self.poisoned.swap(true, Ordering::SeqCst) {
             if let Ok(mut s) = self.stream.lock() {
-                let _ = write_frame(&mut s, &[TAG_POISON]);
+                let _ = write_frame(&mut s.stream, &[TAG_POISON]);
             }
         }
     }
@@ -173,6 +277,10 @@ impl<T: Wire + Send> Transport<T> for NetOutCore<T> {
         TransportKind::Net
     }
 
+    fn capacity(&self) -> Option<usize> {
+        Some(self.window as usize)
+    }
+
     fn stats(&self) -> TransportStats {
         TransportStats::default()
     }
@@ -183,9 +291,12 @@ pub struct NetInCore<T: Send> {
     id: u64,
     name: String,
     inner: Arc<BufferedCore<T>>,
-    /// Shared write handle (acks + upstream poison); the pump owns a
-    /// cloned read handle, so reads never hold this lock.
+    /// Shared write handle (credit grants + upstream poison); the pump
+    /// owns a cloned read handle, so reads never hold this lock.
     wr: Mutex<TcpStream>,
+    /// The writer's credit window (grants are coalesced up to half of
+    /// it; see [`NetInCore::pump`]).
+    window: u64,
     poison_sent: AtomicBool,
     /// Scripted deterministic faults applied by the pump to inbound
     /// DATA frames (`Drop` = ack-but-discard, i.e. silent message loss;
@@ -198,6 +309,7 @@ impl<T: Wire + Send + 'static> NetInCore<T> {
         stream: TcpStream,
         name: &str,
         capacity: usize,
+        window: u64,
         faults: Option<Arc<FaultPlan>>,
     ) -> Result<Arc<Self>> {
         let rd = stream
@@ -208,6 +320,7 @@ impl<T: Wire + Send + 'static> NetInCore<T> {
             name: name.to_string(),
             inner: BufferedCore::new(format!("{name}.net"), capacity.max(1)),
             wr: Mutex::new(stream),
+            window: window.max(1),
             poison_sent: AtomicBool::new(false),
             faults,
         });
@@ -219,18 +332,27 @@ impl<T: Wire + Send + 'static> NetInCore<T> {
         Ok(core)
     }
 
-    fn send_ctl(&self, tag: u8) -> Result<()> {
+    fn send_ctl(&self, frame: &[u8]) -> Result<()> {
         let mut s = self.wr.lock().unwrap();
-        write_frame(&mut s, &[tag])
+        write_frame(&mut s, frame)
     }
 
     fn send_poison_once(&self) {
         if !self.poison_sent.swap(true, Ordering::SeqCst) {
-            let _ = self.send_ctl(TAG_POISON);
+            let _ = self.send_ctl(&[TAG_POISON]);
         }
     }
 
     fn pump(&self, mut rd: TcpStream) {
+        // Grants are coalesced: one `[ACK, n]` frame per `grant_batch`
+        // consumed frames instead of an ACK per message. The threshold
+        // never exceeds the window, so a writer blocked on exhausted
+        // credits is always owed a grant that this pump will send after
+        // queueing the frames already in flight — no deadlock. At
+        // window 1 the threshold is 1 and every grant is the bare
+        // `[ACK]` frame: byte-identical to the old protocol.
+        let grant_batch = (self.window / 2).max(1);
+        let mut pending_grants: u64 = 0;
         loop {
             let frame = match read_frame(&mut rd) {
                 Ok(f) => f,
@@ -246,11 +368,15 @@ impl<T: Wire + Send + 'static> NetInCore<T> {
                     if let Some(fp) = &self.faults {
                         match fp.apply(FaultOp::Read, &self.name) {
                             Some(FaultAction::Drop) => {
-                                // Silent message loss: ack so the writer
-                                // proceeds, discard the payload.
-                                if self.send_ctl(TAG_ACK).is_err() {
-                                    self.inner.poison();
-                                    return;
+                                // Silent message loss: grant the credit so
+                                // the writer proceeds, discard the payload.
+                                pending_grants += 1;
+                                if pending_grants >= grant_batch {
+                                    if self.send_ctl(&encode_credit(pending_grants)).is_err() {
+                                        self.inner.poison();
+                                        return;
+                                    }
+                                    pending_grants = 0;
                                 }
                                 continue;
                             }
@@ -274,15 +400,19 @@ impl<T: Wire + Send + 'static> NetInCore<T> {
                     };
                     // Blocks while the local queue is full — this delay
                     // is what carries backpressure to the writer, whose
-                    // ack arrives only after the value is queued.
+                    // credits are granted only after the value is queued.
                     if self.inner.write(v).is_err() {
                         // Locally poisoned while we waited.
                         self.send_poison_once();
                         return;
                     }
-                    if self.send_ctl(TAG_ACK).is_err() {
-                        self.inner.poison();
-                        return;
+                    pending_grants += 1;
+                    if pending_grants >= grant_batch {
+                        if self.send_ctl(&encode_credit(pending_grants)).is_err() {
+                            self.inner.poison();
+                            return;
+                        }
+                        pending_grants = 0;
                     }
                 }
                 Some((&TAG_POISON, _)) => {
@@ -361,24 +491,38 @@ impl<T: Wire + Send + 'static> Transport<T> for NetInCore<T> {
     }
 }
 
-/// Wrap a connected stream as the writing end of a net channel.
+/// Apply the socket tuning every net-channel stream gets: configured
+/// timeouts plus `TCP_NODELAY` (default on — credit and data frames
+/// are small and latency-bound).
+fn tune(stream: &TcpStream, opts: &NetOptions) -> Result<()> {
+    set_io_timeouts(stream, opts.read_timeout, opts.write_timeout)?;
+    set_nodelay(stream, opts.nodelay)
+}
+
+/// Wrap a connected stream as the writing end of a net channel. The
+/// credit window is `opts.window`, else the channel `capacity` — both
+/// ends of an edge derive it from the same `RuntimeConfig`, so no
+/// handshake is needed.
 pub fn net_channel_out<T: Wire + Send + 'static>(
     stream: TcpStream,
     name: &str,
+    capacity: usize,
     opts: &NetOptions,
 ) -> Result<Out<T>> {
-    net_channel_out_faulted(stream, name, opts, None)
+    net_channel_out_faulted(stream, name, capacity, opts, None)
 }
 
 /// [`net_channel_out`] with a scripted fault plan (tests).
 pub fn net_channel_out_faulted<T: Wire + Send + 'static>(
     stream: TcpStream,
     name: &str,
+    capacity: usize,
     opts: &NetOptions,
     faults: Option<Arc<FaultPlan>>,
 ) -> Result<Out<T>> {
-    set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
-    let core: Arc<dyn Transport<T>> = NetOutCore::new(stream, name, faults);
+    tune(&stream, opts)?;
+    let core: Arc<dyn Transport<T>> =
+        NetOutCore::new(stream, name, opts.window_for(capacity), faults);
     let (out, _unused_in) = ends_of(core);
     Ok(out)
 }
@@ -401,21 +545,25 @@ pub fn net_channel_in_faulted<T: Wire + Send + 'static>(
     opts: &NetOptions,
     faults: Option<Arc<FaultPlan>>,
 ) -> Result<In<T>> {
-    set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
-    let core: Arc<dyn Transport<T>> = NetInCore::start(stream, name, capacity, faults)?;
+    tune(&stream, opts)?;
+    let core: Arc<dyn Transport<T>> =
+        NetInCore::start(stream, name, capacity, opts.window_for(capacity), faults)?;
     let (_unused_out, inp) = ends_of(core);
     Ok(inp)
 }
 
-/// Connect to a listening reader and return the writing end.
+/// Connect to a listening reader and return the writing end. `capacity`
+/// must match the reading end's (both sides size the credit window
+/// from it, or from `opts.window` when set).
 pub fn net_out<T: Wire + Send + 'static>(
     addr: &str,
     name: &str,
+    capacity: usize,
     opts: &NetOptions,
 ) -> Result<Out<T>> {
     let stream = TcpStream::connect(addr)
         .map_err(|e| GppError::Net(format!("connect {addr}: {e}")))?;
-    net_channel_out(stream, name, opts)
+    net_channel_out(stream, name, capacity, opts)
 }
 
 /// Accept one writer connection and return the reading end.
@@ -462,7 +610,7 @@ pub fn net_loopback_pair_faulted<T: Wire + Send + 'static>(
     let (server, _) = listener
         .accept()
         .map_err(|e| GppError::Net(format!("accept loopback: {e}")))?;
-    let out = net_channel_out_faulted(client, name, opts, faults.clone())?;
+    let out = net_channel_out_faulted(client, name, capacity, opts, faults.clone())?;
     let inp = net_channel_in_faulted(server, name, capacity, opts, faults)?;
     Ok((out, inp))
 }
@@ -530,15 +678,18 @@ mod tests {
             3,
             FA::Poison,
         )]);
-        let (tx, rx) =
-            net_loopback_pair_faulted::<u64>("t", 8, &NetOptions::default(), Some(plan)).unwrap();
+        // A small window: a writer holding credits streams ahead and
+        // only observes reader-side poison when it next waits for a
+        // credit (the credit slot carries the poison frame).
+        let opts = NetOptions::default().with_window(2);
+        let (tx, rx) = net_loopback_pair_faulted::<u64>("t", 8, &opts, Some(plan)).unwrap();
         tx.write(10).unwrap();
         tx.write(11).unwrap();
         // The 3rd write's frame is consumed by the pump as the poison
-        // trigger; the writer may see the poison on this write or the
-        // next depending on ack pipelining — either way it surfaces.
+        // trigger; the writer sees the poison within a window's worth
+        // of further writes, once its credits are exhausted.
         let mut write_failed = false;
-        for i in 0..3 {
+        for i in 0..4 {
             if tx.write(12 + i).is_err() {
                 write_failed = true;
                 break;

@@ -12,7 +12,7 @@ use crate::csp::error::Result;
 use crate::csp::process::CSProcess;
 use crate::data::details::ResultDetails;
 use crate::data::message::Message;
-use crate::data::object::{instantiate, DataObject};
+use crate::data::object::{instantiate, DataObject, MethodHandle};
 use crate::logging::{LogKind, LogSink};
 
 /// Terminal process that accumulates results.
@@ -66,6 +66,9 @@ impl Collect {
             .check(&format!("Collect init {}.{}", d.class, d.init_method))?;
 
         self.log.log("Collect", &self.log_phase, LogKind::Start, None);
+        // One result object for the whole run: the collect-method
+        // resolves once and every message dispatches by index.
+        let mut collect = MethodHandle::new(&d.collect_method);
         'collecting: loop {
             // Batched take of data messages on buffered transports; the
             // terminator is always taken singly (its arrival ends us).
@@ -77,8 +80,12 @@ impl Collect {
                             .log("Collect", &self.log_phase, LogKind::Input, Some(obj.as_ref()));
                         // "The result object's collectMethod is called with
                         // the inputObject as a parameter."
-                        result
-                            .call(&d.collect_method, &crate::data::object::Params::empty(), Some(obj.as_mut()))?
+                        collect
+                            .invoke(
+                                result.as_mut(),
+                                &crate::data::object::Params::empty(),
+                                Some(obj.as_mut()),
+                            )?
                             .check(&format!("Collect {}.{}", d.class, d.collect_method))?;
                     }
                     Message::Terminator(term) => {

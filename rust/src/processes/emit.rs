@@ -11,7 +11,7 @@ use crate::csp::error::{GppError, Result};
 use crate::csp::process::CSProcess;
 use crate::data::details::{DataDetails, LocalDetails};
 use crate::data::message::{Message, Terminator};
-use crate::data::object::{instantiate, DataObject, ReturnCode};
+use crate::data::object::{instantiate, DataObject, MethodHandle, ReturnCode};
 use crate::logging::{LogKind, LogSink};
 
 /// Terminal process that creates and emits a stream of data objects.
@@ -71,13 +71,16 @@ impl Emit {
             .check(&format!("Emit init {}.{}", d.class, d.init_method))?;
 
         self.log.log("Emit", &self.log_phase, LogKind::Start, None);
+        // Resolve the create-method once: every instance is a clone of
+        // the same prototype class, so each call dispatches by index.
+        let mut create = MethodHandle::new(&d.create_method);
         let mut buf: Vec<Message> = Vec::new();
         loop {
             // "The main loop of the process creates a new instance of the
             // emitted object and its associated createMethod is called."
             let mut obj = proto.deep_clone();
-            let rc = obj
-                .call(&d.create_method, &d.create_data, Some(proto.as_mut()))?
+            let rc = create
+                .invoke(obj.as_mut(), &d.create_data, Some(proto.as_mut()))?
                 .check(&format!("Emit create {}.{}", d.class, d.create_method))?;
             match rc {
                 ReturnCode::NormalContinuation => {
@@ -165,11 +168,12 @@ impl EmitWithLocal {
             .check(&format!("EmitWithLocal init {}.{}", d.class, d.init_method))?;
 
         self.log.log("EmitWithLocal", &self.log_phase, LogKind::Start, None);
+        let mut create = MethodHandle::new(&d.create_method);
         loop {
             let mut obj = proto.deep_clone();
             // The create method sees the *local* object as its auxiliary.
-            let rc = obj
-                .call(&d.create_method, &d.create_data, Some(local.as_mut()))?
+            let rc = create
+                .invoke(obj.as_mut(), &d.create_data, Some(local.as_mut()))?
                 .check(&format!("EmitWithLocal create {}.{}", d.class, d.create_method))?;
             match rc {
                 ReturnCode::NormalContinuation | ReturnCode::CompletedOk => {

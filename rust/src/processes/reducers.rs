@@ -11,7 +11,7 @@ use crate::csp::error::{GppError, Result};
 use crate::csp::process::CSProcess;
 use crate::data::details::LocalDetails;
 use crate::data::message::{Message, Terminator};
-use crate::data::object::{instantiate, Params, Value};
+use crate::data::object::{instantiate, MethodHandle, Params, Value};
 use crate::logging::{LogKind, LogSink};
 
 /// Shared `any` input end reduced onto one output. Terminates after
@@ -436,11 +436,15 @@ impl CombineNto1 {
         let mut acc = instantiate(&l.class)?;
         acc.call(&l.init_method, &l.init_data, None)?
             .check(&format!("CombineNto1 init {}.{}", l.class, l.init_method))?;
+        // One accumulator for the whole run: resolve the combine-method
+        // once and dispatch every input by index.
+        let mut combine = MethodHandle::new(&self.combine_method);
         loop {
             match self.input.read()? {
                 Message::Data(mut obj) => {
                     self.log.log("CombineNto1", "combine", LogKind::Input, Some(obj.as_ref()));
-                    acc.call(&self.combine_method, &Params::empty(), Some(obj.as_mut()))?
+                    combine
+                        .invoke(acc.as_mut(), &Params::empty(), Some(obj.as_mut()))?
                         .check(&format!("CombineNto1 {}.{}", l.class, self.combine_method))?;
                 }
                 Message::Terminator(term) => {

@@ -18,7 +18,7 @@ use crate::csp::error::{GppError, Result};
 use crate::csp::process::CSProcess;
 use crate::data::details::LocalDetails;
 use crate::data::message::Message;
-use crate::data::object::{instantiate, DataObject, Params, ReturnCode};
+use crate::data::object::{instantiate, DataObject, MethodHandle, Params, ReturnCode};
 use crate::logging::{LogKind, LogSink};
 
 /// The simplest functional process.
@@ -126,14 +126,24 @@ impl Worker {
         let phase = self.phase();
         self.log.log(&tag, &phase, LogKind::Start, None);
 
+        // The user function is resolved to an indexed dispatch handle
+        // once; the per-message path is then an integer-indexed call
+        // instead of a string-match cascade (re-resolved only if a
+        // different class flows through — see `MethodHandle`).
+        let mut function = MethodHandle::new(&self.function);
+
         // I/O-SEQ main loop (paper Listing 21). With `batch > 1` data
-        // messages are drained in batches per channel lock; terminators
-        // are never batched (a sibling sharing the any-end may own the
-        // next one), so the shutdown protocol is untouched. A BSP
-        // barrier forces batch 1: the group must sync once per message,
-        // and an uneven batched take would leave siblings starved of
-        // messages and the barrier short of parties.
+        // messages are drained in batches per channel lock, and the
+        // processed results of each input batch are flushed downstream
+        // as one `write_batch` (a single ticket on buffered edges, a
+        // coalesced framed write on net edges); terminators are never
+        // batched (a sibling sharing the any-end may own the next one),
+        // so the shutdown protocol is untouched. A BSP barrier forces
+        // batch 1: the group must sync once per message, and an uneven
+        // batched take would leave siblings starved of messages and the
+        // barrier short of parties.
         let batch = if self.barrier.is_some() { 1 } else { self.batch };
+        let mut out_buf: Vec<Message> = Vec::new();
         loop {
             let msgs: Vec<Message> = self.input.read_data_batch(batch)?;
             for msg in msgs {
@@ -141,8 +151,8 @@ impl Worker {
                     Message::Data(mut obj) => {
                         self.log.log(&tag, &phase, LogKind::Input, Some(obj.as_ref()));
                         // callUserMethod(inputObject, function, [dataModifier, wc])
-                        let rc = obj.call(
-                            &self.function,
+                        let rc = function.invoke(
+                            obj.as_mut(),
                             &self.data_modifier,
                             local.as_mut().map(|b| b.as_mut() as &mut dyn DataObject),
                         )?;
@@ -160,10 +170,17 @@ impl Worker {
                                 b.sync()?;
                             }
                             self.log.log(&tag, &phase, LogKind::Output, Some(obj.as_ref()));
-                            self.output.write(Message::Data(obj))?;
+                            if batch > 1 {
+                                out_buf.push(Message::Data(obj));
+                            } else {
+                                self.output.write(Message::Data(obj))?;
+                            }
                         }
                     }
                     Message::Terminator(term) => {
+                        if !out_buf.is_empty() {
+                            self.output.write_batch(std::mem::take(&mut out_buf))?;
+                        }
                         // When retaining data (out_data == false), the local
                         // accumulator is emitted just before the terminator —
                         // "it may be required to output the local class rather
@@ -179,6 +196,9 @@ impl Worker {
                         return Ok(());
                     }
                 }
+            }
+            if !out_buf.is_empty() {
+                self.output.write_batch(std::mem::take(&mut out_buf))?;
             }
         }
     }

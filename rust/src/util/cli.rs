@@ -71,8 +71,8 @@ impl Args {
 
     pub fn bool(&self, key: &str, default: bool) -> bool {
         match self.get(key) {
-            Some("true") | Some("1") | Some("yes") => true,
-            Some("false") | Some("0") | Some("no") => false,
+            Some("true") | Some("1") | Some("yes") | Some("on") => true,
+            Some("false") | Some("0") | Some("no") | Some("off") => false,
             Some(_) => default,
             None => default,
         }
@@ -138,5 +138,14 @@ mod tests {
     fn trailing_flag_is_boolean() {
         let a = parse(&["--seq"]);
         assert!(a.bool("seq", false));
+    }
+
+    #[test]
+    fn bool_accepts_on_off_spellings() {
+        // `--nodelay on|off` is the documented spelling; "off" must not
+        // silently fall back to the default.
+        let a = parse(&["--nodelay", "off", "--verbose", "on"]);
+        assert!(!a.bool("nodelay", true));
+        assert!(a.bool("verbose", false));
     }
 }

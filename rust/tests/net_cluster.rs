@@ -80,6 +80,169 @@ fn netchan_dead_peer_times_out_instead_of_hanging() {
     hold.join().unwrap();
 }
 
+// ------------------------------------------- credit-window protocol
+
+/// Windowed net edges must preserve per-writer FIFO order under mixed
+/// single / coalesced-batch writes and mixed single / batched takes.
+#[test]
+fn windowed_net_edge_preserves_fifo_under_batched_writes() {
+    let (tx, rx) = gpp::net::transport::net_loopback_pair::<u64>(
+        "win.fifo",
+        8,
+        &NetOptions::default(),
+    )
+    .unwrap();
+    const TOTAL: u64 = 300; // 30 cycles × (7-frame batch + 3 singles)
+    let writer = std::thread::spawn(move || {
+        let mut next = 0u64;
+        for _ in 0..30 {
+            // Coalesced batch: many frames, one socket write…
+            tx.write_batch((next..next + 7).collect()).unwrap();
+            next += 7;
+            // …interleaved with single credited writes.
+            for _ in 0..3 {
+                tx.write(next).unwrap();
+                next += 1;
+            }
+        }
+    });
+    let mut got = Vec::new();
+    let mut singles = true;
+    while (got.len() as u64) < TOTAL {
+        if singles {
+            got.push(rx.read().unwrap());
+        } else {
+            got.extend(rx.read_batch(16).unwrap());
+        }
+        singles = !singles;
+    }
+    writer.join().unwrap();
+    let expect: Vec<u64> = (0..TOTAL).collect();
+    assert_eq!(got, expect, "windowed edge reordered or lost values");
+}
+
+/// Poison-drains-first must survive the credit window: values already
+/// streamed (batched, ahead of any read) drain to the reader before
+/// the poison surfaces.
+#[test]
+fn windowed_net_edge_drains_queued_values_before_poison() {
+    let (tx, rx) = gpp::net::transport::net_loopback_pair::<u64>(
+        "win.poison",
+        8,
+        &NetOptions::default(),
+    )
+    .unwrap();
+    tx.write_batch(vec![1, 2, 3]).unwrap();
+    tx.poison();
+    // The pump processes frames in order, so every value streamed
+    // before the poison frame drains to the reader first.
+    let mut got = Vec::new();
+    loop {
+        match rx.read() {
+            Ok(v) => got.push(v),
+            Err(e) => {
+                assert_eq!(e, GppError::Poisoned);
+                break;
+            }
+        }
+    }
+    assert_eq!(got, vec![1, 2, 3]);
+    assert_eq!(tx.write(4), Err(GppError::Poisoned));
+}
+
+/// At window 1 the reading end's credit grants must be **byte-identical**
+/// to the old protocol's ACK frames: a bare `[TAG_ACK]` (one byte, tag
+/// 3) after every DATA frame — asserted against a hand-rolled peer
+/// speaking the PR-2 wire format directly.
+#[test]
+fn window_one_reader_grants_are_byte_identical_acks() {
+    use gpp::util::codec::to_bytes;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut old_writer = TcpStream::connect(addr).unwrap();
+    let (server, _) = listener.accept().unwrap();
+    let rx = gpp::net::transport::net_channel_in::<u64>(
+        server,
+        "win.bytes",
+        1,
+        &NetOptions::default(),
+    )
+    .unwrap();
+    for i in 0..5u64 {
+        // Old-protocol writer: DATA frame (tag 1 + payload)…
+        let mut payload = vec![1u8];
+        payload.extend(to_bytes(&i));
+        write_frame(&mut old_writer, &payload).unwrap();
+        // …then block for the ack and check the exact bytes.
+        let ack = read_frame(&mut old_writer).unwrap();
+        assert_eq!(ack, vec![3u8], "grant frame not byte-identical to old ACK");
+        assert_eq!(rx.read().unwrap(), i);
+    }
+}
+
+/// And the window-1 writing end speaks the old protocol byte-for-byte:
+/// an old-style peer that acks each DATA frame with a bare `[TAG_ACK]`
+/// serves it perfectly, and each frame is tag 1 + payload.
+#[test]
+fn window_one_writer_interops_with_old_protocol_reader() {
+    use gpp::util::codec::from_bytes;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let client = TcpStream::connect(addr).unwrap();
+    let (mut server, _) = listener.accept().unwrap();
+    let old_reader = std::thread::spawn(move || {
+        let mut got = Vec::new();
+        for _ in 0..5 {
+            let frame = read_frame(&mut server).unwrap();
+            assert_eq!(frame.first(), Some(&1u8), "expected DATA tag");
+            got.push(from_bytes::<u64>(&frame[1..]).unwrap());
+            write_frame(&mut server, &[3u8]).unwrap(); // old-style ACK
+        }
+        got
+    });
+    // capacity 1 → window 1: the writer must block for each old ACK.
+    let tx = gpp::net::transport::net_channel_out::<u64>(
+        client,
+        "win.interop",
+        1,
+        &NetOptions::default(),
+    )
+    .unwrap();
+    for i in 0..5u64 {
+        tx.write(i).unwrap();
+    }
+    assert_eq!(old_reader.join().unwrap(), vec![0, 1, 2, 3, 4]);
+}
+
+/// The acceptance criterion end to end: an unmodified network produces
+/// identical results in memory and over windowed net edges (capacity
+/// 16, explicit `--window`-style override).
+#[test]
+fn in_memory_equals_net_with_window_override() {
+    setup();
+    let dsl = "emit class=piData init=initClass(10) create=createInstance(300)\n\
+               fanAny destinations=2\n\
+               group workers=2 function=getWithin\n\
+               reduceAny sources=2\n\
+               collect class=piResults init=initClass(1)\n";
+    let run_with = |cfg: RuntimeConfig| {
+        let spec = parse_network(dsl).unwrap().with_config(cfg);
+        let results = spec.run().unwrap();
+        (
+            results[0].log_prop("withinSum"),
+            results[0].log_prop("iterationSum"),
+        )
+    };
+    let memory = run_with(RuntimeConfig::default());
+    let windowed = run_with(
+        RuntimeConfig::net_loopback()
+            .with_capacity(16)
+            .with_window(16),
+    );
+    assert_eq!(memory, windowed, "credit window changed the results");
+    assert_eq!(windowed.1, Some(Value::Int(10 * 300)));
+}
+
 // ------------------------------------------------- NetTransport edges
 
 /// The acceptance criterion: an unmodified network produces identical
