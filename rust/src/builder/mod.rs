@@ -20,7 +20,10 @@
 //!
 //! The optional `config` line picks the channel transport and executor
 //! ([`RuntimeConfig`]); without it the network runs on the paper's
-//! rendezvous + thread-per-process semantics. An optional `hosts` line
+//! rendezvous + thread-per-process semantics. `transport=` accepts
+//! `rendezvous` (`sync`), `buffered`, `net` (each edge on its own
+//! loopback socket) and `netmux` (`mux`: every edge multiplexed onto
+//! one shared connection — see [`crate::net::mux`]). An optional `hosts` line
 //! (`hosts workers=3 join=host:7777 timeout=5000`, optionally followed
 //! by `place stage=N`) deploys the same chain across a cluster via the
 //! node loader ([`crate::net::loader`]) — terminals on the host, the
@@ -492,7 +495,7 @@ impl NetworkSpec {
                         );
                         cfg.executor = ExecutorKind::ThreadPerProcess;
                     }
-                    TransportKind::Buffered | TransportKind::Net => {
+                    TransportKind::Buffered | TransportKind::Net | TransportKind::NetMux => {
                         eprintln!(
                             "gpp: note: pooled:{n} over {} edges completes only if \
                              capacity ({}) covers the whole object stream",

@@ -77,6 +77,14 @@ impl RuntimeConfig {
         Self::default().with_transport(TransportKind::Net)
     }
 
+    /// Every edge multiplexed onto the process-wide shared loopback
+    /// connection ([`crate::net::mux`]): same wire protocol and
+    /// semantics as [`Self::net_loopback`], but N channels cost one
+    /// socket and one pump thread instead of N of each.
+    pub fn net_mux() -> Self {
+        Self::default().with_transport(TransportKind::NetMux)
+    }
+
     pub fn with_transport(mut self, t: TransportKind) -> Self {
         self.transport = t;
         self
@@ -146,7 +154,9 @@ impl RuntimeConfig {
         if let Some(kernel) = super::sim::build_kernel() {
             let capacity = match self.transport {
                 TransportKind::Rendezvous => 0,
-                TransportKind::Buffered | TransportKind::Net => self.capacity,
+                TransportKind::Buffered | TransportKind::Net | TransportKind::NetMux => {
+                    self.capacity
+                }
             };
             let core: Arc<dyn Transport<T>> =
                 super::sim::SimCore::new(kernel, name, capacity, self.faults.clone());
@@ -169,6 +179,11 @@ impl RuntimeConfig {
                 self.faults.clone(),
             )
             .unwrap_or_else(|e| panic!("net channel '{name}': {e}")),
+            TransportKind::NetMux => {
+                let hub = crate::net::mux::global_hub()
+                    .unwrap_or_else(|e| panic!("netmux channel '{name}': {e}"));
+                hub.channel_faulted(name, self.capacity, &self.net, self.faults.clone())
+            }
         }
     }
 
@@ -216,7 +231,9 @@ impl RuntimeConfig {
     pub fn io_batch(&self) -> usize {
         match self.transport {
             TransportKind::Rendezvous => 1,
-            TransportKind::Buffered | TransportKind::Net => self.capacity.min(16).max(1),
+            TransportKind::Buffered | TransportKind::Net | TransportKind::NetMux => {
+                self.capacity.min(16).max(1)
+            }
         }
     }
 }

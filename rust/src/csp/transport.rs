@@ -48,6 +48,12 @@ pub enum TransportKind {
     /// `Wire`-codable; semantics (FIFO, poison-drains-first, Alt,
     /// batched take) match the in-memory transports.
     Net,
+    /// Multiplexed TCP channel ([`crate::net::mux`]): every `NetMux`
+    /// edge to the same peer shares **one** socket and **one** pump
+    /// thread, demultiplexed by a per-frame channel id. Same semantics
+    /// and `Wire` requirement as [`TransportKind::Net`]; O(peers)
+    /// connections and I/O threads instead of O(channels).
+    NetMux,
 }
 
 impl TransportKind {
@@ -57,6 +63,7 @@ impl TransportKind {
             "rendezvous" | "sync" => Some(TransportKind::Rendezvous),
             "buffered" | "buffer" => Some(TransportKind::Buffered),
             "net" | "loopback" | "tcp" => Some(TransportKind::Net),
+            "netmux" | "mux" => Some(TransportKind::NetMux),
             _ => None,
         }
     }
@@ -68,6 +75,7 @@ impl std::fmt::Display for TransportKind {
             TransportKind::Rendezvous => write!(f, "rendezvous"),
             TransportKind::Buffered => write!(f, "buffered"),
             TransportKind::Net => write!(f, "net"),
+            TransportKind::NetMux => write!(f, "netmux"),
         }
     }
 }
@@ -994,8 +1002,11 @@ mod tests {
         assert_eq!(TransportKind::parse("rendezvous"), Some(TransportKind::Rendezvous));
         assert_eq!(TransportKind::parse("net"), Some(TransportKind::Net));
         assert_eq!(TransportKind::parse("loopback"), Some(TransportKind::Net));
+        assert_eq!(TransportKind::parse("netmux"), Some(TransportKind::NetMux));
+        assert_eq!(TransportKind::parse("mux"), Some(TransportKind::NetMux));
         assert_eq!(TransportKind::parse("nope"), None);
         assert_eq!(TransportKind::Buffered.to_string(), "buffered");
         assert_eq!(TransportKind::Net.to_string(), "net");
+        assert_eq!(TransportKind::NetMux.to_string(), "netmux");
     }
 }

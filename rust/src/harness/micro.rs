@@ -10,7 +10,12 @@
 //!   `net_edge_run(n, cap, 1)` vs `net_edge_run(n, cap, cap)` measures
 //!   exactly what the credit overhaul bought);
 //! * [`dispatch_run`] — string-named vs interned method dispatch on a
-//!   registered data class (the `MethodHandle` trajectory).
+//!   registered data class (the `MethodHandle` trajectory);
+//! * [`fan_in_run`] — N loopback channels streamed concurrently, either
+//!   as N per-channel sockets (`TransportKind::Net`) or multiplexed
+//!   onto one shared connection (`TransportKind::NetMux`); setup and
+//!   teardown are *inside* the timed region, because per-connection
+//!   setup cost is exactly what the mux eliminates.
 //!
 //! All return elapsed seconds for `n` operations; callers derive
 //! msgs/sec and ns/op for the `BENCH_*.json` rows.
@@ -148,6 +153,125 @@ pub fn record_net_window_rows(
     json.add_derived("ack_ns_per_op", ack_secs * 1e9 / msgs as f64);
     json.add_derived("windowed_ns_per_op", windowed_secs * 1e9 / msgs as f64);
     json.add_derived("windowed_over_ack_speedup", speedup);
+    speedup
+}
+
+/// One [`fan_in_run`] measurement: elapsed seconds plus the I/O
+/// resources the run stood up (pump-thread and fd deltas, snapshotted
+/// after channel setup) — the O(channels) vs O(peers) evidence.
+pub struct FanInRun {
+    pub secs: f64,
+    pub pump_threads: usize,
+    pub fds: usize,
+}
+
+/// Open descriptors via `/proc/self/fd`; 0 where `/proc` is absent
+/// (the fd rows then read as deltas of 0, not as failures).
+fn open_fds() -> usize {
+    std::fs::read_dir("/proc/self/fd")
+        .map(|d| d.count())
+        .unwrap_or(0)
+}
+
+/// Stream `n_msgs` u64 values split across `channels` concurrent
+/// loopback edges — one writer thread per channel, the caller's thread
+/// draining each channel in turn with batched takes. `mux` selects N
+/// sockets + N pump threads (per-channel `Net`) vs one shared socket
+/// (`NetMux`). Channel setup and teardown are timed.
+pub fn fan_in_run(n_msgs: u64, channels: usize, capacity: usize, mux: bool) -> FanInRun {
+    let opts = NetOptions::default();
+    let per_chan = (n_msgs / channels as u64).max(1);
+    let fds0 = open_fds();
+    let pumps0 = crate::net::mux::active_pump_threads();
+    let t0 = std::time::Instant::now();
+
+    let hub = mux.then(|| crate::net::MuxHub::new(&opts).expect("loopback mux hub"));
+    let mut txs = Vec::with_capacity(channels);
+    let mut rxs = Vec::with_capacity(channels);
+    for i in 0..channels {
+        let name = format!("bench.fanin[{i}]");
+        let (tx, rx) = match &hub {
+            Some(h) => h.channel::<u64>(&name, capacity, &opts),
+            None => crate::net::transport::net_loopback_pair::<u64>(&name, capacity, &opts)
+                .expect("loopback net edge"),
+        };
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let pump_threads = crate::net::mux::active_pump_threads().saturating_sub(pumps0);
+    let fds = open_fds().saturating_sub(fds0);
+
+    let writers: Vec<_> = txs
+        .into_iter()
+        .map(|tx| {
+            std::thread::spawn(move || {
+                let mut batch = Vec::with_capacity(64);
+                for i in 0..per_chan {
+                    batch.push(i);
+                    if batch.len() == 64 {
+                        tx.write_batch(std::mem::take(&mut batch)).unwrap();
+                    }
+                }
+                if !batch.is_empty() {
+                    tx.write_batch(batch).unwrap();
+                }
+            })
+        })
+        .collect();
+    for rx in &rxs {
+        let mut got = 0u64;
+        while got < per_chan {
+            got += rx.read_batch(64).unwrap().len() as u64;
+        }
+    }
+    for w in writers {
+        w.join().unwrap();
+    }
+    drop(rxs);
+    drop(hub);
+
+    FanInRun {
+        secs: t0.elapsed().as_secs_f64(),
+        pump_threads,
+        fds,
+    }
+}
+
+/// Record one fan-in comparison (per-channel sockets vs the mux) at a
+/// given channel count under the canonical row names. Returns the
+/// mux-over-per-channel speedup — the `bench-smoke` mux gate value.
+pub fn record_net_mux_rows(
+    json: &mut BenchJson,
+    msgs: u64,
+    channels: usize,
+    per: &FanInRun,
+    mux: &FanInRun,
+) -> f64 {
+    let speedup = per.secs / mux.secs.max(1e-12);
+    json.add(&format!("fanin_c{channels}_per_channel"), per.secs);
+    json.add(&format!("fanin_c{channels}_mux"), mux.secs);
+    json.add_derived(
+        &format!("fanin_c{channels}_per_channel_msgs_per_sec"),
+        msgs as f64 / per.secs.max(1e-12),
+    );
+    json.add_derived(
+        &format!("fanin_c{channels}_mux_msgs_per_sec"),
+        msgs as f64 / mux.secs.max(1e-12),
+    );
+    json.add_derived(
+        &format!("fanin_c{channels}_per_channel_threads"),
+        per.pump_threads as f64,
+    );
+    json.add_derived(
+        &format!("fanin_c{channels}_mux_threads"),
+        mux.pump_threads as f64,
+    );
+    json.add_derived(&format!("fanin_c{channels}_per_channel_fds"), per.fds as f64);
+    json.add_derived(&format!("fanin_c{channels}_mux_fds"), mux.fds as f64);
+    json.add_derived(
+        &format!("fanin_c{channels}_mux_over_per_channel_speedup"),
+        speedup,
+    );
     speedup
 }
 

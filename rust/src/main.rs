@@ -18,7 +18,7 @@ use gpp::verify::models::{set_model_n, BaseModel};
 use gpp::verify::laws::GopPogModel;
 use gpp::{ExecutorKind, RuntimeConfig, TransportKind};
 
-/// Shared substrate flags: `--transport rendezvous|buffered|net`,
+/// Shared substrate flags: `--transport rendezvous|buffered|net|netmux`,
 /// `--capacity N`, `--executor threads|pooled|pooled:N`, `--window N`
 /// (net credit window; default = capacity; 1 = per-message ACK),
 /// `--nodelay on|off` (TCP_NODELAY on net/cluster sockets; default on).
@@ -67,7 +67,7 @@ fn sanitise_config(
                     cfg.executor = ExecutorKind::ThreadPerProcess;
                 }
             }
-            TransportKind::Buffered | TransportKind::Net => match stream_len {
+            TransportKind::Buffered | TransportKind::Net | TransportKind::NetMux => match stream_len {
                 Some(len) if cfg.capacity < len + process_count && n < process_count => {
                     let cap = len + process_count;
                     eprintln!(
@@ -142,14 +142,18 @@ COMMANDS
   calibrate          measure per-item workload costs on this host
   bench              hot-path micro benches; writes BENCH_csp.json, BENCH_net.json and
                      BENCH_dispatch.json at the repo root
-                     [--msgs N --capacity C --smoke --min-speedup X]
+                     [--msgs N --capacity C --smoke --min-speedup X --min-mux-ratio Y]
                      (--smoke fails unless windowed net throughput >= X times the
-                      per-message-ACK baseline and every BENCH file is well-formed)
+                      per-message-ACK baseline, mux fan-in >= Y times per-channel
+                      sockets at 16 channels with O(peers) pump threads, and every
+                      BENCH file is well-formed)
   logdemo            logged concordance run + bottleneck report (paper Sec 8)
 
 SUBSTRATE FLAGS (pi, mandelbrot, concordance; or a `config` line in .gpp files)
-  --transport rendezvous|buffered|net  channel transport (default rendezvous;
-                                       net = every edge over loopback TCP)
+  --transport rendezvous|buffered|net|netmux  channel transport (default rendezvous;
+                                       net = every edge over its own loopback TCP
+                                       socket, netmux = every edge multiplexed onto
+                                       one shared loopback connection)
   --capacity N                      buffered/net channel capacity (default 64)
   --executor threads|pooled[:N]     process executor (default threads)
   --window N                        net credit window (default = capacity;
@@ -616,12 +620,14 @@ fn cmd_calibrate() -> i32 {
 /// trajectory file at the repo root with msgs/sec and ns/op rows.
 /// `--smoke` turns it into an acceptance gate: windowed net throughput
 /// must beat the per-message-ACK baseline by `--min-speedup` (default
-/// 2.0) at `--capacity` (default 16, min 8 enforced for the gate), and
-/// every written file must be well-formed.
+/// 2.0) at `--capacity` (default 16, min 8 enforced for the gate); mux
+/// fan-in at 16 channels must reach `--min-mux-ratio` (default 1.0)
+/// times the per-channel-socket throughput with O(peers) pump threads;
+/// and every written file must be well-formed.
 fn cmd_bench(args: &Args) -> i32 {
     use gpp::harness::micro::{
-        dispatch_run, net_edge_run, pipeline_run, record_csp_rows, record_dispatch_rows,
-        record_net_window_rows,
+        dispatch_run, fan_in_run, net_edge_run, pipeline_run, record_csp_rows,
+        record_dispatch_rows, record_net_mux_rows, record_net_window_rows,
     };
     use gpp::harness::{bench_json_looks_valid, BenchJson};
 
@@ -629,6 +635,7 @@ fn cmd_bench(args: &Args) -> i32 {
     let msgs = args.u64("msgs", if smoke { 20_000 } else { 50_000 });
     let capacity = args.usize("capacity", 16).max(if smoke { 8 } else { 1 });
     let min_speedup = args.f64("min-speedup", 2.0);
+    let min_mux_ratio = args.f64("min-mux-ratio", 1.0);
     let best3 = |f: &dyn Fn() -> f64| (0..3).map(|_| f()).fold(f64::INFINITY, f64::min);
     let mut written: Vec<std::path::PathBuf> = Vec::new();
 
@@ -654,25 +661,53 @@ fn cmd_bench(args: &Args) -> i32 {
     }
 
     // (2) Wire layer: one loopback net edge, per-message ACK (window 1)
-    // vs the credit window — the tentpole's acceptance measurement.
-    let net_speedup = {
-        let mut json = BenchJson::new("gpp bench: net credit window");
+    // vs the credit window, plus the fan-in comparison — N per-channel
+    // sockets vs one multiplexed connection at 1 / 16 / 256 channels.
+    let (net_speedup, mux_ratio_16, mux_threads_16) = {
+        let mut json = BenchJson::new("gpp bench: net credit window + mux");
         let ack = best3(&|| net_edge_run(msgs, capacity, 1));
         let win = best3(&|| net_edge_run(msgs, capacity, capacity as u32));
         let speedup = record_net_window_rows(&mut json, msgs, capacity, ack, win);
+        println!(
+            "net: ack {:.0}/s windowed {:.0}/s ({speedup:.1}x)",
+            msgs as f64 / ack,
+            msgs as f64 / win,
+        );
+        let best_fan = |channels: usize, mux: bool| {
+            (0..3)
+                .map(|_| fan_in_run(msgs, channels, capacity, mux))
+                .min_by(|a, b| a.secs.total_cmp(&b.secs))
+                .unwrap()
+        };
+        let mut ratio_16 = 0.0;
+        let mut threads_16 = 0;
+        for channels in [1usize, 16, 256] {
+            let per = best_fan(channels, false);
+            let mux = best_fan(channels, true);
+            let ratio = record_net_mux_rows(&mut json, msgs, channels, &per, &mux);
+            println!(
+                "net: fan-in x{channels}: per-channel {:.0}/s ({} threads, {} fds) \
+                 mux {:.0}/s ({} threads, {} fds) -> {ratio:.2}x",
+                msgs as f64 / per.secs,
+                per.pump_threads,
+                per.fds,
+                msgs as f64 / mux.secs,
+                mux.pump_threads,
+                mux.fds,
+            );
+            if channels == 16 {
+                ratio_16 = ratio;
+                threads_16 = mux.pump_threads;
+            }
+        }
         match json.write_at_root("BENCH_net.json") {
             Ok(p) => {
-                println!(
-                    "net: ack {:.0}/s windowed {:.0}/s ({speedup:.1}x) -> {}",
-                    msgs as f64 / ack,
-                    msgs as f64 / win,
-                    p.display()
-                );
+                println!("net -> {}", p.display());
                 written.push(p);
             }
             Err(e) => return fail(format!("BENCH_net.json: {e}")),
         }
-        speedup
+        (speedup, ratio_16, threads_16)
     };
 
     // (3) Dispatch layer: string-named vs interned method dispatch.
@@ -710,8 +745,24 @@ fn cmd_bench(args: &Args) -> i32 {
              per-message-ACK baseline (required >= {min_speedup:.1}x at capacity {capacity})"
         ));
     }
+    if smoke && mux_ratio_16 < min_mux_ratio {
+        return fail(format!(
+            "bench smoke: mux fan-in throughput only {mux_ratio_16:.2}x per-channel \
+             sockets at 16 channels (required >= {min_mux_ratio:.1}x)"
+        ));
+    }
+    if smoke && mux_threads_16 > 2 {
+        return fail(format!(
+            "bench smoke: mux stood up {mux_threads_16} pump threads for 16 channels \
+             to one peer (required O(peers): <= 2)"
+        ));
+    }
     if smoke {
-        println!("bench smoke passed: windowed/ack = {net_speedup:.2}x (>= {min_speedup:.1}x)");
+        println!(
+            "bench smoke passed: windowed/ack = {net_speedup:.2}x (>= {min_speedup:.1}x), \
+             mux/per-channel = {mux_ratio_16:.2}x (>= {min_mux_ratio:.1}x, {mux_threads_16} \
+             pump threads at 16 channels)"
+        );
     }
     0
 }

@@ -13,6 +13,15 @@
 //! The paper's Mandelbrot cluster (§7, Table 9) is now just one job
 //! ([`run_host`]/[`run_worker`]); Concordance, N-body and any
 //! declarative network ship over the same loop (see [`super::loader`]).
+//!
+//! Since the mux overhaul the host↔worker wire is **multiplexed**:
+//! both sides exchange the [`super::frame::MUX_MAGIC`] handshake at
+//! connect (a legacy peer is rejected gracefully on both ends — see
+//! the magic's docs), and every protocol frame rides the mux framing
+//! on the reserved control channel [`CTRL_CHAN`]. The host therefore
+//! holds exactly one connection per worker, and that connection can
+//! later interleave ordinary net-channel traffic beside control
+//! frames without a second socket.
 
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
@@ -22,9 +31,33 @@ use crate::csp::error::{GppError, Result};
 use crate::util::codec::{from_bytes, to_bytes, Wire};
 use crate::workloads::mandelbrot::{MandelbrotCollect, MandelbrotLine};
 
-use super::frame::{read_frame, set_io_timeouts, set_nodelay, write_frame};
+use super::frame::{
+    mux_handshake, mux_unwrap, mux_wrap, read_frame, set_io_timeouts, set_nodelay, write_frame,
+};
 use super::jobs;
 use super::NetOptions;
+
+/// Host↔worker control traffic rides the mux framing on this reserved
+/// channel id; data channels multiplexed onto the same connection use
+/// ids ≥ 1.
+pub const CTRL_CHAN: u32 = 0;
+
+/// Write one cluster-protocol frame (mux-wrapped on [`CTRL_CHAN`]).
+pub fn write_ctl(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    write_frame(stream, &mux_wrap(CTRL_CHAN, payload))
+}
+
+/// Read one cluster-protocol frame, verifying it is control traffic.
+pub fn read_ctl(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let frame = read_frame(stream)?;
+    let (chan, payload) = mux_unwrap(&frame)?;
+    if chan != CTRL_CHAN {
+        return Err(GppError::Net(format!(
+            "cluster: frame for channel {chan} on the control channel"
+        )));
+    }
+    Ok(payload.to_vec())
+}
 
 /// Host-side experiment configuration for the Mandelbrot job, sent to
 /// each worker on Hello — the paper's "definitional object" installed
@@ -277,14 +310,22 @@ fn conn_loop(
     sync: &Arc<HostSync>,
     in_flight: &mut Option<(usize, Arc<Vec<u8>>)>,
 ) -> Result<()> {
+    // A peer that fails the handshake (a legacy worker, a stray port
+    // scan) surfaces here as a socket error, which the caller treats
+    // as a lost worker — never a fatal run error.
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "worker".into());
+    mux_handshake(stream, &peer)?;
     loop {
-        let frame = read_frame(stream)?;
+        let frame = read_ctl(stream)?;
         match frame.split_first() {
             Some((&W_HELLO, _)) => {
                 let mut reply = vec![H_CONFIG];
                 job.to_string().encode(&mut reply);
                 reply.extend_from_slice(cfg);
-                write_frame(stream, &reply)?;
+                write_ctl(stream, &reply)?;
             }
             Some((&W_REQ, _)) => {
                 if dispatch(stream, sync, in_flight)? {
@@ -327,7 +368,7 @@ fn conn_loop(
                 g.fatal = Some(err.clone());
                 cv.notify_all();
                 drop(g);
-                let _ = write_frame(stream, &[H_DONE]);
+                let _ = write_ctl(stream, &[H_DONE]);
                 return Err(err);
             }
             other => {
@@ -356,12 +397,12 @@ fn dispatch(
         if let Some(e) = &g.fatal {
             let err = e.clone();
             drop(g);
-            let _ = write_frame(stream, &[H_DONE]);
+            let _ = write_ctl(stream, &[H_DONE]);
             return Err(err);
         }
         if g.done == g.total {
             drop(g);
-            write_frame(stream, &[H_DONE])?;
+            write_ctl(stream, &[H_DONE])?;
             return Ok(true);
         }
         // Skip items that were requeued and then completed elsewhere.
@@ -374,7 +415,7 @@ fn dispatch(
             let mut reply = vec![H_WORK];
             (id as u64).encode(&mut reply);
             reply.extend_from_slice(&item);
-            if let Err(e) = write_frame(stream, &reply) {
+            if let Err(e) = write_ctl(stream, &reply) {
                 // This worker is gone before the item went out; the
                 // caller requeues it via in_flight.
                 return Err(e);
@@ -398,8 +439,9 @@ pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
         .map_err(|e| GppError::Net(format!("worker connect {addr}: {e}")))?;
     set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
     set_nodelay(&stream, opts.nodelay)?;
-    write_frame(&mut stream, &[W_HELLO])?;
-    let frame = read_frame(&mut stream)?;
+    mux_handshake(&mut stream, addr)?;
+    write_ctl(&mut stream, &[W_HELLO])?;
+    let frame = read_ctl(&mut stream)?;
     let (job_name, cfg) = match frame.split_first() {
         Some((&H_CONFIG, rest)) => {
             let mut input = rest;
@@ -416,9 +458,9 @@ pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
     let job = jobs::lookup(&job_name)?;
 
     let mut items_done = 0usize;
-    write_frame(&mut stream, &[W_REQ])?;
+    write_ctl(&mut stream, &[W_REQ])?;
     loop {
-        let frame = read_frame(&mut stream)?;
+        let frame = read_ctl(&mut stream)?;
         match frame.split_first() {
             Some((&H_WORK, rest)) => {
                 let mut input = rest;
@@ -428,14 +470,14 @@ pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
                         let mut reply = vec![W_RESULT];
                         id.encode(&mut reply);
                         reply.extend_from_slice(&result);
-                        write_frame(&mut stream, &reply)?;
+                        write_ctl(&mut stream, &reply)?;
                         items_done += 1;
                     }
                     Err(e) => {
                         let mut reply = vec![W_FAIL];
                         id.encode(&mut reply);
                         e.to_string().encode(&mut reply);
-                        let _ = write_frame(&mut stream, &reply);
+                        let _ = write_ctl(&mut stream, &reply);
                         return Err(e);
                     }
                 }
@@ -597,10 +639,11 @@ mod tests {
     /// the "pull the network cable mid-computation" case.
     fn faulty_worker(addr: &str) {
         let mut s = TcpStream::connect(addr).unwrap();
-        write_frame(&mut s, &[W_HELLO]).unwrap();
-        let _cfg = read_frame(&mut s).unwrap();
-        write_frame(&mut s, &[W_REQ]).unwrap();
-        let frame = read_frame(&mut s).unwrap();
+        mux_handshake(&mut s, addr).unwrap();
+        write_ctl(&mut s, &[W_HELLO]).unwrap();
+        let _cfg = read_ctl(&mut s).unwrap();
+        write_ctl(&mut s, &[W_REQ]).unwrap();
+        let frame = read_ctl(&mut s).unwrap();
         assert_eq!(frame.first(), Some(&H_WORK));
         drop(s); // die holding the item
     }
@@ -670,10 +713,11 @@ mod tests {
         // protocol, take exactly one item, die holding it.
         {
             let mut s = connect_retry(&addr);
-            write_frame(&mut s, &[W_HELLO]).unwrap();
-            let _cfg = read_frame(&mut s).unwrap();
-            write_frame(&mut s, &[W_REQ]).unwrap();
-            let frame = read_frame(&mut s).unwrap();
+            mux_handshake(&mut s, &addr).unwrap();
+            write_ctl(&mut s, &[W_HELLO]).unwrap();
+            let _cfg = read_ctl(&mut s).unwrap();
+            write_ctl(&mut s, &[W_REQ]).unwrap();
+            let frame = read_ctl(&mut s).unwrap();
             assert_eq!(frame.first(), Some(&H_WORK));
             drop(s);
         }

@@ -89,11 +89,138 @@ pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
     net_err(stream.read_exact(&mut len_buf), "read frame length")?;
     let len = u32::from_le_bytes(len_buf);
     if len > MAX_FRAME {
+        if len_buf == MUX_MAGIC[..4] {
+            return Err(GppError::Net(
+                "peer opened a multiplexed (mux) connection; this end speaks \
+                 per-channel framing — align --transport on both sides"
+                    .into(),
+            ));
+        }
         return Err(GppError::Net(format!("frame length {len} exceeds bound")));
     }
     let mut buf = vec![0u8; len as usize];
     net_err(stream.read_exact(&mut buf), "read frame payload")?;
     Ok(buf)
+}
+
+// ----------------------------------------------------------------- mux
+
+/// Magic exchanged when a connection opens in **multiplexed** mode
+/// (`TransportKind::NetMux`, the mux cluster protocol). The version is
+/// part of the magic: a peer speaking the older per-channel framing
+/// fails the handshake immediately instead of desyncing mid-stream —
+/// these 8 bytes parse as a frame length far beyond [`MAX_FRAME`], so a
+/// legacy [`read_frame`] peer gets a clean `Net` error naming the
+/// protocol mismatch, and a mux peer facing a legacy frame reads
+/// garbage magic and reports the same. Both directions reject
+/// gracefully with no extra negotiation round-trip.
+pub const MUX_MAGIC: &[u8; 8] = b"GPPMUX02";
+
+/// Send this end's mux magic. Called before reading the peer's, so the
+/// handshake cannot deadlock (8 bytes always fit in the socket buffer).
+pub fn send_mux_magic(stream: &mut TcpStream) -> Result<()> {
+    net_err(stream.write_all(MUX_MAGIC), "send mux magic")?;
+    net_err(stream.flush(), "send mux magic")
+}
+
+/// Read and verify the peer's mux magic.
+pub fn expect_mux_magic(stream: &mut TcpStream, peer: &str) -> Result<()> {
+    let mut got = [0u8; 8];
+    net_err(stream.read_exact(&mut got), "read mux magic")?;
+    if &got != MUX_MAGIC {
+        return Err(GppError::Net(format!(
+            "peer {peer} does not speak mux protocol {} (got {:?}): \
+             upgrade the peer or use the per-channel `net` transport",
+            String::from_utf8_lossy(MUX_MAGIC),
+            String::from_utf8_lossy(&got),
+        )));
+    }
+    Ok(())
+}
+
+/// Symmetric mux handshake: write our magic, then verify the peer's.
+/// Write-first on both sides means two mux ends never deadlock and a
+/// mux/legacy mismatch errors out on both ends (see [`MUX_MAGIC`]).
+pub fn mux_handshake(stream: &mut TcpStream, peer: &str) -> Result<()> {
+    send_mux_magic(stream)?;
+    expect_mux_magic(stream, peer)
+}
+
+/// Prefix a frame payload with its mux channel id:
+/// `[u32 LE chan][payload…]`. The inner payload keeps its existing
+/// first-byte tag (DATA/ACK/POISON for channels, the W_*/H_* tags for
+/// the cluster protocol), so everything above the framing layer is
+/// unchanged and [`write_frames`] coalesces *cross-channel* batches
+/// into one socket write for free.
+pub fn mux_wrap(chan: u32, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(payload.len() + 4);
+    buf.extend_from_slice(&chan.to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Split a mux frame into `(channel id, inner payload)`.
+pub fn mux_unwrap(frame: &[u8]) -> Result<(u32, &[u8])> {
+    if frame.len() < 4 {
+        return Err(GppError::Net(format!(
+            "mux frame too short: {} bytes",
+            frame.len()
+        )));
+    }
+    let chan = u32::from_le_bytes(frame[..4].try_into().unwrap());
+    Ok((chan, &frame[4..]))
+}
+
+/// Incremental frame reassembly for readiness-driven readers: feed
+/// whatever bytes the socket had with [`FrameBuf::push`], then drain
+/// complete frames with [`FrameBuf::next_frame`]. This is how the
+/// `reactor` feature's poll loop parses the same wire format the
+/// blocking [`read_frame`] pump does.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FrameBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append bytes read off the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Take the next complete frame, `None` if more bytes are needed.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        let avail = self.buf.len() - self.pos;
+        if avail < 4 {
+            self.compact();
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        if len > MAX_FRAME {
+            return Err(GppError::Net(format!("frame length {len} exceeds bound")));
+        }
+        let need = 4 + len as usize;
+        if avail < need {
+            self.compact();
+            return Ok(None);
+        }
+        let frame = self.buf[self.pos + 4..self.pos + need].to_vec();
+        self.pos += need;
+        Ok(Some(frame))
+    }
+
+    /// Drop already-consumed bytes so the buffer doesn't grow without
+    /// bound on a long-lived connection.
+    fn compact(&mut self) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -167,6 +294,83 @@ mod tests {
             other => panic!("expected Net, got {other:?}"),
         }
         h.join().unwrap();
+    }
+
+    #[test]
+    fn mux_wrap_unwrap_roundtrip() {
+        let wrapped = mux_wrap(0xDEAD_BEEF, b"payload");
+        let (chan, payload) = mux_unwrap(&wrapped).unwrap();
+        assert_eq!(chan, 0xDEAD_BEEF);
+        assert_eq!(payload, b"payload");
+        let (chan, payload) = mux_unwrap(&mux_wrap(0, b"")).unwrap();
+        assert_eq!((chan, payload), (0, &b""[..]));
+        assert!(matches!(mux_unwrap(&[1, 2, 3]), Err(GppError::Net(_))));
+    }
+
+    #[test]
+    fn mux_handshake_succeeds_between_mux_peers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            mux_handshake(&mut s, "client").unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        mux_handshake(&mut c, "server").unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn legacy_peer_is_rejected_gracefully_on_both_ends() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Mux end: handshake against a legacy peer must error, not hang.
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            mux_handshake(&mut s, "legacy").unwrap_err()
+        });
+        // Legacy end: speaks plain framing; the mux magic arrives as an
+        // absurd frame length and errors with the mismatch explanation.
+        let mut c = TcpStream::connect(addr).unwrap();
+        write_frame(&mut c, &[1]).unwrap();
+        let legacy_err = read_frame(&mut c).unwrap_err();
+        match legacy_err {
+            GppError::Net(msg) => assert!(msg.contains("mux"), "{msg}"),
+            other => panic!("expected Net, got {other:?}"),
+        }
+        drop(c); // legacy side gives up; mux side sees EOF or bad magic
+        match h.join().unwrap() {
+            GppError::Net(msg) => assert!(msg.contains("mux"), "{msg}"),
+            other => panic!("expected Net, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_buf_reassembles_across_arbitrary_splits() {
+        let mut wire = Vec::new();
+        for p in [&b"one"[..], &b""[..], &b"three"[..]] {
+            wire.extend_from_slice(&(p.len() as u32).to_le_bytes());
+            wire.extend_from_slice(p);
+        }
+        // Feed one byte at a time: frames must pop out exactly when
+        // complete, independent of read boundaries.
+        let mut fb = FrameBuf::new();
+        let mut got = Vec::new();
+        for b in &wire {
+            fb.push(std::slice::from_ref(b));
+            while let Some(f) = fb.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, vec![b"one".to_vec(), Vec::new(), b"three".to_vec()]);
+        assert!(fb.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_buf_rejects_oversized_length() {
+        let mut fb = FrameBuf::new();
+        fb.push(&(MAX_FRAME + 1).to_le_bytes());
+        assert!(matches!(fb.next_frame(), Err(GppError::Net(_))));
     }
 
     #[test]

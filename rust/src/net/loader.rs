@@ -26,7 +26,11 @@
 //! host over results in emission order. Spreader/reducer connectors
 //! (`fanAny`/`reduceAny`) describe in-memory distribution and are
 //! subsumed by the cluster farm. Worker death, requeue and timeout
-//! semantics come from the cluster layer unchanged.
+//! semantics come from the cluster layer unchanged — as does the wire:
+//! host↔worker traffic inherits the cluster's single multiplexed
+//! connection per node pair (mux handshake + [`super::cluster::CTRL_CHAN`]
+//! control frames), so a deployed network costs one socket per worker
+//! regardless of how many channels the spec declares.
 
 use crate::builder::{NetworkSpec, ProcSpec};
 use crate::csp::error::{GppError, Result};

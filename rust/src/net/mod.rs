@@ -15,6 +15,9 @@
 //! * [`netchan`] — raw acknowledged channel ends (`NetOut`/`NetIn`);
 //! * [`transport`] — the full [`crate::csp::transport::Transport`]
 //!   contract over sockets (`TransportKind::Net` edges);
+//! * [`mux`] — N channels multiplexed onto **one** connection per node
+//!   pair with a per-frame channel id (`TransportKind::NetMux` edges):
+//!   O(peers) sockets and pump threads instead of O(channels);
 //! * [`cluster`] — a generic work-stealing host loop (Client-Server,
 //!   loop-free hence deadlock-free by Welch's proof [20,21]) with
 //!   per-connection outstanding-work tracking: a worker dying mid-item
@@ -29,6 +32,7 @@
 pub mod frame;
 pub mod netchan;
 pub mod transport;
+pub mod mux;
 pub mod cluster;
 pub mod jobs;
 pub mod loader;
@@ -36,6 +40,7 @@ pub mod loader;
 pub use cluster::{run_host, run_worker, ClusterConfig, HostReport};
 pub use jobs::register_builtin_jobs;
 pub use loader::NodePlacement;
+pub use mux::MuxHub;
 pub use netchan::{NetIn, NetMsg, NetOut};
 
 use std::time::Duration;

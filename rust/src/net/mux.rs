@@ -1,0 +1,1202 @@
+//! Multiplexed per-peer net transport (`TransportKind::NetMux`).
+//!
+//! The per-channel net layer pays one TCP socket, one fd, and one
+//! blocking pump thread for every edge — a node hosting thousands of
+//! channels burns thousands of threads before doing any work. This
+//! module collapses that to **one connection per node pair**: every
+//! mux edge between two nodes shares a single `TcpStream`, every frame
+//! carries a channel id (`[u32 LE chan][tag][body]`, see
+//! [`super::frame::mux_wrap`]), and a demux table routes inbound
+//! frames — DATA, credit grants, and poison alike — to the right
+//! channel core. I/O threading is O(peers), not O(channels): by
+//! default one named pump thread per connection; with the default-off
+//! `reactor` feature a single process-wide readiness loop services
+//! every connection with non-blocking reads (O(1) threads).
+//!
+//! What each side looks like:
+//!
+//! * [`MuxOutCore`] (writing side): holds a per-channel credit window
+//!   like [`super::transport::NetOutCore`], but blocks **before**
+//!   sending once the window is exhausted — the stall rule of a
+//!   capacity-`window` buffer (the per-channel end instead waits
+//!   *after* sending, for byte-compatibility with the old ACK
+//!   protocol; mux has no old protocol to match). `write_batch`
+//!   coalesces credit-bounded chunks with
+//!   [`super::frame::write_frames`], so batches from different
+//!   channels interleave as plain frames on the shared stream.
+//! * [`MuxInCore`] (reading side): frames are dispatched by the shared
+//!   pump into a local [`BufferedCore`], so batched take, Alt
+//!   signalling, and poison-drains-first are inherited unchanged.
+//!   Credits are granted **on consume** (not on queue like the
+//!   per-channel pump): the local queue is sized `max(capacity,
+//!   window)`, so a correct peer can never make the shared pump block
+//!   on one channel's full queue — one slow channel cannot
+//!   head-of-line-block its siblings. Grants are coalesced per ~half
+//!   window, exactly like the per-channel protocol.
+//!
+//! Why the pump can't block, in two inequalities: the writer has sent
+//! at most `consumed + window` frames (credit accounting), and the
+//! queue holds `sent − consumed ≤ window ≤ queue capacity` — so
+//! `BufferedCore::write` always finds room. And a stalled writer is
+//! never starved: once `window` frames are un-granted and the reader
+//! drains them, pending grants reach `window ≥ ⌈window/2⌉`, which is
+//! past the flush threshold.
+//!
+//! Poison is per-channel: a poison frame carries its channel id, so
+//! poisoning one edge never touches siblings on the same connection.
+//! A dead *connection* (EOF, reset, timeout) poisons every channel
+//! registered on it — the wire failure model of the per-channel layer,
+//! scaled to the multiplexed world.
+//!
+//! Pick `Net` (per-channel) when edges terminate at different peers or
+//! when you need byte-compatibility with PR-2 peers; pick `NetMux`
+//! when many edges share a node pair — the fan-in half of the
+//! north-star scale target.
+
+use std::collections::HashMap;
+use std::marker::PhantomData;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+
+use crate::csp::alt::AltSignal;
+use crate::csp::channel::{ends_of, In, Out};
+use crate::csp::error::{GppError, Result};
+use crate::csp::transport::{
+    next_chan_id, BufferedCore, FaultAction, FaultOp, FaultPlan, Transport, TransportKind,
+    TransportStats,
+};
+use crate::util::codec::{from_bytes, to_bytes, Wire};
+
+use super::frame::{
+    expect_mux_magic, mux_unwrap, mux_wrap, send_mux_magic, set_io_timeouts, set_nodelay,
+    write_frames,
+};
+use super::netchan::{encode_credit, parse_credit, TAG_DATA, TAG_POISON};
+use super::NetOptions;
+
+// ------------------------------------------------------------ metrics
+
+static PUMP_THREADS: AtomicUsize = AtomicUsize::new(0);
+static NET_CONNS: AtomicUsize = AtomicUsize::new(0);
+
+/// Live net I/O threads (per-channel pumps, mux pumps, the reactor).
+/// The stress tests and `gpp bench` assert the O(peers) ceiling on
+/// this counter.
+pub fn active_pump_threads() -> usize {
+    PUMP_THREADS.load(Ordering::SeqCst)
+}
+
+/// Live pump-owning net connections in this process (each mux
+/// connection end and each per-channel reading end counts once).
+pub fn active_net_conns() -> usize {
+    NET_CONNS.load(Ordering::SeqCst)
+}
+
+/// RAII increment of [`active_pump_threads`]; held by every net I/O
+/// thread for exactly its lifetime, so "joined" implies "uncounted".
+pub(crate) struct PumpGuard;
+
+impl PumpGuard {
+    pub(crate) fn new() -> Self {
+        PUMP_THREADS.fetch_add(1, Ordering::SeqCst);
+        PumpGuard
+    }
+}
+
+impl Drop for PumpGuard {
+    fn drop(&mut self) {
+        PUMP_THREADS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// RAII increment of [`active_net_conns`].
+pub(crate) struct ConnGuard;
+
+impl ConnGuard {
+    pub(crate) fn new() -> Self {
+        NET_CONNS.fetch_add(1, Ordering::SeqCst);
+        ConnGuard
+    }
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        NET_CONNS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+// ----------------------------------------------------------- demuxing
+
+/// What the demux table routes inbound frames to. Implemented by both
+/// channel cores: the out-core receives credit grants and poison, the
+/// in-core DATA and poison.
+trait MuxSink: Send + Sync {
+    /// Handle one inbound frame payload (`[tag][body]`, channel id
+    /// already stripped). Runs on the shared pump/reactor thread and
+    /// must never block unboundedly — see the module docs for why the
+    /// in-core's queue write is bounded.
+    fn on_frame(&self, payload: &[u8]);
+
+    /// The connection died; fail this channel through the ordinary
+    /// poison protocol.
+    fn on_conn_dead(&self);
+}
+
+/// State shared between a connection's handles, its registered channel
+/// cores, and its pump: the write half, the demux table, and liveness.
+struct ConnShared {
+    peer: String,
+    /// Shared write half. Channel cores interleave frames here; the
+    /// pump owns a cloned read handle, so reads never take this lock.
+    wr: Mutex<TcpStream>,
+    /// Demux table: channel id → core. `Weak` so a dropped channel
+    /// end's core is actually freed — the table is a router, not an
+    /// owner.
+    sinks: Mutex<HashMap<u32, Weak<dyn MuxSink>>>,
+    dead: AtomicBool,
+    _conn: ConnGuard,
+}
+
+impl ConnShared {
+    /// Send one frame for `chan`. Errors name peer and channel id.
+    fn send(&self, chan: u32, payload: &[u8], what: &str) -> Result<()> {
+        let wrapped = [mux_wrap(chan, payload)];
+        self.send_wrapped(chan, &wrapped, what)
+    }
+
+    /// Send pre-encoded inner payloads for `chan` as one coalesced
+    /// socket write.
+    fn send_many(&self, chan: u32, payloads: &[Vec<u8>], what: &str) -> Result<()> {
+        let wrapped: Vec<Vec<u8>> = payloads.iter().map(|p| mux_wrap(chan, p)).collect();
+        self.send_wrapped(chan, &wrapped, what)
+    }
+
+    fn send_wrapped(&self, chan: u32, wrapped: &[Vec<u8>], what: &str) -> Result<()> {
+        if self.dead.load(Ordering::SeqCst) {
+            return Err(GppError::Net(format!(
+                "mux {what} (chan {chan}): connection to {} is down",
+                self.peer
+            )));
+        }
+        let mut wr = self.wr.lock().unwrap();
+        write_frames(&mut wr, wrapped).map_err(|e| match e {
+            GppError::Net(msg) => GppError::Net(format!(
+                "mux {what} (chan {chan}) to {}: {msg}",
+                self.peer
+            )),
+            other => other,
+        })
+    }
+
+    /// Route one inbound frame to its channel core.
+    fn dispatch(&self, frame: &[u8]) {
+        let Ok((chan, payload)) = mux_unwrap(frame) else {
+            // Framing corruption: the stream can't be trusted anymore.
+            self.die();
+            return;
+        };
+        let sink = self.sinks.lock().unwrap().get(&chan).and_then(Weak::upgrade);
+        match sink {
+            Some(s) => s.on_frame(payload),
+            None => {
+                // The channel end on this side is gone. Poison back so
+                // a peer blocked on credits fails instead of waiting
+                // forever — except for poison itself, or the two sides
+                // would bounce poison frames at each other.
+                if payload.first() != Some(&TAG_POISON) {
+                    let _ = self.send(chan, &[TAG_POISON], "reject");
+                }
+                self.sinks.lock().unwrap().remove(&chan);
+            }
+        }
+    }
+
+    /// Mark the connection dead and poison every registered channel.
+    fn die(&self) {
+        if !self.dead.swap(true, Ordering::SeqCst) {
+            let sinks: Vec<Arc<dyn MuxSink>> = self
+                .sinks
+                .lock()
+                .unwrap()
+                .values()
+                .filter_map(Weak::upgrade)
+                .collect();
+            for s in sinks {
+                s.on_conn_dead();
+            }
+        }
+    }
+
+    fn register(&self, chan: u32, sink: Weak<dyn MuxSink>) {
+        self.sinks.lock().unwrap().insert(chan, sink);
+    }
+
+    fn unregister(&self, chan: u32) {
+        self.sinks.lock().unwrap().remove(&chan);
+    }
+}
+
+// --------------------------------------------------------- connection
+
+/// One end of a multiplexed connection. Owns the pump: dropping the
+/// last handle shuts the socket down and **joins** the pump thread, so
+/// no net thread or fd outlives its connection.
+pub struct MuxConn {
+    shared: Arc<ConnShared>,
+    #[cfg(not(feature = "reactor"))]
+    pump: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MuxConn {
+    /// Tune and handshake an already-connected stream, then start its
+    /// pump (or, under the `reactor` feature, register it with the
+    /// process-wide readiness loop).
+    pub fn new(mut stream: TcpStream, peer: &str, opts: &NetOptions) -> Result<MuxConn> {
+        tune_named(&stream, opts, peer)?;
+        send_mux_magic(&mut stream)?;
+        expect_mux_magic(&mut stream, peer)?;
+        Self::from_handshaken(stream, peer, opts)
+    }
+
+    /// Connect to a listening mux peer.
+    pub fn connect(addr: &str, opts: &NetOptions) -> Result<MuxConn> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| GppError::Net(format!("mux connect {addr}: {e}")))?;
+        Self::new(stream, addr, opts)
+    }
+
+    /// Wrap a stream whose mux handshake already ran (the loopback hub
+    /// handshakes both ends on one thread before construction).
+    pub fn from_handshaken(stream: TcpStream, peer: &str, opts: &NetOptions) -> Result<MuxConn> {
+        tune_named(&stream, opts, peer)?;
+        let rd = stream
+            .try_clone()
+            .map_err(|e| GppError::Net(format!("mux clone stream to {peer}: {e}")))?;
+        let shared = Arc::new(ConnShared {
+            peer: peer.to_string(),
+            wr: Mutex::new(stream),
+            sinks: Mutex::new(HashMap::new()),
+            dead: AtomicBool::new(false),
+            _conn: ConnGuard::new(),
+        });
+        #[cfg(not(feature = "reactor"))]
+        let pump = Some(spawn_pump(&shared, rd)?);
+        #[cfg(feature = "reactor")]
+        reactor::register(shared.clone(), rd)?;
+        Ok(MuxConn {
+            shared,
+            #[cfg(not(feature = "reactor"))]
+            pump,
+        })
+    }
+
+    pub fn peer(&self) -> &str {
+        &self.shared.peer
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.shared.dead.load(Ordering::SeqCst)
+    }
+
+    /// Channels currently registered on this end's demux table.
+    pub fn channel_count(&self) -> usize {
+        self.shared.sinks.lock().unwrap().len()
+    }
+}
+
+impl Drop for MuxConn {
+    fn drop(&mut self) {
+        // Unblock the pump's blocking read, then join it: after the
+        // last handle drops, no thread or fd of this connection
+        // survives (satellite fix — the per-channel pumps used to be
+        // detached and anonymous).
+        self.shared.die();
+        if let Ok(wr) = self.shared.wr.lock() {
+            let _ = wr.shutdown(Shutdown::Both);
+        }
+        #[cfg(not(feature = "reactor"))]
+        if let Some(h) = self.pump.take() {
+            let _ = h.join();
+        }
+        #[cfg(feature = "reactor")]
+        reactor::deregister(&self.shared);
+    }
+}
+
+#[cfg(not(feature = "reactor"))]
+fn spawn_pump(
+    shared: &Arc<ConnShared>,
+    mut rd: TcpStream,
+) -> Result<std::thread::JoinHandle<()>> {
+    use super::frame::read_frame;
+    let pump_shared = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name(format!("gpp-net-{}", pump_shared.peer))
+        .spawn(move || {
+            let _t = PumpGuard::new();
+            loop {
+                match read_frame(&mut rd) {
+                    Ok(frame) => pump_shared.dispatch(&frame),
+                    Err(_) => {
+                        pump_shared.die();
+                        return;
+                    }
+                }
+            }
+        })
+        .map_err(|e| GppError::Net(format!("spawn mux pump: {e}")))
+}
+
+/// Socket tuning with errors naming the peer (satellite: uniform
+/// timeouts + `TCP_NODELAY` on every mux connection).
+fn tune_named(stream: &TcpStream, opts: &NetOptions, peer: &str) -> Result<()> {
+    let wrap = |e: GppError| match e {
+        GppError::Net(msg) => GppError::Net(format!("mux connection to {peer}: {msg}")),
+        other => other,
+    };
+    set_io_timeouts(stream, opts.read_timeout, opts.write_timeout).map_err(wrap)?;
+    set_nodelay(stream, opts.nodelay).map_err(wrap)
+}
+
+// ------------------------------------------------------- reactor mode
+
+/// Std-only readiness loop (`reactor` feature): a single
+/// `gpp-net-reactor` thread services every mux connection with
+/// non-blocking reads and [`super::frame::FrameBuf`] reassembly — O(1)
+/// net I/O threads per process, no new dependencies. The thread spins
+/// with a short park between empty sweeps; the default per-peer pump
+/// mode has no such idle cost, which is why the reactor is opt-in.
+#[cfg(feature = "reactor")]
+mod reactor {
+    use super::*;
+    use crate::net::frame::FrameBuf;
+    use std::io::Read;
+
+    struct Entry {
+        shared: Arc<ConnShared>,
+        rd: TcpStream,
+        buf: FrameBuf,
+    }
+
+    struct Registry {
+        conns: Mutex<Vec<Entry>>,
+    }
+
+    static REGISTRY: OnceLock<Arc<Registry>> = OnceLock::new();
+
+    fn registry() -> &'static Arc<Registry> {
+        REGISTRY.get_or_init(|| {
+            let reg = Arc::new(Registry {
+                conns: Mutex::new(Vec::new()),
+            });
+            let r = Arc::clone(&reg);
+            std::thread::Builder::new()
+                .name("gpp-net-reactor".into())
+                .spawn(move || run(r))
+                .expect("spawn net reactor");
+            reg
+        })
+    }
+
+    pub(super) fn register(shared: Arc<ConnShared>, rd: TcpStream) -> Result<()> {
+        rd.set_nonblocking(true)
+            .map_err(|e| GppError::Net(format!("mux reactor nonblocking: {e}")))?;
+        registry().conns.lock().unwrap().push(Entry {
+            shared,
+            rd,
+            buf: FrameBuf::new(),
+        });
+        Ok(())
+    }
+
+    pub(super) fn deregister(shared: &Arc<ConnShared>) {
+        registry()
+            .conns
+            .lock()
+            .unwrap()
+            .retain(|e| !Arc::ptr_eq(&e.shared, shared));
+    }
+
+    fn run(reg: Arc<Registry>) {
+        // The reactor is the process's one net I/O thread; it lives for
+        // the process, so its guard is never dropped.
+        let _t = PumpGuard::new();
+        let mut scratch = vec![0u8; 64 * 1024];
+        loop {
+            let mut progressed = false;
+            let mut dead: Vec<Arc<ConnShared>> = Vec::new();
+            {
+                let mut conns = reg.conns.lock().unwrap();
+                for e in conns.iter_mut() {
+                    if e.shared.dead.load(Ordering::SeqCst) {
+                        dead.push(Arc::clone(&e.shared));
+                        continue;
+                    }
+                    loop {
+                        match e.rd.read(&mut scratch) {
+                            Ok(0) => {
+                                dead.push(Arc::clone(&e.shared));
+                                break;
+                            }
+                            Ok(n) => {
+                                progressed = true;
+                                e.buf.push(&scratch[..n]);
+                                loop {
+                                    match e.buf.next_frame() {
+                                        Ok(Some(f)) => e.shared.dispatch(&f),
+                                        Ok(None) => break,
+                                        Err(_) => {
+                                            dead.push(Arc::clone(&e.shared));
+                                            break;
+                                        }
+                                    }
+                                }
+                                if n < scratch.len() {
+                                    break; // socket drained for now
+                                }
+                            }
+                            Err(ref err) if err.kind() == std::io::ErrorKind::WouldBlock => break,
+                            Err(ref err) if err.kind() == std::io::ErrorKind::Interrupted => {}
+                            Err(_) => {
+                                dead.push(Arc::clone(&e.shared));
+                                break;
+                            }
+                        }
+                    }
+                }
+                conns.retain(|e| !dead.iter().any(|d| Arc::ptr_eq(d, &e.shared)));
+            }
+            for d in dead {
+                d.die();
+            }
+            if !progressed {
+                std::thread::park_timeout(std::time::Duration::from_micros(200));
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- writing side
+
+struct CreditState {
+    credits: u64,
+    poisoned: bool,
+}
+
+/// Writing side of a mux channel (see module docs).
+pub struct MuxOutCore<T> {
+    id: u64,
+    chan: u32,
+    name: String,
+    conn: Arc<ConnShared>,
+    state: Mutex<CreditState>,
+    grants: Condvar,
+    window: u64,
+    poisoned: AtomicBool,
+    faults: Option<Arc<FaultPlan>>,
+    _marker: PhantomData<fn(T) -> T>,
+}
+
+impl<T: Wire + Send> MuxOutCore<T> {
+    fn new(
+        conn: Arc<ConnShared>,
+        chan: u32,
+        name: &str,
+        window: u64,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Arc<Self> {
+        let window = window.max(1);
+        Arc::new(Self {
+            id: next_chan_id(),
+            chan,
+            name: name.to_string(),
+            conn,
+            state: Mutex::new(CreditState {
+                credits: window,
+                poisoned: false,
+            }),
+            grants: Condvar::new(),
+            window,
+            poisoned: AtomicBool::new(false),
+            faults,
+            _marker: PhantomData,
+        })
+    }
+
+    fn wrong_end<U>(&self, op: &str) -> Result<U> {
+        Err(GppError::Net(format!(
+            "mux channel '{}' (chan {}) to {}: {op} on the writing end",
+            self.name, self.chan, self.conn.peer
+        )))
+    }
+
+    fn latch(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+        self.state.lock().unwrap().poisoned = true;
+        self.grants.notify_all();
+    }
+
+    fn mark_poisoned(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.poisoned = true;
+        self.poisoned.store(true, Ordering::SeqCst);
+        drop(st);
+        self.grants.notify_all();
+    }
+}
+
+impl<T: Wire + Send> MuxSink for MuxOutCore<T> {
+    fn on_frame(&self, payload: &[u8]) {
+        match parse_credit(payload, &self.name) {
+            Ok(n) => {
+                let mut st = self.state.lock().unwrap();
+                st.credits += n;
+                drop(st);
+                self.grants.notify_all();
+            }
+            // Poison frame, or protocol corruption: either way the
+            // channel is done.
+            Err(_) => self.mark_poisoned(),
+        }
+    }
+
+    fn on_conn_dead(&self) {
+        self.mark_poisoned();
+    }
+}
+
+impl<T: Wire + Send> Transport<T> for MuxOutCore<T> {
+    fn write(&self, value: T) -> Result<()> {
+        self.write_batch(vec![value])
+    }
+
+    /// Credit-bounded coalesced write: encode every value, then stream
+    /// the frames in chunks bounded by the credits held — each chunk
+    /// one buffered socket write, interleaving freely with sibling
+    /// channels on the shared stream. Fault rules count every frame,
+    /// exactly as the per-channel end does; frames preceding a
+    /// triggered fault still go out before the fault's side effect.
+    fn write_batch(&self, values: Vec<T>) -> Result<()> {
+        if self.poisoned.load(Ordering::SeqCst) {
+            return Err(GppError::Poisoned);
+        }
+        let mut frames: Vec<Vec<u8>> = Vec::with_capacity(values.len());
+        // (send_poison_frame, error) deferred until the survivors went out.
+        let mut pending: Option<(bool, GppError)> = None;
+        for v in &values {
+            if let Some(fp) = &self.faults {
+                match fp.apply(FaultOp::Write, &self.name) {
+                    None => {}
+                    Some(FaultAction::Drop) => {
+                        pending = Some((
+                            false,
+                            GppError::Net(format!(
+                                "mux channel '{}' (chan {}) to {}: injected fault: \
+                                 DATA frame lost before grant",
+                                self.name, self.chan, self.conn.peer
+                            )),
+                        ));
+                        break;
+                    }
+                    Some(FaultAction::Poison) => {
+                        pending = Some((true, GppError::Poisoned));
+                        break;
+                    }
+                    Some(FaultAction::Fail(msg)) => {
+                        pending = Some((false, GppError::Net(msg)));
+                        break;
+                    }
+                }
+            }
+            let mut payload = vec![TAG_DATA];
+            payload.extend(to_bytes(v));
+            frames.push(payload);
+        }
+        let mut st = self.state.lock().unwrap();
+        let mut sent = 0usize;
+        while sent < frames.len() {
+            // Block *before* sending once the window is exhausted — the
+            // stall rule of a capacity-`window` buffer (module docs).
+            while st.credits == 0 && !st.poisoned {
+                st = self.grants.wait(st).unwrap();
+            }
+            if st.poisoned {
+                self.poisoned.store(true, Ordering::SeqCst);
+                return Err(GppError::Poisoned);
+            }
+            let n = (frames.len() - sent).min(st.credits as usize);
+            if let Err(e) = self
+                .conn
+                .send_many(self.chan, &frames[sent..sent + n], "write")
+            {
+                drop(st);
+                self.latch();
+                return Err(e);
+            }
+            st.credits -= n as u64;
+            sent += n;
+        }
+        drop(st);
+        if let Some((send_poison, e)) = pending {
+            self.latch();
+            if send_poison {
+                let _ = self.conn.send(self.chan, &[TAG_POISON], "poison");
+            }
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    fn read(&self) -> Result<T> {
+        self.wrong_end("read")
+    }
+
+    fn try_read(&self) -> Result<Option<T>> {
+        self.wrong_end("try_read")
+    }
+
+    fn read_batch(&self, _max: usize) -> Result<Vec<T>> {
+        self.wrong_end("read_batch")
+    }
+
+    fn read_batch_while(&self, _max: usize, _keep: &dyn Fn(&T) -> bool) -> Result<Vec<T>> {
+        self.wrong_end("read_batch_while")
+    }
+
+    fn ready(&self) -> bool {
+        false
+    }
+
+    fn register_alt(&self, _sig: &Arc<AltSignal>) -> bool {
+        false
+    }
+
+    fn poison(&self) {
+        if !self.poisoned.swap(true, Ordering::SeqCst) {
+            self.state.lock().unwrap().poisoned = true;
+            self.grants.notify_all();
+            let _ = self.conn.send(self.chan, &[TAG_POISON], "poison");
+        }
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::NetMux
+    }
+
+    fn capacity(&self) -> Option<usize> {
+        Some(self.window as usize)
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats::default()
+    }
+}
+
+impl<T> Drop for MuxOutCore<T> {
+    fn drop(&mut self) {
+        // A dropped writer behaves like a closed per-channel socket:
+        // the reader drains queued values, then poisons.
+        if !self.poisoned.load(Ordering::SeqCst) {
+            let _ = self.conn.send(self.chan, &[TAG_POISON], "drop");
+        }
+        self.conn.unregister(self.chan);
+    }
+}
+
+// ------------------------------------------------------- reading side
+
+/// Reading side of a mux channel (see module docs).
+pub struct MuxInCore<T: Send> {
+    id: u64,
+    chan: u32,
+    name: String,
+    conn: Arc<ConnShared>,
+    inner: Arc<BufferedCore<T>>,
+    /// Flush a coalesced grant frame once this many consumes are
+    /// pending — `(window / 2).max(1)`, the per-channel threshold.
+    grant_threshold: u64,
+    pending_grants: Mutex<u64>,
+    poison_sent: AtomicBool,
+    faults: Option<Arc<FaultPlan>>,
+}
+
+impl<T: Wire + Send + 'static> MuxInCore<T> {
+    fn new(
+        conn: Arc<ConnShared>,
+        chan: u32,
+        name: &str,
+        capacity: usize,
+        window: u64,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Arc<Self> {
+        let window = window.max(1);
+        Arc::new(Self {
+            id: next_chan_id(),
+            chan,
+            name: name.to_string(),
+            conn,
+            // Sized to hold a full un-granted window, so the shared
+            // pump's queue write is always bounded (module docs).
+            inner: BufferedCore::new(
+                format!("{name}.mux"),
+                capacity.max(window as usize).max(1),
+            ),
+            grant_threshold: (window / 2).max(1),
+            pending_grants: Mutex::new(0),
+            poison_sent: AtomicBool::new(false),
+            faults,
+        })
+    }
+
+    fn send_poison_once(&self) {
+        if !self.poison_sent.swap(true, Ordering::SeqCst) {
+            let _ = self.conn.send(self.chan, &[TAG_POISON], "poison");
+        }
+    }
+
+    /// Credit the writer for `n` consumed (or discarded) values,
+    /// flushing a coalesced grant frame past the threshold.
+    fn granted(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let flush = {
+            let mut p = self.pending_grants.lock().unwrap();
+            *p += n;
+            if *p >= self.grant_threshold {
+                std::mem::take(&mut *p)
+            } else {
+                0
+            }
+        };
+        if flush > 0 && self.conn.send(self.chan, &encode_credit(flush), "grant").is_err() {
+            self.inner.poison();
+        }
+    }
+}
+
+impl<T: Wire + Send + 'static> MuxSink for MuxInCore<T> {
+    fn on_frame(&self, payload: &[u8]) {
+        match payload.split_first() {
+            Some((&TAG_DATA, rest)) => {
+                if let Some(fp) = &self.faults {
+                    match fp.apply(FaultOp::Read, &self.name) {
+                        Some(FaultAction::Drop) => {
+                            // Silent message loss: grant the credit so
+                            // the writer proceeds, discard the payload.
+                            self.granted(1);
+                            return;
+                        }
+                        Some(FaultAction::Poison) | Some(FaultAction::Fail(_)) => {
+                            self.inner.poison();
+                            self.send_poison_once();
+                            return;
+                        }
+                        None => {}
+                    }
+                }
+                match from_bytes::<T>(rest) {
+                    Ok(v) => {
+                        // Bounded by the credit window (≤ queue
+                        // capacity), so this never blocks the shared
+                        // pump on a correct peer.
+                        if self.inner.write(v).is_err() {
+                            // Locally poisoned while queueing.
+                            self.send_poison_once();
+                        }
+                    }
+                    Err(_) => {
+                        self.inner.poison();
+                        self.send_poison_once();
+                    }
+                }
+            }
+            Some((&TAG_POISON, _)) => self.inner.poison(),
+            _ => {
+                self.inner.poison();
+                self.send_poison_once();
+            }
+        }
+    }
+
+    fn on_conn_dead(&self) {
+        self.inner.poison();
+    }
+}
+
+impl<T: Wire + Send + 'static> Transport<T> for MuxInCore<T> {
+    fn write(&self, _value: T) -> Result<()> {
+        Err(GppError::Net(format!(
+            "mux channel '{}' (chan {}) to {}: write on the reading end",
+            self.name, self.chan, self.conn.peer
+        )))
+    }
+
+    fn read(&self) -> Result<T> {
+        let v = self.inner.read()?;
+        self.granted(1);
+        Ok(v)
+    }
+
+    fn try_read(&self) -> Result<Option<T>> {
+        let v = self.inner.try_read()?;
+        if v.is_some() {
+            self.granted(1);
+        }
+        Ok(v)
+    }
+
+    fn read_batch(&self, max: usize) -> Result<Vec<T>> {
+        let vs = self.inner.read_batch(max)?;
+        self.granted(vs.len() as u64);
+        Ok(vs)
+    }
+
+    fn read_batch_while(&self, max: usize, keep: &dyn Fn(&T) -> bool) -> Result<Vec<T>> {
+        let vs = self.inner.read_batch_while(max, keep)?;
+        self.granted(vs.len() as u64);
+        Ok(vs)
+    }
+
+    fn ready(&self) -> bool {
+        self.inner.ready()
+    }
+
+    fn register_alt(&self, sig: &Arc<AltSignal>) -> bool {
+        self.inner.register_alt(sig)
+    }
+
+    fn poison(&self) {
+        self.inner.poison();
+        self.send_poison_once();
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.inner.is_poisoned()
+    }
+
+    fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::NetMux
+    }
+
+    fn capacity(&self) -> Option<usize> {
+        self.inner.capacity()
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.stats()
+    }
+}
+
+impl<T: Send> Drop for MuxInCore<T> {
+    fn drop(&mut self) {
+        // A vanished reader must unblock the peer's writer.
+        if !self.poison_sent.swap(true, Ordering::SeqCst) {
+            let _ = self.conn.send(self.chan, &[TAG_POISON], "drop");
+        }
+        self.conn.unregister(self.chan);
+    }
+}
+
+// ---------------------------------------------------------------- hub
+
+/// A multiplexed loopback node pair: N channels, **one** TCP
+/// connection, O(1) pump threads. This is what `TransportKind::NetMux`
+/// builds channels on — every value still crosses a real socket and
+/// the full mux frame/credit protocol.
+pub struct MuxHub {
+    /// Writer-side connection end (out-cores register here).
+    a: MuxConn,
+    /// Reader-side connection end (in-cores register here).
+    b: MuxConn,
+    next_chan: AtomicU32,
+}
+
+impl MuxHub {
+    /// Open the loopback socket pair and both connection ends.
+    /// `opts` tunes the sockets (nodelay, write timeout); per-channel
+    /// read timeouts are intentionally **not** applied — an idle shared
+    /// connection is normal when its channels are quiet, unlike a
+    /// per-channel socket where silence means a dead peer.
+    pub fn new(opts: &NetOptions) -> Result<Arc<MuxHub>> {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| GppError::Net(format!("bind mux loopback: {e}")))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| GppError::Net(format!("mux local_addr: {e}")))?;
+        // Connect completes via the listen backlog before accept runs,
+        // so doing both on one thread cannot deadlock.
+        let mut client = TcpStream::connect(addr)
+            .map_err(|e| GppError::Net(format!("connect mux loopback: {e}")))?;
+        let (mut server, _) = listener
+            .accept()
+            .map_err(|e| GppError::Net(format!("accept mux loopback: {e}")))?;
+        let conn_opts = NetOptions {
+            read_timeout: None,
+            ..*opts
+        };
+        // Handshake both ends from this one thread (write-first on
+        // both sides, so the order below cannot block).
+        send_mux_magic(&mut client)?;
+        send_mux_magic(&mut server)?;
+        let peer_a = format!("loopback:{addr}");
+        let peer_b = format!("loopback:{}", client.local_addr().map_or_else(|_| "?".into(), |a| a.to_string()));
+        expect_mux_magic(&mut client, &peer_a)?;
+        expect_mux_magic(&mut server, &peer_b)?;
+        let a = MuxConn::from_handshaken(client, &peer_a, &conn_opts)?;
+        let b = MuxConn::from_handshaken(server, &peer_b, &conn_opts)?;
+        Ok(Arc::new(MuxHub {
+            a,
+            b,
+            next_chan: AtomicU32::new(1),
+        }))
+    }
+
+    /// Open one channel over the shared connection. `opts` sizes the
+    /// credit window (`window_for(capacity)`); socket-level options
+    /// were fixed at hub construction.
+    pub fn channel<T: Wire + Send + 'static>(
+        &self,
+        name: &str,
+        capacity: usize,
+        opts: &NetOptions,
+    ) -> (Out<T>, In<T>) {
+        self.channel_faulted(name, capacity, opts, None)
+    }
+
+    /// [`MuxHub::channel`] with a scripted fault plan: the writing end
+    /// applies `Write` rules, the dispatching end `Read` rules.
+    pub fn channel_faulted<T: Wire + Send + 'static>(
+        &self,
+        name: &str,
+        capacity: usize,
+        opts: &NetOptions,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> (Out<T>, In<T>) {
+        let chan = self.next_chan.fetch_add(1, Ordering::SeqCst);
+        let window = opts.window_for(capacity);
+        let out_core = MuxOutCore::<T>::new(
+            Arc::clone(&self.a.shared),
+            chan,
+            name,
+            window,
+            faults.clone(),
+        );
+        let in_core = MuxInCore::<T>::new(
+            Arc::clone(&self.b.shared),
+            chan,
+            name,
+            capacity,
+            window,
+            faults,
+        );
+        let out_sink: Arc<dyn MuxSink> = out_core.clone();
+        self.a.shared.register(chan, Arc::downgrade(&out_sink));
+        let in_sink: Arc<dyn MuxSink> = in_core.clone();
+        self.b.shared.register(chan, Arc::downgrade(&in_sink));
+        let (out, _unused_in) = ends_of(out_core as Arc<dyn Transport<T>>);
+        let (_unused_out, inp) = ends_of(in_core as Arc<dyn Transport<T>>);
+        (out, inp)
+    }
+
+    /// TCP connections backing this hub — always 1, however many
+    /// channels are open (the acceptance criterion, as an API).
+    pub fn connections(&self) -> usize {
+        1
+    }
+
+    /// Channels currently open on the hub.
+    pub fn channel_count(&self) -> usize {
+        self.b.channel_count()
+    }
+}
+
+static GLOBAL_HUB: OnceLock<Arc<MuxHub>> = OnceLock::new();
+
+/// The process-wide loopback hub backing `TransportKind::NetMux`
+/// channels from [`crate::csp::config::RuntimeConfig`]: every netmux
+/// edge in the process shares its one connection. Sockets use default
+/// tuning (nodelay on, no timeouts); per-channel credit windows are
+/// still honoured, since the window is protocol state, not socket
+/// state.
+pub fn global_hub() -> Result<Arc<MuxHub>> {
+    if let Some(h) = GLOBAL_HUB.get() {
+        return Ok(Arc::clone(h));
+    }
+    // Built outside `get_or_init` because construction can fail; a
+    // racing loser's hub is dropped (its pump joins cleanly).
+    let hub = MuxHub::new(&NetOptions::default())?;
+    Ok(Arc::clone(GLOBAL_HUB.get_or_init(|| hub)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn hub_pair<T: Wire + Send + 'static>(cap: usize) -> (Arc<MuxHub>, Out<T>, In<T>) {
+        let opts = NetOptions::default();
+        let hub = MuxHub::new(&opts).unwrap();
+        let (tx, rx) = hub.channel::<T>("t", cap, &opts);
+        (hub, tx, rx)
+    }
+
+    #[test]
+    fn values_cross_the_shared_socket_in_order() {
+        let (_hub, tx, rx) = hub_pair::<u64>(4);
+        let h = thread::spawn(move || {
+            for i in 0..50u64 {
+                tx.write(i).unwrap();
+            }
+        });
+        for i in 0..50u64 {
+            assert_eq!(rx.read().unwrap(), i);
+        }
+        h.join().unwrap();
+        assert_eq!(rx.transport_kind(), TransportKind::NetMux);
+    }
+
+    #[test]
+    fn batched_take_works_over_the_mux() {
+        let (_hub, tx, rx) = hub_pair::<u32>(16);
+        let h = thread::spawn(move || {
+            tx.write_batch((0..10u32).collect()).unwrap();
+        });
+        let mut got = Vec::new();
+        while got.len() < 10 {
+            got.extend(rx.read_batch(8).unwrap());
+        }
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn writer_poison_drains_then_fails_reader() {
+        let (_hub, tx, rx) = hub_pair::<u32>(8);
+        tx.write(1).unwrap();
+        tx.write(2).unwrap();
+        tx.poison();
+        assert_eq!(rx.read().unwrap(), 1);
+        assert_eq!(rx.read().unwrap(), 2);
+        assert_eq!(rx.read(), Err(GppError::Poisoned));
+        assert_eq!(tx.write(3), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn reader_poison_reaches_writer() {
+        let (_hub, tx, rx) = hub_pair::<u32>(1);
+        rx.poison();
+        // The writer learns via the poison frame in its grant slot —
+        // within a window's worth of writes.
+        let mut poisoned = false;
+        for i in 0..4 {
+            if tx.write(i) == Err(GppError::Poisoned) {
+                poisoned = true;
+                break;
+            }
+        }
+        assert!(poisoned, "writer never observed reader poison");
+        assert_eq!(rx.read(), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn dropped_writer_poisons_reader_instead_of_hanging() {
+        let (_hub, tx, rx) = hub_pair::<u32>(4);
+        tx.write(9).unwrap();
+        drop(tx);
+        assert_eq!(rx.read().unwrap(), 9);
+        assert_eq!(rx.read(), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn alt_signalling_fires_on_mux_arrival() {
+        use crate::csp::alt::Alt;
+        let (_hub, tx, rx) = hub_pair::<u32>(4);
+        let mut alt = Alt::new(vec![rx]);
+        let h = thread::spawn(move || {
+            thread::sleep(std::time::Duration::from_millis(30));
+            tx.write(5).unwrap();
+        });
+        let (idx, v) = alt.select_read().unwrap();
+        assert_eq!(idx, 0);
+        assert_eq!(v, 5);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn injected_write_fault_fails_writer_deterministically() {
+        use crate::csp::transport::FaultRule;
+        let plan = FaultPlan::new(vec![FaultRule::new(
+            "t",
+            FaultOp::Write,
+            3,
+            FaultAction::Drop,
+        )]);
+        let opts = NetOptions::default();
+        let hub = MuxHub::new(&opts).unwrap();
+        let (tx, rx) = hub.channel_faulted::<u64>("t", 4, &opts, Some(plan.clone()));
+        tx.write(1).unwrap();
+        tx.write(2).unwrap();
+        let err = tx.write(3).unwrap_err();
+        assert!(err.to_string().contains("DATA frame lost"), "{err}");
+        assert_eq!(tx.write(4), Err(GppError::Poisoned));
+        assert_eq!(rx.read().unwrap(), 1);
+        assert_eq!(rx.read().unwrap(), 2);
+        assert_eq!(plan.fired(), 1);
+    }
+
+    #[test]
+    fn injected_silent_frame_loss_is_granted_but_dropped() {
+        use crate::csp::transport::FaultRule;
+        let plan = FaultPlan::new(vec![FaultRule::new(
+            "t",
+            FaultOp::Read,
+            2,
+            FaultAction::Drop,
+        )]);
+        let opts = NetOptions::default();
+        let hub = MuxHub::new(&opts).unwrap();
+        let (tx, rx) = hub.channel_faulted::<u64>("t", 8, &opts, Some(plan));
+        for i in 0..4u64 {
+            tx.write(i).unwrap(); // all writes credited — the loss is silent
+        }
+        drop(tx);
+        let mut got = Vec::new();
+        while let Ok(v) = rx.read() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 2, 3], "exactly frame #2 vanished");
+    }
+
+    #[test]
+    fn global_hub_is_shared() {
+        let h1 = global_hub().unwrap();
+        let h2 = global_hub().unwrap();
+        assert!(Arc::ptr_eq(&h1, &h2));
+        let opts = NetOptions::default();
+        let (tx, rx) = h1.channel::<u64>("g", 2, &opts);
+        tx.write(42).unwrap();
+        assert_eq!(rx.read().unwrap(), 42);
+    }
+}

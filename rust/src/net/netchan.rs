@@ -380,29 +380,53 @@ mod tests {
     }
 
     #[test]
-    #[cfg_attr(
-        not(feature = "timing-tests"),
-        ignore = "wall-clock-dependent; run with --features timing-tests"
-    )]
-    fn write_blocks_until_ack() {
-        // With a reader that delays, the writer's second write cannot
-        // complete before the first read (synchronised semantics).
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let h = std::thread::spawn(move || {
-            let (s, _) = listener.accept().unwrap();
-            let rx = NetIn::<u64>::new(s);
-            std::thread::sleep(std::time::Duration::from_millis(60));
-            let t0 = std::time::Instant::now();
-            let _ = rx.read().unwrap();
-            t0
-        });
-        let tx = NetOut::<u64>::new(TcpStream::connect(addr).unwrap());
-        let t0 = std::time::Instant::now();
-        tx.write(&42).unwrap();
-        let elapsed = t0.elapsed();
-        assert!(elapsed >= std::time::Duration::from_millis(40), "{elapsed:?}");
-        let _ = h.join().unwrap();
+    fn ack_latency_stalls_writer_on_the_virtual_clock() {
+        // Deterministic re-expression of the old wall-clock-quarantined
+        // "write blocks until ack" check, window-parameterised: with a
+        // window of W the writer streams W frames un-acknowledged, then
+        // stalls until the reader's grants arrive — the stall rule of a
+        // capacity-W buffer, which is what a sim buffered channel
+        // models exactly. W = 1 is the original synchronised DATA→ACK
+        // semantics: the 2nd write cannot complete before the 1st read.
+        // The socket tests in this file verify the ack bytes; this one
+        // verifies the latency ordering, with no sleeps and no
+        // quarantine.
+        use crate::csp::process::ProcessFn;
+        use crate::csp::sim::{sim_now, sim_sleep, SimNet, SimPolicy};
+        use std::sync::{Arc, Mutex};
+        const READ_AT: u64 = 60;
+        for window in [1usize, 3] {
+            let net = SimNet::new(SimPolicy::RoundRobin);
+            let (tx, rx) = net.buffered_channel::<u64>("ack", window);
+            let times: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+            let record = times.clone();
+            let total = window as u64 + 1;
+            let writer = ProcessFn::boxed("writer", move || {
+                for i in 0..total {
+                    tx.write(i)?;
+                    record.lock().unwrap().push(sim_now().unwrap());
+                }
+                Ok(())
+            });
+            let reader = ProcessFn::boxed("reader", move || {
+                sim_sleep(READ_AT)?;
+                for _ in 0..total {
+                    rx.read()?;
+                }
+                Ok(())
+            });
+            net.run("ack-latency", vec![writer, reader]).unwrap();
+            let times = times.lock().unwrap();
+            for (i, &t) in times.iter().take(window).enumerate() {
+                assert_eq!(t, 0, "write {i} fits in the window {window}");
+            }
+            assert!(
+                times[window] >= READ_AT,
+                "write {window} completed at vt {} before the reader's first \
+                 read at vt {READ_AT} (window {window})",
+                times[window]
+            );
+        }
     }
 
     #[test]

@@ -7,8 +7,8 @@ use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
 use gpp::builder::parse_network;
-use gpp::net::cluster::{default_config, run_host, run_worker};
-use gpp::net::frame::{read_frame, write_frame};
+use gpp::net::cluster::{default_config, read_ctl, run_host, run_worker, write_ctl};
+use gpp::net::frame::{mux_handshake, read_frame, write_frame};
 use gpp::net::loader;
 use gpp::net::{NetIn, NetMsg, NetOut, NetOptions};
 use gpp::workloads::{concordance, mandelbrot, nbody};
@@ -317,10 +317,11 @@ fn killed_worker_does_not_lose_work_or_hang_host() {
                 })
             })
             .expect("host never listened");
-        write_frame(&mut s, &[1]).unwrap(); // W_HELLO
-        let _cfg = read_frame(&mut s).unwrap();
-        write_frame(&mut s, &[2]).unwrap(); // W_REQ
-        let work = read_frame(&mut s).unwrap();
+        mux_handshake(&mut s, &addr).unwrap();
+        write_ctl(&mut s, &[1]).unwrap(); // W_HELLO
+        let _cfg = read_ctl(&mut s).unwrap();
+        write_ctl(&mut s, &[2]).unwrap(); // W_REQ
+        let work = read_ctl(&mut s).unwrap();
         assert_eq!(work.first(), Some(&11), "expected H_WORK");
         drop(s);
     }
@@ -332,6 +333,52 @@ fn killed_worker_does_not_lose_work_or_hang_host() {
     assert_eq!(done, 40, "survivor computed every row, including the stolen one");
     assert_eq!(collect.rows_seen, 40, "no lost work");
     assert_eq!(collect.checksum(), seq.checksum(), "result still exact");
+}
+
+/// A legacy (pre-mux) peer is rejected gracefully on **both** ends: the
+/// peer's first length-prefixed read sees the host's mux magic and
+/// fails with a message naming the mismatch, the host counts one lost
+/// worker, and a real worker still completes the whole run.
+#[test]
+fn legacy_peer_is_rejected_and_run_completes() {
+    setup();
+    use gpp::net::cluster::serve_items;
+    use gpp::net::jobs::MANDELBROT_ROW;
+    use gpp::util::codec::to_bytes;
+    let addr = free_addr();
+    let cfg = to_bytes(&default_config(32, 8, 10, 1));
+    let items: Vec<Vec<u8>> = (0..6i64).map(|r| to_bytes(&r)).collect();
+    let addr2 = addr.clone();
+    let host = std::thread::spawn(move || {
+        serve_items(&addr2, 2, MANDELBROT_ROW, &cfg, items, &NetOptions::default())
+    });
+    // Legacy peer (on this thread, to completion): speaks the old
+    // unmultiplexed framing. Its HELLO parses as garbage against the
+    // host's mux magic; its own read then hits the magic and fails
+    // with a diagnostic naming the protocol mismatch.
+    {
+        let mut s = (0..400)
+            .find_map(|_| {
+                TcpStream::connect(&addr).ok().or_else(|| {
+                    std::thread::sleep(Duration::from_millis(5));
+                    None
+                })
+            })
+            .expect("host never listened");
+        write_frame(&mut s, &[1]).unwrap(); // legacy W_HELLO
+        let err = read_frame(&mut s).unwrap_err();
+        assert!(
+            err.to_string().contains("mux"),
+            "legacy peer should learn why it was rejected: {err}"
+        );
+        drop(s);
+    }
+    let done = run_worker(&addr).unwrap();
+    let report = host.join().unwrap().unwrap();
+    assert_eq!(done, 6, "real worker drains the full queue");
+    assert_eq!(report.results.len(), 6);
+    assert_eq!(report.workers_lost, 1, "legacy peer counted as a lost worker");
+    assert_eq!(report.workers_joined, 2);
 }
 
 /// Scenario diversity: Concordance (t02's workload) through the same
