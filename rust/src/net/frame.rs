@@ -83,6 +83,47 @@ pub fn write_frames(stream: &mut TcpStream, payloads: &[Vec<u8>]) -> Result<()> 
     Ok(())
 }
 
+/// [`write_frames`] for a stream whose open file description may be
+/// non-blocking. The `reactor` feature marks the shared mux fd
+/// `O_NONBLOCK` for its readiness loop, and the flag lives on the open
+/// file *description* — so a `try_clone`'d write half sees it too, and
+/// a plain `write_all` would fail with `WouldBlock` whenever the kernel
+/// send buffer is momentarily full. This variant resumes short writes
+/// where they left off and waits out `WouldBlock` with a brief sleep;
+/// a dead socket still errors (`EPIPE`/reset), it never spins forever.
+/// (Write *timeouts* are meaningless on a non-blocking fd, so none are
+/// honoured here.)
+#[cfg(feature = "reactor")]
+pub fn write_frames_retry(stream: &mut TcpStream, payloads: &[Vec<u8>]) -> Result<()> {
+    let total: usize = payloads.iter().map(|p| p.len() + 4).sum();
+    let mut buf = Vec::with_capacity(total);
+    for p in payloads {
+        let len = p.len() as u32;
+        if len > MAX_FRAME {
+            return Err(GppError::Net(format!("frame too large: {len}")));
+        }
+        buf.extend_from_slice(&len.to_le_bytes());
+        buf.extend_from_slice(p);
+    }
+    let mut off = 0;
+    while off < buf.len() {
+        match stream.write(&buf[off..]) {
+            Ok(0) => {
+                return Err(GppError::Net(
+                    "write frame batch: wrote 0 bytes (connection closed)".into(),
+                ))
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+            Err(e) => return Err(GppError::Net(format!("write frame batch: {e}"))),
+        }
+    }
+    net_err(stream.flush(), "flush frame batch")
+}
+
 /// Read one frame.
 pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
     let mut len_buf = [0u8; 4];

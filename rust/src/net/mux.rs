@@ -70,7 +70,6 @@ use crate::util::codec::{from_bytes, to_bytes, Wire};
 
 use super::frame::{
     expect_mux_magic, mux_unwrap, mux_wrap, send_mux_magic, set_io_timeouts, set_nodelay,
-    write_frames,
 };
 use super::netchan::{encode_credit, parse_credit, TAG_DATA, TAG_POISON};
 use super::NetOptions;
@@ -150,6 +149,12 @@ struct ConnShared {
     /// Shared write half. Channel cores interleave frames here; the
     /// pump owns a cloned read handle, so reads never take this lock.
     wr: Mutex<TcpStream>,
+    /// Independently cloned handle used only for `shutdown` at
+    /// teardown. A send blocked on a stalled peer holds the `wr` lock
+    /// indefinitely (there is no default write timeout), and `shutdown`
+    /// doesn't need that lock — so [`MuxConn::drop`] can always break
+    /// the connection, stalled siblings included.
+    ctl: TcpStream,
     /// Demux table: channel id → core. `Weak` so a dropped channel
     /// end's core is actually freed — the table is a router, not an
     /// owner.
@@ -180,7 +185,15 @@ impl ConnShared {
             )));
         }
         let mut wr = self.wr.lock().unwrap();
-        write_frames(&mut wr, wrapped).map_err(|e| match e {
+        // Reactor mode: `O_NONBLOCK` is set on the shared open file
+        // description for the readiness loop, so the write half is
+        // non-blocking too — use the retrying writer instead of
+        // surfacing spurious `WouldBlock` as a send failure.
+        #[cfg(feature = "reactor")]
+        let res = super::frame::write_frames_retry(&mut wr, wrapped);
+        #[cfg(not(feature = "reactor"))]
+        let res = super::frame::write_frames(&mut wr, wrapped);
+        res.map_err(|e| match e {
             GppError::Net(msg) => GppError::Net(format!(
                 "mux {what} (chan {chan}) to {}: {msg}",
                 self.peer
@@ -273,9 +286,13 @@ impl MuxConn {
         let rd = stream
             .try_clone()
             .map_err(|e| GppError::Net(format!("mux clone stream to {peer}: {e}")))?;
+        let ctl = stream
+            .try_clone()
+            .map_err(|e| GppError::Net(format!("mux clone stream to {peer}: {e}")))?;
         let shared = Arc::new(ConnShared {
             peer: peer.to_string(),
             wr: Mutex::new(stream),
+            ctl,
             sinks: Mutex::new(HashMap::new()),
             dead: AtomicBool::new(false),
             _conn: ConnGuard::new(),
@@ -310,14 +327,23 @@ impl Drop for MuxConn {
         // Unblock the pump's blocking read, then join it: after the
         // last handle drops, no thread or fd of this connection
         // survives (satellite fix — the per-channel pumps used to be
-        // detached and anonymous).
+        // detached and anonymous). The shutdown goes through the
+        // dedicated `ctl` handle, never the `wr` lock: a sibling send
+        // blocked on a stalled peer holds that lock indefinitely, and
+        // teardown must not wait behind it.
         self.shared.die();
-        if let Ok(wr) = self.shared.wr.lock() {
-            let _ = wr.shutdown(Shutdown::Both);
-        }
+        let _ = self.shared.ctl.shutdown(Shutdown::Both);
         #[cfg(not(feature = "reactor"))]
         if let Some(h) = self.pump.take() {
-            let _ = h.join();
+            // Channel cores keep their connection end alive, so the
+            // last strong ref can drop *on the pump thread itself*
+            // (dispatch briefly upgrades a core's Weak while the user
+            // drops the matching channel end). The pump can't join
+            // itself; the shutdown above already guarantees its next
+            // read fails and the thread exits on its own.
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
         }
         #[cfg(feature = "reactor")]
         reactor::deregister(&self.shared);
@@ -373,14 +399,23 @@ mod reactor {
     use crate::net::frame::FrameBuf;
     use std::io::Read;
 
+    /// One registered connection. The read state sits behind its own
+    /// lock so [`deregister`] (and the identity comparison it does)
+    /// never needs it — dispatch can drop the last channel-end Arc and
+    /// re-enter `deregister` *on the reactor thread* via
+    /// [`MuxConn::drop`], which must not meet a lock this thread holds.
     struct Entry {
         shared: Arc<ConnShared>,
+        io: Mutex<EntryIo>,
+    }
+
+    struct EntryIo {
         rd: TcpStream,
         buf: FrameBuf,
     }
 
     struct Registry {
-        conns: Mutex<Vec<Entry>>,
+        conns: Mutex<Vec<Arc<Entry>>>,
     }
 
     static REGISTRY: OnceLock<Arc<Registry>> = OnceLock::new();
@@ -400,13 +435,19 @@ mod reactor {
     }
 
     pub(super) fn register(shared: Arc<ConnShared>, rd: TcpStream) -> Result<()> {
+        // NB: O_NONBLOCK lives on the shared open file description, so
+        // this makes the write half non-blocking too — which is why
+        // `ConnShared::send_wrapped` uses the WouldBlock-retrying
+        // writer under this feature.
         rd.set_nonblocking(true)
             .map_err(|e| GppError::Net(format!("mux reactor nonblocking: {e}")))?;
-        registry().conns.lock().unwrap().push(Entry {
+        registry().conns.lock().unwrap().push(Arc::new(Entry {
             shared,
-            rd,
-            buf: FrameBuf::new(),
-        });
+            io: Mutex::new(EntryIo {
+                rd,
+                buf: FrameBuf::new(),
+            }),
+        }));
         Ok(())
     }
 
@@ -426,49 +467,58 @@ mod reactor {
         loop {
             let mut progressed = false;
             let mut dead: Vec<Arc<ConnShared>> = Vec::new();
-            {
-                let mut conns = reg.conns.lock().unwrap();
-                for e in conns.iter_mut() {
-                    if e.shared.dead.load(Ordering::SeqCst) {
-                        dead.push(Arc::clone(&e.shared));
-                        continue;
-                    }
-                    loop {
-                        match e.rd.read(&mut scratch) {
-                            Ok(0) => {
-                                dead.push(Arc::clone(&e.shared));
-                                break;
-                            }
-                            Ok(n) => {
-                                progressed = true;
-                                e.buf.push(&scratch[..n]);
-                                loop {
-                                    match e.buf.next_frame() {
-                                        Ok(Some(f)) => e.shared.dispatch(&f),
-                                        Ok(None) => break,
-                                        Err(_) => {
-                                            dead.push(Arc::clone(&e.shared));
-                                            break;
-                                        }
+            // Snapshot, then sweep with the registry lock released:
+            // dispatch may re-enter `deregister` on this thread (see
+            // `Entry` docs). An entry removed mid-sweep just gets one
+            // final harmless read attempt on its shut-down socket.
+            let conns: Vec<Arc<Entry>> = reg.conns.lock().unwrap().clone();
+            for e in &conns {
+                if e.shared.dead.load(Ordering::SeqCst) {
+                    dead.push(Arc::clone(&e.shared));
+                    continue;
+                }
+                let mut io = e.io.lock().unwrap();
+                loop {
+                    match io.rd.read(&mut scratch) {
+                        Ok(0) => {
+                            dead.push(Arc::clone(&e.shared));
+                            break;
+                        }
+                        Ok(n) => {
+                            progressed = true;
+                            io.buf.push(&scratch[..n]);
+                            loop {
+                                match io.buf.next_frame() {
+                                    Ok(Some(f)) => e.shared.dispatch(&f),
+                                    Ok(None) => break,
+                                    Err(_) => {
+                                        dead.push(Arc::clone(&e.shared));
+                                        break;
                                     }
                                 }
-                                if n < scratch.len() {
-                                    break; // socket drained for now
-                                }
                             }
-                            Err(ref err) if err.kind() == std::io::ErrorKind::WouldBlock => break,
-                            Err(ref err) if err.kind() == std::io::ErrorKind::Interrupted => {}
-                            Err(_) => {
-                                dead.push(Arc::clone(&e.shared));
-                                break;
+                            if n < scratch.len() {
+                                break; // socket drained for now
                             }
+                        }
+                        Err(ref err) if err.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(ref err) if err.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => {
+                            dead.push(Arc::clone(&e.shared));
+                            break;
                         }
                     }
                 }
-                conns.retain(|e| !dead.iter().any(|d| Arc::ptr_eq(d, &e.shared)));
             }
-            for d in dead {
-                d.die();
+            drop(conns);
+            if !dead.is_empty() {
+                reg.conns
+                    .lock()
+                    .unwrap()
+                    .retain(|e| !dead.iter().any(|d| Arc::ptr_eq(d, &e.shared)));
+                for d in dead {
+                    d.die();
+                }
             }
             if !progressed {
                 std::thread::park_timeout(std::time::Duration::from_micros(200));
@@ -490,6 +540,11 @@ pub struct MuxOutCore<T> {
     chan: u32,
     name: String,
     conn: Arc<ConnShared>,
+    /// Keeps this core's connection end — pump thread included — alive
+    /// for as long as the channel end lives: dropping the [`MuxHub`]
+    /// (or a standalone [`MuxConn`]) while channels are open must not
+    /// shut the socket down under them.
+    _conn_end: Arc<MuxConn>,
     state: Mutex<CreditState>,
     grants: Condvar,
     window: u64,
@@ -500,7 +555,7 @@ pub struct MuxOutCore<T> {
 
 impl<T: Wire + Send> MuxOutCore<T> {
     fn new(
-        conn: Arc<ConnShared>,
+        conn_end: Arc<MuxConn>,
         chan: u32,
         name: &str,
         window: u64,
@@ -511,7 +566,8 @@ impl<T: Wire + Send> MuxOutCore<T> {
             id: next_chan_id(),
             chan,
             name: name.to_string(),
-            conn,
+            conn: Arc::clone(&conn_end.shared),
+            _conn_end: conn_end,
             state: Mutex::new(CreditState {
                 credits: window,
                 poisoned: false,
@@ -724,6 +780,9 @@ pub struct MuxInCore<T: Send> {
     chan: u32,
     name: String,
     conn: Arc<ConnShared>,
+    /// See [`MuxOutCore::_conn_end`]: the channel end, not the hub,
+    /// owns the connection's lifetime.
+    _conn_end: Arc<MuxConn>,
     inner: Arc<BufferedCore<T>>,
     /// Flush a coalesced grant frame once this many consumes are
     /// pending — `(window / 2).max(1)`, the per-channel threshold.
@@ -735,7 +794,7 @@ pub struct MuxInCore<T: Send> {
 
 impl<T: Wire + Send + 'static> MuxInCore<T> {
     fn new(
-        conn: Arc<ConnShared>,
+        conn_end: Arc<MuxConn>,
         chan: u32,
         name: &str,
         capacity: usize,
@@ -747,7 +806,8 @@ impl<T: Wire + Send + 'static> MuxInCore<T> {
             id: next_chan_id(),
             chan,
             name: name.to_string(),
-            conn,
+            conn: Arc::clone(&conn_end.shared),
+            _conn_end: conn_end,
             // Sized to hold a full un-granted window, so the shared
             // pump's queue write is always bounded (module docs).
             inner: BufferedCore::new(
@@ -927,9 +987,9 @@ impl<T: Send> Drop for MuxInCore<T> {
 /// the full mux frame/credit protocol.
 pub struct MuxHub {
     /// Writer-side connection end (out-cores register here).
-    a: MuxConn,
+    a: Arc<MuxConn>,
     /// Reader-side connection end (in-cores register here).
-    b: MuxConn,
+    b: Arc<MuxConn>,
     next_chan: AtomicU32,
 }
 
@@ -964,8 +1024,8 @@ impl MuxHub {
         let peer_b = format!("loopback:{}", client.local_addr().map_or_else(|_| "?".into(), |a| a.to_string()));
         expect_mux_magic(&mut client, &peer_a)?;
         expect_mux_magic(&mut server, &peer_b)?;
-        let a = MuxConn::from_handshaken(client, &peer_a, &conn_opts)?;
-        let b = MuxConn::from_handshaken(server, &peer_b, &conn_opts)?;
+        let a = Arc::new(MuxConn::from_handshaken(client, &peer_a, &conn_opts)?);
+        let b = Arc::new(MuxConn::from_handshaken(server, &peer_b, &conn_opts)?);
         Ok(Arc::new(MuxHub {
             a,
             b,
@@ -975,7 +1035,11 @@ impl MuxHub {
 
     /// Open one channel over the shared connection. `opts` sizes the
     /// credit window (`window_for(capacity)`); socket-level options
-    /// were fixed at hub construction.
+    /// were fixed at hub construction. Each end holds a strong
+    /// reference to its side of the connection, so the channel outlives
+    /// the hub: dropping the hub while channels are open is safe, and
+    /// the socket closes (and its pumps join) only once the last
+    /// channel end is gone.
     pub fn channel<T: Wire + Send + 'static>(
         &self,
         name: &str,
@@ -997,14 +1061,14 @@ impl MuxHub {
         let chan = self.next_chan.fetch_add(1, Ordering::SeqCst);
         let window = opts.window_for(capacity);
         let out_core = MuxOutCore::<T>::new(
-            Arc::clone(&self.a.shared),
+            Arc::clone(&self.a),
             chan,
             name,
             window,
             faults.clone(),
         );
         let in_core = MuxInCore::<T>::new(
-            Arc::clone(&self.b.shared),
+            Arc::clone(&self.b),
             chan,
             name,
             capacity,

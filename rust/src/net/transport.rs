@@ -361,15 +361,20 @@ impl<T: Wire + Send + 'static> NetInCore<T> {
 
 impl<T: Send> Drop for NetInCore<T> {
     fn drop(&mut self) {
-        // Tell the writer (best effort), unblock the pump's blocking
-        // read, then join it: no anonymous detached thread or leaked fd
-        // survives the core.
+        // Tell the writer (best effort), then unblock the pump wherever
+        // it is parked — the socket shutdown breaks a blocking
+        // `read_frame`, the queue poison breaks a `inner.write` stalled
+        // on a full queue (the peer may stream a whole credit window
+        // past a full queue, since grants are sent after queueing) —
+        // and only then join it: no anonymous detached thread or leaked
+        // fd survives the core.
         if let Ok(mut wr) = self.shared.wr.lock() {
             if !self.shared.poison_sent.swap(true, Ordering::SeqCst) {
                 let _ = write_frame(&mut wr, &[TAG_POISON]);
             }
             let _ = wr.shutdown(std::net::Shutdown::Both);
         }
+        self.shared.inner.poison();
         if let Some(h) = self.pump.lock().unwrap().take() {
             let _ = h.join();
         }

@@ -187,6 +187,42 @@ fn blocked_window_does_not_stall_siblings() {
     let _slow_tx = blocked.join().unwrap();
 }
 
+/// Channel ends own their connection, not the hub: dropping the hub
+/// while channels are live must not shut the socket down under them —
+/// traffic continues, and the connection (pumps included) is torn down
+/// only when the last channel end drops.
+#[test]
+fn channels_survive_hub_drop() {
+    let _g = serial();
+    let opts = NetOptions::default();
+    let conns_before = active_net_conns();
+
+    let hub = MuxHub::new(&opts).unwrap();
+    let (tx, rx) = hub.channel::<u32>("keepalive", 2, &opts);
+    drop(hub);
+
+    for i in 0..20u32 {
+        tx.write(i).unwrap();
+        assert_eq!(rx.read().unwrap(), i);
+    }
+
+    drop((tx, rx));
+    // Teardown is usually synchronous (the dropping thread joins the
+    // pumps), but if a pump was mid-dispatch it finishes exiting on
+    // its own — spin briefly rather than flake on that window.
+    for _ in 0..200 {
+        if active_net_conns() == conns_before {
+            break;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(
+        active_net_conns(),
+        conns_before,
+        "connection must be torn down once the last channel end drops"
+    );
+}
+
 /// Dropping the hub (and its channel ends) joins the pump threads and
 /// returns the connection and fd gauges to their baselines — no leaked
 /// sockets, no orphan readers.
@@ -207,6 +243,19 @@ fn hub_shutdown_joins_pumps_and_closes_fds() {
         drop(hub);
     }
 
+    // Teardown is usually synchronous, but a pump that was mid-dispatch
+    // when the last channel end dropped finishes exiting on its own —
+    // spin briefly rather than flake on that window.
+    #[cfg(not(feature = "reactor"))]
+    let pumps_ok = |n: usize| n == pumps_before;
+    #[cfg(feature = "reactor")]
+    let pumps_ok = |n: usize| n <= pumps_before + 1;
+    for _ in 0..200 {
+        if active_net_conns() == conns_before && pumps_ok(active_pump_threads()) {
+            break;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
     assert_eq!(active_net_conns(), conns_before, "connection gauge leaked");
     // The per-peer pumps are joined by MuxConn::drop. Under the
     // `reactor` feature the single process-wide reactor thread stays
