@@ -14,6 +14,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use super::channel::In;
 use super::error::{GppError, Result};
+use crate::obs::{metrics::m, trace};
 
 /// Wakeup token registered with channels while an Alt sleeps.
 pub struct AltSignal {
@@ -83,6 +84,20 @@ impl<T> Alt<T> {
         &self.inputs[i]
     }
 
+    /// Observe a completed selection (metrics counter + trace instant
+    /// keyed by the selected channel's id and name).
+    fn note_select(&self, i: usize) {
+        m::CSP_ALT_SELECTS.inc();
+        if trace::enabled() {
+            let inp = &self.inputs[i];
+            trace::instant(
+                "alt",
+                &format!("alt.select {}", inp.name()),
+                Some(inp.channel_id()),
+            );
+        }
+    }
+
     /// Block until some channel is ready; return its index (fair).
     ///
     /// The caller then performs the actual `read` on `input(i)`; this
@@ -98,6 +113,7 @@ impl<T> Alt<T> {
                     // `ready` is also true when poisoned, so the caller's
                     // read observes the poison — required for shutdown.
                     self.last_selected = i;
+                    self.note_select(i);
                     return Ok(i);
                 }
             }
@@ -148,6 +164,7 @@ impl<T> Alt<T> {
                 let i = (start + k) % n;
                 if enabled[i] && self.inputs[i].ready() {
                     self.last_selected = i;
+                    self.note_select(i);
                     return Ok(i);
                 }
             }

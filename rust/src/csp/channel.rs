@@ -33,6 +33,7 @@ use super::error::{GppError, Result};
 use super::transport::{
     next_chan_id, AltWaiters, GatedCond, Transport, TransportKind, TransportStats,
 };
+use crate::obs::{self, metrics::m, trace};
 
 struct Pending<T> {
     write_id: u64,
@@ -345,15 +346,53 @@ impl<T> Clone for In<T> {
     }
 }
 
+/// Start timestamp for an observed channel op: the obs clock when either
+/// tracing or metrics is on, else a sentinel so the op stays free.
+fn obs_op_start() -> u64 {
+    if trace::enabled() || obs::metrics::enabled() {
+        obs::now_us()
+    } else {
+        u64::MAX
+    }
+}
+
+/// Close out an observed channel op: bump its counter, record blocked
+/// time, and (when tracing) emit a span keyed by the channel id/name.
+fn obs_op_end(
+    t0: u64,
+    op: &'static str,
+    id: u64,
+    name: &str,
+    counter: &obs::metrics::Counter,
+    n: u64,
+) {
+    counter.add(n);
+    if t0 == u64::MAX {
+        return;
+    }
+    let dur = obs::now_us().saturating_sub(t0);
+    m::CSP_BLOCKED_US.observe(dur);
+    if trace::enabled() {
+        trace::span_at(t0, dur, "chan", &format!("{op} {name}"), Some(id));
+    }
+}
+
 impl<T> Out<T> {
     /// Transport write; rendezvous blocks until a reader takes the value.
     pub fn write(&self, value: T) -> Result<()> {
-        self.core.write(value)
+        let t0 = obs_op_start();
+        let r = self.core.write(value);
+        obs_op_end(t0, "chan.write", self.core.id(), self.core.name(), &m::CSP_WRITES, 1);
+        r
     }
 
     /// Write a batch (buffered transports queue it under one ticket).
     pub fn write_batch(&self, values: Vec<T>) -> Result<()> {
-        self.core.write_batch(values)
+        let n = values.len() as u64;
+        let t0 = obs_op_start();
+        let r = self.core.write_batch(values);
+        obs_op_end(t0, "chan.write_batch", self.core.id(), self.core.name(), &m::CSP_WRITES, n);
+        r
     }
 
     pub fn poison(&self) {
@@ -388,24 +427,41 @@ impl<T> Out<T> {
 impl<T> In<T> {
     /// Transport read; blocks until a value is available.
     pub fn read(&self) -> Result<T> {
-        self.core.read()
+        let t0 = obs_op_start();
+        let r = self.core.read();
+        obs_op_end(t0, "chan.read", self.core.id(), self.core.name(), &m::CSP_READS, 1);
+        r
     }
 
-    /// Non-blocking read (Alt internals, draining).
+    /// Non-blocking read (Alt internals, draining).  Counted but not
+    /// traced: Alt polls would flood the ring without adding timeline
+    /// information beyond the `alt.select` instants.
     pub fn try_read(&self) -> Result<Option<T>> {
-        self.core.try_read()
+        let r = self.core.try_read();
+        if matches!(r, Ok(Some(_))) {
+            m::CSP_READS.inc();
+        }
+        r
     }
 
     /// Blocking read of up to `max` values under one lock acquisition.
     pub fn read_batch(&self, max: usize) -> Result<Vec<T>> {
-        self.core.read_batch(max)
+        let t0 = obs_op_start();
+        let r = self.core.read_batch(max);
+        let n = r.as_ref().map(|v| v.len() as u64).unwrap_or(0);
+        obs_op_end(t0, "chan.read_batch", self.core.id(), self.core.name(), &m::CSP_READS, n);
+        r
     }
 
     /// Batched read that stops before the first value `keep` rejects
     /// (see [`Transport::read_batch_while`]); an empty result means the
     /// queue head was rejected — take it with [`In::read`].
     pub fn read_batch_while(&self, max: usize, keep: &dyn Fn(&T) -> bool) -> Result<Vec<T>> {
-        self.core.read_batch_while(max, keep)
+        let t0 = obs_op_start();
+        let r = self.core.read_batch_while(max, keep);
+        let n = r.as_ref().map(|v| v.len() as u64).unwrap_or(0);
+        obs_op_end(t0, "chan.read_batch", self.core.id(), self.core.name(), &m::CSP_READS, n);
+        r
     }
 
     /// Would a read complete without blocking?

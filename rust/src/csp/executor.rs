@@ -34,6 +34,23 @@ use std::sync::{Arc, Mutex};
 
 use super::error::{GppError, Result};
 use super::process::CSProcess;
+use crate::obs::{metrics::m, trace};
+
+/// Run one process with observability: a `proc` span on the trace (named
+/// after the process, so the Perfetto exporter can label threads) plus
+/// start/finish counters.  Shared by both executors and the sim runtime.
+pub(crate) fn run_observed(p: &mut dyn CSProcess) -> Result<()> {
+    m::CSP_PROCS_STARTED.inc();
+    let t0 = trace::span_start();
+    let r = p.run();
+    m::CSP_PROCS_FINISHED.inc();
+    if t0 != u64::MAX {
+        let name = p.name();
+        let dur = crate::obs::now_us().saturating_sub(t0);
+        trace::span_at(t0, dur, "proc", &name, None);
+    }
+    r
+}
 
 /// Strategy for running a set of processes in parallel.
 pub trait Executor: Send + Sync {
@@ -149,7 +166,7 @@ impl Executor for ThreadPerProcess {
             let h = std::thread::Builder::new()
                 .name(tname.clone())
                 .stack_size(self.stack_size)
-                .spawn(move || p.run())
+                .spawn(move || run_observed(p.as_mut()))
                 .map_err(|e| GppError::Other(format!("spawn {tname}: {e}")))?;
             handles.push(h);
         }
@@ -203,8 +220,10 @@ impl Executor for PooledExecutor {
                         let next = queue.lock().unwrap().pop_front();
                         match next {
                             Some(mut p) => {
-                                let r = catch_unwind(AssertUnwindSafe(|| p.run()))
-                                    .map_err(panic_message);
+                                let r = catch_unwind(AssertUnwindSafe(|| {
+                                    run_observed(p.as_mut())
+                                }))
+                                .map_err(panic_message);
                                 outcomes.push(r);
                             }
                             None => return outcomes,

@@ -930,9 +930,13 @@ impl SimNet {
                 .spawn(move || -> Outcome {
                     SIM_TLS.with(|t| *t.borrow_mut() = Some((kernel.clone(), pid)));
                     let out: Outcome = match kernel.start_gate(pid) {
-                        Ok(()) => {
-                            catch_unwind(AssertUnwindSafe(|| p.run())).map_err(panic_message)
-                        }
+                        Ok(()) => catch_unwind(AssertUnwindSafe(|| {
+                            // Observed like the real executors, but on the
+                            // virtual clock and still attached to the sim,
+                            // so the proc span is replay-deterministic.
+                            super::executor::run_observed(p.as_mut())
+                        }))
+                        .map_err(panic_message),
                         Err(e) => Ok(Err(e)),
                     };
                     kernel.finish(pid);

@@ -36,6 +36,7 @@
 //! ```
 
 pub mod util;
+pub mod obs;
 pub mod csp;
 pub mod data;
 pub mod processes;

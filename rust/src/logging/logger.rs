@@ -16,6 +16,7 @@ use crate::csp::channel::{channel, In, Out};
 use crate::csp::error::Result;
 use crate::csp::process::CSProcess;
 use crate::data::object::{DataObject, Value};
+use crate::obs::{metrics::m, trace};
 
 enum SinkInner {
     Off,
@@ -66,6 +67,13 @@ impl LogSink {
                 _ => None,
             };
             let rec = LogRecord::now(tag, phase, kind, prop_val);
+            // Feed the trace spine with the *same* timestamp the record
+            // carries — one clock read, so `logging::analyse` and the
+            // trace-side phase spans agree exactly.
+            m::LOG_RECORDS.inc();
+            if trace::enabled() {
+                trace::instant_at(rec.time_us, "log", phase);
+            }
             if *echo {
                 println!("{}", rec.render());
             }

@@ -1,7 +1,5 @@
 //! Log records.
 
-use std::time::{SystemTime, UNIX_EPOCH};
-
 use crate::data::object::Value;
 
 /// What a record marks.
@@ -26,7 +24,9 @@ pub enum LogKind {
 pub struct LogRecord {
     /// Identifying tag (process instance, e.g. `Worker[3]`).
     pub tag: String,
-    /// Wall-clock micros since the epoch.
+    /// Micros on the unified observability clock ([`crate::obs::now_us`]):
+    /// wall-clock epoch micros normally, virtual ticks under `SimNet` —
+    /// so logs from a simulated run are replay-deterministic.
     pub time_us: u64,
     /// User-chosen phase name.
     pub phase: String,
@@ -37,10 +37,7 @@ pub struct LogRecord {
 
 impl LogRecord {
     pub fn now(tag: &str, phase: &str, kind: LogKind, prop: Option<Value>) -> Self {
-        let time_us = SystemTime::now()
-            .duration_since(UNIX_EPOCH)
-            .map(|d| d.as_micros() as u64)
-            .unwrap_or(0);
+        let time_us = crate::obs::now_us();
         Self {
             tag: tag.to_string(),
             time_us,

@@ -9,7 +9,11 @@
 //! gpp verify [base|gop-pog|extracted|all]   run the CSPm/FDR assertions (§4.6, §9)
 //! gpp calibrate                   print this host's workload costs
 //! gpp logdemo                     logged concordance + phase report (§8)
+//! gpp stats                       metrics-registry snapshot of a small run
 //! ```
+//!
+//! Any command accepts `--trace out.json` (Chrome/Perfetto timeline)
+//! and `--metrics` (counter dump on stderr at exit).
 
 use gpp::builder::parse_network;
 use gpp::data::object::Value;
@@ -98,6 +102,17 @@ fn main() {
     let args = Args::from_env();
     gpp::workloads::register_all();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    // Observability flags are global: any command can run under
+    // `--trace out.json` (Chrome/Perfetto timeline of the whole run)
+    // and/or `--metrics` (compact registry dump on stderr at exit).
+    let trace_path = args.get("trace").map(String::from);
+    if trace_path.is_some() {
+        gpp::obs::trace::enable(gpp::obs::trace::DEFAULT_RING_CAP);
+        gpp::obs::metrics::enable();
+    }
+    if args.has("metrics") {
+        gpp::obs::metrics::enable();
+    }
     let code = match cmd {
         "run" => cmd_run(&args),
         "pi" => cmd_pi(&args),
@@ -113,11 +128,22 @@ fn main() {
         "calibrate" => cmd_calibrate(),
         "bench" => cmd_bench(&args),
         "logdemo" => cmd_logdemo(&args),
+        "stats" => cmd_stats(&args),
         _ => {
             print!("{}", HELP);
             0
         }
     };
+    if let Some(path) = trace_path {
+        let events = gpp::obs::trace::drain();
+        match std::fs::write(&path, gpp::obs::trace::export_chrome(&events)) {
+            Ok(()) => eprintln!("gpp: wrote {} trace events to {path}", events.len()),
+            Err(e) => eprintln!("gpp: error: trace file {path}: {e}"),
+        }
+    }
+    if args.has("metrics") {
+        eprintln!("{}", gpp::obs::metrics::snapshot("local").render_compact());
+    }
     std::process::exit(code);
 }
 
@@ -148,6 +174,14 @@ COMMANDS
                       sockets at 16 channels with O(peers) pump threads, and every
                       BENCH file is well-formed)
   logdemo            logged concordance run + bottleneck report (paper Sec 8)
+  stats              run a small pi workload with the metrics registry on and
+                     print the MetricsSnapshot JSON [--workers N --instances I]
+
+OBSERVABILITY FLAGS (any command)
+  --trace out.json   record channel/process/net events and write a Chrome
+                     trace-event (Perfetto-loadable) timeline at exit
+  --metrics          enable the metrics registry; print a compact counter
+                     dump on stderr at exit
 
 SUBSTRATE FLAGS (pi, mandelbrot, concordance; or a `config` line in .gpp files)
   --transport rendezvous|buffered|net|netmux  channel transport (default rendezvous;
@@ -639,13 +673,21 @@ fn cmd_bench(args: &Args) -> i32 {
     let best3 = |f: &dyn Fn() -> f64| (0..3).map(|_| f()).fold(f64::INFINITY, f64::min);
     let mut written: Vec<std::path::PathBuf> = Vec::new();
 
+    // Key registry counters ride along with each throughput file as
+    // `metric.*` derived rows (deltas over the section's runs).
+    use gpp::obs::metrics::m;
+    gpp::obs::metrics::enable();
+
     // (1) CSP core: the relay pipeline, rendezvous vs buffered.
     {
         use gpp::csp::channel::{buffered_channel, channel};
         let mut json = BenchJson::new("gpp bench: csp substrate");
+        let (w0, r0) = (m::CSP_WRITES.get(), m::CSP_READS.get());
         let rdv = best3(&|| pipeline_run(msgs, &|_n| channel::<u64>()));
         let buf = best3(&|| pipeline_run(msgs, &|n| buffered_channel::<u64>(n, 256)));
         record_csp_rows(&mut json, msgs, rdv, buf);
+        json.add_derived("metric.csp.writes", (m::CSP_WRITES.get() - w0) as f64);
+        json.add_derived("metric.csp.reads", (m::CSP_READS.get() - r0) as f64);
         match json.write_at_root("BENCH_csp.json") {
             Ok(p) => {
                 println!(
@@ -665,6 +707,11 @@ fn cmd_bench(args: &Args) -> i32 {
     // sockets vs one multiplexed connection at 1 / 16 / 256 channels.
     let (net_speedup, mux_ratio_16, mux_threads_16) = {
         let mut json = BenchJson::new("gpp bench: net credit window + mux");
+        let (f0, s0, g0) = (
+            m::NET_FRAMES_SENT.get(),
+            m::NET_CREDIT_STALLS.get(),
+            m::NET_GRANTS_COALESCED.get(),
+        );
         let ack = best3(&|| net_edge_run(msgs, capacity, 1));
         let win = best3(&|| net_edge_run(msgs, capacity, capacity as u32));
         let speedup = record_net_window_rows(&mut json, msgs, capacity, ack, win);
@@ -700,6 +747,12 @@ fn cmd_bench(args: &Args) -> i32 {
                 threads_16 = mux.pump_threads;
             }
         }
+        json.add_derived("metric.net.frames_sent", (m::NET_FRAMES_SENT.get() - f0) as f64);
+        json.add_derived("metric.net.credit_stalls", (m::NET_CREDIT_STALLS.get() - s0) as f64);
+        json.add_derived(
+            "metric.net.grants_coalesced",
+            (m::NET_GRANTS_COALESCED.get() - g0) as f64,
+        );
         match json.write_at_root("BENCH_net.json") {
             Ok(p) => {
                 println!("net -> {}", p.display());
@@ -765,6 +818,39 @@ fn cmd_bench(args: &Args) -> i32 {
         );
     }
     0
+}
+
+/// `gpp stats` — run a small built-in workload (Monte-Carlo π) with the
+/// metrics registry enabled and print the resulting [`MetricsSnapshot`]
+/// as JSON on stdout: the same shape cluster workers ship over
+/// `W_STATS` and `--metrics` renders compactly on stderr.
+///
+/// [`MetricsSnapshot`]: gpp::obs::metrics::MetricsSnapshot
+fn cmd_stats(args: &Args) -> i32 {
+    use gpp::patterns::DataParallelCollect;
+    use gpp::workloads::montecarlo::{PiData, PiResults};
+    gpp::obs::metrics::enable();
+    let workers = args.usize("workers", 2);
+    let instances = args.u64("instances", 64) as i64;
+    let iterations = args.u64("iterations", 1_000) as i64;
+    let net = DataParallelCollect::new(
+        PiData::emit_details(instances, iterations),
+        PiResults::result_details(),
+        workers,
+        "getWithin",
+    );
+    let cfg = sanitise_config(
+        config_from_args(args),
+        net.process_count(),
+        Some(instances as usize),
+    );
+    match net.with_config(cfg).run_network() {
+        Ok(_) => {
+            println!("{}", gpp::obs::metrics::snapshot("local").to_json());
+            0
+        }
+        Err(e) => fail(e),
+    }
 }
 
 fn cmd_logdemo(args: &Args) -> i32 {

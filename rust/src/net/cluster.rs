@@ -28,6 +28,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::csp::error::{GppError, Result};
+use crate::obs::metrics::{self, m, MetricsSnapshot};
 use crate::util::codec::{from_bytes, to_bytes, Wire};
 use crate::workloads::mandelbrot::{MandelbrotCollect, MandelbrotLine};
 
@@ -106,6 +107,10 @@ const W_REQ: u8 = 2;
 const W_RESULT: u8 = 3;
 /// `[tag][u64 item id][String error]` — the job itself failed; fatal.
 const W_FAIL: u8 = 4;
+/// `[tag][MetricsSnapshot JSON bytes]` — the worker's final metrics,
+/// sent (best effort) after it receives `H_DONE`, so the host can print
+/// a merged per-node report at `HostReport` time.
+const W_STATS: u8 = 5;
 // Host → worker:
 /// `[tag][String job name][config bytes…]`
 const H_CONFIG: u8 = 10;
@@ -124,6 +129,27 @@ pub struct HostReport {
     pub workers_lost: usize,
     /// Items that were requeued after a worker loss.
     pub items_requeued: usize,
+    /// Final [`MetricsSnapshot`] JSON shipped by each worker over the
+    /// control channel after `H_DONE` (best effort; a worker that dies
+    /// first simply contributes nothing).
+    pub worker_stats: Vec<String>,
+}
+
+impl HostReport {
+    /// Merge the per-worker metrics snapshots into one cluster-wide
+    /// snapshot, or `None` if no worker shipped (parseable) stats.
+    pub fn merged_metrics(&self) -> Option<MetricsSnapshot> {
+        let mut merged: Option<MetricsSnapshot> = None;
+        for json in &self.worker_stats {
+            if let Some(snap) = MetricsSnapshot::parse(json) {
+                match merged.as_mut() {
+                    Some(acc) => acc.merge(&snap),
+                    None => merged = Some(snap),
+                }
+            }
+        }
+        merged
+    }
 }
 
 struct Shared {
@@ -133,6 +159,7 @@ struct Shared {
     total: usize,
     workers_lost: usize,
     items_requeued: usize,
+    worker_stats: Vec<String>,
     /// A job reported failure — deterministic items fail everywhere, so
     /// requeueing cannot help; the whole run aborts.
     fatal: Option<GppError>,
@@ -167,6 +194,7 @@ pub fn serve_items(
             total,
             workers_lost: 0,
             items_requeued: 0,
+            worker_stats: Vec::new(),
             fatal: None,
         }),
         Condvar::new(),
@@ -270,12 +298,21 @@ pub fn serve_items(
         .into_iter()
         .map(|r| r.expect("done==total"))
         .collect();
-    Ok(HostReport {
+    let report = HostReport {
         results,
         workers_joined,
         workers_lost: g.workers_lost,
         items_requeued: g.items_requeued,
-    })
+        worker_stats: std::mem::take(&mut g.worker_stats),
+    };
+    drop(g);
+    if metrics::enabled() {
+        if let Some(merged) = report.merged_metrics() {
+            eprintln!("[gpp] cluster worker metrics (merged):");
+            eprintln!("{}", merged.render_compact());
+        }
+    }
+    Ok(report)
 }
 
 /// One host connection. Socket failures mark the worker lost and
@@ -288,13 +325,16 @@ fn serve_conn(mut stream: TcpStream, job: &str, cfg: &[u8], sync: &Arc<HostSync>
         Err(fatal @ GppError::UserCode { .. }) => Err(fatal),
         Err(_socket_err) => {
             // Worker lost: put its item back for the survivors.
-            let (m, cv) = &**sync;
-            let mut g = m.lock().unwrap();
+            let (mtx, cv) = &**sync;
+            let mut g = mtx.lock().unwrap();
             g.workers_lost += 1;
+            m::CLUSTER_WORKERS_LOST.inc();
             if let Some((id, item)) = in_flight.take() {
+                m::CLUSTER_ITEMS_IN_FLIGHT.add(-1);
                 if g.results[id].is_none() {
                     g.queue.push_back((id, item));
                     g.items_requeued += 1;
+                    m::CLUSTER_ITEMS_REQUEUED.inc();
                 }
             }
             cv.notify_all();
@@ -322,6 +362,7 @@ fn conn_loop(
         let frame = read_ctl(stream)?;
         match frame.split_first() {
             Some((&W_HELLO, _)) => {
+                m::CLUSTER_WORKERS_JOINED.inc();
                 let mut reply = vec![H_CONFIG];
                 job.to_string().encode(&mut reply);
                 reply.extend_from_slice(cfg);
@@ -329,6 +370,7 @@ fn conn_loop(
             }
             Some((&W_REQ, _)) => {
                 if dispatch(stream, sync, in_flight)? {
+                    collect_worker_stats(stream, sync);
                     return Ok(());
                 }
             }
@@ -342,16 +384,19 @@ fn conn_loop(
                     )));
                 }
                 {
-                    let (m, cv) = &**sync;
-                    let mut g = m.lock().unwrap();
+                    let (mtx, cv) = &**sync;
+                    let mut g = mtx.lock().unwrap();
                     if g.results[id].is_none() {
                         g.results[id] = Some(input.to_vec());
                         g.done += 1;
                     }
                     *in_flight = None;
+                    m::CLUSTER_ITEMS_DONE.inc();
+                    m::CLUSTER_ITEMS_IN_FLIGHT.add(-1);
                     cv.notify_all();
                 }
                 if dispatch(stream, sync, in_flight)? {
+                    collect_worker_stats(stream, sync);
                     return Ok(());
                 }
             }
@@ -376,6 +421,21 @@ fn conn_loop(
                     "host: unexpected worker frame {:?}",
                     other.map(|(t, _)| t)
                 )))
+            }
+        }
+    }
+}
+
+/// Best-effort read of the worker's final [`W_STATS`] frame, sent after
+/// the host's `H_DONE`. A worker that predates the frame — or died
+/// before sending it — just closes the socket; either way the run's
+/// outcome is unaffected.
+fn collect_worker_stats(stream: &mut TcpStream, sync: &Arc<HostSync>) {
+    if let Ok(frame) = read_ctl(stream) {
+        if let Some((&W_STATS, rest)) = frame.split_first() {
+            if let Ok(json) = std::str::from_utf8(rest) {
+                let (mtx, _) = &**sync;
+                mtx.lock().unwrap().worker_stats.push(json.to_string());
             }
         }
     }
@@ -411,6 +471,8 @@ fn dispatch(
                 continue;
             }
             *in_flight = Some((id, item.clone()));
+            m::CLUSTER_ITEMS_DISPATCHED.inc();
+            m::CLUSTER_ITEMS_IN_FLIGHT.add(1);
             drop(g);
             let mut reply = vec![H_WORK];
             (id as u64).encode(&mut reply);
@@ -435,6 +497,10 @@ pub fn run_worker(addr: &str) -> Result<usize> {
 
 pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
     jobs::register_builtin_jobs();
+    // Workers always count: the final snapshot ships to the host as the
+    // run's per-node report (`W_STATS`), so the merged view is complete
+    // even when nobody passed a flag on the worker's command line.
+    metrics::enable();
     let mut stream = TcpStream::connect(addr)
         .map_err(|e| GppError::Net(format!("worker connect {addr}: {e}")))?;
     set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
@@ -482,7 +548,19 @@ pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
                     }
                 }
             }
-            Some((&H_DONE, _)) => return Ok(items_done),
+            Some((&H_DONE, _)) => {
+                // Ship the final metrics snapshot, best effort: the run
+                // is already complete, so a host that hung up (or one
+                // predating W_STATS) costs nothing.
+                let node = stream
+                    .local_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| "worker".into());
+                let mut reply = vec![W_STATS];
+                reply.extend_from_slice(metrics::snapshot(&node).to_json().as_bytes());
+                let _ = write_ctl(&mut stream, &reply);
+                return Ok(items_done);
+            }
             other => {
                 return Err(GppError::Net(format!(
                     "worker: unexpected host frame {:?}",
@@ -730,6 +808,12 @@ mod tests {
         assert_eq!(report.workers_lost, 1);
         assert_eq!(report.items_requeued, 1);
         assert_eq!(report.workers_joined, 2);
+        // Only the survivor reached H_DONE, so exactly one W_STATS
+        // snapshot arrived — and it parses back into a MetricsSnapshot.
+        assert_eq!(report.worker_stats.len(), 1, "survivor shipped W_STATS");
+        let snap = MetricsSnapshot::parse(&report.worker_stats[0]).expect("snapshot parses");
+        assert!(!snap.node.is_empty());
+        assert!(report.merged_metrics().is_some());
     }
 
     #[test]

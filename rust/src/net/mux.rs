@@ -73,6 +73,7 @@ use super::frame::{
 };
 use super::netchan::{encode_credit, parse_credit, TAG_DATA, TAG_POISON};
 use super::NetOptions;
+use crate::obs::{metrics::m, trace};
 
 // ------------------------------------------------------------ metrics
 
@@ -99,6 +100,7 @@ pub(crate) struct PumpGuard;
 impl PumpGuard {
     pub(crate) fn new() -> Self {
         PUMP_THREADS.fetch_add(1, Ordering::SeqCst);
+        m::NET_PUMP_THREADS.add(1);
         PumpGuard
     }
 }
@@ -106,6 +108,7 @@ impl PumpGuard {
 impl Drop for PumpGuard {
     fn drop(&mut self) {
         PUMP_THREADS.fetch_sub(1, Ordering::SeqCst);
+        m::NET_PUMP_THREADS.add(-1);
     }
 }
 
@@ -115,6 +118,7 @@ pub(crate) struct ConnGuard;
 impl ConnGuard {
     pub(crate) fn new() -> Self {
         NET_CONNS.fetch_add(1, Ordering::SeqCst);
+        m::NET_CONNS.add(1);
         ConnGuard
     }
 }
@@ -122,6 +126,7 @@ impl ConnGuard {
 impl Drop for ConnGuard {
     fn drop(&mut self) {
         NET_CONNS.fetch_sub(1, Ordering::SeqCst);
+        m::NET_CONNS.add(-1);
     }
 }
 
@@ -184,6 +189,11 @@ impl ConnShared {
                 self.peer
             )));
         }
+        m::NET_FRAMES_SENT.add(wrapped.len() as u64);
+        m::NET_BYTES_SENT.add(wrapped.iter().map(|f| f.len() as u64).sum());
+        if trace::enabled() {
+            trace::instant("net", &format!("mux.send {what}"), Some(chan as u64));
+        }
         let mut wr = self.wr.lock().unwrap();
         // Reactor mode: `O_NONBLOCK` is set on the shared open file
         // description for the readiness loop, so the write half is
@@ -209,6 +219,10 @@ impl ConnShared {
             self.die();
             return;
         };
+        m::NET_FRAMES_RECEIVED.inc();
+        if trace::enabled() {
+            trace::instant("net", "mux.recv", Some(chan as u64));
+        }
         let sink = self.sinks.lock().unwrap().get(&chan).and_then(Weak::upgrade);
         match sink {
             Some(s) => s.on_frame(payload),
@@ -532,6 +546,8 @@ mod reactor {
 struct CreditState {
     credits: u64,
     poisoned: bool,
+    /// Writers currently parked on the grants condvar (stats).
+    waiting: usize,
 }
 
 /// Writing side of a mux channel (see module docs).
@@ -571,6 +587,7 @@ impl<T: Wire + Send> MuxOutCore<T> {
             state: Mutex::new(CreditState {
                 credits: window,
                 poisoned: false,
+                waiting: 0,
             }),
             grants: Condvar::new(),
             window,
@@ -675,7 +692,10 @@ impl<T: Wire + Send> Transport<T> for MuxOutCore<T> {
             // Block *before* sending once the window is exhausted — the
             // stall rule of a capacity-`window` buffer (module docs).
             while st.credits == 0 && !st.poisoned {
+                m::NET_CREDIT_STALLS.inc();
+                st.waiting += 1;
                 st = self.grants.wait(st).unwrap();
+                st.waiting -= 1;
             }
             if st.poisoned {
                 self.poisoned.store(true, Ordering::SeqCst);
@@ -756,8 +776,19 @@ impl<T: Wire + Send> Transport<T> for MuxOutCore<T> {
         Some(self.window as usize)
     }
 
+    /// Real writer-side counters (was a `default()` stub): `pending` is
+    /// the frames in flight beyond the peer's grants (window − credit
+    /// balance), `blocked_writers`/`waiting_writers` the writers parked
+    /// on the grants condvar.  Safe to lock here: credit waits release
+    /// the state mutex inside `Condvar::wait`.
     fn stats(&self) -> TransportStats {
-        TransportStats::default()
+        let st = self.state.lock().unwrap();
+        TransportStats {
+            pending: (self.window.saturating_sub(st.credits)) as usize,
+            blocked_writers: st.waiting,
+            waiting_writers: st.waiting,
+            ..TransportStats::default()
+        }
     }
 }
 

@@ -27,6 +27,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::csp::error::{GppError, Result};
+use crate::obs::metrics::m;
 use crate::util::codec::{from_bytes, to_bytes, Wire};
 
 use super::frame::{read_frame, set_io_timeouts, write_frame};
@@ -66,11 +67,16 @@ pub(crate) fn parse_credit(frame: &[u8], context: &str) -> Result<u64> {
 }
 
 /// Encode a credit grant: a bare `[TAG_ACK]` for one credit (the old
-/// wire format), `[TAG_ACK, n]` for a coalesced grant.
+/// wire format), `[TAG_ACK, n]` for a coalesced grant.  Every grant the
+/// process issues — per-channel sockets, the pump's batched grants, mux
+/// grant-on-consume — passes through here, so this is also where the
+/// grant/coalescing metrics are counted.
 pub(crate) fn encode_credit(n: u64) -> Vec<u8> {
+    m::NET_CREDIT_GRANTS.inc();
     if n == 1 {
         vec![TAG_ACK]
     } else {
+        m::NET_GRANTS_COALESCED.inc();
         let mut f = vec![TAG_ACK];
         f.extend_from_slice(&(n.min(u32::MAX as u64) as u32).to_le_bytes());
         f
@@ -83,6 +89,11 @@ pub(crate) fn encode_credit(n: u64) -> Vec<u8> {
 pub(crate) struct CreditedStream {
     pub(crate) stream: std::net::TcpStream,
     pub(crate) credits: u64,
+    /// Frames sent so far (cumulative; read for transport stats while
+    /// the owner already holds the stream lock).
+    pub(crate) sent: u64,
+    /// Credit-exhaustion waits so far (cumulative).
+    pub(crate) stalls: u64,
 }
 
 impl CreditedStream {
@@ -90,11 +101,17 @@ impl CreditedStream {
         Self {
             stream,
             credits: window.max(1),
+            sent: 0,
+            stalls: 0,
         }
     }
 
-    /// Block for the next credit/poison frame from the reader.
+    /// Block for the next credit/poison frame from the reader.  Every
+    /// call blocks on the reader for more credit (window exhausted, or
+    /// draining at termination), so each is counted as a credit stall.
     pub(crate) fn wait_credit(&mut self, context: &str) -> Result<()> {
+        self.stalls += 1;
+        m::NET_CREDIT_STALLS.inc();
         let frame = read_frame(&mut self.stream)?;
         self.credits += parse_credit(&frame, context)?;
         Ok(())
@@ -107,6 +124,9 @@ impl CreditedStream {
     /// satisfied immediately until the window is exhausted.
     pub(crate) fn send(&mut self, payload: &[u8], context: &str) -> Result<()> {
         write_frame(&mut self.stream, payload)?;
+        self.sent += 1;
+        m::NET_FRAMES_SENT.inc();
+        m::NET_BYTES_SENT.add(payload.len() as u64);
         self.credits -= 1;
         while self.credits == 0 {
             self.wait_credit(context)?;

@@ -49,7 +49,7 @@
 
 use std::marker::PhantomData;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::csp::alt::AltSignal;
@@ -59,11 +59,29 @@ use crate::csp::transport::{
     next_chan_id, BufferedCore, FaultAction, FaultOp, FaultPlan, Transport, TransportKind,
     TransportStats,
 };
+use crate::obs::metrics::m;
 use crate::util::codec::{from_bytes, to_bytes, Wire};
 
 use super::frame::{read_frame, set_io_timeouts, set_nodelay, write_frame, write_frames};
 use super::netchan::{encode_credit, CreditedStream, TAG_DATA, TAG_POISON};
 use super::NetOptions;
+
+/// RAII increment/decrement of an occupancy counter (survives early
+/// error returns).
+struct CountGuard<'a>(&'a AtomicUsize);
+
+impl<'a> CountGuard<'a> {
+    fn enter(c: &'a AtomicUsize) -> Self {
+        c.fetch_add(1, Ordering::SeqCst);
+        CountGuard(c)
+    }
+}
+
+impl Drop for CountGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
 
 /// Writing side of a network channel (see module docs).
 pub struct NetOutCore<T> {
@@ -72,6 +90,14 @@ pub struct NetOutCore<T> {
     stream: Mutex<CreditedStream>,
     /// Credit window (frames the writer may stream ahead of grants).
     window: u64,
+    /// Mirror of the stream's credit balance, refreshed after each op
+    /// while the op still holds the stream lock.  `stats()` reads this:
+    /// it must not take the stream lock, which a writer holds across a
+    /// blocking credit wait.
+    credits_hint: AtomicU64,
+    /// Writers currently inside `write`/`write_batch` (possibly parked
+    /// on a credit wait).
+    writers: AtomicUsize,
     poisoned: AtomicBool,
     /// Scripted deterministic faults (None in production). `Drop` on a
     /// write models a DATA frame lost before its ACK: the write fails
@@ -94,6 +120,8 @@ impl<T: Wire> NetOutCore<T> {
             name: name.to_string(),
             stream: Mutex::new(CreditedStream::new(stream, window)),
             window,
+            credits_hint: AtomicU64::new(window),
+            writers: AtomicUsize::new(0),
             poisoned: AtomicBool::new(false),
             faults,
             _marker: PhantomData,
@@ -149,10 +177,12 @@ impl<T: Wire + Send> Transport<T> for NetOutCore<T> {
             return Err(GppError::Poisoned);
         }
         self.write_fault()?;
+        let _w = CountGuard::enter(&self.writers);
         let mut s = self.stream.lock().unwrap();
         let mut payload = vec![TAG_DATA];
         payload.extend(to_bytes(&value));
         let r = s.send(&payload, "NetOutCore::write");
+        self.credits_hint.store(s.credits, Ordering::Relaxed);
         self.latch(r)
     }
 
@@ -199,10 +229,12 @@ impl<T: Wire + Send> Transport<T> for NetOutCore<T> {
             payload.extend(to_bytes(v));
             frames.push(payload);
         }
+        let _w = CountGuard::enter(&self.writers);
         let mut s = self.stream.lock().unwrap();
         let mut sent = 0usize;
         while sent < frames.len() {
             while s.credits == 0 {
+                self.credits_hint.store(0, Ordering::Relaxed);
                 let r = s.wait_credit("NetOutCore::write_batch");
                 self.latch(r)?;
             }
@@ -210,6 +242,10 @@ impl<T: Wire + Send> Transport<T> for NetOutCore<T> {
             let r = write_frames(&mut s.stream, &frames[sent..sent + n]);
             self.latch(r)?;
             s.credits -= n as u64;
+            s.sent += n as u64;
+            m::NET_FRAMES_SENT.add(n as u64);
+            m::NET_BYTES_SENT.add(frames[sent..sent + n].iter().map(|f| f.len() as u64).sum());
+            self.credits_hint.store(s.credits, Ordering::Relaxed);
             sent += n;
         }
         if let Some((send_poison, e)) = pending {
@@ -228,6 +264,7 @@ impl<T: Wire + Send> Transport<T> for NetOutCore<T> {
             let r = s.wait_credit("NetOutCore::write_batch");
             self.latch(r)?;
         }
+        self.credits_hint.store(s.credits, Ordering::Relaxed);
         Ok(())
     }
 
@@ -283,8 +320,21 @@ impl<T: Wire + Send> Transport<T> for NetOutCore<T> {
         Some(self.window as usize)
     }
 
+    /// Real writer-side counters (was a `default()` stub): `pending` is
+    /// the frames in flight beyond the reader's grants (window − credit
+    /// balance), `blocked_writers`/`waiting_writers` the writers inside
+    /// an op, possibly parked on a credit wait.  Derived from lock-free
+    /// mirrors: the stream lock itself may be held across a blocking
+    /// credit wait, so `stats()` must never take it.
     fn stats(&self) -> TransportStats {
-        TransportStats::default()
+        let credits = self.credits_hint.load(Ordering::Relaxed).min(self.window);
+        let writers = self.writers.load(Ordering::SeqCst);
+        TransportStats {
+            pending: (self.window - credits) as usize,
+            blocked_writers: writers,
+            waiting_writers: writers,
+            ..TransportStats::default()
+        }
     }
 }
 
@@ -413,6 +463,7 @@ impl<T: Wire + Send + 'static> NetInShared<T> {
                     return;
                 }
             };
+            m::NET_FRAMES_RECEIVED.inc();
             match frame.split_first() {
                 Some((&TAG_DATA, rest)) => {
                     if let Some(fp) = &self.faults {

@@ -1,0 +1,473 @@
+//! Process-wide metrics registry (ISSUE 7, tentpole part 1).
+//!
+//! A fixed, lock-light table of named counters / gauges / histograms that
+//! every subsystem increments through `static` handles — no registration
+//! locks, no allocation on the hot path.  Counters are gated on a single
+//! relaxed [`enabled`] flag so a default run pays one atomic load per
+//! increment site; gauges (pump threads, open connections, items in
+//! flight) are always live because they mirror RAII guards that exist
+//! whether or not anyone is watching.
+//!
+//! [`snapshot`] freezes the table into a [`MetricsSnapshot`] which renders
+//! to (and parses back from) a small hand-rolled JSON document — the same
+//! document `gpp stats` prints, `gpp bench` derives rows from, and cluster
+//! workers ship to the host over mux channel 0 (`W_STATS`) for the merged
+//! per-node report at `HostReport` time.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn counter/histogram collection on for the rest of the process.
+pub fn enable() {
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Whether counter collection is on (relaxed; hot-path gate).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Monotone event counter.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    /// Add 1 if collection is enabled.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n` if collection is enabled.
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Instantaneous level (may go up and down).  Ungated: gauges mirror RAII
+/// guards and must stay correct across a late `enable()`.
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge { v: AtomicI64::new(0) }
+    }
+
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Power-of-two-bucket histogram: bucket `b` counts observations `v` with
+/// `2^(b-1) <= v < 2^b` (bucket 0 holds `v == 0`).  Used for blocked-time
+/// in microseconds on channel ops.
+pub struct Histogram {
+    buckets: [AtomicU64; 32],
+}
+
+impl Histogram {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const ZERO: AtomicU64 = AtomicU64::new(0);
+
+    pub const fn new() -> Self {
+        Histogram { buckets: [Self::ZERO; 32] }
+    }
+
+    /// Record one observation if collection is enabled.
+    pub fn observe(&self, v: u64) {
+        if enabled() {
+            let b = (64 - v.leading_zeros() as usize).min(31);
+            self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The registry itself: every well-known metric, as a `static` handle.
+/// Subsystems increment these directly; `snapshot()` walks the table.
+pub mod m {
+    use super::{Counter, Gauge, Histogram};
+
+    pub static CSP_WRITES: Counter = Counter::new();
+    pub static CSP_READS: Counter = Counter::new();
+    pub static CSP_ALT_SELECTS: Counter = Counter::new();
+    pub static CSP_PROCS_STARTED: Counter = Counter::new();
+    pub static CSP_PROCS_FINISHED: Counter = Counter::new();
+    pub static LOG_RECORDS: Counter = Counter::new();
+    pub static NET_FRAMES_SENT: Counter = Counter::new();
+    pub static NET_FRAMES_RECEIVED: Counter = Counter::new();
+    pub static NET_BYTES_SENT: Counter = Counter::new();
+    pub static NET_CREDIT_STALLS: Counter = Counter::new();
+    pub static NET_CREDIT_GRANTS: Counter = Counter::new();
+    pub static NET_GRANTS_COALESCED: Counter = Counter::new();
+    pub static CLUSTER_ITEMS_DISPATCHED: Counter = Counter::new();
+    pub static CLUSTER_ITEMS_DONE: Counter = Counter::new();
+    pub static CLUSTER_ITEMS_REQUEUED: Counter = Counter::new();
+    pub static CLUSTER_WORKERS_JOINED: Counter = Counter::new();
+    pub static CLUSTER_WORKERS_LOST: Counter = Counter::new();
+
+    pub static NET_PUMP_THREADS: Gauge = Gauge::new();
+    pub static NET_CONNS: Gauge = Gauge::new();
+    pub static CLUSTER_ITEMS_IN_FLIGHT: Gauge = Gauge::new();
+
+    pub static CSP_BLOCKED_US: Histogram = Histogram::new();
+}
+
+fn counter_table() -> [(&'static str, &'static Counter); 17] {
+    [
+        ("csp.writes", &m::CSP_WRITES),
+        ("csp.reads", &m::CSP_READS),
+        ("csp.alt_selects", &m::CSP_ALT_SELECTS),
+        ("csp.procs_started", &m::CSP_PROCS_STARTED),
+        ("csp.procs_finished", &m::CSP_PROCS_FINISHED),
+        ("log.records", &m::LOG_RECORDS),
+        ("net.frames_sent", &m::NET_FRAMES_SENT),
+        ("net.frames_received", &m::NET_FRAMES_RECEIVED),
+        ("net.bytes_sent", &m::NET_BYTES_SENT),
+        ("net.credit_stalls", &m::NET_CREDIT_STALLS),
+        ("net.credit_grants", &m::NET_CREDIT_GRANTS),
+        ("net.grants_coalesced", &m::NET_GRANTS_COALESCED),
+        ("cluster.items_dispatched", &m::CLUSTER_ITEMS_DISPATCHED),
+        ("cluster.items_done", &m::CLUSTER_ITEMS_DONE),
+        ("cluster.items_requeued", &m::CLUSTER_ITEMS_REQUEUED),
+        ("cluster.workers_joined", &m::CLUSTER_WORKERS_JOINED),
+        ("cluster.workers_lost", &m::CLUSTER_WORKERS_LOST),
+    ]
+}
+
+fn gauge_table() -> [(&'static str, &'static Gauge); 3] {
+    [
+        ("net.pump_threads", &m::NET_PUMP_THREADS),
+        ("net.conns", &m::NET_CONNS),
+        ("cluster.items_in_flight", &m::CLUSTER_ITEMS_IN_FLIGHT),
+    ]
+}
+
+/// A frozen copy of the registry, labelled with the node that took it.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub node: String,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    /// `csp.blocked_us` histogram bucket counts (power-of-two buckets).
+    pub blocked_us: Vec<u64>,
+}
+
+/// Freeze the registry.  `node` labels the snapshot (host name, worker
+/// address, "loopback", ...).
+pub fn snapshot(node: &str) -> MetricsSnapshot {
+    MetricsSnapshot {
+        node: node.to_string(),
+        counters: counter_table()
+            .iter()
+            .map(|(n, c)| (n.to_string(), c.get()))
+            .collect(),
+        gauges: gauge_table()
+            .iter()
+            .map(|(n, g)| (n.to_string(), g.get()))
+            .collect(),
+        blocked_us: m::CSP_BLOCKED_US.bucket_counts(),
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Sum `other` into `self` (counters and histogram add; gauges add,
+    /// which is the right merge for level gauges summed across nodes).
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (name, v) in &other.counters {
+            match self.counters.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => *mine += v,
+                None => self.counters.push((name.clone(), *v)),
+            }
+        }
+        for (name, v) in &other.gauges {
+            match self.gauges.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => *mine += v,
+                None => self.gauges.push((name.clone(), *v)),
+            }
+        }
+        if self.blocked_us.len() < other.blocked_us.len() {
+            self.blocked_us.resize(other.blocked_us.len(), 0);
+        }
+        for (i, v) in other.blocked_us.iter().enumerate() {
+            self.blocked_us[i] += v;
+        }
+    }
+
+    /// Render as a single-line JSON document (hand-rolled: the offline
+    /// build has no serde).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push_str("{\"node\":\"");
+        s.push_str(&escape_json(&self.node));
+        s.push_str("\",\"counters\":{");
+        for (i, (n, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{}\":{v}", escape_json(n)));
+        }
+        s.push_str("},\"gauges\":{");
+        for (i, (n, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{}\":{v}", escape_json(n)));
+        }
+        s.push_str("},\"blocked_us\":[");
+        for (i, v) in self.blocked_us.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&v.to_string());
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Parse a document produced by [`MetricsSnapshot::to_json`].  Lenient
+    /// enough for cross-version cluster peers: unknown keys are ignored,
+    /// missing sections yield empty vectors.  Returns `None` only when the
+    /// text is not recognisably a snapshot.
+    pub fn parse(text: &str) -> Option<MetricsSnapshot> {
+        let node = str_field(text, "\"node\":\"")?;
+        let counters = num_pairs(section(text, "\"counters\":{"))
+            .into_iter()
+            .map(|(n, v)| (n, v as u64))
+            .collect();
+        let gauges = num_pairs(section(text, "\"gauges\":{"));
+        let blocked_us = num_list(section_list(text, "\"blocked_us\":["))
+            .into_iter()
+            .map(|v| v as u64)
+            .collect();
+        Some(MetricsSnapshot { node, counters, gauges, blocked_us })
+    }
+
+    /// Compact human-readable summary of the non-zero counters.
+    pub fn render_compact(&self) -> String {
+        let mut s = format!("[{}]", self.node);
+        for (n, v) in &self.counters {
+            if *v > 0 {
+                s.push_str(&format!(" {n}={v}"));
+            }
+        }
+        for (n, v) in &self.gauges {
+            if *v != 0 {
+                s.push_str(&format!(" {n}={v}"));
+            }
+        }
+        s
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn str_field(text: &str, key: &str) -> Option<String> {
+    let start = text.find(key)? + key.len();
+    let rest = &text[start..];
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+fn section<'a>(text: &'a str, key: &str) -> &'a str {
+    match text.find(key) {
+        Some(i) => {
+            let rest = &text[i + key.len()..];
+            match rest.find('}') {
+                Some(j) => &rest[..j],
+                None => "",
+            }
+        }
+        None => "",
+    }
+}
+
+fn section_list<'a>(text: &'a str, key: &str) -> &'a str {
+    match text.find(key) {
+        Some(i) => {
+            let rest = &text[i + key.len()..];
+            match rest.find(']') {
+                Some(j) => &rest[..j],
+                None => "",
+            }
+        }
+        None => "",
+    }
+}
+
+fn num_pairs(body: &str) -> Vec<(String, i64)> {
+    let mut out = Vec::new();
+    for part in body.split(',') {
+        let part = part.trim();
+        if let Some((k, v)) = part.split_once(':') {
+            let name = k.trim().trim_matches('"').to_string();
+            if let Ok(n) = v.trim().parse::<i64>() {
+                out.push((name, n));
+            }
+        }
+    }
+    out
+}
+
+fn num_list(body: &str) -> Vec<i64> {
+    body.split(',').filter_map(|p| p.trim().parse::<i64>().ok()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let snap = MetricsSnapshot {
+            node: "worker:9001".into(),
+            counters: vec![("csp.writes".into(), 42), ("net.frames_sent".into(), 7)],
+            gauges: vec![("net.conns".into(), 2)],
+            blocked_us: vec![0, 3, 1],
+        };
+        let json = snap.to_json();
+        let back = MetricsSnapshot::parse(&json).expect("parse");
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_buckets() {
+        let mut a = MetricsSnapshot {
+            node: "host".into(),
+            counters: vec![("csp.writes".into(), 10)],
+            gauges: vec![("net.conns".into(), 1)],
+            blocked_us: vec![1, 2],
+        };
+        let b = MetricsSnapshot {
+            node: "w".into(),
+            counters: vec![("csp.writes".into(), 5), ("csp.reads".into(), 3)],
+            gauges: vec![("net.conns".into(), 2)],
+            blocked_us: vec![0, 1, 4],
+        };
+        a.merge(&b);
+        assert_eq!(a.counter("csp.writes"), 15);
+        assert_eq!(a.counter("csp.reads"), 3);
+        assert_eq!(a.gauge("net.conns"), 3);
+        assert_eq!(a.blocked_us, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn counters_gate_on_enabled_flag() {
+        // Collection may already be on if another test enabled it; only
+        // assert the always-true direction (get is monotone, gauges live).
+        let g = Gauge::new();
+        g.add(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+        let c = Counter::new();
+        let before = c.get();
+        c.inc();
+        assert!(c.get() >= before);
+    }
+
+    #[test]
+    fn histogram_buckets_by_power_of_two() {
+        enable();
+        let h = Histogram::new();
+        h.observe(0);
+        h.observe(1);
+        h.observe(2);
+        h.observe(3);
+        h.observe(1024);
+        let b = h.bucket_counts();
+        assert_eq!(b[0], 1); // v == 0
+        assert_eq!(b[1], 1); // v == 1
+        assert_eq!(b[2], 2); // v in [2, 4)
+        assert_eq!(b[11], 1); // v in [1024, 2048)
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn registry_snapshot_has_well_known_names() {
+        let snap = snapshot("t");
+        assert_eq!(snap.node, "t");
+        assert!(snap.counters.iter().any(|(n, _)| n == "csp.writes"));
+        assert!(snap.counters.iter().any(|(n, _)| n == "net.credit_stalls"));
+        assert!(snap.gauges.iter().any(|(n, _)| n == "net.pump_threads"));
+        assert_eq!(snap.blocked_us.len(), 32);
+        let json = snap.to_json();
+        let back = MetricsSnapshot::parse(&json).expect("parse");
+        assert_eq!(back.counters.len(), snap.counters.len());
+    }
+}

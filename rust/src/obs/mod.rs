@@ -1,0 +1,49 @@
+//! Unified runtime observability (ISSUE 7): a metrics registry
+//! ([`metrics`]), a structured event trace with a Chrome-trace/Perfetto
+//! exporter ([`trace`]), and the single clock source ([`now_us`]) both —
+//! and the paper-§8 logging spine — read from.
+//!
+//! Clock-source rule: a thread attached to a `SimKernel` reads the
+//! virtual clock (the `sim_sleep` time base, in ticks-as-microseconds),
+//! so traces and log records taken under `SimNet` are deterministic and
+//! byte-identical across replays of one schedule.  Everywhere else the
+//! clock is wall time in microseconds since the Unix epoch, forced
+//! monotone across threads so per-thread trace timestamps never go
+//! backwards.
+
+pub mod metrics;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+static LAST_WALL_US: AtomicU64 = AtomicU64::new(0);
+
+/// The one observability clock: virtual ticks when the calling thread is
+/// attached to a sim kernel, else monotone wall-clock microseconds.
+pub fn now_us() -> u64 {
+    if let Some(t) = crate::csp::sim::sim_now() {
+        return t;
+    }
+    let raw = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0);
+    let prev = LAST_WALL_US.fetch_max(raw, Ordering::Relaxed);
+    raw.max(prev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone_across_calls() {
+        let mut prev = now_us();
+        for _ in 0..100 {
+            let t = now_us();
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+}

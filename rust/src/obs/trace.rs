@@ -1,0 +1,398 @@
+//! Structured event tracing (ISSUE 7, tentpole part 2).
+//!
+//! A bounded per-thread ring-buffer trace of channel operations, Alt
+//! selections, process start/end spans, log-phase events and net frames.
+//! Each OS thread owns its own ring behind a thread-local handle, so
+//! recording an event takes one thread-local lookup plus one uncontended
+//! mutex (the ring mutex is shared only with a drainer).  When the ring
+//! overflows, the oldest events are overwritten whole — a drain never
+//! observes a torn event, only the newest `capacity` complete ones.
+//!
+//! Identity rules:
+//! - events are keyed by the same channel ids (`Transport::id`) and
+//!   channel/process names the sim and `extract_model` use;
+//! - the thread id (`tid`) is the sim process index when the recording
+//!   thread is attached to a `SimKernel`, else a stable per-thread id in
+//!   a disjoint range (`>= 1 << 32`);
+//! - timestamps come from [`crate::obs::now_us`]: virtual ticks under the
+//!   sim (byte-deterministic across replays of one schedule), monotone
+//!   wall-clock micros otherwise.
+//!
+//! [`export_chrome`] renders a drained trace in the Chrome trace-event
+//! JSON format, loadable in Perfetto / `chrome://tracing`.  The export is
+//! sorted by `(tid, ts, seq)` so equal inputs produce byte-equal output.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default ring capacity per thread (events).
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+/// First tid handed to a thread that is *not* a sim process; sim process
+/// indices occupy `[0, 1 << 32)`.
+const REAL_TID_BASE: u64 = 1 << 32;
+
+/// Chrome trace-event phase of an event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ph {
+    /// Complete event with a duration ("X").
+    Span,
+    /// Instant event ("i").
+    Instant,
+}
+
+/// One trace event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Sim process index when recorded under the sim, else a stable
+    /// per-OS-thread id `>= 1 << 32`.
+    pub tid: u64,
+    /// Per-thread sequence number (gap-free; survives ring wrap).
+    pub seq: u64,
+    pub cat: &'static str,
+    pub name: String,
+    /// Channel id (`Transport::id`) for channel/net events.
+    pub chan: Option<u64>,
+    pub ph: Ph,
+}
+
+/// Fixed-capacity overwrite-oldest event buffer.
+pub struct Ring {
+    cap: usize,
+    buf: Vec<TraceEvent>,
+    next_seq: u64,
+}
+
+impl Ring {
+    pub fn new(cap: usize) -> Self {
+        Ring { cap: cap.max(1), buf: Vec::new(), next_seq: 0 }
+    }
+
+    /// Total events ever pushed (drained traces expose `seq` in
+    /// `[pushed - kept, pushed)`).
+    pub fn pushed(&self) -> u64 {
+        self.next_seq
+    }
+
+    pub fn push(&mut self, mut ev: TraceEvent) {
+        ev.seq = self.next_seq;
+        self.next_seq += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            let i = (ev.seq % self.cap as u64) as usize;
+            self.buf[i] = ev;
+        }
+    }
+
+    /// The retained events, oldest first.
+    pub fn ordered(&self) -> Vec<TraceEvent> {
+        let mut v = self.buf.clone();
+        v.sort_by_key(|e| e.seq);
+        v
+    }
+}
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static RING_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAP);
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+static NEXT_REAL_TID: AtomicU64 = AtomicU64::new(REAL_TID_BASE);
+
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static R: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    /// (generation, ring) — re-resolved when the global trace restarts.
+    static TLS_RING: RefCell<Option<(u64, Arc<Mutex<Ring>>)>> = const { RefCell::new(None) };
+    static TLS_TID: RefCell<u64> = const { RefCell::new(u64::MAX) };
+}
+
+/// Start (or restart) tracing with per-thread rings of `cap` events.
+/// Any previously recorded events are discarded.
+pub fn enable(cap: usize) {
+    RING_CAP.store(cap.max(16), Ordering::SeqCst);
+    registry().lock().unwrap().clear();
+    GENERATION.fetch_add(1, Ordering::SeqCst);
+    TRACE_ON.store(true, Ordering::SeqCst);
+}
+
+/// Stop recording (already-recorded events remain drainable).
+pub fn disable() {
+    TRACE_ON.store(false, Ordering::SeqCst);
+}
+
+/// Whether tracing is on (relaxed; hot-path gate).
+pub fn enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Collect every retained event, sorted by `(tid, ts, seq)`, and detach
+/// the rings (a subsequent `enable` starts clean; threads re-register on
+/// their next event).
+pub fn drain() -> Vec<TraceEvent> {
+    let rings: Vec<Arc<Mutex<Ring>>> = {
+        let mut reg = registry().lock().unwrap();
+        std::mem::take(&mut *reg)
+    };
+    GENERATION.fetch_add(1, Ordering::SeqCst);
+    let mut evs: Vec<TraceEvent> = Vec::new();
+    for ring in rings {
+        evs.extend(ring.lock().unwrap().ordered());
+    }
+    evs.sort_by(|a, b| (a.tid, a.ts_us, a.seq).cmp(&(b.tid, b.ts_us, b.seq)));
+    evs
+}
+
+fn current_tid() -> u64 {
+    if let Some((_, pid)) = crate::csp::sim::attached() {
+        return pid as u64;
+    }
+    TLS_TID.with(|c| {
+        let mut t = *c.borrow();
+        if t == u64::MAX {
+            t = NEXT_REAL_TID.fetch_add(1, Ordering::Relaxed);
+            *c.borrow_mut() = t;
+        }
+        t
+    })
+}
+
+fn record(cat: &'static str, name: String, chan: Option<u64>, ts_us: u64, dur_us: u64, ph: Ph) {
+    let ev = TraceEvent { ts_us, dur_us, tid: current_tid(), seq: 0, cat, name, chan, ph };
+    let generation = GENERATION.load(Ordering::SeqCst);
+    TLS_RING.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let stale = match &*slot {
+            Some((g, _)) => *g != generation,
+            None => true,
+        };
+        if stale {
+            let ring = Arc::new(Mutex::new(Ring::new(RING_CAP.load(Ordering::SeqCst))));
+            registry().lock().unwrap().push(ring.clone());
+            *slot = Some((generation, ring));
+        }
+        if let Some((_, ring)) = &*slot {
+            ring.lock().unwrap().push(ev);
+        }
+    });
+}
+
+/// Timestamp the start of a potentially blocking operation.  Returns a
+/// sentinel when tracing is off so the paired end-call stays free.
+pub fn span_start() -> u64 {
+    if enabled() {
+        crate::obs::now_us()
+    } else {
+        u64::MAX
+    }
+}
+
+/// Record a completed span started at `start` (from [`span_start`]).
+/// Returns the blocked duration in microseconds (0 when tracing was off
+/// at the start).
+pub fn span_end(start: u64, cat: &'static str, name: &str, chan: Option<u64>) -> u64 {
+    if start == u64::MAX || !enabled() {
+        return 0;
+    }
+    let now = crate::obs::now_us();
+    let dur = now.saturating_sub(start);
+    record(cat, name.to_string(), chan, start, dur, Ph::Span);
+    dur
+}
+
+/// Record a completed span with explicit start and duration (the caller
+/// already read the obs clock; avoids a second clock read).
+pub fn span_at(start_us: u64, dur_us: u64, cat: &'static str, name: &str, chan: Option<u64>) {
+    if enabled() {
+        record(cat, name.to_string(), chan, start_us, dur_us, Ph::Span);
+    }
+}
+
+/// Record an instant event at the current clock.
+pub fn instant(cat: &'static str, name: &str, chan: Option<u64>) {
+    if enabled() {
+        let ts = crate::obs::now_us();
+        record(cat, name.to_string(), chan, ts, 0, Ph::Instant);
+    }
+}
+
+/// Record an instant event at an explicit timestamp (used by the logging
+/// spine so `LogRecord.time_us` and the trace agree exactly).
+pub fn instant_at(ts_us: u64, cat: &'static str, name: &str) {
+    if enabled() {
+        record(cat, name.to_string(), None, ts_us, 0, Ph::Instant);
+    }
+}
+
+/// Escape a string for inclusion in a JSON literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render events as a Chrome trace-event JSON document ("JSON object
+/// format"), loadable in Perfetto and `chrome://tracing`.  Emits a
+/// `thread_name` metadata record per tid, named after the first process
+/// span seen on that thread.  Deterministic: byte-equal input events
+/// yield a byte-equal document.
+pub fn export_chrome(events: &[TraceEvent]) -> String {
+    let mut thread_names: BTreeMap<u64, &str> = BTreeMap::new();
+    for ev in events {
+        if ev.cat == "proc" && ev.ph == Ph::Span {
+            thread_names.entry(ev.tid).or_insert(ev.name.as_str());
+        }
+    }
+    let mut s = String::with_capacity(events.len() * 96 + 64);
+    s.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for (tid, name) in &thread_names {
+        if !first {
+            s.push(',');
+        }
+        first = false;
+        s.push_str(&format!(
+            "\n{{\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            esc(name)
+        ));
+    }
+    for ev in events {
+        if !first {
+            s.push(',');
+        }
+        first = false;
+        let args = match ev.chan {
+            Some(c) => format!("{{\"chan\":{c}}}"),
+            None => "{}".to_string(),
+        };
+        match ev.ph {
+            Ph::Span => s.push_str(&format!(
+                "\n{{\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{},\"dur\":{},\
+                 \"cat\":\"{}\",\"name\":\"{}\",\"args\":{}}}",
+                ev.tid,
+                ev.ts_us,
+                ev.dur_us,
+                esc(ev.cat),
+                esc(&ev.name),
+                args
+            )),
+            Ph::Instant => s.push_str(&format!(
+                "\n{{\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{},\"ts\":{},\
+                 \"cat\":\"{}\",\"name\":\"{}\",\"args\":{}}}",
+                ev.tid,
+                ev.ts_us,
+                esc(ev.cat),
+                esc(&ev.name),
+                args
+            )),
+        }
+    }
+    s.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    s
+}
+
+/// Per-phase spans derived from the `cat == "log"` events of a trace:
+/// `(phase, last_ts - first_ts)`, mirroring `logging::analyse`.
+pub fn phase_spans(events: &[TraceEvent]) -> Vec<(String, u64)> {
+    let mut phases: BTreeMap<&str, (u64, u64)> = BTreeMap::new();
+    for ev in events {
+        if ev.cat != "log" {
+            continue;
+        }
+        let e = phases.entry(ev.name.as_str()).or_insert((ev.ts_us, ev.ts_us));
+        e.0 = e.0.min(ev.ts_us);
+        e.1 = e.1.max(ev.ts_us);
+    }
+    let mut out: Vec<(String, u64)> = phases
+        .into_iter()
+        .map(|(name, (lo, hi))| (name.to_string(), hi - lo))
+        .collect();
+    out.sort_by(|a, b| b.1.cmp(&a.1));
+    out
+}
+
+/// The phase with the largest span, per [`phase_spans`] — the trace-side
+/// counterpart of `logging::analyse`'s top row (paper §8.1).
+pub fn dominant_phase(events: &[TraceEvent]) -> Option<(String, u64)> {
+    phase_spans(events).into_iter().next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(seq_hint: u64, name: &str) -> TraceEvent {
+        TraceEvent {
+            ts_us: 100 + seq_hint,
+            dur_us: 1,
+            tid: 7,
+            seq: 0,
+            cat: "chan",
+            name: name.to_string(),
+            chan: Some(3),
+            ph: Ph::Span,
+        }
+    }
+
+    #[test]
+    fn ring_overflow_keeps_newest_complete_events() {
+        let mut r = Ring::new(4);
+        for i in 0..10 {
+            r.push(ev(i, &format!("e{i}")));
+        }
+        let got = r.ordered();
+        assert_eq!(got.len(), 4);
+        let seqs: Vec<u64> = got.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        // Every retained event is whole: name matches its own seq.
+        for e in &got {
+            assert_eq!(e.name, format!("e{}", e.seq));
+        }
+        assert_eq!(r.pushed(), 10);
+    }
+
+    #[test]
+    fn export_is_valid_shape_and_escapes() {
+        let mut e = ev(0, "w\"x\\y");
+        e.ph = Ph::Instant;
+        let doc = export_chrome(&[e]);
+        assert!(doc.starts_with("{\"traceEvents\":["));
+        assert!(doc.contains("\\\"x\\\\y"));
+        assert!(doc.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn phase_spans_pick_dominant() {
+        let mk = |phase: &str, ts: u64| TraceEvent {
+            ts_us: ts,
+            dur_us: 0,
+            tid: 1,
+            seq: 0,
+            cat: "log",
+            name: phase.to_string(),
+            chan: None,
+            ph: Ph::Instant,
+        };
+        let evs = vec![mk("read", 0), mk("read", 200), mk("compute", 200), mk("compute", 1000)];
+        let spans = phase_spans(&evs);
+        assert_eq!(spans[0], ("compute".to_string(), 800));
+        assert_eq!(dominant_phase(&evs).unwrap().0, "compute");
+    }
+}

@@ -1,0 +1,205 @@
+//! Observability integration tests (ISSUE 7): the trace spine under the
+//! deterministic sim, ring-buffer bounds, and the paper-§8 agreement
+//! between `logging::analyse` and the trace-side phase spans.
+//!
+//! The trace and metrics registries are process-global, and the test
+//! harness runs tests on parallel threads — every test that enables or
+//! drains the global trace takes `OBS_GUARD` first so runs never
+//! interleave their events.
+
+use std::sync::Mutex;
+
+use gpp::csp::TransportStats;
+use gpp::csp::process::{CSProcess, ProcessFn};
+use gpp::csp::sim::{parse_schedule, SimNet, SimPolicy};
+use gpp::data::message::Message;
+use gpp::logging::logger::close_logger;
+use gpp::logging::{analyse, LogSink, Logger};
+use gpp::obs::trace;
+use gpp::processes::{Collect, Emit};
+use gpp::workloads::montecarlo::{PiData, PiResults};
+
+static OBS_GUARD: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    OBS_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup() {
+    gpp::workloads::register_all();
+    gpp::data::object::register_builtin_classes();
+}
+
+/// The smallest real network: Emit(piData) → Collect(piResults) over one
+/// named channel, built on `net`'s transports.
+fn pi_pipeline(net: &SimNet, chan_name: &str, instances: i64) -> Vec<Box<dyn CSProcess>> {
+    let (emit_out, coll_in) = net.channel::<Message>(chan_name);
+    vec![
+        Box::new(Emit::new(PiData::emit_details(instances, 5), emit_out)),
+        Box::new(Collect::new(PiResults::result_details(), coll_in)),
+    ]
+}
+
+#[test]
+fn sim_trace_uses_pids_and_network_names() {
+    let _g = guard();
+    setup();
+    trace::enable(1 << 12);
+    let net = SimNet::new(SimPolicy::RoundRobin);
+    net.run("obs", pi_pipeline(&net, "obs.pipe", 4)).unwrap();
+    let events = trace::drain();
+    trace::disable();
+    assert!(!events.is_empty());
+
+    // Process spans carry the CSProcess names and sim-pid thread ids —
+    // the same identities the sim scheduler and extract_model report.
+    let procs: Vec<&str> = events
+        .iter()
+        .filter(|e| e.cat == "proc")
+        .map(|e| e.name.as_str())
+        .collect();
+    assert!(procs.contains(&"Emit(piData)"), "{procs:?}");
+    assert!(procs.contains(&"Collect(piResults)"), "{procs:?}");
+    for ev in &events {
+        assert!(ev.tid < (1 << 32), "sim events must use pid tids: {ev:?}");
+    }
+
+    // Channel events are keyed by the channel's name and (one) id.
+    let chan_evs: Vec<_> = events
+        .iter()
+        .filter(|e| e.cat == "chan" && e.name.ends_with("obs.pipe"))
+        .collect();
+    assert!(
+        chan_evs.iter().any(|e| e.name.starts_with("chan.write")),
+        "writes traced"
+    );
+    assert!(
+        chan_evs.iter().any(|e| e.name.starts_with("chan.read")),
+        "reads traced"
+    );
+    let ids: std::collections::BTreeSet<_> = chan_evs.iter().map(|e| e.chan).collect();
+    assert_eq!(ids.len(), 1, "one channel, one id: {ids:?}");
+    assert!(ids.iter().all(|i| i.is_some()));
+
+    // The export is a Chrome trace-event document with per-tid
+    // monotone timestamps (already sorted by (tid, ts, seq)).
+    let doc = trace::export_chrome(&events);
+    assert!(doc.starts_with("{\"traceEvents\":["));
+    assert!(doc.contains("\"ph\":\"M\""), "thread_name metadata present");
+    let mut prev: Option<(u64, u64)> = None;
+    for ev in &events {
+        if let Some((tid, ts)) = prev {
+            if tid == ev.tid {
+                assert!(ev.ts_us >= ts, "per-tid timestamps monotone");
+            }
+        }
+        prev = Some((ev.tid, ev.ts_us));
+    }
+}
+
+#[test]
+fn replaying_a_recorded_deadlock_schedule_traces_byte_identically() {
+    let _g = guard();
+    setup();
+    // A 1-slot pool cannot run a 2-process rendezvous pipeline: Emit
+    // blocks on its first write with nobody to take it — the sim detects
+    // the deadlock and reports the schedule that reached it.
+    let recorded = {
+        let net = SimNet::pooled(SimPolicy::RoundRobin, 1);
+        let err = net.run("dead", pi_pipeline(&net, "obs.dead", 2)).unwrap_err();
+        assert!(err.to_string().contains("deadlock"), "{err}");
+        net.schedule_string()
+    };
+
+    // Two replays of that one schedule must record byte-identical
+    // traces: virtual-clock timestamps, pid tids, per-thread seqs.
+    let replay = || {
+        trace::enable(1 << 12);
+        let net = SimNet::pooled(SimPolicy::Replay(parse_schedule(&recorded).unwrap()), 1);
+        let err = net.run("replay", pi_pipeline(&net, "obs.dead", 2)).unwrap_err();
+        let doc = trace::export_chrome(&trace::drain());
+        trace::disable();
+        (err.to_string(), doc)
+    };
+    let (e1, d1) = replay();
+    let (e2, d2) = replay();
+    assert_eq!(e1, e2, "same failure");
+    assert_eq!(d1, d2, "byte-identical trace export");
+    assert!(d1.contains("\"traceEvents\""));
+}
+
+#[test]
+fn ring_overflow_bounds_each_thread_without_tearing() {
+    let _g = guard();
+    setup();
+    // Tiny rings (enable clamps to >= 16): a 64-object run overflows
+    // them several times over; every retained event must still be whole
+    // and every thread's retained seqs contiguous and newest-first.
+    trace::enable(16);
+    let net = SimNet::new(SimPolicy::RoundRobin);
+    net.run("obs-wrap", pi_pipeline(&net, "obs.wrap", 64)).unwrap();
+    let events = trace::drain();
+    trace::disable();
+    assert!(!events.is_empty());
+    let mut by_tid: std::collections::BTreeMap<u64, Vec<u64>> = std::collections::BTreeMap::new();
+    for ev in &events {
+        assert!(!ev.name.is_empty(), "torn event: {ev:?}");
+        by_tid.entry(ev.tid).or_default().push(ev.seq);
+    }
+    for (tid, mut seqs) in by_tid {
+        seqs.sort_unstable();
+        assert!(seqs.len() <= 16, "tid {tid} kept {} > cap", seqs.len());
+        for w in seqs.windows(2) {
+            assert_eq!(w[1], w[0] + 1, "tid {tid} seqs must be contiguous: {seqs:?}");
+        }
+    }
+}
+
+#[test]
+fn trace_and_logging_analyse_agree_on_the_dominant_phase() {
+    let _g = guard();
+    setup();
+    trace::enable(1 << 12);
+    let (logger, tx, records) = Logger::new(false, None);
+    let sink = LogSink::on(tx.clone(), None);
+    let writer = ProcessFn::boxed("w", move || {
+        use gpp::logging::record::LogKind;
+        // "read" spans ~0 ms; "compute" spans two 15 ms gaps — the
+        // bottleneck phase by an order of magnitude.
+        sink.log("w", "read", LogKind::Start, None);
+        sink.log("w", "read", LogKind::End, None);
+        sink.log("w", "compute", LogKind::Start, None);
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        sink.log("w", "compute", LogKind::Input, None);
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        sink.log("w", "compute", LogKind::End, None);
+        close_logger(&tx);
+        Ok(())
+    });
+    gpp::csp::process::run_parallel(vec![Box::new(logger), writer]).unwrap();
+    let events = trace::drain();
+    trace::disable();
+
+    // Both sides read the one obs clock at the same instant per record,
+    // so the paper-§8 report and the trace agree exactly.
+    let recs = records.lock().unwrap();
+    let report = analyse(&recs);
+    let (trace_phase, trace_span) = trace::dominant_phase(&events).expect("log events traced");
+    assert_eq!(trace_phase, "compute");
+    assert_eq!(report[0].phase, trace_phase, "dominant phase agrees");
+    assert_eq!(report[0].span_us, trace_span, "span agrees to the microsecond");
+}
+
+#[test]
+fn buffered_out_stats_report_occupancy_not_stub() {
+    // No global state: buffered channels expose real TransportStats, the
+    // contract the net/mux Out cores now honour too (pending = window
+    // minus credits, waiting_writers = writers blocked in an op).
+    let (tx, rx) = gpp::csp::channel::buffered_channel::<u64>("obs.stats", 8);
+    tx.write(1).unwrap();
+    tx.write(2).unwrap();
+    let s: TransportStats = tx.stats();
+    assert_eq!(s.pending, 2, "two queued, none taken: {s:?}");
+    let _ = rx.read().unwrap();
+    assert_eq!(tx.stats().pending, 1, "one left after a read");
+}
