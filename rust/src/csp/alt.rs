@@ -214,11 +214,46 @@ mod tests {
         let (i, v) = alt.select_read().unwrap();
         if cfg!(feature = "timing-tests") {
             // Wall-clock latency assertion: only meaningful on an
-            // unloaded machine (--features timing-tests).
+            // unloaded machine (--features timing-tests). The
+            // load-independent form of this check runs by default on
+            // the virtual clock: `select_waits_on_the_virtual_clock`.
             assert!(t0.elapsed() >= Duration::from_millis(40));
         }
         assert_eq!((i, v), (0, 1));
         h.join().unwrap();
+    }
+
+    #[test]
+    fn select_waits_on_the_virtual_clock() {
+        // The unquarantined `select_blocks_until_ready` latency check:
+        // under the deterministic sim the "50ms" delay is virtual time,
+        // so the assertion that select actually *waited* holds exactly,
+        // on any machine, with zero wall-clock dependence.
+        use crate::csp::process::ProcessFn;
+        use crate::csp::sim::{sim_now, sim_sleep, SimNet, SimPolicy};
+        let run = |seed: u64| -> u64 {
+            let net = SimNet::new(SimPolicy::Seeded(seed));
+            let (tx, rx) = net.channel::<u32>("c0");
+            let (_tx1, rx1) = net.channel::<u32>("c1");
+            let writer = ProcessFn::boxed("writer", move || {
+                sim_sleep(50_000)?; // 50 virtual ms
+                tx.write(1)?;
+                Ok(())
+            });
+            let selector = ProcessFn::boxed("selector", move || {
+                let mut alt = Alt::new(vec![rx, rx1]);
+                let (i, v) = alt.select_read()?;
+                assert_eq!((i, v), (0, 1));
+                let now = sim_now().expect("under sim");
+                assert!(now >= 50_000, "select returned before the writer fired: t={now}");
+                Ok(())
+            });
+            net.run("t", vec![writer, selector]).unwrap();
+            net.now()
+        };
+        let t = run(3);
+        assert!(t >= 50_000);
+        assert_eq!(run(3), t, "deterministic per seed");
     }
 
     #[test]

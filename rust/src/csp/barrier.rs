@@ -9,16 +9,27 @@
 //!
 //! Unlike `std::sync::Barrier` this one can be poisoned, releasing all
 //! waiters with an error so a failing network tears down promptly.
+//!
+//! Under the deterministic simulation ([`crate::csp::sim`]) a barrier
+//! wait is a *visible schedule point*: the waiter registers with the
+//! sim kernel (like `AltSignal::wait` does) instead of parking on the
+//! condvar, so BSP networks simulate instead of hanging the kernel,
+//! and a barrier that can never fill is reported as a deadlock with
+//! "barrier sync" in the stuck-process list.
 
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::error::{GppError, Result};
+use super::sim::SimKernel;
 
 struct Inner {
     parties: usize,
     waiting: usize,
     generation: u64,
     poisoned: bool,
+    /// Simulated waiters parked via the kernel: woken (and drained) by
+    /// the generation leader or by poison.
+    sim_waiters: Vec<(Arc<SimKernel>, usize)>,
 }
 
 /// Cloneable reusable barrier.
@@ -37,6 +48,7 @@ impl Barrier {
                     waiting: 0,
                     generation: 0,
                     poisoned: false,
+                    sim_waiters: Vec::new(),
                 }),
                 Condvar::new(),
             )),
@@ -50,6 +62,9 @@ impl Barrier {
     /// Wait for all parties. Returns `true` for exactly one waiter per
     /// generation (the "leader", as `std::sync::Barrier` does).
     pub fn sync(&self) -> Result<bool> {
+        if let Some((kernel, pid)) = super::sim::attached() {
+            return self.sync_sim(kernel, pid);
+        }
         let (lock, cond) = &*self.inner;
         let mut g = lock.lock().unwrap();
         if g.poisoned {
@@ -72,11 +87,54 @@ impl Barrier {
         Ok(false)
     }
 
+    /// Simulated barrier wait: park through the kernel so the wait is a
+    /// schedule point and an unfillable barrier is a *detected*
+    /// deadlock. Mixed sim/non-sim parties still cooperate — the
+    /// condvar broadcast and the kernel wakes both happen on release.
+    fn sync_sim(&self, kernel: Arc<SimKernel>, pid: usize) -> Result<bool> {
+        let (lock, cond) = &*self.inner;
+        let gen = {
+            let mut g = lock.lock().unwrap();
+            if g.poisoned {
+                return Err(GppError::Poisoned);
+            }
+            let gen = g.generation;
+            g.waiting += 1;
+            if g.waiting == g.parties {
+                g.waiting = 0;
+                g.generation += 1;
+                for (k, p) in g.sim_waiters.drain(..) {
+                    k.wake(&[p]);
+                }
+                cond.notify_all();
+                return Ok(true);
+            }
+            g.sim_waiters.push((kernel.clone(), pid));
+            gen
+        };
+        loop {
+            // Park via the kernel; spurious wakes re-check below. The
+            // registration stays in `sim_waiters` until the generation
+            // flips, so a spurious wake cannot lose the real one.
+            kernel.block(pid, "barrier sync")?;
+            let g = lock.lock().unwrap();
+            if g.poisoned {
+                return Err(GppError::Poisoned);
+            }
+            if g.generation != gen {
+                return Ok(false);
+            }
+        }
+    }
+
     /// Release all current and future waiters with an error.
     pub fn poison(&self) {
         let (lock, cond) = &*self.inner;
         let mut g = lock.lock().unwrap();
         g.poisoned = true;
+        for (k, p) in g.sim_waiters.drain(..) {
+            k.wake(&[p]);
+        }
         cond.notify_all();
     }
 }
@@ -164,5 +222,54 @@ mod tests {
         assert_eq!(h.join().unwrap(), Err(GppError::Poisoned));
         // Future waits also fail.
         assert_eq!(b.sync(), Err(GppError::Poisoned));
+    }
+
+    #[test]
+    fn bsp_group_simulates_instead_of_hanging() {
+        use crate::csp::process::ProcessFn;
+        use crate::csp::sim::{SimNet, SimPolicy};
+        let rounds = 5;
+        let parties = 3;
+        let run = |seed: u64| -> (Vec<usize>, usize) {
+            let net = SimNet::new(SimPolicy::Seeded(seed));
+            let b = Barrier::new(parties);
+            let leaders = Arc::new(AtomicUsize::new(0));
+            let procs: Vec<_> = (0..parties)
+                .map(|i| {
+                    let b = b.clone();
+                    let leaders = leaders.clone();
+                    ProcessFn::boxed(&format!("bsp-{i}"), move || {
+                        for _ in 0..rounds {
+                            if b.sync()? {
+                                leaders.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            net.run("bsp", procs).unwrap();
+            (net.trace(), leaders.load(Ordering::SeqCst))
+        };
+        let (trace, leaders) = run(5);
+        assert_eq!(leaders, rounds, "exactly one leader per generation");
+        assert_eq!(run(5), (trace, leaders), "deterministic per seed");
+    }
+
+    #[test]
+    fn unfillable_barrier_is_a_detected_deadlock() {
+        use crate::csp::process::ProcessFn;
+        use crate::csp::sim::{SimNet, SimPolicy};
+        let net = SimNet::new(SimPolicy::RoundRobin);
+        let b = Barrier::new(2); // two parties, only one process
+        let p = ProcessFn::boxed("lonely", move || b.sync().map(|_| ()));
+        let err = net.run("t", vec![p]).unwrap_err();
+        match err {
+            GppError::Sim(msg) => {
+                assert!(msg.contains("deadlock"), "{msg}");
+                assert!(msg.contains("barrier sync"), "{msg}");
+            }
+            other => panic!("expected detected deadlock, got {other}"),
+        }
     }
 }

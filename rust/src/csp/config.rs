@@ -158,8 +158,20 @@ impl RuntimeConfig {
                     self.capacity
                 }
             };
-            let core: Arc<dyn Transport<T>> =
-                super::sim::SimCore::new(kernel, name, capacity, self.faults.clone());
+            // Net-kind edges additionally sample the simulation's
+            // network model (latency/jitter/loss), if one is attached
+            // via `SimNet::set_net_model` — in-memory kinds stay ideal.
+            let model = match self.transport {
+                TransportKind::Net | TransportKind::NetMux => kernel.edge_model(name),
+                TransportKind::Rendezvous | TransportKind::Buffered => None,
+            };
+            let core: Arc<dyn Transport<T>> = super::sim::SimCore::new_modeled(
+                kernel,
+                name,
+                capacity,
+                self.faults.clone(),
+                model,
+            );
             return ends_of(core);
         }
         match self.transport {

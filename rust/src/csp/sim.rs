@@ -32,13 +32,30 @@
 //!   order), so the documented pool-smaller-than-a-rendezvous-clique
 //!   deadlock is *provable* as a deterministic regression test.
 //!
-//! Limitations (by design, documented in ROADMAP open items): processes
-//! that perform channel operations from helper threads they spawn
-//! themselves (`OneParCastList`, the net reading-end pump) are not
-//! simulable — a sim channel op from an unregistered thread fails with
-//! a clear `GppError::Sim`. Compute-only helper threads (the
-//! `MultiCoreEngine` node phase) are fine: they run to completion while
-//! their process holds the turn.
+//! Two further pieces close the historical coverage gaps and connect
+//! this runtime to the scalable engine in [`crate::sim::scaled`]:
+//!
+//! * **Sim-aware helper threads** ([`sim_helper_join`]): a process that
+//!   wants scoped worker threads performing channel ops (the
+//!   `OneParCastList` parallel cast) registers them as *helper pids* —
+//!   each gets its own thread attached to the kernel, every channel op
+//!   inside it is an ordinary schedule point, and the parent parks
+//!   until all helpers finish. [`Barrier::sync`](super::barrier) waits
+//!   are registered with the kernel the same way `AltSignal::wait` is.
+//!   The `Net` reading-end pump never exists under the sim at all:
+//!   `RuntimeConfig::channel` maps net-kind edges onto sim-backed
+//!   buffered channels, whose capacity plays the credit window's role.
+//! * **Network models on sim-backed net edges**: [`SimNet::set_net_model`]
+//!   attaches a [`crate::sim::NetModel`] (latency / jitter / loss) that
+//!   net-kind edges built under [`SimNet::build_under`] sample from a
+//!   seeded per-edge RNG. Delivery times ride the virtual clock
+//!   (in-order per edge, like TCP), losses silently drop the message,
+//!   and — because samples are drawn in schedule order — a replayed
+//!   schedule reproduces every delay and drop exactly.
+//!
+//! Remaining limitation: compute-only helper threads a process spawns
+//! itself (the `MultiCoreEngine` node phase) run to completion while
+//! their process holds the turn, which is safe but serialises them.
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -53,6 +70,7 @@ use super::process::CSProcess;
 use super::transport::{
     next_chan_id, FaultAction, FaultOp, FaultPlan, Transport, TransportKind, TransportStats,
 };
+use crate::sim::net_model::NetModel;
 use crate::util::rng::Rng;
 
 /// Sentinel: no process holds the turn.
@@ -159,6 +177,9 @@ struct Kst {
     active: usize,
     /// Virtual clock.
     time: u64,
+    /// For helper pids ([`sim_helper_join`]): the parent process to wake
+    /// when this helper finishes. `None` for ordinary processes.
+    helper_parent: Vec<Option<usize>>,
 }
 
 /// The cooperative scheduler shared by every [`SimCore`] channel and the
@@ -166,6 +187,9 @@ struct Kst {
 pub struct SimKernel {
     st: Mutex<Kst>,
     cv: Condvar,
+    /// Network model applied to net-kind edges built under this
+    /// simulation, plus the seed per-edge RNGs derive from.
+    net_model: Mutex<Option<(NetModel, u64)>>,
 }
 
 thread_local! {
@@ -207,8 +231,10 @@ impl SimKernel {
                 activated: Vec::new(),
                 active: 0,
                 time: 0,
+                helper_parent: Vec::new(),
             }),
             cv: Condvar::new(),
+            net_model: Mutex::new(None),
         })
     }
 
@@ -220,7 +246,46 @@ impl SimKernel {
         g.blocked_on.push(String::new());
         g.wake_at.push(0);
         g.activated.push(false);
+        g.helper_parent.push(None);
         pid
+    }
+
+    /// Register a helper pid ([`sim_helper_join`]): an extra thread of an
+    /// already-running process. Always immediately runnable — helpers
+    /// never queue for a pool slot, because the real scoped threads they
+    /// model never occupy executor threads either.
+    pub(crate) fn add_helper(&self, name: &str, parent: usize) -> usize {
+        let mut g = self.st.lock().unwrap();
+        let pid = g.names.len();
+        g.names.push(name.to_string());
+        g.status.push(PStat::Runnable);
+        g.blocked_on.push(String::new());
+        g.wake_at.push(0);
+        g.activated.push(false);
+        g.helper_parent.push(Some(parent));
+        pid
+    }
+
+    /// True when every listed helper pid has finished.
+    pub(crate) fn helpers_done(&self, pids: &[usize]) -> bool {
+        let g = self.st.lock().unwrap();
+        pids.iter().all(|&p| g.status[p] == PStat::Done)
+    }
+
+    /// Attach a network model (see [`SimNet::set_net_model`]).
+    pub(crate) fn set_net_model(&self, model: NetModel, seed: u64) {
+        *self.net_model.lock().unwrap() = Some((model, seed));
+    }
+
+    /// The per-edge model a net-kind channel named `name` should carry,
+    /// if a non-trivial network model is configured.
+    pub(crate) fn edge_model(&self, name: &str) -> Option<EdgeModel> {
+        let g = self.net_model.lock().unwrap();
+        let (model, seed) = g.as_ref()?;
+        if model.is_ideal() {
+            return None;
+        }
+        Some(EdgeModel::new(model.clone(), seed ^ fnv1a64(name)))
     }
 
     fn deadlock_message(g: &Kst) -> String {
@@ -408,6 +473,15 @@ impl SimKernel {
         let mut g = self.st.lock().unwrap();
         g.status[pid] = PStat::Done;
         g.blocked_on[pid].clear();
+        // A finishing helper wakes its parent, parked in
+        // [`sim_helper_join`] (which re-checks `helpers_done`, so
+        // early wakes are merely spurious).
+        if let Some(parent) = g.helper_parent[pid] {
+            if g.status[parent] == PStat::Blocked {
+                g.status[parent] = PStat::Runnable;
+                g.blocked_on[parent].clear();
+            }
+        }
         if g.pool.is_some() && g.activated[pid] {
             g.activated[pid] = false;
             g.active -= 1;
@@ -469,6 +543,81 @@ pub fn sim_now() -> Option<u64> {
     attached().map(|(k, _)| k.now())
 }
 
+/// Run `parts` as sim-registered *helper threads* of the calling
+/// simulated process and join them all.
+///
+/// Each part gets its own OS thread attached to the kernel as a helper
+/// pid, so every channel operation inside it is an ordinary schedule
+/// point — this is how `OneParCastList`'s parallel cast becomes
+/// simulable. The parent parks (a visible "join helpers" blocked state
+/// in deadlock reports) until every helper finishes; helper panics and
+/// errors come back as `Err` entries.
+///
+/// Returns `None` when the caller is not a simulated process — use real
+/// scoped threads instead.
+pub(crate) fn sim_helper_join(
+    label: &str,
+    parts: Vec<Box<dyn FnOnce() -> Result<()> + Send + 'static>>,
+) -> Option<Vec<Result<()>>> {
+    let (kernel, parent) = attached()?;
+    let mut pids = Vec::with_capacity(parts.len());
+    let mut handles = Vec::with_capacity(parts.len());
+    let mut spawn_err: Option<GppError> = None;
+    for (i, f) in parts.into_iter().enumerate() {
+        let name = format!("{label}/helper-{i}");
+        let pid = kernel.add_helper(&name, parent);
+        pids.push(pid);
+        let k = kernel.clone();
+        let spawned = std::thread::Builder::new()
+            .name(name.clone())
+            .stack_size(512 * 1024)
+            .spawn(move || -> Outcome {
+                SIM_TLS.with(|t| *t.borrow_mut() = Some((k.clone(), pid)));
+                let out: Outcome = match k.start_gate(pid) {
+                    Ok(()) => catch_unwind(AssertUnwindSafe(f)).map_err(panic_message),
+                    Err(e) => Ok(Err(e)),
+                };
+                k.finish(pid);
+                SIM_TLS.with(|t| *t.borrow_mut() = None);
+                out
+            });
+        match spawned {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                // The pid exists but no thread will ever run it: retire
+                // it immediately so the kernel never schedules a ghost.
+                kernel.finish(pid);
+                spawn_err = Some(GppError::Sim(format!("spawn {name}: {e}")));
+                break;
+            }
+        }
+    }
+    // Park until every helper is Done. No check-then-block race: the
+    // parent holds the turn here, so no helper can finish in between.
+    while !kernel.helpers_done(&pids) {
+        if let Err(e) = kernel.block(parent, "join helpers") {
+            // Kernel aborted (deadlock/step bound elsewhere): helpers
+            // unwind through their own abort checks; drain the threads
+            // and surface the abort.
+            for h in handles {
+                let _ = h.join();
+            }
+            return Some(vec![Err(e)]);
+        }
+    }
+    let mut results: Vec<Result<()>> = handles
+        .into_iter()
+        .map(|h| match h.join().unwrap_or_else(|p| Err(panic_message(p))) {
+            Ok(r) => r,
+            Err(panic_msg) => Err(GppError::Sim(format!("helper panicked: {panic_msg}"))),
+        })
+        .collect();
+    if let Some(e) = spawn_err {
+        results.push(Err(e));
+    }
+    Some(results)
+}
+
 /// Render a schedule as the canonical comma-separated pid list — the
 /// replay key printed with every sim failure.
 pub fn schedule_to_string(trace: &[usize]) -> String {
@@ -493,9 +642,48 @@ pub fn parse_schedule(s: &str) -> Result<Vec<usize>> {
 
 // -------------------------------------------------------- sim transport
 
+/// Per-edge network model instance: the shared [`NetModel`] plus this
+/// edge's own seeded RNG. Samples are drawn in schedule order (inside
+/// the channel lock, at the write's schedule point), so replaying a
+/// schedule reproduces every delay and every drop.
+pub(crate) struct EdgeModel {
+    model: NetModel,
+    rng: Mutex<Rng>,
+}
+
+impl EdgeModel {
+    fn new(model: NetModel, seed: u64) -> Self {
+        Self { model, rng: Mutex::new(Rng::new(seed)) }
+    }
+
+    /// The next message's fate: `None` = lost in transit, `Some(t)` =
+    /// deliverable at absolute virtual time `t` (always > 0, so 0 stays
+    /// the "no model" sentinel on [`SimPending::ready_at`]).
+    fn sample(&self, now: u64) -> Option<u64> {
+        let mut rng = self.rng.lock().unwrap();
+        if self.model.sample_loss(&mut rng) {
+            return None;
+        }
+        Some(now.saturating_add(self.model.sample_delay(&mut rng).max(1)))
+    }
+}
+
+/// FNV-1a — stable per-edge seed derivation from the channel name.
+fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
 struct SimPending<T> {
     wid: u64,
     value: T,
+    /// Absolute virtual delivery time under a network model; 0 means
+    /// "deliverable immediately" (unmodelled edge or rendezvous).
+    ready_at: u64,
 }
 
 struct SimChSt<T> {
@@ -507,6 +695,9 @@ struct SimChSt<T> {
     blocked_readers: Vec<usize>,
     blocked_writers: Vec<usize>,
     alt_waiters: Vec<(usize, Weak<AltSignal>)>,
+    /// Monotone high-water delivery time: delays never reorder messages
+    /// within one edge (TCP-like in-order delivery).
+    last_ready_at: u64,
 }
 
 /// Kernel-controlled channel transport. `capacity == 0` gives rendezvous
@@ -520,6 +711,8 @@ pub struct SimCore<T> {
     kernel: Arc<SimKernel>,
     st: Mutex<SimChSt<T>>,
     faults: Option<Arc<FaultPlan>>,
+    /// Latency/jitter/loss model for this edge (buffered edges only).
+    model: Option<EdgeModel>,
 }
 
 impl<T> SimCore<T> {
@@ -528,6 +721,19 @@ impl<T> SimCore<T> {
         name: &str,
         capacity: usize,
         faults: Option<Arc<FaultPlan>>,
+    ) -> Arc<Self> {
+        Self::new_modeled(kernel, name, capacity, faults, None)
+    }
+
+    /// A sim channel carrying a network model. Rendezvous edges
+    /// (`capacity == 0`) ignore the model: it describes buffered net
+    /// links, and a delayed rendezvous would stall both ends at once.
+    pub(crate) fn new_modeled(
+        kernel: Arc<SimKernel>,
+        name: &str,
+        capacity: usize,
+        faults: Option<Arc<FaultPlan>>,
+        model: Option<EdgeModel>,
     ) -> Arc<Self> {
         Arc::new(Self {
             id: next_chan_id(),
@@ -542,8 +748,10 @@ impl<T> SimCore<T> {
                 blocked_readers: Vec::new(),
                 blocked_writers: Vec::new(),
                 alt_waiters: Vec::new(),
+                last_ready_at: 0,
             }),
             faults,
+            model: if capacity == 0 { None } else { model },
         })
     }
 
@@ -581,6 +789,12 @@ impl<T> SimCore<T> {
     fn fault(&self, op: FaultOp) -> Option<FaultAction> {
         self.faults.as_ref().and_then(|fp| fp.apply(op, &self.name))
     }
+
+    /// Is this pending message deliverable at the current virtual time?
+    /// (Always true on unmodelled edges, where `ready_at == 0`.)
+    fn deliverable(&self, p: &SimPending<T>) -> bool {
+        p.ready_at == 0 || p.ready_at <= self.kernel.now()
+    }
 }
 
 impl<T: Send> Transport<T> for SimCore<T> {
@@ -607,7 +821,7 @@ impl<T: Send> Transport<T> for SimCore<T> {
                 }
                 let wid = ch.next_wid;
                 ch.next_wid += 1;
-                ch.queue.push_back(SimPending { wid, value });
+                ch.queue.push_back(SimPending { wid, value, ready_at: 0 });
                 self.wake_readers(&mut ch);
                 wid
             };
@@ -637,11 +851,28 @@ impl<T: Send> Transport<T> for SimCore<T> {
                         return Err(GppError::Poisoned);
                     }
                     if ch.queue.len() < self.capacity {
+                        // Network model: sample this message's fate at
+                        // the write's schedule point, in-order per edge.
+                        let ready_at = match &self.model {
+                            Some(m) => match m.sample(self.kernel.now()) {
+                                // Lost in transit: silently dropped, the
+                                // write itself still succeeds (the wire
+                                // accepted it).
+                                None => return Ok(()),
+                                Some(at) => {
+                                    let at = at.max(ch.last_ready_at);
+                                    ch.last_ready_at = at;
+                                    at
+                                }
+                            },
+                            None => 0,
+                        };
                         let wid = ch.next_wid;
                         ch.next_wid += 1;
                         ch.queue.push_back(SimPending {
                             wid,
                             value: value.take().expect("value written once"),
+                            ready_at,
                         });
                         self.wake_readers(&mut ch);
                         return Ok(());
@@ -666,21 +897,35 @@ impl<T: Send> Transport<T> for SimCore<T> {
             _ => {}
         }
         loop {
-            {
+            let in_flight = {
                 let mut ch = self.st.lock().unwrap();
-                if let Some(p) = ch.queue.pop_front() {
-                    if self.capacity == 0 {
-                        ch.taken.push(p.wid);
+                match ch.queue.front() {
+                    Some(p) if !self.deliverable(p) => p.ready_at,
+                    Some(_) => {
+                        let p = ch.queue.pop_front().unwrap();
+                        if self.capacity == 0 {
+                            ch.taken.push(p.wid);
+                        }
+                        self.wake_writers(&mut ch);
+                        return Ok(p.value);
                     }
-                    self.wake_writers(&mut ch);
-                    return Ok(p.value);
+                    None => {
+                        if ch.poisoned {
+                            return Err(GppError::Poisoned);
+                        }
+                        ch.blocked_readers.push(pid);
+                        0
+                    }
                 }
-                if ch.poisoned {
-                    return Err(GppError::Poisoned);
-                }
-                ch.blocked_readers.push(pid);
+            };
+            if in_flight > 0 {
+                // Front message still on the wire: sleep the virtual
+                // clock forward to its delivery time, then re-check.
+                let now = self.kernel.now();
+                self.kernel.sleep(pid, in_flight.saturating_sub(now).max(1))?;
+            } else {
+                self.kernel.block(pid, &format!("read '{}'", self.name))?;
             }
-            self.kernel.block(pid, &format!("read '{}'", self.name))?;
         }
     }
 
@@ -688,12 +933,18 @@ impl<T: Send> Transport<T> for SimCore<T> {
         let pid = self.pid()?;
         self.kernel.yield_now(pid)?;
         let mut ch = self.st.lock().unwrap();
-        if let Some(p) = ch.queue.pop_front() {
-            if self.capacity == 0 {
-                ch.taken.push(p.wid);
+        match ch.queue.front() {
+            // In-flight front: nothing deliverable *now*.
+            Some(p) if !self.deliverable(p) => return Ok(None),
+            Some(_) => {
+                let p = ch.queue.pop_front().unwrap();
+                if self.capacity == 0 {
+                    ch.taken.push(p.wid);
+                }
+                self.wake_writers(&mut ch);
+                return Ok(Some(p.value));
             }
-            self.wake_writers(&mut ch);
-            return Ok(Some(p.value));
+            None => {}
         }
         if ch.poisoned {
             return Err(GppError::Poisoned);
@@ -706,27 +957,43 @@ impl<T: Send> Transport<T> for SimCore<T> {
         self.kernel.yield_now(pid)?;
         let max = max.max(1);
         loop {
-            {
+            let in_flight = {
                 let mut ch = self.st.lock().unwrap();
-                if !ch.queue.is_empty() {
-                    let n = ch.queue.len().min(max);
-                    let mut out = Vec::with_capacity(n);
-                    for _ in 0..n {
-                        let p = ch.queue.pop_front().unwrap();
-                        if self.capacity == 0 {
-                            ch.taken.push(p.wid);
+                match ch.queue.front() {
+                    Some(p) if !self.deliverable(p) => p.ready_at,
+                    Some(_) => {
+                        // Drain the deliverable prefix only — in-flight
+                        // messages behind it stay on the wire.
+                        let mut out = Vec::new();
+                        while out.len() < max {
+                            match ch.queue.front() {
+                                Some(p) if self.deliverable(p) => {}
+                                _ => break,
+                            }
+                            let p = ch.queue.pop_front().unwrap();
+                            if self.capacity == 0 {
+                                ch.taken.push(p.wid);
+                            }
+                            out.push(p.value);
                         }
-                        out.push(p.value);
+                        self.wake_writers(&mut ch);
+                        return Ok(out);
                     }
-                    self.wake_writers(&mut ch);
-                    return Ok(out);
+                    None => {
+                        if ch.poisoned {
+                            return Err(GppError::Poisoned);
+                        }
+                        ch.blocked_readers.push(pid);
+                        0
+                    }
                 }
-                if ch.poisoned {
-                    return Err(GppError::Poisoned);
-                }
-                ch.blocked_readers.push(pid);
+            };
+            if in_flight > 0 {
+                let now = self.kernel.now();
+                self.kernel.sleep(pid, in_flight.saturating_sub(now).max(1))?;
+            } else {
+                self.kernel.block(pid, &format!("read '{}'", self.name))?;
             }
-            self.kernel.block(pid, &format!("read '{}'", self.name))?;
         }
     }
 
@@ -735,53 +1002,90 @@ impl<T: Send> Transport<T> for SimCore<T> {
         self.kernel.yield_now(pid)?;
         let max = max.max(1);
         loop {
-            {
+            let in_flight = {
                 let mut ch = self.st.lock().unwrap();
-                if !ch.queue.is_empty() {
-                    let mut out = Vec::new();
-                    while out.len() < max {
-                        let take = match ch.queue.front() {
-                            Some(p) => keep(&p.value),
-                            None => false,
-                        };
-                        if !take {
-                            break;
+                match ch.queue.front() {
+                    Some(p) if !self.deliverable(p) => p.ready_at,
+                    Some(_) => {
+                        let mut out = Vec::new();
+                        while out.len() < max {
+                            let take = match ch.queue.front() {
+                                Some(p) => self.deliverable(p) && keep(&p.value),
+                                None => false,
+                            };
+                            if !take {
+                                break;
+                            }
+                            let p = ch.queue.pop_front().unwrap();
+                            if self.capacity == 0 {
+                                ch.taken.push(p.wid);
+                            }
+                            out.push(p.value);
                         }
-                        let p = ch.queue.pop_front().unwrap();
-                        if self.capacity == 0 {
-                            ch.taken.push(p.wid);
+                        if !out.is_empty() {
+                            self.wake_writers(&mut ch);
                         }
-                        out.push(p.value);
+                        return Ok(out);
                     }
-                    if !out.is_empty() {
-                        self.wake_writers(&mut ch);
+                    None => {
+                        if ch.poisoned {
+                            return Err(GppError::Poisoned);
+                        }
+                        ch.blocked_readers.push(pid);
+                        0
                     }
-                    return Ok(out);
                 }
-                if ch.poisoned {
-                    return Err(GppError::Poisoned);
-                }
-                ch.blocked_readers.push(pid);
+            };
+            if in_flight > 0 {
+                let now = self.kernel.now();
+                self.kernel.sleep(pid, in_flight.saturating_sub(now).max(1))?;
+            } else {
+                self.kernel.block(pid, &format!("read '{}'", self.name))?;
             }
-            self.kernel.block(pid, &format!("read '{}'", self.name))?;
         }
     }
 
     fn ready(&self) -> bool {
         let ch = self.st.lock().unwrap();
-        !ch.queue.is_empty() || ch.poisoned
+        matches!(ch.queue.front(), Some(p) if self.deliverable(p)) || ch.poisoned
     }
 
     fn register_alt(&self, sig: &Arc<AltSignal>) -> bool {
-        let mut ch = self.st.lock().unwrap();
-        if !ch.queue.is_empty() || ch.poisoned {
-            return true;
+        loop {
+            let in_flight = {
+                let mut ch = self.st.lock().unwrap();
+                if ch.poisoned {
+                    return true;
+                }
+                match ch.queue.front() {
+                    Some(p) if self.deliverable(p) => return true,
+                    Some(p) => p.ready_at,
+                    None => {
+                        if let Some((_, pid)) = attached() {
+                            ch.alt_waiters.retain(|(_, w)| w.strong_count() > 0);
+                            ch.alt_waiters.push((pid, Arc::downgrade(sig)));
+                        }
+                        return false;
+                    }
+                }
+            };
+            // Front message in flight: it WILL arrive — advance the
+            // virtual clock to its delivery time and report ready, so
+            // an Alt over a modelled edge selects it instead of
+            // spinning. (A valid linearisation: the select happens at
+            // the delivery instant.) Then re-check: another selector
+            // may have raced the message away while we slept.
+            let Some((k, pid)) = attached() else { return true };
+            let now = k.now();
+            if in_flight <= now {
+                continue;
+            }
+            if k.sleep(pid, in_flight - now).is_err() {
+                // Kernel aborted: report ready so the caller's next
+                // channel op surfaces the abort error.
+                return true;
+            }
         }
-        if let Some((_, pid)) = attached() {
-            ch.alt_waiters.retain(|(_, w)| w.strong_count() > 0);
-            ch.alt_waiters.push((pid, Arc::downgrade(sig)));
-        }
-        false
     }
 
     fn poison(&self) {
@@ -880,6 +1184,30 @@ impl SimNet {
     ) -> (Out<T>, In<T>) {
         let core: Arc<dyn Transport<T>> =
             SimCore::new(self.kernel.clone(), name, capacity.max(1), None);
+        ends_of(core)
+    }
+
+    /// Attach a latency/jitter/loss [`NetModel`] to net-kind edges built
+    /// under this simulation (via [`SimNet::build_under`] or
+    /// [`SimNet::modeled_channel`]). Each edge derives its own RNG from
+    /// `seed` and its channel name, so a replayed schedule reproduces
+    /// every delay and drop. An ideal model is a no-op.
+    pub fn set_net_model(&self, model: NetModel, seed: u64) {
+        self.kernel.set_net_model(model, seed);
+    }
+
+    /// A buffered channel that samples this simulation's network model —
+    /// what `RuntimeConfig::channel` builds for net-kind configs under
+    /// [`SimNet::build_under`]. Without a model this is exactly
+    /// [`SimNet::buffered_channel`].
+    pub fn modeled_channel<T: Send + 'static>(
+        &self,
+        name: &str,
+        capacity: usize,
+    ) -> (Out<T>, In<T>) {
+        let model = self.kernel.edge_model(name);
+        let core: Arc<dyn Transport<T>> =
+            SimCore::new_modeled(self.kernel.clone(), name, capacity.max(1), None, model);
         ends_of(core)
     }
 
@@ -1452,5 +1780,157 @@ mod tests {
             Ok(())
         });
         net.run("t", vec![w, r]).unwrap();
+    }
+
+    #[test]
+    fn modeled_edge_delivers_in_order_on_the_virtual_clock() {
+        let net = SimNet::new(SimPolicy::RoundRobin);
+        // Heavy jitter relative to latency: without the monotone
+        // delivery clamp, later messages could overtake earlier ones.
+        net.set_net_model(NetModel::parse("custom:500:400:0").unwrap(), 7);
+        let (tx, rx) = net.modeled_channel::<u32>("edge", 16);
+        let w = ProcessFn::boxed("w", move || {
+            for i in 0..8 {
+                tx.write(i)?;
+            }
+            Ok(())
+        });
+        let r = ProcessFn::boxed("r", move || {
+            for i in 0..8 {
+                assert_eq!(rx.read()?, i, "in-order delivery");
+            }
+            Ok(())
+        });
+        let t0 = std::time::Instant::now();
+        net.run("t", vec![w, r]).unwrap();
+        assert!(net.now() >= 500, "latency rides the virtual clock: t={}", net.now());
+        assert!(t0.elapsed().as_secs() < 30, "virtual latency must not be wall time");
+    }
+
+    #[test]
+    fn fully_lossy_model_drops_every_message() {
+        let net = SimNet::new(SimPolicy::RoundRobin);
+        net.set_net_model(NetModel::parse("custom:10:0:1000").unwrap(), 3);
+        let (tx, rx) = net.modeled_channel::<u32>("edge", 8);
+        let txp = tx.clone();
+        let w = ProcessFn::boxed("w", move || {
+            for i in 0..5 {
+                tx.write(i)?; // the wire accepts it, then eats it
+            }
+            txp.poison();
+            Ok(())
+        });
+        let got = Arc::new(AtomicUsize::new(0));
+        let g2 = got.clone();
+        let r = ProcessFn::boxed("r", move || loop {
+            match rx.read() {
+                Ok(_) => {
+                    g2.fetch_add(1, Ordering::SeqCst);
+                }
+                Err(GppError::Poisoned) => return Ok(()),
+                Err(e) => return Err(e),
+            }
+        });
+        net.run("t", vec![w, r]).unwrap();
+        assert_eq!(got.load(Ordering::SeqCst), 0, "100% loss delivers nothing");
+    }
+
+    #[test]
+    fn modeled_run_replays_byte_identically_with_same_delays() {
+        let run = |policy: SimPolicy| -> (Vec<usize>, u64, usize) {
+            let net = SimNet::new(policy);
+            // 30% loss: over 40 writes a drop is a near-certainty for
+            // any seed, and exactly which draws drop is seed-determined.
+            net.set_net_model(NetModel::parse("custom:200:50:300").unwrap(), 42);
+            let (tx, rx) = net.modeled_channel::<u32>("edge", 4);
+            let txp = tx.clone();
+            let w = ProcessFn::boxed("w", move || {
+                for i in 0..40 {
+                    tx.write(i)?;
+                }
+                txp.poison();
+                Ok(())
+            });
+            let got = Arc::new(AtomicUsize::new(0));
+            let g2 = got.clone();
+            let r = ProcessFn::boxed("r", move || loop {
+                match rx.read() {
+                    Ok(_) => {
+                        g2.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(GppError::Poisoned) => return Ok(()),
+                    Err(e) => return Err(e),
+                }
+            });
+            net.run("t", vec![w, r]).unwrap();
+            (net.trace(), net.now(), got.load(Ordering::SeqCst))
+        };
+        let (trace, now, delivered) = run(SimPolicy::Seeded(9));
+        assert!(delivered < 40, "the lossy model must drop something");
+        assert!(now > 0, "delays must advance the clock");
+        let (trace2, now2, delivered2) = run(SimPolicy::Replay(trace.clone()));
+        assert_eq!(trace, trace2, "byte-identical replay");
+        assert_eq!(now, now2, "identical virtual end time");
+        assert_eq!(delivered, delivered2, "identical drops");
+    }
+
+    #[test]
+    fn alt_selects_in_flight_message_after_its_latency() {
+        use crate::csp::alt::Alt;
+        let net = SimNet::new(SimPolicy::RoundRobin);
+        net.set_net_model(NetModel::parse("custom:700:0:0").unwrap(), 5);
+        let (tx, rx) = net.modeled_channel::<u32>("edge", 4);
+        let w = ProcessFn::boxed("w", move || tx.write(77));
+        let sel = ProcessFn::boxed("sel", move || {
+            let mut alt = Alt::new(vec![rx]);
+            let (_i, v) = alt.select_read()?;
+            assert_eq!(v, 77);
+            let now = sim_now().expect("under sim");
+            assert!(now >= 700, "select waited out the latency: t={now}");
+            Ok(())
+        });
+        net.run("t", vec![w, sel]).unwrap();
+    }
+
+    #[test]
+    fn helper_join_makes_parallel_casts_simulable() {
+        let net = SimNet::new(SimPolicy::Seeded(13));
+        let (tx, rx) = net.buffered_channel::<u32>("fanin", 4);
+        let tx2 = tx.clone();
+        let parent = ProcessFn::boxed("parent", move || {
+            let a = tx;
+            let b = tx2;
+            let parts: Vec<Box<dyn FnOnce() -> Result<()> + Send + 'static>> = vec![
+                Box::new(move || a.write(1)),
+                Box::new(move || b.write(2)),
+            ];
+            let results = sim_helper_join("cast", parts).expect("attached to the sim");
+            for r in results {
+                r?;
+            }
+            // Both helper writes completed before the join returned.
+            let mut got = vec![rx.read()?, rx.read()?];
+            got.sort_unstable();
+            assert_eq!(got, vec![1, 2]);
+            Ok(())
+        });
+        net.run("t", vec![parent]).unwrap();
+    }
+
+    #[test]
+    fn helper_errors_surface_at_the_join() {
+        let net = SimNet::new(SimPolicy::RoundRobin);
+        let parent = ProcessFn::boxed("parent", move || {
+            let parts: Vec<Box<dyn FnOnce() -> Result<()> + Send + 'static>> = vec![
+                Box::new(|| Ok(())),
+                Box::new(|| Err(GppError::Other("helper boom".into()))),
+            ];
+            let results = sim_helper_join("cast", parts).expect("attached to the sim");
+            assert_eq!(results.len(), 2);
+            assert!(results.iter().any(|r| r.is_err()));
+            assert!(results.iter().any(|r| r.is_ok()));
+            Ok(())
+        });
+        net.run("t", vec![parent]).unwrap();
     }
 }

@@ -7,6 +7,7 @@
 //! gpp jacobi | nbody | image | goldbach | concordance
 //! gpp cluster-host | cluster-worker  cluster roles (paper §7)
 //! gpp verify [base|gop-pog|extracted|all]   run the CSPm/FDR assertions (§4.6, §9)
+//! gpp sim [--procs N] …           scaled cluster-protocol simulation (BENCH_sim.json)
 //! gpp calibrate                   print this host's workload costs
 //! gpp logdemo                     logged concordance + phase report (§8)
 //! gpp stats                       metrics-registry snapshot of a small run
@@ -125,6 +126,7 @@ fn main() {
         "cluster-host" => cmd_cluster_host(&args),
         "cluster-worker" => cmd_cluster_worker(&args),
         "verify" => cmd_verify(&args),
+        "sim" => cmd_sim(&args),
         "calibrate" => cmd_calibrate(),
         "bench" => cmd_bench(&args),
         "logdemo" => cmd_logdemo(&args),
@@ -165,6 +167,13 @@ COMMANDS
   cluster-host       serve Mandelbrot rows    [--join A --nodes N --width W --height H --max-iter M --timeout-ms T]
   cluster-worker     join a host, run its job [--join A --timeout-ms T]
   verify [which]     run FDR-style assertions: base | gop-pog | extracted | all (default all)
+  sim                run the cluster control protocol inside the scaled simulation:
+                     N logical workers on a fixed carrier pool under a modelled
+                     network; writes BENCH_sim.json (events/sec, peak memory)
+                     [--procs N --items K --net-model ideal|lan|wan|lossy|custom:LAT:JIT:LOSS
+                      --churn PERMILLE --seed S --carriers C --compute-ticks T
+                      --min-events-per-sec X]
+                     (--min-events-per-sec turns the run into an acceptance gate)
   calibrate          measure per-item workload costs on this host
   bench              hot-path micro benches; writes BENCH_csp.json, BENCH_net.json and
                      BENCH_dispatch.json at the repo root
@@ -641,6 +650,112 @@ fn cmd_verify(args: &Args) -> i32 {
     } else {
         1
     }
+}
+
+/// Peak resident set size of this process in kilobytes (Linux `VmHWM`
+/// from `/proc/self/status`; `0` where unavailable).
+fn peak_rss_kb() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+        }
+    }
+    0
+}
+
+/// `gpp sim` — the scaled simulation executor: run the real cluster
+/// control protocol (join / steal / requeue / stats) with `--procs`
+/// logical worker processes multiplexed onto `--carriers` carrier
+/// threads, under a modelled network (`--net-model`, `--churn`), fully
+/// deterministic per `--seed`. Writes throughput and peak-memory rows
+/// to `BENCH_sim.json`; `--min-events-per-sec` makes the run an
+/// acceptance gate (CI's sim-scale smoke job).
+fn cmd_sim(args: &Args) -> i32 {
+    use gpp::harness::{bench_json_looks_valid, BenchJson};
+    use gpp::sim::{ClusterScenario, NetModel};
+
+    let procs = args.usize("procs", 100_000).max(1);
+    let items = args.usize("items", procs / 2);
+    let model = match NetModel::parse(args.get_or("net-model", "lossy")) {
+        Ok(m) => m,
+        Err(e) => return fail(e),
+    };
+    let churn = args.u64("churn", 0) as u32;
+    let seed = args.u64("seed", 1);
+    let carriers = args.usize("carriers", 4);
+    let compute = args.u64("compute-ticks", 2_000);
+    let floor = args.f64("min-events-per-sec", 0.0);
+
+    let scenario = ClusterScenario::new(procs, items)
+        .with_model(model.clone())
+        .with_churn_permille(churn)
+        .with_seed(seed)
+        .with_carriers(carriers)
+        .with_compute_ticks(compute);
+    let r = match scenario.run() {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    let rate = r.events_per_sec();
+    let peak_kb = peak_rss_kb();
+    println!(
+        "sim: {} procs ({} workers + host), {} items, net={} churn={churn}‰ seed={seed}",
+        r.procs, procs, items, model.name
+    );
+    println!(
+        "sim: {} results, {} joined, {} lost, {} requeued, {} stats",
+        r.report.results.len(),
+        r.report.workers_joined,
+        r.report.workers_lost,
+        r.report.items_requeued,
+        r.report.worker_stats.len()
+    );
+    println!(
+        "sim: {} events in {:.3}s on {carriers} carriers -> {:.0} events/sec, \
+         virtual time {} ticks, peak rss {} MB",
+        r.steps,
+        r.wall_seconds,
+        rate,
+        r.virtual_time,
+        peak_kb / 1024
+    );
+
+    let mut json = BenchJson::new("gpp sim: scaled cluster-protocol simulation");
+    json.add("sim.wall_seconds", r.wall_seconds);
+    json.add_derived("sim.procs", r.procs as f64);
+    json.add_derived("sim.items", items as f64);
+    json.add_derived("sim.events", r.steps as f64);
+    json.add_derived("sim.rounds", r.rounds as f64);
+    json.add_derived("sim.events_per_sec", rate);
+    json.add_derived("sim.virtual_time", r.virtual_time as f64);
+    json.add_derived("sim.peak_rss_kb", peak_kb as f64);
+    json.add_derived("sim.workers_lost", r.report.workers_lost as f64);
+    json.add_derived("sim.items_requeued", r.report.items_requeued as f64);
+    match json.write_at_root("BENCH_sim.json") {
+        Ok(p) => {
+            match std::fs::read_to_string(&p) {
+                Ok(text) if bench_json_looks_valid(&text) => {}
+                Ok(_) => return fail(format!("{} is malformed", p.display())),
+                Err(e) => return fail(format!("{}: {e}", p.display())),
+            }
+            println!("sim -> {}", p.display());
+        }
+        Err(e) => return fail(format!("BENCH_sim.json: {e}")),
+    }
+    if floor > 0.0 && rate < floor {
+        return fail(format!(
+            "sim smoke: {rate:.0} events/sec is below the required {floor:.0}"
+        ));
+    }
+    0
 }
 
 fn cmd_calibrate() -> i32 {

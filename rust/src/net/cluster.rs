@@ -99,24 +99,27 @@ impl Wire for ClusterConfig {
     }
 }
 
-// Protocol tags. Worker → host:
-const W_HELLO: u8 = 1;
+// Protocol tags — `pub(crate)` so the scaled simulation's cluster
+// scenario ([`crate::sim::scenario`]) speaks the *same* protocol, tag
+// for tag, that these threads put on real sockets.
+// Worker → host:
+pub(crate) const W_HELLO: u8 = 1;
 /// Bare work request (first request; carries no result).
-const W_REQ: u8 = 2;
+pub(crate) const W_REQ: u8 = 2;
 /// `[tag][u64 item id][result bytes…]`
-const W_RESULT: u8 = 3;
+pub(crate) const W_RESULT: u8 = 3;
 /// `[tag][u64 item id][String error]` — the job itself failed; fatal.
-const W_FAIL: u8 = 4;
+pub(crate) const W_FAIL: u8 = 4;
 /// `[tag][MetricsSnapshot JSON bytes]` — the worker's final metrics,
 /// sent (best effort) after it receives `H_DONE`, so the host can print
 /// a merged per-node report at `HostReport` time.
-const W_STATS: u8 = 5;
+pub(crate) const W_STATS: u8 = 5;
 // Host → worker:
 /// `[tag][String job name][config bytes…]`
-const H_CONFIG: u8 = 10;
+pub(crate) const H_CONFIG: u8 = 10;
 /// `[tag][u64 item id][item bytes…]`
-const H_WORK: u8 = 11;
-const H_DONE: u8 = 12;
+pub(crate) const H_WORK: u8 = 11;
+pub(crate) const H_DONE: u8 = 12;
 
 /// What a completed [`serve_items`] run reports.
 #[derive(Debug)]
@@ -152,7 +155,14 @@ impl HostReport {
     }
 }
 
-struct Shared {
+/// The host's item-accounting state, extracted from the connection
+/// threads so the *same* bookkeeping runs in two places: under the
+/// `Mutex`/`Condvar` of the real threaded host ([`serve_items`]) and
+/// inside the scaled simulation's host process
+/// ([`crate::sim::scenario::ClusterScenario`]). What the sim verifies
+/// about steal/requeue/result accounting is therefore a property of
+/// this code, not of a hand-written model of it.
+pub struct HostLedger {
     queue: VecDeque<(usize, Arc<Vec<u8>>)>,
     results: Vec<Option<Vec<u8>>>,
     done: usize,
@@ -165,7 +175,164 @@ struct Shared {
     fatal: Option<GppError>,
 }
 
-type HostSync = (Mutex<Shared>, Condvar);
+impl HostLedger {
+    pub fn new(items: Vec<Vec<u8>>) -> Self {
+        let total = items.len();
+        Self {
+            queue: items
+                .into_iter()
+                .enumerate()
+                .map(|(i, b)| (i, Arc::new(b)))
+                .collect(),
+            results: vec![None; total],
+            done: 0,
+            total,
+            workers_lost: 0,
+            items_requeued: 0,
+            worker_stats: Vec::new(),
+            fatal: None,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Every item has a result.
+    pub fn is_done(&self) -> bool {
+        self.done == self.total
+    }
+
+    pub fn fatal(&self) -> Option<&GppError> {
+        self.fatal.as_ref()
+    }
+
+    pub fn set_fatal(&mut self, e: GppError) {
+        if self.fatal.is_none() {
+            self.fatal = Some(e);
+        }
+    }
+
+    /// The next live item to dispatch, skipping queue entries that were
+    /// requeued and then completed elsewhere.
+    pub fn next_item(&mut self) -> Option<(usize, Arc<Vec<u8>>)> {
+        while let Some((id, item)) = self.queue.pop_front() {
+            if self.results[id].is_some() {
+                continue;
+            }
+            return Some((id, item));
+        }
+        None
+    }
+
+    /// Record a worker's result. Returns `false` for a duplicate (the
+    /// item was requeued and already completed elsewhere) — duplicates
+    /// are dropped, never double-counted.
+    pub fn record_result(&mut self, id: usize, bytes: Vec<u8>) -> bool {
+        if self.results[id].is_some() {
+            return false;
+        }
+        self.results[id] = Some(bytes);
+        self.done += 1;
+        true
+    }
+
+    /// A worker died; requeue its in-flight item if still incomplete.
+    /// Returns `true` when the item was requeued.
+    pub fn worker_lost(&mut self, in_flight: Option<(usize, Arc<Vec<u8>>)>) -> bool {
+        self.workers_lost += 1;
+        if let Some((id, item)) = in_flight {
+            if self.results[id].is_none() {
+                self.queue.push_back((id, item));
+                self.items_requeued += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn push_stats(&mut self, json: String) {
+        self.worker_stats.push(json);
+    }
+
+    /// Serialise the ledger for the scaled simulation's checkpoint
+    /// support ([`crate::sim::scaled::ScaledSim::snapshot`]). A stored
+    /// fatal error survives only as its display string (restored as
+    /// [`GppError::Net`]); the threaded host never snapshots, and the
+    /// sim scenario never sets `fatal`, so nothing observable changes.
+    pub fn save(&self, out: &mut Vec<u8>) {
+        (self.queue.len() as u64).encode(out);
+        for (id, item) in &self.queue {
+            (*id as u64).encode(out);
+            item.as_ref().encode(out);
+        }
+        (self.results.len() as u64).encode(out);
+        for r in &self.results {
+            r.encode(out);
+        }
+        (self.done as u64).encode(out);
+        (self.total as u64).encode(out);
+        (self.workers_lost as u64).encode(out);
+        (self.items_requeued as u64).encode(out);
+        self.worker_stats.encode(out);
+        self.fatal.as_ref().map(|e| e.to_string()).encode(out);
+    }
+
+    /// Inverse of [`HostLedger::save`].
+    pub fn restore(input: &mut &[u8]) -> Result<Self> {
+        let qn = u64::decode(input)? as usize;
+        let mut queue = VecDeque::with_capacity(qn);
+        for _ in 0..qn {
+            let id = u64::decode(input)? as usize;
+            queue.push_back((id, Arc::new(Vec::<u8>::decode(input)?)));
+        }
+        let rn = u64::decode(input)? as usize;
+        let mut results = Vec::with_capacity(rn);
+        for _ in 0..rn {
+            results.push(Option::<Vec<u8>>::decode(input)?);
+        }
+        Ok(Self {
+            queue,
+            results,
+            done: u64::decode(input)? as usize,
+            total: u64::decode(input)? as usize,
+            workers_lost: u64::decode(input)? as usize,
+            items_requeued: u64::decode(input)? as usize,
+            worker_stats: Vec::<String>::decode(input)?,
+            fatal: Option::<String>::decode(input)?.map(GppError::Net),
+        })
+    }
+
+    /// Final accounting: the [`HostReport`], or the run's error (a fatal
+    /// job failure, or every worker lost with items incomplete). Moves
+    /// the result buffers out instead of cloning — they can be hundreds
+    /// of MB at full size.
+    pub fn take_report(&mut self, workers_joined: usize) -> Result<HostReport> {
+        if let Some(e) = &self.fatal {
+            return Err(e.clone());
+        }
+        if self.done != self.total {
+            return Err(GppError::Net(format!(
+                "cluster lost all workers with {} of {} items incomplete",
+                self.total - self.done,
+                self.total
+            )));
+        }
+        let results = std::mem::take(&mut self.results)
+            .into_iter()
+            .map(|r| r.expect("done==total"))
+            .collect();
+        Ok(HostReport {
+            results,
+            workers_joined,
+            workers_lost: self.workers_lost,
+            items_requeued: self.items_requeued,
+            worker_stats: std::mem::take(&mut self.worker_stats),
+        })
+    }
+}
+
+type HostSync = (Mutex<HostLedger>, Condvar);
 
 /// Serve `items` to `nodes` workers running `job`, work-stealing style:
 /// any idle worker takes the next item; a dead worker's in-flight item
@@ -181,24 +348,7 @@ pub fn serve_items(
 ) -> Result<HostReport> {
     let listener = TcpListener::bind(addr)
         .map_err(|e| GppError::Net(format!("host bind {addr}: {e}")))?;
-    let total = items.len();
-    let sync: Arc<HostSync> = Arc::new((
-        Mutex::new(Shared {
-            queue: items
-                .into_iter()
-                .enumerate()
-                .map(|(i, b)| (i, Arc::new(b)))
-                .collect(),
-            results: vec![None; total],
-            done: 0,
-            total,
-            workers_lost: 0,
-            items_requeued: 0,
-            worker_stats: Vec::new(),
-            fatal: None,
-        }),
-        Condvar::new(),
-    ));
+    let sync: Arc<HostSync> = Arc::new((Mutex::new(HostLedger::new(items)), Condvar::new()));
 
     // Join phase. Without a timeout, block until the declared fleet has
     // joined (the paper's §7 contract: the host waits for its
@@ -236,7 +386,7 @@ pub fn serve_items(
             while handles.len() < nodes {
                 {
                     let g = sync.0.lock().unwrap();
-                    if g.done == g.total || g.fatal.is_some() {
+                    if g.is_done() || g.fatal().is_some() {
                         break; // finished (or aborted) with the workers we have
                     }
                 }
@@ -278,34 +428,13 @@ pub fn serve_items(
         }
     }
 
-    let mut g = sync.0.lock().unwrap();
-    if let Some(e) = &g.fatal {
-        return Err(e.clone());
-    }
-    if g.done != g.total {
-        return Err(GppError::Net(format!(
-            "cluster lost all workers with {} of {} items incomplete",
-            g.total - g.done,
-            g.total
-        )));
-    }
+    // Every connection thread has been joined: final accounting via the
+    // shared ledger (a socket-level first_err only matters if the run
+    // itself did not complete — same precedence as before).
+    let report = sync.0.lock().unwrap().take_report(workers_joined)?;
     if let Some(e) = first_err {
         return Err(e);
     }
-    // Every connection thread has been joined; move the buffers out
-    // instead of cloning (results can be hundreds of MB at full size).
-    let results = std::mem::take(&mut g.results)
-        .into_iter()
-        .map(|r| r.expect("done==total"))
-        .collect();
-    let report = HostReport {
-        results,
-        workers_joined,
-        workers_lost: g.workers_lost,
-        items_requeued: g.items_requeued,
-        worker_stats: std::mem::take(&mut g.worker_stats),
-    };
-    drop(g);
     if metrics::enabled() {
         if let Some(merged) = report.merged_metrics() {
             eprintln!("[gpp] cluster worker metrics (merged):");
@@ -327,15 +456,12 @@ fn serve_conn(mut stream: TcpStream, job: &str, cfg: &[u8], sync: &Arc<HostSync>
             // Worker lost: put its item back for the survivors.
             let (mtx, cv) = &**sync;
             let mut g = mtx.lock().unwrap();
-            g.workers_lost += 1;
             m::CLUSTER_WORKERS_LOST.inc();
-            if let Some((id, item)) = in_flight.take() {
+            if in_flight.is_some() {
                 m::CLUSTER_ITEMS_IN_FLIGHT.add(-1);
-                if g.results[id].is_none() {
-                    g.queue.push_back((id, item));
-                    g.items_requeued += 1;
-                    m::CLUSTER_ITEMS_REQUEUED.inc();
-                }
+            }
+            if g.worker_lost(in_flight.take()) {
+                m::CLUSTER_ITEMS_REQUEUED.inc();
             }
             cv.notify_all();
             Ok(())
@@ -386,10 +512,7 @@ fn conn_loop(
                 {
                     let (mtx, cv) = &**sync;
                     let mut g = mtx.lock().unwrap();
-                    if g.results[id].is_none() {
-                        g.results[id] = Some(input.to_vec());
-                        g.done += 1;
-                    }
+                    g.record_result(id, input.to_vec());
                     *in_flight = None;
                     m::CLUSTER_ITEMS_DONE.inc();
                     m::CLUSTER_ITEMS_IN_FLIGHT.add(-1);
@@ -410,7 +533,7 @@ fn conn_loop(
                 };
                 let (m, cv) = &**sync;
                 let mut g = m.lock().unwrap();
-                g.fatal = Some(err.clone());
+                g.set_fatal(err.clone());
                 cv.notify_all();
                 drop(g);
                 let _ = write_ctl(stream, &[H_DONE]);
@@ -435,7 +558,7 @@ fn collect_worker_stats(stream: &mut TcpStream, sync: &Arc<HostSync>) {
         if let Some((&W_STATS, rest)) = frame.split_first() {
             if let Ok(json) = std::str::from_utf8(rest) {
                 let (mtx, _) = &**sync;
-                mtx.lock().unwrap().worker_stats.push(json.to_string());
+                mtx.lock().unwrap().push_stats(json.to_string());
             }
         }
     }
@@ -454,22 +577,18 @@ fn dispatch(
     let (m, cv) = &**sync;
     let mut g = m.lock().unwrap();
     loop {
-        if let Some(e) = &g.fatal {
+        if let Some(e) = g.fatal() {
             let err = e.clone();
             drop(g);
             let _ = write_ctl(stream, &[H_DONE]);
             return Err(err);
         }
-        if g.done == g.total {
+        if g.is_done() {
             drop(g);
             write_ctl(stream, &[H_DONE])?;
             return Ok(true);
         }
-        // Skip items that were requeued and then completed elsewhere.
-        while let Some((id, item)) = g.queue.pop_front() {
-            if g.results[id].is_some() {
-                continue;
-            }
+        if let Some((id, item)) = g.next_item() {
             *in_flight = Some((id, item.clone()));
             m::CLUSTER_ITEMS_DISPATCHED.inc();
             m::CLUSTER_ITEMS_IN_FLIGHT.add(1);

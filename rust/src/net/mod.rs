@@ -37,7 +37,7 @@ pub mod cluster;
 pub mod jobs;
 pub mod loader;
 
-pub use cluster::{run_host, run_worker, ClusterConfig, HostReport};
+pub use cluster::{run_host, run_worker, ClusterConfig, HostLedger, HostReport};
 pub use jobs::register_builtin_jobs;
 pub use loader::NodePlacement;
 pub use mux::MuxHub;

@@ -20,9 +20,13 @@ use std::time::{SystemTime, UNIX_EPOCH};
 static LAST_WALL_US: AtomicU64 = AtomicU64::new(0);
 
 /// The one observability clock: virtual ticks when the calling thread is
-/// attached to a sim kernel, else monotone wall-clock microseconds.
+/// attached to a sim kernel or stepping a scaled-sim round (coordinator
+/// and carrier threads alike), else monotone wall-clock microseconds.
 pub fn now_us() -> u64 {
     if let Some(t) = crate::csp::sim::sim_now() {
+        return t;
+    }
+    if let Some(t) = crate::sim::scaled::scaled_now() {
         return t;
     }
     let raw = SystemTime::now()

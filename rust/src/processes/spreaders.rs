@@ -234,6 +234,26 @@ impl OneParCastList {
     }
 
     fn cast_parallel(&self, msg: Message) -> Result<()> {
+        // Under the deterministic sim, the per-output writers become
+        // registered helper processes so every write stays a schedule
+        // point and the network remains simulable.
+        if crate::csp::sim::attached().is_some() {
+            let parts: Vec<Box<dyn FnOnce() -> Result<()> + Send + 'static>> = self
+                .outputs
+                .iter()
+                .map(|out| {
+                    let out = out.clone();
+                    let m = msg.deep_clone();
+                    Box::new(move || out.write(m)) as Box<dyn FnOnce() -> Result<()> + Send>
+                })
+                .collect();
+            let results = crate::csp::sim::sim_helper_join("OneParCastList", parts)
+                .expect("attached() checked above");
+            for r in results {
+                r?;
+            }
+            return Ok(());
+        }
         // Scoped threads: one write per output, all concurrent.
         let results: Vec<Result<()>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self

@@ -25,12 +25,29 @@
 //! absolute times are grounded in measurements and speedup/efficiency
 //! tables (Tables 1–9) reproduce the paper's shape.
 
+//! The calibrated-testbed DES above lives on in [`des`]/[`models`]; its
+//! event queue and network-delay machinery have been lifted into
+//! reusable pieces shared with the *unified* simulation executor:
+//! [`events`] (the deterministic future-event queue), [`net_model`]
+//! (pluggable latency/jitter/loss models, also consumed by the lockstep
+//! sim in [`crate::csp::sim`]), [`scaled`] (the carrier-thread engine
+//! multiplexing millions of logical processes), and [`scenario`] (the
+//! real cluster control protocol run at scale under those models).
+
 pub mod des;
+pub mod events;
 pub mod machine;
 pub mod models;
 pub mod calibrate;
+pub mod net_model;
+pub mod scaled;
+pub mod scenario;
 
 pub use calibrate::CostDb;
 pub use des::{Des, SimAction, SimItem};
+pub use events::EventQueue;
 pub use machine::MachineConfig;
 pub use models::{sim_cluster, sim_engine, sim_farm, sim_gop, sim_pog, sim_sequential};
+pub use net_model::NetModel;
+pub use scaled::{ChanSpec, Effect, LogicalProc, Msg, Resume, ScaledSim, ScaledSimConfig};
+pub use scenario::{ClusterScenario, ScenarioReport};

@@ -1,0 +1,160 @@
+//! Pluggable network models for the unified simulation.
+//!
+//! Lifted out of the seed's DES (which hard-wired a single
+//! per-rendezvous `comm_cost`) into a shared description both sim modes
+//! consume: the lockstep verification sim threads an [`NetModel`] onto
+//! sim-backed net edges ([`crate::csp::sim`]), and the scaled engine
+//! ([`super::scaled`]) applies it to every modelled channel. A model is
+//! three numbers on the virtual clock (ticks are microseconds by the
+//! [`crate::obs::now_us`] convention):
+//!
+//! * `latency` — fixed one-way delivery delay;
+//! * `jitter` — additional uniform delay in `[0, jitter]`, sampled per
+//!   message from a seeded [`Rng`], so replays of one schedule see the
+//!   same delays;
+//! * `loss_permille` — per-message loss probability in 1/1000 units.
+//!   The lockstep sim drops the message outright (a lossy datagram
+//!   view); the scaled engine's channels treat loss as *connection
+//!   death* (the TCP view: a lost segment surfaces as a broken
+//!   connection, not a silent gap) and deliver a dead-letter
+//!   notification instead — see [`super::scaled::ChanSpec`].
+//!
+//! Scenario names map to models via [`NetModel::parse`], which is what
+//! `gpp sim --net-model …` and the DSL accept: `ideal`, `lan`, `wan`,
+//! `lossy`, or `custom:<latency>:<jitter>:<loss_permille>`.
+
+use crate::csp::error::{GppError, Result};
+use crate::util::rng::Rng;
+
+/// Latency / jitter / loss description of one class of network edge.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetModel {
+    pub name: String,
+    /// Fixed one-way delay, virtual ticks.
+    pub latency: u64,
+    /// Extra uniform delay in `[0, jitter]` ticks, per message.
+    pub jitter: u64,
+    /// Per-message loss probability, in 1/1000 units (0 = lossless).
+    pub loss_permille: u32,
+}
+
+impl NetModel {
+    /// No delay, no loss — byte-identical to an unmodelled edge.
+    pub fn ideal() -> Self {
+        Self { name: "ideal".into(), latency: 0, jitter: 0, loss_permille: 0 }
+    }
+
+    /// Same-switch LAN: ~100µs, small jitter, lossless.
+    pub fn lan() -> Self {
+        Self { name: "lan".into(), latency: 100, jitter: 20, loss_permille: 0 }
+    }
+
+    /// Wide-area link: ~40ms, visible jitter, lossless.
+    pub fn wan() -> Self {
+        Self { name: "wan".into(), latency: 40_000, jitter: 8_000, loss_permille: 0 }
+    }
+
+    /// LAN latency with 2% message loss — the churn/fault scenario.
+    pub fn lossy() -> Self {
+        Self { name: "lossy".into(), latency: 200, jitter: 50, loss_permille: 20 }
+    }
+
+    /// Parse a scenario spelling: a preset name or
+    /// `custom:<latency>:<jitter>:<loss_permille>`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "ideal" => return Ok(Self::ideal()),
+            "lan" => return Ok(Self::lan()),
+            "wan" => return Ok(Self::wan()),
+            "lossy" => return Ok(Self::lossy()),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("custom:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            if parts.len() == 3 {
+                let latency = parts[0].parse::<u64>();
+                let jitter = parts[1].parse::<u64>();
+                let loss = parts[2].parse::<u32>();
+                if let (Ok(latency), Ok(jitter), Ok(loss)) = (latency, jitter, loss) {
+                    return Ok(Self {
+                        name: s.to_string(),
+                        latency,
+                        jitter,
+                        loss_permille: loss.min(1000),
+                    });
+                }
+            }
+        }
+        Err(GppError::Sim(format!(
+            "unknown network model '{s}' (ideal|lan|wan|lossy|custom:<lat>:<jit>:<permille>)"
+        )))
+    }
+
+    /// True when the model changes nothing (fast-path guard).
+    pub fn is_ideal(&self) -> bool {
+        self.latency == 0 && self.jitter == 0 && self.loss_permille == 0
+    }
+
+    /// One-way delay for the next message.
+    pub fn sample_delay(&self, rng: &mut Rng) -> u64 {
+        if self.jitter == 0 {
+            self.latency
+        } else {
+            self.latency + rng.next_bounded(self.jitter + 1)
+        }
+    }
+
+    /// Whether the next message is lost.
+    pub fn sample_loss(&self, rng: &mut Rng) -> bool {
+        self.loss_permille > 0 && rng.next_bounded(1000) < self.loss_permille as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_and_shape() {
+        assert!(NetModel::parse("ideal").unwrap().is_ideal());
+        assert_eq!(NetModel::parse("lan").unwrap().latency, 100);
+        assert_eq!(NetModel::parse("wan").unwrap().latency, 40_000);
+        assert!(NetModel::parse("lossy").unwrap().loss_permille > 0);
+        assert!(NetModel::parse("marsnet").is_err());
+    }
+
+    #[test]
+    fn custom_spelling_roundtrips() {
+        let m = NetModel::parse("custom:500:100:30").unwrap();
+        assert_eq!((m.latency, m.jitter, m.loss_permille), (500, 100, 30));
+        assert!(NetModel::parse("custom:1:2").is_err());
+        assert!(NetModel::parse("custom:a:b:c").is_err());
+        // Loss clamps to a probability.
+        assert_eq!(NetModel::parse("custom:0:0:5000").unwrap().loss_permille, 1000);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let m = NetModel::lossy();
+        let draw = |seed: u64| -> (Vec<u64>, Vec<bool>) {
+            let mut rng = Rng::new(seed);
+            let d = (0..32).map(|_| m.sample_delay(&mut rng)).collect();
+            let l = (0..32).map(|_| m.sample_loss(&mut rng)).collect();
+            (d, l)
+        };
+        assert_eq!(draw(9), draw(9));
+        for d in draw(9).0 {
+            assert!(d >= m.latency && d <= m.latency + m.jitter);
+        }
+    }
+
+    #[test]
+    fn ideal_never_delays_or_drops() {
+        let m = NetModel::ideal();
+        let mut rng = Rng::new(1);
+        for _ in 0..16 {
+            assert_eq!(m.sample_delay(&mut rng), 0);
+            assert!(!m.sample_loss(&mut rng));
+        }
+    }
+}

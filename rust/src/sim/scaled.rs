@@ -1,0 +1,1105 @@
+//! Scaled execution mode of the unified simulation: a small fixed pool
+//! of **carrier threads** multiplexes millions of *logical processes*.
+//!
+//! The lockstep sim ([`crate::csp::sim`]) runs real `CSProcess` objects,
+//! one OS thread each, exactly one at a time — perfect for verification,
+//! hopeless at a million processes. This engine is the other mode of the
+//! same machinery: a logical process is a resumable state machine
+//! ([`LogicalProc`]) whose channel operations are explicit **yield
+//! points** ([`Effect`]); a blocked process *releases its carrier
+//! thread* instead of parking it, so process count is bounded by memory,
+//! not by OS threads.
+//!
+//! Determinism is by construction, independent of carrier count and
+//! thread timing:
+//!
+//! * each scheduling round collects the runnable set in pid order,
+//!   steps it on the carrier pool (or inline when the round is small),
+//!   then applies the returned effects **sequentially in round order**
+//!   on the coordinating thread;
+//! * all randomness lives either in per-process state (stepped on
+//!   carriers, but owned by exactly one process) or in per-channel
+//!   RNGs sampled only during the sequential apply phase;
+//! * message delivery and timer wakes flow through the deterministic
+//!   [`EventQueue`] (FIFO at equal instants); the virtual clock jumps
+//!   to the next event when nothing is runnable — the same clock rule
+//!   as the lockstep kernel, and [`crate::obs::now_us`] reads this
+//!   clock on engine threads via [`scaled_now`].
+//!
+//! Channels are unbounded FIFOs with optional [`NetModel`]s: a send
+//! samples loss and latency per message (monotone per-channel delivery
+//! times — the TCP in-order view). A sampled **loss** either drops the
+//! message silently or, when the channel declares a dead-letter target
+//! ([`ChanSpec::dead_letter`]), delivers a notification there instead:
+//! the TCP view of loss, where a lost segment surfaces as a *dead
+//! connection* the peer gets to observe — which is exactly the
+//! `serve_conn` read-error path the real cluster host recovers through.
+//! [`Effect::SendReliable`] is exempt from loss sampling (teardown
+//! notifications: the OS eventually notices a dead connection even on a
+//! lossy link).
+//!
+//! [`ScaledSim::snapshot`]/[`ScaledSim::restore_snapshot`] serialise
+//! the entire simulation state — virtual clock, every process's saved
+//! state, channel queues, per-channel RNG states, and the drained event
+//! queue with its sequence numbers — through [`crate::util::codec::Wire`],
+//! so a run can be checkpointed and resumed bit-exactly.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::csp::error::{GppError, Result};
+use crate::sim::events::EventQueue;
+use crate::sim::net_model::NetModel;
+use crate::util::codec::Wire;
+use crate::util::rng::Rng;
+
+/// Snapshot format version.
+const SNAP_VERSION: u32 = 1;
+
+/// A round must be at least this many processes per carrier before the
+/// pool is engaged; smaller rounds step inline (chunk hand-off costs
+/// more than it saves below this).
+const POOL_THRESHOLD_PER_CARRIER: usize = 64;
+
+thread_local! {
+    /// Virtual time of the scaled simulation this thread is currently
+    /// stepping for, consulted by [`crate::obs::now_us`].
+    static SCALED_NOW: std::cell::Cell<Option<u64>> = const { std::cell::Cell::new(None) };
+}
+
+/// The scaled-engine virtual clock of the calling thread, if it is
+/// currently inside [`ScaledSim::run`] (coordinator or carrier).
+pub fn scaled_now() -> Option<u64> {
+    SCALED_NOW.with(|c| c.get())
+}
+
+/// A compact message: protocol tag plus two operands. Logical processes
+/// exchange event *descriptors*, not payload buffers — at a million
+/// processes the payload lives with the owner (e.g. the host ledger),
+/// not on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Msg {
+    pub tag: u8,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Msg {
+    pub fn new(tag: u8, a: u64, b: u64) -> Self {
+        Self { tag, a, b }
+    }
+}
+
+impl Wire for Msg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.tag.encode(out);
+        self.a.encode(out);
+        self.b.encode(out);
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(Self {
+            tag: u8::decode(input)?,
+            a: u64::decode(input)?,
+            b: u64::decode(input)?,
+        })
+    }
+}
+
+/// What a logical process asks the engine to do at a yield point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Effect {
+    /// Stay runnable; resume next round with [`Resume::Woke`].
+    Yield,
+    /// Enqueue `msg` on channel `ch` (sampling its network model) and
+    /// stay runnable. Sends never block: flow control is the protocol's
+    /// job (the cluster scenario's request-driven dispatch), as on the
+    /// real mux where the credit window throttles above the socket.
+    Send { ch: usize, msg: Msg },
+    /// Like [`Effect::Send`] but exempt from loss sampling — connection
+    /// teardown notifications that the transport eventually delivers.
+    SendReliable { ch: usize, msg: Msg },
+    /// Block until a message arrives on `ch`; resume with
+    /// [`Resume::Delivered`]. The carrier thread is released.
+    Recv { ch: usize },
+    /// Block for `ticks` of virtual time; resume with [`Resume::Woke`].
+    Sleep { ticks: u64 },
+    /// The process is finished; it is never stepped again.
+    Halt,
+}
+
+/// Why a logical process is being stepped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resume {
+    /// First step of the process.
+    Start,
+    /// A [`Effect::Recv`] completed with this message.
+    Delivered(Msg),
+    /// A [`Effect::Sleep`] elapsed, or the previous effect (send/yield)
+    /// completed.
+    Woke,
+}
+
+impl Wire for Resume {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Resume::Start => 0u8.encode(out),
+            Resume::Delivered(m) => {
+                1u8.encode(out);
+                m.encode(out);
+            }
+            Resume::Woke => 2u8.encode(out),
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        match u8::decode(input)? {
+            0 => Ok(Resume::Start),
+            1 => Ok(Resume::Delivered(Msg::decode(input)?)),
+            2 => Ok(Resume::Woke),
+            t => Err(GppError::Sim(format!("snapshot: bad resume tag {t}"))),
+        }
+    }
+}
+
+/// A resumable logical process: one `step` per scheduling turn, yielding
+/// an [`Effect`]. `save`/`restore` serialise the process's own state for
+/// [`ScaledSim::snapshot`].
+pub trait LogicalProc: Send {
+    fn step(&mut self, resume: Resume) -> Effect;
+    fn save(&self, out: &mut Vec<u8>);
+    fn restore(&mut self, input: &mut &[u8]) -> Result<()>;
+}
+
+/// Declaration of one engine channel.
+#[derive(Clone, Debug)]
+pub struct ChanSpec {
+    pub name: String,
+    /// Latency/jitter/loss applied to every (non-reliable) send; `None`
+    /// = ideal (immediate, lossless).
+    pub model: Option<NetModel>,
+    /// Where a sampled loss surfaces: `None` = silent drop;
+    /// `Some((ch, tag))` = a dead-letter `Msg { tag, a, b }` (operands
+    /// copied from the lost message) is delivered on channel `ch` at the
+    /// lost message's would-be delivery time.
+    pub dead_letter: Option<(usize, u8)>,
+}
+
+impl ChanSpec {
+    pub fn ideal(name: &str) -> Self {
+        Self { name: name.into(), model: None, dead_letter: None }
+    }
+
+    pub fn modeled(name: &str, model: NetModel) -> Self {
+        let model = if model.is_ideal() { None } else { Some(model) };
+        Self { name: name.into(), model, dead_letter: None }
+    }
+
+    pub fn with_dead_letter(mut self, ch: usize, tag: u8) -> Self {
+        self.dead_letter = Some((ch, tag));
+        self
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Status {
+    Runnable(Resume),
+    BlockedRecv(u32),
+    Sleeping,
+    Halted,
+}
+
+impl Wire for Status {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Status::Runnable(r) => {
+                0u8.encode(out);
+                r.encode(out);
+            }
+            Status::BlockedRecv(ch) => {
+                1u8.encode(out);
+                ch.encode(out);
+            }
+            Status::Sleeping => 2u8.encode(out),
+            Status::Halted => 3u8.encode(out),
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        match u8::decode(input)? {
+            0 => Ok(Status::Runnable(Resume::decode(input)?)),
+            1 => Ok(Status::BlockedRecv(u32::decode(input)?)),
+            2 => Ok(Status::Sleeping),
+            3 => Ok(Status::Halted),
+            t => Err(GppError::Sim(format!("snapshot: bad status tag {t}"))),
+        }
+    }
+}
+
+struct Chan {
+    spec: ChanSpec,
+    /// Delivered, not-yet-received messages.
+    queue: VecDeque<Msg>,
+    /// Processes blocked in [`Effect::Recv`], FIFO.
+    waiters: VecDeque<u32>,
+    /// Monotone delivery high-water mark (in-order per channel).
+    last_ready_at: u64,
+    /// Model RNG; only touched in the sequential apply phase.
+    rng: Rng,
+}
+
+/// Future events: deliveries and timer wakes.
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Deliver { ch: u32, msg: Msg },
+    Wake { pid: u32 },
+}
+
+impl Wire for Ev {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Ev::Deliver { ch, msg } => {
+                0u8.encode(out);
+                ch.encode(out);
+                msg.encode(out);
+            }
+            Ev::Wake { pid } => {
+                1u8.encode(out);
+                pid.encode(out);
+            }
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        match u8::decode(input)? {
+            0 => Ok(Ev::Deliver { ch: u32::decode(input)?, msg: Msg::decode(input)? }),
+            1 => Ok(Ev::Wake { pid: u32::decode(input)? }),
+            t => Err(GppError::Sim(format!("snapshot: bad event tag {t}"))),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ScaledSimConfig {
+    /// Carrier threads stepping large rounds. `0` or `1` = step every
+    /// round inline (still correct — the pool is a throughput device,
+    /// never a semantics device).
+    pub carriers: usize,
+    /// Seed for per-channel network-model RNGs.
+    pub seed: u64,
+    /// Abort after this many process steps (runaway/livelock guard).
+    pub max_steps: u64,
+}
+
+impl Default for ScaledSimConfig {
+    fn default() -> Self {
+        Self { carriers: 4, seed: 1, max_steps: u64::MAX }
+    }
+}
+
+/// Outcome of [`ScaledSim::run`].
+#[derive(Clone, Copy, Debug)]
+pub struct ScaledStats {
+    /// Total process steps executed (the "events" of events/sec).
+    pub steps: u64,
+    /// Scheduling rounds.
+    pub rounds: u64,
+    /// Final virtual time.
+    pub virtual_time: u64,
+}
+
+/// Did a bounded run finish or pause?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunState {
+    /// Every process halted.
+    Done,
+    /// The step budget ran out first (snapshot and resume later).
+    Paused,
+}
+
+// ---------------------------------------------------------- carrier pool
+
+/// One unit of carrier work: a contiguous slice of the round.
+struct Chunk {
+    id: usize,
+    now: u64,
+    tasks: Vec<(u32, Box<dyn LogicalProc>, Resume)>,
+}
+
+struct ChunkDone {
+    id: usize,
+    items: Vec<(u32, Box<dyn LogicalProc>, Effect)>,
+}
+
+/// A standing pool of carrier threads fed chunks over a shared queue.
+/// Created once per [`ScaledSim::run`]; dropping it hangs up the work
+/// channel, which terminates every carrier.
+struct CarrierPool {
+    inject: mpsc::Sender<Chunk>,
+    results: mpsc::Receiver<ChunkDone>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl CarrierPool {
+    fn new(carriers: usize) -> Self {
+        let (inject, work_rx) = mpsc::channel::<Chunk>();
+        let (done_tx, results) = mpsc::channel::<ChunkDone>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let mut handles = Vec::with_capacity(carriers);
+        for i in 0..carriers {
+            let work_rx = work_rx.clone();
+            let done_tx = done_tx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("gpp-carrier-{i}"))
+                .spawn(move || loop {
+                    let chunk = {
+                        let rx = work_rx.lock().unwrap();
+                        match rx.recv() {
+                            Ok(c) => c,
+                            Err(_) => return, // pool dropped
+                        }
+                    };
+                    SCALED_NOW.with(|c| c.set(Some(chunk.now)));
+                    let items = chunk
+                        .tasks
+                        .into_iter()
+                        .map(|(pid, mut p, resume)| {
+                            let eff = p.step(resume);
+                            (pid, p, eff)
+                        })
+                        .collect();
+                    SCALED_NOW.with(|c| c.set(None));
+                    if done_tx.send(ChunkDone { id: chunk.id, items }).is_err() {
+                        return;
+                    }
+                })
+                .expect("spawn carrier thread");
+            handles.push(h);
+        }
+        Self { inject, results, handles }
+    }
+}
+
+impl Drop for CarrierPool {
+    fn drop(&mut self) {
+        // Hang up the work queue, then join every carrier.
+        let (dead, _) = mpsc::channel::<Chunk>();
+        self.inject = dead;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// --------------------------------------------------------------- engine
+
+/// The scaled simulation: logical processes + channels + event queue on
+/// one virtual clock.
+pub struct ScaledSim {
+    cfg: ScaledSimConfig,
+    procs: Vec<Option<Box<dyn LogicalProc>>>,
+    status: Vec<Status>,
+    /// Every pid whose status is `Runnable`, exactly once — the next
+    /// round is `ready` sorted by pid, never a scan of all statuses
+    /// (at a million processes, per-round scans would dominate).
+    ready: Vec<u32>,
+    chans: Vec<Chan>,
+    events: EventQueue<Ev>,
+    time: u64,
+    steps: u64,
+    rounds: u64,
+    halted: usize,
+}
+
+impl ScaledSim {
+    pub fn new(cfg: ScaledSimConfig) -> Self {
+        Self {
+            cfg,
+            procs: Vec::new(),
+            status: Vec::new(),
+            ready: Vec::new(),
+            chans: Vec::new(),
+            events: EventQueue::new(),
+            time: 0,
+            steps: 0,
+            rounds: 0,
+            halted: 0,
+        }
+    }
+
+    /// Declare a channel; returns its id (the `ch` of [`Effect`]s).
+    pub fn add_chan(&mut self, spec: ChanSpec) -> usize {
+        let id = self.chans.len();
+        // Per-channel RNG: engine seed xor a stable hash of the name,
+        // same derivation as the lockstep sim's per-edge models.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in spec.name.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        let rng = Rng::new(self.cfg.seed ^ h);
+        self.chans.push(Chan {
+            spec,
+            queue: VecDeque::new(),
+            waiters: VecDeque::new(),
+            last_ready_at: 0,
+            rng,
+        });
+        id
+    }
+
+    /// Register a logical process; returns its pid. Every process starts
+    /// runnable with [`Resume::Start`].
+    pub fn add_proc(&mut self, p: Box<dyn LogicalProc>) -> usize {
+        let pid = self.procs.len();
+        self.procs.push(Some(p));
+        self.status.push(Status::Runnable(Resume::Start));
+        self.ready.push(pid as u32);
+        pid
+    }
+
+    pub fn now(&self) -> u64 {
+        self.time
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn proc_count(&self) -> usize {
+        self.procs.len()
+    }
+
+    /// Borrow a (halted) process back, e.g. to read final state out of a
+    /// scenario's host after the run.
+    pub fn proc(&self, pid: usize) -> Option<&dyn LogicalProc> {
+        self.procs.get(pid).and_then(|p| p.as_deref())
+    }
+
+    /// Run until every process halts. Deadlock (nothing runnable, no
+    /// future events, not everything halted) is a detected error, as in
+    /// the lockstep sim.
+    pub fn run(&mut self) -> Result<ScaledStats> {
+        match self.run_for(u64::MAX)? {
+            RunState::Done => Ok(ScaledStats {
+                steps: self.steps,
+                rounds: self.rounds,
+                virtual_time: self.time,
+            }),
+            RunState::Paused => unreachable!("u64::MAX budget cannot pause"),
+        }
+    }
+
+    /// Run until done or until `budget` further process steps have
+    /// executed — the checkpointing entry point: pause, snapshot,
+    /// restore elsewhere, continue.
+    pub fn run_for(&mut self, budget: u64) -> Result<RunState> {
+        let pool = if self.cfg.carriers > 1 {
+            Some(CarrierPool::new(self.cfg.carriers))
+        } else {
+            None
+        };
+        let deadline = self.steps.saturating_add(budget);
+        loop {
+            if self.halted == self.procs.len() {
+                return Ok(RunState::Done);
+            }
+            if self.steps >= deadline {
+                return Ok(RunState::Paused);
+            }
+            if self.steps >= self.cfg.max_steps {
+                return Err(GppError::Sim(format!(
+                    "scaled sim exceeded {} steps (possible livelock) at t={}",
+                    self.cfg.max_steps, self.time
+                )));
+            }
+            if self.ready.is_empty() {
+                match self.events.peek_time() {
+                    Some(t) => {
+                        // Nothing runnable: the virtual clock jumps to
+                        // the next event, exactly like the lockstep
+                        // kernel's sleeper rule.
+                        if t > self.time {
+                            self.time = t;
+                        }
+                        self.deliver_due();
+                        continue;
+                    }
+                    None => return Err(self.deadlock_error()),
+                }
+            }
+            // Freshly-woken pids land in `ready` for the NEXT round;
+            // this round is the current set, in pid order.
+            let mut round = std::mem::take(&mut self.ready);
+            round.sort_unstable();
+            self.rounds += 1;
+            self.step_round(&round, pool.as_ref());
+            self.steps += round.len() as u64;
+            // Deliveries scheduled "now" (ideal channels) land before
+            // the next round, so same-instant request/response chains
+            // drain without clock movement.
+            self.deliver_due();
+        }
+    }
+
+    /// Step every pid in `round`, applying effects sequentially in round
+    /// order.
+    fn step_round(&mut self, round: &[u32], pool: Option<&CarrierPool>) {
+        let use_pool = match pool {
+            Some(_) => round.len() >= self.cfg.carriers * POOL_THRESHOLD_PER_CARRIER,
+            None => false,
+        };
+        if !use_pool {
+            SCALED_NOW.with(|c| c.set(Some(self.time)));
+            for &pid in round {
+                let resume = match self.status[pid as usize] {
+                    Status::Runnable(r) => r,
+                    _ => unreachable!("round members are runnable"),
+                };
+                let mut p = self.procs[pid as usize].take().expect("runnable proc exists");
+                let eff = p.step(resume);
+                self.procs[pid as usize] = Some(p);
+                self.apply(pid, eff);
+            }
+            SCALED_NOW.with(|c| c.set(None));
+            return;
+        }
+        let pool = pool.expect("use_pool checked");
+        // Fan the round out in contiguous chunks; the chunk id is the
+        // reassembly key, so apply order equals round order no matter
+        // which carrier finishes first.
+        let chunk_size = round.len().div_ceil(self.cfg.carriers * 4).max(1);
+        let mut sent = 0usize;
+        for (id, part) in round.chunks(chunk_size).enumerate() {
+            let tasks: Vec<(u32, Box<dyn LogicalProc>, Resume)> = part
+                .iter()
+                .map(|&pid| {
+                    let resume = match self.status[pid as usize] {
+                        Status::Runnable(r) => r,
+                        _ => unreachable!("round members are runnable"),
+                    };
+                    let p = self.procs[pid as usize].take().expect("runnable proc exists");
+                    (pid, p, resume)
+                })
+                .collect();
+            pool.inject
+                .send(Chunk { id, now: self.time, tasks })
+                .expect("carrier pool alive");
+            sent += 1;
+        }
+        let mut done: Vec<Option<ChunkDone>> = (0..sent).map(|_| None).collect();
+        for _ in 0..sent {
+            let d = pool.results.recv().expect("carrier pool alive");
+            done[d.id] = Some(d);
+        }
+        for d in done.into_iter().map(|d| d.expect("every chunk returns")) {
+            for (pid, p, eff) in d.items {
+                self.procs[pid as usize] = Some(p);
+                self.apply(pid, eff);
+            }
+        }
+    }
+
+    /// Apply one effect — the only place engine state changes. Runs on
+    /// the coordinating thread, in round order.
+    fn apply(&mut self, pid: u32, eff: Effect) {
+        match eff {
+            Effect::Yield => {
+                self.status[pid as usize] = Status::Runnable(Resume::Woke);
+                self.ready.push(pid);
+            }
+            Effect::Send { ch, msg } => {
+                self.status[pid as usize] = Status::Runnable(Resume::Woke);
+                self.ready.push(pid);
+                self.send(ch, msg, false);
+            }
+            Effect::SendReliable { ch, msg } => {
+                self.status[pid as usize] = Status::Runnable(Resume::Woke);
+                self.ready.push(pid);
+                self.send(ch, msg, true);
+            }
+            Effect::Recv { ch } => {
+                let c = &mut self.chans[ch];
+                if let Some(msg) = c.queue.pop_front() {
+                    self.status[pid as usize] = Status::Runnable(Resume::Delivered(msg));
+                    self.ready.push(pid);
+                } else {
+                    self.status[pid as usize] = Status::BlockedRecv(ch as u32);
+                    c.waiters.push_back(pid);
+                }
+            }
+            Effect::Sleep { ticks } => {
+                self.status[pid as usize] = Status::Sleeping;
+                self.events.push(self.time.saturating_add(ticks.max(1)), Ev::Wake { pid });
+            }
+            Effect::Halt => {
+                self.status[pid as usize] = Status::Halted;
+                self.halted += 1;
+            }
+        }
+    }
+
+    fn send(&mut self, ch: usize, msg: Msg, reliable: bool) {
+        let time = self.time;
+        let c = &mut self.chans[ch];
+        // Split borrow: the model is read-only while the channel RNG
+        // advances — no per-message clone of the model.
+        let (lost, at) = match &c.spec.model {
+            None => {
+                // Ideal channel: deliver at the current instant (through
+                // the event queue, so same-round sends stay FIFO with
+                // each other and with earlier in-flight traffic).
+                (false, time.max(c.last_ready_at))
+            }
+            Some(m) => {
+                let lost = !reliable && m.sample_loss(&mut c.rng);
+                let delay = m.sample_delay(&mut c.rng).max(1);
+                (lost, time.saturating_add(delay).max(c.last_ready_at))
+            }
+        };
+        c.last_ready_at = at;
+        let dead_letter = c.spec.dead_letter;
+        if !lost {
+            self.events.push(at, Ev::Deliver { ch: ch as u32, msg });
+            return;
+        }
+        match dead_letter {
+            None => {} // silent drop
+            Some((dch, tag)) => {
+                // The loss surfaces as a dead-connection notification on
+                // the dead-letter channel, honouring ITS delivery order.
+                let d = &mut self.chans[dch];
+                let at = at.max(d.last_ready_at);
+                d.last_ready_at = at;
+                self.events
+                    .push(at, Ev::Deliver { ch: dch as u32, msg: Msg::new(tag, msg.a, msg.b) });
+            }
+        }
+    }
+
+    /// Deliver every event due at or before the current virtual time.
+    fn deliver_due(&mut self) {
+        while let Some((_, ev)) = self.events.pop_due(self.time) {
+            match ev {
+                Ev::Deliver { ch, msg } => {
+                    let c = &mut self.chans[ch as usize];
+                    match c.waiters.pop_front() {
+                        Some(pid) => {
+                            debug_assert_eq!(self.status[pid as usize], Status::BlockedRecv(ch));
+                            self.status[pid as usize] = Status::Runnable(Resume::Delivered(msg));
+                            self.ready.push(pid);
+                        }
+                        None => c.queue.push_back(msg),
+                    }
+                }
+                Ev::Wake { pid } => {
+                    if self.status[pid as usize] == Status::Sleeping {
+                        self.status[pid as usize] = Status::Runnable(Resume::Woke);
+                        self.ready.push(pid);
+                    }
+                }
+            }
+        }
+    }
+
+    fn deadlock_error(&self) -> GppError {
+        let blocked = self
+            .status
+            .iter()
+            .filter(|s| matches!(s, Status::BlockedRecv(_)))
+            .count();
+        let sleeping = self.status.iter().filter(|s| **s == Status::Sleeping).count();
+        GppError::Sim(format!(
+            "scaled sim deadlock at t={}: {} of {} processes halted, {} blocked on recv, \
+             {} sleeping with no future event",
+            self.time,
+            self.halted,
+            self.procs.len(),
+            blocked,
+            sleeping
+        ))
+    }
+
+    // ---------------------------------------------------------- snapshot
+
+    /// Serialise the complete simulation state. The next
+    /// [`ScaledSim::run_for`] after a [`ScaledSim::restore_snapshot`] of
+    /// these bytes continues bit-exactly.
+    pub fn snapshot(&mut self) -> Vec<u8> {
+        let mut out = Vec::new();
+        SNAP_VERSION.encode(&mut out);
+        self.time.encode(&mut out);
+        self.steps.encode(&mut out);
+        self.rounds.encode(&mut out);
+        (self.halted as u64).encode(&mut out);
+        (self.procs.len() as u64).encode(&mut out);
+        for pid in 0..self.procs.len() {
+            self.status[pid].encode(&mut out);
+            let mut st = Vec::new();
+            self.procs[pid].as_ref().expect("no step in progress").save(&mut st);
+            st.encode(&mut out);
+        }
+        (self.chans.len() as u64).encode(&mut out);
+        for c in &self.chans {
+            (c.queue.len() as u64).encode(&mut out);
+            for m in &c.queue {
+                m.encode(&mut out);
+            }
+            (c.waiters.len() as u64).encode(&mut out);
+            for w in &c.waiters {
+                w.encode(&mut out);
+            }
+            c.last_ready_at.encode(&mut out);
+            let s = c.rng.state();
+            for word in s {
+                word.encode(&mut out);
+            }
+        }
+        // Drain the event queue (then put it back) so sequence numbers
+        // survive: same-instant ordering is part of the state.
+        let drained = self.events.drain_sorted();
+        (drained.len() as u64).encode(&mut out);
+        for (t, seq, ev) in &drained {
+            t.encode(&mut out);
+            seq.encode(&mut out);
+            ev.encode(&mut out);
+        }
+        for (t, seq, ev) in drained {
+            self.events.push_at(t, seq, ev);
+        }
+        out
+    }
+
+    /// Restore a [`ScaledSim::snapshot`] into this simulation. The same
+    /// processes and channels must already be registered (in the same
+    /// order) — the snapshot carries state, not code.
+    pub fn restore_snapshot(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut input = bytes;
+        let v = u32::decode(&mut input)?;
+        if v != SNAP_VERSION {
+            return Err(GppError::Sim(format!("snapshot version {v} != {SNAP_VERSION}")));
+        }
+        self.time = u64::decode(&mut input)?;
+        self.steps = u64::decode(&mut input)?;
+        self.rounds = u64::decode(&mut input)?;
+        self.halted = u64::decode(&mut input)? as usize;
+        let np = u64::decode(&mut input)? as usize;
+        if np != self.procs.len() {
+            return Err(GppError::Sim(format!(
+                "snapshot has {np} processes, simulation has {}",
+                self.procs.len()
+            )));
+        }
+        for pid in 0..np {
+            self.status[pid] = Status::decode(&mut input)?;
+            let st: Vec<u8> = Vec::decode(&mut input)?;
+            let mut sin: &[u8] = &st;
+            self.procs[pid]
+                .as_mut()
+                .expect("no step in progress")
+                .restore(&mut sin)?;
+        }
+        let nc = u64::decode(&mut input)? as usize;
+        if nc != self.chans.len() {
+            return Err(GppError::Sim(format!(
+                "snapshot has {nc} channels, simulation has {}",
+                self.chans.len()
+            )));
+        }
+        for c in self.chans.iter_mut() {
+            let qn = u64::decode(&mut input)? as usize;
+            c.queue.clear();
+            for _ in 0..qn {
+                c.queue.push_back(Msg::decode(&mut input)?);
+            }
+            let wn = u64::decode(&mut input)? as usize;
+            c.waiters.clear();
+            for _ in 0..wn {
+                c.waiters.push_back(u32::decode(&mut input)?);
+            }
+            c.last_ready_at = u64::decode(&mut input)?;
+            let mut s = [0u64; 4];
+            for word in &mut s {
+                *word = u64::decode(&mut input)?;
+            }
+            c.rng = Rng::from_state(s);
+        }
+        self.events = EventQueue::new();
+        let ne = u64::decode(&mut input)? as usize;
+        for _ in 0..ne {
+            let t = u64::decode(&mut input)?;
+            let seq = u64::decode(&mut input)?;
+            self.events.push_at(t, seq, Ev::decode(&mut input)?);
+        }
+        // The ready queue is derived state: every runnable pid, in pid
+        // order (sorted again at round start anyway).
+        self.ready.clear();
+        for (pid, s) in self.status.iter().enumerate() {
+            if matches!(s, Status::Runnable(_)) {
+                self.ready.push(pid as u32);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ping-pong client: send `n` requests, await each reply.
+    struct Pinger {
+        out: usize,
+        inp: usize,
+        left: u64,
+        state: u8, // 0 = need send, 1 = sent (recv next), 2 = done
+    }
+
+    impl LogicalProc for Pinger {
+        fn step(&mut self, resume: Resume) -> Effect {
+            match (self.state, resume) {
+                (0, _) => {
+                    if self.left == 0 {
+                        self.state = 2;
+                        return Effect::Send { ch: self.out, msg: Msg::new(9, 0, 0) };
+                    }
+                    self.state = 1;
+                    Effect::Send { ch: self.out, msg: Msg::new(1, self.left, 0) }
+                }
+                (1, Resume::Woke) => Effect::Recv { ch: self.inp },
+                (1, Resume::Delivered(m)) => {
+                    assert_eq!(m.tag, 2);
+                    self.left -= 1;
+                    self.state = 0;
+                    Effect::Yield
+                }
+                (2, _) => Effect::Halt,
+                other => panic!("pinger: unexpected {other:?}"),
+            }
+        }
+
+        fn save(&self, out: &mut Vec<u8>) {
+            self.left.encode(out);
+            self.state.encode(out);
+        }
+
+        fn restore(&mut self, input: &mut &[u8]) -> Result<()> {
+            self.left = u64::decode(input)?;
+            self.state = u8::decode(input)?;
+            Ok(())
+        }
+    }
+
+    /// Echo server: reply tag 2 to every tag 1; halt on tag 9.
+    struct Echoer {
+        inp: usize,
+        out: usize,
+        pending: Option<Msg>,
+    }
+
+    impl LogicalProc for Echoer {
+        fn step(&mut self, resume: Resume) -> Effect {
+            if let Some(m) = self.pending.take() {
+                let _ = resume;
+                return Effect::Send { ch: self.out, msg: Msg::new(2, m.a, 0) };
+            }
+            match resume {
+                Resume::Delivered(m) if m.tag == 9 => Effect::Halt,
+                Resume::Delivered(m) => {
+                    self.pending = Some(m);
+                    // Reply next step (exercises Yield-free send path).
+                    Effect::Send { ch: self.out, msg: Msg::new(2, m.a, 0) }
+                }
+                _ => Effect::Recv { ch: self.inp },
+            }
+        }
+
+        fn save(&self, out: &mut Vec<u8>) {
+            match &self.pending {
+                Some(m) => {
+                    true.encode(out);
+                    m.encode(out);
+                }
+                None => false.encode(out),
+            }
+        }
+
+        fn restore(&mut self, input: &mut &[u8]) -> Result<()> {
+            self.pending = if bool::decode(input)? { Some(Msg::decode(input)?) } else { None };
+            Ok(())
+        }
+    }
+
+    fn ping_pong_sim(carriers: usize, model: Option<NetModel>) -> ScaledSim {
+        let mut sim = ScaledSim::new(ScaledSimConfig {
+            carriers,
+            seed: 7,
+            max_steps: 1_000_000,
+        });
+        let spec = match model {
+            Some(m) => ChanSpec::modeled("req", m),
+            None => ChanSpec::ideal("req"),
+        };
+        let req = sim.add_chan(spec);
+        let rsp = sim.add_chan(ChanSpec::ideal("rsp"));
+        sim.add_proc(Box::new(Pinger { out: req, inp: rsp, left: 10, state: 0 }));
+        sim.add_proc(Box::new(Echoer { inp: req, out: rsp, pending: None }));
+        sim
+    }
+
+    #[test]
+    fn ping_pong_completes_and_is_deterministic_across_carrier_counts() {
+        let mut a = ping_pong_sim(1, None);
+        let sa = a.run().unwrap();
+        let mut b = ping_pong_sim(4, None);
+        let sb = b.run().unwrap();
+        assert_eq!(sa.steps, sb.steps, "carrier count must not change the schedule");
+        assert_eq!(sa.virtual_time, sb.virtual_time);
+        assert!(sa.steps > 20);
+    }
+
+    #[test]
+    fn modeled_channel_advances_virtual_time() {
+        let mut sim = ping_pong_sim(1, Some(NetModel::parse("custom:100:10:0").unwrap()));
+        let stats = sim.run().unwrap();
+        // 11 modelled sends, each ≥ 100 ticks, strictly ordered.
+        assert!(stats.virtual_time >= 1_100, "t={}", stats.virtual_time);
+    }
+
+    #[test]
+    fn recv_with_no_sender_is_detected_deadlock() {
+        let mut sim = ScaledSim::new(ScaledSimConfig::default());
+        let ch = sim.add_chan(ChanSpec::ideal("never"));
+        struct Stuck {
+            ch: usize,
+        }
+        impl LogicalProc for Stuck {
+            fn step(&mut self, _resume: Resume) -> Effect {
+                Effect::Recv { ch: self.ch }
+            }
+            fn save(&self, _out: &mut Vec<u8>) {}
+            fn restore(&mut self, _input: &mut &[u8]) -> Result<()> {
+                Ok(())
+            }
+        }
+        sim.add_proc(Box::new(Stuck { ch }));
+        let err = sim.run().unwrap_err();
+        match err {
+            GppError::Sim(msg) => {
+                assert!(msg.contains("deadlock"), "{msg}");
+                assert!(msg.contains("blocked on recv"), "{msg}");
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn lossy_send_with_dead_letter_redirects() {
+        let mut sim = ScaledSim::new(ScaledSimConfig { carriers: 1, seed: 3, max_steps: 10_000 });
+        // 100% loss: every send becomes a tag-99 dead letter on `alarm`.
+        let alarm = sim.add_chan(ChanSpec::ideal("alarm"));
+        let lossy = sim.add_chan(
+            ChanSpec::modeled("lossy", NetModel::parse("custom:50:0:1000").unwrap())
+                .with_dead_letter(alarm, 99),
+        );
+        struct Sender {
+            ch: usize,
+            sent: bool,
+        }
+        impl LogicalProc for Sender {
+            fn step(&mut self, _resume: Resume) -> Effect {
+                if self.sent {
+                    return Effect::Halt;
+                }
+                self.sent = true;
+                Effect::Send { ch: self.ch, msg: Msg::new(1, 42, 0) }
+            }
+            fn save(&self, out: &mut Vec<u8>) {
+                self.sent.encode(out);
+            }
+            fn restore(&mut self, input: &mut &[u8]) -> Result<()> {
+                self.sent = bool::decode(input)?;
+                Ok(())
+            }
+        }
+        struct Watcher {
+            ch: usize,
+            got: bool,
+        }
+        impl LogicalProc for Watcher {
+            fn step(&mut self, resume: Resume) -> Effect {
+                match resume {
+                    Resume::Delivered(m) => {
+                        assert_eq!((m.tag, m.a), (99, 42), "dead letter carries operands");
+                        self.got = true;
+                        Effect::Halt
+                    }
+                    _ => Effect::Recv { ch: self.ch },
+                }
+            }
+            fn save(&self, out: &mut Vec<u8>) {
+                self.got.encode(out);
+            }
+            fn restore(&mut self, input: &mut &[u8]) -> Result<()> {
+                self.got = bool::decode(input)?;
+                Ok(())
+            }
+        }
+        sim.add_proc(Box::new(Sender { ch: lossy, sent: false }));
+        sim.add_proc(Box::new(Watcher { ch: alarm, got: false }));
+        let stats = sim.run().unwrap();
+        assert!(stats.virtual_time >= 50, "dead letter arrives at the lost delivery time");
+    }
+
+    #[test]
+    fn snapshot_restore_continues_bit_exactly() {
+        // Reference: run to completion in one go.
+        let mut whole = ping_pong_sim(1, Some(NetModel::parse("custom:30:5:100").unwrap()));
+        let ref_stats = whole.run().unwrap();
+
+        // Checkpointed: pause after a few steps, snapshot, restore into
+        // a FRESH simulation, finish there.
+        let mut first = ping_pong_sim(1, Some(NetModel::parse("custom:30:5:100").unwrap()));
+        assert_eq!(first.run_for(7).unwrap(), RunState::Paused);
+        let snap = first.snapshot();
+
+        let mut second = ping_pong_sim(1, Some(NetModel::parse("custom:30:5:100").unwrap()));
+        second.restore_snapshot(&snap).unwrap();
+        let resumed = second.run().unwrap();
+        assert_eq!(resumed.steps, ref_stats.steps, "checkpoint must not change the run");
+        assert_eq!(resumed.virtual_time, ref_stats.virtual_time);
+        assert_eq!(resumed.rounds, ref_stats.rounds);
+    }
+
+    #[test]
+    fn scaled_clock_is_visible_to_obs_now() {
+        struct ClockCheck {
+            saw: bool,
+        }
+        impl LogicalProc for ClockCheck {
+            fn step(&mut self, resume: Resume) -> Effect {
+                match resume {
+                    Resume::Start => Effect::Sleep { ticks: 500 },
+                    _ => {
+                        let now = scaled_now().expect("on an engine thread");
+                        assert!(now >= 500);
+                        self.saw = true;
+                        Effect::Halt
+                    }
+                }
+            }
+            fn save(&self, out: &mut Vec<u8>) {
+                self.saw.encode(out);
+            }
+            fn restore(&mut self, input: &mut &[u8]) -> Result<()> {
+                self.saw = bool::decode(input)?;
+                Ok(())
+            }
+        }
+        let mut sim = ScaledSim::new(ScaledSimConfig { carriers: 1, seed: 1, max_steps: 1000 });
+        sim.add_proc(Box::new(ClockCheck { saw: false }));
+        sim.run().unwrap();
+        assert!(scaled_now().is_none(), "clock cleared outside the engine");
+    }
+}

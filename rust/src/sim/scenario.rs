@@ -1,0 +1,749 @@
+//! The cluster control protocol running inside the scaled simulation:
+//! one host process plus N worker processes speaking the exact
+//! [`crate::net::cluster`] tag set (`W_HELLO`/`W_REQ`/`W_RESULT`/
+//! `W_STATS`, `H_CONFIG`/`H_WORK`/`H_DONE`) over modelled channels —
+//! join, steal, requeue and final stats under simulated latency, jitter,
+//! loss and worker churn, at a scale no socket rig can reach.
+//!
+//! The host's bookkeeping is **the real ledger**
+//! ([`crate::net::cluster::HostLedger`]) — the same struct the threaded
+//! `serve_items` host mutates under its `Mutex` — so what these runs
+//! verify about steal/requeue/result accounting is a property of the
+//! production code, not of a hand-written model of it.
+//!
+//! Loss is modelled the way TCP surfaces it: a lost frame means the
+//! *connection* is dead. Every protocol channel dead-letters into the
+//! host's inbox ([`ChanSpec::dead_letter`]), so a sampled loss arrives
+//! as a `CONN_DEAD` notification carrying the worker id — exactly the
+//! read-error path `serve_conn` recovers through: the host requeues the
+//! worker's in-flight item, marks the connection dead, and the stranded
+//! worker observes the teardown (a reliable `H_DONE`, standing in for
+//! its socket erroring) and halts. Worker *churn* — a worker process
+//! dying mid-item — reuses the same notification, sent by the dying
+//! worker itself (the OS closing its socket).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::csp::error::{GppError, Result};
+use crate::net::cluster::{
+    HostLedger, H_CONFIG, H_DONE, H_WORK, W_HELLO, W_REQ, W_RESULT, W_STATS,
+};
+use crate::net::HostReport;
+use crate::sim::net_model::NetModel;
+use crate::sim::scaled::{
+    ChanSpec, Effect, LogicalProc, Msg, Resume, ScaledSim, ScaledSimConfig,
+};
+use crate::util::codec::Wire;
+use crate::util::rng::Rng;
+
+/// Slot the host parks its final report in when it halts; read by
+/// [`BuiltScenario::run`] after the engine returns.
+type ReportSlot = Arc<Mutex<Option<Result<HostReport>>>>;
+
+/// The item a connection is currently working on (`serve_conn`'s
+/// `in_flight`).
+type InFlightItem = Option<(usize, Arc<Vec<u8>>)>;
+
+/// Not a wire tag: the simulation's stand-in for the transport layer
+/// reporting a dead connection (the `serve_conn` read-error path).
+/// Chosen outside the protocol's tag range.
+pub(crate) const CONN_DEAD: u8 = 200;
+
+/// Channel id of the host's inbox (all workers send here; losses
+/// dead-letter here). Worker `wid` listens on channel `1 + wid`.
+const HOST_CH: usize = 0;
+
+fn worker_ch(wid: usize) -> usize {
+    1 + wid
+}
+
+/// A builder for cluster-protocol runs on the scaled engine.
+#[derive(Clone, Debug)]
+pub struct ClusterScenario {
+    pub workers: usize,
+    pub items: usize,
+    pub model: NetModel,
+    /// Per-completed-item probability (‰) that the worker dies instead
+    /// of sending its result — worker churn.
+    pub churn_permille: u32,
+    pub seed: u64,
+    pub carriers: usize,
+    /// Base virtual ticks one item takes to compute (± 25% per-item
+    /// jitter from the worker's seeded RNG).
+    pub compute_ticks: u64,
+    /// Workers join staggered uniformly over this many virtual ticks.
+    pub join_spread: u64,
+    /// Step budget guard handed to the engine.
+    pub max_steps: u64,
+}
+
+impl ClusterScenario {
+    pub fn new(workers: usize, items: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+            items,
+            model: NetModel::lan(),
+            churn_permille: 0,
+            seed: 1,
+            carriers: 4,
+            compute_ticks: 2_000,
+            join_spread: 10_000,
+            max_steps: u64::MAX,
+        }
+    }
+
+    pub fn with_model(mut self, model: NetModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    pub fn with_churn_permille(mut self, churn: u32) -> Self {
+        self.churn_permille = churn.min(1000);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_carriers(mut self, carriers: usize) -> Self {
+        self.carriers = carriers;
+        self
+    }
+
+    pub fn with_compute_ticks(mut self, ticks: u64) -> Self {
+        self.compute_ticks = ticks;
+        self
+    }
+
+    /// Wire the scenario into a fresh [`ScaledSim`]: one channel per
+    /// worker plus the host inbox, one [`LogicalProc`] per party.
+    pub fn build(&self) -> BuiltScenario {
+        let mut sim = ScaledSim::new(ScaledSimConfig {
+            carriers: self.carriers,
+            seed: self.seed,
+            max_steps: self.max_steps,
+        });
+        let host_ch = sim.add_chan(
+            ChanSpec::modeled("host-in", self.model.clone()).with_dead_letter(HOST_CH, CONN_DEAD),
+        );
+        debug_assert_eq!(host_ch, HOST_CH);
+        for wid in 0..self.workers {
+            let ch = sim.add_chan(
+                ChanSpec::modeled(&format!("w{wid}-in"), self.model.clone())
+                    .with_dead_letter(HOST_CH, CONN_DEAD),
+            );
+            debug_assert_eq!(ch, worker_ch(wid));
+        }
+        let items: Vec<Vec<u8>> = (0..self.items)
+            .map(|i| {
+                let mut v = Vec::new();
+                (i as u64).encode(&mut v);
+                v
+            })
+            .collect();
+        let report = Arc::new(Mutex::new(None));
+        sim.add_proc(Box::new(HostProc {
+            ledger: HostLedger::new(items),
+            nworkers: self.workers,
+            in_flight: (0..self.workers).map(|_| None).collect(),
+            parked: VecDeque::new(),
+            dead: vec![false; self.workers],
+            notified: vec![false; self.workers],
+            stats_got: vec![false; self.workers],
+            joined: 0,
+            outbox: VecDeque::new(),
+            report: report.clone(),
+        }));
+        for wid in 0..self.workers {
+            sim.add_proc(Box::new(WorkerProc {
+                wid: wid as u64,
+                state: WState::Init,
+                item: 0,
+                items_done: 0,
+                rng: Rng::new(self.seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(wid as u64 + 1))),
+                churn_permille: self.churn_permille,
+                compute_ticks: self.compute_ticks,
+                join_spread: self.join_spread,
+            }));
+        }
+        BuiltScenario { sim, report }
+    }
+
+    /// Build and run to completion.
+    pub fn run(&self) -> Result<ScenarioReport> {
+        self.build().run()
+    }
+}
+
+/// A wired-up scenario: the engine plus the slot the host parks its
+/// final [`HostReport`] in when it halts.
+pub struct BuiltScenario {
+    sim: ScaledSim,
+    report: ReportSlot,
+}
+
+impl BuiltScenario {
+    /// Direct engine access (checkpoint tests pause/snapshot/restore).
+    pub fn sim_mut(&mut self) -> &mut ScaledSim {
+        &mut self.sim
+    }
+
+    pub fn run(mut self) -> Result<ScenarioReport> {
+        let t0 = std::time::Instant::now();
+        let stats = self.sim.run()?;
+        let report = self
+            .report
+            .lock()
+            .unwrap()
+            .take()
+            .ok_or_else(|| GppError::Sim("scenario host halted without a report".into()))??;
+        Ok(ScenarioReport {
+            report,
+            steps: stats.steps,
+            rounds: stats.rounds,
+            virtual_time: stats.virtual_time,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            procs: self.sim.proc_count(),
+        })
+    }
+}
+
+/// What a scenario run reports: the real cluster accounting plus engine
+/// throughput numbers.
+#[derive(Debug)]
+pub struct ScenarioReport {
+    pub report: HostReport,
+    /// Logical-process steps executed (the "events" of events/sec).
+    pub steps: u64,
+    pub rounds: u64,
+    pub virtual_time: u64,
+    pub wall_seconds: f64,
+    pub procs: usize,
+}
+
+impl ScenarioReport {
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.steps as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+// ------------------------------------------------------------------ host
+
+/// The host as a logical process: [`HostLedger`] plus the per-connection
+/// state `serve_items` keeps in its connection threads (in-flight item,
+/// parked requesters, dead connections).
+struct HostProc {
+    ledger: HostLedger,
+    nworkers: usize,
+    /// Item each live connection is working on.
+    in_flight: Vec<InFlightItem>,
+    /// Requesters waiting for work (the dispatch `Condvar` queue).
+    parked: VecDeque<u64>,
+    dead: Vec<bool>,
+    /// `H_DONE` sent.
+    notified: Vec<bool>,
+    stats_got: Vec<bool>,
+    joined: usize,
+    /// One engine effect per step, so multi-frame reactions (e.g. the
+    /// final `H_DONE` broadcast) queue here.
+    outbox: VecDeque<(usize, Msg, bool)>,
+    report: ReportSlot,
+}
+
+impl HostProc {
+    /// The "result bytes" a worker computed for an item — synthesised
+    /// from the id (the engine ships event descriptors, not payloads).
+    fn result_bytes(id: usize) -> Vec<u8> {
+        let mut v = Vec::new();
+        (id as u64 * 2 + 1).encode(&mut v);
+        v
+    }
+
+    fn send(&mut self, wid: u64, msg: Msg) {
+        self.outbox.push_back((worker_ch(wid as usize), msg, false));
+    }
+
+    fn send_reliable(&mut self, wid: u64, msg: Msg) {
+        self.outbox.push_back((worker_ch(wid as usize), msg, true));
+    }
+
+    /// Give `wid` the next item, or park it (`dispatch`'s wait).
+    fn dispatch_or_park(&mut self, wid: u64) {
+        match self.ledger.next_item() {
+            Some((id, item)) => {
+                self.in_flight[wid as usize] = Some((id, item));
+                self.send(wid, Msg::new(H_WORK, wid, id as u64));
+            }
+            None => self.parked.push_back(wid),
+        }
+    }
+
+    /// All items done: release every parked requester.
+    fn flush_parked(&mut self) {
+        while let Some(wid) = self.parked.pop_front() {
+            if !self.dead[wid as usize] {
+                self.notified[wid as usize] = true;
+                self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+            }
+        }
+    }
+
+    fn handle(&mut self, m: Msg) {
+        let wid = m.a;
+        let widx = wid as usize;
+        debug_assert!(widx < self.nworkers, "frame from unknown worker {wid}");
+        // Frames from a torn-down connection: the real host's connection
+        // thread is gone, so nothing reads them. Drop.
+        if self.dead[widx] && m.tag != CONN_DEAD {
+            return;
+        }
+        match m.tag {
+            W_HELLO => {
+                self.joined += 1;
+                if self.ledger.is_done() {
+                    // Late joiner after completion: straight to done.
+                    self.notified[widx] = true;
+                    self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+                } else {
+                    self.send(wid, Msg::new(H_CONFIG, wid, 0));
+                }
+            }
+            W_REQ => {
+                if self.ledger.is_done() {
+                    self.notified[widx] = true;
+                    self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+                } else {
+                    self.dispatch_or_park(wid);
+                }
+            }
+            W_RESULT => {
+                let id = m.b as usize;
+                debug_assert_eq!(
+                    self.in_flight[widx].as_ref().map(|(i, _)| *i),
+                    Some(id),
+                    "worker {wid} returned an item it was not dispatched"
+                );
+                self.in_flight[widx] = None;
+                self.ledger.record_result(id, Self::result_bytes(id));
+                if self.ledger.is_done() {
+                    self.notified[widx] = true;
+                    self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+                    self.flush_parked();
+                } else {
+                    // `conn_loop` dispatches the next item on the same
+                    // connection without a second W_REQ.
+                    self.dispatch_or_park(wid);
+                }
+            }
+            W_STATS => {
+                self.stats_got[widx] = true;
+                self.ledger
+                    .push_stats(format!("{{\"wid\":{wid},\"items\":{}}}", m.b));
+            }
+            CONN_DEAD => {
+                if self.dead[widx] {
+                    return; // second loss on an already-dead connection
+                }
+                self.dead[widx] = true;
+                if self.notified[widx] {
+                    // Connection died after H_DONE: its stats just never
+                    // arrive (best effort, as on the real wire).
+                    return;
+                }
+                let requeued = self.ledger.worker_lost(self.in_flight[widx].take());
+                // The stranded worker observes the teardown (its socket
+                // erroring) and exits.
+                self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+                if requeued {
+                    // `cv.notify_all()`: hand the recovered item to a
+                    // parked requester, if any. Stale parked entries for
+                    // since-dead connections are skipped lazily (eager
+                    // removal would be O(parked) per death).
+                    while let Some(p) = self.parked.pop_front() {
+                        if !self.dead[p as usize] {
+                            self.dispatch_or_park(p);
+                            break;
+                        }
+                    }
+                }
+            }
+            t => unreachable!("host: unknown tag {t}"),
+        }
+    }
+
+    /// Every connection concluded: dead, or done-and-stats-collected.
+    fn settled(&self) -> bool {
+        self.outbox.is_empty()
+            && (0..self.nworkers).all(|w| self.dead[w] || (self.notified[w] && self.stats_got[w]))
+    }
+}
+
+impl LogicalProc for HostProc {
+    fn step(&mut self, resume: Resume) -> Effect {
+        if let Resume::Delivered(m) = resume {
+            self.handle(m);
+        }
+        if let Some((ch, msg, reliable)) = self.outbox.pop_front() {
+            return if reliable {
+                Effect::SendReliable { ch, msg }
+            } else {
+                Effect::Send { ch, msg }
+            };
+        }
+        if self.settled() {
+            *self.report.lock().unwrap() = Some(self.ledger.take_report(self.joined));
+            return Effect::Halt;
+        }
+        Effect::Recv { ch: HOST_CH }
+    }
+
+    fn save(&self, out: &mut Vec<u8>) {
+        self.ledger.save(out);
+        for slot in &self.in_flight {
+            match slot {
+                Some((id, item)) => {
+                    true.encode(out);
+                    (*id as u64).encode(out);
+                    item.as_ref().encode(out);
+                }
+                None => false.encode(out),
+            }
+        }
+        (self.parked.len() as u64).encode(out);
+        for p in &self.parked {
+            p.encode(out);
+        }
+        self.dead.encode(out);
+        self.notified.encode(out);
+        self.stats_got.encode(out);
+        (self.joined as u64).encode(out);
+        (self.outbox.len() as u64).encode(out);
+        for (ch, msg, reliable) in &self.outbox {
+            (*ch as u64).encode(out);
+            msg.encode(out);
+            reliable.encode(out);
+        }
+    }
+
+    fn restore(&mut self, input: &mut &[u8]) -> Result<()> {
+        self.ledger = HostLedger::restore(input)?;
+        for slot in self.in_flight.iter_mut() {
+            *slot = if bool::decode(input)? {
+                let id = u64::decode(input)? as usize;
+                Some((id, Arc::new(Vec::<u8>::decode(input)?)))
+            } else {
+                None
+            };
+        }
+        let pn = u64::decode(input)? as usize;
+        self.parked.clear();
+        for _ in 0..pn {
+            self.parked.push_back(u64::decode(input)?);
+        }
+        self.dead = Vec::<bool>::decode(input)?;
+        self.notified = Vec::<bool>::decode(input)?;
+        self.stats_got = Vec::<bool>::decode(input)?;
+        self.joined = u64::decode(input)? as usize;
+        let on = u64::decode(input)? as usize;
+        self.outbox.clear();
+        for _ in 0..on {
+            let ch = u64::decode(input)? as usize;
+            let msg = Msg::decode(input)?;
+            let reliable = bool::decode(input)?;
+            self.outbox.push_back((ch, msg, reliable));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- worker
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WState {
+    /// Waiting out the join stagger.
+    Init,
+    /// Stagger elapsed; send `W_HELLO`.
+    Join,
+    /// Last send completed; issue the `Recv`.
+    AwaitReply,
+    /// Blocked on the host's reply.
+    InReply,
+    /// Compute sleep finished; send the result (or die of churn).
+    Computed,
+    /// Churn death: emit the teardown notice, then halt.
+    Dying,
+    /// `W_STATS` sent; halt.
+    Done,
+}
+
+impl WState {
+    fn code(self) -> u8 {
+        match self {
+            WState::Init => 0,
+            WState::Join => 1,
+            WState::AwaitReply => 2,
+            WState::InReply => 3,
+            WState::Computed => 4,
+            WState::Dying => 5,
+            WState::Done => 6,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => WState::Init,
+            1 => WState::Join,
+            2 => WState::AwaitReply,
+            3 => WState::InReply,
+            4 => WState::Computed,
+            5 => WState::Dying,
+            6 => WState::Done,
+            _ => return Err(GppError::Sim(format!("worker snapshot: bad state {c}"))),
+        })
+    }
+}
+
+/// One cluster worker as a logical process: the `run_worker` loop
+/// (hello → config → request/compute/result … → done → stats) as a
+/// state machine whose every channel operation is a yield point.
+struct WorkerProc {
+    wid: u64,
+    state: WState,
+    item: u64,
+    items_done: u64,
+    rng: Rng,
+    churn_permille: u32,
+    compute_ticks: u64,
+    join_spread: u64,
+}
+
+impl LogicalProc for WorkerProc {
+    fn step(&mut self, resume: Resume) -> Effect {
+        match self.state {
+            WState::Init => {
+                self.state = WState::Join;
+                Effect::Sleep { ticks: self.rng.next_bounded(self.join_spread.max(1)) + 1 }
+            }
+            WState::Join => {
+                self.state = WState::AwaitReply;
+                Effect::Send { ch: HOST_CH, msg: Msg::new(W_HELLO, self.wid, 0) }
+            }
+            WState::AwaitReply => {
+                self.state = WState::InReply;
+                Effect::Recv { ch: worker_ch(self.wid as usize) }
+            }
+            WState::InReply => {
+                let Resume::Delivered(m) = resume else {
+                    unreachable!("blocked recv resumes with a delivery");
+                };
+                match m.tag {
+                    H_CONFIG => {
+                        self.state = WState::AwaitReply;
+                        Effect::Send { ch: HOST_CH, msg: Msg::new(W_REQ, self.wid, 0) }
+                    }
+                    H_WORK => {
+                        self.item = m.b;
+                        self.state = WState::Computed;
+                        let jitter = self.rng.next_bounded(self.compute_ticks / 4 + 1);
+                        Effect::Sleep { ticks: self.compute_ticks + jitter }
+                    }
+                    H_DONE => {
+                        self.state = WState::Done;
+                        Effect::SendReliable {
+                            ch: HOST_CH,
+                            msg: Msg::new(W_STATS, self.wid, self.items_done),
+                        }
+                    }
+                    t => unreachable!("worker {}: unknown tag {t}", self.wid),
+                }
+            }
+            WState::Computed => {
+                if self.churn_permille > 0
+                    && self.rng.next_bounded(1000) < self.churn_permille as u64
+                {
+                    // Churn: die mid-item. The transport notices the
+                    // closed socket — that notice must not itself be
+                    // "lost" (the OS delivers it eventually).
+                    self.state = WState::Dying;
+                    return Effect::SendReliable {
+                        ch: HOST_CH,
+                        msg: Msg::new(CONN_DEAD, self.wid, 0),
+                    };
+                }
+                self.items_done += 1;
+                self.state = WState::AwaitReply;
+                Effect::Send { ch: HOST_CH, msg: Msg::new(W_RESULT, self.wid, self.item) }
+            }
+            WState::Dying | WState::Done => Effect::Halt,
+        }
+    }
+
+    fn save(&self, out: &mut Vec<u8>) {
+        self.state.code().encode(out);
+        self.item.encode(out);
+        self.items_done.encode(out);
+        for word in self.rng.state() {
+            word.encode(out);
+        }
+    }
+
+    fn restore(&mut self, input: &mut &[u8]) -> Result<()> {
+        self.state = WState::from_code(u8::decode(input)?)?;
+        self.item = u64::decode(input)?;
+        self.items_done = u64::decode(input)?;
+        let mut s = [0u64; 4];
+        for word in &mut s {
+            *word = u64::decode(input)?;
+        }
+        self.rng = Rng::from_state(s);
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::scaled::RunState;
+
+    #[test]
+    fn ideal_network_completes_with_exact_accounting() {
+        let r = ClusterScenario::new(8, 40)
+            .with_model(NetModel::ideal())
+            .with_seed(11)
+            .run()
+            .unwrap();
+        assert_eq!(r.report.results.len(), 40);
+        assert_eq!(r.report.workers_joined, 8);
+        assert_eq!(r.report.workers_lost, 0);
+        assert_eq!(r.report.items_requeued, 0);
+        assert_eq!(r.report.worker_stats.len(), 8);
+        // Results are in item order and synthesised deterministically.
+        for (i, bytes) in r.report.results.iter().enumerate() {
+            let mut input: &[u8] = bytes;
+            assert_eq!(u64::decode(&mut input).unwrap(), i as u64 * 2 + 1);
+        }
+        // Every computed item is accounted exactly once across workers.
+        let done: u64 = r
+            .report
+            .worker_stats
+            .iter()
+            .map(|s| {
+                let items = s.split("\"items\":").nth(1).unwrap();
+                items.trim_end_matches('}').parse::<u64>().unwrap()
+            })
+            .sum();
+        assert_eq!(done, 40);
+    }
+
+    #[test]
+    fn lossy_network_recovers_through_requeue() {
+        let r = ClusterScenario::new(32, 40)
+            .with_model(NetModel::parse("custom:200:50:50").unwrap()) // 5% loss
+            .with_seed(5)
+            .run()
+            .unwrap();
+        assert_eq!(r.report.results.len(), 40, "every item completes despite losses");
+        assert!(r.report.workers_lost > 0, "5% loss over ~200 frames must kill connections");
+        // Requeues only for connections that died mid-item; bounded by
+        // losses.
+        assert!(r.report.items_requeued <= r.report.workers_lost);
+        // Stats come from connections that joined AND survived. (A lost
+        // W_HELLO kills a connection that never joined, so "lost" is not
+        // a subset of "joined" — only the bounds are exact.)
+        assert!(r.report.worker_stats.len() <= r.report.workers_joined);
+        assert!(
+            r.report.worker_stats.len()
+                >= r.report.workers_joined.saturating_sub(r.report.workers_lost)
+        );
+    }
+
+    #[test]
+    fn churn_kills_workers_but_not_the_run() {
+        // 32 workers for 80 items: with 10% churn per attempt, losing
+        // ALL workers needs ~32 deaths inside ~90 attempts — vanishingly
+        // unlikely — while zero deaths is equally implausible, so both
+        // assertions are safe for a fixed seed.
+        let r = ClusterScenario::new(32, 80)
+            .with_model(NetModel::lan())
+            .with_churn_permille(100)
+            .with_seed(23)
+            .run()
+            .unwrap();
+        assert_eq!(r.report.results.len(), 80);
+        assert!(r.report.workers_lost > 0, "10% churn over ~90 attempts must kill workers");
+        assert_eq!(r.report.items_requeued, r.report.workers_lost, "churn always dies mid-item");
+    }
+
+    #[test]
+    fn same_seed_same_accounting_different_carriers() {
+        let run = |carriers: usize| {
+            ClusterScenario::new(32, 80)
+                .with_model(NetModel::lossy())
+                .with_churn_permille(50)
+                .with_seed(77)
+                .with_carriers(carriers)
+                .run()
+                .unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.report.workers_joined, b.report.workers_joined);
+        assert_eq!(a.report.workers_lost, b.report.workers_lost);
+        assert_eq!(a.report.items_requeued, b.report.items_requeued);
+        assert_eq!(a.report.results, b.report.results);
+        assert_eq!(a.report.worker_stats, b.report.worker_stats);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.virtual_time, b.virtual_time);
+    }
+
+    #[test]
+    fn total_loss_of_all_workers_is_the_real_host_error() {
+        // 100% loss: every first frame kills its connection; no item
+        // ever completes, and the host reports exactly what the real
+        // `take_report` reports when every worker is gone.
+        let err = ClusterScenario::new(4, 10)
+            .with_model(NetModel::parse("custom:100:0:1000").unwrap())
+            .with_seed(2)
+            .run()
+            .unwrap_err();
+        match err {
+            GppError::Net(msg) => {
+                assert!(msg.contains("lost all workers"), "{msg}");
+                assert!(msg.contains("10 of 10"), "{msg}");
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn checkpoint_mid_run_resumes_to_the_same_report() {
+        let scenario = ClusterScenario::new(16, 40)
+            .with_model(NetModel::lossy())
+            .with_churn_permille(80)
+            .with_seed(13)
+            .with_carriers(1);
+        let reference = scenario.run().unwrap();
+
+        let mut first = scenario.build();
+        assert_eq!(first.sim_mut().run_for(200).unwrap(), RunState::Paused);
+        let snap = first.sim_mut().snapshot();
+
+        let mut resumed = scenario.build();
+        resumed.sim_mut().restore_snapshot(&snap).unwrap();
+        let r = resumed.run().unwrap();
+        assert_eq!(r.report.results, reference.report.results);
+        assert_eq!(r.report.workers_lost, reference.report.workers_lost);
+        assert_eq!(r.report.items_requeued, reference.report.items_requeued);
+        assert_eq!(r.steps, reference.steps, "checkpoint must not perturb the schedule");
+        assert_eq!(r.virtual_time, reference.virtual_time);
+    }
+}

@@ -92,6 +92,19 @@ impl Rng {
         (m >> 64) as u64
     }
 
+    /// The full generator state, for snapshot/restore (the scalable sim
+    /// checkpoints mid-run and must resume the exact random sequence).
+    #[inline]
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from [`Rng::state`] output.
+    #[inline]
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
     /// Uniform in [lo, hi] inclusive.
     #[inline]
     pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {

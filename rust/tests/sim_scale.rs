@@ -1,0 +1,94 @@
+//! Scaled-simulation integration tests: the real cluster control
+//! protocol (join / steal / requeue / stats — the `net::cluster` tag set
+//! driving the real `HostLedger`) at a hundred thousand logical worker
+//! processes on a small fixed carrier pool, under a lossy modelled
+//! network — deterministic per seed, independent of carrier count.
+//!
+//! This file also hosts the virtual-clock re-expression of the last
+//! quarantined `timing-tests` assertion: cluster join-order fairness
+//! (both staggered-joining workers complete work), which the threaded
+//! test could only check by sleeping on the wall clock.
+
+use gpp::sim::{ClusterScenario, NetModel, ScenarioReport};
+
+fn hundred_k(carriers: usize) -> ScenarioReport {
+    let mut s = ClusterScenario::new(100_000, 20_000)
+        .with_model(NetModel::lossy())
+        .with_churn_permille(10)
+        .with_seed(424_242)
+        .with_carriers(carriers);
+    // A livelock should fail the test, not hang the suite.
+    s.max_steps = 50_000_000;
+    s.run().unwrap()
+}
+
+/// ≥100k logical processes, lossy network, worker churn: the run
+/// completes with every item accounted for, and two replays of the same
+/// seed — on different carrier-pool sizes — produce byte-identical
+/// `HostReport` accounting.
+#[test]
+fn hundred_thousand_workers_replay_identically_under_loss() {
+    let a = hundred_k(4);
+    assert_eq!(a.procs, 100_001, "100k workers + the host");
+    assert_eq!(a.report.results.len(), 20_000, "every item has a result");
+    assert!(
+        a.report.workers_lost > 0,
+        "a lossy network at this scale must kill some connections"
+    );
+    assert!(a.report.workers_joined > 90_000, "the vast majority join");
+    assert!(a.steps > 500_000, "this is a non-trivial event volume");
+
+    let b = hundred_k(1);
+    assert_eq!(a.report.results, b.report.results);
+    assert_eq!(a.report.workers_joined, b.report.workers_joined);
+    assert_eq!(a.report.workers_lost, b.report.workers_lost);
+    assert_eq!(a.report.items_requeued, b.report.items_requeued);
+    assert_eq!(a.report.worker_stats, b.report.worker_stats);
+    assert_eq!(a.steps, b.steps, "carrier count must not change the schedule");
+    assert_eq!(a.virtual_time, b.virtual_time);
+}
+
+/// The unquarantined cluster join-order fairness check: two workers
+/// join staggered (the second up to a full join-spread later, on a
+/// latency-modelled network) and BOTH still complete work, because the
+/// host dispatches to whoever requests — there is no positional bias.
+/// The threaded version of this assertion lives behind
+/// `--features timing-tests`; on the virtual clock it is exact.
+#[test]
+fn staggered_joiners_both_complete_work_on_the_virtual_clock() {
+    let r = ClusterScenario::new(2, 40)
+        .with_model(NetModel::lan())
+        .with_seed(7)
+        .with_carriers(1)
+        .run()
+        .unwrap();
+    assert_eq!(r.report.results.len(), 40);
+    assert_eq!(r.report.workers_joined, 2);
+    assert_eq!(r.report.workers_lost, 0);
+    assert_eq!(r.report.worker_stats.len(), 2);
+    let items: Vec<u64> = r
+        .report
+        .worker_stats
+        .iter()
+        .map(|s| {
+            s.split("\"items\":")
+                .nth(1)
+                .and_then(|t| t.trim_end_matches('}').parse().ok())
+                .unwrap_or_else(|| panic!("unparseable stats: {s}"))
+        })
+        .collect();
+    assert_eq!(items.iter().sum::<u64>(), 40, "every item accounted exactly once");
+    assert!(
+        items.iter().all(|&n| n > 0),
+        "join order must not starve a worker: {items:?}"
+    );
+    // Replays are exact, not merely equivalent.
+    let again = ClusterScenario::new(2, 40)
+        .with_model(NetModel::lan())
+        .with_seed(7)
+        .with_carriers(1)
+        .run()
+        .unwrap();
+    assert_eq!(again.report.worker_stats, r.report.worker_stats);
+    assert_eq!(again.virtual_time, r.virtual_time);
+}

@@ -250,6 +250,57 @@ fn sim_runs_jacobi_engine_chain_deterministically() {
     assert_eq!(run(5), run(5), "same seed, same schedule");
 }
 
+// ------------------------------------------ parallel cast under the sim
+
+#[test]
+fn par_cast_helper_threads_are_simulable_and_deterministic() {
+    setup();
+    use gpp::csp::process::ProcessFn;
+    use gpp::data::message::Terminator;
+    use gpp::processes::OneParCastList;
+    use gpp::workloads::montecarlo::PiData;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    // OneParCastList spawns one writer thread per output; under the sim
+    // those become registered helper processes, so this network — which
+    // used to be unsimulable — runs and reproduces its schedule.
+    let run = |seed: u64| -> (String, usize) {
+        let net = SimNet::new(SimPolicy::Seeded(seed));
+        let (feed_tx, feed_rx) = net.channel::<Message>("feed");
+        let outs: Vec<_> = (0..3).map(|i| net.channel::<Message>(&format!("cast{i}"))).collect();
+        let (cast_txs, cast_rxs): (Vec<_>, Vec<_>) = outs.into_iter().unzip();
+        let feeder = ProcessFn::boxed("feeder", move || {
+            for _ in 0..2 {
+                feed_tx.write(Message::data(PiData::default()))?;
+            }
+            feed_tx.write(Message::Terminator(Terminator::new()))?;
+            Ok(())
+        });
+        let data_seen = Arc::new(AtomicUsize::new(0));
+        let mut procs: Vec<Box<dyn CSProcess>> =
+            vec![feeder, Box::new(OneParCastList::new(feed_rx, cast_txs))];
+        for (i, rx) in cast_rxs.into_iter().enumerate() {
+            let seen = data_seen.clone();
+            procs.push(ProcessFn::boxed(&format!("sink{i}"), move || loop {
+                match rx.read()? {
+                    Message::Data(_) => {
+                        seen.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Message::Terminator(_) => return Ok(()),
+                }
+            }));
+        }
+        net.run("parcast", procs).unwrap_or_else(|e| {
+            panic!("seed {seed}: {e}; schedule=[{}]", net.schedule_string())
+        });
+        (net.schedule_string(), data_seen.load(Ordering::SeqCst))
+    };
+    let (schedule, seen) = run(21);
+    assert_eq!(seen, 3 * 2, "every sink sees every data message");
+    assert_eq!(run(21), (schedule, seen), "same seed, same schedule");
+}
+
 // --------------------------------- pooled deadlock: detect, report, replay
 
 #[test]
