@@ -51,6 +51,15 @@ pub fn expansion_listing(spec: &NetworkSpec) -> String {
                     out.push_str(&format!("def c{i}_{j} = Channel.one2one()\n"));
                 }
             }
+            ProcSpec::Broadcast { destinations, .. }
+            | ProcSpec::Scatter { destinations, .. }
+            | ProcSpec::AllReduce {
+                width: destinations, ..
+            } => {
+                for j in 0..*destinations {
+                    out.push_str(&format!("def c{i}_{j} = Channel.one2one()\n"));
+                }
+            }
             _ => out.push_str(&format!("def c{i} = Channel.any2any()\n")),
         }
     }
@@ -161,6 +170,40 @@ pub fn expansion_listing(spec: &NetworkSpec) -> String {
                     "def {name} = new CombineNto1(local: {}, method: {combine_method}, input: {}.in(), output: c{i}.out())\n",
                     local.class,
                     input_of(i)
+                ));
+                names.push(name);
+            }
+            ProcSpec::Broadcast { destinations, fanout } => {
+                let name = format!("bcast{i}");
+                out.push_str(&format!(
+                    "def {name} = new BroadcastTree(fanout: {fanout}, input: {}.in(), outputs: [0..<{destinations}].collect {{ j -> c{i}_$j.out() }})\n",
+                    input_of(i)
+                ));
+                names.push(name);
+            }
+            ProcSpec::Scatter { destinations, fanout } => {
+                let name = format!("scatter{i}");
+                out.push_str(&format!(
+                    "def {name} = new ScatterTree(fanout: {fanout}, input: {}.in(), outputs: [0..<{destinations}].collect {{ j -> c{i}_$j.out() }})\n",
+                    input_of(i)
+                ));
+                names.push(name);
+            }
+            ProcSpec::Gather { sources, fanout } => {
+                let name = format!("gather{i}");
+                out.push_str(&format!(
+                    "def {name} = new GatherTree(fanout: {fanout}, inputs: [0..<{sources}].collect {{ j -> c{}_$j.in() }}, output: c{i}.out())\n",
+                    i.saturating_sub(1)
+                ));
+                names.push(name);
+            }
+            ProcSpec::AllReduce { width, fanout, op } => {
+                let name = format!("allreduce{i}");
+                out.push_str(&format!(
+                    "def {name} = new AllReduceTree(fanout: {fanout}, local: {}, method: {}, inputs: [0..<{width}].collect {{ j -> c{}_$j.in() }}, outputs: [0..<{width}].collect {{ j -> c{i}_$j.out() }})\n",
+                    op.local.class,
+                    op.combine_method,
+                    i.saturating_sub(1)
                 ));
                 names.push(name);
             }

@@ -18,6 +18,11 @@
 //! collect   class=piResults init=initClass(1)
 //! ```
 //!
+//! Collective lines (`broadcast`/`scatter`/`gather` with
+//! `destinations=`/`sources=` and optional `fanout=`, and `allreduce`
+//! with `width= fanout= class= init= method= [finalise=]`) expand to
+//! the log-depth trees of [`crate::collectives`].
+//!
 //! The optional `config` line picks the channel transport and executor
 //! ([`RuntimeConfig`]); without it the network runs on the paper's
 //! rendezvous + thread-per-process semantics. `transport=` accepts
@@ -106,6 +111,27 @@ pub enum ProcSpec {
         combine_method: String,
         finalise_method: Option<String>,
     },
+    /// Tree broadcast ([`crate::collectives::broadcast_tree`]).
+    Broadcast {
+        destinations: usize,
+        fanout: usize,
+    },
+    /// Tree scatter ([`crate::collectives::scatter_tree`]).
+    Scatter {
+        destinations: usize,
+        fanout: usize,
+    },
+    /// Tree gather ([`crate::collectives::gather_tree`]).
+    Gather {
+        sources: usize,
+        fanout: usize,
+    },
+    /// Reduce-tree + broadcast-tree ([`crate::collectives::allreduce_tree`]).
+    AllReduce {
+        width: usize,
+        fanout: usize,
+        op: crate::collectives::AllReduceOp,
+    },
     Collect {
         details: ResultDetails,
     },
@@ -125,6 +151,8 @@ impl ProcSpec {
             ProcSpec::Emit { .. } | ProcSpec::EmitWithLocal { .. } => Arity::None,
             ProcSpec::ListGroupList { workers, .. } => Arity::List(*workers),
             ProcSpec::ListSeqOne { sources } => Arity::List(*sources),
+            ProcSpec::Gather { sources, .. } => Arity::List(*sources),
+            ProcSpec::AllReduce { width, .. } => Arity::List(*width),
             _ => Arity::Single,
         }
     }
@@ -135,7 +163,11 @@ impl ProcSpec {
             ProcSpec::OneSeqCastList { destinations } | ProcSpec::OneParCastList { destinations } => {
                 Arity::List(*destinations)
             }
+            ProcSpec::Broadcast { destinations, .. } | ProcSpec::Scatter { destinations, .. } => {
+                Arity::List(*destinations)
+            }
             ProcSpec::ListGroupList { workers, .. } => Arity::List(*workers),
+            ProcSpec::AllReduce { width, .. } => Arity::List(*width),
             _ => Arity::Single,
         }
     }
@@ -173,6 +205,10 @@ impl ProcSpec {
             ProcSpec::AnyFanOne { .. } => "AnyFanOne",
             ProcSpec::ListSeqOne { .. } => "ListSeqOne",
             ProcSpec::CombineNto1 { .. } => "CombineNto1",
+            ProcSpec::Broadcast { .. } => "Broadcast",
+            ProcSpec::Scatter { .. } => "Scatter",
+            ProcSpec::Gather { .. } => "Gather",
+            ProcSpec::AllReduce { .. } => "AllReduce",
             ProcSpec::Collect { .. } => "Collect",
         }
     }
@@ -461,6 +497,43 @@ impl NetworkSpec {
                     }
                     procs.push(Box::new(c));
                 }
+                ProcSpec::Broadcast { fanout, .. } => {
+                    procs.extend(crate::collectives::broadcast_tree(
+                        cfg,
+                        &format!("dsl.{i}.bcast"),
+                        single_in(&upstream)?,
+                        list_out(&outs)?,
+                        *fanout,
+                    ));
+                }
+                ProcSpec::Scatter { fanout, .. } => {
+                    procs.extend(crate::collectives::scatter_tree(
+                        cfg,
+                        &format!("dsl.{i}.scatter"),
+                        single_in(&upstream)?,
+                        list_out(&outs)?,
+                        *fanout,
+                    ));
+                }
+                ProcSpec::Gather { fanout, .. } => {
+                    procs.extend(crate::collectives::gather_tree(
+                        cfg,
+                        &format!("dsl.{i}.gather"),
+                        list_in(&upstream)?,
+                        single_out(&outs)?,
+                        *fanout,
+                    ));
+                }
+                ProcSpec::AllReduce { fanout, op, .. } => {
+                    procs.extend(crate::collectives::allreduce_tree(
+                        cfg,
+                        &format!("dsl.{i}.allreduce"),
+                        list_in(&upstream)?,
+                        list_out(&outs)?,
+                        *fanout,
+                        op,
+                    ));
+                }
                 ProcSpec::Collect { details } => {
                     let mut c = Collect::new(details.clone(), single_in(&upstream)?)
                         .with_batch(batch);
@@ -528,9 +601,10 @@ impl NetworkSpec {
     /// [`crate::verify::Checker`] — the `gppBuilder` counterpart of the
     /// paper's hand-written CSPm scripts, generated from the same
     /// `ProcSpec` chain `build()` expands (see
-    /// [`crate::verify::extract`]). Spreader/reducer connectors not yet
-    /// covered by extraction (casts, list groups) report a `Verify`
-    /// error naming the spec.
+    /// [`crate::verify::extract`]). Collective trees and list groups
+    /// extract onto lane-list boundaries; spreader/reducer connectors
+    /// not yet covered by extraction (flat casts, list reducers)
+    /// report a `Verify` error naming the spec.
     pub fn extract_model(&self, objects: i64) -> Result<crate::verify::ExtractedModel> {
         use crate::verify::extract::{extract_chain, new_interner, ChainStage};
         self.validate()?;
@@ -553,6 +627,31 @@ impl NetworkSpec {
                 ProcSpec::AnyFanOne { sources } => {
                     chain.push(ChainStage::ReduceAny { sources: *sources })
                 }
+                ProcSpec::ListGroupList { workers, .. } => {
+                    chain.push(ChainStage::ListGroup { workers: *workers })
+                }
+                ProcSpec::Broadcast { destinations, fanout } => {
+                    chain.push(ChainStage::BroadcastTree {
+                        destinations: *destinations,
+                        fanout: *fanout,
+                    })
+                }
+                ProcSpec::Scatter { destinations, fanout } => {
+                    chain.push(ChainStage::ScatterTree {
+                        destinations: *destinations,
+                        fanout: *fanout,
+                    })
+                }
+                ProcSpec::Gather { sources, fanout } => chain.push(ChainStage::GatherTree {
+                    sources: *sources,
+                    fanout: *fanout,
+                }),
+                ProcSpec::AllReduce { width, fanout, .. } => {
+                    chain.push(ChainStage::AllReduceTree {
+                        width: *width,
+                        fanout: *fanout,
+                    })
+                }
                 other => {
                     return Err(GppError::Verify(format!(
                         "model extraction does not yet cover {} (ROADMAP open item)",
@@ -573,6 +672,16 @@ impl NetworkSpec {
                 ProcSpec::AnyGroupAny { workers, .. } => *workers,
                 ProcSpec::ListGroupList { workers, .. } => *workers,
                 ProcSpec::Pipeline { stages } => stages.len(),
+                ProcSpec::Broadcast { destinations, fanout }
+                | ProcSpec::Scatter { destinations, fanout } => {
+                    crate::collectives::spread_tree_nodes(*destinations, *fanout)
+                }
+                ProcSpec::Gather { sources, fanout } => {
+                    crate::collectives::spread_tree_nodes(*sources, *fanout)
+                }
+                ProcSpec::AllReduce { width, fanout, .. } => {
+                    crate::collectives::allreduce_tree_nodes(*width, *fanout)
+                }
                 _ => 1,
             })
             .sum()
@@ -725,6 +834,34 @@ pub fn parse_network(text: &str) -> Result<NetworkSpec> {
             "listSeq" => spec.procs.push(ProcSpec::ListSeqOne {
                 sources: usize_at("sources")?,
             }),
+            "broadcast" => spec.procs.push(ProcSpec::Broadcast {
+                destinations: usize_at("destinations")?,
+                fanout: fanout_of(&kvs, lineno + 1)?,
+            }),
+            "scatter" => spec.procs.push(ProcSpec::Scatter {
+                destinations: usize_at("destinations")?,
+                fanout: fanout_of(&kvs, lineno + 1)?,
+            }),
+            "gather" => spec.procs.push(ProcSpec::Gather {
+                sources: usize_at("sources")?,
+                fanout: fanout_of(&kvs, lineno + 1)?,
+            }),
+            "allreduce" => {
+                let mut local = LocalDetails::new(&at("class")?);
+                if let Some(v) = kvs.get("init") {
+                    let (m, p) = parse_method(v);
+                    local = local.init(&m, p);
+                }
+                let mut op = crate::collectives::AllReduceOp::new(local, &at("method")?);
+                if let Some(v) = kvs.get("finalise") {
+                    op = op.with_finalise(&parse_method(v).0);
+                }
+                spec.procs.push(ProcSpec::AllReduce {
+                    width: usize_at("width")?,
+                    fanout: fanout_of(&kvs, lineno + 1)?,
+                    op,
+                });
+            }
             "combine" => {
                 let mut local = LocalDetails::new(&at("class")?);
                 if let Some(v) = kvs.get("init") {
@@ -762,6 +899,17 @@ pub fn parse_network(text: &str) -> Result<NetworkSpec> {
     }
     spec.dsl_lines = Some(lines);
     Ok(spec)
+}
+
+/// Optional `fanout=` on collective lines; defaults to a binary tree.
+fn fanout_of(kvs: &HashMap<String, String>, lineno: usize) -> Result<usize> {
+    match kvs.get("fanout") {
+        Some(v) => v
+            .parse::<usize>()
+            .map(|f| f.max(2))
+            .map_err(|_| NetworkSpec::err(format!("line {lineno}: fanout must be an integer"))),
+        None => Ok(2),
+    }
 }
 
 fn parse_kvs<'a>(
@@ -964,6 +1112,23 @@ mod tests {
     }
 
     #[test]
+    fn extracted_collective_chain_holds() {
+        // A small collective network → CSP model → checker: the tree
+        // connectors' terminator protocol proved deadlock-free on the
+        // same spec `build()` expands.
+        let spec = parse_network(
+            "emit class=piData init=initClass(2) create=createInstance(10)\n\
+             scatter destinations=2 fanout=2\n\
+             listGroup workers=2 function=getWithin\n\
+             allreduce width=2 fanout=2 class=piResults init=initClass(1) method=merge\n\
+             gather sources=2 fanout=2\n\
+             collect class=piResults init=initClass(1) collect=merge\n",
+        )
+        .unwrap();
+        spec.extract_model(2).unwrap().assert_all().unwrap();
+    }
+
+    #[test]
     fn extraction_rejects_unsupported_connectors() {
         let spec = NetworkSpec::new()
             .push(ProcSpec::Emit {
@@ -976,6 +1141,56 @@ mod tests {
             });
         let err = spec.extract_model(2).unwrap_err();
         assert!(matches!(err, GppError::Verify(_)), "{err}");
+    }
+
+    #[test]
+    fn parsed_collective_chain_runs_and_counts_processes() {
+        crate::workloads::register_all();
+        // Scatter the emitted stream over 4 lanes, square per lane,
+        // all-reduce the results so every lane holds the same total,
+        // then gather the 4 identical totals into the collector.
+        let spec = parse_network(
+            "config transport=buffered capacity=64\n\
+             emit class=piData init=initClass(8) create=createInstance(100)\n\
+             scatter destinations=4 fanout=2\n\
+             listGroup workers=4 function=getWithin\n\
+             allreduce width=4 fanout=2 class=piResults init=initClass(1) method=merge\n\
+             gather sources=4 fanout=2\n\
+             collect class=piResults init=initClass(1) collect=merge\n",
+        )
+        .unwrap();
+        assert_eq!(spec.dsl_line_count(), 7);
+        // scatter(4,f2)=3 nodes, workers=4, allreduce(4,f2)=2*(2+1)... see
+        // collectives::allreduce_tree_nodes; gather(4,f2)=3 nodes.
+        assert_eq!(
+            spec.process_count(),
+            1 + crate::collectives::spread_tree_nodes(4, 2)
+                + 4
+                + crate::collectives::allreduce_tree_nodes(4, 2)
+                + crate::collectives::spread_tree_nodes(4, 2)
+                + 1
+        );
+        let results = spec.run().unwrap();
+        assert_eq!(results.len(), 1);
+        // Every lane received the same all-reduced total (8*100 samples),
+        // and the gather delivered all 4 copies to the collector: the
+        // collected iteration sum is 4x the workload total.
+        assert_eq!(results[0].log_prop("iterationSum"), Some(Value::Int(4 * 8 * 100)));
+    }
+
+    #[test]
+    fn allreduce_example_file_parses_and_runs() {
+        crate::workloads::register_all();
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/allreduce_pi.gpp");
+        let spec = parse_network(&std::fs::read_to_string(path).unwrap()).unwrap();
+        let results = spec.run().unwrap();
+        assert_eq!(results.len(), 1);
+        // 4 lanes each deliver the same all-reduced total of the
+        // 8x2000-sample workload (see the comment block in the file).
+        assert_eq!(
+            results[0].log_prop("iterationSum"),
+            Some(Value::Int(4 * 8 * 2000))
+        );
     }
 
     #[test]

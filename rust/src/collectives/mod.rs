@@ -1,0 +1,659 @@
+//! Collective group-communication patterns: `Broadcast`, `Scatter`,
+//! `Gather` and `AllReduce` as tree-structured (log-depth) compositions
+//! of the paper's flat connector processes (§4.5).
+//!
+//! The paper's spreaders/reducers are flat 1-to-N / N-to-1 connectors;
+//! at large N the single connector process serialises all N channel
+//! operations (and, for `AllReduce`, all N combine calls). The builders
+//! here arrange the *same* connector processes into trees with at most
+//! `fanout` children per node, so the connector work is spread over
+//! `O(N)` processes of depth `O(log_fanout N)` — the shape every HPC
+//! collective library uses (cf. "Group Communication Patterns for HPC
+//! in Scala", PAPERS.md).
+//!
+//! All channels are created through [`RuntimeConfig::channel`], so a
+//! tree runs unmodified over rendezvous, buffered, loopback-TCP `Net`
+//! or multiplexed `NetMux` edges, and redirects onto the deterministic
+//! sim transport under [`crate::csp::SimNet::build_under`].
+//!
+//! Terminator-semantics contract (CSPm Definition 4, `Spread_End`):
+//! every spreader node forwards the *real* `UniversalTerminator` (the
+//! one carrying absorbed logs) to exactly one child and fresh
+//! `Terminator::new()` to the rest; every reducer node absorbs exactly
+//! one terminator per input into its merged terminator. Composing such
+//! nodes keeps the invariant for the whole tree: a broadcast tree
+//! delivers exactly one payload-carrying terminator across all leaves,
+//! and a gather tree's root terminator has absorbed each source's logs
+//! exactly once.
+
+use crate::csp::channel::{In, Out};
+use crate::csp::config::RuntimeConfig;
+use crate::csp::process::CSProcess;
+use crate::data::details::LocalDetails;
+use crate::data::message::Message;
+use crate::processes::{CombineNto1, ListFanOne, OneFanList, OneSeqCastList};
+
+/// The fold a reduce/all-reduce applies: `CombineNto1`'s accumulator
+/// class plus its method-handle combine op (paper §6.5).
+///
+/// Contract for tree use: the combine method must be **associative**
+/// and must accept as aux both the leaf object class *and* the
+/// accumulator class itself, because internal tree nodes fold the
+/// partial accumulators produced by the level below.
+#[derive(Clone, Debug)]
+pub struct AllReduceOp {
+    /// Accumulator object (class + init) instantiated per combine node.
+    pub local: LocalDetails,
+    /// Method on the accumulator called with each input object as aux.
+    pub combine_method: String,
+    /// Optional method applied once on the root accumulator only.
+    pub finalise_method: Option<String>,
+}
+
+impl AllReduceOp {
+    pub fn new(local: LocalDetails, combine_method: &str) -> Self {
+        Self {
+            local,
+            combine_method: combine_method.to_string(),
+            finalise_method: None,
+        }
+    }
+
+    pub fn with_finalise(mut self, method: &str) -> Self {
+        self.finalise_method = Some(method.to_string());
+        self
+    }
+}
+
+/// Sizes of the child subtrees of one tree node distributing `n` leaves
+/// over at most `fanout` children, as evenly as possible.
+/// (`pub(crate)` so [`crate::verify::extract`] can mirror the exact
+/// topology the builders produce.)
+pub(crate) fn child_sizes(n: usize, fanout: usize) -> Vec<usize> {
+    let k = fanout.max(2).min(n);
+    let base = n / k;
+    let extra = n % k;
+    (0..k).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Sizes of the groups one reduce-tree *level* folds: `n` streams in
+/// `ceil(n / fanout)` groups of at most `fanout`, as evenly as
+/// possible. Unlike [`child_sizes`] (which always produces `fanout`
+/// children), the group count shrinks every level, so the level loop
+/// is guaranteed to make progress down to a single stream.
+pub(crate) fn level_sizes(n: usize, fanout: usize) -> Vec<usize> {
+    let fanout = fanout.max(2);
+    let groups = n.div_ceil(fanout).max(1);
+    let base = n / groups;
+    let extra = n % groups;
+    (0..groups).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Which spreader a broadcast/scatter tree is built from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SpreadKind {
+    /// Copy to every child (`OneSeqCastList`) — broadcast.
+    Cast,
+    /// Round-robin over children (`OneFanList`) — scatter.
+    Fan,
+}
+
+fn spread_node(
+    kind: SpreadKind,
+    input: In<Message>,
+    outputs: Vec<Out<Message>>,
+) -> Box<dyn CSProcess> {
+    match kind {
+        SpreadKind::Cast => Box::new(OneSeqCastList::new(input, outputs)),
+        SpreadKind::Fan => Box::new(OneFanList::new(input, outputs)),
+    }
+}
+
+fn spread_tree(
+    cfg: &RuntimeConfig,
+    name: &str,
+    kind: SpreadKind,
+    input: In<Message>,
+    mut outputs: Vec<Out<Message>>,
+    fanout: usize,
+    next_id: &mut usize,
+    procs: &mut Vec<Box<dyn CSProcess>>,
+) {
+    let n = outputs.len();
+    let fanout = fanout.max(2);
+    if n <= fanout {
+        procs.push(spread_node(kind, input, outputs));
+        return;
+    }
+    // One child edge per subtree of more than one leaf; single-leaf
+    // subtrees wire the leaf channel directly (no relay process).
+    let mut child_outs: Vec<Out<Message>> = Vec::new();
+    let mut recurse: Vec<(In<Message>, Vec<Out<Message>>)> = Vec::new();
+    for size in child_sizes(n, fanout) {
+        let chunk: Vec<Out<Message>> = outputs.drain(..size).collect();
+        if chunk.len() == 1 {
+            child_outs.extend(chunk);
+        } else {
+            let id = *next_id;
+            *next_id += 1;
+            let (tx, rx) = cfg.channel::<Message>(&format!("{name}.t{id}"));
+            child_outs.push(tx);
+            recurse.push((rx, chunk));
+        }
+    }
+    procs.push(spread_node(kind, input, child_outs));
+    for (rx, chunk) in recurse {
+        spread_tree(cfg, name, kind, rx, chunk, fanout, next_id, procs);
+    }
+}
+
+/// Broadcast: copy every object on `input` to all `outputs` through a
+/// tree of `OneSeqCastList` nodes with at most `fanout` children each.
+/// Each leaf receives a deep copy of every object (all-objects-unique,
+/// §4.5.1); exactly one leaf receives the payload-carrying terminator.
+pub fn broadcast_tree(
+    cfg: &RuntimeConfig,
+    name: &str,
+    input: In<Message>,
+    outputs: Vec<Out<Message>>,
+    fanout: usize,
+) -> Vec<Box<dyn CSProcess>> {
+    assert!(!outputs.is_empty(), "broadcast needs at least one output");
+    let mut procs = Vec::new();
+    let mut id = 0;
+    spread_tree(cfg, name, SpreadKind::Cast, input, outputs, fanout, &mut id, &mut procs);
+    procs
+}
+
+/// Scatter: distribute the objects on `input` over `outputs` through a
+/// tree of round-robin `OneFanList` nodes. Each level round-robins over
+/// its children, so the distribution is balanced when the leaf count is
+/// a power of `fanout` (and approximately balanced otherwise — unlike
+/// the flat connector, the leaf *assignment* is not globally circular).
+pub fn scatter_tree(
+    cfg: &RuntimeConfig,
+    name: &str,
+    input: In<Message>,
+    outputs: Vec<Out<Message>>,
+    fanout: usize,
+) -> Vec<Box<dyn CSProcess>> {
+    assert!(!outputs.is_empty(), "scatter needs at least one output");
+    let mut procs = Vec::new();
+    let mut id = 0;
+    spread_tree(cfg, name, SpreadKind::Fan, input, outputs, fanout, &mut id, &mut procs);
+    procs
+}
+
+fn gather_subtree(
+    cfg: &RuntimeConfig,
+    name: &str,
+    mut inputs: Vec<In<Message>>,
+    output: Out<Message>,
+    fanout: usize,
+    next_id: &mut usize,
+    procs: &mut Vec<Box<dyn CSProcess>>,
+) {
+    let n = inputs.len();
+    let fanout = fanout.max(2);
+    if n <= fanout {
+        procs.push(Box::new(ListFanOne::new(inputs, output)));
+        return;
+    }
+    let mut child_ins: Vec<In<Message>> = Vec::new();
+    for size in child_sizes(n, fanout) {
+        let chunk: Vec<In<Message>> = inputs.drain(..size).collect();
+        if chunk.len() == 1 {
+            child_ins.extend(chunk);
+        } else {
+            let id = *next_id;
+            *next_id += 1;
+            let (tx, rx) = cfg.channel::<Message>(&format!("{name}.t{id}"));
+            gather_subtree(cfg, name, chunk, tx, fanout, next_id, procs);
+            child_ins.push(rx);
+        }
+    }
+    procs.push(Box::new(ListFanOne::new(child_ins, output)));
+}
+
+/// Gather: merge all `inputs` onto `output` through a tree of fairly
+/// alternating `ListFanOne` nodes with at most `fanout` inputs each.
+/// The root's merged terminator has absorbed every source terminator
+/// exactly once.
+pub fn gather_tree(
+    cfg: &RuntimeConfig,
+    name: &str,
+    inputs: Vec<In<Message>>,
+    output: Out<Message>,
+    fanout: usize,
+) -> Vec<Box<dyn CSProcess>> {
+    assert!(!inputs.is_empty(), "gather needs at least one input");
+    let mut procs = Vec::new();
+    let mut id = 0;
+    gather_subtree(cfg, name, inputs, output, fanout, &mut id, &mut procs);
+    procs
+}
+
+/// Reduce-tree half of [`allreduce_tree`]: fold every object arriving
+/// on `inputs` down to a single accumulator object (plus the merged
+/// terminator) on the returned channel end.
+///
+/// Each tree node is a `ListFanOne` merge feeding a `CombineNto1` fold;
+/// levels repeat until one stream remains. Single-stream chunks pass
+/// through a level unfolded (correct because the combine op is
+/// associative and accepts both leaf and accumulator objects).
+fn reduce_tree(
+    cfg: &RuntimeConfig,
+    name: &str,
+    inputs: Vec<In<Message>>,
+    fanout: usize,
+    op: &AllReduceOp,
+    procs: &mut Vec<Box<dyn CSProcess>>,
+) -> In<Message> {
+    let fanout = fanout.max(2);
+    if inputs.len() == 1 {
+        // Width-1 degenerate tree: still fold the stream to one object.
+        let mut it = inputs;
+        let input = it.pop().expect("len checked");
+        let (tx, rx) = cfg.channel::<Message>(&format!("{name}.root"));
+        let mut comb = CombineNto1::new(input, tx, op.local.clone(), &op.combine_method);
+        if let Some(fin) = &op.finalise_method {
+            comb = comb.with_finalise(fin);
+        }
+        procs.push(Box::new(comb));
+        return rx;
+    }
+    let mut level = inputs;
+    let mut l = 0usize;
+    while level.len() > 1 {
+        let sizes = level_sizes(level.len(), fanout);
+        let is_root_level = sizes.len() == 1;
+        let mut next_level: Vec<In<Message>> = Vec::with_capacity(sizes.len());
+        for (gi, size) in sizes.into_iter().enumerate() {
+            let mut chunk: Vec<In<Message>> = level.drain(..size).collect();
+            if chunk.len() == 1 {
+                next_level.push(chunk.pop().expect("len checked"));
+                continue;
+            }
+            let (mtx, mrx) = cfg.channel::<Message>(&format!("{name}.mrg{l}.{gi}"));
+            procs.push(Box::new(ListFanOne::new(chunk, mtx)));
+            let (ptx, prx) = cfg.channel::<Message>(&format!("{name}.acc{l}.{gi}"));
+            let mut comb = CombineNto1::new(mrx, ptx, op.local.clone(), &op.combine_method);
+            if is_root_level {
+                if let Some(fin) = &op.finalise_method {
+                    comb = comb.with_finalise(fin);
+                }
+            }
+            procs.push(Box::new(comb));
+            next_level.push(prx);
+        }
+        level = next_level;
+        l += 1;
+    }
+    level.pop().expect("reduced to one stream")
+}
+
+/// AllReduce: fold every object on the `inputs` through a reduce tree
+/// (`ListFanOne` merges + `CombineNto1` folds, at most `fanout` streams
+/// per node), then deliver deep copies of the single folded result to
+/// every output through a [`broadcast_tree`] — the classic
+/// reduce-then-broadcast composition at `O(log_fanout N)` depth.
+///
+/// The combine method must satisfy the [`AllReduceOp`] contract
+/// (associative; accepts leaf and accumulator aux). `finalise` runs
+/// once, on the root accumulator, before the broadcast.
+pub fn allreduce_tree(
+    cfg: &RuntimeConfig,
+    name: &str,
+    inputs: Vec<In<Message>>,
+    outputs: Vec<Out<Message>>,
+    fanout: usize,
+    op: &AllReduceOp,
+) -> Vec<Box<dyn CSProcess>> {
+    assert!(!inputs.is_empty(), "allreduce needs at least one input");
+    assert!(!outputs.is_empty(), "allreduce needs at least one output");
+    let mut procs = Vec::new();
+    let root = reduce_tree(cfg, &format!("{name}.red"), inputs, fanout, op, &mut procs);
+    let mut id = 0;
+    spread_tree(
+        cfg,
+        &format!("{name}.bc"),
+        SpreadKind::Cast,
+        root,
+        outputs,
+        fanout,
+        &mut id,
+        &mut procs,
+    );
+    procs
+}
+
+/// The flat baseline the trees are benchmarked against: one
+/// `ListFanOne` over all N inputs, one `CombineNto1`, one
+/// `OneSeqCastList` over all N outputs — correct at any N, but the
+/// single combine process serialises all N·k folds.
+pub fn allreduce_flat(
+    cfg: &RuntimeConfig,
+    name: &str,
+    inputs: Vec<In<Message>>,
+    outputs: Vec<Out<Message>>,
+    op: &AllReduceOp,
+) -> Vec<Box<dyn CSProcess>> {
+    assert!(!inputs.is_empty(), "allreduce needs at least one input");
+    assert!(!outputs.is_empty(), "allreduce needs at least one output");
+    let (mtx, mrx) = cfg.channel::<Message>(&format!("{name}.mrg"));
+    let (ptx, prx) = cfg.channel::<Message>(&format!("{name}.acc"));
+    let mut comb = CombineNto1::new(mrx, ptx, op.local.clone(), &op.combine_method);
+    if let Some(fin) = &op.finalise_method {
+        comb = comb.with_finalise(fin);
+    }
+    vec![
+        Box::new(ListFanOne::new(inputs, mtx)),
+        Box::new(comb),
+        Box::new(OneSeqCastList::new(prx, outputs)),
+    ]
+}
+
+/// Number of spreader (or `ListFanOne` gather) processes a broadcast /
+/// scatter / gather tree over `n` leaves at the given fan-out builds.
+pub fn spread_tree_nodes(n: usize, fanout: usize) -> usize {
+    let fanout = fanout.max(2);
+    if n <= fanout {
+        return 1;
+    }
+    1 + child_sizes(n, fanout)
+        .into_iter()
+        .filter(|s| *s > 1)
+        .map(|s| spread_tree_nodes(s, fanout))
+        .sum::<usize>()
+}
+
+/// Depth (levels of processes) of a broadcast/scatter/gather tree.
+pub fn spread_tree_depth(n: usize, fanout: usize) -> usize {
+    let fanout = fanout.max(2);
+    if n <= fanout {
+        return 1;
+    }
+    1 + child_sizes(n, fanout)
+        .into_iter()
+        .filter(|s| *s > 1)
+        .map(|s| spread_tree_depth(s, fanout))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Number of processes [`allreduce_tree`] builds for `width` streams.
+pub fn allreduce_tree_nodes(width: usize, fanout: usize) -> usize {
+    let fanout = fanout.max(2);
+    let mut count = 0usize;
+    if width == 1 {
+        count = 1;
+    } else {
+        let mut n = width;
+        while n > 1 {
+            let sizes = level_sizes(n, fanout);
+            count += sizes.iter().filter(|s| **s > 1).count() * 2;
+            n = sizes.len();
+        }
+    }
+    count + spread_tree_nodes(width, fanout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::process::{run_parallel_named, ProcessFn};
+    use crate::csp::RuntimeConfig;
+    use crate::data::message::Terminator;
+    use crate::data::object::{downcast_ref, Aux, Params, ReturnCode, Value};
+
+    #[derive(Clone, Debug, Default)]
+    struct Num {
+        v: i64,
+    }
+
+    impl Num {
+        fn init(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+            self.v = 0;
+            Ok(ReturnCode::CompletedOk)
+        }
+
+        /// Adds either a leaf `Num` or another accumulator — the
+        /// [`AllReduceOp`] dual-class contract (trivial here: one class
+        /// plays both roles).
+        fn add(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+            let other = aux.expect("add needs an aux object");
+            self.v += downcast_ref::<Num>(other, "Num.add")?.v;
+            Ok(ReturnCode::CompletedOk)
+        }
+    }
+
+    crate::gpp_data_class!(Num, "collectiveTestNum", {
+        "init" => init,
+        "add" => add,
+    }, props { "v" => |s| Value::Int(s.v) });
+
+    impl crate::util::codec::Wire for Num {
+        fn encode(&self, out: &mut Vec<u8>) {
+            self.v.encode(out);
+        }
+        fn decode(input: &mut &[u8]) -> Result<Self> {
+            Ok(Num { v: i64::decode(input)? })
+        }
+    }
+
+    use crate::csp::error::Result;
+    use crate::data::message::Message;
+    use crate::util::codec::Wire;
+
+    fn setup() {
+        crate::data::object::register_class("collectiveTestNum", || Box::new(Num::default()));
+        crate::data::wire::register_wire_class::<Num>("collectiveTestNum");
+    }
+
+    fn op() -> AllReduceOp {
+        AllReduceOp::new(LocalDetails::new("collectiveTestNum").init("init", Params::empty()), "add")
+    }
+
+    fn num(v: i64) -> Message {
+        Message::Data(Box::new(Num { v }))
+    }
+
+    #[test]
+    fn node_counts_match_built_trees() {
+        let cfg = RuntimeConfig::buffered(4);
+        for (n, f) in [(1, 2), (2, 2), (3, 2), (4, 2), (7, 2), (16, 4), (64, 8)] {
+            let (_tx, rx) = cfg.channel::<Message>("cnt.in");
+            let (outs, _ins) = cfg.channel_list::<Message>(n, "cnt.out");
+            let procs = broadcast_tree(&cfg, "cnt", rx, outs, f);
+            assert_eq!(procs.len(), spread_tree_nodes(n, f), "broadcast n={n} f={f}");
+
+            let (txs, ins) = cfg.channel_list::<Message>(n, "cnt.gin");
+            let (gout, _grx) = cfg.channel::<Message>("cnt.gout");
+            let procs = gather_tree(&cfg, "cnt", ins, gout, f);
+            assert_eq!(procs.len(), spread_tree_nodes(n, f), "gather n={n} f={f}");
+            drop(txs);
+
+            let (_atxs, ains) = cfg.channel_list::<Message>(n, "cnt.ain");
+            let (aouts, _arxs) = cfg.channel_list::<Message>(n, "cnt.aout");
+            let procs = allreduce_tree(&cfg, "cnt", ains, aouts, f, &op());
+            assert_eq!(procs.len(), allreduce_tree_nodes(n, f), "allreduce n={n} f={f}");
+        }
+        assert!(spread_tree_depth(64, 2) <= 6);
+        assert_eq!(spread_tree_depth(4, 4), 1);
+    }
+
+    #[test]
+    fn level_sizes_always_shrink_to_one_group() {
+        for n in 1usize..=70 {
+            for f in 2usize..=8 {
+                let sizes = level_sizes(n, f);
+                assert_eq!(sizes.iter().sum::<usize>(), n, "n={n} f={f}");
+                assert!(sizes.iter().all(|s| *s <= f), "n={n} f={f} {sizes:?}");
+                if n > 1 {
+                    assert!(sizes.len() < n, "level must make progress: n={n} f={f}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_tree_copies_everything_to_every_leaf() {
+        for n in [1usize, 2, 5, 9] {
+            let cfg = RuntimeConfig::buffered(16);
+            let (tx, rx) = cfg.channel::<Message>("bc.in");
+            let (outs, ins) = cfg.channel_list::<Message>(n, "bc.out");
+            let mut procs = broadcast_tree(&cfg, "bc", rx, outs, 2);
+            procs.push(ProcessFn::boxed("feed", move || {
+                tx.write(num(3))?;
+                tx.write(num(4))?;
+                tx.write(Message::Terminator(Terminator::new()))
+            }));
+            let sums: Vec<std::sync::Arc<std::sync::Mutex<i64>>> =
+                (0..n).map(|_| Default::default()).collect();
+            for (i, inp) in ins.into_iter().enumerate() {
+                let sum = sums[i].clone();
+                procs.push(ProcessFn::boxed("drain", move || {
+                    loop {
+                        match inp.read()? {
+                            Message::Data(obj) => {
+                                *sum.lock().unwrap() +=
+                                    downcast_ref::<Num>(obj.as_ref(), "t")?.v;
+                            }
+                            Message::Terminator(_) => return Ok(()),
+                        }
+                    }
+                }));
+            }
+            run_parallel_named("bc", procs).unwrap();
+            for s in sums {
+                assert_eq!(*s.lock().unwrap(), 7, "every leaf sees both objects (n={n})");
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_tree_partitions_the_stream() {
+        let n = 6usize;
+        let total = 24i64;
+        let cfg = RuntimeConfig::buffered(16);
+        let (tx, rx) = cfg.channel::<Message>("sc.in");
+        let (outs, ins) = cfg.channel_list::<Message>(n, "sc.out");
+        let mut procs = scatter_tree(&cfg, "sc", rx, outs, 2);
+        procs.push(ProcessFn::boxed("feed", move || {
+            for v in 1..=total {
+                tx.write(num(v))?;
+            }
+            tx.write(Message::Terminator(Terminator::new()))
+        }));
+        let got: std::sync::Arc<std::sync::Mutex<Vec<i64>>> = Default::default();
+        for inp in ins {
+            let got = got.clone();
+            procs.push(ProcessFn::boxed("drain", move || {
+                loop {
+                    match inp.read()? {
+                        Message::Data(obj) => {
+                            got.lock().unwrap().push(downcast_ref::<Num>(obj.as_ref(), "t")?.v);
+                        }
+                        Message::Terminator(_) => return Ok(()),
+                    }
+                }
+            }));
+        }
+        run_parallel_named("sc", procs).unwrap();
+        let mut vals = got.lock().unwrap().clone();
+        vals.sort_unstable();
+        assert_eq!(vals, (1..=total).collect::<Vec<_>>(), "exactly-once partition");
+    }
+
+    #[test]
+    fn gather_tree_merges_every_source_once() {
+        let n = 7usize;
+        let cfg = RuntimeConfig::buffered(16);
+        let (txs, ins) = cfg.channel_list::<Message>(n, "ga.in");
+        let (gtx, grx) = cfg.channel::<Message>("ga.out");
+        let mut procs = gather_tree(&cfg, "ga", ins, gtx, 2);
+        for (i, tx) in txs.into_iter().enumerate() {
+            procs.push(ProcessFn::boxed("feed", move || {
+                tx.write(num(i as i64 + 1))?;
+                tx.write(Message::Terminator(Terminator::new()))
+            }));
+        }
+        let total: std::sync::Arc<std::sync::Mutex<(i64, usize)>> = Default::default();
+        {
+            let total = total.clone();
+            procs.push(ProcessFn::boxed("drain", move || {
+                loop {
+                    match grx.read()? {
+                        Message::Data(obj) => {
+                            let mut g = total.lock().unwrap();
+                            g.0 += downcast_ref::<Num>(obj.as_ref(), "t")?.v;
+                            g.1 += 1;
+                        }
+                        Message::Terminator(_) => return Ok(()),
+                    }
+                }
+            }));
+        }
+        run_parallel_named("ga", procs).unwrap();
+        let (sum, count) = *total.lock().unwrap();
+        assert_eq!(count, n, "each source object forwarded exactly once");
+        assert_eq!(sum, (1..=n as i64).sum::<i64>());
+    }
+
+    #[test]
+    fn allreduce_agrees_with_flat_baseline_on_every_transport() {
+        setup();
+        for cfg in [
+            RuntimeConfig::rendezvous(),
+            RuntimeConfig::buffered(8),
+            RuntimeConfig::net_mux(),
+        ] {
+            for (n, f, tree) in [
+                (1, 2, true),
+                (2, 2, true),
+                (4, 2, true),
+                (9, 3, true),
+                (4, 2, false),
+            ] {
+                let (txs, ins) = cfg.channel_list::<Message>(n, "ar.in");
+                let (outs, rxs) = cfg.channel_list::<Message>(n, "ar.out");
+                let mut procs = if tree {
+                    allreduce_tree(&cfg, "ar", ins, outs, f, &op())
+                } else {
+                    allreduce_flat(&cfg, "ar", ins, outs, &op())
+                };
+                for (i, tx) in txs.into_iter().enumerate() {
+                    procs.push(ProcessFn::boxed("feed", move || {
+                        tx.write(num(i as i64 + 1))?;
+                        tx.write(num(10))?;
+                        tx.write(Message::Terminator(Terminator::new()))
+                    }));
+                }
+                let expect: i64 = (1..=n as i64).sum::<i64>() + 10 * n as i64;
+                let sums: Vec<std::sync::Arc<std::sync::Mutex<(i64, usize)>>> =
+                    (0..n).map(|_| Default::default()).collect();
+                for (i, rx) in rxs.into_iter().enumerate() {
+                    let sum = sums[i].clone();
+                    procs.push(ProcessFn::boxed("drain", move || {
+                        loop {
+                            match rx.read()? {
+                                Message::Data(obj) => {
+                                    let mut g = sum.lock().unwrap();
+                                    g.0 += downcast_ref::<Num>(obj.as_ref(), "t")?.v;
+                                    g.1 += 1;
+                                }
+                                Message::Terminator(_) => return Ok(()),
+                            }
+                        }
+                    }));
+                }
+                run_parallel_named("ar", procs).unwrap();
+                for s in &sums {
+                    let (sum, count) = *s.lock().unwrap();
+                    assert_eq!(count, 1, "one folded object per leaf (n={n} tree={tree})");
+                    assert_eq!(sum, expect, "n={n} f={f} tree={tree}");
+                }
+            }
+        }
+    }
+}

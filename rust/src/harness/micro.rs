@@ -24,6 +24,7 @@ use crate::csp::channel::{In, Out};
 use crate::data::object::{Aux, DataObject, MethodHandle, Params, ReturnCode, Value};
 use crate::harness::BenchJson;
 use crate::net::NetOptions;
+use crate::util::codec::Wire;
 
 /// Drive `n_msgs` u64 values through a 4-edge relay pipeline (source →
 /// 3 relays → sink); returns elapsed seconds. The relays use batched
@@ -275,6 +276,185 @@ pub fn record_net_mux_rows(
     speedup
 }
 
+/// The all-reduce bench payload: a fixed-length `f64` vector folded
+/// element-wise, with `reps` smoothing passes per fold so each
+/// `CombineNto1` call costs O(`payload` × `reps`) arithmetic — enough
+/// that the fold (the work the tree parallelises across level-0
+/// combines), not channel latency, dominates the run.
+#[derive(Clone, Debug, Default)]
+pub struct ReduceBlob {
+    pub v: Vec<f64>,
+    /// Leaf objects folded into this one (leaves count as 1).
+    pub folds: i64,
+    /// Smoothing passes applied per fold (set on the accumulator by
+    /// `init`; ignored on leaf blobs).
+    pub reps: i64,
+}
+
+impl ReduceBlob {
+    fn init(&mut self, p: &Params, _a: Aux) -> crate::csp::error::Result<ReturnCode> {
+        self.v = vec![0.0; p.int(0)? as usize];
+        self.folds = 0;
+        self.reps = p.int(1)?.max(1);
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// The [`crate::collectives::AllReduceOp`] fold: element-wise sum
+    /// (associative; leaf and accumulator blobs share the class) plus
+    /// `reps` smoothing passes standing in for real per-fold compute.
+    fn fold(&mut self, _p: &Params, a: Aux) -> crate::csp::error::Result<ReturnCode> {
+        let other = crate::data::object::downcast_mut::<ReduceBlob>(
+            a.expect("fold needs an input blob"),
+            "reduceBlob.fold",
+        )?;
+        for (x, y) in self.v.iter_mut().zip(&other.v) {
+            *x += *y;
+        }
+        for _ in 1..self.reps {
+            for x in self.v.iter_mut() {
+                *x = x.mul_add(1.000_000_1, 1e-12);
+            }
+        }
+        self.folds += other.folds.max(1);
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+crate::gpp_data_class!(ReduceBlob, "reduceBlob", {
+    "init" => init,
+    "fold" => fold,
+}, props {
+    "folds" => |s| Value::Int(s.folds),
+});
+
+impl crate::util::codec::Wire for ReduceBlob {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.v.encode(out);
+        self.folds.encode(out);
+        self.reps.encode(out);
+    }
+
+    fn decode(input: &mut &[u8]) -> crate::csp::error::Result<Self> {
+        Ok(Self {
+            v: Vec::<f64>::decode(input)?,
+            folds: i64::decode(input)?,
+            reps: i64::decode(input)?,
+        })
+    }
+}
+
+/// Register `reduceBlob` for `CombineNto1::instantiate` and for wire
+/// transport over net/mux edges. Idempotent.
+pub fn register_reduce_blob() {
+    crate::data::object::register_class("reduceBlob", || Box::new(ReduceBlob::default()));
+    crate::data::wire::register_wire_class::<ReduceBlob>("reduceBlob");
+}
+
+/// Drive one all-reduce over `width` lanes — `objs_per_leaf` payload
+/// blobs per lane, folded flat or through a `fanout`-ary tree, result
+/// broadcast back to every lane — and return elapsed seconds. Channel
+/// setup and teardown are timed (the tree stands up more channels;
+/// that cost is part of what's being compared). `net` selects loopback
+/// multiplexed net edges instead of in-memory buffered channels.
+pub fn allreduce_run(
+    width: usize,
+    objs_per_leaf: usize,
+    payload: usize,
+    reps: i64,
+    fanout: usize,
+    tree: bool,
+    net: bool,
+) -> f64 {
+    use crate::collectives::{allreduce_flat, allreduce_tree, AllReduceOp};
+    use crate::csp::process::{run_parallel_named, ProcessFn};
+    use crate::csp::RuntimeConfig;
+    use crate::data::details::LocalDetails;
+    use crate::data::message::{Message, Terminator};
+
+    register_reduce_blob();
+    let cfg = if net {
+        RuntimeConfig::net_mux()
+    } else {
+        RuntimeConfig::buffered(16)
+    };
+    let op = AllReduceOp::new(
+        LocalDetails::new("reduceBlob").init(
+            "init",
+            Params::of(vec![Value::Int(payload as i64), Value::Int(reps)]),
+        ),
+        "fold",
+    );
+
+    let t0 = std::time::Instant::now();
+    let (txs, ins) = cfg.channel_list::<Message>(width, "bench.ar.in");
+    let (outs, rxs) = cfg.channel_list::<Message>(width, "bench.ar.out");
+    let mut procs = if tree {
+        allreduce_tree(&cfg, "bench.ar", ins, outs, fanout, &op)
+    } else {
+        allreduce_flat(&cfg, "bench.ar", ins, outs, &op)
+    };
+    for tx in txs {
+        procs.push(ProcessFn::boxed("feed", move || {
+            for j in 0..objs_per_leaf {
+                let blob = ReduceBlob {
+                    v: vec![j as f64 + 1.0; payload],
+                    folds: 1,
+                    reps: 1,
+                };
+                tx.write(Message::Data(Box::new(blob)))?;
+            }
+            tx.write(Message::Terminator(Terminator::new()))
+        }));
+    }
+    let folds: Vec<std::sync::Arc<std::sync::atomic::AtomicI64>> =
+        (0..width).map(|_| Default::default()).collect();
+    for (lane, rx) in rxs.into_iter().enumerate() {
+        let seen = folds[lane].clone();
+        procs.push(ProcessFn::boxed("drain", move || loop {
+            match rx.read()? {
+                Message::Data(obj) => {
+                    if let Some(Value::Int(f)) = obj.log_prop("folds") {
+                        seen.fetch_add(f, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+                Message::Terminator(_) => return Ok(()),
+            }
+        }));
+    }
+    run_parallel_named("bench.allreduce", procs).expect("allreduce bench run");
+    let secs = t0.elapsed().as_secs_f64();
+    let expect = (width * objs_per_leaf) as i64;
+    for (lane, f) in folds.iter().enumerate() {
+        let got = f.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(got, expect, "lane {lane}: every leaf blob folded exactly once");
+    }
+    secs
+}
+
+/// Record one flat-vs-tree all-reduce comparison at a given lane count
+/// and transport under the canonical row names. Returns the
+/// tree-over-flat throughput ratio — the `bench-smoke` collective gate
+/// value at `width == 64`, `net == true`.
+pub fn record_collective_rows(
+    json: &mut BenchJson,
+    width: usize,
+    fanout: usize,
+    flat_secs: f64,
+    tree_secs: f64,
+    net: bool,
+) -> f64 {
+    let suffix = if net { "net" } else { "mem" };
+    let ratio = flat_secs / tree_secs.max(1e-12);
+    json.add(&format!("allreduce_flat_n{width}_{suffix}"), flat_secs);
+    json.add(&format!("allreduce_tree_n{width}_{suffix}"), tree_secs);
+    json.add_derived(&format!("allreduce_fanout_n{width}_{suffix}"), fanout as f64);
+    json.add_derived(
+        &format!("allreduce_tree_over_flat_n{width}_{suffix}"),
+        ratio,
+    );
+    ratio
+}
+
 /// Record the dispatch comparison under the canonical row names (both
 /// `gpp bench` and the micro_dispatch bench go through here). Returns
 /// the interned-over-string speedup.
@@ -395,5 +575,30 @@ mod tests {
         let mut b = DispatchProbe::default();
         b.call("accumulate", &p, None).unwrap();
         assert_eq!(a.acc, b.acc);
+    }
+
+    #[test]
+    fn allreduce_driver_runs_flat_and_tree() {
+        // Tiny sizes: this checks plumbing (and the fold-count
+        // assertion inside the driver), not throughput.
+        assert!(allreduce_run(4, 3, 8, 2, 2, false, false) > 0.0);
+        assert!(allreduce_run(4, 3, 8, 2, 2, true, false) > 0.0);
+        assert!(allreduce_run(2, 2, 8, 1, 2, true, true) > 0.0);
+    }
+
+    #[test]
+    fn collective_rows_use_canonical_names() {
+        let mut json = BenchJson::new("t");
+        let r = record_collective_rows(&mut json, 16, 4, 2.0, 1.0, true);
+        assert!((r - 2.0).abs() < 1e-9);
+        let s = json.render();
+        for row in [
+            "allreduce_flat_n16_net",
+            "allreduce_tree_n16_net",
+            "allreduce_fanout_n16_net",
+            "allreduce_tree_over_flat_n16_net",
+        ] {
+            assert!(s.contains(row), "missing row {row} in {s}");
+        }
     }
 }

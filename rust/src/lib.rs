@@ -42,6 +42,7 @@ pub mod data;
 pub mod processes;
 pub mod functionals;
 pub mod patterns;
+pub mod collectives;
 pub mod engines;
 pub mod builder;
 pub mod logging;

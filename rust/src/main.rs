@@ -177,11 +177,13 @@ COMMANDS
   calibrate          measure per-item workload costs on this host
   bench              hot-path micro benches; writes BENCH_csp.json, BENCH_net.json and
                      BENCH_dispatch.json at the repo root
-                     [--msgs N --capacity C --smoke --min-speedup X --min-mux-ratio Y]
+                     [--msgs N --capacity C --fanout F --smoke --min-speedup X
+                      --min-mux-ratio Y --min-collective-ratio Z]
                      (--smoke fails unless windowed net throughput >= X times the
                       per-message-ACK baseline, mux fan-in >= Y times per-channel
-                      sockets at 16 channels with O(peers) pump threads, and every
-                      BENCH file is well-formed)
+                      sockets at 16 channels with O(peers) pump threads, tree
+                      all-reduce >= Z times flat at 64 lanes over loopback net,
+                      and every BENCH file is well-formed)
   logdemo            logged concordance run + bottleneck report (paper Sec 8)
   stats              run a small pi workload with the metrics registry on and
                      print the MetricsSnapshot JSON [--workers N --instances I]
@@ -605,18 +607,53 @@ fn cmd_verify(args: &Args) -> i32 {
     }
     if which == "extracted" || which == "all" {
         use gpp::verify::extract::{
-            extract_engine, extract_farm, extract_gop, extract_pog, new_interner,
-            traces_equivalent,
+            extract_chain, extract_engine, extract_farm, extract_gop, extract_pog,
+            new_interner, traces_equivalent, ChainStage,
         };
         println!("== extracted models (checked on the constructed networks) ==");
         let shared = new_interner();
         let gop = extract_gop(shared.clone(), 2, 2, 2);
         let pog = extract_pog(shared.clone(), 2, 2, 2);
+        // Collective-tree architectures (the allreduce_pi and
+        // broadcast/gather shapes) extract onto lane-list boundaries.
+        let allreduce_chain = match extract_chain(
+            new_interner(),
+            &[
+                ChainStage::ScatterTree { destinations: 4, fanout: 2 },
+                ChainStage::ListGroup { workers: 4 },
+                ChainStage::AllReduceTree { width: 4, fanout: 2 },
+                ChainStage::GatherTree { sources: 4, fanout: 2 },
+            ],
+            2,
+        ) {
+            Ok(mut m) => {
+                m.name = "AllReduceChain(width=4, fanout=2, objects=2)".into();
+                m
+            }
+            Err(e) => return fail(e),
+        };
+        let broadcast_chain = match extract_chain(
+            new_interner(),
+            &[
+                ChainStage::BroadcastTree { destinations: 3, fanout: 2 },
+                ChainStage::ListGroup { workers: 3 },
+                ChainStage::GatherTree { sources: 3, fanout: 2 },
+            ],
+            2,
+        ) {
+            Ok(mut m) => {
+                m.name = "BroadcastChain(destinations=3, fanout=2, objects=2)".into();
+                m
+            }
+            Err(e) => return fail(e),
+        };
         let models = [
             extract_farm(new_interner(), 4, 2),
             extract_gop(new_interner(), 2, 3, 2),
             extract_pog(new_interner(), 2, 3, 2),
             extract_engine(new_interner(), 4, 2, 2),
+            allreduce_chain,
+            broadcast_chain,
         ];
         for m in &models {
             match m.check() {
@@ -772,11 +809,15 @@ fn cmd_calibrate() -> i32 {
 /// 2.0) at `--capacity` (default 16, min 8 enforced for the gate); mux
 /// fan-in at 16 channels must reach `--min-mux-ratio` (default 1.0)
 /// times the per-channel-socket throughput with O(peers) pump threads;
-/// and every written file must be well-formed.
+/// tree all-reduce at 64 lanes over loopback net must reach
+/// `--min-collective-ratio` (default 1.0) times the flat baseline
+/// (collective rows `allreduce_{flat,tree}_n{4,16,64}_{mem,net}` land
+/// in `BENCH_net.json`); and every written file must be well-formed.
 fn cmd_bench(args: &Args) -> i32 {
     use gpp::harness::micro::{
-        dispatch_run, fan_in_run, net_edge_run, pipeline_run, record_csp_rows,
-        record_dispatch_rows, record_net_mux_rows, record_net_window_rows,
+        allreduce_run, dispatch_run, fan_in_run, net_edge_run, pipeline_run,
+        record_collective_rows, record_csp_rows, record_dispatch_rows, record_net_mux_rows,
+        record_net_window_rows,
     };
     use gpp::harness::{bench_json_looks_valid, BenchJson};
 
@@ -785,6 +826,7 @@ fn cmd_bench(args: &Args) -> i32 {
     let capacity = args.usize("capacity", 16).max(if smoke { 8 } else { 1 });
     let min_speedup = args.f64("min-speedup", 2.0);
     let min_mux_ratio = args.f64("min-mux-ratio", 1.0);
+    let min_collective_ratio = args.f64("min-collective-ratio", 1.0);
     let best3 = |f: &dyn Fn() -> f64| (0..3).map(|_| f()).fold(f64::INFINITY, f64::min);
     let mut written: Vec<std::path::PathBuf> = Vec::new();
 
@@ -820,7 +862,7 @@ fn cmd_bench(args: &Args) -> i32 {
     // (2) Wire layer: one loopback net edge, per-message ACK (window 1)
     // vs the credit window, plus the fan-in comparison — N per-channel
     // sockets vs one multiplexed connection at 1 / 16 / 256 channels.
-    let (net_speedup, mux_ratio_16, mux_threads_16) = {
+    let (net_speedup, mux_ratio_16, mux_threads_16, collective_ratio_64) = {
         let mut json = BenchJson::new("gpp bench: net credit window + mux");
         let (f0, s0, g0) = (
             m::NET_FRAMES_SENT.get(),
@@ -862,6 +904,29 @@ fn cmd_bench(args: &Args) -> i32 {
                 threads_16 = mux.pump_threads;
             }
         }
+        // Collectives: flat all-reduce (one N-way merge feeding one
+        // combine) vs the log-depth tree, in-memory and over loopback
+        // mux edges. The fold is deliberately heavy (payload x reps
+        // arithmetic per input object) so the tree's level-0 combines
+        // get real work to run in parallel.
+        let fanout = args.usize("fanout", 4).max(2);
+        let (objs, payload, reps) = if smoke { (4, 1024, 200) } else { (8, 4096, 400) };
+        let mut ratio_64 = 0.0;
+        for width in [4usize, 16, 64] {
+            for net in [false, true] {
+                let flat = allreduce_run(width, objs, payload, reps, fanout, false, net);
+                let tree = allreduce_run(width, objs, payload, reps, fanout, true, net);
+                let ratio = record_collective_rows(&mut json, width, fanout, flat, tree, net);
+                println!(
+                    "collective: allreduce n{width} {}: flat {flat:.3}s tree {tree:.3}s \
+                     -> {ratio:.2}x",
+                    if net { "net" } else { "mem" },
+                );
+                if width == 64 && net {
+                    ratio_64 = ratio;
+                }
+            }
+        }
         json.add_derived("metric.net.frames_sent", (m::NET_FRAMES_SENT.get() - f0) as f64);
         json.add_derived("metric.net.credit_stalls", (m::NET_CREDIT_STALLS.get() - s0) as f64);
         json.add_derived(
@@ -875,7 +940,7 @@ fn cmd_bench(args: &Args) -> i32 {
             }
             Err(e) => return fail(format!("BENCH_net.json: {e}")),
         }
-        (speedup, ratio_16, threads_16)
+        (speedup, ratio_16, threads_16, ratio_64)
     };
 
     // (3) Dispatch layer: string-named vs interned method dispatch.
@@ -925,11 +990,18 @@ fn cmd_bench(args: &Args) -> i32 {
              to one peer (required O(peers): <= 2)"
         ));
     }
+    if smoke && collective_ratio_64 < min_collective_ratio {
+        return fail(format!(
+            "bench smoke: tree all-reduce throughput only {collective_ratio_64:.2}x flat \
+             at 64 lanes over loopback net (required >= {min_collective_ratio:.1}x)"
+        ));
+    }
     if smoke {
         println!(
             "bench smoke passed: windowed/ack = {net_speedup:.2}x (>= {min_speedup:.1}x), \
              mux/per-channel = {mux_ratio_16:.2}x (>= {min_mux_ratio:.1}x, {mux_threads_16} \
-             pump threads at 16 channels)"
+             pump threads at 16 channels), tree/flat all-reduce = {collective_ratio_64:.2}x \
+             at 64 lanes net (>= {min_collective_ratio:.1}x)"
         );
     }
     0

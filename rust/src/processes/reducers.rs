@@ -13,6 +13,7 @@ use crate::data::details::LocalDetails;
 use crate::data::message::{Message, Terminator};
 use crate::data::object::{instantiate, MethodHandle, Params, Value};
 use crate::logging::{LogKind, LogSink};
+use std::sync::{Arc, Mutex};
 
 /// Shared `any` input end reduced onto one output. Terminates after
 /// `sources` terminators have been read (one per writer sharing the end;
@@ -234,6 +235,58 @@ impl ListParOne {
         }
     }
 
+    /// One parallel read round across all still-live inputs. Under the
+    /// deterministic sim the per-input readers become registered helper
+    /// processes (like `OneParCastList`'s writers) so the round stays a
+    /// sequence of schedule points and the network remains simulable.
+    fn read_round(&self, done: &[bool]) -> Vec<(usize, Result<Message>)> {
+        let live: Vec<usize> = (0..self.inputs.len()).filter(|i| !done[*i]).collect();
+        if crate::csp::sim::attached().is_some() {
+            let slots: Vec<Arc<Mutex<Option<Message>>>> =
+                live.iter().map(|_| Arc::new(Mutex::new(None))).collect();
+            let parts: Vec<Box<dyn FnOnce() -> Result<()> + Send + 'static>> = live
+                .iter()
+                .zip(&slots)
+                .map(|(&i, slot)| {
+                    let inp = self.inputs[i].clone();
+                    let slot = slot.clone();
+                    Box::new(move || {
+                        let m = inp.read()?;
+                        *slot.lock().unwrap() = Some(m);
+                        Ok(())
+                    }) as Box<dyn FnOnce() -> Result<()> + Send>
+                })
+                .collect();
+            let results = crate::csp::sim::sim_helper_join("ListParOne", parts)
+                .expect("attached() checked above");
+            return live
+                .into_iter()
+                .zip(slots)
+                .zip(results)
+                .map(|((i, slot), r)| {
+                    let msg = slot.lock().unwrap().take();
+                    match (msg, r) {
+                        (Some(m), _) => (i, Ok(m)),
+                        (None, Err(e)) => (i, Err(e)),
+                        (None, Ok(())) => {
+                            (i, Err(GppError::Sim("helper finished without a message".into())))
+                        }
+                    }
+                })
+                .collect();
+        }
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = live
+                .into_iter()
+                .map(|i| {
+                    let inp = &self.inputs[i];
+                    scope.spawn(move || (i, inp.read()))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
     fn run_inner(&mut self) -> Result<()> {
         let n = self.inputs.len();
         let mut done = vec![false; n];
@@ -241,20 +294,23 @@ impl ListParOne {
         let mut term = Terminator::new();
         while live > 0 {
             // Parallel read round across all still-live inputs.
-            let round: Vec<(usize, Result<Message>)> = std::thread::scope(|scope| {
-                let handles: Vec<_> = self
-                    .inputs
-                    .iter()
-                    .enumerate()
-                    .filter(|(i, _)| !done[*i])
-                    .map(|(i, inp)| scope.spawn(move || (i, inp.read())))
-                    .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
-            });
-            // Forward in index order for determinism.
+            let round = self.read_round(&done);
+            // Forward in index order for determinism. A message that was
+            // read is already removed from its channel, so when another
+            // input in the round errors the successes are forwarded
+            // first and the error propagated after — poison-on-error
+            // must not lose data already taken off the channels.
             let mut msgs: Vec<(usize, Message)> = Vec::with_capacity(round.len());
+            let mut failed: Option<GppError> = None;
             for (i, r) in round {
-                msgs.push((i, r?));
+                match r {
+                    Ok(m) => msgs.push((i, m)),
+                    Err(e) => {
+                        if failed.is_none() {
+                            failed = Some(e);
+                        }
+                    }
+                }
             }
             msgs.sort_by_key(|(i, _)| *i);
             for (i, msg) in msgs {
@@ -269,6 +325,9 @@ impl ListParOne {
                         live -= 1;
                     }
                 }
+            }
+            if let Some(e) = failed {
+                return Err(e);
             }
         }
         self.output.write(Message::Terminator(term))?;
@@ -473,5 +532,58 @@ impl CSProcess for CombineNto1 {
 
     fn name(&self) -> String {
         format!("CombineNto1({})", self.local.class)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::RuntimeConfig;
+    use crate::data::object::{downcast_ref, Aux, Params, ReturnCode, Value};
+
+    #[derive(Clone, Debug, Default)]
+    struct Tag {
+        id: i64,
+    }
+
+    impl Tag {
+        fn noop(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+            Ok(ReturnCode::CompletedOk)
+        }
+    }
+
+    crate::gpp_data_class!(Tag, "reducerTestTag", {
+        "noop" => noop,
+    }, props { "id" => |s| Value::Int(s.id) });
+
+    /// Regression: when one input of a round errors, the messages the
+    /// other readers already removed from their channels must still be
+    /// forwarded (in index order) before the error propagates. The
+    /// broken version bailed on the first `Err` in the round and the
+    /// sorted messages were dropped on the floor.
+    #[test]
+    fn par_reduce_forwards_round_messages_read_before_an_error() {
+        let cfg = RuntimeConfig::buffered(4);
+        let (txs, ins) = cfg.channel_list::<Message>(3, "lpo.in");
+        let (otx, orx) = cfg.channel::<Message>("lpo.out");
+        // Inputs 0 and 2 hold data; input 1 is poisoned while empty, so
+        // its read in the round errors while the other two succeed
+        // (buffered channels drain queued data before reporting poison).
+        txs[0].write(Message::Data(Box::new(Tag { id: 10 }))).unwrap();
+        txs[2].write(Message::Data(Box::new(Tag { id: 12 }))).unwrap();
+        txs[1].poison();
+        let err = ListParOne::new(ins, otx).run();
+        assert!(err.is_err(), "the poisoned input must fail the round");
+        // Both already-read messages were forwarded, in index order,
+        // before the error propagated and the output was poisoned.
+        for want in [10, 12] {
+            match orx.read().unwrap() {
+                Message::Data(obj) => {
+                    assert_eq!(downcast_ref::<Tag>(obj.as_ref(), "test").unwrap().id, want);
+                }
+                Message::Terminator(_) => panic!("expected data"),
+            }
+        }
+        assert!(orx.read().is_err(), "after the round the output is poisoned");
     }
 }

@@ -233,7 +233,12 @@ impl OneParCastList {
         }
     }
 
-    fn cast_parallel(&self, msg: Message) -> Result<()> {
+    /// Write `msgs[i]` to `outputs[i]`, all concurrently. The caller
+    /// prepares one message per output, so Spread_End (one real
+    /// terminator, fresh ones elsewhere) and the move-the-original data
+    /// path are decided before any write starts.
+    fn cast_parallel(&self, msgs: Vec<Message>) -> Result<()> {
+        debug_assert_eq!(msgs.len(), self.outputs.len());
         // Under the deterministic sim, the per-output writers become
         // registered helper processes so every write stays a schedule
         // point and the network remains simulable.
@@ -241,9 +246,9 @@ impl OneParCastList {
             let parts: Vec<Box<dyn FnOnce() -> Result<()> + Send + 'static>> = self
                 .outputs
                 .iter()
-                .map(|out| {
+                .zip(msgs)
+                .map(|(out, m)| {
                     let out = out.clone();
-                    let m = msg.deep_clone();
                     Box::new(move || out.write(m)) as Box<dyn FnOnce() -> Result<()> + Send>
                 })
                 .collect();
@@ -259,10 +264,8 @@ impl OneParCastList {
             let handles: Vec<_> = self
                 .outputs
                 .iter()
-                .map(|out| {
-                    let m = msg.deep_clone();
-                    scope.spawn(move || out.write(m))
-                })
+                .zip(msgs)
+                .map(|(out, m)| scope.spawn(move || out.write(m)))
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         });
@@ -273,14 +276,29 @@ impl OneParCastList {
     }
 
     fn run_inner(&mut self) -> Result<()> {
+        let n = self.outputs.len();
         loop {
             match self.input.read()? {
                 Message::Data(obj) => {
                     self.log.log("OneParCastList", "cast", LogKind::Output, Some(obj.as_ref()));
-                    self.cast_parallel(Message::Data(obj))?;
+                    // Deep copies for the first n-1, move the original last.
+                    let mut msgs: Vec<Message> =
+                        (0..n - 1).map(|_| Message::Data(obj.deep_clone())).collect();
+                    msgs.push(Message::Data(obj));
+                    self.cast_parallel(msgs)?;
                 }
                 Message::Terminator(term) => {
-                    self.cast_parallel(Message::Terminator(term))?;
+                    // Spread_End: the real terminator (carrying the
+                    // absorbed logs) to exactly one output, fresh ones
+                    // to the rest — so downstream absorbers count each
+                    // log payload exactly once.
+                    let msgs: Vec<Message> = (0..n)
+                        .map(|i| {
+                            let t = if i == 0 { term.clone() } else { Terminator::new() };
+                            Message::Terminator(t)
+                        })
+                        .collect();
+                    self.cast_parallel(msgs)?;
                     return Ok(());
                 }
             }
@@ -302,5 +320,102 @@ impl CSProcess for OneParCastList {
 
     fn name(&self) -> String {
         format!("OneParCastList(x{})", self.outputs.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csp::RuntimeConfig;
+    use crate::data::object::{downcast_ref, Aux, Params, ReturnCode, Value};
+    use crate::logging::LogRecord;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// Data class whose deep clones are counted, so tests can assert the
+    /// move-the-original-last contract.
+    #[derive(Debug, Default)]
+    struct Blob {
+        id: i64,
+        clones: Arc<AtomicUsize>,
+    }
+
+    impl Clone for Blob {
+        fn clone(&self) -> Self {
+            self.clones.fetch_add(1, Ordering::SeqCst);
+            Self {
+                id: self.id,
+                clones: self.clones.clone(),
+            }
+        }
+    }
+
+    impl Blob {
+        fn noop(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+            Ok(ReturnCode::CompletedOk)
+        }
+    }
+
+    crate::gpp_data_class!(Blob, "spreaderTestBlob", {
+        "noop" => noop,
+    }, props { "id" => |s| Value::Int(s.id) });
+
+    fn terminators_of(ins: &[crate::csp::channel::In<Message>]) -> Vec<Terminator> {
+        ins.iter()
+            .map(|i| match i.read().unwrap() {
+                Message::Terminator(t) => t,
+                Message::Data(_) => panic!("expected a terminator"),
+            })
+            .collect()
+    }
+
+    /// Regression (Spread_End): the real terminator — and its absorbed
+    /// log payload — must reach exactly one output; the rest get fresh
+    /// `Terminator::new()`. The broken version deep-cloned the real one
+    /// to every output, double-counting the logs N times downstream.
+    #[test]
+    fn par_cast_delivers_the_real_terminator_to_exactly_one_output() {
+        let cfg = RuntimeConfig::buffered(4);
+        let (tx, rx) = cfg.channel::<Message>("pc.in");
+        let (outs, ins) = cfg.channel_list::<Message>(3, "pc.out");
+        let mut term = Terminator::new();
+        term.logs.push(LogRecord::marker("payload"));
+        tx.write(Message::Terminator(term)).unwrap();
+        OneParCastList::new(rx, outs).run().unwrap();
+        let terms = terminators_of(&ins);
+        let carriers = terms.iter().filter(|t| !t.logs.is_empty()).count();
+        assert_eq!(carriers, 1, "exactly one payload-carrying terminator");
+        let mut merged = Terminator::new();
+        for t in terms {
+            merged.absorb(t);
+        }
+        assert_eq!(merged.logs.len(), 1, "absorbers must count the payload once");
+    }
+
+    /// Regression: the data path deep-clones for the first n-1 outputs
+    /// and must *move* the original to the last (as `OneSeqCastList`
+    /// does) — n-1 clones per cast, not n.
+    #[test]
+    fn par_cast_moves_the_original_to_the_last_output() {
+        let cfg = RuntimeConfig::buffered(4);
+        let (tx, rx) = cfg.channel::<Message>("pcm.in");
+        let (outs, ins) = cfg.channel_list::<Message>(3, "pcm.out");
+        let clones = Arc::new(AtomicUsize::new(0));
+        let blob = Blob {
+            id: 7,
+            clones: clones.clone(),
+        };
+        tx.write(Message::Data(Box::new(blob))).unwrap();
+        tx.write(Message::Terminator(Terminator::new())).unwrap();
+        OneParCastList::new(rx, outs).run().unwrap();
+        assert_eq!(clones.load(Ordering::SeqCst), 2, "n-1 deep clones for n=3");
+        for i in &ins {
+            match i.read().unwrap() {
+                Message::Data(obj) => {
+                    assert_eq!(downcast_ref::<Blob>(obj.as_ref(), "test").unwrap().id, 7);
+                }
+                Message::Terminator(_) => panic!("expected data first"),
+            }
+        }
     }
 }

@@ -41,6 +41,7 @@ use std::rc::Rc;
 use super::check::{traces_refines, CheckResult, Checker};
 use super::lts::Lts;
 use super::syntax::{Env, Event, Interner, Proc};
+use crate::collectives::{child_sizes, level_sizes};
 use crate::csp::error::{GppError, Result};
 
 /// The terminator in the abstract value space.
@@ -323,6 +324,349 @@ fn define_collect(
     });
 }
 
+/// `OneSeqCastList` tree node ([`crate::collectives::broadcast_tree`]):
+/// copy each value to every output (all 1×1 edges) in sequence; on
+/// `UT`, deliver one `UT` per output — the real/fresh terminator
+/// distinction of CSPm Definition 4's `Spread_End` is invisible in the
+/// value abstraction — and stop.
+fn define_cast(env: &mut Env, i: Rc<Interner>, ein: Edge, outs: Vec<Edge>, k: i64, def: &str) {
+    let name = def.to_string();
+    env.define(def, move |_| {
+        let mut branches = Vec::new();
+        for o in ein.values(k) {
+            for wr in 0..ein.writers {
+                let e_in = ein.ev(&i, k, wr, 0, o);
+                let tail = if o == UT {
+                    Proc::Skip
+                } else {
+                    Proc::call(&name, &[])
+                };
+                let body = outs
+                    .iter()
+                    .rev()
+                    .fold(tail, |acc, e| Proc::prefix(e.ev(&i, k, 0, 0, o), acc));
+                branches.push(Proc::prefix(e_in, body));
+            }
+        }
+        Proc::ext_choice(branches)
+    });
+}
+
+/// `OneFanList` tree node ([`crate::collectives::scatter_tree`]):
+/// round-robin each data value over the outputs (the counter is the
+/// process argument); on `UT`, one `UT` per output, then stop.
+fn define_fanlist(env: &mut Env, i: Rc<Interner>, ein: Edge, outs: Vec<Edge>, k: i64, def: &str) {
+    let name = def.to_string();
+    env.define(def, move |args| {
+        let ctr = (args[0] as usize) % outs.len();
+        let mut branches = Vec::new();
+        for o in ein.values(k) {
+            for wr in 0..ein.writers {
+                let e_in = ein.ev(&i, k, wr, 0, o);
+                if o == UT {
+                    let body = outs
+                        .iter()
+                        .rev()
+                        .fold(Proc::Skip, |acc, e| {
+                            Proc::prefix(e.ev(&i, k, 0, 0, UT), acc)
+                        });
+                    branches.push(Proc::prefix(e_in, body));
+                } else {
+                    let next = ((ctr + 1) % outs.len()) as i64;
+                    branches.push(Proc::prefix(
+                        e_in,
+                        Proc::prefix(outs[ctr].ev(&i, k, 0, 0, o), Proc::call(&name, &[next])),
+                    ));
+                }
+            }
+        }
+        Proc::ext_choice(branches)
+    });
+}
+
+/// `ListFanOne` tree node ([`crate::collectives::gather_tree`]):
+/// external choice over the (1×1) inputs, forwarding data; absorbs
+/// exactly one `UT` per input into the merged terminator (the mask
+/// argument), then emits a single `UT` downstream and stops.
+fn define_merge(env: &mut Env, i: Rc<Interner>, ins: Vec<Edge>, eout: Edge, k: i64, def: &str) {
+    let name = def.to_string();
+    env.define(def, move |args| {
+        let mask = args[0];
+        let full = (1i64 << ins.len()) - 1;
+        let mut branches = Vec::new();
+        for (idx, ein) in ins.iter().enumerate() {
+            if mask & (1 << idx) != 0 {
+                continue;
+            }
+            for o in ein.values(k) {
+                let e_in = ein.ev(&i, k, 0, 0, o);
+                if o == UT {
+                    let m2 = mask | (1 << idx);
+                    if m2 == full {
+                        branches.push(Proc::prefix(
+                            e_in,
+                            Proc::prefix(eout.ev(&i, k, 0, 0, UT), Proc::Skip),
+                        ));
+                    } else {
+                        branches.push(Proc::prefix(e_in, Proc::call(&name, &[m2])));
+                    }
+                } else {
+                    branches.push(Proc::prefix(
+                        e_in,
+                        Proc::prefix(eout.ev(&i, k, 0, 0, o), Proc::call(&name, &[mask])),
+                    ));
+                }
+            }
+        }
+        Proc::ext_choice(branches)
+    });
+}
+
+/// `CombineNto1` tree node (the fold inside
+/// [`crate::collectives::allreduce_tree`]): consume every data value
+/// into the local accumulator; on `UT`, emit the folded result —
+/// letter `A` at the out edge's stage — then the terminator, and stop.
+/// The fold is not a per-object worker stage, so tree combines do not
+/// prime values (the *flat* `CombineNto1` chain stage keeps its
+/// `Worker` abstraction).
+fn define_combine(env: &mut Env, i: Rc<Interner>, ein: Edge, eout: Edge, k: i64, def: &str) {
+    let name = def.to_string();
+    env.define(def, move |_| {
+        let mut branches = Vec::new();
+        for o in ein.values(k) {
+            for wr in 0..ein.writers {
+                let e_in = ein.ev(&i, k, wr, 0, o);
+                if o == UT {
+                    let result = eout.stage * k; // letter A: the folded object
+                    branches.push(Proc::prefix(
+                        e_in,
+                        Proc::prefix(
+                            eout.ev(&i, k, 0, 0, result),
+                            Proc::prefix(eout.ev(&i, k, 0, 0, UT), Proc::Skip),
+                        ),
+                    ));
+                } else {
+                    branches.push(Proc::prefix(e_in, Proc::call(&name, &[])));
+                }
+            }
+        }
+        Proc::ext_choice(branches)
+    });
+}
+
+/// Which spreader a modelled tree is built from (mirrors
+/// `collectives::SpreadKind`).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SpreadModel {
+    Cast,
+    Fan,
+}
+
+fn push_spread_node(
+    env: &mut Env,
+    i: &Rc<Interner>,
+    kind: SpreadModel,
+    input: Edge,
+    outputs: Vec<Edge>,
+    k: i64,
+    def: &str,
+    parts: &mut Vec<(Proc, BTreeSet<Event>)>,
+) {
+    let mut alpha = input.all_alpha(i, k);
+    for e in &outputs {
+        alpha.extend(e.all_alpha(i, k));
+    }
+    let start = match kind {
+        SpreadModel::Cast => {
+            define_cast(env, i.clone(), input, outputs, k, def);
+            Proc::call(def, &[])
+        }
+        SpreadModel::Fan => {
+            define_fanlist(env, i.clone(), input, outputs, k, def);
+            Proc::call(def, &[0])
+        }
+    };
+    parts.push((start, alpha));
+}
+
+fn push_merge_node(
+    env: &mut Env,
+    i: &Rc<Interner>,
+    inputs: Vec<Edge>,
+    output: Edge,
+    k: i64,
+    def: &str,
+    parts: &mut Vec<(Proc, BTreeSet<Event>)>,
+) {
+    let mut alpha = output.all_alpha(i, k);
+    for e in &inputs {
+        alpha.extend(e.all_alpha(i, k));
+    }
+    define_merge(env, i.clone(), inputs, output, k, def);
+    parts.push((Proc::call(def, &[0]), alpha));
+}
+
+fn push_combine_node(
+    env: &mut Env,
+    i: &Rc<Interner>,
+    input: Edge,
+    output: Edge,
+    k: i64,
+    def: &str,
+    parts: &mut Vec<(Proc, BTreeSet<Event>)>,
+) {
+    let alpha = union(&[input.all_alpha(i, k), output.all_alpha(i, k)]);
+    define_combine(env, i.clone(), input, output, k, def);
+    parts.push((Proc::call(def, &[]), alpha));
+}
+
+/// Model of [`crate::collectives::spread_tree`] (broadcast / scatter):
+/// the same `child_sizes` recursion, one cast/fan-list node per
+/// multi-leaf subtree, single-leaf subtrees wired directly.
+#[allow(clippy::too_many_arguments)]
+fn model_spread_tree(
+    env: &mut Env,
+    i: &Rc<Interner>,
+    kind: SpreadModel,
+    input: Edge,
+    mut outputs: Vec<Edge>,
+    fanout: usize,
+    k: i64,
+    prefix: &str,
+    next_id: &mut usize,
+    parts: &mut Vec<(Proc, BTreeSet<Event>)>,
+    internals: &mut BTreeSet<Event>,
+) {
+    let n = outputs.len();
+    let fanout = fanout.max(2);
+    if n <= fanout {
+        let id = *next_id;
+        *next_id += 1;
+        push_spread_node(env, i, kind, input, outputs, k, &format!("{prefix}S{id}"), parts);
+        return;
+    }
+    let mut child_outs: Vec<Edge> = Vec::new();
+    let mut recurse: Vec<(Edge, Vec<Edge>)> = Vec::new();
+    for size in child_sizes(n, fanout) {
+        let chunk: Vec<Edge> = outputs.drain(..size).collect();
+        if chunk.len() == 1 {
+            child_outs.extend(chunk);
+        } else {
+            let id = *next_id;
+            *next_id += 1;
+            let e = Edge::new(&format!("{prefix}t{id}"), 1, 1, input.stage);
+            e.intern_all(i, k);
+            internals.extend(e.all_alpha(i, k));
+            child_outs.push(e.clone());
+            recurse.push((e, chunk));
+        }
+    }
+    let id = *next_id;
+    *next_id += 1;
+    push_spread_node(env, i, kind, input, child_outs, k, &format!("{prefix}S{id}"), parts);
+    for (e, chunk) in recurse {
+        model_spread_tree(env, i, kind, e, chunk, fanout, k, prefix, next_id, parts, internals);
+    }
+}
+
+/// Model of [`crate::collectives::gather_tree`]: the same recursion,
+/// one merge node per multi-input subtree.
+#[allow(clippy::too_many_arguments)]
+fn model_gather_tree(
+    env: &mut Env,
+    i: &Rc<Interner>,
+    mut inputs: Vec<Edge>,
+    output: Edge,
+    fanout: usize,
+    k: i64,
+    prefix: &str,
+    next_id: &mut usize,
+    parts: &mut Vec<(Proc, BTreeSet<Event>)>,
+    internals: &mut BTreeSet<Event>,
+) {
+    let n = inputs.len();
+    let fanout = fanout.max(2);
+    if n <= fanout {
+        let id = *next_id;
+        *next_id += 1;
+        push_merge_node(env, i, inputs, output, k, &format!("{prefix}M{id}"), parts);
+        return;
+    }
+    let mut child_ins: Vec<Edge> = Vec::new();
+    for size in child_sizes(n, fanout) {
+        let chunk: Vec<Edge> = inputs.drain(..size).collect();
+        if chunk.len() == 1 {
+            child_ins.extend(chunk);
+        } else {
+            let id = *next_id;
+            *next_id += 1;
+            let e = Edge::new(&format!("{prefix}t{id}"), 1, 1, chunk[0].stage);
+            e.intern_all(i, k);
+            internals.extend(e.all_alpha(i, k));
+            model_gather_tree(env, i, chunk, e.clone(), fanout, k, prefix, next_id, parts, internals);
+            child_ins.push(e);
+        }
+    }
+    let id = *next_id;
+    *next_id += 1;
+    push_merge_node(env, i, child_ins, output, k, &format!("{prefix}M{id}"), parts);
+}
+
+/// Model of [`crate::collectives`]' `reduce_tree`: the same
+/// `level_sizes` level loop — per multi-stream group a merge node
+/// feeding a combine node, single-stream groups passing through —
+/// returning the root edge carrying the folded result.
+#[allow(clippy::too_many_arguments)]
+fn model_reduce_tree(
+    env: &mut Env,
+    i: &Rc<Interner>,
+    inputs: Vec<Edge>,
+    fanout: usize,
+    k: i64,
+    prefix: &str,
+    parts: &mut Vec<(Proc, BTreeSet<Event>)>,
+    internals: &mut BTreeSet<Event>,
+) -> Edge {
+    let fanout = fanout.max(2);
+    let stage = inputs[0].stage;
+    let mut next_id = 0usize;
+    let mut fresh = |name: &str| -> Edge {
+        let e = Edge::new(&format!("{prefix}{name}"), 1, 1, stage);
+        e.intern_all(i, k);
+        internals.extend(e.all_alpha(i, k));
+        e
+    };
+    if inputs.len() == 1 {
+        let root = fresh("root");
+        let input = inputs.into_iter().next().expect("len checked");
+        push_combine_node(env, i, input, root.clone(), k, &format!("{prefix}C0"), parts);
+        return root;
+    }
+    let mut level = inputs;
+    let mut l = 0usize;
+    while level.len() > 1 {
+        let sizes = level_sizes(level.len(), fanout);
+        let mut next_level: Vec<Edge> = Vec::with_capacity(sizes.len());
+        for (gi, size) in sizes.into_iter().enumerate() {
+            let mut chunk: Vec<Edge> = level.drain(..size).collect();
+            if chunk.len() == 1 {
+                next_level.push(chunk.pop().expect("len checked"));
+                continue;
+            }
+            let mrg = fresh(&format!("mrg{l}x{gi}"));
+            push_merge_node(env, i, chunk, mrg.clone(), k, &format!("{prefix}M{next_id}"), parts);
+            next_id += 1;
+            let acc = fresh(&format!("acc{l}x{gi}"));
+            push_combine_node(env, i, mrg, acc.clone(), k, &format!("{prefix}C{next_id}"), parts);
+            next_id += 1;
+            next_level.push(acc);
+        }
+        level = next_level;
+        l += 1;
+    }
+    level.pop().expect("reduced to one stream")
+}
+
 /// `MultiCoreEngine`: per object, `iterations` fork/join node phases —
 /// a parallel of `calc.<node>.<iter>` events whose distributed
 /// termination *is* the scoped-thread join — then the object moves on.
@@ -477,6 +821,25 @@ pub enum ChainStage {
     /// `AnyFanOne`: shared-any in from `sources` writers (counting one
     /// `UT` each), one out.
     ReduceAny { sources: usize },
+    /// `ListGroupList`: `workers` lane-parallel Workers over dedicated
+    /// 1×1 lane channels (a list boundary on both sides).
+    ListGroup { workers: usize },
+    /// [`crate::collectives::broadcast_tree`]: one shared input, a tree
+    /// of `OneSeqCastList` nodes copying every value to `destinations`
+    /// lanes (list boundary out).
+    BroadcastTree { destinations: usize, fanout: usize },
+    /// [`crate::collectives::scatter_tree`]: a tree of round-robin
+    /// `OneFanList` nodes partitioning the stream over `destinations`
+    /// lanes (list boundary out).
+    ScatterTree { destinations: usize, fanout: usize },
+    /// [`crate::collectives::gather_tree`]: a tree of `ListFanOne`
+    /// merges folding `sources` lanes onto one output (list boundary
+    /// in).
+    GatherTree { sources: usize, fanout: usize },
+    /// [`crate::collectives::allreduce_tree`]: reduce tree (merge +
+    /// combine levels) feeding a broadcast tree, list boundaries on
+    /// both sides.
+    AllReduceTree { width: usize, fanout: usize },
 }
 
 /// Normalised element of the chain (pipelines flattened to workers).
@@ -485,8 +848,13 @@ enum Elem {
     Emit,
     Fan(usize),
     Group(usize),
+    ListGroup(usize),
     Worker,
     Reduce(usize),
+    Cast { leaves: usize, fanout: usize },
+    Scatter { leaves: usize, fanout: usize },
+    Gather { leaves: usize, fanout: usize },
+    AllReduce { width: usize, fanout: usize },
     Collect,
 }
 
@@ -505,9 +873,71 @@ impl Elem {
         }
     }
 
+    /// Lane count when this element *produces* a list boundary.
+    fn out_width(&self) -> Option<usize> {
+        match self {
+            Elem::ListGroup(w) => Some(*w),
+            Elem::Cast { leaves, .. } | Elem::Scatter { leaves, .. } => Some(*leaves),
+            Elem::AllReduce { width, .. } => Some(*width),
+            _ => None,
+        }
+    }
+
+    /// Lane count when this element *consumes* a list boundary.
+    fn in_width(&self) -> Option<usize> {
+        match self {
+            Elem::ListGroup(w) => Some(*w),
+            Elem::Gather { leaves, .. } => Some(*leaves),
+            Elem::AllReduce { width, .. } => Some(*width),
+            _ => None,
+        }
+    }
+
     /// Does this element apply the stage function (prime values)?
     fn is_functional(&self) -> bool {
-        matches!(self, Elem::Group(_) | Elem::Worker)
+        matches!(self, Elem::Group(_) | Elem::ListGroup(_) | Elem::Worker)
+    }
+}
+
+/// A boundary between adjacent chain elements: one shared edge, or —
+/// when either side is list-natured — one dedicated 1×1 edge per lane.
+#[derive(Clone)]
+enum Bound {
+    Shared(Edge),
+    List(Vec<Edge>),
+}
+
+impl Bound {
+    fn edges(&self) -> Vec<Edge> {
+        match self {
+            Bound::Shared(e) => vec![e.clone()],
+            Bound::List(v) => v.clone(),
+        }
+    }
+
+    fn stage(&self) -> i64 {
+        match self {
+            Bound::Shared(e) => e.stage,
+            Bound::List(v) => v[0].stage,
+        }
+    }
+
+    fn shared(&self, what: &str) -> Result<Edge> {
+        match self {
+            Bound::Shared(e) => Ok(e.clone()),
+            Bound::List(_) => Err(GppError::Verify(format!(
+                "{what} requires a shared boundary, found a list boundary"
+            ))),
+        }
+    }
+
+    fn list(&self, what: &str) -> Result<Vec<Edge>> {
+        match self {
+            Bound::List(v) => Ok(v.clone()),
+            Bound::Shared(_) => Err(GppError::Verify(format!(
+                "{what} requires a list boundary, found a shared boundary"
+            ))),
+        }
     }
 }
 
@@ -540,30 +970,69 @@ pub fn extract_chain(
             }
             ChainStage::Worker => elems.push(Elem::Worker),
             ChainStage::ReduceAny { sources } => elems.push(Elem::Reduce(*sources)),
+            ChainStage::ListGroup { workers } => elems.push(Elem::ListGroup((*workers).max(1))),
+            ChainStage::BroadcastTree { destinations, fanout } => elems.push(Elem::Cast {
+                leaves: (*destinations).max(1),
+                fanout: *fanout,
+            }),
+            ChainStage::ScatterTree { destinations, fanout } => elems.push(Elem::Scatter {
+                leaves: (*destinations).max(1),
+                fanout: *fanout,
+            }),
+            ChainStage::GatherTree { sources, fanout } => elems.push(Elem::Gather {
+                leaves: (*sources).max(1),
+                fanout: *fanout,
+            }),
+            ChainStage::AllReduceTree { width, fanout } => elems.push(Elem::AllReduce {
+                width: (*width).max(1),
+                fanout: *fanout,
+            }),
         }
     }
     elems.push(Elem::Collect);
 
-    // Edge j connects elems[j] → elems[j+1]; stage tag = functional
+    // Boundary j connects elems[j] → elems[j+1]: a single shared edge,
+    // or one 1×1 lane edge per stream when either side is list-natured
+    // (both sides must then agree on the width). Stage tag = functional
     // elements seen so far.
-    let mut edges: Vec<Edge> = Vec::new();
+    let mut bounds: Vec<Bound> = Vec::new();
     let mut stage = 0i64;
     for j in 0..elems.len() - 1 {
         if elems[j].is_functional() {
             stage += 1;
         }
-        edges.push(Edge::new(
-            &format!("c{j}"),
-            elems[j].writers(),
-            elems[j + 1].readers(),
-            stage,
-        ));
+        let bound = match (elems[j].out_width(), elems[j + 1].in_width()) {
+            (None, None) => Bound::Shared(Edge::new(
+                &format!("c{j}"),
+                elems[j].writers(),
+                elems[j + 1].readers(),
+                stage,
+            )),
+            (Some(a), Some(b)) if a == b => Bound::List(
+                (0..a)
+                    .map(|lane| Edge::new(&format!("c{j}x{lane}"), 1, 1, stage))
+                    .collect(),
+            ),
+            (a, b) => {
+                return Err(GppError::Verify(format!(
+                    "boundary {j}: {:?} (list width {a:?}) cannot feed {:?} (list width {b:?})",
+                    elems[j],
+                    elems[j + 1]
+                )))
+            }
+        };
+        bounds.push(bound);
     }
-    let final_stage = edges.last().expect("chain has ≥1 edge").stage;
+    let final_stage = bounds.last().expect("chain has ≥1 boundary").stage();
 
     // Terminator bookkeeping mirrors builder::NetworkSpec::validate:
-    // UTs delivered on each edge must equal UTs consumed.
-    for (j, e) in edges.iter().enumerate() {
+    // UTs delivered on each shared edge must equal UTs consumed. (List
+    // boundaries are one-writer/one-reader per lane by construction.)
+    for (j, b) in bounds.iter().enumerate() {
+        let e = match b {
+            Bound::Shared(e) => e,
+            Bound::List(_) => continue,
+        };
         let delivered = match elems[j] {
             Elem::Fan(d) => {
                 if d != e.readers {
@@ -591,8 +1060,10 @@ pub fn extract_chain(
         }
     }
 
-    for e in &edges {
-        e.intern_all(&i, k);
+    for b in &bounds {
+        for e in b.edges() {
+            e.intern_all(&i, k);
+        }
     }
     for v in stage_values(k, final_stage) {
         if v != UT {
@@ -602,21 +1073,24 @@ pub fn extract_chain(
 
     let mut parts: Vec<(Proc, BTreeSet<Event>)> = Vec::new();
     let mut internals: BTreeSet<Event> = BTreeSet::new();
-    for e in &edges {
-        internals.extend(e.all_alpha(&i, k));
+    for b in &bounds {
+        for e in b.edges() {
+            internals.extend(e.all_alpha(&i, k));
+        }
     }
 
     for (j, elem) in elems.iter().enumerate() {
-        let ein = if j > 0 { Some(edges[j - 1].clone()) } else { None };
-        let eout = if j < edges.len() { Some(edges[j].clone()) } else { None };
+        let bin = if j > 0 { Some(&bounds[j - 1]) } else { None };
+        let bout = if j < bounds.len() { Some(&bounds[j]) } else { None };
         match elem {
             Elem::Emit => {
-                let out = eout.expect("emit has an out edge");
+                let out = bout.expect("emit has an out boundary").shared("emit")?;
                 define_emit(&mut env, i.clone(), out.clone(), k, "Emit");
                 parts.push((Proc::call("Emit", &[0]), out.all_alpha(&i, k)));
             }
             Elem::Fan(_) => {
-                let (inp, out) = (ein.expect("fan in"), eout.expect("fan out"));
+                let inp = bin.expect("fan in").shared("fanAny")?;
+                let out = bout.expect("fan out").shared("fanAny")?;
                 let def = format!("Fan{j}");
                 define_fan(&mut env, i.clone(), inp.clone(), out.clone(), k, &def);
                 parts.push((
@@ -625,7 +1099,8 @@ pub fn extract_chain(
                 ));
             }
             Elem::Group(w) => {
-                let (inp, out) = (ein.expect("group in"), eout.expect("group out"));
+                let inp = bin.expect("group in").shared("group")?;
+                let out = bout.expect("group out").shared("group")?;
                 for wk in 0..*w {
                     let def = format!("W{j}_{wk}");
                     define_worker(&mut env, i.clone(), inp.clone(), wk, out.clone(), wk, k, &def);
@@ -635,8 +1110,30 @@ pub fn extract_chain(
                     ));
                 }
             }
+            Elem::ListGroup(w) => {
+                let ins = bin.expect("listGroup in").list("listGroup")?;
+                let outs = bout.expect("listGroup out").list("listGroup")?;
+                for wk in 0..*w {
+                    let def = format!("W{j}_{wk}");
+                    define_worker(
+                        &mut env,
+                        i.clone(),
+                        ins[wk].clone(),
+                        0,
+                        outs[wk].clone(),
+                        0,
+                        k,
+                        &def,
+                    );
+                    parts.push((
+                        Proc::call(&def, &[]),
+                        union(&[ins[wk].all_alpha(&i, k), outs[wk].all_alpha(&i, k)]),
+                    ));
+                }
+            }
             Elem::Worker => {
-                let (inp, out) = (ein.expect("worker in"), eout.expect("worker out"));
+                let inp = bin.expect("worker in").shared("worker")?;
+                let out = bout.expect("worker out").shared("worker")?;
                 let def = format!("W{j}");
                 define_worker(&mut env, i.clone(), inp.clone(), 0, out.clone(), 0, k, &def);
                 parts.push((
@@ -645,7 +1142,8 @@ pub fn extract_chain(
                 ));
             }
             Elem::Reduce(_) => {
-                let (inp, out) = (ein.expect("reduce in"), eout.expect("reduce out"));
+                let inp = bin.expect("reduce in").shared("reduceAny")?;
+                let out = bout.expect("reduce out").shared("reduceAny")?;
                 let def = format!("Red{j}");
                 define_reducer(&mut env, i.clone(), inp.clone(), out.clone(), k, &def);
                 parts.push((
@@ -653,8 +1151,76 @@ pub fn extract_chain(
                     union(&[inp.all_alpha(&i, k), out.all_alpha(&i, k)]),
                 ));
             }
+            Elem::Cast { fanout, .. } | Elem::Scatter { fanout, .. } => {
+                let inp = bin.expect("spread tree in").shared("spread tree")?;
+                let outs = bout.expect("spread tree out").list("spread tree")?;
+                let kind = if matches!(elem, Elem::Cast { .. }) {
+                    SpreadModel::Cast
+                } else {
+                    SpreadModel::Fan
+                };
+                let mut id = 0usize;
+                model_spread_tree(
+                    &mut env,
+                    &i,
+                    kind,
+                    inp,
+                    outs,
+                    *fanout,
+                    k,
+                    &format!("b{j}."),
+                    &mut id,
+                    &mut parts,
+                    &mut internals,
+                );
+            }
+            Elem::Gather { fanout, .. } => {
+                let ins = bin.expect("gather tree in").list("gather tree")?;
+                let out = bout.expect("gather tree out").shared("gather tree")?;
+                let mut id = 0usize;
+                model_gather_tree(
+                    &mut env,
+                    &i,
+                    ins,
+                    out,
+                    *fanout,
+                    k,
+                    &format!("b{j}."),
+                    &mut id,
+                    &mut parts,
+                    &mut internals,
+                );
+            }
+            Elem::AllReduce { fanout, .. } => {
+                let ins = bin.expect("allreduce in").list("allreduce")?;
+                let outs = bout.expect("allreduce out").list("allreduce")?;
+                let root = model_reduce_tree(
+                    &mut env,
+                    &i,
+                    ins,
+                    *fanout,
+                    k,
+                    &format!("b{j}r."),
+                    &mut parts,
+                    &mut internals,
+                );
+                let mut id = 0usize;
+                model_spread_tree(
+                    &mut env,
+                    &i,
+                    SpreadModel::Cast,
+                    root,
+                    outs,
+                    *fanout,
+                    k,
+                    &format!("b{j}b."),
+                    &mut id,
+                    &mut parts,
+                    &mut internals,
+                );
+            }
             Elem::Collect => {
-                let inp = ein.expect("collect in");
+                let inp = bin.expect("collect in").shared("collect")?;
                 let def = "Coll".to_string();
                 define_collect(&mut env, i.clone(), inp.clone(), 0, 0, k, &def);
                 let out_alpha: BTreeSet<Event> = stage_values(k, final_stage)
@@ -1069,6 +1635,54 @@ mod tests {
     #[test]
     fn engine_model_holds() {
         assert_holds(&extract_engine(new_interner(), 3, 2, 2));
+    }
+
+    #[test]
+    fn collective_allreduce_chain_model_holds() {
+        // The allreduce_pi shape: Scatter → ListGroup → AllReduce →
+        // Gather, all tree-structured, every boundary a lane list.
+        let m = extract_chain(
+            new_interner(),
+            &[
+                ChainStage::ScatterTree { destinations: 4, fanout: 2 },
+                ChainStage::ListGroup { workers: 4 },
+                ChainStage::AllReduceTree { width: 4, fanout: 2 },
+                ChainStage::GatherTree { sources: 4, fanout: 2 },
+            ],
+            2,
+        )
+        .unwrap();
+        assert_holds(&m);
+    }
+
+    #[test]
+    fn collective_broadcast_chain_model_holds() {
+        let m = extract_chain(
+            new_interner(),
+            &[
+                ChainStage::BroadcastTree { destinations: 3, fanout: 2 },
+                ChainStage::ListGroup { workers: 3 },
+                ChainStage::GatherTree { sources: 3, fanout: 2 },
+            ],
+            2,
+        )
+        .unwrap();
+        assert_holds(&m);
+    }
+
+    #[test]
+    fn list_boundary_width_mismatch_is_rejected() {
+        let err = extract_chain(
+            new_interner(),
+            &[
+                ChainStage::ScatterTree { destinations: 3, fanout: 2 },
+                ChainStage::ListGroup { workers: 4 },
+                ChainStage::GatherTree { sources: 4, fanout: 2 },
+            ],
+            2,
+        )
+        .unwrap_err();
+        assert!(matches!(err, GppError::Verify(_)), "{err}");
     }
 
     #[test]

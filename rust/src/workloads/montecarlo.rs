@@ -141,6 +141,24 @@ impl PiResults {
         Ok(ReturnCode::CompletedOk)
     }
 
+    /// `merge` — the AllReduce fold: accumulates either a leaf `PiData`
+    /// (a worker's output) or another `PiResults` partial (the
+    /// accumulator a lower tree level produced), the dual-class contract
+    /// of [`crate::collectives::AllReduceOp`]. Also usable as a Collect
+    /// method when the collected stream carries `PiResults` objects.
+    fn merge(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let obj = aux.expect("merge needs an input object");
+        if let Some(o) = obj.as_any().downcast_ref::<PiData>() {
+            self.iteration_sum += o.iterations;
+            self.within_sum += o.within;
+            return Ok(ReturnCode::CompletedOk);
+        }
+        let r = downcast_mut::<PiResults>(obj, "piResults.merge")?;
+        self.iteration_sum += r.iteration_sum;
+        self.within_sum += r.within_sum;
+        Ok(ReturnCode::CompletedOk)
+    }
+
     fn finalise(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
         self.pi = 4.0 * (self.within_sum as f64) / (self.iteration_sum.max(1) as f64);
         if !self.quiet {
@@ -156,6 +174,7 @@ impl PiResults {
 crate::gpp_data_class!(PiResults, "piResults", {
     "initClass" => init_class,
     "collector" => collector,
+    "merge" => merge,
     "finalise" => finalise,
 }, props {
     "pi" => |s| Value::Float(s.pi),
@@ -209,10 +228,29 @@ impl Wire for PiData {
     }
 }
 
+/// Wire form so `PiResults` partials can cross net edges inside a
+/// distributed reduce tree. (`pi`/`quiet` are derived or node-local.)
+impl Wire for PiResults {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.iteration_sum.encode(out);
+        self.within_sum.encode(out);
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(Self {
+            iteration_sum: i64::decode(input)?,
+            within_sum: i64::decode(input)?,
+            pi: 0.0,
+            quiet: true,
+        })
+    }
+}
+
 pub fn register() {
     register_class("piData", || Box::new(PiData::default()));
     register_class("piResults", || Box::new(PiResults::default()));
     crate::data::wire::register_wire_class::<PiData>("piData");
+    crate::data::wire::register_wire_class::<PiResults>("piResults");
 }
 
 /// Sequential invocation (paper Listing 4): "the user can take the

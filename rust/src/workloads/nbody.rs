@@ -13,6 +13,7 @@ use crate::csp::error::Result;
 use crate::data::details::{DataDetails, ResultDetails};
 use crate::data::object::{downcast_mut, register_class, Aux, Params, ReturnCode, Value};
 use crate::engines::state::{access_state, CalcCtx, CalcFn, EngineState, StateAccessor};
+use crate::util::codec::Wire;
 use crate::util::rng::Rng;
 
 pub const STRIDE: usize = 6;
@@ -239,9 +240,169 @@ impl NBodyResult {
     }
 }
 
+/// Partial total-energy term for one leaf's body range: kinetic energy
+/// of the bodies in `[lo, hi)` plus the potential of every pair whose
+/// lower-indexed member lies in the range — so summing the partials
+/// over a partition of `0..n` counts each pair exactly once.
+pub fn partial_energy(d: &NBodyData, lo: usize, hi: usize) -> f64 {
+    let n = d.n;
+    let cur = &d.state.current;
+    let masses = &d.state.consts[..n];
+    let mut e = 0.0;
+    for i in lo..hi.min(n) {
+        let bi = i * STRIDE;
+        let (vx, vy, vz) = (cur[bi + 3], cur[bi + 4], cur[bi + 5]);
+        e += 0.5 * masses[i] * (vx * vx + vy * vy + vz * vz);
+        for j in (i + 1)..n {
+            let bj = j * STRIDE;
+            let dx = cur[bj] - cur[bi];
+            let dy = cur[bj + 1] - cur[bi + 1];
+            let dz = cur[bj + 2] - cur[bi + 2];
+            e -= G * masses[i] * masses[j] / (dx * dx + dy * dy + dz * dz + SOFTENING).sqrt();
+        }
+    }
+    e
+}
+
+/// Sequential baseline total energy (one partial over the whole range).
+pub fn total_energy(d: &NBodyData) -> f64 {
+    partial_energy(d, 0, d.n)
+}
+
+/// The all-reduce payload for the energy sum: one `f64` partial plus a
+/// leaf count so the test can assert every partition member was folded.
+#[derive(Clone, Debug, Default)]
+pub struct EnergySum {
+    pub sum: f64,
+    pub parts: i64,
+}
+
+impl EnergySum {
+    fn init(&mut self, _p: &Params, _aux: Aux) -> Result<ReturnCode> {
+        self.sum = 0.0;
+        self.parts = 0;
+        Ok(ReturnCode::CompletedOk)
+    }
+
+    /// The [`AllReduceOp`] fold — plain addition, associative, and the
+    /// leaf and accumulator share this class.
+    ///
+    /// [`AllReduceOp`]: crate::collectives::AllReduceOp
+    fn merge(&mut self, _p: &Params, aux: Aux) -> Result<ReturnCode> {
+        let other = downcast_mut::<EnergySum>(aux.expect("merge input"), "nBodyEnergy.merge")?;
+        self.sum += other.sum;
+        self.parts += other.parts.max(1);
+        Ok(ReturnCode::CompletedOk)
+    }
+}
+
+crate::gpp_data_class!(EnergySum, "nBodyEnergy", {
+    "init" => init,
+    "merge" => merge,
+}, props {
+    "sum" => |s| Value::Float(s.sum),
+    "parts" => |s| Value::Int(s.parts),
+});
+
+impl crate::util::codec::Wire for EnergySum {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.sum.encode(out);
+        self.parts.encode(out);
+    }
+
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(Self {
+            sum: f64::decode(input)?,
+            parts: i64::decode(input)?,
+        })
+    }
+}
+
+/// Total energy via all-reduce: the bodies are partitioned across
+/// `leaves` lanes, each lane computes its [`partial_energy`] and feeds
+/// it in, and **every** lane receives the folded total — this was a
+/// flat `ListFanOne` collection into one combine before the collective
+/// trees landed; `tree` switches between that flat baseline and the
+/// log-depth tree so the two can be compared end to end. Returns the
+/// per-lane results (all equal up to f64 fold order).
+pub fn energy_allreduce(
+    d: &NBodyData,
+    leaves: usize,
+    fanout: usize,
+    tree: bool,
+    cfg: &crate::csp::RuntimeConfig,
+) -> Result<Vec<f64>> {
+    use crate::collectives::{allreduce_flat, allreduce_tree, AllReduceOp};
+    use crate::csp::process::{run_parallel_named, ProcessFn};
+    use crate::data::details::LocalDetails;
+    use crate::data::message::{Message, Terminator};
+
+    register();
+    let leaves = leaves.clamp(1, d.n.max(1));
+    let op = AllReduceOp::new(
+        LocalDetails::new("nBodyEnergy").init("init", Params::empty()),
+        "merge",
+    );
+    let (txs, ins) = cfg.channel_list::<Message>(leaves, "nb.energy.in");
+    let (outs, rxs) = cfg.channel_list::<Message>(leaves, "nb.energy.out");
+    let mut procs = if tree {
+        allreduce_tree(cfg, "nb.energy", ins, outs, fanout, &op)
+    } else {
+        allreduce_flat(cfg, "nb.energy", ins, outs, &op)
+    };
+    let per = d.n.div_ceil(leaves);
+    for (lane, tx) in txs.into_iter().enumerate() {
+        let partial = partial_energy(d, lane * per, ((lane + 1) * per).min(d.n));
+        procs.push(ProcessFn::boxed("leaf", move || {
+            tx.write(Message::data(EnergySum {
+                sum: partial,
+                parts: 1,
+            }))?;
+            tx.write(Message::Terminator(Terminator::new()))
+        }));
+    }
+    let slots: Vec<std::sync::Arc<std::sync::Mutex<Option<(f64, i64)>>>> =
+        (0..leaves).map(|_| Default::default()).collect();
+    for (lane, rx) in rxs.into_iter().enumerate() {
+        let slot = slots[lane].clone();
+        procs.push(ProcessFn::boxed("lane", move || loop {
+            match rx.read()? {
+                Message::Data(obj) => {
+                    let sum = match obj.log_prop("sum") {
+                        Some(Value::Float(v)) => v,
+                        other => panic!("nBodyEnergy.sum missing: {other:?}"),
+                    };
+                    let parts = match obj.log_prop("parts") {
+                        Some(Value::Int(v)) => v,
+                        other => panic!("nBodyEnergy.parts missing: {other:?}"),
+                    };
+                    *slot.lock().unwrap() = Some((sum, parts));
+                }
+                Message::Terminator(_) => return Ok(()),
+            }
+        }));
+    }
+    run_parallel_named("nb.energy.allreduce", procs)?;
+    let mut results = Vec::with_capacity(leaves);
+    for (lane, slot) in slots.iter().enumerate() {
+        let (sum, parts) = slot
+            .lock()
+            .unwrap()
+            .expect("every lane receives the folded total");
+        assert_eq!(
+            parts, leaves as i64,
+            "lane {lane}: every leaf partial folded exactly once"
+        );
+        results.push(sum);
+    }
+    Ok(results)
+}
+
 pub fn register() {
     register_class("nBodyData", || Box::new(NBodyData::default()));
     register_class("nBodyResult", || Box::new(NBodyResult::default()));
+    register_class("nBodyEnergy", || Box::new(EnergySum::default()));
+    crate::data::wire::register_wire_class::<EnergySum>("nBodyEnergy");
 }
 
 /// Sequential baseline: run `iterations` steps on one core.
@@ -318,6 +479,42 @@ mod tests {
                 "nodes={nodes}"
             );
         }
+    }
+
+    #[test]
+    fn energy_allreduce_matches_sequential_flat_and_tree() {
+        let d = sequential(48, 7, 0.01, 10).unwrap();
+        let expect = total_energy(&d);
+        assert!(expect.is_finite() && expect != 0.0);
+        let tol = expect.abs() * 1e-9;
+        for cfg in [
+            crate::csp::RuntimeConfig::rendezvous(),
+            crate::csp::RuntimeConfig::buffered(4),
+        ] {
+            for tree in [false, true] {
+                let lanes = energy_allreduce(&d, 6, 2, tree, &cfg).unwrap();
+                assert_eq!(lanes.len(), 6);
+                for (lane, got) in lanes.iter().enumerate() {
+                    // Fold order differs between flat and tree, so the
+                    // comparison is up to f64 re-association, not bits.
+                    assert!(
+                        (got - expect).abs() <= tol,
+                        "tree={tree} lane={lane}: {got} vs {expect}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partial_energies_partition_the_total() {
+        let d = generate_bodies(33, 9, 0.01);
+        let whole = total_energy(&d);
+        let split: f64 = [(0, 11), (11, 22), (22, 33)]
+            .iter()
+            .map(|&(lo, hi)| partial_energy(&d, lo, hi))
+            .sum();
+        assert!((whole - split).abs() <= whole.abs() * 1e-12, "{whole} vs {split}");
     }
 
     #[test]

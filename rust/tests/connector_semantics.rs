@@ -1,0 +1,454 @@
+//! Connector terminator-semantics suite (paper §4.3.1, CSPm
+//! Definition 4 `Spread_End`), run under the deterministic simulation:
+//!
+//! * every **spreader** delivers exactly one payload-carrying
+//!   terminator — the real `UniversalTerminator` (and its absorbed log
+//!   records) reaches one output; the rest get fresh empty ones, so
+//!   downstream absorbers count each log payload exactly once;
+//! * every **reducer** absorbs each source exactly once — the merged
+//!   terminator carries one marker per source, no more, no fewer;
+//! * the **collective trees** (broadcast / scatter / gather /
+//!   all-reduce) preserve both contracts end to end: a marker fed in is
+//!   conserved through arbitrarily deep spread/merge nesting.
+//!
+//! Every check runs over rendezvous *and* buffered transports and under
+//! round-robin *and* seeded schedules; the Explorer tests additionally
+//! enumerate interleavings, with the invariant checked inside the
+//! network (a violating schedule surfaces as a process error carrying
+//! its replayable schedule).
+
+use std::sync::{Arc, Mutex};
+
+use gpp::collectives::{
+    allreduce_tree, broadcast_tree, gather_tree, scatter_tree, AllReduceOp,
+};
+use gpp::csp::channel::In;
+use gpp::csp::process::{CSProcess, ProcessFn};
+use gpp::csp::sim::{Explorer, SimNet, SimPolicy};
+use gpp::data::details::LocalDetails;
+use gpp::data::message::{Message, Terminator};
+use gpp::logging::LogRecord;
+use gpp::processes::{
+    AnyFanOne, ListFanOne, ListParOne, ListSeqOne, OneFanAny, OneFanList, OneParCastList,
+    OneSeqCastList,
+};
+use gpp::workloads::montecarlo::PiData;
+use gpp::{GppError, Params, RuntimeConfig};
+
+fn setup() {
+    gpp::workloads::register_all();
+}
+
+/// A terminator carrying one marker log record — the payload whose
+/// conservation the whole suite tracks.
+fn marker_term() -> Terminator {
+    let mut t = Terminator::new();
+    t.logs.push(LogRecord::marker("term-payload"));
+    t
+}
+
+fn blob() -> Message {
+    Message::data(PiData::default())
+}
+
+/// Per-lane drain results: `(lane, data messages seen, terminator)`.
+type Seen = Arc<Mutex<Vec<(usize, usize, Terminator)>>>;
+
+fn drain_into(lane: usize, rx: In<Message>, seen: Seen) -> Box<dyn CSProcess> {
+    ProcessFn::boxed("drain", move || {
+        let mut data = 0usize;
+        loop {
+            match rx.read()? {
+                Message::Data(_) => data += 1,
+                Message::Terminator(t) => {
+                    seen.lock().unwrap().push((lane, data, t));
+                    return Ok(());
+                }
+            }
+        }
+    })
+}
+
+fn assert_spread_end(seen: &Seen, lanes: usize, what: &str) {
+    let got = seen.lock().unwrap();
+    assert_eq!(got.len(), lanes, "{what}: every lane terminates");
+    let carriers = got.iter().filter(|(_, _, t)| !t.logs.is_empty()).count();
+    assert_eq!(carriers, 1, "{what}: exactly one payload-carrying terminator");
+    let total: usize = got.iter().map(|(_, _, t)| t.logs.len()).sum();
+    assert_eq!(total, 1, "{what}: the payload is delivered exactly once");
+}
+
+const CFGS: [fn() -> RuntimeConfig; 2] = [RuntimeConfig::rendezvous, || {
+    RuntimeConfig::buffered(4)
+}];
+const POLICIES: [SimPolicy; 3] = [
+    SimPolicy::RoundRobin,
+    SimPolicy::Seeded(7),
+    SimPolicy::Seeded(23),
+];
+
+// ------------------------------------------------------------- spreaders
+
+const SPREADERS: [&str; 4] = ["fanAny", "fanList", "seqCast", "parCast"];
+
+/// Build `feeder -> spreader -> n drains` with 4 data objects and one
+/// marker terminator fed in.
+fn spreader_net(
+    cfg: &RuntimeConfig,
+    kind: &str,
+    n: usize,
+    seen: &Seen,
+) -> Vec<Box<dyn CSProcess>> {
+    let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
+    let (tx, rx) = cfg.channel::<Message>("cs.in");
+    if kind == "fanAny" {
+        // One shared any-end: every sharer gets its own terminator.
+        let (out, shared) = cfg.channel::<Message>("cs.any");
+        procs.push(Box::new(OneFanAny::new(rx, out, n)));
+        for lane in 0..n {
+            procs.push(drain_into(lane, shared.clone(), seen.clone()));
+        }
+    } else {
+        let (outs, ins) = cfg.channel_list::<Message>(n, "cs.out");
+        procs.push(match kind {
+            "fanList" => Box::new(OneFanList::new(rx, outs)) as Box<dyn CSProcess>,
+            "seqCast" => Box::new(OneSeqCastList::new(rx, outs)),
+            "parCast" => Box::new(OneParCastList::new(rx, outs)),
+            other => panic!("unknown spreader {other}"),
+        });
+        for (lane, i) in ins.into_iter().enumerate() {
+            procs.push(drain_into(lane, i, seen.clone()));
+        }
+    }
+    procs.push(ProcessFn::boxed("feed", move || {
+        for _ in 0..4 {
+            tx.write(blob())?;
+        }
+        tx.write(Message::Terminator(marker_term()))
+    }));
+    procs
+}
+
+#[test]
+fn every_spreader_delivers_exactly_one_payload_carrying_terminator() {
+    setup();
+    for mk in CFGS {
+        for policy in &POLICIES {
+            for kind in SPREADERS {
+                let net = SimNet::new(policy.clone());
+                let seen: Seen = Default::default();
+                let procs = net.build_under(|| spreader_net(&mk(), kind, 3, &seen));
+                net.run("spread", procs).unwrap_or_else(|e| {
+                    panic!("{kind}/{policy:?}: {e}; schedule=[{}]", net.schedule_string())
+                });
+                let what = format!("{kind} under {policy:?}");
+                assert_spread_end(&seen, 3, &what);
+                let data: Vec<usize> = {
+                    let mut got = seen.lock().unwrap().clone();
+                    got.sort_by_key(|(lane, _, _)| *lane);
+                    got.iter().map(|(_, d, _)| *d).collect()
+                };
+                match kind {
+                    // Casts copy every object to every lane.
+                    "seqCast" | "parCast" => assert_eq!(data, [4, 4, 4], "{what}"),
+                    // Fans partition the stream across lanes.
+                    _ => assert_eq!(data.iter().sum::<usize>(), 4, "{what}"),
+                }
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- reducers
+
+const REDUCERS: [&str; 4] = ["anyFan", "listFan", "listSeq", "listPar"];
+
+/// Build `n feeders -> reducer -> drain`, each feeder contributing one
+/// data object and one marker terminator.
+fn reducer_net(
+    cfg: &RuntimeConfig,
+    kind: &str,
+    n: usize,
+    seen: &Seen,
+) -> Vec<Box<dyn CSProcess>> {
+    let mut procs: Vec<Box<dyn CSProcess>> = Vec::new();
+    let (out, rx) = cfg.channel::<Message>("cr.out");
+    if kind == "anyFan" {
+        let (shared, input) = cfg.channel::<Message>("cr.any");
+        procs.push(Box::new(AnyFanOne::new(input, out, n)));
+        for _ in 0..n {
+            let tx = shared.clone();
+            procs.push(ProcessFn::boxed("feed", move || {
+                tx.write(blob())?;
+                tx.write(Message::Terminator(marker_term()))
+            }));
+        }
+    } else {
+        let (txs, ins) = cfg.channel_list::<Message>(n, "cr.in");
+        procs.push(match kind {
+            "listFan" => Box::new(ListFanOne::new(ins, out)) as Box<dyn CSProcess>,
+            "listSeq" => Box::new(ListSeqOne::new(ins, out)),
+            "listPar" => Box::new(ListParOne::new(ins, out)),
+            other => panic!("unknown reducer {other}"),
+        });
+        for tx in txs {
+            procs.push(ProcessFn::boxed("feed", move || {
+                tx.write(blob())?;
+                tx.write(Message::Terminator(marker_term()))
+            }));
+        }
+    }
+    procs.push(drain_into(0, rx, seen.clone()));
+    procs
+}
+
+#[test]
+fn every_reducer_absorbs_each_source_exactly_once() {
+    setup();
+    for mk in CFGS {
+        for policy in &POLICIES {
+            for kind in REDUCERS {
+                let net = SimNet::new(policy.clone());
+                let seen: Seen = Default::default();
+                let procs = net.build_under(|| reducer_net(&mk(), kind, 3, &seen));
+                net.run("reduce", procs).unwrap_or_else(|e| {
+                    panic!("{kind}/{policy:?}: {e}; schedule=[{}]", net.schedule_string())
+                });
+                let got = seen.lock().unwrap();
+                assert_eq!(got.len(), 1, "{kind}: one merged stream");
+                let (_, data, term) = &got[0];
+                assert_eq!(*data, 3, "{kind}: every source's data forwarded");
+                assert_eq!(
+                    term.logs.len(),
+                    3,
+                    "{kind} under {policy:?}: one absorbed marker per source"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ collective trees
+
+#[test]
+fn broadcast_and_scatter_trees_keep_spread_end() {
+    setup();
+    for mk in CFGS {
+        for policy in &POLICIES {
+            for cast in [true, false] {
+                let net = SimNet::new(policy.clone());
+                let seen: Seen = Default::default();
+                let procs = net.build_under(|| {
+                    let cfg = mk();
+                    let (tx, rx) = cfg.channel::<Message>("ct.in");
+                    let (outs, ins) = cfg.channel_list::<Message>(5, "ct.out");
+                    let mut procs = if cast {
+                        broadcast_tree(&cfg, "ct", rx, outs, 2)
+                    } else {
+                        scatter_tree(&cfg, "ct", rx, outs, 2)
+                    };
+                    for (lane, i) in ins.into_iter().enumerate() {
+                        procs.push(drain_into(lane, i, seen.clone()));
+                    }
+                    procs.push(ProcessFn::boxed("feed", move || {
+                        for _ in 0..4 {
+                            tx.write(blob())?;
+                        }
+                        tx.write(Message::Terminator(marker_term()))
+                    }));
+                    procs
+                });
+                let what = format!(
+                    "{} tree under {policy:?}",
+                    if cast { "broadcast" } else { "scatter" }
+                );
+                net.run("ctree", procs).unwrap_or_else(|e| {
+                    panic!("{what}: {e}; schedule=[{}]", net.schedule_string())
+                });
+                assert_spread_end(&seen, 5, &what);
+                let total: usize = seen.lock().unwrap().iter().map(|(_, d, _)| *d).sum();
+                assert_eq!(total, if cast { 4 * 5 } else { 4 }, "{what}: data routing");
+            }
+        }
+    }
+}
+
+#[test]
+fn gather_tree_absorbs_each_source_exactly_once() {
+    setup();
+    for mk in CFGS {
+        for policy in &POLICIES {
+            let net = SimNet::new(policy.clone());
+            let seen: Seen = Default::default();
+            let procs = net.build_under(|| {
+                let cfg = mk();
+                let (txs, ins) = cfg.channel_list::<Message>(5, "gt.in");
+                let (out, rx) = cfg.channel::<Message>("gt.out");
+                let mut procs = gather_tree(&cfg, "gt", ins, out, 2);
+                for tx in txs {
+                    procs.push(ProcessFn::boxed("feed", move || {
+                        tx.write(blob())?;
+                        tx.write(Message::Terminator(marker_term()))
+                    }));
+                }
+                procs.push(drain_into(0, rx, seen.clone()));
+                procs
+            });
+            net.run("gtree", procs).unwrap_or_else(|e| {
+                panic!("gather/{policy:?}: {e}; schedule=[{}]", net.schedule_string())
+            });
+            let got = seen.lock().unwrap();
+            let (_, data, term) = &got[0];
+            assert_eq!(*data, 5, "all leaf data reaches the root");
+            assert_eq!(
+                term.logs.len(),
+                5,
+                "gather tree under {policy:?}: every source absorbed exactly once \
+                 through every merge level"
+            );
+        }
+    }
+}
+
+fn energy_op() -> AllReduceOp {
+    AllReduceOp::new(
+        LocalDetails::new("nBodyEnergy").init("init", Params::empty()),
+        "merge",
+    )
+}
+
+#[test]
+fn allreduce_tree_conserves_the_terminator_payload() {
+    setup();
+    for mk in CFGS {
+        for policy in &POLICIES {
+            let net = SimNet::new(policy.clone());
+            let seen: Seen = Default::default();
+            let procs = net.build_under(|| {
+                let cfg = mk();
+                let (txs, ins) = cfg.channel_list::<Message>(4, "ar.in");
+                let (outs, rxs) = cfg.channel_list::<Message>(4, "ar.out");
+                let mut procs = allreduce_tree(&cfg, "ar", ins, outs, 2, &energy_op());
+                for tx in txs {
+                    procs.push(ProcessFn::boxed("feed", move || {
+                        tx.write(Message::data(gpp::workloads::nbody::EnergySum {
+                            sum: 1.0,
+                            parts: 1,
+                        }))?;
+                        tx.write(Message::Terminator(marker_term()))
+                    }));
+                }
+                for (lane, rx) in rxs.into_iter().enumerate() {
+                    procs.push(drain_into(lane, rx, seen.clone()));
+                }
+                procs
+            });
+            net.run("artree", procs).unwrap_or_else(|e| {
+                panic!("allreduce/{policy:?}: {e}; schedule=[{}]", net.schedule_string())
+            });
+            let got = seen.lock().unwrap();
+            assert_eq!(got.len(), 4);
+            for (lane, data, _) in got.iter() {
+                assert_eq!(*data, 1, "lane {lane}: exactly one reduced result");
+            }
+            // The reduce side absorbs all 4 source markers into the root
+            // terminator; the broadcast side then delivers that carrier
+            // to exactly one lane (Spread_End again).
+            let carriers = got.iter().filter(|(_, _, t)| !t.logs.is_empty()).count();
+            assert_eq!(carriers, 1, "one carrier lane under {policy:?}");
+            let total: usize = got.iter().map(|(_, _, t)| t.logs.len()).sum();
+            assert_eq!(total, 4, "all 4 markers conserved under {policy:?}");
+        }
+    }
+}
+
+// -------------------------------------------------------------- explorer
+
+/// A drain that *checks* instead of recording: conservation violations
+/// become process errors, so the Explorer surfaces the offending
+/// schedule (replayable) rather than an aggregate after the fact.
+fn checking_drain(expect_data: usize, expect_logs: usize, rx: In<Message>) -> Box<dyn CSProcess> {
+    ProcessFn::boxed("check", move || {
+        let mut data = 0usize;
+        loop {
+            match rx.read()? {
+                Message::Data(_) => data += 1,
+                Message::Terminator(t) => {
+                    if data != expect_data || t.logs.len() != expect_logs {
+                        return Err(GppError::Other(format!(
+                            "conservation violated: {data} data (want {expect_data}), \
+                             {} markers (want {expect_logs})",
+                            t.logs.len()
+                        )));
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    })
+}
+
+#[test]
+fn explorer_broadcast_gather_loop_conserves_the_payload_on_every_schedule() {
+    setup();
+    // broadcast(3, fanout 2) feeding gather(3, fanout 2): the final
+    // terminator must carry exactly one marker (the single carrier
+    // absorbed once) and 3 copies of the data object, on EVERY
+    // explored interleaving.
+    let report = Explorer::new(30_000, 150).explore(|net| {
+        net.build_under(|| {
+            let cfg = RuntimeConfig::rendezvous();
+            let (tx, rx) = cfg.channel::<Message>("x.in");
+            let (outs, lanes) = cfg.channel_list::<Message>(3, "x.mid");
+            let (root, sink) = cfg.channel::<Message>("x.out");
+            let mut procs = broadcast_tree(&cfg, "x.b", rx, outs, 2);
+            procs.extend(gather_tree(&cfg, "x.g", lanes, root, 2));
+            procs.push(ProcessFn::boxed("feed", move || {
+                tx.write(blob())?;
+                tx.write(Message::Terminator(marker_term()))
+            }));
+            procs.push(checking_drain(3, 1, sink));
+            procs
+        })
+    });
+    assert!(
+        report.failure.is_none(),
+        "{}",
+        report.failure.map(|f| f.to_string()).unwrap_or_default()
+    );
+    assert!(report.schedules >= 2, "explorer must branch");
+}
+
+#[test]
+fn explorer_allreduce_tree_absorbs_once_on_every_schedule() {
+    setup();
+    // allreduce(2, fanout 2) into a gather: both source markers and
+    // both reduced results must reach the sink on every interleaving.
+    let report = Explorer::new(30_000, 150).explore(|net| {
+        net.build_under(|| {
+            let cfg = RuntimeConfig::rendezvous();
+            let (txs, ins) = cfg.channel_list::<Message>(2, "y.in");
+            let (outs, lanes) = cfg.channel_list::<Message>(2, "y.mid");
+            let (root, sink) = cfg.channel::<Message>("y.out");
+            let mut procs = allreduce_tree(&cfg, "y.ar", ins, outs, 2, &energy_op());
+            procs.extend(gather_tree(&cfg, "y.g", lanes, root, 2));
+            for tx in txs {
+                procs.push(ProcessFn::boxed("feed", move || {
+                    tx.write(Message::data(gpp::workloads::nbody::EnergySum {
+                        sum: 1.0,
+                        parts: 1,
+                    }))?;
+                    tx.write(Message::Terminator(marker_term()))
+                }));
+            }
+            procs.push(checking_drain(2, 2, sink));
+            procs
+        })
+    });
+    assert!(
+        report.failure.is_none(),
+        "{}",
+        report.failure.map(|f| f.to_string()).unwrap_or_default()
+    );
+    assert!(report.schedules >= 2, "explorer must branch");
+}
