@@ -723,6 +723,30 @@ pub fn parse_network(text: &str) -> Result<NetworkSpec> {
                 if kvs.contains_key("timeout") {
                     p.timeout_ms = Some(usize_at("timeout")? as u64);
                 }
+                if let Some(f) = kvs.get("fleet") {
+                    p.standing = match f.as_str() {
+                        "standing" => true,
+                        "batch" => false,
+                        other => {
+                            return Err(NetworkSpec::err(format!(
+                                "line {}: fleet must be batch|standing, not '{other}'",
+                                lineno + 1
+                            )))
+                        }
+                    };
+                }
+                if kvs.contains_key("heartbeat") {
+                    p.heartbeat_ms = Some(usize_at("heartbeat")? as u64);
+                }
+                if kvs.contains_key("evict") {
+                    p.evict_ms = Some(usize_at("evict")? as u64);
+                }
+                if kvs.contains_key("admission") {
+                    p.admission = Some(usize_at("admission")?);
+                }
+                if kvs.contains_key("park") {
+                    p.park_ms = Some(usize_at("park")? as u64);
+                }
                 spec.placement = Some(p);
             }
             "place" => {
@@ -1044,8 +1068,31 @@ mod tests {
         assert_eq!(p.join.as_deref(), Some("10.0.0.1:7777"));
         assert_eq!(p.timeout_ms, Some(2500));
         assert_eq!(p.stage, Some(2));
+        assert!(!p.standing, "fleet defaults to batch");
         // `place` without `hosts` is rejected.
         assert!(parse_network("place stage=1\n").is_err());
+    }
+
+    #[test]
+    fn parse_applies_standing_fleet_hosts_keys() {
+        let spec = parse_network(
+            "hosts workers=2 fleet=standing heartbeat=50 evict=400 admission=4 park=2000\n\
+             emit class=piData init=initClass(4) create=createInstance(10)\n\
+             group workers=2 function=getWithin\n\
+             collect class=piResults init=initClass(1)\n",
+        )
+        .unwrap();
+        let p = spec.placement.expect("placement parsed");
+        assert!(p.standing);
+        assert_eq!(p.heartbeat_ms, Some(50));
+        assert_eq!(p.evict_ms, Some(400));
+        assert_eq!(p.admission, Some(4));
+        assert_eq!(p.park_ms, Some(2000));
+        let net = p.net_options();
+        assert_eq!(net.heartbeat, Some(std::time::Duration::from_millis(50)));
+        assert_eq!(net.eviction, Some(std::time::Duration::from_millis(400)));
+        // An unknown fleet mode is a parse error, not a silent default.
+        assert!(parse_network("hosts workers=1 fleet=elastic\n").is_err());
     }
 
     #[test]
@@ -1190,6 +1237,24 @@ mod tests {
         assert_eq!(
             results[0].log_prop("iterationSum"),
             Some(Value::Int(4 * 8 * 2000))
+        );
+    }
+
+    #[test]
+    fn serve_example_file_runs_on_a_loopback_standing_fleet() {
+        crate::workloads::register_all();
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/serve_pi.gpp");
+        let spec = parse_network(&std::fs::read_to_string(path).unwrap()).unwrap();
+        let p = spec.placement.as_ref().expect("hosts line");
+        assert!(p.standing, "serve_pi.gpp declares fleet=standing");
+        // `run()` sees the standing placement and brings up the whole
+        // service stack in-process: daemon, elastic workers, submit,
+        // drain — the same path `gpp serve` exercises across machines.
+        let results = spec.run().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].log_prop("iterationSum"),
+            Some(Value::Int(125 * 64))
         );
     }
 

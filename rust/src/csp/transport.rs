@@ -97,6 +97,17 @@ impl std::fmt::Display for TransportKind {
 pub enum FaultOp {
     Write,
     Read,
+    /// One cluster control frame (either direction) on a host↔worker
+    /// connection; `chan` matches the connection label. Firing with
+    /// [`FaultAction::Fail`]/[`FaultAction::Poison`] tears the
+    /// connection down — "kill connection after N frames" — which is
+    /// how the elastic reconnect path is exercised without timing.
+    ConnFrame,
+    /// One worker heartbeat send. Firing with [`FaultAction::Drop`]
+    /// suppresses this and every later beat (the worker goes silent
+    /// without closing its socket), which is how heartbeat-deadline
+    /// eviction is exercised deterministically.
+    Beat,
 }
 
 /// What happens when a rule fires.

@@ -6,6 +6,8 @@
 //! gpp mandelbrot [--workers N] …  Mandelbrot farm (paper §6.6)
 //! gpp jacobi | nbody | image | goldbach | concordance
 //! gpp cluster-host | cluster-worker  cluster roles (paper §7)
+//! gpp serve <addr> | serve-worker | submit   standing cluster service
+//!                                 (elastic fleet, admission control, drain)
 //! gpp verify [base|gop-pog|extracted|all]   run the CSPm/FDR assertions (§4.6, §9)
 //! gpp sim [--procs N] …           scaled cluster-protocol simulation (BENCH_sim.json)
 //! gpp calibrate                   print this host's workload costs
@@ -125,6 +127,9 @@ fn main() {
         "concordance" => cmd_concordance(&args),
         "cluster-host" => cmd_cluster_host(&args),
         "cluster-worker" => cmd_cluster_worker(&args),
+        "serve" => cmd_serve(&args),
+        "serve-worker" => cmd_serve_worker(&args),
+        "submit" => cmd_submit(&args),
         "verify" => cmd_verify(&args),
         "sim" => cmd_sim(&args),
         "calibrate" => cmd_calibrate(),
@@ -156,7 +161,9 @@ USAGE: gpp <command> [--flags]
 COMMANDS
   run <file>         run a declarative .gpp network file (the DSL)
                      cluster specs (a `hosts` line): [--role host|worker|loopback
-                     --join addr --workers N --timeout-ms T]
+                     --join addr --workers N --timeout-ms T]; a `hosts
+                     fleet=standing` spec runs against a `gpp serve` daemon
+                     (host role = submit the network as one job)
   pi                 Monte-Carlo pi farm      [--workers N --instances I --iterations K --backend native|xla]
   mandelbrot         Mandelbrot farm          [--workers N --width W --height H --max-iter M --out img.ppm]
   jacobi             Jacobi MultiCoreEngine   [--nodes N --size S --margin E]
@@ -166,14 +173,32 @@ COMMANDS
   concordance        GoP concordance          [--groups G --words W --N n]
   cluster-host       serve Mandelbrot rows    [--join A --nodes N --width W --height H --max-iter M --timeout-ms T]
   cluster-worker     join a host, run its job [--join A --timeout-ms T]
+  serve <addr>       standing cluster daemon: accepts named jobs from many
+                     concurrent clients over an elastic worker fleet, with
+                     admission control and per-job isolation
+                     [--admission N --park-ms P --evict-ms E --timeout-ms T]
+                     `--drain` gracefully stops a running daemon (finish
+                     resident jobs, stop admitting, print the summary);
+                     `--stats` prints its live metrics snapshot JSON
+  serve-worker       join a serve daemon as an elastic worker: heartbeats,
+                     reconnect with jittered backoff [--join A --heartbeat-ms H
+                     --timeout-ms T --retry-ms R --kill-conn-after N (chaos:
+                     kill the connection after N frames, then reconnect)]
+  submit             submit a named Mandelbrot job to a serve daemon and wait
+                     for its report [--name NAME --width W --height ROWS
+                     --max-iter M --timeout-ms T]
   verify [which]     run FDR-style assertions: base | gop-pog | extracted | all (default all)
   sim                run the cluster control protocol inside the scaled simulation:
                      N logical workers on a fixed carrier pool under a modelled
                      network; writes BENCH_sim.json (events/sec, peak memory)
                      [--procs N --items K --net-model ideal|lan|wan|lossy|custom:LAT:JIT:LOSS
-                      --churn PERMILLE --seed S --carriers C --compute-ticks T
+                      --churn PERMILLE --silent PERMILLE --reconnect
+                      --heartbeat-ticks H --evict-ticks E
+                      --seed S --carriers C --compute-ticks T
                       --min-events-per-sec X]
-                     (--min-events-per-sec turns the run into an acceptance gate)
+                     (--min-events-per-sec turns the run into an acceptance gate;
+                      --silent strands items until --evict-ticks recovers them;
+                      --reconnect lets churned workers redial with backoff)
   calibrate          measure per-item workload costs on this host
   bench              hot-path micro benches; writes BENCH_csp.json, BENCH_net.json and
                      BENCH_dispatch.json at the repo root
@@ -254,7 +279,15 @@ fn cmd_run(args: &Args) -> i32 {
         ("worker", Some(p)) => {
             let addr = p.join.clone().unwrap_or_else(|| "127.0.0.1:7777".to_string());
             let opts = p.net_options();
-            return match loader::run_cluster_worker(&addr, &opts) {
+            // A standing fleet's workers are elastic: they serve many
+            // jobs and redial lost connections with backoff.
+            let done = if p.standing {
+                let policy = gpp::net::RetryPolicy::connect(p.timeout_ms.unwrap_or(30_000));
+                gpp::net::serve::run_serve_worker(&addr, &opts, &policy)
+            } else {
+                loader::run_cluster_worker(&addr, &opts)
+            };
+            return match done {
                 Ok(n) => {
                     println!("cluster worker: completed {n} items");
                     0
@@ -521,7 +554,120 @@ fn net_opts_from_args(args: &Args) -> gpp::net::NetOptions {
     if args.get("timeout-ms").is_some() {
         opts = opts.with_read_timeout_ms(args.u64("timeout-ms", 0));
     }
+    if args.get("heartbeat-ms").is_some() {
+        opts = opts.with_heartbeat_ms(args.u64("heartbeat-ms", 0));
+    }
+    if args.get("evict-ms").is_some() {
+        opts = opts.with_eviction_ms(args.u64("evict-ms", 0));
+    }
     opts
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use gpp::net::serve;
+    let Some(addr) = args.positional.get(1) else {
+        return fail("serve needs an address (e.g. gpp serve 0.0.0.0:7777)");
+    };
+    let net = net_opts_from_args(args);
+    if args.has("drain") {
+        return match serve::drain(addr, &net) {
+            Ok(summary) => {
+                println!("{summary}");
+                0
+            }
+            Err(e) => fail(e),
+        };
+    }
+    if args.has("stats") {
+        return match serve::server_stats(addr, &net) {
+            Ok(json) => {
+                println!("{json}");
+                0
+            }
+            Err(e) => fail(e),
+        };
+    }
+    let opts = serve::ServeOptions::default()
+        .with_net(net)
+        .with_admission(args.usize("admission", 8))
+        .with_park_ms(args.u64("park-ms", 0));
+    match serve::run_serve(addr, &opts) {
+        Ok(s) => {
+            println!(
+                "serve: drained; jobs accepted={} completed={} failed={} rejected={}; \
+                 workers joined={} reconnected={}",
+                s.jobs_accepted,
+                s.jobs_completed,
+                s.jobs_failed,
+                s.jobs_rejected,
+                s.workers_joined,
+                s.workers_reconnected
+            );
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_serve_worker(args: &Args) -> i32 {
+    use gpp::csp::transport::{FaultAction, FaultOp, FaultPlan, FaultRule};
+    use gpp::net::{serve, RetryPolicy};
+    let addr = args
+        .get("join")
+        .or(args.get("addr"))
+        .unwrap_or("127.0.0.1:7777")
+        .to_string();
+    let opts = net_opts_from_args(args);
+    let policy = RetryPolicy::connect(args.u64("retry-ms", 30_000));
+    // Chaos knob for smoke tests: kill the live connection after N
+    // control frames and let the elastic redial path prove itself.
+    let kill_after = args.usize("kill-conn-after", 0);
+    let faults = (kill_after > 0).then(|| {
+        FaultPlan::new(vec![FaultRule::new(
+            "worker:",
+            FaultOp::ConnFrame,
+            kill_after,
+            FaultAction::Fail("scripted chaos kill".into()),
+        )])
+    });
+    match serve::run_serve_worker_faulted(&addr, &opts, &policy, faults) {
+        Ok(items) => {
+            println!("serve worker: completed {items} items");
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_submit(args: &Args) -> i32 {
+    use gpp::net::cluster::default_config;
+    use gpp::net::{jobs, serve};
+    use gpp::util::codec::to_bytes;
+    let Some(addr) = args.positional.get(1) else {
+        return fail("submit needs the daemon address (e.g. gpp submit 127.0.0.1:7777)");
+    };
+    let name = args.get_or("name", "mandelbrot");
+    let width = args.u64("width", 64) as i64;
+    let rows = args.u64("height", 16) as i64;
+    let max_iter = args.u64("max-iter", 50) as i64;
+    let cfg = to_bytes(&default_config(width, rows, max_iter, 1));
+    let items = (0..rows).map(|r| to_bytes(&r)).collect();
+    match serve::submit_job(addr, name, jobs::MANDELBROT_ROW, &cfg, items, &net_opts_from_args(args))
+    {
+        Ok(report) => {
+            println!(
+                "job '{name}': {} results; workers joined={} lost={} reconnected={}; \
+                 items requeued={}",
+                report.results.len(),
+                report.workers_joined,
+                report.workers_lost,
+                report.workers_reconnected,
+                report.items_requeued
+            );
+            0
+        }
+        Err(e) => fail(e),
+    }
 }
 
 fn cmd_cluster_host(args: &Args) -> i32 {
@@ -726,6 +872,10 @@ fn cmd_sim(args: &Args) -> i32 {
         Err(e) => return fail(e),
     };
     let churn = args.u64("churn", 0) as u32;
+    let silent = args.u64("silent", 0) as u32;
+    let reconnect = args.has("reconnect");
+    let heartbeat_ticks = args.u64("heartbeat-ticks", 0);
+    let evict_ticks = args.u64("evict-ticks", 0);
     let seed = args.u64("seed", 1);
     let carriers = args.usize("carriers", 4);
     let compute = args.u64("compute-ticks", 2_000);
@@ -734,6 +884,10 @@ fn cmd_sim(args: &Args) -> i32 {
     let scenario = ClusterScenario::new(procs, items)
         .with_model(model.clone())
         .with_churn_permille(churn)
+        .with_silent_permille(silent)
+        .with_reconnect(reconnect)
+        .with_heartbeat_ticks(heartbeat_ticks)
+        .with_evict_ticks(evict_ticks)
         .with_seed(seed)
         .with_carriers(carriers)
         .with_compute_ticks(compute);
@@ -744,14 +898,16 @@ fn cmd_sim(args: &Args) -> i32 {
     let rate = r.events_per_sec();
     let peak_kb = peak_rss_kb();
     println!(
-        "sim: {} procs ({} workers + host), {} items, net={} churn={churn}‰ seed={seed}",
+        "sim: {} procs ({} workers + host), {} items, net={} churn={churn}‰ silent={silent}‰ \
+         heartbeat={heartbeat_ticks} evict={evict_ticks} seed={seed}",
         r.procs, procs, items, model.name
     );
     println!(
-        "sim: {} results, {} joined, {} lost, {} requeued, {} stats",
+        "sim: {} results, {} joined, {} lost, {} reconnected, {} requeued, {} stats",
         r.report.results.len(),
         r.report.workers_joined,
         r.report.workers_lost,
+        r.report.workers_reconnected,
         r.report.items_requeued,
         r.report.worker_stats.len()
     );
@@ -775,6 +931,7 @@ fn cmd_sim(args: &Args) -> i32 {
     json.add_derived("sim.virtual_time", r.virtual_time as f64);
     json.add_derived("sim.peak_rss_kb", peak_kb as f64);
     json.add_derived("sim.workers_lost", r.report.workers_lost as f64);
+    json.add_derived("sim.workers_reconnected", r.report.workers_reconnected as f64);
     json.add_derived("sim.items_requeued", r.report.items_requeued as f64);
     match json.write_at_root("BENCH_sim.json") {
         Ok(p) => {

@@ -22,20 +22,42 @@
 //! holds exactly one connection per worker, and that connection can
 //! later interleave ordinary net-channel traffic beside control
 //! frames without a second socket.
+//!
+//! Since the elastic-service overhaul the fleet is **elastic**:
+//!
+//! * the host keeps its listener open for the whole run, so workers may
+//!   join at any time — including mid-run — and each connection is a
+//!   leased slot in a [`Membership`] registry;
+//! * a worker presents its prior lease on reconnect ([`W_HELLO`] with a
+//!   lease id) and is counted as a *reconnect*, not a fresh join;
+//!   [`run_worker_elastic`] drives the redial loop under a seeded
+//!   [`RetryPolicy`] with exponential backoff and full jitter;
+//! * liveness is judged by deadline, not just TCP errors: workers beat
+//!   ([`W_BEAT`]) every [`NetOptions::heartbeat`], and a host-side
+//!   connection silent past [`NetOptions::eviction`] is *evicted* — the
+//!   pulled-cable peer whose stack never RSTs — with its in-flight item
+//!   requeued through the exact same path a socket error takes.
 
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::csp::error::{GppError, Result};
+use crate::csp::transport::{FaultOp, FaultPlan};
 use crate::obs::metrics::{self, m, MetricsSnapshot};
+use crate::obs::now_us;
 use crate::util::codec::{from_bytes, to_bytes, Wire};
 use crate::workloads::mandelbrot::{MandelbrotCollect, MandelbrotLine};
 
 use super::frame::{
-    mux_handshake, mux_unwrap, mux_wrap, read_frame, set_io_timeouts, set_nodelay, write_frame,
+    err_is_timeout, mux_handshake, mux_unwrap, mux_wrap, read_frame, set_io_timeouts, set_nodelay,
+    write_frame,
 };
 use super::jobs;
+use super::membership::Membership;
+use super::retry::RetryPolicy;
 use super::NetOptions;
 
 /// Host↔worker control traffic rides the mux framing on this reserved
@@ -103,6 +125,8 @@ impl Wire for ClusterConfig {
 // scenario ([`crate::sim::scenario`]) speaks the *same* protocol, tag
 // for tag, that these threads put on real sockets.
 // Worker → host:
+/// `[tag]` for a fresh join, `[tag][u64 lease id]` when resuming a
+/// lease after a connection loss (elastic reconnect).
 pub(crate) const W_HELLO: u8 = 1;
 /// Bare work request (first request; carries no result).
 pub(crate) const W_REQ: u8 = 2;
@@ -114,8 +138,12 @@ pub(crate) const W_FAIL: u8 = 4;
 /// sent (best effort) after it receives `H_DONE`, so the host can print
 /// a merged per-node report at `HostReport` time.
 pub(crate) const W_STATS: u8 = 5;
+/// `[tag]` — heartbeat: "still alive, possibly deep in a long item".
+/// Sent every [`NetOptions::heartbeat`] by a side thread; refreshes the
+/// host's liveness deadline and is otherwise ignored.
+pub(crate) const W_BEAT: u8 = 6;
 // Host → worker:
-/// `[tag][String job name][config bytes…]`
+/// `[tag][u64 lease id][String job name][config bytes…]`
 pub(crate) const H_CONFIG: u8 = 10;
 /// `[tag][u64 item id][item bytes…]`
 pub(crate) const H_WORK: u8 = 11;
@@ -126,10 +154,13 @@ pub(crate) const H_DONE: u8 = 12;
 pub struct HostReport {
     /// One result per item, in item order.
     pub results: Vec<Vec<u8>>,
-    /// Connections that joined the run.
+    /// Connections that joined the run (every session, including
+    /// reconnect sessions of the same worker).
     pub workers_joined: usize,
     /// Connections that died mid-run (their work was requeued).
     pub workers_lost: usize,
+    /// Sessions that resumed a prior lease (elastic reconnects).
+    pub workers_reconnected: usize,
     /// Items that were requeued after a worker loss.
     pub items_requeued: usize,
     /// Final [`MetricsSnapshot`] JSON shipped by each worker over the
@@ -307,7 +338,11 @@ impl HostLedger {
     /// job failure, or every worker lost with items incomplete). Moves
     /// the result buffers out instead of cloning — they can be hundreds
     /// of MB at full size.
-    pub fn take_report(&mut self, workers_joined: usize) -> Result<HostReport> {
+    pub fn take_report(
+        &mut self,
+        workers_joined: usize,
+        workers_reconnected: usize,
+    ) -> Result<HostReport> {
         if let Some(e) = &self.fatal {
             return Err(e.clone());
         }
@@ -326,18 +361,27 @@ impl HostLedger {
             results,
             workers_joined,
             workers_lost: self.workers_lost,
+            workers_reconnected,
             items_requeued: self.items_requeued,
             worker_stats: std::mem::take(&mut self.worker_stats),
         })
     }
 }
 
-type HostSync = (Mutex<HostLedger>, Condvar);
+pub(crate) type HostSync = (Mutex<HostLedger>, Condvar);
 
-/// Serve `items` to `nodes` workers running `job`, work-stealing style:
-/// any idle worker takes the next item; a dead worker's in-flight item
-/// goes back on the queue. Returns when every item has a result (or a
-/// job failed / every worker died).
+/// Serve `items` to workers running `job`, work-stealing style: any
+/// idle worker takes the next item; a dead worker's in-flight item goes
+/// back on the queue. Returns when every item has a result (or a job
+/// failed / every worker died for good).
+///
+/// `nodes` is the *initial* fleet the host waits for before it starts
+/// judging progress; the listener stays open for the whole run, so late
+/// workers join an in-progress run and reconnecting workers resume
+/// their lease. With a `read_timeout` configured the join wait is
+/// bounded (a reduced fleet proceeds; no worker at all is an error);
+/// without one the host waits indefinitely for the declared fleet, as
+/// the paper's §7 batch contract did.
 pub fn serve_items(
     addr: &str,
     nodes: usize,
@@ -346,79 +390,102 @@ pub fn serve_items(
     items: Vec<Vec<u8>>,
     opts: &NetOptions,
 ) -> Result<HostReport> {
-    let listener = TcpListener::bind(addr)
-        .map_err(|e| GppError::Net(format!("host bind {addr}: {e}")))?;
+    let listener =
+        TcpListener::bind(addr).map_err(|e| GppError::Net(format!("host bind {addr}: {e}")))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| GppError::Net(format!("host accept: {e}")))?;
     let sync: Arc<HostSync> = Arc::new((Mutex::new(HostLedger::new(items)), Condvar::new()));
+    let members: Arc<Mutex<Membership>> = Arc::new(Mutex::new(Membership::new()));
+    let live_conns = Arc::new(AtomicUsize::new(0));
 
-    // Join phase. Without a timeout, block until the declared fleet has
-    // joined (the paper's §7 contract: the host waits for its
-    // workstations). With a read timeout configured, the join wait is
-    // bounded too: each worker must connect within the timeout of the
-    // previous join, a run whose joined workers already finished every
-    // item stops waiting for stragglers, and a reduced fleet proceeds —
-    // no worker joining at all is an error, never a silent hang.
-    let mut handles = Vec::new();
-    let spawn_conn = |stream: TcpStream, handles: &mut Vec<std::thread::JoinHandle<Result<()>>>| -> Result<()> {
-        set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
-        set_nodelay(&stream, opts.nodelay)?;
-        let sync = sync.clone();
-        let job = job.to_string();
-        let cfg = cfg.to_vec();
-        handles.push(std::thread::spawn(move || {
-            serve_conn(stream, &job, &cfg, &sync)
-        }));
-        Ok(())
-    };
-    match opts.read_timeout {
-        None => {
-            for _ in 0..nodes {
-                let (stream, _) = listener
-                    .accept()
+    let mut handles: Vec<std::thread::JoinHandle<Result<()>>> = Vec::new();
+    let mut need = nodes;
+    let join_limit = opts.read_timeout;
+    let mut join_deadline = join_limit.map(|l| Instant::now() + l);
+    // Once the fleet has emptied (every connection unwound with the run
+    // incomplete) the host holds the door open one grace window for
+    // reconnecting workers before declaring the run lost.
+    let grace = opts
+        .eviction
+        .or(opts.read_timeout)
+        .unwrap_or(Duration::from_secs(1));
+    let mut empty_since: Option<Instant> = None;
+
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Blocking mode of an accepted socket is platform-
+                // dependent under a non-blocking listener; force it.
+                stream
+                    .set_nonblocking(false)
                     .map_err(|e| GppError::Net(format!("host accept: {e}")))?;
-                spawn_conn(stream, &mut handles)?;
+                set_io_timeouts(&stream, opts.host_read_quantum(), opts.write_timeout)?;
+                set_nodelay(&stream, opts.nodelay)?;
+                live_conns.fetch_add(1, Ordering::SeqCst);
+                let sync = sync.clone();
+                let members = members.clone();
+                let live = live_conns.clone();
+                let job = job.to_string();
+                let cfg = cfg.to_vec();
+                let evict = opts.eviction;
+                handles.push(std::thread::spawn(move || {
+                    let r = serve_conn(
+                        stream,
+                        HostConn {
+                            job: &job,
+                            cfg: &cfg,
+                            sync: &sync,
+                            members: &members,
+                        },
+                        evict,
+                    );
+                    live.fetch_sub(1, Ordering::SeqCst);
+                    r
+                }));
+                join_deadline = join_limit.map(|l| Instant::now() + l);
+                empty_since = None;
+                continue; // drain the backlog before sleeping
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) => return Err(GppError::Net(format!("host accept: {e}"))),
+        }
+        let finished = {
+            let g = sync.0.lock().unwrap();
+            g.is_done() || g.fatal().is_some()
+        };
+        if handles.len() >= need {
+            if finished {
+                break;
+            }
+            if live_conns.load(Ordering::SeqCst) == 0 {
+                // Whole fleet gone mid-run: give reconnects one grace
+                // window, then let take_report turn "items incomplete"
+                // into the run's error.
+                match empty_since {
+                    None => empty_since = Some(Instant::now()),
+                    Some(t) if t.elapsed() >= grace => break,
+                    Some(_) => {}
+                }
+            } else {
+                empty_since = None;
+            }
+        } else if let Some(dl) = join_deadline {
+            if Instant::now() >= dl {
+                if handles.is_empty() {
+                    return Err(GppError::Net(format!(
+                        "host accept: no worker joined within {:?}",
+                        join_limit.unwrap_or_default()
+                    )));
+                }
+                need = handles.len(); // proceed with the reduced fleet
             }
         }
-        Some(limit) => {
-            listener
-                .set_nonblocking(true)
-                .map_err(|e| GppError::Net(format!("host accept: {e}")))?;
-            let mut deadline = std::time::Instant::now() + limit;
-            while handles.len() < nodes {
-                {
-                    let g = sync.0.lock().unwrap();
-                    if g.is_done() || g.fatal().is_some() {
-                        break; // finished (or aborted) with the workers we have
-                    }
-                }
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        // Blocking mode of an accepted socket is platform-
-                        // dependent under a non-blocking listener; force it.
-                        stream
-                            .set_nonblocking(false)
-                            .map_err(|e| GppError::Net(format!("host accept: {e}")))?;
-                        spawn_conn(stream, &mut handles)?;
-                        deadline = std::time::Instant::now() + limit;
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        if std::time::Instant::now() >= deadline {
-                            if handles.is_empty() {
-                                return Err(GppError::Net(format!(
-                                    "host accept: no worker joined within {limit:?}"
-                                )));
-                            }
-                            break; // proceed with the reduced fleet
-                        }
-                        std::thread::sleep(std::time::Duration::from_millis(20));
-                    }
-                    Err(e) => return Err(GppError::Net(format!("host accept: {e}"))),
-                }
-            }
-        }
+        std::thread::sleep(Duration::from_millis(10));
     }
-    drop(listener); // no more joins; late connects are refused
-    let workers_joined = handles.len();
+    drop(listener); // run decided; late connects are refused from here
 
+    let workers_joined = handles.len();
     let mut first_err: Option<GppError> = None;
     for h in handles {
         match h.join() {
@@ -431,7 +498,8 @@ pub fn serve_items(
     // Every connection thread has been joined: final accounting via the
     // shared ledger (a socket-level first_err only matters if the run
     // itself did not complete — same precedence as before).
-    let report = sync.0.lock().unwrap().take_report(workers_joined)?;
+    let reconnects = members.lock().unwrap().reconnects();
+    let report = sync.0.lock().unwrap().take_report(workers_joined, reconnects)?;
     if let Some(e) = first_err {
         return Err(e);
     }
@@ -444,17 +512,76 @@ pub fn serve_items(
     Ok(report)
 }
 
-/// One host connection. Socket failures mark the worker lost and
-/// requeue its in-flight item — not an error for the run; only a job
-/// failure ([`W_FAIL`]) is fatal.
-fn serve_conn(mut stream: TcpStream, job: &str, cfg: &[u8], sync: &Arc<HostSync>) -> Result<()> {
+/// Shared context one host connection thread works against.
+struct HostConn<'a> {
+    job: &'a str,
+    cfg: &'a [u8],
+    sync: &'a Arc<HostSync>,
+    members: &'a Mutex<Membership>,
+}
+
+/// Per-connection liveness state for deadline eviction: the host's
+/// sockets read on a short quantum ([`NetOptions::host_read_quantum`]),
+/// and every timeout tick checks how long the peer has been silent.
+pub(crate) struct ConnLive {
+    evict: Option<Duration>,
+    last: Instant,
+}
+
+impl ConnLive {
+    pub(crate) fn new(evict: Option<Duration>) -> Self {
+        Self {
+            evict,
+            last: Instant::now(),
+        }
+    }
+}
+
+/// Read one control frame, treating quantum timeouts as liveness ticks:
+/// within the eviction deadline a timeout just re-arms the read; past
+/// it the worker is evicted (an error the caller's requeue path
+/// handles exactly like a socket death). Without an eviction deadline
+/// a timeout keeps its PR-2 meaning — dead peer, fail the read.
+pub(crate) fn read_ctl_live(stream: &mut TcpStream, live: &mut ConnLive) -> Result<Vec<u8>> {
+    loop {
+        match read_ctl(stream) {
+            Ok(frame) => {
+                live.last = Instant::now();
+                return Ok(frame);
+            }
+            Err(e) if err_is_timeout(&e) => match live.evict {
+                Some(deadline) if live.last.elapsed() > deadline => {
+                    m::CLUSTER_EVICTIONS.inc();
+                    return Err(GppError::Net(format!(
+                        "worker silent for {:?} (eviction deadline {deadline:?}): evicted",
+                        live.last.elapsed()
+                    )));
+                }
+                Some(_) => continue,
+                None => return Err(e),
+            },
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// One host connection. Socket failures — and deadline evictions —
+/// mark the worker lost and requeue its in-flight item — not an error
+/// for the run; only a job failure ([`W_FAIL`]) is fatal.
+fn serve_conn(mut stream: TcpStream, ctx: HostConn<'_>, evict: Option<Duration>) -> Result<()> {
     let mut in_flight: Option<(usize, Arc<Vec<u8>>)> = None;
-    match conn_loop(&mut stream, job, cfg, sync, &mut in_flight) {
+    let mut live = ConnLive::new(evict);
+    let mut lease = 0u64;
+    let r = conn_loop(&mut stream, &ctx, &mut live, &mut in_flight, &mut lease);
+    if lease != 0 {
+        ctx.members.lock().unwrap().depart(lease);
+    }
+    match r {
         Ok(()) => Ok(()),
         Err(fatal @ GppError::UserCode { .. }) => Err(fatal),
         Err(_socket_err) => {
             // Worker lost: put its item back for the survivors.
-            let (mtx, cv) = &**sync;
+            let (mtx, cv) = &**ctx.sync;
             let mut g = mtx.lock().unwrap();
             m::CLUSTER_WORKERS_LOST.inc();
             if in_flight.is_some() {
@@ -471,10 +598,10 @@ fn serve_conn(mut stream: TcpStream, job: &str, cfg: &[u8], sync: &Arc<HostSync>
 
 fn conn_loop(
     stream: &mut TcpStream,
-    job: &str,
-    cfg: &[u8],
-    sync: &Arc<HostSync>,
+    ctx: &HostConn<'_>,
+    live: &mut ConnLive,
     in_flight: &mut Option<(usize, Arc<Vec<u8>>)>,
+    lease: &mut u64,
 ) -> Result<()> {
     // A peer that fails the handshake (a legacy worker, a stray port
     // scan) surfaces here as a socket error, which the caller treats
@@ -485,18 +612,35 @@ fn conn_loop(
         .unwrap_or_else(|_| "worker".into());
     mux_handshake(stream, &peer)?;
     loop {
-        let frame = read_ctl(stream)?;
+        let frame = read_ctl_live(stream, live)?;
         match frame.split_first() {
-            Some((&W_HELLO, _)) => {
-                m::CLUSTER_WORKERS_JOINED.inc();
+            Some((&W_HELLO, rest)) => {
+                let prior = if rest.is_empty() {
+                    0
+                } else {
+                    let mut input = rest;
+                    u64::decode(&mut input)?
+                };
+                let adm = ctx.members.lock().unwrap().admit(prior, now_us());
+                *lease = adm.id;
+                if adm.reconnect {
+                    m::CLUSTER_RECONNECTS.inc();
+                } else {
+                    m::CLUSTER_WORKERS_JOINED.inc();
+                }
                 let mut reply = vec![H_CONFIG];
-                job.to_string().encode(&mut reply);
-                reply.extend_from_slice(cfg);
+                adm.id.encode(&mut reply);
+                ctx.job.to_string().encode(&mut reply);
+                reply.extend_from_slice(ctx.cfg);
                 write_ctl(stream, &reply)?;
             }
+            Some((&W_BEAT, _)) => {
+                m::CLUSTER_HEARTBEATS.inc();
+                ctx.members.lock().unwrap().seen(*lease, now_us());
+            }
             Some((&W_REQ, _)) => {
-                if dispatch(stream, sync, in_flight)? {
-                    collect_worker_stats(stream, sync);
+                if dispatch(stream, ctx.sync, in_flight)? {
+                    collect_worker_stats(stream, ctx.sync, live);
                     return Ok(());
                 }
             }
@@ -510,7 +654,7 @@ fn conn_loop(
                     )));
                 }
                 {
-                    let (mtx, cv) = &**sync;
+                    let (mtx, cv) = &**ctx.sync;
                     let mut g = mtx.lock().unwrap();
                     g.record_result(id, input.to_vec());
                     *in_flight = None;
@@ -518,8 +662,8 @@ fn conn_loop(
                     m::CLUSTER_ITEMS_IN_FLIGHT.add(-1);
                     cv.notify_all();
                 }
-                if dispatch(stream, sync, in_flight)? {
-                    collect_worker_stats(stream, sync);
+                if dispatch(stream, ctx.sync, in_flight)? {
+                    collect_worker_stats(stream, ctx.sync, live);
                     return Ok(());
                 }
             }
@@ -529,10 +673,10 @@ fn conn_loop(
                 let msg = String::decode(&mut input)?;
                 let err = GppError::UserCode {
                     code: -1,
-                    context: format!("cluster job '{job}' failed on item {id}: {msg}"),
+                    context: format!("cluster job '{}' failed on item {id}: {msg}", ctx.job),
                 };
-                let (m, cv) = &**sync;
-                let mut g = m.lock().unwrap();
+                let (mtx, cv) = &**ctx.sync;
+                let mut g = mtx.lock().unwrap();
                 g.set_fatal(err.clone());
                 cv.notify_all();
                 drop(g);
@@ -550,16 +694,25 @@ fn conn_loop(
 }
 
 /// Best-effort read of the worker's final [`W_STATS`] frame, sent after
-/// the host's `H_DONE`. A worker that predates the frame — or died
-/// before sending it — just closes the socket; either way the run's
-/// outcome is unaffected.
-fn collect_worker_stats(stream: &mut TcpStream, sync: &Arc<HostSync>) {
-    if let Ok(frame) = read_ctl(stream) {
-        if let Some((&W_STATS, rest)) = frame.split_first() {
-            if let Ok(json) = std::str::from_utf8(rest) {
-                let (mtx, _) = &**sync;
-                mtx.lock().unwrap().push_stats(json.to_string());
+/// the host's `H_DONE`. Heartbeats still in the pipe are skipped (with
+/// a sane bound); a worker that predates the frame — or died before
+/// sending it — just closes the socket; either way the run's outcome is
+/// unaffected.
+fn collect_worker_stats(stream: &mut TcpStream, sync: &Arc<HostSync>, live: &mut ConnLive) {
+    for _ in 0..64 {
+        let Ok(frame) = read_ctl_live(stream, live) else {
+            return;
+        };
+        match frame.split_first() {
+            Some((&W_BEAT, _)) => m::CLUSTER_HEARTBEATS.inc(),
+            Some((&W_STATS, rest)) => {
+                if let Ok(json) = std::str::from_utf8(rest) {
+                    let (mtx, _) = &**sync;
+                    mtx.lock().unwrap().push_stats(json.to_string());
+                }
+                return;
             }
+            _ => return,
         }
     }
 }
@@ -574,8 +727,8 @@ fn dispatch(
     sync: &Arc<HostSync>,
     in_flight: &mut Option<(usize, Arc<Vec<u8>>)>,
 ) -> Result<bool> {
-    let (m, cv) = &**sync;
-    let mut g = m.lock().unwrap();
+    let (mtx, cv) = &**sync;
+    let mut g = mtx.lock().unwrap();
     loop {
         if let Some(e) = g.fatal() {
             let err = e.clone();
@@ -607,6 +760,123 @@ fn dispatch(
     }
 }
 
+/// The cross-session identity of one elastic worker: which lease it
+/// holds on the host and how many items it has completed across every
+/// session. [`run_worker_session`] updates it in place, so the redial
+/// loop ([`run_worker_elastic`]) can present the lease on reconnect and
+/// tell "made progress, reset the backoff budget" from "dialling a dead
+/// address".
+#[derive(Debug, Default)]
+pub struct WorkerState {
+    /// Lease id from the host's `H_CONFIG` (0 = never admitted).
+    pub lease: u64,
+    /// Items completed across every session of this worker.
+    pub items_done: usize,
+}
+
+/// Apply any scripted connection fault, then send one control frame
+/// under the shared writer lock (the beater thread sends on the same
+/// socket).
+pub(crate) fn ctl_send(
+    writer: &Mutex<TcpStream>,
+    faults: Option<&Arc<FaultPlan>>,
+    label: &str,
+    payload: &[u8],
+) -> Result<()> {
+    if let Some(plan) = faults {
+        if plan.apply(FaultOp::ConnFrame, label).is_some() {
+            let s = writer.lock().unwrap();
+            let _ = s.shutdown(std::net::Shutdown::Both);
+            return Err(GppError::Net(format!(
+                "{label}: fault killed the connection"
+            )));
+        }
+    }
+    let mut s = writer.lock().unwrap();
+    write_ctl(&mut s, payload)
+}
+
+/// Apply any scripted connection fault, then read one control frame.
+pub(crate) fn ctl_recv(
+    stream: &mut TcpStream,
+    faults: Option<&Arc<FaultPlan>>,
+    label: &str,
+) -> Result<Vec<u8>> {
+    if let Some(plan) = faults {
+        if plan.apply(FaultOp::ConnFrame, label).is_some() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            return Err(GppError::Net(format!(
+                "{label}: fault killed the connection"
+            )));
+        }
+    }
+    read_ctl(stream)
+}
+
+/// The worker's heartbeat thread: sends [`W_BEAT`] every `interval`
+/// until dropped. A scripted [`FaultOp::Beat`] fault stops the beats
+/// *without* closing the socket — the "process wedged, cable fine"
+/// failure that only deadline eviction can catch.
+pub(crate) struct Beater {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Beater {
+    pub(crate) fn spawn(
+        writer: Arc<Mutex<TcpStream>>,
+        interval: Duration,
+        faults: Option<Arc<FaultPlan>>,
+        label: String,
+    ) -> Self {
+        let stop: Arc<(Mutex<bool>, Condvar)> = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let (mtx, cv) = &*stop2;
+            let mut g = mtx.lock().unwrap();
+            loop {
+                let (ng, timeout) = cv.wait_timeout(g, interval).unwrap();
+                g = ng;
+                if *g {
+                    return;
+                }
+                if !timeout.timed_out() {
+                    continue; // spurious wake: re-arm the wait
+                }
+                if let Some(plan) = &faults {
+                    if plan.apply(FaultOp::Beat, &label).is_some() {
+                        return; // go silent, socket stays open
+                    }
+                }
+                drop(g);
+                let sent = {
+                    let mut s = writer.lock().unwrap();
+                    write_ctl(&mut s, &[W_BEAT]).is_ok()
+                };
+                if !sent {
+                    return; // connection is gone; the main loop notices
+                }
+                g = mtx.lock().unwrap();
+            }
+        });
+        Self {
+            stop,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for Beater {
+    fn drop(&mut self) {
+        let (mtx, cv) = &*self.stop;
+        *mtx.lock().unwrap() = true;
+        cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Run one worker node: connect, fetch the job + its config from the
 /// host, then request/compute/return items until the host says done.
 /// Returns the number of items this worker completed.
@@ -615,6 +885,21 @@ pub fn run_worker(addr: &str) -> Result<usize> {
 }
 
 pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
+    let mut st = WorkerState::default();
+    run_worker_session(addr, opts, &mut st, None)?;
+    Ok(st.items_done)
+}
+
+/// One connection's worth of worker protocol: dial, hello (presenting
+/// `st.lease` when resuming), then request/compute/return until
+/// `H_DONE` (`Ok`) or the connection dies (`Err`; `st` keeps the lease
+/// and progress for the next session).
+pub fn run_worker_session(
+    addr: &str,
+    opts: &NetOptions,
+    st: &mut WorkerState,
+    faults: Option<&Arc<FaultPlan>>,
+) -> Result<()> {
     jobs::register_builtin_jobs();
     // Workers always count: the final snapshot ships to the host as the
     // run's per-node report (`W_STATS`), so the merged view is complete
@@ -625,13 +910,23 @@ pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
     set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
     set_nodelay(&stream, opts.nodelay)?;
     mux_handshake(&mut stream, addr)?;
-    write_ctl(&mut stream, &[W_HELLO])?;
-    let frame = read_ctl(&mut stream)?;
-    let (job_name, cfg) = match frame.split_first() {
+    let label = format!("worker:{addr}");
+    let writer = Arc::new(Mutex::new(stream.try_clone().map_err(|e| {
+        GppError::Net(format!("worker clone {addr}: {e}"))
+    })?));
+
+    let mut hello = vec![W_HELLO];
+    if st.lease != 0 {
+        st.lease.encode(&mut hello);
+    }
+    ctl_send(&writer, faults, &label, &hello)?;
+    let frame = ctl_recv(&mut stream, faults, &label)?;
+    let (lease, job_name, cfg) = match frame.split_first() {
         Some((&H_CONFIG, rest)) => {
             let mut input = rest;
+            let lease = u64::decode(&mut input)?;
             let name = String::decode(&mut input)?;
-            (name, input.to_vec())
+            (lease, name, input.to_vec())
         }
         other => {
             return Err(GppError::Net(format!(
@@ -640,12 +935,18 @@ pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
             )))
         }
     };
+    st.lease = lease;
     let job = jobs::lookup(&job_name)?;
 
-    let mut items_done = 0usize;
-    write_ctl(&mut stream, &[W_REQ])?;
+    // Heartbeats ride a side thread so a long item never starves them;
+    // the guard stops (and joins) the thread on every session exit.
+    let _beater = opts
+        .heartbeat
+        .map(|iv| Beater::spawn(writer.clone(), iv, faults.cloned(), label.clone()));
+
+    ctl_send(&writer, faults, &label, &[W_REQ])?;
     loop {
-        let frame = read_ctl(&mut stream)?;
+        let frame = ctl_recv(&mut stream, faults, &label)?;
         match frame.split_first() {
             Some((&H_WORK, rest)) => {
                 let mut input = rest;
@@ -655,14 +956,14 @@ pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
                         let mut reply = vec![W_RESULT];
                         id.encode(&mut reply);
                         reply.extend_from_slice(&result);
-                        write_ctl(&mut stream, &reply)?;
-                        items_done += 1;
+                        ctl_send(&writer, faults, &label, &reply)?;
+                        st.items_done += 1;
                     }
                     Err(e) => {
                         let mut reply = vec![W_FAIL];
                         id.encode(&mut reply);
                         e.to_string().encode(&mut reply);
-                        let _ = write_ctl(&mut stream, &reply);
+                        let _ = ctl_send(&writer, faults, &label, &reply);
                         return Err(e);
                     }
                 }
@@ -677,14 +978,55 @@ pub fn run_worker_opts(addr: &str, opts: &NetOptions) -> Result<usize> {
                     .unwrap_or_else(|_| "worker".into());
                 let mut reply = vec![W_STATS];
                 reply.extend_from_slice(metrics::snapshot(&node).to_json().as_bytes());
-                let _ = write_ctl(&mut stream, &reply);
-                return Ok(items_done);
+                let _ = ctl_send(&writer, faults, &label, &reply);
+                return Ok(());
             }
             other => {
                 return Err(GppError::Net(format!(
                     "worker: unexpected host frame {:?}",
                     other.map(|(t, _)| t)
                 )))
+            }
+        }
+    }
+}
+
+/// The elastic worker: run sessions against `addr` until one ends with
+/// `H_DONE`, redialling lost connections under `policy`'s jittered
+/// exponential backoff. A session that made progress (got admitted, or
+/// completed more items) resets the backoff budget, so a standing
+/// worker survives arbitrarily many reconnects over its lifetime; only
+/// consecutive progress-free failures exhaust the policy. Job failures
+/// ([`GppError::UserCode`]) are deterministic and never retried.
+pub fn run_worker_elastic(addr: &str, opts: &NetOptions, policy: &RetryPolicy) -> Result<usize> {
+    run_worker_elastic_faulted(addr, opts, policy, None)
+}
+
+/// [`run_worker_elastic`] with a scripted [`FaultPlan`] — how the tests
+/// (and the CI chaos smoke) kill a live connection after exactly N
+/// control frames and watch the worker reconnect and finish.
+pub fn run_worker_elastic_faulted(
+    addr: &str,
+    opts: &NetOptions,
+    policy: &RetryPolicy,
+    faults: Option<Arc<FaultPlan>>,
+) -> Result<usize> {
+    let mut st = WorkerState::default();
+    let mut delays = policy.delays();
+    let mut progress = (0u64, 0usize);
+    loop {
+        match run_worker_session(addr, opts, &mut st, faults.as_ref()) {
+            Ok(()) => return Ok(st.items_done),
+            Err(fatal @ GppError::UserCode { .. }) => return Err(fatal),
+            Err(e) => {
+                if (st.lease, st.items_done) != progress {
+                    progress = (st.lease, st.items_done);
+                    delays = policy.delays();
+                }
+                match delays.next() {
+                    Some(wait) => std::thread::sleep(wait),
+                    None => return Err(e),
+                }
             }
         }
     }
@@ -786,6 +1128,8 @@ pub fn default_config(width: i64, height: i64, max_iter: i64, cores: usize) -> C
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::csp::transport::{FaultAction, FaultRule};
+    use crate::net::retry::connect_retry;
     use crate::workloads::mandelbrot;
 
     fn free_addr() -> String {
@@ -794,6 +1138,31 @@ mod tests {
         let a = l.local_addr().unwrap();
         drop(l);
         format!("127.0.0.1:{}", a.port())
+    }
+
+    /// Connect with the shared backoff policy (liveness wait for the
+    /// listener — the test's *outcome* does not depend on timing).
+    fn test_connect(addr: &str) -> TcpStream {
+        connect_retry(addr, &RetryPolicy::fast_local()).expect("host never listened")
+    }
+
+    /// Speak the worker protocol far enough to take exactly one item,
+    /// then hand the socket (and the item id) back to the test — the
+    /// building block for every scripted failure below. The caller
+    /// decides the failure mode: drop (RST-style death), stay silent
+    /// (eviction), or finish the item later (late completion).
+    fn scripted_take_one(addr: &str) -> (TcpStream, u64) {
+        let mut s = test_connect(addr);
+        mux_handshake(&mut s, addr).unwrap();
+        write_ctl(&mut s, &[W_HELLO]).unwrap();
+        let frame = read_ctl(&mut s).unwrap();
+        assert_eq!(frame.first(), Some(&H_CONFIG));
+        write_ctl(&mut s, &[W_REQ]).unwrap();
+        let frame = read_ctl(&mut s).unwrap();
+        assert_eq!(frame.first(), Some(&H_WORK));
+        let mut input = &frame[1..];
+        let id = u64::decode(&mut input).unwrap();
+        (s, id)
     }
 
     #[test]
@@ -832,66 +1201,12 @@ mod tests {
         assert_eq!(d, cfg);
     }
 
-    /// A protocol-speaking client that takes one work item and dies —
-    /// the "pull the network cable mid-computation" case.
-    fn faulty_worker(addr: &str) {
-        let mut s = TcpStream::connect(addr).unwrap();
-        mux_handshake(&mut s, addr).unwrap();
-        write_ctl(&mut s, &[W_HELLO]).unwrap();
-        let _cfg = read_ctl(&mut s).unwrap();
-        write_ctl(&mut s, &[W_REQ]).unwrap();
-        let frame = read_ctl(&mut s).unwrap();
-        assert_eq!(frame.first(), Some(&H_WORK));
-        drop(s); // die holding the item
-    }
-
-    #[test]
-    #[cfg_attr(
-        not(feature = "timing-tests"),
-        ignore = "sleep-ordered join race; the deterministic variant below covers the behaviour"
-    )]
-    fn dead_worker_item_is_requeued_and_run_completes() {
-        let addr = free_addr();
-        let cfg = default_config(48, 32, 30, 1);
-        let seq = mandelbrot::sequential(48, 32, 30, cfg.pixel_delta).unwrap();
-        let addr2 = addr.clone();
-        let cfg2 = cfg.clone();
-        let host = std::thread::spawn(move || run_host(&addr2, 2, &cfg2));
-        std::thread::sleep(std::time::Duration::from_millis(50));
-        // The faulty worker joins first so it deterministically holds an
-        // item before the good worker can drain the queue.
-        let a1 = addr.clone();
-        let bad = std::thread::spawn(move || faulty_worker(&a1));
-        std::thread::sleep(std::time::Duration::from_millis(80));
-        let a2 = addr.clone();
-        let good = std::thread::spawn(move || run_worker(&a2));
-        let collect = host.join().unwrap().unwrap();
-        bad.join().unwrap();
-        let done = good.join().unwrap().unwrap();
-        // The survivor did every row, including the one the dead worker held.
-        assert_eq!(done, 32);
-        assert_eq!(collect.rows_seen, 32);
-        assert_eq!(collect.checksum(), seq.checksum());
-    }
-
-    /// Connect with bounded retries (liveness wait for the listener —
-    /// the test's *outcome* does not depend on timing).
-    fn connect_retry(addr: &str) -> TcpStream {
-        for _ in 0..400 {
-            if let Ok(s) = TcpStream::connect(addr) {
-                return s;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(5));
-        }
-        panic!("host never listened on {addr}");
-    }
-
     #[test]
     fn worker_death_mid_item_requeues_without_timing_dependence() {
-        // Deterministic version of the kill-a-worker test: the phases
-        // are sequenced by the protocol itself (this thread completes
-        // the scripted death before the survivor ever joins), so the
-        // requeue path is exercised on operation counts, not sleeps.
+        // Deterministic kill-a-worker test: the phases are sequenced by
+        // the protocol itself (this thread completes the scripted death
+        // before the survivor ever joins), so the requeue path is
+        // exercised on operation counts, not sleeps.
         let addr = free_addr();
         let cfg = to_bytes(&default_config(32, 8, 10, 1));
         let items: Vec<Vec<u8>> = (0..6i64).map(|r| to_bytes(&r)).collect();
@@ -906,18 +1221,9 @@ mod tests {
                 &NetOptions::default(),
             )
         });
-        // Phase 1 (on this thread, to completion): speak the worker
-        // protocol, take exactly one item, die holding it.
-        {
-            let mut s = connect_retry(&addr);
-            mux_handshake(&mut s, &addr).unwrap();
-            write_ctl(&mut s, &[W_HELLO]).unwrap();
-            let _cfg = read_ctl(&mut s).unwrap();
-            write_ctl(&mut s, &[W_REQ]).unwrap();
-            let frame = read_ctl(&mut s).unwrap();
-            assert_eq!(frame.first(), Some(&H_WORK));
-            drop(s);
-        }
+        // Phase 1 (on this thread, to completion): take exactly one
+        // item, die holding it.
+        drop(scripted_take_one(&addr));
         // Phase 2: the survivor joins strictly afterwards and must
         // complete every item, including the requeued one.
         let done = run_worker(&addr).unwrap();
@@ -927,6 +1233,7 @@ mod tests {
         assert_eq!(report.workers_lost, 1);
         assert_eq!(report.items_requeued, 1);
         assert_eq!(report.workers_joined, 2);
+        assert_eq!(report.workers_reconnected, 0);
         // Only the survivor reached H_DONE, so exactly one W_STATS
         // snapshot arrived — and it parses back into a MetricsSnapshot.
         assert_eq!(report.worker_stats.len(), 1, "survivor shipped W_STATS");
@@ -936,37 +1243,144 @@ mod tests {
     }
 
     #[test]
-    #[cfg_attr(
-        not(feature = "timing-tests"),
-        ignore = "sleep-ordered join race; worker_death_mid_item_requeues_without_timing_dependence covers it"
-    )]
-    fn serve_items_reports_losses() {
+    fn late_worker_joins_mid_run_and_completes() {
+        // The elastic part of the host: `nodes = 1` is satisfied by the
+        // first connection, yet a second worker joining *mid-run* is
+        // admitted and drains the queue. Both connections are scripted
+        // on this thread, so every step is protocol-sequenced — no
+        // sleeps, no races.
         let addr = free_addr();
         let cfg = to_bytes(&default_config(32, 8, 10, 1));
-        let items: Vec<Vec<u8>> = (0..8i64).map(|r| to_bytes(&r)).collect();
+        let items: Vec<Vec<u8>> = (0..6i64).map(|r| to_bytes(&r)).collect();
         let addr2 = addr.clone();
         let host = std::thread::spawn(move || {
             serve_items(
                 &addr2,
-                2,
+                1,
                 jobs::MANDELBROT_ROW,
                 &cfg,
                 items,
                 &NetOptions::default(),
             )
         });
-        std::thread::sleep(std::time::Duration::from_millis(50));
-        let a1 = addr.clone();
-        let bad = std::thread::spawn(move || faulty_worker(&a1));
-        std::thread::sleep(std::time::Duration::from_millis(80));
-        let a2 = addr.clone();
-        let good = std::thread::spawn(move || run_worker(&a2));
+        // First worker satisfies the declared fleet and holds item 0.
+        let (mut first, id0) = scripted_take_one(&addr);
+        assert_eq!(id0, 0);
+        // Late worker joins the in-progress run — PR-2's host would
+        // have dropped the listener by now — and takes item 1.
+        let (mut late, id1) = scripted_take_one(&addr);
+        assert_eq!(id1, 1);
+        // The late worker drains items 2..=5: each result is answered
+        // with the next item, protocol-sequenced.
+        let mut held = id1;
+        for expect in 2..6u64 {
+            let mut reply = vec![W_RESULT];
+            held.encode(&mut reply);
+            write_ctl(&mut late, &reply).unwrap();
+            let frame = read_ctl(&mut late).unwrap();
+            assert_eq!(frame.first(), Some(&H_WORK));
+            let mut input = &frame[1..];
+            held = u64::decode(&mut input).unwrap();
+            assert_eq!(held, expect);
+        }
+        // Last result from the late worker; no read yet — the host
+        // blocks its reply on item 0, still in flight with `first`.
+        let mut reply = vec![W_RESULT];
+        held.encode(&mut reply);
+        write_ctl(&mut late, &reply).unwrap();
+        // First worker finally completes item 0 → run done → both
+        // connections are released with H_DONE.
+        let mut reply = vec![W_RESULT];
+        id0.encode(&mut reply);
+        write_ctl(&mut first, &reply).unwrap();
+        let f = read_ctl(&mut first).unwrap();
+        assert_eq!(f.first(), Some(&H_DONE));
+        let f = read_ctl(&mut late).unwrap();
+        assert_eq!(f.first(), Some(&H_DONE));
+        drop(first);
+        drop(late);
         let report = host.join().unwrap().unwrap();
-        bad.join().unwrap();
-        good.join().unwrap().unwrap();
-        assert_eq!(report.results.len(), 8);
-        assert_eq!(report.workers_lost, 1);
+        assert_eq!(report.results.len(), 6);
+        assert_eq!(report.workers_joined, 2, "late join was admitted");
+        assert_eq!(report.workers_lost, 0);
+        assert_eq!(report.items_requeued, 0);
+        assert_eq!(report.workers_reconnected, 0);
+    }
+
+    #[test]
+    fn silent_worker_is_evicted_on_heartbeat_deadline_and_item_requeued() {
+        // The pulled-cable case: the scripted worker takes an item and
+        // goes silent *with its socket open* — no RST, no EOF, nothing
+        // a socket error could catch. Only the heartbeat deadline can
+        // evict it; the run must still complete via requeue.
+        let addr = free_addr();
+        let opts = NetOptions::default()
+            .with_heartbeat_ms(20)
+            .with_eviction_ms(120);
+        let cfg = to_bytes(&default_config(32, 8, 10, 1));
+        let items: Vec<Vec<u8>> = (0..6i64).map(|r| to_bytes(&r)).collect();
+        let addr2 = addr.clone();
+        let host = std::thread::spawn(move || {
+            serve_items(&addr2, 2, jobs::MANDELBROT_ROW, &cfg, items, &opts)
+        });
+        // Take item 0, then never send another byte. Keep the socket
+        // alive until the host run is over.
+        let (silent, id0) = scripted_take_one(&addr);
+        assert_eq!(id0, 0);
+        // The survivor beats every 20 ms, so *it* is never evicted even
+        // while the host waits out the silent peer's 120 ms deadline.
+        let done = run_worker_opts(&addr, &opts).unwrap();
+        let report = host.join().unwrap().unwrap();
+        drop(silent);
+        assert_eq!(done, 6, "survivor computed every item, incl. the requeue");
+        assert_eq!(report.results.len(), 6);
+        assert_eq!(report.workers_lost, 1, "silent worker evicted");
         assert_eq!(report.items_requeued, 1);
         assert_eq!(report.workers_joined, 2);
+        assert_eq!(report.workers_reconnected, 0);
+    }
+
+    #[test]
+    fn conn_killed_by_fault_plan_reconnects_with_backoff_and_completes() {
+        // Deterministic reconnect: a scripted fault kills the worker's
+        // connection on its 4th control-frame operation — right after
+        // W_REQ went out, while the host holds item 0 in flight for it.
+        // The elastic worker must redial under backoff, resume its
+        // lease, and finish the whole queue.
+        let addr = free_addr();
+        let plan = FaultPlan::new(vec![FaultRule::new(
+            "worker:",
+            FaultOp::ConnFrame,
+            4,
+            FaultAction::Fail("scripted kill".into()),
+        )]);
+        let cfg = to_bytes(&default_config(32, 8, 10, 1));
+        let items: Vec<Vec<u8>> = (0..6i64).map(|r| to_bytes(&r)).collect();
+        let addr2 = addr.clone();
+        let host = std::thread::spawn(move || {
+            serve_items(
+                &addr2,
+                1,
+                jobs::MANDELBROT_ROW,
+                &cfg,
+                items,
+                &NetOptions::default(),
+            )
+        });
+        let done = run_worker_elastic_faulted(
+            &addr,
+            &NetOptions::default(),
+            &RetryPolicy::fast_local(),
+            Some(plan.clone()),
+        )
+        .unwrap();
+        let report = host.join().unwrap().unwrap();
+        assert_eq!(plan.fired(), 1, "the scripted kill fired exactly once");
+        assert_eq!(done, 6, "second session drained the full queue");
+        assert_eq!(report.results.len(), 6);
+        assert_eq!(report.workers_joined, 2, "two sessions joined");
+        assert_eq!(report.workers_lost, 1, "first session died");
+        assert_eq!(report.workers_reconnected, 1, "lease was resumed");
+        assert_eq!(report.items_requeued, 1, "item 0 was requeued");
     }
 }

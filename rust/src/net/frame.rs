@@ -20,6 +20,15 @@ pub fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), ErrorKind::TimedOut | ErrorKind::WouldBlock)
 }
 
+/// True if this [`GppError`] came from a socket timeout (the marker
+/// [`net_err`] stamps below). The cluster host's liveness loop reads
+/// with a short quantum and must distinguish "the peer is quiet right
+/// now" (keep waiting until the eviction deadline) from a real socket
+/// failure (the peer is gone).
+pub fn err_is_timeout(e: &GppError) -> bool {
+    matches!(e, GppError::Net(msg) if msg.contains("peer timed out"))
+}
+
 fn net_err<T>(r: std::io::Result<T>, what: &str) -> Result<T> {
     r.map_err(|e| {
         if is_timeout(&e) {

@@ -41,6 +41,8 @@ use crate::util::codec::to_bytes;
 
 use super::cluster::{run_worker_opts, serve_items};
 use super::jobs::{self, DslJobConfig};
+use super::retry::{retry, RetryPolicy};
+use super::serve::{drain, run_serve, run_serve_worker, submit_job, ServeOptions};
 use super::NetOptions;
 
 /// Where and how a declarative network is deployed — the `hosts` /
@@ -56,6 +58,18 @@ pub struct NodePlacement {
     /// Spec index that must be the farmed section (validated); `None`
     /// farms every farmable middle spec.
     pub stage: Option<usize>,
+    /// `hosts fleet=standing`: run against a standing `gpp serve`
+    /// daemon (the network becomes one submitted job) instead of
+    /// spinning up the one-shot batch host.
+    pub standing: bool,
+    /// Worker heartbeat interval (`hosts heartbeat=ms`).
+    pub heartbeat_ms: Option<u64>,
+    /// Host-side liveness eviction deadline (`hosts evict=ms`).
+    pub evict_ms: Option<u64>,
+    /// Standing-fleet admission window (`hosts admission=n`).
+    pub admission: Option<usize>,
+    /// Standing-fleet park deadline (`hosts park=ms`).
+    pub park_ms: Option<u64>,
 }
 
 impl NodePlacement {
@@ -65,6 +79,11 @@ impl NodePlacement {
             join: None,
             timeout_ms: None,
             stage: None,
+            standing: false,
+            heartbeat_ms: None,
+            evict_ms: None,
+            admission: None,
+            park_ms: None,
         }
     }
 
@@ -73,7 +92,25 @@ impl NodePlacement {
         if let Some(ms) = self.timeout_ms {
             o = o.with_read_timeout_ms(ms);
         }
+        if let Some(ms) = self.heartbeat_ms {
+            o = o.with_heartbeat_ms(ms);
+        }
+        if let Some(ms) = self.evict_ms {
+            o = o.with_eviction_ms(ms);
+        }
         o
+    }
+
+    /// Daemon tuning for a standing fleet (`fleet=standing`).
+    pub fn serve_options(&self) -> ServeOptions {
+        let mut s = ServeOptions::default().with_net(self.net_options());
+        if let Some(n) = self.admission {
+            s = s.with_admission(n);
+        }
+        if let Some(ms) = self.park_ms {
+            s = s.with_park_ms(ms);
+        }
+        s
     }
 }
 
@@ -241,8 +278,11 @@ fn collect_results(rd: &ResultDetails, results: &[Vec<u8>]) -> Result<Box<dyn Da
     Ok(result)
 }
 
-/// Host role: bind `addr`, wait for the placement's worker count, farm
-/// the network, return the collector result objects.
+/// Host role: farm the network and return the collector result
+/// objects. For a batch fleet this binds `addr` and serves items
+/// itself; for a standing fleet (`fleet=standing`) `addr` names an
+/// already-running `gpp serve` daemon and the network is submitted to
+/// it as one job.
 pub fn run_cluster_host(spec: &NetworkSpec, addr: &str) -> Result<Vec<Box<dyn DataObject>>> {
     jobs::register_builtin_jobs();
     let placement = spec
@@ -254,14 +294,25 @@ pub fn run_cluster_host(spec: &NetworkSpec, addr: &str) -> Result<Vec<Box<dyn Da
     let cfg = to_bytes(&DslJobConfig {
         steps: plan.steps.clone(),
     });
-    let report = serve_items(
-        addr,
-        placement.workers,
-        jobs::DSL_APPLY,
-        &cfg,
-        items,
-        &placement.net_options(),
-    )?;
+    let report = if placement.standing {
+        submit_job(
+            addr,
+            "dsl-network",
+            jobs::DSL_APPLY,
+            &cfg,
+            items,
+            &placement.net_options(),
+        )?
+    } else {
+        serve_items(
+            addr,
+            placement.workers,
+            jobs::DSL_APPLY,
+            &cfg,
+            items,
+            &placement.net_options(),
+        )?
+    };
     Ok(vec![collect_results(&plan.collect, &report.results)?])
 }
 
@@ -287,6 +338,10 @@ pub fn run_cluster_loopback(spec: &NetworkSpec) -> Result<Vec<Box<dyn DataObject
     );
     drop(l);
 
+    if placement.standing {
+        return run_loopback_standing(spec, &placement, &addr);
+    }
+
     let spec2 = spec.clone();
     let addr2 = addr.clone();
     let host = std::thread::spawn(move || run_cluster_host(&spec2, &addr2));
@@ -295,23 +350,14 @@ pub fn run_cluster_loopback(spec: &NetworkSpec) -> Result<Vec<Box<dyn DataObject
     for _ in 0..placement.workers {
         let addr = addr.clone();
         workers.push(std::thread::spawn(move || {
-            // The host binds before accepting; retry the join briefly so
-            // worker threads need no external start-up ordering.
-            let mut last = GppError::Net("unreached".into());
-            for _ in 0..100 {
-                match run_cluster_worker(&addr, &opts) {
-                    Ok(n) => return Ok(n),
-                    Err(e) => {
-                        let transient = e.to_string().contains("connect");
-                        last = e;
-                        if !transient {
-                            return Err(last);
-                        }
-                        std::thread::sleep(std::time::Duration::from_millis(20));
-                    }
-                }
-            }
-            Err(last)
+            // The host binds before accepting; retry the join under the
+            // shared backoff policy so worker threads need no external
+            // start-up ordering.
+            retry(
+                &RetryPolicy::fast_local(),
+                |e| e.to_string().contains("connect"),
+                || run_cluster_worker(&addr, &opts),
+            )
         }));
     }
     let result = host
@@ -325,6 +371,41 @@ pub fn run_cluster_loopback(spec: &NetworkSpec) -> Result<Vec<Box<dyn DataObject
         let _ = w.join();
     }
     result
+}
+
+/// Loopback deployment of a standing fleet: an in-process `gpp serve`
+/// daemon, `workers` elastic serve workers, and the network submitted
+/// as one client job — the whole service stack on one machine, which
+/// is also how `examples/serve_pi.gpp` exercises it under test.
+fn run_loopback_standing(
+    spec: &NetworkSpec,
+    placement: &NodePlacement,
+    addr: &str,
+) -> Result<Vec<Box<dyn DataObject>>> {
+    let sopts = placement.serve_options();
+    let daemon = {
+        let addr = addr.to_string();
+        std::thread::spawn(move || run_serve(&addr, &sopts))
+    };
+    let wopts = placement.net_options();
+    let mut workers = Vec::new();
+    for _ in 0..placement.workers {
+        let addr = addr.to_string();
+        workers.push(std::thread::spawn(move || {
+            run_serve_worker(&addr, &wopts, &RetryPolicy::fast_local())
+        }));
+    }
+    // Whatever the job's fate, drain the daemon so every thread above
+    // is released before this function returns.
+    let outcome = run_cluster_host(spec, addr);
+    let _ = drain(addr, &wopts);
+    for w in workers {
+        let _ = w.join();
+    }
+    let _ = daemon
+        .join()
+        .map_err(|_| GppError::Net("serve daemon thread panicked".into()))?;
+    outcome
 }
 
 #[cfg(test)]

@@ -1,0 +1,215 @@
+//! Elastic worker membership: who is in the fleet *right now*.
+//!
+//! PR 2's host had no notion of membership — it accepted a fixed number
+//! of connections once, then dropped the listener; a worker was "alive"
+//! exactly as long as its socket read succeeded. This module makes
+//! membership a first-class, *elastic* registry with a failure detector:
+//!
+//! * workers may join at any time, including mid-run — a join is an
+//!   [`Membership::admit`] with `prior = 0`, which leases a fresh id;
+//! * a worker reconnecting after a connection loss presents the id from
+//!   its previous lease and is counted as a *reconnect*, not a fresh
+//!   join (`cluster.reconnects`);
+//! * liveness is judged by heartbeat deadline, not TCP errors: every
+//!   control frame (including [`super::cluster`]'s `W_BEAT`) refreshes
+//!   the member's `last_seen`, and [`Membership::sweep_overdue`] evicts
+//!   members silent past the deadline — the "pulled cable" peer whose
+//!   socket never RSTs.
+//!
+//! The registry is **clock-agnostic**: every method takes `now_us`
+//! explicitly, so the threaded host feeds it wall-clock microseconds
+//! while the scaled simulation's host process
+//! ([`crate::sim::scenario`]) feeds the virtual clock — the eviction
+//! logic the sim verifies is this code, not a model of it.
+
+use std::collections::HashMap;
+
+/// One leased fleet slot.
+#[derive(Clone, Debug)]
+struct Member {
+    last_seen_us: u64,
+    /// Connection sessions this lease has had (1 = never reconnected).
+    sessions: u32,
+}
+
+/// Outcome of an [`Membership::admit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Admission {
+    /// The lease id the worker must present on reconnect.
+    pub id: u64,
+    /// This admission resumed a previous lease.
+    pub reconnect: bool,
+}
+
+/// The elastic fleet registry (see module docs).
+#[derive(Debug, Default)]
+pub struct Membership {
+    next_id: u64,
+    live: HashMap<u64, Member>,
+    joined: u64,
+    reconnects: u64,
+    evictions: u64,
+    departures: u64,
+}
+
+impl Membership {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit a worker. `prior = 0` means a fresh join; a non-zero
+    /// `prior` resumes that lease (reconnect) — unknown or already-live
+    /// priors still resume gracefully (the host may have evicted the
+    /// lease, or the old conn may not have unwound yet), because a
+    /// returning worker must never be turned away for stale bookkeeping.
+    pub fn admit(&mut self, prior: u64, now_us: u64) -> Admission {
+        let reconnect = prior != 0;
+        let id = if reconnect && prior <= self.next_id {
+            prior
+        } else {
+            self.next_id += 1;
+            self.next_id
+        };
+        let member = self.live.entry(id).or_insert(Member {
+            last_seen_us: now_us,
+            sessions: 0,
+        });
+        member.last_seen_us = now_us;
+        member.sessions += 1;
+        if reconnect {
+            self.reconnects += 1;
+        } else {
+            self.joined += 1;
+        }
+        Admission { id, reconnect }
+    }
+
+    /// Any control frame from `id` proves liveness.
+    pub fn seen(&mut self, id: u64, now_us: u64) {
+        if let Some(m) = self.live.get_mut(&id) {
+            m.last_seen_us = now_us;
+        }
+    }
+
+    /// The member left by observable connection teardown (read error,
+    /// clean close) — distinct from eviction by silence.
+    pub fn depart(&mut self, id: u64) {
+        if self.live.remove(&id).is_some() {
+            self.departures += 1;
+        }
+    }
+
+    /// Evict every member silent for longer than `deadline_us` and
+    /// return their ids — the failure-detector tick. The caller owns
+    /// the consequences (requeue in-flight items, close the socket).
+    pub fn sweep_overdue(&mut self, now_us: u64, deadline_us: u64) -> Vec<u64> {
+        let mut gone: Vec<u64> = self
+            .live
+            .iter()
+            .filter(|(_, m)| now_us.saturating_sub(m.last_seen_us) > deadline_us)
+            .map(|(id, _)| *id)
+            .collect();
+        gone.sort_unstable(); // deterministic order for the sim + tests
+        for id in &gone {
+            self.live.remove(id);
+            self.evictions += 1;
+        }
+        gone
+    }
+
+    /// Is this member overdue (without evicting it)?
+    pub fn overdue(&self, id: u64, now_us: u64, deadline_us: u64) -> bool {
+        self.live
+            .get(&id)
+            .is_some_and(|m| now_us.saturating_sub(m.last_seen_us) > deadline_us)
+    }
+
+    /// Members currently live.
+    pub fn live(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Distinct fresh joins over the registry's lifetime.
+    pub fn joined(&self) -> usize {
+        self.joined as usize
+    }
+
+    /// Lease resumptions over the registry's lifetime.
+    pub fn reconnects(&self) -> usize {
+        self.reconnects as usize
+    }
+
+    /// Members evicted by heartbeat deadline.
+    pub fn evictions(&self) -> usize {
+        self.evictions as usize
+    }
+
+    /// Sessions (connects) member `id` has had, 0 if unknown.
+    pub fn sessions(&self, id: u64) -> u32 {
+        self.live.get(&id).map(|m| m.sessions).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_joins_lease_distinct_ids() {
+        let mut reg = Membership::new();
+        let a = reg.admit(0, 10);
+        let b = reg.admit(0, 11);
+        assert_ne!(a.id, b.id);
+        assert!(!a.reconnect && !b.reconnect);
+        assert_eq!(reg.live(), 2);
+        assert_eq!(reg.joined(), 2);
+    }
+
+    #[test]
+    fn reconnect_resumes_the_lease() {
+        let mut reg = Membership::new();
+        let a = reg.admit(0, 0);
+        reg.depart(a.id);
+        assert_eq!(reg.live(), 0);
+        let back = reg.admit(a.id, 100);
+        assert_eq!(back.id, a.id);
+        assert!(back.reconnect);
+        assert_eq!(reg.reconnects(), 1);
+        assert_eq!(reg.joined(), 1, "a reconnect is not a fresh join");
+        assert_eq!(reg.sessions(a.id), 2);
+    }
+
+    #[test]
+    fn bogus_prior_id_still_admits() {
+        let mut reg = Membership::new();
+        let adm = reg.admit(999, 0);
+        assert_eq!(adm.id, 1, "unknown lease falls back to a fresh id");
+        assert_eq!(reg.live(), 1);
+    }
+
+    #[test]
+    fn silence_past_deadline_evicts_frames_refresh() {
+        let mut reg = Membership::new();
+        let a = reg.admit(0, 0);
+        let b = reg.admit(0, 0);
+        reg.seen(b.id, 900);
+        // At t=1000 with a 500 µs deadline: a (silent since 0) is gone,
+        // b (seen at 900) survives.
+        assert!(reg.overdue(a.id, 1000, 500));
+        assert!(!reg.overdue(b.id, 1000, 500));
+        let gone = reg.sweep_overdue(1000, 500);
+        assert_eq!(gone, vec![a.id]);
+        assert_eq!(reg.live(), 1);
+        assert_eq!(reg.evictions(), 1);
+        // Sweeping again finds nothing new.
+        assert!(reg.sweep_overdue(1000, 500).is_empty());
+    }
+
+    #[test]
+    fn eviction_order_is_deterministic() {
+        let mut reg = Membership::new();
+        let ids: Vec<u64> = (0..8).map(|_| reg.admit(0, 0).id).collect();
+        let gone = reg.sweep_overdue(10_000, 100);
+        assert_eq!(gone, ids, "sorted lease order, not hash order");
+    }
+}

@@ -27,7 +27,13 @@
 //!   an item), including the generic DSL-apply job;
 //! * [`loader`] — the ClusterBuilder-style node-loader: shard a
 //!   [`crate::builder::NetworkSpec`] across a host plus N workers
-//!   (`hosts`/`place` DSL lines, `--role host|worker --join addr`).
+//!   (`hosts`/`place` DSL lines, `--role host|worker --join addr`);
+//! * [`membership`] / [`retry`] — the elastic-fleet substrate: a leased
+//!   liveness registry with deadline eviction, and the shared jittered
+//!   exponential-backoff policy every redial loop uses;
+//! * [`serve`] — the standing cluster service (`gpp serve`): named jobs
+//!   from many concurrent clients multiplexed over one elastic fleet,
+//!   with admission control, per-job isolation and graceful drain.
 
 pub mod frame;
 pub mod netchan;
@@ -36,12 +42,20 @@ pub mod mux;
 pub mod cluster;
 pub mod jobs;
 pub mod loader;
+pub mod membership;
+pub mod retry;
+pub mod serve;
 
-pub use cluster::{run_host, run_worker, ClusterConfig, HostLedger, HostReport};
+pub use cluster::{
+    run_host, run_worker, run_worker_elastic, ClusterConfig, HostLedger, HostReport,
+};
 pub use jobs::register_builtin_jobs;
 pub use loader::NodePlacement;
+pub use membership::Membership;
 pub use mux::MuxHub;
 pub use netchan::{NetIn, NetMsg, NetOut};
+pub use retry::RetryPolicy;
+pub use serve::{run_serve, run_serve_worker, submit_job, ServeOptions, ServeSummary};
 
 use std::time::Duration;
 
@@ -65,6 +79,20 @@ pub struct NetOptions {
     /// Apply `TCP_NODELAY` to every cluster / net-channel socket
     /// (default on: frames are small and latency-bound).
     pub nodelay: bool,
+    /// Worker heartbeat interval: every `heartbeat`, an idle-or-busy
+    /// worker sends a `W_BEAT` control frame so the host can tell
+    /// "computing a long item" from "silently dead". `None` (the
+    /// default) sends no beats — the one-shot batch cluster's original
+    /// behaviour.
+    pub heartbeat: Option<Duration>,
+    /// Host-side liveness deadline: a worker connection silent (no
+    /// control frame, including beats) for longer than this is
+    /// *evicted* — its in-flight item is requeued exactly as if the
+    /// socket had errored — catching the pulled-cable peer whose TCP
+    /// stack never sends an RST. Should comfortably exceed `heartbeat`
+    /// (4× is a sane floor). `None` disables deadline eviction and
+    /// liveness falls back to socket errors / `read_timeout`.
+    pub eviction: Option<Duration>,
 }
 
 impl Default for NetOptions {
@@ -74,6 +102,8 @@ impl Default for NetOptions {
             write_timeout: None,
             window: None,
             nodelay: true,
+            heartbeat: None,
+            eviction: None,
         }
     }
 }
@@ -107,12 +137,41 @@ impl NetOptions {
         self
     }
 
+    /// Worker heartbeat interval in milliseconds; `0` disables beats.
+    pub fn with_heartbeat_ms(mut self, ms: u64) -> Self {
+        self.heartbeat = (ms > 0).then(|| Duration::from_millis(ms));
+        self
+    }
+
+    /// Host-side eviction deadline in milliseconds; `0` disables
+    /// deadline eviction.
+    pub fn with_eviction_ms(mut self, ms: u64) -> Self {
+        self.eviction = (ms > 0).then(|| Duration::from_millis(ms));
+        self
+    }
+
     /// The credit window for an edge of the given channel capacity:
     /// the explicit override, else the capacity itself (≥ 1).
     pub fn window_for(&self, capacity: usize) -> u64 {
         match self.window {
             Some(w) => w.max(1) as u64,
             None => capacity.max(1) as u64,
+        }
+    }
+
+    /// The socket read timeout a host control connection should run
+    /// with. With eviction enabled the host needs periodic wakeups to
+    /// check the silence deadline, so reads tick at a quantum of a
+    /// quarter of the deadline (clamped to [5 ms, 250 ms]); a timeout
+    /// then means "check liveness", not "fail". Without eviction this
+    /// is just `read_timeout` (old dead-peer semantics).
+    pub fn host_read_quantum(&self) -> Option<Duration> {
+        match self.eviction {
+            Some(ev) => {
+                let q = (ev / 4).clamp(Duration::from_millis(5), Duration::from_millis(250));
+                Some(self.read_timeout.map_or(q, |rt| q.min(rt)))
+            }
+            None => self.read_timeout,
         }
     }
 }

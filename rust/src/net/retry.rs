@@ -1,0 +1,235 @@
+//! Shared reconnect/backoff policy for everything in `net/` that waits
+//! on a peer: the loader's join retry, the elastic worker's reconnect
+//! loop, the serve client's dial, and the test helpers that used to
+//! hand-roll `for _ in 0..400 { connect; sleep(5ms) }` loops.
+//!
+//! The policy is *pure*: [`RetryPolicy::delays`] yields the backoff
+//! schedule as plain durations from a seeded [`Rng`], so the scaled
+//! simulation can consume the exact same schedule in virtual-clock
+//! ticks ([`RetryPolicy::delays_ticks`]) and a reconnect storm replays
+//! identically from a printed seed. Wall-clock sleeping happens only in
+//! the convenience drivers ([`retry`], [`connect_retry`]).
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::csp::error::{GppError, Result};
+use crate::util::rng::Rng;
+
+/// Exponential backoff with full jitter, capped per attempt and bounded
+/// overall by a deadline and/or an attempt budget.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// First-attempt delay.
+    pub base: Duration,
+    /// Per-attempt multiplier (×2 doubles the wait each time).
+    pub factor: f64,
+    /// No single wait exceeds this.
+    pub max_delay: Duration,
+    /// Total time budget across every attempt (`None` = unbounded).
+    pub deadline: Duration,
+    /// Attempt budget (`None` = bounded by the deadline alone).
+    pub max_attempts: Option<usize>,
+    /// Seed for the jitter stream — determinism is part of the
+    /// contract, not an accident of the OS scheduler.
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    /// The policy the loader and elastic worker use by default: start at
+    /// 20 ms, double with full jitter, cap single waits at 1 s, give up
+    /// after `deadline_ms` of total waiting.
+    pub fn connect(deadline_ms: u64) -> Self {
+        Self {
+            base: Duration::from_millis(20),
+            factor: 2.0,
+            max_delay: Duration::from_secs(1),
+            deadline: Duration::from_millis(deadline_ms),
+            max_attempts: None,
+            seed: 0x9e37_79b9,
+        }
+    }
+
+    /// Fast variant for tests waiting on a local listener (the old
+    /// 400 × 5 ms helpers): 2 ms base, 2 s overall budget.
+    pub fn fast_local() -> Self {
+        Self {
+            base: Duration::from_millis(2),
+            factor: 1.5,
+            max_delay: Duration::from_millis(50),
+            deadline: Duration::from_secs(5),
+            max_attempts: None,
+            seed: 0x5eed,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_max_attempts(mut self, n: usize) -> Self {
+        self.max_attempts = Some(n);
+        self
+    }
+
+    /// The jittered backoff schedule: each yielded duration is the wait
+    /// *before* the next attempt. The iterator ends when the cumulative
+    /// wait would exceed the deadline (the final wait is clipped to land
+    /// exactly on it) or the attempt budget runs out, so
+    /// `delays().count() + 1` is the total number of connect attempts.
+    pub fn delays(&self) -> impl Iterator<Item = Duration> + '_ {
+        let mut rng = Rng::new(self.seed);
+        let mut nominal = self.base;
+        let mut spent = Duration::ZERO;
+        let mut attempts = 0usize;
+        std::iter::from_fn(move || {
+            if let Some(max) = self.max_attempts {
+                if attempts + 1 >= max {
+                    return None;
+                }
+            }
+            if spent >= self.deadline {
+                return None;
+            }
+            // Full jitter: uniform in [base/2, nominal], never zero.
+            let lo = (self.base.as_micros() as u64 / 2).max(1);
+            let hi = (nominal.as_micros() as u64).max(lo + 1);
+            let wait = Duration::from_micros(lo + rng.next_bounded(hi - lo + 1));
+            let wait = wait.min(self.deadline - spent);
+            spent += wait;
+            attempts += 1;
+            nominal = Duration::from_micros(
+                ((nominal.as_micros() as f64 * self.factor) as u64)
+                    .min(self.max_delay.as_micros() as u64),
+            );
+            Some(wait)
+        })
+    }
+
+    /// The same schedule as virtual-clock ticks (1 tick = 1 µs, the
+    /// scaled sim's clock unit) — what a simulated worker sleeps between
+    /// reconnect attempts so churn replays identically per seed.
+    pub fn delays_ticks(&self) -> Vec<u64> {
+        self.delays()
+            .map(|d| (d.as_micros() as u64).max(1))
+            .collect()
+    }
+}
+
+/// Drive `attempt` under `policy`: run it, and while it fails with a
+/// *transient* error (per `transient`), sleep the next backoff step and
+/// retry. The last error is returned when the schedule is exhausted or
+/// the error is not transient.
+pub fn retry<T>(
+    policy: &RetryPolicy,
+    mut transient: impl FnMut(&GppError) -> bool,
+    mut attempt: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let mut last = match attempt() {
+        Ok(v) => return Ok(v),
+        Err(e) => e,
+    };
+    for wait in policy.delays() {
+        if !transient(&last) {
+            return Err(last);
+        }
+        std::thread::sleep(wait);
+        match attempt() {
+            Ok(v) => return Ok(v),
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
+/// Dial `addr` until it answers (or the policy gives up) — the liveness
+/// wait every host/worker pairing needs at startup, with the same
+/// backoff curve everywhere instead of N hand-rolled loops.
+pub fn connect_retry(addr: &str, policy: &RetryPolicy) -> Result<TcpStream> {
+    retry(
+        policy,
+        |_| true,
+        || TcpStream::connect(addr).map_err(|e| GppError::Net(format!("connect {addr}: {e}"))),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let p = RetryPolicy::connect(5_000).with_seed(7);
+        let a: Vec<Duration> = p.delays().collect();
+        let b: Vec<Duration> = p.delays().collect();
+        assert_eq!(a, b, "same seed, same schedule");
+        let c: Vec<Duration> = p.clone().with_seed(8).delays().collect();
+        assert_ne!(a, c, "different seed, different jitter");
+    }
+
+    #[test]
+    fn schedule_respects_deadline_and_grows() {
+        let p = RetryPolicy::connect(500).with_seed(3);
+        let waits: Vec<Duration> = p.delays().collect();
+        assert!(!waits.is_empty());
+        let total: Duration = waits.iter().sum();
+        assert!(total <= Duration::from_millis(500), "total {total:?}");
+        // Exponential shape: the biggest wait dwarfs the first.
+        let max = waits.iter().max().unwrap();
+        assert!(*max >= waits[0]);
+        // Every wait respects the per-attempt cap.
+        assert!(waits.iter().all(|w| *w <= p.max_delay));
+    }
+
+    #[test]
+    fn max_attempts_bounds_the_schedule() {
+        let p = RetryPolicy::connect(60_000).with_max_attempts(4);
+        // 4 attempts total = 3 waits between them.
+        assert_eq!(p.delays().count(), 3);
+    }
+
+    #[test]
+    fn ticks_match_wall_schedule() {
+        let p = RetryPolicy::fast_local().with_seed(11);
+        let ticks = p.delays_ticks();
+        let walls: Vec<u64> = p.delays().map(|d| d.as_micros() as u64).collect();
+        assert_eq!(ticks.len(), walls.len());
+        for (t, w) in ticks.iter().zip(&walls) {
+            assert_eq!(*t, (*w).max(1));
+        }
+    }
+
+    #[test]
+    fn retry_gives_up_on_permanent_errors() {
+        let mut calls = 0;
+        let r: Result<()> = retry(
+            &RetryPolicy::fast_local(),
+            |e| !matches!(e, GppError::UserCode { .. }),
+            || {
+                calls += 1;
+                Err(GppError::UserCode { code: 1, context: "boom".into() })
+            },
+        );
+        assert!(r.is_err());
+        assert_eq!(calls, 1, "permanent error is not retried");
+    }
+
+    #[test]
+    fn retry_eventually_succeeds() {
+        let mut calls = 0;
+        let r = retry(
+            &RetryPolicy::fast_local(),
+            |_| true,
+            || {
+                calls += 1;
+                if calls < 3 {
+                    Err(GppError::Net("not yet".into()))
+                } else {
+                    Ok(calls)
+                }
+            },
+        );
+        assert_eq!(r.unwrap(), 3);
+    }
+}

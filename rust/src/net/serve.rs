@@ -1,0 +1,1091 @@
+//! `gpp serve` — a long-running cluster *service* over the elastic
+//! fleet, rather than the one-job batch host of [`super::cluster`].
+//!
+//! The batch host ([`super::cluster::serve_items`]) binds, runs one
+//! job's items to completion and exits. The serve daemon keeps the
+//! listener open indefinitely and speaks to **two** kinds of peer on
+//! the same port, told apart by the first control frame after the mux
+//! handshake:
+//!
+//! * **workers** open with [`W_HELLO`] exactly as in the batch
+//!   protocol, are leased a [`Membership`] slot, and then pull items —
+//!   but items now carry a *(job id, job kind, config)* envelope
+//!   ([`H_WORK2`]) so one worker interleaves items from every active
+//!   job, and a job failure ([`W_FAIL2`]) aborts only that job, never
+//!   the worker's connection;
+//! * **clients** open with [`C_SUBMIT`], naming a job kind from the
+//!   [`super::jobs`] registry plus config and items, and block until
+//!   the daemon ships back the per-job [`HostReport`] ([`S_REPORT`]).
+//!
+//! Robustness properties, each mapping to a piece of state below:
+//!
+//! * **admission control** — at most [`ServeOptions::admission`] jobs
+//!   may be resident; a submit beyond that is *rejected* with a reason
+//!   ([`S_REJECT`]) instead of queued without bound, so a misbehaving
+//!   client backs off rather than OOMing the daemon;
+//! * **per-job isolation** — each job owns its own
+//!   [`super::cluster::HostLedger`]; a deterministic item failure sets
+//!   that ledger fatal and fails that job's client, while every other
+//!   job (and every worker connection) keeps running;
+//! * **degradation** — when the fleet shrinks to zero, resident jobs
+//!   *park*; if no worker returns within [`ServeOptions::park`] the
+//!   daemon fails the parked jobs with a diagnosable error instead of
+//!   holding their clients forever;
+//! * **graceful drain** — [`C_DRAIN`] stops admission, lets resident
+//!   jobs finish and their clients collect reports, releases workers
+//!   with `H_DONE`, then shuts the daemon down and answers the drainer
+//!   with a summary ([`S_DRAINED`]).
+//!
+//! Liveness plumbing (heartbeats, deadline eviction, lease reconnect,
+//! requeue of a dead worker's in-flight item) is shared with the batch
+//! host — same frames, same [`Membership`], same metrics.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::csp::error::{GppError, Result};
+use crate::csp::transport::FaultPlan;
+use crate::obs::metrics::{self, m};
+use crate::obs::now_us;
+use crate::util::codec::Wire;
+
+use super::cluster::{
+    ctl_recv, ctl_send, read_ctl, read_ctl_live, write_ctl, Beater, ConnLive, HostLedger,
+    HostReport, WorkerState, H_CONFIG, H_DONE, W_BEAT, W_HELLO, W_REQ, W_STATS,
+};
+use super::frame::{mux_handshake, set_io_timeouts, set_nodelay};
+use super::jobs;
+use super::membership::Membership;
+use super::retry::{connect_retry, RetryPolicy};
+use super::NetOptions;
+
+// Serve-mode protocol extension. Worker → host tags continue the
+// batch numbering; client traffic gets its own ranges so a peer's
+// first frame identifies its kind unambiguously.
+/// `[tag][u64 job id][u64 item id][result bytes…]` — like `W_RESULT`
+/// but naming the job, since a serve worker interleaves jobs.
+pub(crate) const W_RESULT2: u8 = 7;
+/// `[tag][u64 job id][u64 item id][String error]` — job-scoped failure:
+/// the daemon fails *that job only*; the worker connection survives.
+pub(crate) const W_FAIL2: u8 = 8;
+/// `[tag][u64 job id][u64 item id][String kind][Vec<u8> cfg][item…]` —
+/// a work envelope carrying everything a stateless serve worker needs.
+pub(crate) const H_WORK2: u8 = 14;
+/// `[tag][String name][String kind][Vec<u8> cfg][Vec<Vec<u8>> items]`
+pub(crate) const C_SUBMIT: u8 = 20;
+/// `[tag]` — stop admitting, finish resident jobs, shut down.
+pub(crate) const C_DRAIN: u8 = 21;
+/// `[tag]` — fetch the daemon's metrics snapshot as JSON.
+pub(crate) const C_STATS: u8 = 22;
+/// `[tag][u64 job id]`
+pub(crate) const S_ACCEPT: u8 = 30;
+/// `[tag][String reason]`
+pub(crate) const S_REJECT: u8 = 31;
+/// `[tag][u64 job id][bool ok][HostReport fields | String error]`
+pub(crate) const S_REPORT: u8 = 32;
+/// `[tag][String metrics JSON]`
+pub(crate) const S_STATS: u8 = 33;
+/// `[tag][String summary]`
+pub(crate) const S_DRAINED: u8 = 34;
+
+/// The job name a serve daemon hands workers in `H_CONFIG`. A worker
+/// seeing this knows items arrive as [`H_WORK2`] envelopes (config per
+/// item) instead of the batch protocol's single pre-installed job.
+pub const SERVE_JOB: &str = "gpp-serve";
+
+/// Tuning for [`run_serve`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Socket + liveness tuning shared with the batch cluster.
+    pub net: NetOptions,
+    /// Admission window: the most jobs (queued or running) the daemon
+    /// will hold; submits beyond it are rejected with a reason.
+    pub admission: usize,
+    /// How long resident jobs may sit parked with **zero** live workers
+    /// before the daemon fails them instead of blocking their clients
+    /// forever.
+    pub park: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            net: NetOptions::default(),
+            admission: 8,
+            park: Duration::from_secs(30),
+        }
+    }
+}
+
+impl ServeOptions {
+    pub fn with_net(mut self, net: NetOptions) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Cap resident jobs at `n` (min 1).
+    pub fn with_admission(mut self, n: usize) -> Self {
+        self.admission = n.max(1);
+        self
+    }
+
+    /// Park deadline in milliseconds; `0` keeps the default.
+    pub fn with_park_ms(mut self, ms: u64) -> Self {
+        if ms > 0 {
+            self.park = Duration::from_millis(ms);
+        }
+        self
+    }
+}
+
+/// What a drained daemon reports back to its operator.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServeSummary {
+    pub jobs_accepted: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub jobs_rejected: u64,
+    pub workers_joined: usize,
+    pub workers_reconnected: usize,
+}
+
+/// One resident job: identity, its own ledger, and (once settled) the
+/// outcome its client is waiting to collect.
+struct ServeJob {
+    id: u64,
+    name: String,
+    kind: String,
+    cfg: Arc<Vec<u8>>,
+    ledger: HostLedger,
+    /// `Some` once the job settled; the submitting client's connection
+    /// thread removes the job when it picks this up.
+    outcome: Option<Result<HostReport>>,
+}
+
+#[derive(Default)]
+struct ServeState {
+    jobs: Vec<ServeJob>,
+    next_job: u64,
+    /// Round-robin cursor so concurrent jobs share the fleet fairly
+    /// instead of the oldest job starving the rest.
+    rr: usize,
+    draining: bool,
+    shutdown: bool,
+    accepted: u64,
+    rejected: u64,
+    completed: u64,
+    failed: u64,
+}
+
+impl ServeState {
+    fn job_mut(&mut self, id: u64) -> Option<&mut ServeJob> {
+        self.jobs.iter_mut().find(|j| j.id == id)
+    }
+
+    fn any_active(&self) -> bool {
+        self.jobs.iter().any(|j| j.outcome.is_none())
+    }
+}
+
+struct Server {
+    sync: (Mutex<ServeState>, Condvar),
+    members: Mutex<Membership>,
+    opts: ServeOptions,
+}
+
+/// Run the serve daemon on `addr` until a client drains it. Returns
+/// the lifetime summary (also printed per-frame to clients via
+/// [`C_STATS`]).
+pub fn run_serve(addr: &str, opts: &ServeOptions) -> Result<ServeSummary> {
+    jobs::register_builtin_jobs();
+    metrics::enable();
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| GppError::Net(format!("serve bind {addr}: {e}")))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| GppError::Net(format!("serve listener: {e}")))?;
+
+    let srv = Arc::new(Server {
+        sync: (Mutex::new(ServeState::default()), Condvar::new()),
+        members: Mutex::new(Membership::new()),
+        opts: *opts,
+    });
+    let mut handles = Vec::new();
+    // When resident jobs have no fleet at all, this clocks the park
+    // deadline; any live worker (or empty job table) resets it.
+    let mut empty_since: Option<Instant> = None;
+
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let srv2 = srv.clone();
+                handles.push(std::thread::spawn(move || {
+                    let _ = serve_conn(stream, &peer.to_string(), &srv2);
+                }));
+                continue; // drain the accept backlog before housekeeping
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) => return Err(GppError::Net(format!("serve accept: {e}"))),
+        }
+
+        let live = srv.members.lock().unwrap().live();
+        let (mtx, cv) = &srv.sync;
+        let mut st = mtx.lock().unwrap();
+        if st.shutdown {
+            break;
+        }
+        if st.any_active() && live == 0 {
+            match empty_since {
+                None => empty_since = Some(Instant::now()),
+                Some(t0) if t0.elapsed() >= srv.opts.park => {
+                    park_expire(&mut st, srv.opts.park);
+                    cv.notify_all();
+                    empty_since = None;
+                }
+                Some(_) => {}
+            }
+        } else {
+            empty_since = None;
+        }
+        drop(st);
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    drop(listener);
+    for h in handles {
+        let _ = h.join();
+    }
+    let members = srv.members.lock().unwrap();
+    let st = srv.sync.0.lock().unwrap();
+    Ok(ServeSummary {
+        jobs_accepted: st.accepted,
+        jobs_completed: st.completed,
+        jobs_failed: st.failed,
+        jobs_rejected: st.rejected,
+        workers_joined: members.joined(),
+        workers_reconnected: members.reconnects(),
+    })
+}
+
+/// Fail every still-active job: the fleet has been empty past the park
+/// deadline and their clients deserve an error, not an eternal block.
+fn park_expire(st: &mut ServeState, park: Duration) {
+    for job in st.jobs.iter_mut().filter(|j| j.outcome.is_none()) {
+        st.failed += 1;
+        m::SERVE_JOBS_FAILED.inc();
+        job.outcome = Some(Err(GppError::Net(format!(
+            "job '{}' parked {park:?} with no live workers; failing (park deadline)",
+            job.name
+        ))));
+    }
+}
+
+/// Settle a job as finished (ledger complete or fatal) under the state
+/// lock. `fleet` is a `(joined, reconnects)` pair sampled *before*
+/// taking the lock, to keep lock acquisition single-level.
+fn settle_job(st: &mut ServeState, id: u64, fleet: (usize, usize)) {
+    let Some(job) = st.job_mut(id) else { return };
+    if job.outcome.is_some() {
+        return;
+    }
+    let outcome = job.ledger.take_report(fleet.0, fleet.1);
+    let failed = outcome.is_err();
+    job.outcome = Some(outcome);
+    if failed {
+        st.failed += 1;
+        m::SERVE_JOBS_FAILED.inc();
+    } else {
+        st.completed += 1;
+        m::SERVE_JOBS_COMPLETED.inc();
+    }
+}
+
+/// Dispatch for one inbound connection: handshake, then route on the
+/// first control frame (worker hello vs client verbs).
+fn serve_conn(mut stream: TcpStream, peer: &str, srv: &Server) -> Result<()> {
+    stream
+        .set_nonblocking(false)
+        .map_err(|e| GppError::Net(format!("serve conn: {e}")))?;
+    set_io_timeouts(&stream, srv.opts.net.host_read_quantum(), srv.opts.net.write_timeout)?;
+    set_nodelay(&stream, srv.opts.net.nodelay)?;
+    mux_handshake(&mut stream, peer)?;
+    let mut live = ConnLive::new(srv.opts.net.eviction);
+    let first = read_ctl_live(&mut stream, &mut live)?;
+    match first.split_first() {
+        Some((&W_HELLO, rest)) => worker_conn(stream, srv, live, rest),
+        Some((&C_SUBMIT, rest)) => client_submit(stream, srv, rest),
+        Some((&C_DRAIN, _)) => client_drain(stream, srv),
+        Some((&C_STATS, _)) => client_stats(stream),
+        other => Err(GppError::Net(format!(
+            "serve: unknown opening frame {:?}",
+            other.map(|(t, _)| t)
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------- worker side
+
+/// A worker connection's lifecycle: admit (or resume) a lease, pump the
+/// item loop, and on any exit depart the lease — requeueing whatever
+/// item the connection still held.
+fn worker_conn(
+    mut stream: TcpStream,
+    srv: &Server,
+    mut live: ConnLive,
+    hello_rest: &[u8],
+) -> Result<()> {
+    let prior = if hello_rest.is_empty() {
+        0
+    } else {
+        let mut input = hello_rest;
+        u64::decode(&mut input)?
+    };
+    let admission = srv.members.lock().unwrap().admit(prior, now_us());
+    if admission.reconnect {
+        m::CLUSTER_RECONNECTS.inc();
+    } else {
+        m::CLUSTER_WORKERS_JOINED.inc();
+    }
+    m::SERVE_WORKERS_LIVE.add(1);
+    let lease = admission.id;
+
+    let mut reply = vec![H_CONFIG];
+    lease.encode(&mut reply);
+    SERVE_JOB.to_string().encode(&mut reply);
+    let mut in_flight: Option<(u64, usize, Arc<Vec<u8>>)> = None;
+    let r = write_ctl(&mut stream, &reply)
+        .and_then(|()| worker_loop(&mut stream, srv, &mut live, &mut in_flight, lease));
+
+    srv.members.lock().unwrap().depart(lease);
+    m::SERVE_WORKERS_LIVE.add(-1);
+    if r.is_err() {
+        m::CLUSTER_WORKERS_LOST.inc();
+        let fleet = fleet_sample(srv);
+        let (mtx, cv) = &srv.sync;
+        let mut st = mtx.lock().unwrap();
+        if let Some((jid, item, bytes)) = in_flight.take() {
+            let settle = match st.job_mut(jid) {
+                Some(job) if job.outcome.is_none() => {
+                    if job.ledger.worker_lost(Some((item, bytes))) {
+                        m::CLUSTER_ITEMS_REQUEUED.inc();
+                    }
+                    // A fatal ledger settles here: no result frame
+                    // will ever arrive for it.
+                    job.ledger.is_done() || job.ledger.fatal().is_some()
+                }
+                _ => false,
+            };
+            if settle {
+                settle_job(&mut st, jid, fleet);
+            }
+        }
+        cv.notify_all();
+    }
+    Ok(())
+}
+
+fn fleet_sample(srv: &Server) -> (usize, usize) {
+    let members = srv.members.lock().unwrap();
+    (members.joined(), members.reconnects())
+}
+
+fn worker_loop(
+    stream: &mut TcpStream,
+    srv: &Server,
+    live: &mut ConnLive,
+    in_flight: &mut Option<(u64, usize, Arc<Vec<u8>>)>,
+    lease: u64,
+) -> Result<()> {
+    loop {
+        let frame = read_ctl_live(stream, live)?;
+        match frame.split_first() {
+            Some((&W_BEAT, _)) => {
+                m::CLUSTER_HEARTBEATS.inc();
+                srv.members.lock().unwrap().seen(lease, now_us());
+            }
+            Some((&W_REQ, _)) => {
+                if serve_dispatch(stream, srv, in_flight)? {
+                    return Ok(());
+                }
+            }
+            Some((&W_RESULT2, rest)) => {
+                let mut input = rest;
+                let jid = u64::decode(&mut input)?;
+                let item = u64::decode(&mut input)? as usize;
+                record_result(srv, in_flight, jid, item, input.to_vec())?;
+                if serve_dispatch(stream, srv, in_flight)? {
+                    return Ok(());
+                }
+            }
+            Some((&W_FAIL2, rest)) => {
+                let mut input = rest;
+                let jid = u64::decode(&mut input)?;
+                let item = u64::decode(&mut input)? as usize;
+                let msg = String::decode(&mut input)?;
+                record_failure(srv, in_flight, jid, item, msg);
+                // Per-job isolation: the worker connection survives a
+                // job failure and keeps pulling other jobs' items.
+                if serve_dispatch(stream, srv, in_flight)? {
+                    return Ok(());
+                }
+            }
+            Some((&W_STATS, _)) => {
+                // A departing worker's final snapshot; the daemon has
+                // per-job reports already, so this is informational.
+            }
+            other => {
+                return Err(GppError::Net(format!(
+                    "serve: unexpected worker frame {:?}",
+                    other.map(|(t, _)| t)
+                )))
+            }
+        }
+    }
+}
+
+fn record_result(
+    srv: &Server,
+    in_flight: &mut Option<(u64, usize, Arc<Vec<u8>>)>,
+    jid: u64,
+    item: usize,
+    bytes: Vec<u8>,
+) -> Result<()> {
+    match in_flight.take() {
+        Some((j, i, _)) if j == jid && i == item => {}
+        other => {
+            return Err(GppError::Net(format!(
+                "serve: result for job {jid} item {item} but {other:?} in flight"
+            )))
+        }
+    }
+    let fleet = fleet_sample(srv);
+    let (mtx, cv) = &srv.sync;
+    let mut st = mtx.lock().unwrap();
+    // A job that already settled (e.g. park expiry raced a slow item)
+    // silently absorbs the stale result; its ledger is gone.
+    let settle = match st.job_mut(jid) {
+        Some(job) if job.outcome.is_none() => {
+            if job.ledger.record_result(item, bytes) {
+                m::CLUSTER_ITEMS_DONE.inc();
+            }
+            job.ledger.is_done()
+        }
+        _ => false,
+    };
+    if settle {
+        settle_job(&mut st, jid, fleet);
+    }
+    cv.notify_all();
+    Ok(())
+}
+
+fn record_failure(
+    srv: &Server,
+    in_flight: &mut Option<(u64, usize, Arc<Vec<u8>>)>,
+    jid: u64,
+    item: usize,
+    msg: String,
+) {
+    *in_flight = None;
+    let fleet = fleet_sample(srv);
+    let (mtx, cv) = &srv.sync;
+    let mut st = mtx.lock().unwrap();
+    let settle = match st.job_mut(jid) {
+        Some(job) if job.outcome.is_none() => {
+            job.ledger.set_fatal(GppError::UserCode {
+                code: -1,
+                context: format!("job {jid} item {item}: {msg}"),
+            });
+            true
+        }
+        _ => false,
+    };
+    if settle {
+        settle_job(&mut st, jid, fleet);
+    }
+    cv.notify_all();
+}
+
+/// Hand the worker its next item from any active job (round-robin
+/// across jobs), or park until one shows up. Returns `Ok(true)` when
+/// the daemon is draining and out of work — the worker was released
+/// with `H_DONE` and its connection loop should end.
+fn serve_dispatch(
+    stream: &mut TcpStream,
+    srv: &Server,
+    in_flight: &mut Option<(u64, usize, Arc<Vec<u8>>)>,
+) -> Result<bool> {
+    let (mtx, cv) = &srv.sync;
+    let mut st = mtx.lock().unwrap();
+    loop {
+        let n = st.jobs.len();
+        let mut picked = None;
+        for k in 0..n {
+            let idx = (st.rr + k) % n;
+            if st.jobs[idx].outcome.is_some() {
+                continue;
+            }
+            if let Some((item, bytes)) = st.jobs[idx].ledger.next_item() {
+                picked = Some((idx, item, bytes));
+                break;
+            }
+        }
+        if let Some((idx, item, bytes)) = picked {
+            st.rr = (idx + 1) % n;
+            let job = &st.jobs[idx];
+            let mut envelope = vec![H_WORK2];
+            job.id.encode(&mut envelope);
+            (item as u64).encode(&mut envelope);
+            job.kind.encode(&mut envelope);
+            job.cfg.as_ref().encode(&mut envelope);
+            envelope.extend_from_slice(&bytes);
+            *in_flight = Some((job.id, item, bytes));
+            m::CLUSTER_ITEMS_DISPATCHED.inc();
+            drop(st);
+            write_ctl(stream, &envelope)?;
+            return Ok(false);
+        }
+        if st.draining && !st.any_active() {
+            drop(st);
+            write_ctl(stream, &[H_DONE])?;
+            return Ok(true);
+        }
+        // Park: idle worker waits for a submit / requeue / drain. The
+        // timeout re-checks drain state even if a notify was missed.
+        let (next, _) = cv.wait_timeout(st, Duration::from_millis(100)).unwrap();
+        st = next;
+    }
+}
+
+// ---------------------------------------------------------------- client side
+
+fn client_submit(mut stream: TcpStream, srv: &Server, rest: &[u8]) -> Result<()> {
+    let mut input = rest;
+    let name = String::decode(&mut input)?;
+    let kind = String::decode(&mut input)?;
+    let cfg = Vec::<u8>::decode(&mut input)?;
+    let items = Vec::<Vec<u8>>::decode(&mut input)?;
+
+    let reject = |mut stream: TcpStream, srv: &Server, reason: String| -> Result<()> {
+        srv.sync.0.lock().unwrap().rejected += 1;
+        m::SERVE_JOBS_REJECTED.inc();
+        let mut reply = vec![S_REJECT];
+        reason.encode(&mut reply);
+        write_ctl(&mut stream, &reply)
+    };
+
+    if items.is_empty() {
+        return reject(stream, srv, format!("job '{name}': no items"));
+    }
+    if jobs::lookup(&kind).is_err() {
+        return reject(stream, srv, format!("job '{name}': unknown job kind '{kind}'"));
+    }
+    let (mtx, cv) = &srv.sync;
+    let id = {
+        let mut st = mtx.lock().unwrap();
+        if st.draining {
+            drop(st);
+            return reject(stream, srv, format!("job '{name}': daemon is draining"));
+        }
+        if st.jobs.len() >= srv.opts.admission {
+            let depth = st.jobs.len();
+            drop(st);
+            return reject(
+                stream,
+                srv,
+                format!("job '{name}': admission window full ({depth} resident jobs)"),
+            );
+        }
+        let id = st.next_job;
+        st.next_job += 1;
+        st.accepted += 1;
+        m::SERVE_JOBS_ACCEPTED.inc();
+        m::SERVE_JOBS_QUEUED.add(1);
+        st.jobs.push(ServeJob {
+            id,
+            name,
+            kind,
+            cfg: Arc::new(cfg),
+            ledger: HostLedger::new(items),
+            outcome: None,
+        });
+        cv.notify_all();
+        id
+    };
+
+    let mut reply = vec![S_ACCEPT];
+    id.encode(&mut reply);
+    write_ctl(&mut stream, &reply)?;
+
+    // Block until the job settles, however long its items take; the
+    // submit socket idles meanwhile, so lift any read deadline.
+    set_io_timeouts(&stream, None, srv.opts.net.write_timeout)?;
+    let outcome = {
+        let mut st = mtx.lock().unwrap();
+        loop {
+            if let Some(pos) = st.jobs.iter().position(|j| j.id == id && j.outcome.is_some()) {
+                let job = st.jobs.remove(pos);
+                m::SERVE_JOBS_QUEUED.add(-1);
+                break job.outcome.expect("position() checked outcome");
+            }
+            st = cv.wait(st).unwrap();
+        }
+    };
+    cv.notify_all(); // the drain waiter watches the job table empty out
+
+    let mut reply = vec![S_REPORT];
+    id.encode(&mut reply);
+    match outcome {
+        Ok(report) => {
+            true.encode(&mut reply);
+            encode_report(&report, &mut reply);
+        }
+        Err(e) => {
+            false.encode(&mut reply);
+            e.to_string().encode(&mut reply);
+        }
+    }
+    write_ctl(&mut stream, &reply)
+}
+
+fn client_drain(mut stream: TcpStream, srv: &Server) -> Result<()> {
+    let (mtx, cv) = &srv.sync;
+    let mut st = mtx.lock().unwrap();
+    st.draining = true;
+    cv.notify_all();
+    while !st.jobs.is_empty() {
+        st = cv.wait(st).unwrap();
+    }
+    let summary = format!(
+        "drained: accepted={} completed={} failed={} rejected={}",
+        st.accepted, st.completed, st.failed, st.rejected
+    );
+    st.shutdown = true;
+    drop(st);
+    cv.notify_all();
+
+    let mut reply = vec![S_DRAINED];
+    summary.encode(&mut reply);
+    write_ctl(&mut stream, &reply)
+}
+
+fn client_stats(mut stream: TcpStream) -> Result<()> {
+    let json = metrics::snapshot("serve").to_json();
+    let mut reply = vec![S_STATS];
+    json.encode(&mut reply);
+    write_ctl(&mut stream, &reply)
+}
+
+fn encode_report(report: &HostReport, out: &mut Vec<u8>) {
+    report.results.encode(out);
+    report.workers_joined.encode(out);
+    report.workers_lost.encode(out);
+    report.workers_reconnected.encode(out);
+    report.items_requeued.encode(out);
+    report.worker_stats.encode(out);
+}
+
+fn decode_report(input: &mut &[u8]) -> Result<HostReport> {
+    Ok(HostReport {
+        results: Vec::<Vec<u8>>::decode(input)?,
+        workers_joined: usize::decode(input)?,
+        workers_lost: usize::decode(input)?,
+        workers_reconnected: usize::decode(input)?,
+        items_requeued: usize::decode(input)?,
+        worker_stats: Vec::<String>::decode(input)?,
+    })
+}
+
+// ------------------------------------------------------------- client library
+
+fn client_connect(addr: &str, opts: &NetOptions) -> Result<TcpStream> {
+    let mut stream = connect_retry(addr, &RetryPolicy::connect(5_000))?;
+    set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
+    set_nodelay(&stream, opts.nodelay)?;
+    mux_handshake(&mut stream, addr)?;
+    Ok(stream)
+}
+
+/// Submit a named job to a serve daemon and block until its report.
+pub fn submit_job(
+    addr: &str,
+    name: &str,
+    kind: &str,
+    cfg: &[u8],
+    items: Vec<Vec<u8>>,
+    opts: &NetOptions,
+) -> Result<HostReport> {
+    let mut stream = client_connect(addr, opts)?;
+    let mut frame = vec![C_SUBMIT];
+    name.to_string().encode(&mut frame);
+    kind.to_string().encode(&mut frame);
+    cfg.to_vec().encode(&mut frame);
+    items.encode(&mut frame);
+    write_ctl(&mut stream, &frame)?;
+
+    let reply = read_ctl(&mut stream)?;
+    match reply.split_first() {
+        Some((&S_ACCEPT, _)) => {}
+        Some((&S_REJECT, rest)) => {
+            let mut input = rest;
+            let reason = String::decode(&mut input)?;
+            return Err(GppError::Net(format!("serve rejected job '{name}': {reason}")));
+        }
+        other => {
+            return Err(GppError::Net(format!(
+                "serve: unexpected submit reply {:?}",
+                other.map(|(t, _)| t)
+            )))
+        }
+    }
+
+    // The report takes as long as the job takes: wait unbounded.
+    set_io_timeouts(&stream, None, opts.write_timeout)?;
+    let reply = read_ctl(&mut stream)?;
+    match reply.split_first() {
+        Some((&S_REPORT, rest)) => {
+            let mut input = rest;
+            let _id = u64::decode(&mut input)?;
+            if bool::decode(&mut input)? {
+                decode_report(&mut input)
+            } else {
+                let msg = String::decode(&mut input)?;
+                Err(GppError::Net(format!("job '{name}' failed: {msg}")))
+            }
+        }
+        other => Err(GppError::Net(format!(
+            "serve: unexpected report frame {:?}",
+            other.map(|(t, _)| t)
+        ))),
+    }
+}
+
+/// Ask a serve daemon to drain: stop admitting, finish resident jobs,
+/// release the fleet, shut down. Returns the daemon's summary line.
+pub fn drain(addr: &str, opts: &NetOptions) -> Result<String> {
+    let mut stream = client_connect(addr, opts)?;
+    write_ctl(&mut stream, &[C_DRAIN])?;
+    set_io_timeouts(&stream, None, opts.write_timeout)?;
+    let reply = read_ctl(&mut stream)?;
+    match reply.split_first() {
+        Some((&S_DRAINED, rest)) => {
+            let mut input = rest;
+            String::decode(&mut input)
+        }
+        other => Err(GppError::Net(format!(
+            "serve: unexpected drain reply {:?}",
+            other.map(|(t, _)| t)
+        ))),
+    }
+}
+
+/// Fetch a serve daemon's live metrics snapshot (JSON).
+pub fn server_stats(addr: &str, opts: &NetOptions) -> Result<String> {
+    let mut stream = client_connect(addr, opts)?;
+    write_ctl(&mut stream, &[C_STATS])?;
+    let reply = read_ctl(&mut stream)?;
+    match reply.split_first() {
+        Some((&S_STATS, rest)) => {
+            let mut input = rest;
+            String::decode(&mut input)
+        }
+        other => Err(GppError::Net(format!(
+            "serve: unexpected stats reply {:?}",
+            other.map(|(t, _)| t)
+        ))),
+    }
+}
+
+// ------------------------------------------------------------- worker library
+
+/// The serve-mode elastic worker: dial, pull [`H_WORK2`] envelopes
+/// from every active job, survive connection losses under `policy`'s
+/// backoff — the serve twin of
+/// [`super::cluster::run_worker_elastic`]. Returns items completed
+/// across all sessions once the daemon releases it (drain).
+pub fn run_serve_worker(addr: &str, opts: &NetOptions, policy: &RetryPolicy) -> Result<usize> {
+    run_serve_worker_faulted(addr, opts, policy, None)
+}
+
+/// [`run_serve_worker`] with a scripted [`FaultPlan`] (chaos testing:
+/// kill the connection after N frames, silence the heartbeat).
+pub fn run_serve_worker_faulted(
+    addr: &str,
+    opts: &NetOptions,
+    policy: &RetryPolicy,
+    faults: Option<Arc<FaultPlan>>,
+) -> Result<usize> {
+    let mut st = WorkerState::default();
+    let mut delays = policy.delays();
+    let mut progress = (0u64, 0usize);
+    loop {
+        match serve_worker_session(addr, opts, &mut st, faults.as_ref()) {
+            Ok(()) => return Ok(st.items_done),
+            Err(e) => {
+                if (st.lease, st.items_done) != progress {
+                    progress = (st.lease, st.items_done);
+                    delays = policy.delays();
+                }
+                match delays.next() {
+                    Some(wait) => std::thread::sleep(wait),
+                    None => return Err(e),
+                }
+            }
+        }
+    }
+}
+
+/// One connection's worth of serve-worker protocol. Unlike the batch
+/// worker, a job error is *reported* ([`W_FAIL2`]) and the session
+/// keeps going — the failure belongs to the job, not the worker.
+fn serve_worker_session(
+    addr: &str,
+    opts: &NetOptions,
+    st: &mut WorkerState,
+    faults: Option<&Arc<FaultPlan>>,
+) -> Result<()> {
+    jobs::register_builtin_jobs();
+    metrics::enable();
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| GppError::Net(format!("serve worker connect {addr}: {e}")))?;
+    set_io_timeouts(&stream, opts.read_timeout, opts.write_timeout)?;
+    set_nodelay(&stream, opts.nodelay)?;
+    mux_handshake(&mut stream, addr)?;
+    let label = format!("worker:{addr}");
+    let writer = Arc::new(Mutex::new(stream.try_clone().map_err(|e| {
+        GppError::Net(format!("serve worker clone {addr}: {e}"))
+    })?));
+
+    let mut hello = vec![W_HELLO];
+    if st.lease != 0 {
+        st.lease.encode(&mut hello);
+    }
+    ctl_send(&writer, faults, &label, &hello)?;
+    let frame = ctl_recv(&mut stream, faults, &label)?;
+    match frame.split_first() {
+        Some((&H_CONFIG, rest)) => {
+            let mut input = rest;
+            st.lease = u64::decode(&mut input)?;
+            let name = String::decode(&mut input)?;
+            if name != SERVE_JOB {
+                return Err(GppError::Net(format!(
+                    "serve worker: host is running batch job '{name}', not a serve daemon"
+                )));
+            }
+        }
+        other => {
+            return Err(GppError::Net(format!(
+                "serve worker: expected config, got {:?}",
+                other.map(|(t, _)| t)
+            )))
+        }
+    }
+
+    let _beater = opts
+        .heartbeat
+        .map(|iv| Beater::spawn(writer.clone(), iv, faults.cloned(), label.clone()));
+
+    ctl_send(&writer, faults, &label, &[W_REQ])?;
+    loop {
+        let frame = ctl_recv(&mut stream, faults, &label)?;
+        match frame.split_first() {
+            Some((&H_WORK2, rest)) => {
+                let mut input = rest;
+                let jid = u64::decode(&mut input)?;
+                let item = u64::decode(&mut input)?;
+                let kind = String::decode(&mut input)?;
+                let cfg = Vec::<u8>::decode(&mut input)?;
+                let computed = jobs::lookup(&kind).and_then(|job| job(&cfg, input));
+                let reply = match computed {
+                    Ok(result) => {
+                        st.items_done += 1;
+                        let mut reply = vec![W_RESULT2];
+                        jid.encode(&mut reply);
+                        item.encode(&mut reply);
+                        reply.extend_from_slice(&result);
+                        reply
+                    }
+                    Err(e) => {
+                        let mut reply = vec![W_FAIL2];
+                        jid.encode(&mut reply);
+                        item.encode(&mut reply);
+                        e.to_string().encode(&mut reply);
+                        reply
+                    }
+                };
+                ctl_send(&writer, faults, &label, &reply)?;
+            }
+            Some((&H_DONE, _)) => {
+                let mut reply = vec![W_STATS];
+                reply.extend_from_slice(metrics::snapshot("serve-worker").to_json().as_bytes());
+                let _ = ctl_send(&writer, faults, &label, &reply);
+                return Ok(());
+            }
+            other => {
+                return Err(GppError::Net(format!(
+                    "serve worker: unexpected frame {:?}",
+                    other.map(|(t, _)| t)
+                )))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::cluster::default_config;
+    use crate::util::codec::to_bytes;
+
+    fn free_addr() -> String {
+        let sock = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = sock.local_addr().unwrap().to_string();
+        drop(sock);
+        addr
+    }
+
+    fn fast_net() -> NetOptions {
+        NetOptions::default().with_read_timeout_ms(2_000)
+    }
+
+    fn mandelbrot_items(rows: i64) -> (Vec<u8>, Vec<Vec<u8>>) {
+        let cfg = to_bytes(&default_config(16, rows, 5, 1));
+        let items = (0..rows).map(|r| to_bytes(&r)).collect();
+        (cfg, items)
+    }
+
+    #[test]
+    fn two_concurrent_clients_share_one_worker_and_drain_cleanly() {
+        let addr = free_addr();
+        let opts = ServeOptions::default().with_net(fast_net()).with_admission(4);
+        let daemon = {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_serve(&addr, &opts))
+        };
+        let worker = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                run_serve_worker(&addr, &fast_net(), &RetryPolicy::fast_local())
+            })
+        };
+        let clients: Vec<_> = (0..2)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let (cfg, items) = mandelbrot_items(4);
+                    submit_job(
+                        &addr,
+                        &format!("job-{i}"),
+                        jobs::MANDELBROT_ROW,
+                        &cfg,
+                        items,
+                        &fast_net(),
+                    )
+                })
+            })
+            .collect();
+        for c in clients {
+            let report = c.join().unwrap().expect("job completes");
+            assert_eq!(report.results.len(), 4);
+            assert_eq!(report.workers_lost, 0);
+        }
+        let summary_line = drain(&addr, &fast_net()).expect("drain");
+        assert!(summary_line.contains("completed=2"), "{summary_line}");
+        let done = worker.join().unwrap().expect("worker released");
+        assert_eq!(done, 8, "one worker computed all items of both jobs");
+        let summary = daemon.join().unwrap().expect("daemon exits");
+        assert_eq!(summary.jobs_accepted, 2);
+        assert_eq!(summary.jobs_completed, 2);
+        assert_eq!(summary.jobs_failed, 0);
+        assert_eq!(summary.workers_joined, 1);
+    }
+
+    #[test]
+    fn admission_window_rejects_and_parked_job_fails_on_deadline() {
+        let addr = free_addr();
+        // No workers ever join: the accepted job parks, then fails at
+        // the park deadline; a second submit is turned away at
+        // the admission window.
+        let opts = ServeOptions::default()
+            .with_net(fast_net())
+            .with_admission(1)
+            .with_park_ms(600);
+        let daemon = {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_serve(&addr, &opts))
+        };
+        let (cfg, items) = mandelbrot_items(2);
+        // Submit job 1 by hand so the accept is in hand before job 2
+        // goes in (submit_job would block through to the report).
+        let mut first = client_connect(&addr, &fast_net()).unwrap();
+        let mut frame = vec![C_SUBMIT];
+        "parked".to_string().encode(&mut frame);
+        jobs::MANDELBROT_ROW.to_string().encode(&mut frame);
+        cfg.to_vec().encode(&mut frame);
+        items.clone().encode(&mut frame);
+        write_ctl(&mut first, &frame).unwrap();
+        let accept = read_ctl(&mut first).unwrap();
+        assert_eq!(accept.first(), Some(&S_ACCEPT));
+
+        let err = submit_job(&addr, "late", jobs::MANDELBROT_ROW, &cfg, items, &fast_net())
+            .expect_err("second job must be rejected");
+        assert!(err.to_string().contains("admission window full"), "{err}");
+
+        set_io_timeouts(&first, None, None).unwrap();
+        let report = read_ctl(&mut first).unwrap();
+        let mut input = &report[1..];
+        let _id = u64::decode(&mut input).unwrap();
+        assert!(!bool::decode(&mut input).unwrap(), "parked job must fail");
+        let msg = String::decode(&mut input).unwrap();
+        assert!(msg.contains("park deadline"), "{msg}");
+        drop(first);
+
+        drain(&addr, &fast_net()).expect("drain");
+        let summary = daemon.join().unwrap().expect("daemon exits");
+        assert_eq!(summary.jobs_accepted, 1);
+        assert_eq!(summary.jobs_failed, 1);
+        assert_eq!(summary.jobs_rejected, 1);
+        assert_eq!(summary.jobs_completed, 0);
+    }
+
+    #[test]
+    fn job_failure_is_isolated_to_its_job() {
+        let addr = free_addr();
+        let opts = ServeOptions::default().with_net(fast_net()).with_admission(4);
+        let daemon = {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_serve(&addr, &opts))
+        };
+        let worker = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                run_serve_worker(&addr, &fast_net(), &RetryPolicy::fast_local())
+            })
+        };
+        // Garbage config makes the DSL job fail deterministically on
+        // its first item — that job dies, the worker must not.
+        let bad = submit_job(
+            &addr,
+            "bad",
+            jobs::DSL_APPLY,
+            &[0xde, 0xad],
+            vec![vec![1], vec![2]],
+            &fast_net(),
+        )
+        .expect_err("corrupt config must fail the job");
+        assert!(bad.to_string().contains("failed"), "{bad}");
+
+        let (cfg, items) = mandelbrot_items(3);
+        let good = submit_job(&addr, "good", jobs::MANDELBROT_ROW, &cfg, items, &fast_net())
+            .expect("same worker serves the next job");
+        assert_eq!(good.results.len(), 3);
+
+        drain(&addr, &fast_net()).expect("drain");
+        assert_eq!(worker.join().unwrap().expect("worker survives the bad job"), 3);
+        let summary = daemon.join().unwrap().expect("daemon exits");
+        assert_eq!(summary.jobs_accepted, 2);
+        assert_eq!(summary.jobs_completed, 1);
+        assert_eq!(summary.jobs_failed, 1);
+    }
+}

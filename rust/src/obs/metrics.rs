@@ -151,15 +151,24 @@ pub mod m {
     pub static CLUSTER_ITEMS_REQUEUED: Counter = Counter::new();
     pub static CLUSTER_WORKERS_JOINED: Counter = Counter::new();
     pub static CLUSTER_WORKERS_LOST: Counter = Counter::new();
+    pub static CLUSTER_HEARTBEATS: Counter = Counter::new();
+    pub static CLUSTER_EVICTIONS: Counter = Counter::new();
+    pub static CLUSTER_RECONNECTS: Counter = Counter::new();
+    pub static SERVE_JOBS_ACCEPTED: Counter = Counter::new();
+    pub static SERVE_JOBS_REJECTED: Counter = Counter::new();
+    pub static SERVE_JOBS_COMPLETED: Counter = Counter::new();
+    pub static SERVE_JOBS_FAILED: Counter = Counter::new();
 
     pub static NET_PUMP_THREADS: Gauge = Gauge::new();
     pub static NET_CONNS: Gauge = Gauge::new();
     pub static CLUSTER_ITEMS_IN_FLIGHT: Gauge = Gauge::new();
+    pub static SERVE_JOBS_QUEUED: Gauge = Gauge::new();
+    pub static SERVE_WORKERS_LIVE: Gauge = Gauge::new();
 
     pub static CSP_BLOCKED_US: Histogram = Histogram::new();
 }
 
-fn counter_table() -> [(&'static str, &'static Counter); 17] {
+fn counter_table() -> [(&'static str, &'static Counter); 24] {
     [
         ("csp.writes", &m::CSP_WRITES),
         ("csp.reads", &m::CSP_READS),
@@ -178,14 +187,23 @@ fn counter_table() -> [(&'static str, &'static Counter); 17] {
         ("cluster.items_requeued", &m::CLUSTER_ITEMS_REQUEUED),
         ("cluster.workers_joined", &m::CLUSTER_WORKERS_JOINED),
         ("cluster.workers_lost", &m::CLUSTER_WORKERS_LOST),
+        ("cluster.heartbeats", &m::CLUSTER_HEARTBEATS),
+        ("cluster.evictions", &m::CLUSTER_EVICTIONS),
+        ("cluster.reconnects", &m::CLUSTER_RECONNECTS),
+        ("serve.jobs_accepted", &m::SERVE_JOBS_ACCEPTED),
+        ("serve.jobs_rejected", &m::SERVE_JOBS_REJECTED),
+        ("serve.jobs_completed", &m::SERVE_JOBS_COMPLETED),
+        ("serve.jobs_failed", &m::SERVE_JOBS_FAILED),
     ]
 }
 
-fn gauge_table() -> [(&'static str, &'static Gauge); 3] {
+fn gauge_table() -> [(&'static str, &'static Gauge); 5] {
     [
         ("net.pump_threads", &m::NET_PUMP_THREADS),
         ("net.conns", &m::NET_CONNS),
         ("cluster.items_in_flight", &m::CLUSTER_ITEMS_IN_FLIGHT),
+        ("serve.jobs_queued", &m::SERVE_JOBS_QUEUED),
+        ("serve.workers_live", &m::SERVE_WORKERS_LIVE),
     ]
 }
 

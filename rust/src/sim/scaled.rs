@@ -55,7 +55,7 @@ use crate::util::codec::Wire;
 use crate::util::rng::Rng;
 
 /// Snapshot format version.
-const SNAP_VERSION: u32 = 1;
+const SNAP_VERSION: u32 = 2;
 
 /// A round must be at least this many processes per carrier before the
 /// pool is engaged; smaller rounds step inline (chunk hand-off costs
@@ -123,6 +123,14 @@ pub enum Effect {
     /// Block until a message arrives on `ch`; resume with
     /// [`Resume::Delivered`]. The carrier thread is released.
     Recv { ch: usize },
+    /// Like [`Effect::Recv`], but give up after `ticks` of virtual time
+    /// with [`Resume::TimedOut`] — the virtual-clock analogue of a
+    /// socket read timeout, which is what lets a simulated host *tick*
+    /// its liveness deadline while nothing arrives (heartbeat
+    /// eviction). A message that arrives first wins and the pending
+    /// timer is disarmed (generation-guarded, so a stale wake never
+    /// fires).
+    RecvTimeout { ch: usize, ticks: u64 },
     /// Block for `ticks` of virtual time; resume with [`Resume::Woke`].
     Sleep { ticks: u64 },
     /// The process is finished; it is never stepped again.
@@ -139,6 +147,8 @@ pub enum Resume {
     /// A [`Effect::Sleep`] elapsed, or the previous effect (send/yield)
     /// completed.
     Woke,
+    /// A [`Effect::RecvTimeout`] elapsed with nothing delivered.
+    TimedOut,
 }
 
 impl Wire for Resume {
@@ -150,6 +160,7 @@ impl Wire for Resume {
                 m.encode(out);
             }
             Resume::Woke => 2u8.encode(out),
+            Resume::TimedOut => 3u8.encode(out),
         }
     }
 
@@ -158,6 +169,7 @@ impl Wire for Resume {
             0 => Ok(Resume::Start),
             1 => Ok(Resume::Delivered(Msg::decode(input)?)),
             2 => Ok(Resume::Woke),
+            3 => Ok(Resume::TimedOut),
             t => Err(GppError::Sim(format!("snapshot: bad resume tag {t}"))),
         }
     }
@@ -206,6 +218,10 @@ impl ChanSpec {
 enum Status {
     Runnable(Resume),
     BlockedRecv(u32),
+    /// Blocked in [`Effect::RecvTimeout`]; `gen` matches the pending
+    /// [`Ev::TimeoutWake`] so a delivery-then-reblock never resurrects
+    /// a stale timer.
+    BlockedRecvTimed { ch: u32, gen: u32 },
     Sleeping,
     Halted,
 }
@@ -223,6 +239,11 @@ impl Wire for Status {
             }
             Status::Sleeping => 2u8.encode(out),
             Status::Halted => 3u8.encode(out),
+            Status::BlockedRecvTimed { ch, gen } => {
+                4u8.encode(out);
+                ch.encode(out);
+                gen.encode(out);
+            }
         }
     }
 
@@ -232,6 +253,10 @@ impl Wire for Status {
             1 => Ok(Status::BlockedRecv(u32::decode(input)?)),
             2 => Ok(Status::Sleeping),
             3 => Ok(Status::Halted),
+            4 => Ok(Status::BlockedRecvTimed {
+                ch: u32::decode(input)?,
+                gen: u32::decode(input)?,
+            }),
             t => Err(GppError::Sim(format!("snapshot: bad status tag {t}"))),
         }
     }
@@ -254,6 +279,9 @@ struct Chan {
 enum Ev {
     Deliver { ch: u32, msg: Msg },
     Wake { pid: u32 },
+    /// A [`Effect::RecvTimeout`] deadline; fires only if `pid` is still
+    /// blocked with the same `gen` (else the delivery won the race).
+    TimeoutWake { pid: u32, gen: u32 },
 }
 
 impl Wire for Ev {
@@ -268,6 +296,11 @@ impl Wire for Ev {
                 1u8.encode(out);
                 pid.encode(out);
             }
+            Ev::TimeoutWake { pid, gen } => {
+                2u8.encode(out);
+                pid.encode(out);
+                gen.encode(out);
+            }
         }
     }
 
@@ -275,6 +308,7 @@ impl Wire for Ev {
         match u8::decode(input)? {
             0 => Ok(Ev::Deliver { ch: u32::decode(input)?, msg: Msg::decode(input)? }),
             1 => Ok(Ev::Wake { pid: u32::decode(input)? }),
+            2 => Ok(Ev::TimeoutWake { pid: u32::decode(input)?, gen: u32::decode(input)? }),
             t => Err(GppError::Sim(format!("snapshot: bad event tag {t}"))),
         }
     }
@@ -410,6 +444,10 @@ pub struct ScaledSim {
     steps: u64,
     rounds: u64,
     halted: usize,
+    /// Per-proc timed-recv generation counter: bumped every time the
+    /// proc blocks with [`Effect::RecvTimeout`], so a `TimeoutWake`
+    /// scheduled for an *earlier* block can never fire a later one.
+    timeout_gen: Vec<u32>,
 }
 
 impl ScaledSim {
@@ -425,6 +463,7 @@ impl ScaledSim {
             steps: 0,
             rounds: 0,
             halted: 0,
+            timeout_gen: Vec::new(),
         }
     }
 
@@ -456,6 +495,7 @@ impl ScaledSim {
         self.procs.push(Some(p));
         self.status.push(Status::Runnable(Resume::Start));
         self.ready.push(pid as u32);
+        self.timeout_gen.push(0);
         pid
     }
 
@@ -629,6 +669,20 @@ impl ScaledSim {
                     c.waiters.push_back(pid);
                 }
             }
+            Effect::RecvTimeout { ch, ticks } => {
+                let c = &mut self.chans[ch];
+                if let Some(msg) = c.queue.pop_front() {
+                    self.status[pid as usize] = Status::Runnable(Resume::Delivered(msg));
+                    self.ready.push(pid);
+                } else {
+                    self.timeout_gen[pid as usize] = self.timeout_gen[pid as usize].wrapping_add(1);
+                    let gen = self.timeout_gen[pid as usize];
+                    self.status[pid as usize] = Status::BlockedRecvTimed { ch: ch as u32, gen };
+                    c.waiters.push_back(pid);
+                    self.events
+                        .push(self.time.saturating_add(ticks.max(1)), Ev::TimeoutWake { pid, gen });
+                }
+            }
             Effect::Sleep { ticks } => {
                 self.status[pid as usize] = Status::Sleeping;
                 self.events.push(self.time.saturating_add(ticks.max(1)), Ev::Wake { pid });
@@ -686,7 +740,16 @@ impl ScaledSim {
                     let c = &mut self.chans[ch as usize];
                     match c.waiters.pop_front() {
                         Some(pid) => {
-                            debug_assert_eq!(self.status[pid as usize], Status::BlockedRecv(ch));
+                            // A waiter may be a plain or a timed recv; a
+                            // timed one's pending TimeoutWake becomes a
+                            // no-op (status no longer matches its gen).
+                            debug_assert!(matches!(
+                                self.status[pid as usize],
+                                Status::BlockedRecv(c) if c == ch
+                            ) || matches!(
+                                self.status[pid as usize],
+                                Status::BlockedRecvTimed { ch: c, .. } if c == ch
+                            ));
                             self.status[pid as usize] = Status::Runnable(Resume::Delivered(msg));
                             self.ready.push(pid);
                         }
@@ -699,6 +762,17 @@ impl ScaledSim {
                         self.ready.push(pid);
                     }
                 }
+                Ev::TimeoutWake { pid, gen } => {
+                    if let Status::BlockedRecvTimed { ch, gen: g } = self.status[pid as usize] {
+                        if g == gen {
+                            // Still waiting on THIS block: leave the
+                            // waiter queue and resume with TimedOut.
+                            self.chans[ch as usize].waiters.retain(|&w| w != pid);
+                            self.status[pid as usize] = Status::Runnable(Resume::TimedOut);
+                            self.ready.push(pid);
+                        }
+                    }
+                }
             }
         }
     }
@@ -707,7 +781,7 @@ impl ScaledSim {
         let blocked = self
             .status
             .iter()
-            .filter(|s| matches!(s, Status::BlockedRecv(_)))
+            .filter(|s| matches!(s, Status::BlockedRecv(_) | Status::BlockedRecvTimed { .. }))
             .count();
         let sleeping = self.status.iter().filter(|s| **s == Status::Sleeping).count();
         GppError::Sim(format!(
@@ -736,6 +810,7 @@ impl ScaledSim {
         (self.procs.len() as u64).encode(&mut out);
         for pid in 0..self.procs.len() {
             self.status[pid].encode(&mut out);
+            self.timeout_gen[pid].encode(&mut out);
             let mut st = Vec::new();
             self.procs[pid].as_ref().expect("no step in progress").save(&mut st);
             st.encode(&mut out);
@@ -793,6 +868,7 @@ impl ScaledSim {
         }
         for pid in 0..np {
             self.status[pid] = Status::decode(&mut input)?;
+            self.timeout_gen[pid] = u32::decode(&mut input)?;
             let st: Vec<u8> = Vec::decode(&mut input)?;
             let mut sin: &[u8] = &st;
             self.procs[pid]
@@ -1050,6 +1126,105 @@ mod tests {
         sim.add_proc(Box::new(Watcher { ch: alarm, got: false }));
         let stats = sim.run().unwrap();
         assert!(stats.virtual_time >= 50, "dead letter arrives at the lost delivery time");
+    }
+
+    #[test]
+    fn recv_timeout_times_out_and_a_delivery_disarms_the_timer() {
+        let mut sim = ScaledSim::new(ScaledSimConfig { carriers: 1, seed: 7, max_steps: 10_000 });
+        let quiet = sim.add_chan(ChanSpec::ideal("quiet"));
+        let busy = sim.add_chan(ChanSpec::modeled("busy", NetModel::parse("custom:10:0:0").unwrap()));
+        // Phase 1: timed recv on `quiet` (nobody sends) → TimedOut at
+        // t+100. Phase 2: timed recv on `busy` with a generous deadline;
+        // the peer's message (latency 10) wins the race, and the stale
+        // TimeoutWake left in the queue must NOT re-wake us later.
+        struct Timed {
+            quiet: usize,
+            busy: usize,
+            timeouts: u64,
+            delivered: u64,
+            phase: u8,
+        }
+        impl LogicalProc for Timed {
+            fn step(&mut self, resume: Resume) -> Effect {
+                match (self.phase, resume) {
+                    (0, _) => {
+                        self.phase = 1;
+                        Effect::RecvTimeout { ch: self.quiet, ticks: 100 }
+                    }
+                    (1, Resume::TimedOut) => {
+                        self.timeouts += 1;
+                        self.phase = 2;
+                        Effect::RecvTimeout { ch: self.busy, ticks: 100_000 }
+                    }
+                    (2, Resume::Delivered(m)) => {
+                        assert_eq!(m.tag, 5);
+                        self.delivered += 1;
+                        self.phase = 3;
+                        // Linger past the stale timer's fire time; a
+                        // stale TimeoutWake would hit us Sleeping and
+                        // must no-op.
+                        Effect::Sleep { ticks: 200_000 }
+                    }
+                    (3, Resume::Woke) => Effect::Halt,
+                    other => panic!("timed: unexpected {other:?}"),
+                }
+            }
+            fn save(&self, out: &mut Vec<u8>) {
+                self.timeouts.encode(out);
+                self.delivered.encode(out);
+                self.phase.encode(out);
+            }
+            fn restore(&mut self, input: &mut &[u8]) -> Result<()> {
+                self.timeouts = u64::decode(input)?;
+                self.delivered = u64::decode(input)?;
+                self.phase = u8::decode(input)?;
+                Ok(())
+            }
+        }
+        struct LateSender {
+            ch: usize,
+            state: u8,
+        }
+        impl LogicalProc for LateSender {
+            fn step(&mut self, _resume: Resume) -> Effect {
+                match self.state {
+                    0 => {
+                        // Wait out phase 1, then feed phase 2.
+                        self.state = 1;
+                        Effect::Sleep { ticks: 150 }
+                    }
+                    1 => {
+                        self.state = 2;
+                        Effect::Send { ch: self.ch, msg: Msg::new(5, 0, 0) }
+                    }
+                    _ => Effect::Halt,
+                }
+            }
+            fn save(&self, out: &mut Vec<u8>) {
+                self.state.encode(out);
+            }
+            fn restore(&mut self, input: &mut &[u8]) -> Result<()> {
+                self.state = u8::decode(input)?;
+                Ok(())
+            }
+        }
+        let timed = sim.add_proc(Box::new(Timed {
+            quiet,
+            busy,
+            timeouts: 0,
+            delivered: 0,
+            phase: 0,
+        }));
+        sim.add_proc(Box::new(LateSender { ch: busy, state: 0 }));
+        let stats = sim.run().unwrap();
+        assert!(stats.virtual_time >= 100 + 200_000, "t={}", stats.virtual_time);
+        let p = sim.proc(timed).unwrap();
+        let mut st = Vec::new();
+        p.save(&mut st);
+        let mut sin: &[u8] = &st;
+        let (timeouts, delivered) = (u64::decode(&mut sin).unwrap(), u64::decode(&mut sin).unwrap());
+        assert_eq!(timeouts, 1, "quiet channel times out exactly once");
+        assert_eq!(delivered, 1, "busy channel delivers before its deadline");
     }
 
     #[test]

@@ -21,18 +21,39 @@
 //! its socket erroring) and halts. Worker *churn* — a worker process
 //! dying mid-item — reuses the same notification, sent by the dying
 //! worker itself (the OS closing its socket).
+//!
+//! The **elastic** extension models the standing-fleet failure modes on
+//! the same virtual clock (all off by default, so the one-shot batch
+//! scenarios above replay unchanged):
+//!
+//! * *heartbeats* ([`ClusterScenario::with_heartbeat_ticks`]) — workers
+//!   send `W_BEAT` whenever the connection would otherwise be quiet
+//!   (mid-compute and while parked), exactly the real `Beater`;
+//! * *deadline eviction* ([`ClusterScenario::with_evict_ticks`]) — the
+//!   host reads its inbox with [`Effect::RecvTimeout`] and evicts any
+//!   connection silent past the deadline, requeueing its item: the
+//!   pulled-cable peer whose TCP stack never sends an RST;
+//! * *silent death* ([`ClusterScenario::with_silent_permille`]) — a
+//!   worker halts mid-item **without** the `CONN_DEAD` notice; only the
+//!   eviction deadline can recover its item (without it the run is a
+//!   detected deadlock);
+//! * *reconnect* ([`ClusterScenario::with_reconnect`]) — a churn-killed
+//!   worker redials on the shared [`RetryPolicy`] backoff schedule
+//!   (virtual ticks) and rejoins with a reconnect `W_HELLO`, counted in
+//!   [`HostReport::workers_reconnected`].
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
 use crate::csp::error::{GppError, Result};
 use crate::net::cluster::{
-    HostLedger, H_CONFIG, H_DONE, H_WORK, W_HELLO, W_REQ, W_RESULT, W_STATS,
+    HostLedger, H_CONFIG, H_DONE, H_WORK, W_BEAT, W_HELLO, W_REQ, W_RESULT, W_STATS,
 };
+use crate::net::retry::RetryPolicy;
 use crate::net::HostReport;
 use crate::sim::net_model::NetModel;
 use crate::sim::scaled::{
-    ChanSpec, Effect, LogicalProc, Msg, Resume, ScaledSim, ScaledSimConfig,
+    scaled_now, ChanSpec, Effect, LogicalProc, Msg, Resume, ScaledSim, ScaledSimConfig,
 };
 use crate::util::codec::Wire;
 use crate::util::rng::Rng;
@@ -49,6 +70,14 @@ type InFlightItem = Option<(usize, Arc<Vec<u8>>)>;
 /// reporting a dead connection (the `serve_conn` read-error path).
 /// Chosen outside the protocol's tag range.
 pub(crate) const CONN_DEAD: u8 = 200;
+
+/// `b` operand of a worker-initiated `CONN_DEAD` (churn death): the
+/// worker closed its own connection, so the host must not send the
+/// stranded-worker teardown `H_DONE` — the peer is gone (and, with
+/// reconnect on, a fresh session would otherwise read the stale frame).
+/// Unreachable as a copied operand: dead letters copy item ids and
+/// hello flags, never `u64::MAX`.
+const SELF_DEATH: u64 = u64::MAX;
 
 /// Channel id of the host's inbox (all workers send here; losses
 /// dead-letter here). Worker `wid` listens on channel `1 + wid`.
@@ -76,6 +105,19 @@ pub struct ClusterScenario {
     pub join_spread: u64,
     /// Step budget guard handed to the engine.
     pub max_steps: u64,
+    /// Worker heartbeat interval in virtual ticks (`0` = no beats) —
+    /// the simulated `Beater`.
+    pub heartbeat_ticks: u64,
+    /// Host liveness deadline in virtual ticks (`0` = no eviction): a
+    /// connection silent past this is evicted, its item requeued.
+    pub evict_ticks: u64,
+    /// Per-completed-item probability (‰) that the worker dies
+    /// *silently* — halting without a `CONN_DEAD` notice, recoverable
+    /// only through the eviction deadline.
+    pub silent_permille: u32,
+    /// Churn-killed workers redial (jittered exponential backoff on the
+    /// virtual clock) and rejoin with a reconnect `W_HELLO`.
+    pub reconnect: bool,
 }
 
 impl ClusterScenario {
@@ -90,6 +132,10 @@ impl ClusterScenario {
             compute_ticks: 2_000,
             join_spread: 10_000,
             max_steps: u64::MAX,
+            heartbeat_ticks: 0,
+            evict_ticks: 0,
+            silent_permille: 0,
+            reconnect: false,
         }
     }
 
@@ -115,6 +161,26 @@ impl ClusterScenario {
 
     pub fn with_compute_ticks(mut self, ticks: u64) -> Self {
         self.compute_ticks = ticks;
+        self
+    }
+
+    pub fn with_heartbeat_ticks(mut self, ticks: u64) -> Self {
+        self.heartbeat_ticks = ticks;
+        self
+    }
+
+    pub fn with_evict_ticks(mut self, ticks: u64) -> Self {
+        self.evict_ticks = ticks;
+        self
+    }
+
+    pub fn with_silent_permille(mut self, silent: u32) -> Self {
+        self.silent_permille = silent.min(1000);
+        self
+    }
+
+    pub fn with_reconnect(mut self, on: bool) -> Self {
+        self.reconnect = on;
         self
     }
 
@@ -154,10 +220,27 @@ impl ClusterScenario {
             notified: vec![false; self.workers],
             stats_got: vec![false; self.workers],
             joined: 0,
+            reconnects: 0,
+            evict_ticks: self.evict_ticks,
+            live: vec![false; self.workers],
+            last_seen: vec![0; self.workers],
             outbox: VecDeque::new(),
             report: report.clone(),
         }));
         for wid in 0..self.workers {
+            // The shared redial schedule, on the virtual clock: same
+            // jittered exponential backoff as the socket worker (the
+            // fast-local profile, so redials land within a short
+            // simulated run), seeded per worker so a mass churn does
+            // not redial in lockstep.
+            let backoff = if self.reconnect {
+                let mut policy = RetryPolicy::fast_local();
+                policy.seed =
+                    self.seed ^ (wid as u64).wrapping_mul(0x517c_c1b7_2722_0a95).wrapping_add(1);
+                policy.delays_ticks()
+            } else {
+                Vec::new()
+            };
             sim.add_proc(Box::new(WorkerProc {
                 wid: wid as u64,
                 state: WState::Init,
@@ -167,6 +250,13 @@ impl ClusterScenario {
                 churn_permille: self.churn_permille,
                 compute_ticks: self.compute_ticks,
                 join_spread: self.join_spread,
+                heartbeat_ticks: self.heartbeat_ticks,
+                silent_permille: self.silent_permille,
+                backoff,
+                compute_left: 0,
+                sessions: 0,
+                redials: 0,
+                awaiting_cfg: false,
             }));
         }
         BuiltScenario { sim, report }
@@ -251,6 +341,16 @@ struct HostProc {
     notified: Vec<bool>,
     stats_got: Vec<bool>,
     joined: usize,
+    /// Reconnect `W_HELLO`s accepted (the real `Membership` counter).
+    reconnects: usize,
+    /// Liveness deadline in ticks; `0` = no eviction (inbox reads
+    /// block, the one-shot batch behaviour).
+    evict_ticks: u64,
+    /// Joined, not dead, not yet released — the connections the
+    /// eviction sweep watches.
+    live: Vec<bool>,
+    /// Virtual time of the last frame from each connection.
+    last_seen: Vec<u64>,
     /// One engine effect per step, so multi-frame reactions (e.g. the
     /// final `H_DONE` broadcast) queue here.
     outbox: VecDeque<(usize, Msg, bool)>,
@@ -285,12 +385,53 @@ impl HostProc {
         }
     }
 
+    /// `H_DONE` this connection: it is released, no longer watched by
+    /// the eviction sweep.
+    fn release(&mut self, wid: u64) {
+        self.notified[wid as usize] = true;
+        self.live[wid as usize] = false;
+        self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+    }
+
     /// All items done: release every parked requester.
     fn flush_parked(&mut self) {
         while let Some(wid) = self.parked.pop_front() {
             if !self.dead[wid as usize] {
-                self.notified[wid as usize] = true;
-                self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+                self.release(wid);
+            }
+        }
+    }
+
+    /// Hand the recovered item of a lost connection to a parked
+    /// requester, if any (`cv.notify_all()`). Stale parked entries for
+    /// since-dead connections are skipped lazily (eager removal would
+    /// be O(parked) per death).
+    fn notify_requeue(&mut self) {
+        while let Some(p) = self.parked.pop_front() {
+            if !self.dead[p as usize] {
+                self.dispatch_or_park(p);
+                break;
+            }
+        }
+    }
+
+    /// Evict every watched connection silent past the deadline: the
+    /// real host's `sweep_overdue` on its read-quantum tick.
+    fn sweep_evictions(&mut self, now: u64) {
+        for widx in 0..self.nworkers {
+            if !self.live[widx] || now.saturating_sub(self.last_seen[widx]) <= self.evict_ticks {
+                continue;
+            }
+            let wid = widx as u64;
+            self.dead[widx] = true;
+            self.live[widx] = false;
+            let requeued = self.ledger.worker_lost(self.in_flight[widx].take());
+            // Stand-in for the host closing the evicted socket: a peer
+            // that was merely slow (not dead) observes the teardown and
+            // exits; a silently-dead peer never reads it.
+            self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+            if requeued {
+                self.notify_requeue();
             }
         }
     }
@@ -300,25 +441,33 @@ impl HostProc {
         let widx = wid as usize;
         debug_assert!(widx < self.nworkers, "frame from unknown worker {wid}");
         // Frames from a torn-down connection: the real host's connection
-        // thread is gone, so nothing reads them. Drop.
-        if self.dead[widx] && m.tag != CONN_DEAD {
+        // thread is gone, so nothing reads them. Drop. A `W_HELLO` is a
+        // NEW connection from the same worker (reconnect) and passes.
+        if self.dead[widx] && m.tag != CONN_DEAD && m.tag != W_HELLO {
             return;
         }
         match m.tag {
             W_HELLO => {
-                self.joined += 1;
+                if m.b == 1 {
+                    // Reconnect: revive the lease, as `Membership::admit`
+                    // with a prior lease does.
+                    self.reconnects += 1;
+                    self.dead[widx] = false;
+                    self.notified[widx] = false;
+                } else {
+                    self.joined += 1;
+                }
+                self.live[widx] = true;
                 if self.ledger.is_done() {
                     // Late joiner after completion: straight to done.
-                    self.notified[widx] = true;
-                    self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+                    self.release(wid);
                 } else {
                     self.send(wid, Msg::new(H_CONFIG, wid, 0));
                 }
             }
             W_REQ => {
                 if self.ledger.is_done() {
-                    self.notified[widx] = true;
-                    self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+                    self.release(wid);
                 } else {
                     self.dispatch_or_park(wid);
                 }
@@ -333,14 +482,16 @@ impl HostProc {
                 self.in_flight[widx] = None;
                 self.ledger.record_result(id, Self::result_bytes(id));
                 if self.ledger.is_done() {
-                    self.notified[widx] = true;
-                    self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+                    self.release(wid);
                     self.flush_parked();
                 } else {
                     // `conn_loop` dispatches the next item on the same
                     // connection without a second W_REQ.
                     self.dispatch_or_park(wid);
                 }
+            }
+            W_BEAT => {
+                // Liveness only — `last_seen` was already refreshed.
             }
             W_STATS => {
                 self.stats_got[widx] = true;
@@ -352,26 +503,22 @@ impl HostProc {
                     return; // second loss on an already-dead connection
                 }
                 self.dead[widx] = true;
+                self.live[widx] = false;
                 if self.notified[widx] {
                     // Connection died after H_DONE: its stats just never
                     // arrive (best effort, as on the real wire).
                     return;
                 }
                 let requeued = self.ledger.worker_lost(self.in_flight[widx].take());
-                // The stranded worker observes the teardown (its socket
-                // erroring) and exits.
-                self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+                if m.b != SELF_DEATH {
+                    // The stranded worker observes the teardown (its
+                    // socket erroring) and exits. A self-closed peer
+                    // (churn death) gets no notice — it is gone, and a
+                    // reconnect session must not read a stale H_DONE.
+                    self.send_reliable(wid, Msg::new(H_DONE, wid, 0));
+                }
                 if requeued {
-                    // `cv.notify_all()`: hand the recovered item to a
-                    // parked requester, if any. Stale parked entries for
-                    // since-dead connections are skipped lazily (eager
-                    // removal would be O(parked) per death).
-                    while let Some(p) = self.parked.pop_front() {
-                        if !self.dead[p as usize] {
-                            self.dispatch_or_park(p);
-                            break;
-                        }
-                    }
+                    self.notify_requeue();
                 }
             }
             t => unreachable!("host: unknown tag {t}"),
@@ -387,8 +534,23 @@ impl HostProc {
 
 impl LogicalProc for HostProc {
     fn step(&mut self, resume: Resume) -> Effect {
-        if let Resume::Delivered(m) = resume {
-            self.handle(m);
+        let now = scaled_now().unwrap_or(0);
+        match resume {
+            Resume::Delivered(m) => {
+                let widx = m.a as usize;
+                if widx < self.nworkers {
+                    // `Membership::seen`: any frame refreshes liveness.
+                    self.last_seen[widx] = now;
+                }
+                self.handle(m);
+            }
+            // The read quantum elapsed with nothing delivered — the
+            // sweep below is the whole point of the tick.
+            Resume::TimedOut => {}
+            _ => {}
+        }
+        if self.evict_ticks > 0 {
+            self.sweep_evictions(now);
         }
         if let Some((ch, msg, reliable)) = self.outbox.pop_front() {
             return if reliable {
@@ -398,10 +560,16 @@ impl LogicalProc for HostProc {
             };
         }
         if self.settled() {
-            *self.report.lock().unwrap() = Some(self.ledger.take_report(self.joined));
+            *self.report.lock().unwrap() =
+                Some(self.ledger.take_report(self.joined, self.reconnects));
             return Effect::Halt;
         }
-        Effect::Recv { ch: HOST_CH }
+        if self.evict_ticks > 0 {
+            // Tick the deadline while idle: `host_read_quantum`.
+            Effect::RecvTimeout { ch: HOST_CH, ticks: (self.evict_ticks / 4).max(1) }
+        } else {
+            Effect::Recv { ch: HOST_CH }
+        }
     }
 
     fn save(&self, out: &mut Vec<u8>) {
@@ -424,6 +592,9 @@ impl LogicalProc for HostProc {
         self.notified.encode(out);
         self.stats_got.encode(out);
         (self.joined as u64).encode(out);
+        (self.reconnects as u64).encode(out);
+        self.live.encode(out);
+        self.last_seen.encode(out);
         (self.outbox.len() as u64).encode(out);
         for (ch, msg, reliable) in &self.outbox {
             (*ch as u64).encode(out);
@@ -451,6 +622,9 @@ impl LogicalProc for HostProc {
         self.notified = Vec::<bool>::decode(input)?;
         self.stats_got = Vec::<bool>::decode(input)?;
         self.joined = u64::decode(input)? as usize;
+        self.reconnects = u64::decode(input)? as usize;
+        self.live = Vec::<bool>::decode(input)?;
+        self.last_seen = Vec::<u64>::decode(input)?;
         let on = u64::decode(input)? as usize;
         self.outbox.clear();
         for _ in 0..on {
@@ -465,11 +639,18 @@ impl LogicalProc for HostProc {
 
 // ---------------------------------------------------------------- worker
 
+/// How long a redialling worker waits for `H_CONFIG` before treating
+/// the attempt as connection-refused (the host is gone) and backing
+/// off again. Must dominate the channel model's latency + jitter by a
+/// wide margin — 50 ms of virtual time is ~100× a LAN round trip — so
+/// a slow-but-alive host's config never loses the race.
+const REDIAL_WAIT_TICKS: u64 = 50_000;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum WState {
     /// Waiting out the join stagger.
     Init,
-    /// Stagger elapsed; send `W_HELLO`.
+    /// Stagger (or redial backoff) elapsed; send `W_HELLO`.
     Join,
     /// Last send completed; issue the `Recv`.
     AwaitReply,
@@ -477,10 +658,14 @@ enum WState {
     InReply,
     /// Compute sleep finished; send the result (or die of churn).
     Computed,
-    /// Churn death: emit the teardown notice, then halt.
+    /// Churn death: teardown notice sent; redial or halt.
     Dying,
     /// `W_STATS` sent; halt.
     Done,
+    /// A heartbeat-interval compute segment elapsed; send `W_BEAT`.
+    Computing,
+    /// Mid-compute beat sent; sleep the next segment.
+    ComputingBeat,
 }
 
 impl WState {
@@ -493,6 +678,8 @@ impl WState {
             WState::Computed => 4,
             WState::Dying => 5,
             WState::Done => 6,
+            WState::Computing => 7,
+            WState::ComputingBeat => 8,
         }
     }
 
@@ -505,6 +692,8 @@ impl WState {
             4 => WState::Computed,
             5 => WState::Dying,
             6 => WState::Done,
+            7 => WState::Computing,
+            8 => WState::ComputingBeat,
             _ => return Err(GppError::Sim(format!("worker snapshot: bad state {c}"))),
         })
     }
@@ -522,6 +711,36 @@ struct WorkerProc {
     churn_permille: u32,
     compute_ticks: u64,
     join_spread: u64,
+    heartbeat_ticks: u64,
+    silent_permille: u32,
+    /// Redial backoff schedule in ticks; empty = no reconnect.
+    backoff: Vec<u64>,
+    /// Compute ticks still to sleep after the current beat segment.
+    compute_left: u64,
+    /// Sessions opened (first `W_HELLO` is fresh, later ones carry the
+    /// reconnect flag).
+    sessions: u64,
+    /// Position in the backoff schedule; reset on `H_CONFIG` (progress
+    /// resets backoff, as in the socket worker's elastic loop).
+    redials: u64,
+    /// `W_HELLO` sent, `H_CONFIG` not yet seen — the window where a
+    /// redialling worker treats silence as connection-refused.
+    awaiting_cfg: bool,
+}
+
+impl WorkerProc {
+    /// Die, then redial if the schedule allows: sleep the next backoff
+    /// step and re-hello, or halt when exhausted (or reconnect is off).
+    fn redial_or_halt(&mut self) -> Effect {
+        match self.backoff.get(self.redials as usize) {
+            Some(&wait) => {
+                self.redials += 1;
+                self.state = WState::Join;
+                Effect::Sleep { ticks: wait }
+            }
+            None => Effect::Halt,
+        }
+    }
 }
 
 impl LogicalProc for WorkerProc {
@@ -532,39 +751,97 @@ impl LogicalProc for WorkerProc {
                 Effect::Sleep { ticks: self.rng.next_bounded(self.join_spread.max(1)) + 1 }
             }
             WState::Join => {
+                let flag = if self.sessions > 0 { 1 } else { 0 };
+                self.sessions += 1;
+                self.awaiting_cfg = true;
                 self.state = WState::AwaitReply;
-                Effect::Send { ch: HOST_CH, msg: Msg::new(W_HELLO, self.wid, 0) }
+                Effect::Send { ch: HOST_CH, msg: Msg::new(W_HELLO, self.wid, flag) }
             }
             WState::AwaitReply => {
                 self.state = WState::InReply;
-                Effect::Recv { ch: worker_ch(self.wid as usize) }
+                let ch = worker_ch(self.wid as usize);
+                if self.awaiting_cfg && self.sessions > 1 {
+                    // Reconnect window: the host may be gone, so bound
+                    // the wait (the socket worker's connect timeout).
+                    Effect::RecvTimeout { ch, ticks: REDIAL_WAIT_TICKS }
+                } else if self.heartbeat_ticks > 0 {
+                    // The Beater: beat whenever the connection is
+                    // otherwise quiet (e.g. parked for work).
+                    Effect::RecvTimeout { ch, ticks: self.heartbeat_ticks }
+                } else {
+                    Effect::Recv { ch }
+                }
             }
-            WState::InReply => {
-                let Resume::Delivered(m) = resume else {
-                    unreachable!("blocked recv resumes with a delivery");
-                };
-                match m.tag {
-                    H_CONFIG => {
-                        self.state = WState::AwaitReply;
-                        Effect::Send { ch: HOST_CH, msg: Msg::new(W_REQ, self.wid, 0) }
-                    }
-                    H_WORK => {
-                        self.item = m.b;
-                        self.state = WState::Computed;
-                        let jitter = self.rng.next_bounded(self.compute_ticks / 4 + 1);
-                        Effect::Sleep { ticks: self.compute_ticks + jitter }
-                    }
-                    H_DONE => {
-                        self.state = WState::Done;
-                        Effect::SendReliable {
-                            ch: HOST_CH,
-                            msg: Msg::new(W_STATS, self.wid, self.items_done),
+            WState::InReply => match resume {
+                Resume::Delivered(m) => {
+                    self.awaiting_cfg = false;
+                    match m.tag {
+                        H_CONFIG => {
+                            self.redials = 0;
+                            self.state = WState::AwaitReply;
+                            Effect::Send { ch: HOST_CH, msg: Msg::new(W_REQ, self.wid, 0) }
                         }
+                        H_WORK => {
+                            self.item = m.b;
+                            let jitter = self.rng.next_bounded(self.compute_ticks / 4 + 1);
+                            let total = (self.compute_ticks + jitter).max(1);
+                            if self.heartbeat_ticks > 0 && total > self.heartbeat_ticks {
+                                self.compute_left = total - self.heartbeat_ticks;
+                                self.state = WState::Computing;
+                                Effect::Sleep { ticks: self.heartbeat_ticks }
+                            } else {
+                                self.state = WState::Computed;
+                                Effect::Sleep { ticks: total }
+                            }
+                        }
+                        H_DONE => {
+                            self.state = WState::Done;
+                            Effect::SendReliable {
+                                ch: HOST_CH,
+                                msg: Msg::new(W_STATS, self.wid, self.items_done),
+                            }
+                        }
+                        t => unreachable!("worker {}: unknown tag {t}", self.wid),
                     }
-                    t => unreachable!("worker {}: unknown tag {t}", self.wid),
+                }
+                Resume::TimedOut => {
+                    if self.awaiting_cfg && self.sessions > 1 {
+                        // No config within the margin: the daemon is
+                        // gone. Back off and redial, or give up.
+                        self.redial_or_halt()
+                    } else {
+                        self.state = WState::AwaitReply;
+                        Effect::Send { ch: HOST_CH, msg: Msg::new(W_BEAT, self.wid, 0) }
+                    }
+                }
+                other => unreachable!("worker {}: unexpected resume {other:?}", self.wid),
+            },
+            WState::Computing => {
+                // Segment slept: beat, then continue computing.
+                self.state = WState::ComputingBeat;
+                Effect::Send { ch: HOST_CH, msg: Msg::new(W_BEAT, self.wid, 0) }
+            }
+            WState::ComputingBeat => {
+                if self.compute_left > self.heartbeat_ticks {
+                    self.compute_left -= self.heartbeat_ticks;
+                    self.state = WState::Computing;
+                    Effect::Sleep { ticks: self.heartbeat_ticks }
+                } else {
+                    let left = self.compute_left.max(1);
+                    self.compute_left = 0;
+                    self.state = WState::Computed;
+                    Effect::Sleep { ticks: left }
                 }
             }
             WState::Computed => {
+                if self.silent_permille > 0
+                    && self.rng.next_bounded(1000) < self.silent_permille as u64
+                {
+                    // Silent death: the pulled cable. No CONN_DEAD — the
+                    // in-flight item is stranded until the host's
+                    // eviction deadline recovers it.
+                    return Effect::Halt;
+                }
                 if self.churn_permille > 0
                     && self.rng.next_bounded(1000) < self.churn_permille as u64
                 {
@@ -574,14 +851,15 @@ impl LogicalProc for WorkerProc {
                     self.state = WState::Dying;
                     return Effect::SendReliable {
                         ch: HOST_CH,
-                        msg: Msg::new(CONN_DEAD, self.wid, 0),
+                        msg: Msg::new(CONN_DEAD, self.wid, SELF_DEATH),
                     };
                 }
                 self.items_done += 1;
                 self.state = WState::AwaitReply;
                 Effect::Send { ch: HOST_CH, msg: Msg::new(W_RESULT, self.wid, self.item) }
             }
-            WState::Dying | WState::Done => Effect::Halt,
+            WState::Dying => self.redial_or_halt(),
+            WState::Done => Effect::Halt,
         }
     }
 
@@ -589,6 +867,10 @@ impl LogicalProc for WorkerProc {
         self.state.code().encode(out);
         self.item.encode(out);
         self.items_done.encode(out);
+        self.compute_left.encode(out);
+        self.sessions.encode(out);
+        self.redials.encode(out);
+        self.awaiting_cfg.encode(out);
         for word in self.rng.state() {
             word.encode(out);
         }
@@ -598,6 +880,10 @@ impl LogicalProc for WorkerProc {
         self.state = WState::from_code(u8::decode(input)?)?;
         self.item = u64::decode(input)?;
         self.items_done = u64::decode(input)?;
+        self.compute_left = u64::decode(input)?;
+        self.sessions = u64::decode(input)?;
+        self.redials = u64::decode(input)?;
+        self.awaiting_cfg = bool::decode(input)?;
         let mut s = [0u64; 4];
         for word in &mut s {
             *word = u64::decode(input)?;
@@ -722,6 +1008,99 @@ mod tests {
             }
             other => panic!("{other}"),
         }
+    }
+
+    #[test]
+    fn silent_death_is_recovered_by_heartbeat_eviction() {
+        // 15% of completed items kill the worker WITHOUT a teardown
+        // notice: only the host's liveness deadline can see it. Workers
+        // beat every 500 ticks (mid-compute and parked), so a live
+        // connection is never silent past 2 500 ticks and no innocent
+        // worker is evicted — every loss is a genuine eviction.
+        let r = ClusterScenario::new(32, 80)
+            .with_model(NetModel::lan())
+            .with_silent_permille(150)
+            .with_heartbeat_ticks(500)
+            .with_evict_ticks(2_500)
+            .with_seed(41)
+            .run()
+            .unwrap();
+        assert_eq!(r.report.results.len(), 80, "eviction requeues stranded items");
+        assert!(r.report.workers_lost > 0, "15% silent churn over ~90 attempts must kill");
+        assert_eq!(
+            r.report.items_requeued, r.report.workers_lost,
+            "silent death always strands exactly its in-flight item"
+        );
+        assert_eq!(r.report.workers_reconnected, 0);
+    }
+
+    #[test]
+    fn silent_death_without_eviction_is_a_detected_deadlock() {
+        // The same fleet with no deadline: the first silent death
+        // strands its item forever — the host blocks on an inbox that
+        // will never fill, survivors park, and the engine detects the
+        // deadlock (the run hangs, exactly what a real host without
+        // eviction does against a pulled-cable peer).
+        let err = ClusterScenario::new(32, 80)
+            .with_model(NetModel::lan())
+            .with_silent_permille(150)
+            .with_seed(41)
+            .run()
+            .unwrap_err();
+        match err {
+            GppError::Sim(msg) => assert!(msg.contains("deadlock"), "{msg}"),
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn churn_death_reconnects_and_resumes_its_lease() {
+        // Loud churn deaths with reconnect on: the dead worker redials
+        // on the jittered backoff schedule and rejoins with a reconnect
+        // W_HELLO, which revives its lease instead of counting a fresh
+        // join — the socket worker's elastic loop on the virtual clock.
+        let r = ClusterScenario::new(32, 80)
+            .with_model(NetModel::lan())
+            .with_churn_permille(80)
+            .with_reconnect(true)
+            .with_seed(19)
+            .run()
+            .unwrap();
+        assert_eq!(r.report.results.len(), 80);
+        assert!(r.report.workers_lost > 0, "8% churn over ~87 attempts must kill workers");
+        assert!(r.report.workers_reconnected > 0, "churned workers redial and rejoin");
+        assert_eq!(r.report.workers_joined, 32, "reconnects are not fresh joins");
+        assert_eq!(r.report.items_requeued, r.report.workers_lost);
+    }
+
+    #[test]
+    fn checkpoint_mid_run_resumes_elastic_churn_to_the_same_report() {
+        // Snapshot/restore must carry the elastic state too: leases,
+        // last-seen deadlines, redial cursors, pending timeout wakes.
+        let scenario = ClusterScenario::new(16, 40)
+            .with_model(NetModel::lan())
+            .with_churn_permille(60)
+            .with_silent_permille(60)
+            .with_reconnect(true)
+            .with_heartbeat_ticks(500)
+            .with_evict_ticks(2_500)
+            .with_seed(29)
+            .with_carriers(1);
+        let reference = scenario.run().unwrap();
+
+        let mut first = scenario.build();
+        assert_eq!(first.sim_mut().run_for(300).unwrap(), RunState::Paused);
+        let snap = first.sim_mut().snapshot();
+
+        let mut resumed = scenario.build();
+        resumed.sim_mut().restore_snapshot(&snap).unwrap();
+        let r = resumed.run().unwrap();
+        assert_eq!(r.report.results, reference.report.results);
+        assert_eq!(r.report.workers_lost, reference.report.workers_lost);
+        assert_eq!(r.report.workers_reconnected, reference.report.workers_reconnected);
+        assert_eq!(r.report.items_requeued, reference.report.items_requeued);
+        assert_eq!(r.steps, reference.steps, "checkpoint must not perturb the schedule");
+        assert_eq!(r.virtual_time, reference.virtual_time);
     }
 
     #[test]

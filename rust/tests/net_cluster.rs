@@ -445,6 +445,139 @@ fn nbody_over_cluster_matches_sequential() {
     }
 }
 
+// ------------------------------------- scripted chaos (FaultPlan rules)
+
+/// Connection-level fault rule on the serve path: a scripted
+/// kill-connection-after-N-frames fault murders the standing worker's
+/// socket right as it ships its first result — the item is still in
+/// flight on the daemon, the compute already burned. The elastic worker
+/// must redial with backoff, resume its lease, and the submitted job
+/// must complete with the death fully accounted (lost / requeued /
+/// reconnected) in its per-job `HostReport`.
+#[test]
+fn serve_worker_killed_by_conn_fault_reconnects_and_job_completes() {
+    setup();
+    use gpp::csp::{FaultAction, FaultOp, FaultPlan, FaultRule};
+    use gpp::net::jobs::MANDELBROT_ROW;
+    use gpp::net::serve::{drain, run_serve_worker_faulted};
+    use gpp::net::{run_serve, submit_job, RetryPolicy, ServeOptions};
+    use gpp::util::codec::to_bytes;
+
+    let addr = free_addr();
+    let net = NetOptions::default().with_read_timeout_ms(2_000);
+    let opts = ServeOptions::default().with_net(net).with_admission(2);
+    let daemon = {
+        let addr = addr.clone();
+        std::thread::spawn(move || run_serve(&addr, &opts))
+    };
+    // Frame ops on the worker connection: hello (1), config (2), W_REQ
+    // (3), first work recv (4) — so op 5 is the send of the first
+    // W_RESULT2, and the kill fires with that item in flight.
+    let plan = FaultPlan::new(vec![FaultRule::new(
+        "worker:",
+        FaultOp::ConnFrame,
+        5,
+        FaultAction::Fail("scripted conn kill".into()),
+    )]);
+    let worker = {
+        let addr = addr.clone();
+        let plan = plan.clone();
+        std::thread::spawn(move || {
+            run_serve_worker_faulted(&addr, &net, &RetryPolicy::fast_local(), Some(plan))
+        })
+    };
+    let cfg = to_bytes(&default_config(16, 6, 5, 1));
+    let items: Vec<Vec<u8>> = (0..6i64).map(|r| to_bytes(&r)).collect();
+    let report = submit_job(&addr, "chaos", MANDELBROT_ROW, &cfg, items, &net)
+        .expect("job completes despite the scripted kill");
+    assert_eq!(plan.fired(), 1, "the scripted kill fired exactly once");
+    assert_eq!(report.results.len(), 6);
+    assert_eq!(report.workers_lost, 1, "first session died mid-result");
+    assert_eq!(report.items_requeued, 1, "the in-flight item was requeued");
+    assert_eq!(report.workers_reconnected, 1, "lease was resumed");
+
+    let line = drain(&addr, &net).expect("drain");
+    assert!(line.contains("completed=1"), "{line}");
+    assert_eq!(
+        worker.join().unwrap().expect("worker released on drain"),
+        7,
+        "the killed item was computed twice: once lost with the connection"
+    );
+    let summary = daemon.join().unwrap().expect("daemon exits");
+    assert_eq!(summary.jobs_completed, 1);
+    assert_eq!(summary.workers_joined, 1);
+    assert_eq!(summary.workers_reconnected, 1);
+}
+
+/// The delay-heartbeat fault rule: a worker beats normally twice (each
+/// beat resetting the host's silence clock), then its beater is
+/// scripted silent (`FaultOp::Beat` + `Drop`) while the worker grinds a
+/// long item with its socket wide open — the "process wedged, cable
+/// fine" peer no TCP error will ever report. The host must evict the
+/// silent connection on the heartbeat deadline, requeue its in-flight
+/// item to the surviving (still-beating) worker, and finish complete.
+#[test]
+fn beat_fault_silences_worker_and_eviction_requeues_its_item() {
+    setup();
+    use gpp::csp::{FaultAction, FaultOp, FaultPlan, FaultRule};
+    use gpp::net::cluster::{run_worker_opts, run_worker_session, serve_items, WorkerState};
+    use gpp::net::jobs;
+    use gpp::util::codec::{from_bytes, to_bytes};
+
+    fn slow_echo(cfg: &[u8], item: &[u8]) -> gpp::Result<Vec<u8>> {
+        let ms: u64 = from_bytes(cfg)?;
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok(item.to_vec())
+    }
+    jobs::register_job("test-slow-echo", slow_echo);
+
+    let addr = free_addr();
+    // Long items (700 ms) against a 250 ms eviction deadline: only
+    // beats keep a computing worker alive.
+    let opts = NetOptions::default().with_heartbeat_ms(25).with_eviction_ms(250);
+    let addr2 = addr.clone();
+    let host = std::thread::spawn(move || {
+        let items: Vec<Vec<u8>> = (0..2i64).map(|r| to_bytes(&r)).collect();
+        serve_items(&addr2, 2, "test-slow-echo", &to_bytes(&700u64), items, &opts)
+    });
+    let plan = FaultPlan::new(vec![FaultRule::new(
+        "worker:",
+        FaultOp::Beat,
+        3,
+        FaultAction::Drop,
+    )]);
+    let wedged = {
+        let addr = addr.clone();
+        let plan = plan.clone();
+        std::thread::spawn(move || {
+            let mut st = WorkerState::default();
+            run_worker_session(&addr, &opts, &mut st, Some(&plan))
+        })
+    };
+    // Event-ordered start: the survivor joins only once the silencer has
+    // provably fired — by then the wedged worker has joined, taken its
+    // item (its `W_REQ` went out ~75 ms before the third beat tick), and
+    // gone quiet mid-compute.
+    let t0 = std::time::Instant::now();
+    while plan.fired() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "beat fault never fired");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let done = run_worker_opts(&addr, &opts).unwrap();
+    let report = host.join().unwrap().unwrap();
+    assert!(
+        wedged.join().unwrap().is_err(),
+        "the evicted session must surface a connection error"
+    );
+    assert_eq!(plan.fired(), 1, "the beat silencer fired exactly once");
+    assert_eq!(done, 2, "survivor computed its own item and the requeued one");
+    assert_eq!(report.results.len(), 2);
+    assert_eq!(report.workers_lost, 1, "silent-beat worker evicted on deadline");
+    assert_eq!(report.items_requeued, 1);
+    assert_eq!(report.workers_joined, 2);
+    assert_eq!(report.workers_reconnected, 0);
+}
+
 /// The node-loader DSL end to end from text, exactly as `gpp run` sees it.
 #[test]
 fn dsl_hosts_line_runs_loopback_cluster() {

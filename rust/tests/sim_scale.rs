@@ -48,6 +48,49 @@ fn hundred_thousand_workers_replay_identically_under_loss() {
     assert_eq!(a.virtual_time, b.virtual_time);
 }
 
+/// The elastic-fleet churn scenario, deterministically: workers join
+/// staggered AND leave mid-run — some loudly (connection teardown, then
+/// a backoff redial and a reconnect `W_HELLO`), some silently (halt
+/// with no notice, caught only by the host's heartbeat-eviction
+/// deadline ticking on the virtual clock). The whole machine — beats,
+/// deadline sweeps, timed receives, redial jitter — replays
+/// byte-identically across carrier-pool sizes for the same seed.
+#[test]
+fn elastic_churn_with_eviction_and_reconnect_replays_identically() {
+    let run = |carriers: usize| {
+        ClusterScenario::new(32, 80)
+            .with_model(NetModel::lan())
+            .with_churn_permille(80)
+            .with_silent_permille(80)
+            .with_reconnect(true)
+            .with_heartbeat_ticks(500)
+            .with_evict_ticks(2_500)
+            .with_seed(977)
+            .with_carriers(carriers)
+            .run()
+            .unwrap()
+    };
+    let a = run(1);
+    assert_eq!(a.report.results.len(), 80, "churn + eviction still completes every item");
+    assert!(a.report.workers_lost > 0, "16% combined churn must kill workers");
+    assert!(a.report.workers_reconnected > 0, "loud deaths redial and rejoin");
+    assert_eq!(a.report.workers_joined, 32, "reconnects are not fresh joins");
+    assert_eq!(
+        a.report.items_requeued, a.report.workers_lost,
+        "every death — loud or silent — strands exactly its in-flight item"
+    );
+
+    let b = run(4);
+    assert_eq!(a.report.results, b.report.results);
+    assert_eq!(a.report.workers_joined, b.report.workers_joined);
+    assert_eq!(a.report.workers_lost, b.report.workers_lost);
+    assert_eq!(a.report.workers_reconnected, b.report.workers_reconnected);
+    assert_eq!(a.report.items_requeued, b.report.items_requeued);
+    assert_eq!(a.report.worker_stats, b.report.worker_stats);
+    assert_eq!(a.steps, b.steps, "carrier count must not change the schedule");
+    assert_eq!(a.virtual_time, b.virtual_time);
+}
+
 /// The unquarantined cluster join-order fairness check: two workers
 /// join staggered (the second up to a full join-spread later, on a
 /// latency-modelled network) and BOTH still complete work, because the
